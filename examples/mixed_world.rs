@@ -1,0 +1,84 @@
+//! Mixed-world tour (§IV): one value travels Arithmetic → Boolean → Garbled
+//! → back to Arithmetic, exercising every conversion the framework offers,
+//! with the metered costs printed next to the paper's Table I/IX claims.
+//!
+//! ```sh
+//! cargo run --release --example mixed_world
+//! ```
+
+use trident::convert::{a2b, a2g, b2a, bit2a, bitext, g2a};
+use trident::net::{NetProfile, Phase, P1, P3};
+use trident::proto::{reconstruct, run_4pc, share};
+use trident::ring::Z64;
+
+fn main() {
+    trident::runtime::pjrt::init_default();
+    let secret: i64 = -123_456_789;
+
+    let run = run_4pc(NetProfile::lan(), 11, move |ctx| {
+        // arithmetic world
+        let a = share(ctx, P1, (ctx.id() == P1).then_some(Z64::from(secret)))?;
+
+        // A2B: to boolean shares (PPA subtractor, log ℓ rounds)
+        let bits = a2b(ctx, &a)?;
+
+        // B2A: straight back in ONE round (the 7× round win over ABY3)
+        let back = b2a(ctx, &bits)?;
+
+        // A2G: into the garbled world; G2A: back again
+        let garbled = a2g(ctx, &back)?;
+        let back2 = g2a(ctx, &garbled)?;
+
+        // a comparison via Π_BitExt and its arithmetic lift
+        let msb = bitext(ctx, &back2)?;
+        let msb_arith = bit2a(ctx, &msb)?;
+
+        let v = reconstruct(ctx, &back2)?;
+        let is_neg = reconstruct(ctx, &msb_arith)?;
+        ctx.flush_verify()?;
+        Ok((v, is_neg))
+    });
+
+    let (outs, report) = run.expect_ok();
+    let (v, is_neg) = outs[0];
+    println!("value after A→B→A→G→A round-trip: {}", v.as_i64());
+    println!("sign bit (as ring element):       {}", is_neg.0);
+    assert_eq!(v.as_i64(), secret);
+    assert_eq!(is_neg, Z64(1));
+    println!();
+    println!("-- metered --");
+    println!(
+        "online:  {:>6} rounds, {:>9} value bits, {:>8} garbled bytes",
+        report.rounds[Phase::Online as usize],
+        report.value_bits[Phase::Online as usize],
+        report.garbled_bytes[Phase::Online as usize],
+    );
+    println!(
+        "offline: {:>6} rounds, {:>9} value bits, {:>8} garbled bytes",
+        report.rounds[Phase::Offline as usize],
+        report.value_bits[Phase::Offline as usize],
+        report.garbled_bytes[Phase::Offline as usize],
+    );
+    // the garbled-division softmax (§VI-A.c): the heaviest mixed-world user
+    let run2 = run_4pc(NetProfile::lan(), 12, |ctx| {
+        let mut shares = Vec::new();
+        for v in [1.0f64, 3.0] {
+            shares.push(share(
+                ctx,
+                P1,
+                (ctx.id() == P1).then_some(trident::ring::FixedPoint::encode(v)),
+            )?);
+        }
+        let p = trident::ml::softmax::softmax_garbled(ctx, &shares)?;
+        let p0 = reconstruct(ctx, &p[0])?;
+        ctx.flush_verify()?;
+        Ok(p0)
+    });
+    let (outs2, rep2) = run2.expect_ok();
+    println!(
+        "\ngarbled softmax([1, 3])[0] = {:.3} (want 0.25), {} KiB garbled tables",
+        trident::ring::FixedPoint::decode(outs2[0]),
+        rep2.garbled_bytes[Phase::Offline as usize] / 1024,
+    );
+    println!("mixed_world OK");
+}

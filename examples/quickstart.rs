@@ -1,0 +1,51 @@
+//! Quickstart: the smallest end-to-end Trident flow.
+//!
+//! Four parties (threads) are wired with pairwise channels and shared PRF
+//! keys (`F_setup`); two of them contribute private fixed-point inputs; the
+//! cluster evaluates a truncated product and a comparison without anyone
+//! seeing the cleartext; the result is reconstructed at the output stage.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use trident::convert::bitext;
+use trident::net::{NetProfile, Phase, P1, P2};
+use trident::proto::{mult_tr, reconstruct, run_4pc, share};
+use trident::ring::{Bit, FixedPoint};
+
+fn main() {
+    trident::runtime::pjrt::init_default();
+
+    let run = run_4pc(NetProfile::lan(), 7, |ctx| {
+        // --- input sharing (the only data-dependent thing owners do) ---
+        let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(6.5)))?;
+        let y = share(ctx, P2, (ctx.id() == P2).then_some(FixedPoint::encode(-2.25)))?;
+
+        // --- secure compute: fixed-point multiply + sign test ---
+        let xy = mult_tr(ctx, &x, &y)?; // [[x·y]], truncation folded in
+        let neg = bitext(ctx, &xy)?; // [[msb(x·y)]]^B — is the product negative?
+
+        // --- output reconstruction ---
+        let prod = reconstruct(ctx, &xy)?;
+        let sign = reconstruct(ctx, &neg)?;
+        ctx.flush_verify()?;
+        Ok((prod, sign))
+    });
+
+    let (outs, report) = run.expect_ok();
+    let (prod, sign) = outs[0];
+    println!("6.5 × -2.25       = {}", FixedPoint::decode(prod));
+    println!("product negative? = {}", sign == Bit(true));
+    println!();
+    println!("-- what the meter saw --");
+    println!("offline value bits : {}", report.value_bits[Phase::Offline as usize]);
+    println!("online  value bits : {}", report.value_bits[Phase::Online as usize]);
+    println!("online  rounds     : {}", report.rounds[Phase::Online as usize]);
+    println!("simulated LAN time : {:.3} ms", report.online_latency() * 1e3);
+    println!("P0 online time     : {:.3} ms (nonzero only for input/output stages)", report.party_time[1][0] * 1e3);
+    // Π_MultTr's probabilistic truncation can be off by ≤2 ulp (2^-13)
+    assert!((FixedPoint::decode(prod) - 6.5 * -2.25).abs() < 0.001);
+    assert_eq!(sign, Bit(true));
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,33 @@
+//! Secure prediction serving (the MLaaS scenario of §I): a model owner
+//! shares trained weights once; clients stream query batches; the four
+//! servers answer them with online latency independent of the feature
+//! count (Π_DotP) and P0 asleep for the whole online phase.
+//!
+//! ```sh
+//! cargo run --release --example secure_inference [batches]
+//! ```
+
+use trident::net::{NetProfile, Phase};
+
+fn main() {
+    let batches: usize =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(6);
+    trident::runtime::pjrt::init_default();
+
+    trident::coordinator::serve_cli(batches);
+
+    // latency breakdown across the paper's four models, LAN vs WAN
+    println!("\nper-model online prediction latency (d=784, B=100):");
+    for model in ["linreg", "logreg", "nn"] {
+        let lan = trident::bench::measure_predict(NetProfile::lan(), model, 784, 100);
+        let wan = trident::bench::measure_predict(NetProfile::wan(), model, 784, 100);
+        println!(
+            "  {model:<6}  LAN {:>8.2} ms   WAN {:>6.2} s   (rounds {}, P0 online {:.1} ms)",
+            lan.online_latency() * 1e3,
+            wan.online_latency(),
+            lan.online_rounds(),
+            lan.report.party_time[Phase::Online as usize][0] * 1e3,
+        );
+    }
+    println!("secure_inference OK");
+}

@@ -1,0 +1,53 @@
+"""AOT lowering: JAX/Pallas graphs → HLO **text** artifacts for the rust
+PJRT runtime.
+
+HLO text — not `.serialize()`d HloModuleProto — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    total = 0
+    for name, fn, specs in model.artifact_specs():
+        if args.only and args.only not in name:
+            continue
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total += 1
+        print(f"wrote {path} ({len(text)} chars)")
+    print(f"{total} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Layer-1 Pallas kernels: the party-local hot spot of Trident's online phase.
+
+The fused *masked matmul* computes, over the ring Z_{2^64} (uint64 with
+wrap-around — exactly what XLA's u64 ops give),
+
+    M' = Γ + Λz − Λx ∘ M_y − M_x ∘ Λy,
+
+which is the evaluator-local share `m'_{z,j}` of `Π_DotP`/`Π_MultTr` in
+matrix form (paper Fig. 9/18). The γ-offline kernel computes
+
+    Γ_j = Λx_j ∘ (Λy_j + Λy_{j+1}) + Λx_{j+1} ∘ Λy_j (+ mask).
+
+TPU shaping (DESIGN.md §4): tiles of TILE×TILE with a revisiting-accumulator
+grid (i, j, k) — the k-axis streams HBM→VMEM while the (i, j) output tile
+stays resident. `interpret=True` is mandatory on this CPU-only image; the
+BlockSpec structure is what a real Mosaic lowering would tile. A
+limb-decomposed variant (`masked_matmul_limbs`) shows the MXU-friendly
+int32-limb formulation and is validated against the same oracle.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+jax.config.update("jax_enable_x64", True)
+
+# VMEM-sized tile (8 B/elt × 4 operands × 128² ≈ 512 KiB of residency).
+TILE = 128
+
+
+def _mm_kernel(lx_ref, my_ref, mx_ref, ly_ref, g_ref, lz_ref, o_ref, acc_ref, *, k_steps):
+    """Fused dual-matmul tile kernel with a revisiting accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += lx_ref[...] @ my_ref[...] + mx_ref[...] @ ly_ref[...]
+
+    @pl.when(k == k_steps - 1)
+    def _fini():
+        o_ref[...] = g_ref[...] + lz_ref[...] - acc_ref[...]
+
+
+def masked_matmul(lx, my, mx, ly, g, lz, tile=TILE):
+    """`Γ + Λz − Λx∘M_y − M_x∘Λy` via a tiled Pallas kernel (interpret)."""
+    a, b = lx.shape
+    b2, c = my.shape
+    assert b == b2 and mx.shape == (a, b) and ly.shape == (b, c)
+    assert g.shape == (a, c) and lz.shape == (a, c)
+    ta, tb, tc = min(tile, a), min(tile, b), min(tile, c)
+    if a % ta or b % tb or c % tc:
+        # ragged shapes: fall back to the unfused expression (still one jit)
+        return g + lz - (lx @ my + mx @ ly)
+    grid = (a // ta, c // tc, b // tb)
+    return pl.pallas_call(
+        partial(_mm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ta, tb), lambda i, j, k: (i, k)),  # Λx
+            pl.BlockSpec((tb, tc), lambda i, j, k: (k, j)),  # M_y
+            pl.BlockSpec((ta, tb), lambda i, j, k: (i, k)),  # M_x
+            pl.BlockSpec((tb, tc), lambda i, j, k: (k, j)),  # Λy
+            pl.BlockSpec((ta, tc), lambda i, j, k: (i, j)),  # Γ
+            pl.BlockSpec((ta, tc), lambda i, j, k: (i, j)),  # Λz
+        ],
+        out_specs=pl.BlockSpec((ta, tc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, c), jnp.uint64),
+        scratch_shapes=[pltpu.VMEM((ta, tc), jnp.uint64)],
+        interpret=True,
+    )(lx, my, mx, ly, g, lz)
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[...] @ y_ref[...]
+
+    @pl.when(k == k_steps - 1)
+    def _fini():
+        o_ref[...] = acc_ref[...]
+
+
+def gemm(x, y, tile=TILE):
+    """Plain ring matmul `X ∘ Y` (u64, wrap-around) as a Pallas kernel."""
+    a, b = x.shape
+    b2, c = y.shape
+    assert b == b2
+    ta, tb, tc = min(tile, a), min(tile, b), min(tile, c)
+    if a % ta or b % tb or c % tc:
+        return x @ y
+    grid = (a // ta, c // tc, b // tb)
+    return pl.pallas_call(
+        partial(_gemm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ta, tb), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tb, tc), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((ta, tc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, c), jnp.uint64),
+        scratch_shapes=[pltpu.VMEM((ta, tc), jnp.uint64)],
+        interpret=True,
+    )(x, y)
+
+
+def gamma_matmul(lx_j, lx_j1, ly_j, ly_j1, mask):
+    """Offline γ-component: `Λx_j∘(Λy_j+Λy_{j+1}) + Λx_{j+1}∘Λy_j + mask`."""
+    return gemm(lx_j, ly_j + ly_j1) + gemm(lx_j1, ly_j) + mask
+
+
+def masked_matmul_limbs(lx, my, mx, ly, g, lz):
+    """MXU-honest limb decomposition (DESIGN.md §4): u64 operands split into
+    four 16-bit limbs; limb products accumulate in u64 (on TPU: int32 MXU
+    passes with u32 carries). Same output as :func:`masked_matmul`."""
+
+    def limbs(v):
+        return [(v >> jnp.uint64(16 * i)) & jnp.uint64(0xFFFF) for i in range(4)]
+
+    def limb_mm(x, y):
+        acc = jnp.zeros((x.shape[0], y.shape[1]), jnp.uint64)
+        xl = limbs(x)
+        yl = limbs(y)
+        for i in range(4):
+            for j in range(4):
+                if i + j < 4:  # limbs beyond 2^64 vanish mod 2^64
+                    prod = xl[i] @ yl[j]
+                    acc = acc + (prod << jnp.uint64(16 * (i + j)))
+        return acc
+
+    return g + lz - (limb_mm(lx, my) + limb_mm(mx, ly))

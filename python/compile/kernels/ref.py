@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the L1 kernels - the CORE correctness signal.
+
+Everything is elementary jnp over uint64 so any discrepancy in the Pallas
+kernels (tiling, accumulation, wrap-around) shows up in pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def masked_matmul_ref(lx, my, mx, ly, g, lz):
+    """Gamma + Lz - Lx@My - Mx@Ly (mod 2^64)."""
+    return g + lz - (lx @ my + mx @ ly)
+
+
+def gemm_ref(x, y):
+    return x @ y
+
+
+def gamma_matmul_ref(lx_j, lx_j1, ly_j, ly_j1, mask):
+    return lx_j @ (ly_j + ly_j1) + lx_j1 @ ly_j + mask

@@ -1,0 +1,71 @@
+"""Layer-2 JAX graphs: the party-local compute of Trident's protocol phases.
+
+Each graph is a pure jax function over uint64 ring tensors that calls the
+L1 Pallas kernels (`kernels/masked_matmul.py`). `aot.py` lowers them once to
+HLO text; at runtime the rust coordinator executes the artifacts via PJRT
+(`rust/src/runtime/pjrt.rs`) from inside `Π_DotP`/`Π_MultTr`'s local steps.
+Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_matmul as k
+
+jax.config.update("jax_enable_x64", True)
+
+
+def masked_matmul_graph(lx, my, mx, ly, g, lz):
+    """Online share computation `M' = Γ + Λz − Λx∘M_y − M_x∘Λy`.
+
+    Returned as a 1-tuple (the rust loader unwraps `to_tuple1`).
+    """
+    return (k.masked_matmul(lx, my, mx, ly, g, lz),)
+
+
+def gemm_graph(x, y):
+    """Plain ring matmul `X ∘ Y` (the `M_x∘M_y` online term and offline γ
+    building block)."""
+    return (k.gemm(x, y),)
+
+
+def gamma_graph(lx_j, lx_j1, ly_j, ly_j1, mask):
+    """Offline γ-component `Λx_j∘(Λy_j+Λy_{j+1}) + Λx_{j+1}∘Λy_j + mask`."""
+    return (k.gamma_matmul(lx_j, lx_j1, ly_j, ly_j1, mask),)
+
+
+#: shapes lowered by `aot.py`: (name, fn, arg shapes)
+def artifact_specs():
+    u64 = jnp.uint64
+
+    def s(*shape):
+        return jax.ShapeDtypeStruct(shape, u64)
+
+    specs = []
+    # canonical ML shapes: NN layer-1 (B×784 ∘ 784×128), hidden, output,
+    # linreg batches, and a small test shape.
+    for (a, b, c) in [
+        (8, 8, 8),
+        (128, 784, 128),
+        (128, 128, 128),
+        (128, 128, 10),
+        (128, 784, 1),
+        (784, 128, 1),
+        (256, 256, 256),
+    ]:
+        specs.append(
+            (
+                f"masked_matmul_{a}x{b}x{c}",
+                masked_matmul_graph,
+                (s(a, b), s(b, c), s(a, b), s(b, c), s(a, c), s(a, c)),
+            )
+        )
+        specs.append((f"gemm_{a}x{b}x{c}", gemm_graph, (s(a, b), s(b, c))))
+        specs.append(
+            (
+                f"gamma_{a}x{b}x{c}",
+                gamma_graph,
+                (s(a, b), s(a, b), s(b, c), s(b, c), s(a, c)),
+            )
+        )
+    return specs

@@ -1,0 +1,6 @@
+# Make `compile.*` importable when pytest runs from the repo root
+# (`pytest python/tests/`) as well as from `python/`.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,108 @@
+//! Microbenchmarks of the protocol hot paths (hand-rolled harness — the
+//! offline image has no criterion). Reports medians over repeated runs;
+//! used by the §Perf pass in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use trident::crypto::Rng;
+use trident::ring::{Matrix, Z64};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    println!("{name:<48} {:>12.3} ms (median of {iters})", med * 1e3);
+}
+
+fn main() {
+    let pjrt = trident::runtime::pjrt::init_default();
+    println!("pjrt artifacts: {}", if pjrt { "enabled" } else { "disabled (native only)" });
+    let mut rng = Rng::seeded(42);
+
+    // L3-native vs PJRT masked matmul at the NN layer shape
+    for (a, b, c) in [(128usize, 784usize, 128usize), (128, 128, 128), (256, 256, 256)] {
+        let mk = |rng: &mut Rng, r: usize, co: usize| Matrix::from_fn(r, co, |_, _| rng.gen::<Z64>());
+        let lx = mk(&mut rng, a, b);
+        let mx = mk(&mut rng, a, b);
+        let my = mk(&mut rng, b, c);
+        let ly = mk(&mut rng, b, c);
+        let g = mk(&mut rng, a, c);
+        let lz = mk(&mut rng, a, c);
+        bench(&format!("native masked_matmul {a}x{b}x{c}"), 7, || {
+            let out = trident::runtime::native::masked_matmul(&lx, &my, &mx, &ly, &g, &lz);
+            std::hint::black_box(&out);
+        });
+        if pjrt {
+            bench(&format!("pjrt   masked_matmul {a}x{b}x{c}"), 7, || {
+                let out = trident::runtime::pjrt::try_masked_matmul(&lx, &my, &mx, &ly, &g, &lz);
+                std::hint::black_box(&out);
+            });
+        }
+        bench(&format!("native gemm          {a}x{b}x{c}"), 7, || {
+            let out = trident::runtime::native::gemm(&lx, &my);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // protocol end-to-end
+    bench("4pc mult (cluster roundtrip)", 10, || {
+        let run = trident::proto::run_4pc(trident::net::NetProfile::zero(), 1, |ctx| {
+            let x = trident::proto::share(
+                ctx,
+                trident::net::P1,
+                (ctx.id() == trident::net::P1).then_some(Z64(3)),
+            )?;
+            let y = trident::proto::share(
+                ctx,
+                trident::net::P2,
+                (ctx.id() == trident::net::P2).then_some(Z64(5)),
+            )?;
+            let z = trident::proto::mult(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        });
+        std::hint::black_box(&run.report);
+    });
+
+    bench("4pc dotp d=1000 (cluster roundtrip)", 5, || {
+        let run = trident::proto::run_4pc(trident::net::NetProfile::zero(), 2, |ctx| {
+            let xs = trident::proto::sharing::share_many_n(
+                ctx,
+                trident::net::P1,
+                (ctx.id() == trident::net::P1).then(|| vec![Z64(3); 1000]).as_deref(),
+                1000,
+            )?;
+            let ys = trident::proto::sharing::share_many_n(
+                ctx,
+                trident::net::P2,
+                (ctx.id() == trident::net::P2).then(|| vec![Z64(5); 1000]).as_deref(),
+                1000,
+            )?;
+            let z = trident::proto::dotp(ctx, &xs, &ys)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        });
+        std::hint::black_box(&run.report);
+    });
+
+    // garbling throughput
+    let circuit = trident::gc::circuit::aes_shaped();
+    let r = rng.gen_key();
+    let k0: Vec<[u8; 16]> = (0..circuit.n_inputs).map(|_| rng.gen_key()).collect();
+    bench("garble AES-shaped circuit (6.4k ANDs)", 5, || {
+        let g = trident::gc::garble::garble(&circuit, r, &k0);
+        std::hint::black_box(&g.gc);
+    });
+
+    // one secure linreg iteration (d=100, B=128)
+    bench("secure linreg iteration d=100 B=128", 3, || {
+        let m = trident::bench::measure_linreg_iter(trident::net::NetProfile::lan(), 100, 128);
+        std::hint::black_box(&m.report);
+    });
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench paper_tables [-- table4 fig20 ...]`
+//!
+//! Regenerates every table and figure of the paper's evaluation
+//! (DESIGN.md §5 maps each to its module). Trident rows are measured runs
+//! of the real protocols; baseline rows use the paper's own cost
+//! accounting. Absolute numbers differ from the authors' testbed; the
+//! *shape* (who wins, by what factor, where crossovers fall) is the
+//! reproduction target — see EXPERIMENTS.md.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    trident::runtime::pjrt::init_default();
+    let out = trident::bench::run_tables(&args);
+    println!("{out}");
+}

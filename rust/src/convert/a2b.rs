@@ -1,0 +1,100 @@
+//! `Π_A2B` (Fig. 14): arithmetic → boolean sharing via a boolean-world
+//! parallel-prefix subtractor over `v = x − y` with
+//! `x = m_v − λ_{v,1}` (known to P2, P3) and `y = λ_{v,2} + λ_{v,3}`
+//! (known to P0, P1).
+//!
+//! Online: `1 + log ℓ` rounds, `3ℓ log ℓ + ℓ` bits (Lemma C.8) — the `ℓ`
+//! is the online `Π_vSh^B` of `x`, the rest the PPA AND gates.
+
+use crate::gc::circuit::{ppa_subtractor, u64_bits};
+use crate::net::{Abort, P0, P1, P2, P3};
+use crate::proto::sharing::vsh_many;
+use crate::proto::Ctx;
+use crate::ring::{Bit, Z64};
+use crate::sharing::MShare;
+
+use super::boolean::eval_bool_circuit;
+
+/// `Π_A2B`: `[[v]]^A → [[v]]^B` (64 boolean shares, little-endian).
+pub fn a2b(ctx: &mut Ctx, v: &MShare<Z64>) -> Result<Vec<MShare<Bit>>, Abort> {
+    let me = ctx.id();
+
+    // offline: [[y]]^B by (P1, P0), y = λ_{v,2} + λ_{v,3}
+    let y_clear: Option<Vec<Bit>> = (me == P1 || me == P0).then(|| {
+        let l2 = v.lam(me, 2).expect("λ2");
+        let l3 = v.lam(me, 3).expect("λ3");
+        u64_bits((l2 + l3).0, 64)
+    });
+    let y_sh = ctx.offline(|ctx| vsh_many::<Bit>(ctx, (P1, P0), y_clear.as_deref(), 64))?;
+
+    // online: [[x]]^B by (P2, P3), x = m_v − λ_{v,1}
+    let x_clear: Option<Vec<Bit>> = (me == P2 || me == P3).then(|| {
+        let l1 = v.lam(me, 1).expect("λ1");
+        u64_bits((v.m() - l1).0, 64)
+    });
+    let x_sh = vsh_many::<Bit>(ctx, (P2, P3), x_clear.as_deref(), 64)?;
+
+    // boolean subtractor (PPA): v = x − y
+    let circuit = ppa_subtractor(64);
+    let mut inputs = x_sh;
+    inputs.extend(y_sh);
+    eval_bool_circuit(ctx, &circuit, &inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::circuit::bits_u64;
+    use crate::net::NetProfile;
+    use crate::proto::{run_4pc, share};
+    use crate::sharing::open;
+
+    fn open_bits(outs: &[Vec<MShare<Bit>>; 4]) -> u64 {
+        let bits: Vec<Bit> = (0..64)
+            .map(|i| open(&[outs[0][i], outs[1][i], outs[2][i], outs[3][i]]))
+            .collect();
+        bits_u64(&bits)
+    }
+
+    #[test]
+    fn a2b_roundtrip() {
+        for v in [0u64, 1, 0xDEAD_BEEF, u64::MAX, 1u64 << 63, (-12345i64) as u64] {
+            let run = run_4pc(NetProfile::zero(), 130, move |ctx| {
+                let x = share(ctx, P3, (ctx.id() == P3).then_some(Z64(v)))?;
+                let bits = a2b(ctx, &x)?;
+                ctx.flush_verify()?;
+                Ok(bits)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(open_bits(&outs), v, "a2b({v})");
+        }
+    }
+
+    #[test]
+    fn a2b_log_rounds() {
+        let run = run_4pc(NetProfile::zero(), 131, |ctx| {
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(Z64(999)))?;
+            let bits = a2b(ctx, &x)?;
+            ctx.flush_verify()?;
+            Ok(bits)
+        });
+        let (_, report) = run.expect_ok();
+        // 1 input + 1 (vsh^B of x) + log ℓ PPA levels (Sklansky depth ≤ 7)
+        assert!(report.rounds[1] <= 2 + 7, "rounds {}", report.rounds[1]);
+        // offline: the y-side vsh costs 2ℓ bits (P0 is an owner)
+        assert!(report.value_bits[0] >= 2 * 64);
+    }
+
+    #[test]
+    fn a2b_then_b2a_identity() {
+        let run = run_4pc(NetProfile::zero(), 132, |ctx| {
+            let x = share(ctx, P2, (ctx.id() == P2).then_some(Z64(0xABCD_EF01_2345)))?;
+            let bits = a2b(ctx, &x)?;
+            let back = super::super::bit2a::b2a(ctx, &bits)?;
+            ctx.flush_verify()?;
+            Ok(back)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(open(&outs), Z64(0xABCD_EF01_2345));
+    }
+}

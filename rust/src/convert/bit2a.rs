@@ -1,0 +1,483 @@
+//! Arithmetic-side conversions: `Π_Bit2A` (Fig. 15), `Π_B2A` (Fig. 16),
+//! `Π_BitInj` (Fig. 17).
+//!
+//! All three share the same offline skeleton: P0 — who knows every boolean
+//! mask bit — `Π_aSh`-shares its arithmetic lift, and the evaluators verify
+//! the sharing with one masked linear identity. Online costs are the
+//! constant-round 3ℓ of Tables I/IX.
+
+use crate::net::{Abort, P0, P1, P2, P3};
+use crate::proto::mult::sample_lam_share;
+use crate::proto::sharing::ash_many;
+use crate::proto::Ctx;
+use crate::ring::{Bit, Z64};
+use crate::sharing::{MShare, RShare};
+
+/// Offline: P0 lifts the boolean masks `λ_b` of `bs` into `Z_{2^64}` and
+/// ⟨·⟩-shares them; evaluators run the Fig. 15 check. Returns ⟨u⟩ per bit.
+fn share_lifted_lambda(ctx: &mut Ctx, bs: &[MShare<Bit>]) -> Result<Vec<RShare<Z64>>, Abort> {
+    let me = ctx.id();
+    let n = bs.len();
+    ctx.offline(|ctx| {
+        // P0 computes u = λ_b (over the ring) for every bit
+        let us: Option<Vec<Z64>> = (me == P0).then(|| {
+            bs.iter()
+                .map(|b| match b {
+                    MShare::Helper { lam } => (lam[0] + lam[1] + lam[2]).to_z64(),
+                    _ => unreachable!(),
+                })
+                .collect()
+        });
+        let u_shares = ash_many(ctx, us.as_deref(), n)?;
+
+        // Fig. 15 verification: (λ_b ⊕ r_b)' == u + r_b' − 2·u·r_b',
+        // blinded by r. Batched into one message + one digest.
+        match me {
+            P1 => {
+                let mut payload = Vec::with_capacity(n * 9);
+                let mut x1_bits = Vec::with_capacity(n);
+                for (i, b) in bs.iter().enumerate() {
+                    let r: Z64 = ctx.keys.sample_pair(P2);
+                    let rb = Bit(ctx.keys.sample_pair::<Z64>(P2).0 & 1 == 1);
+                    let rbp = rb.to_z64();
+                    let lam3 = b.lam(me, 3).expect("P1 holds λ_b,3");
+                    let x1 = lam3 + rb;
+                    let (u2, u3) = match u_shares[i] {
+                        RShare::Eval { next, prev } => (next, prev),
+                        _ => unreachable!(),
+                    };
+                    let y1 = (u2 + u3) * (Z64(1) - Z64(2) * rbp) + rbp + r;
+                    x1_bits.push(x1);
+                    let mut buf = Vec::new();
+                    use crate::ring::Ring;
+                    y1.to_wire(&mut buf);
+                    payload.extend_from_slice(&buf);
+                    payload.push(x1.as_u8());
+                }
+                ctx.net.send_with_bits(
+                    P3,
+                    &payload,
+                    crate::net::MsgClass::Value,
+                    (n * 65) as u64,
+                );
+            }
+            P2 => {
+                let mut acc = crate::crypto::HashAcc::new();
+                for u in u_shares.iter().take(n) {
+                    let r: Z64 = ctx.keys.sample_pair(P1);
+                    let rb = Bit(ctx.keys.sample_pair::<Z64>(P1).0 & 1 == 1);
+                    let rbp = rb.to_z64();
+                    let u1 = match *u {
+                        RShare::Eval { prev, .. } => prev, // P2 = (u3, u1)
+                        _ => unreachable!(),
+                    };
+                    let y2 = u1 * (Z64(1) - Z64(2) * rbp) - r;
+                    acc.absorb_ring(&y2);
+                }
+                let d = acc.finalize();
+                ctx.net.send_digest(P3, &d);
+            }
+            P3 => {
+                let payload = ctx.net.recv(P1)?;
+                let mut acc = crate::crypto::HashAcc::new();
+                for (i, b) in bs.iter().enumerate() {
+                    let chunk = &payload[i * 9..(i + 1) * 9];
+                    let y1 = Z64(u64::from_le_bytes(chunk[..8].try_into().unwrap()));
+                    let x1 = Bit(chunk[8] & 1 == 1);
+                    let lam1 = b.lam(me, 1).expect("P3 holds λ_b,1");
+                    let lam2 = b.lam(me, 2).expect("P3 holds λ_b,2");
+                    let x = x1 + lam1 + lam2; // λ_b ⊕ r_b
+                    let xp = x.to_z64();
+                    acc.absorb_ring(&(xp - y1));
+                }
+                let want = acc.finalize();
+                ctx.net.recv_digest_expect(P2, &want, "Π_Bit2A λ_b lift check")?;
+            }
+            _ => {}
+        }
+        Ok(u_shares)
+    })
+}
+
+/// Multiplication `[[u]]·[[v]]` where `λ_v = 0` (public-m `v`): no γ needed
+/// (`γ_uv = λ_u·λ_v = 0`), so the offline phase is just a fresh λ_z — the
+/// online exchange is the standard 3ℓ (Fig. 15's "γ_uv-sharing is not
+/// needed").
+fn mult_gamma_zero(
+    ctx: &mut Ctx,
+    us: &[MShare<Z64>],
+    vs: &[Z64],
+) -> Result<Vec<MShare<Z64>>, Abort> {
+    let me = ctx.id();
+    let n = us.len();
+    let lam_zs: Vec<MShare<Z64>> =
+        ctx.offline(|ctx| (0..n).map(|_| sample_lam_share(ctx)).collect());
+    ctx.online(|ctx| {
+        if me == P0 {
+            return Ok(lam_zs);
+        }
+        let (jn, jp) = (me.next_evaluator().0, me.prev_evaluator().0);
+        let mut mp_next = Vec::with_capacity(n);
+        let mut mp_prev = Vec::with_capacity(n);
+        for i in 0..n {
+            // m_u = 0 ⇒ m'_j = −λ_u,j·m_v + λ_z,j  (λ_v = 0, γ = 0)
+            let mv = vs[i];
+            mp_next.push(-(us[i].lam(me, jn).unwrap() * mv) + lam_zs[i].lam(me, jn).unwrap());
+            mp_prev.push(-(us[i].lam(me, jp).unwrap() * mv) + lam_zs[i].lam(me, jp).unwrap());
+        }
+        ctx.send_ring(me.prev_evaluator(), &mp_prev);
+        ctx.vouch_ring(me.next_evaluator(), &mp_next);
+        let missing: Vec<Z64> = ctx.recv_ring(me.next_evaluator(), n)?;
+        ctx.expect_ring(me.prev_evaluator(), &missing);
+        Ok((0..n)
+            .map(|i| {
+                let m_u = us[i].m(); // = 0 by construction, kept for clarity
+                let m_z = mp_next[i] + mp_prev[i] + missing[i] + m_u * vs[i];
+                match lam_zs[i] {
+                    MShare::Eval { lam_next, lam_prev, .. } => {
+                        MShare::Eval { m: m_z, lam_next, lam_prev }
+                    }
+                    _ => unreachable!(),
+                }
+            })
+            .collect())
+    })
+}
+
+/// `Π_Bit2A` (Fig. 15): `[[b]]^B → [[b]]^A`. Online: 1 round, 3ℓ bits.
+pub fn bit2a(ctx: &mut Ctx, b: &MShare<Bit>) -> Result<MShare<Z64>, Abort> {
+    bit2a_many(ctx, std::slice::from_ref(b)).map(|mut v| v.pop().unwrap())
+}
+
+/// Batched [`bit2a`].
+pub fn bit2a_many(ctx: &mut Ctx, bs: &[MShare<Bit>]) -> Result<Vec<MShare<Z64>>, Abort> {
+    let me = ctx.id();
+    let n = bs.len();
+    let u_shares = share_lifted_lambda(ctx, bs)?;
+    // [[u]] with m_u = 0, λ_u = −u
+    let us: Vec<MShare<Z64>> = u_shares.iter().map(|u| u.into_mshare()).collect();
+    // v = m_b over the ring, public among evaluators
+    let vs: Vec<Z64> = if me.is_evaluator() {
+        bs.iter().map(|b| b.m().to_z64()).collect()
+    } else {
+        vec![Z64(0); n]
+    };
+    let uvs = mult_gamma_zero(ctx, &us, &vs)?;
+    // [[b]] = [[v]] + [[u]] − 2[[uv]]
+    Ok((0..n)
+        .map(|i| {
+            let v_pub = MShare::of_public(me, vs[i]);
+            v_pub + us[i] - uvs[i].scale(Z64(2))
+        })
+        .collect())
+}
+
+/// `Π_B2A` (Fig. 16): `[[v]]^B (ℓ bits) → [[v]]^A` in **one** online round
+/// and 3ℓ bits (vs ABY3's `1 + log ℓ` rounds / `9ℓ log ℓ` bits).
+pub fn b2a(ctx: &mut Ctx, bits: &[MShare<Bit>]) -> Result<MShare<Z64>, Abort> {
+    let me = ctx.id();
+    let l = bits.len();
+    assert!(l <= 64);
+    // offline: lift every mask bit (ℓ × Bit2A offline)
+    let p_shares = share_lifted_lambda(ctx, bits)?;
+
+    ctx.online(|ctx| {
+        // evaluator locals (Fig. 16): q_i = m_{v_i} over the ring
+        let (x, y, z) = if me.is_evaluator() {
+            let mut x = Z64(0);
+            let mut y = Z64(0);
+            let mut z = Z64(0);
+            for (i, b) in bits.iter().enumerate() {
+                let q = b.m().to_z64();
+                let w = Z64::wrapping_pow2(i as u32);
+                match me {
+                    P1 => {
+                        // x needs q_i + p_{i,2} − 2 q_i p_{i,2}; P1 holds p2
+                        let p2 = p_shares[i].component(me, 2).unwrap();
+                        x += w * (q + p2 - Z64(2) * q * p2);
+                        // y needs p_{i,3} − 2 q_i p_{i,3}; P1 holds p3
+                        let p3 = p_shares[i].component(me, 3).unwrap();
+                        y += w * (p3 - Z64(2) * q * p3);
+                    }
+                    P2 => {
+                        let p3 = p_shares[i].component(me, 3).unwrap();
+                        y += w * (p3 - Z64(2) * q * p3);
+                        let p1 = p_shares[i].component(me, 1).unwrap();
+                        z += w * (p1 - Z64(2) * q * p1);
+                    }
+                    P3 => {
+                        let p2 = p_shares[i].component(me, 2).unwrap();
+                        x += w * (q + p2 - Z64(2) * q * p2);
+                        let p1 = p_shares[i].component(me, 1).unwrap();
+                        z += w * (p1 - Z64(2) * q * p1);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            (Some(x), Some(y), Some(z))
+        } else {
+            (None, None, None)
+        };
+
+        // [[x]], [[y]], [[z]] by parallel Π_vSh (one round, 3ℓ bits)
+        let xv = x.map(|v| vec![v]);
+        let yv = y.map(|v| vec![v]);
+        let zv = z.map(|v| vec![v]);
+        let [sx, sy, sz] = crate::proto::sharing::vsh_cycle(
+            ctx,
+            [xv.as_deref(), yv.as_deref(), zv.as_deref()],
+            1,
+        )?;
+        Ok(sx[0] + sy[0] + sz[0])
+    })
+}
+
+/// `Π_BitInj` (Fig. 17): `[[b]]^B, [[v]]^A → [[b·v]]^A`. Online: 1 round,
+/// 3ℓ bits (vs ABY3's 3 rounds / 27ℓ).
+pub fn bitinj(ctx: &mut Ctx, b: &MShare<Bit>, v: &MShare<Z64>) -> Result<MShare<Z64>, Abort> {
+    bitinj_many(ctx, std::slice::from_ref(b), std::slice::from_ref(v))
+        .map(|mut o| o.pop().unwrap())
+}
+
+/// Batched [`bitinj`].
+pub fn bitinj_many(
+    ctx: &mut Ctx,
+    bs: &[MShare<Bit>],
+    vs: &[MShare<Z64>],
+) -> Result<Vec<MShare<Z64>>, Abort> {
+    assert_eq!(bs.len(), vs.len());
+    let me = ctx.id();
+    let n = bs.len();
+
+    // ---- offline ----
+    // ⟨y1⟩ = ⟨λ_b'⟩ with the Bit2A check
+    let y1 = share_lifted_lambda(ctx, bs)?;
+    // ⟨y2⟩ = ⟨λ_b·λ_v⟩ with the γ-style check
+    let y2 = ctx.offline(|ctx| -> Result<Vec<RShare<Z64>>, Abort> {
+        let vals: Option<Vec<Z64>> = (me == P0).then(|| {
+            bs.iter()
+                .zip(vs)
+                .map(|(b, v)| match (b, v) {
+                    (MShare::Helper { lam: lb }, MShare::Helper { lam: lv }) => {
+                        (lb[0] + lb[1] + lb[2]).to_z64() * (lv[0] + lv[1] + lv[2])
+                    }
+                    _ => unreachable!(),
+                })
+                .collect()
+        });
+        let y2 = ash_many(ctx, vals.as_deref(), n)?;
+
+        // check: Σ_i (u_i − y2_i) == 0 with u the γ-partition of λ_b'·λ_v
+        let mut z_mine = Vec::with_capacity(n);
+        if me.is_evaluator() {
+            let j = me.next_evaluator().0;
+            let jn = j;
+            let jp = 1 + (jn % 3);
+            for i in 0..n {
+                let zsh = ctx.zero_share::<Z64>();
+                let mask = match me {
+                    P1 => zsh.a.unwrap(),
+                    P2 => zsh.b.unwrap(),
+                    P3 => zsh.gamma.unwrap(),
+                    _ => unreachable!(),
+                };
+                let ly1_j = y1[i].component(me, jn).unwrap();
+                let ly1_j1 = y1[i].component(me, jp).unwrap();
+                let lv_j = vs[i].lam(me, jn).unwrap();
+                let lv_j1 = vs[i].lam(me, jp).unwrap();
+                let u = ly1_j * lv_j + ly1_j * lv_j1 + ly1_j1 * lv_j + mask;
+                let y2_j = y2[i].component(me, jn).unwrap();
+                z_mine.push(u - y2_j);
+            }
+        } else {
+            for _ in 0..n {
+                let _ = ctx.zero_share::<Z64>();
+            }
+        }
+        match me {
+            P1 => ctx.send_ring(P3, &z_mine),
+            P2 => {
+                let mut acc = crate::crypto::HashAcc::new();
+                for z in &z_mine {
+                    acc.absorb_ring(&(-*z));
+                }
+                let d = acc.finalize();
+                ctx.net.send_digest(P3, &d);
+            }
+            P3 => {
+                let z2: Vec<Z64> = ctx.recv_ring(P1, n)?;
+                let mut acc = crate::crypto::HashAcc::new();
+                for i in 0..n {
+                    acc.absorb_ring(&(z_mine[i] + z2[i]));
+                }
+                let want = acc.finalize();
+                ctx.net.recv_digest_expect(P2, &want, "Π_BitInj λ_bλ_v check")?;
+            }
+            _ => {}
+        }
+        Ok(y2)
+    })?;
+
+    // ---- online (Fig. 17) ----
+    ctx.online(|ctx| {
+        let cs: Option<Vec<(Z64, Z64, Z64)>> = me.is_evaluator().then(|| {
+            (0..n)
+                .map(|i| {
+                    let mb = bs[i].m().to_z64();
+                    let mv = vs[i].m();
+                    let x0 = mb * mv;
+                    let x1 = mb;
+                    let x2 = mv - Z64(2) * mv * mb;
+                    let x3 = Z64(2) * mb - Z64(1);
+                    let c = |j: u8, with_x0: bool| {
+                        let lv = vs[i].lam(me, j);
+                        let y1j = y1[i].component(me, j);
+                        let y2j = y2[i].component(me, j);
+                        match (lv, y1j, y2j) {
+                            (Some(lv), Some(y1j), Some(y2j)) => {
+                                let base = -(x1 * lv) + x2 * y1j + x3 * y2j;
+                                if with_x0 {
+                                    x0 + base
+                                } else {
+                                    base
+                                }
+                            }
+                            _ => Z64(0),
+                        }
+                    };
+                    // c2 includes x0 (computed by P1, P3)
+                    (c(1, false), c(2, true), c(3, false))
+                })
+                .collect()
+        });
+        // parallel vsh: c2 by (P1,P3), c3 by (P2,P1), c1 by (P3,P2)
+        let pick = |sel: fn(&(Z64, Z64, Z64)) -> Z64| -> Option<Vec<Z64>> {
+            cs.as_ref().map(|v| v.iter().map(sel).collect())
+        };
+        let c2_vals = if me == P1 || me == P3 { pick(|t| t.1) } else { None };
+        let c3_vals = if me == P2 || me == P1 { pick(|t| t.2) } else { None };
+        let c1_vals = if me == P3 || me == P2 { pick(|t| t.0) } else { None };
+        let [s2, s3, s1] = crate::proto::sharing::vsh_cycle(
+            ctx,
+            [c2_vals.as_deref(), c3_vals.as_deref(), c1_vals.as_deref()],
+            n,
+        )?;
+        Ok((0..n).map(|i| s1[i] + s2[i] + s3[i]).collect())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetProfile;
+    use crate::proto::{run_4pc, share};
+    use crate::sharing::open;
+
+    #[test]
+    fn bit2a_both_values() {
+        for bit in [false, true] {
+            let run = run_4pc(NetProfile::zero(), 110, move |ctx| {
+                let b = share(ctx, P1, (ctx.id() == P1).then_some(Bit(bit)))?;
+                let a = bit2a(ctx, &b)?;
+                ctx.flush_verify()?;
+                Ok(a)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(open(&outs), Z64(bit as u64), "bit {bit}");
+        }
+    }
+
+    #[test]
+    fn bit2a_online_cost_3l() {
+        let run = run_4pc(NetProfile::zero(), 111, |ctx| {
+            let b = share(ctx, P2, (ctx.id() == P2).then_some(Bit(true)))?;
+            let pre = 2; // input share bits (2 receivers × 1 bit)
+            let a = bit2a(ctx, &b)?;
+            ctx.flush_verify()?;
+            let _ = pre;
+            Ok(a)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open(&outs), Z64(1));
+        // online = input (2 bits) + mult exchange 3ℓ (Table IX)
+        assert_eq!(report.value_bits[1], 2 + 3 * 64);
+        // offline = aSh (2ℓ) + check (ℓ + 1 + a 64-bit blind... measured)
+        assert!(report.value_bits[0] >= 3 * 64);
+    }
+
+    #[test]
+    fn b2a_roundtrip_values() {
+        for v in [0u64, 1, 42, 0xFFFF_FFFF_FFFF_FFFF, 1u64 << 63] {
+            let run = run_4pc(NetProfile::zero(), 112, move |ctx| {
+                let bits = crate::gc::circuit::u64_bits(v, 64);
+                let bs = crate::proto::sharing::share_many_n(
+                    ctx,
+                    P3,
+                    (ctx.id() == P3).then_some(&bits[..]),
+                    64,
+                )?;
+                let a = b2a(ctx, &bs)?;
+                ctx.flush_verify()?;
+                Ok(a)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(open(&outs), Z64(v), "value {v}");
+        }
+    }
+
+    #[test]
+    fn b2a_single_online_round_3l() {
+        let run = run_4pc(NetProfile::zero(), 113, |ctx| {
+            let bits = crate::gc::circuit::u64_bits(0xDEADBEEF, 64);
+            let bs = crate::proto::sharing::share_many_n(
+                ctx,
+                P1,
+                (ctx.id() == P1).then_some(&bits[..]),
+                64,
+            )?;
+            let pre_bits = 2 * 64; // input sharing online bits
+            let a = b2a(ctx, &bs)?;
+            ctx.flush_verify()?;
+            let _ = pre_bits;
+            Ok(a)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open(&outs), Z64(0xDEADBEEF));
+        // B2A online: exactly 3ℓ bits (Table I) and 1 round beyond inputs
+        assert_eq!(report.value_bits[1] - 2 * 64, 3 * 64);
+        assert_eq!(report.rounds[1], 2); // 1 input + 1 B2A
+    }
+
+    #[test]
+    fn bitinj_all_cases() {
+        for bit in [false, true] {
+            for val in [0i64, 5, -17, 123456] {
+                let run = run_4pc(NetProfile::zero(), 114, move |ctx| {
+                    let b = share(ctx, P1, (ctx.id() == P1).then_some(Bit(bit)))?;
+                    let v = share(ctx, P2, (ctx.id() == P2).then_some(Z64::from(val)))?;
+                    let bv = bitinj(ctx, &b, &v)?;
+                    ctx.flush_verify()?;
+                    Ok(bv)
+                });
+                let (outs, _) = run.expect_ok();
+                let want = if bit { Z64::from(val) } else { Z64(0) };
+                assert_eq!(open(&outs), want, "b={bit} v={val}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitinj_online_cost_3l() {
+        let run = run_4pc(NetProfile::zero(), 115, |ctx| {
+            let b = share(ctx, P1, (ctx.id() == P1).then_some(Bit(true)))?;
+            let v = share(ctx, P2, (ctx.id() == P2).then_some(Z64(77)))?;
+            let bv = bitinj(ctx, &b, &v)?;
+            ctx.flush_verify()?;
+            Ok(bv)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open(&outs), Z64(77));
+        // inputs: 2 bits + 2·64; BitInj online: 3ℓ (Table IX)
+        assert_eq!(report.value_bits[1] - 2 - 2 * 64, 3 * 64);
+    }
+}

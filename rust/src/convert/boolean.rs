@@ -1,0 +1,139 @@
+//! Boolean-world circuit evaluation over `[[·]]^B` shares.
+//!
+//! XOR/NOT are local (linearity of the boolean sharing); AND gates are
+//! `Π_Mult` instances over `Z_2`, batched **per AND-depth level** so the
+//! online round count equals the circuit's multiplicative depth — this is
+//! how `Π_A2B` achieves its `1 + log ℓ` online rounds with the PPA circuit
+//! (Lemma C.8).
+
+use crate::gc::circuit::{Circuit, Gate};
+use crate::net::Abort;
+use crate::proto::mult::mult_many;
+use crate::proto::Ctx;
+use crate::ring::Bit;
+use crate::sharing::MShare;
+
+/// Evaluate `circuit` on boolean shares, level-batched.
+pub fn eval_bool_circuit(
+    ctx: &mut Ctx,
+    circuit: &Circuit,
+    inputs: &[MShare<Bit>],
+) -> Result<Vec<MShare<Bit>>, Abort> {
+    assert_eq!(inputs.len(), circuit.n_inputs);
+    let n_wires = circuit.n_wires();
+    let mut wires: Vec<Option<MShare<Bit>>> = vec![None; n_wires];
+    for (i, s) in inputs.iter().enumerate() {
+        wires[i] = Some(*s);
+    }
+
+    // group gates into levels: a gate is ready when its inputs are resolved;
+    // AND gates of the same level run in one mult_many batch.
+    let mut remaining: Vec<(usize, Gate)> =
+        circuit.gates.iter().cloned().enumerate().collect();
+    while !remaining.is_empty() {
+        let mut next_remaining = Vec::new();
+        let mut and_batch: Vec<(usize, MShare<Bit>, MShare<Bit>)> = Vec::new();
+        let mut progressed = false;
+        for (g, gate) in remaining {
+            let w = circuit.n_inputs + g;
+            let ready = |a: u32| wires[a as usize].is_some();
+            match gate {
+                Gate::Xor(a, b) if ready(a) && ready(b) => {
+                    wires[w] = Some(wires[a as usize].unwrap() + wires[b as usize].unwrap());
+                    progressed = true;
+                }
+                Gate::Not(a) if ready(a) => {
+                    wires[w] = Some(wires[a as usize].unwrap().add_const(Bit(true)));
+                    progressed = true;
+                }
+                Gate::And(a, b) if ready(a) && ready(b) => {
+                    and_batch.push((w, wires[a as usize].unwrap(), wires[b as usize].unwrap()));
+                    progressed = true;
+                }
+                _ => next_remaining.push((g, gate)),
+            }
+        }
+        if !and_batch.is_empty() {
+            let xs: Vec<MShare<Bit>> = and_batch.iter().map(|t| t.1).collect();
+            let ys: Vec<MShare<Bit>> = and_batch.iter().map(|t| t.2).collect();
+            let zs = mult_many(ctx, &xs, &ys)?;
+            for ((w, _, _), z) in and_batch.into_iter().zip(zs) {
+                wires[w] = Some(z);
+            }
+        }
+        assert!(progressed, "circuit has unresolvable wires");
+        remaining = next_remaining;
+    }
+
+    Ok(circuit
+        .outputs
+        .iter()
+        .map(|&o| wires[o as usize].expect("output resolved"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::circuit::{adder, bits_u64, ppa_subtractor, u64_bits};
+    use crate::net::{NetProfile, P1, P2};
+    use crate::proto::sharing::share_many_n;
+    use crate::proto::{run_4pc, Ctx};
+    use crate::sharing::open;
+
+    fn share_bits(
+        ctx: &mut Ctx,
+        dealer: crate::net::PartyId,
+        v: u64,
+        bits: usize,
+    ) -> Result<Vec<MShare<Bit>>, crate::net::Abort> {
+        let vs = (ctx.id() == dealer).then(|| u64_bits(v, bits));
+        share_many_n(ctx, dealer, vs.as_deref(), bits)
+    }
+
+    fn open_bits(outs: &[Vec<MShare<Bit>>; 4]) -> u64 {
+        let n = outs[0].len();
+        let bits: Vec<Bit> = (0..n)
+            .map(|i| open(&[outs[0][i], outs[1][i], outs[2][i], outs[3][i]]))
+            .collect();
+        bits_u64(&bits)
+    }
+
+    #[test]
+    fn boolean_adder_over_shares() {
+        let run = run_4pc(NetProfile::zero(), 100, |ctx| {
+            let xs = share_bits(ctx, P1, 123456789, 64)?;
+            let ys = share_bits(ctx, P2, 987654321, 64)?;
+            let mut inputs = xs;
+            inputs.extend(ys);
+            let c = adder(64);
+            let out = eval_bool_circuit(ctx, &c, &inputs)?;
+            ctx.flush_verify()?;
+            Ok(out)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(open_bits(&outs), 123456789 + 987654321);
+    }
+
+    #[test]
+    fn boolean_ppa_subtractor_log_rounds() {
+        let run = run_4pc(NetProfile::zero(), 101, |ctx| {
+            let xs = share_bits(ctx, P1, 1000, 64)?;
+            let ys = share_bits(ctx, P2, 2024, 64)?;
+            let mut inputs = xs;
+            inputs.extend(ys);
+            let c = ppa_subtractor(64);
+            let out = eval_bool_circuit(ctx, &c, &inputs)?;
+            ctx.flush_verify()?;
+            Ok(out)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open_bits(&outs), 1000u64.wrapping_sub(2024));
+        // online rounds: 2 input rounds + AND-depth (≤ 1 + log ℓ = 7)
+        assert!(
+            report.rounds[1] <= 2 + 7,
+            "rounds {} too deep for a PPA",
+            report.rounds[1]
+        );
+    }
+}

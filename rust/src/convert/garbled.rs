@@ -1,0 +1,308 @@
+//! Garbled-world conversions: `Π_G2B` (Fig. 10), `Π_G2A` (Fig. 11),
+//! `Π_B2G` (Fig. 12), `Π_A2G` (Fig. 13).
+//!
+//! The pattern: a random `r` bridges the worlds — shared verifiably in both
+//! the garbled world and the target world by its two owners; P0 evaluates a
+//! (possibly free-XOR-only) circuit on `v` and `r`, learns the masked
+//! `v ⊕ r` / `v − r` in clear, and re-shares it towards the target world
+//! with the garbling scheme's authenticity backing its honesty.
+
+use crate::crypto::HashAcc;
+use crate::gc::circuit::{adder, bits_u64, subtractor, u64_bits, Builder};
+use crate::gc::{g_eval, g_reconstruct, g_vsh, offset, GShare};
+use crate::net::{Abort, MsgClass, P0, P1, P2, P3};
+use crate::proto::sharing::{vsh, vsh_many};
+use crate::proto::Ctx;
+use crate::ring::{Bit, Z64};
+use crate::sharing::MShare;
+
+/// `Π_G2B` for one bit: `[[v]]^G → [[v]]^B`. Online: 1 round, 3 bits.
+pub fn g2b(ctx: &mut Ctx, v: &GShare) -> Result<MShare<Bit>, Abort> {
+    let me = ctx.id();
+    // offline: r by P1,P2 → [[r]]^G and [[r]]^B
+    let r_clear: Option<Vec<Bit>> = (me == P1 || me == P2).then(|| {
+        let peer = if me == P1 { P2 } else { P1 };
+        vec![Bit(ctx.keys.sample_pair::<Z64>(peer).0 & 1 == 1)]
+    });
+    let (rg, rb) = ctx.offline(|ctx| -> Result<_, Abort> {
+        let rg = g_vsh(ctx, (P1, P2), r_clear.as_deref(), 1)?;
+        let rb = vsh_many::<Bit>(ctx, (P1, P2), r_clear.as_deref(), 1)?;
+        Ok((rg, rb))
+    })?;
+
+    // online: P0 "evaluates Add(v, r)" — XOR is free, so the active label is
+    // just the XOR of labels; P0 decodes v⊕r from the colour bits which the
+    // garblers expose for this output wire (the "decoding information").
+    let vr_label = crate::gc::g_xor(v, &rg[0]);
+    let opened = g_reconstruct(ctx, &[vr_label], P0)?;
+
+    // P0 sends v⊕r + H(actual key) to P3; P3 verifies via authenticity
+    let vr_for_share: Option<Vec<Bit>> = ctx.online(|ctx| -> Result<_, Abort> {
+        match me {
+            P0 => {
+                let bit = opened.as_ref().unwrap()[0];
+                ctx.net.send_with_bits(P3, &[bit.as_u8()], MsgClass::Value, 1);
+                let mut acc = HashAcc::new();
+                acc.absorb(&vr_label.key());
+                let d = acc.finalize();
+                ctx.net.send_digest(P3, &d);
+                Ok(Some(vec![bit]))
+            }
+            P3 => {
+                let raw = ctx.net.recv(P0)?;
+                let bit = Bit(raw[0] & 1 == 1);
+                // authenticity: P0 must hold K^{v⊕r}
+                let r_off = offset(ctx);
+                let expect_key =
+                    crate::gc::garble::active_label(vr_label.key(), r_off, bit);
+                let mut acc = HashAcc::new();
+                acc.absorb(&expect_key);
+                let want = acc.finalize();
+                ctx.net.recv_digest_expect(P0, &want, "Π_G2B key authenticity")?;
+                Ok(Some(vec![bit]))
+            }
+            _ => Ok(None),
+        }
+    })?;
+
+    // [[v⊕r]]^B by (P3, P0), then local XOR with [[r]]^B
+    let vr_sh = vsh(ctx, (P3, P0), vr_for_share.map(|v| v[0]))?;
+    Ok(vr_sh + rb[0])
+}
+
+/// `Π_G2A`: `[[v]]^G (ℓ bits) → [[v]]^A`. Online: 1 round, 3ℓ bits.
+pub fn g2a(ctx: &mut Ctx, v_bits: &[GShare]) -> Result<MShare<Z64>, Abort> {
+    assert_eq!(v_bits.len(), 64);
+    let me = ctx.id();
+    // offline: r ∈ Z_2^64 by P1,P2 → [[r]]^G and [[r]]^A
+    let r_clear: Option<Z64> = (me == P1 || me == P2).then(|| {
+        let peer = if me == P1 { P2 } else { P1 };
+        ctx.keys.sample_pair::<Z64>(peer)
+    });
+    let r_bits: Option<Vec<Bit>> = r_clear.map(|r| u64_bits(r.0, 64));
+    let (rg, ra, sub_out) = {
+        let rg = ctx.offline(|ctx| g_vsh(ctx, (P1, P2), r_bits.as_deref(), 64))?;
+        let ra = ctx.offline(|ctx| vsh(ctx, (P1, P2), r_clear))?;
+        // garbled subtractor Sub(v, r): garble offline, evaluate online
+        let circuit = subtractor(64);
+        let mut inputs = v_bits.to_vec();
+        inputs.extend(rg);
+        let out = g_eval(ctx, &circuit, &inputs)?;
+        (Vec::<GShare>::new(), ra, out)
+    };
+    let _ = rg;
+
+    // P0 decodes v−r and forwards it (+ key hash) to P3
+    let opened = g_reconstruct(ctx, &sub_out, P0)?;
+    let vr: Option<Z64> = ctx.online(|ctx| -> Result<Option<Z64>, Abort> {
+        match me {
+            P0 => {
+                let bits = opened.as_ref().unwrap();
+                let val = Z64(bits_u64(bits));
+                ctx.send_ring1(P3, val);
+                let mut acc = HashAcc::new();
+                for s in &sub_out {
+                    acc.absorb(&s.key());
+                }
+                let d = acc.finalize();
+                ctx.net.send_digest(P3, &d);
+                Ok(Some(val))
+            }
+            P3 => {
+                let val: Z64 = ctx.recv_ring1(P0)?;
+                let r_off = offset(ctx);
+                let bits = u64_bits(val.0, 64);
+                let mut acc = HashAcc::new();
+                for (s, b) in sub_out.iter().zip(bits) {
+                    let k = crate::gc::garble::active_label(s.key(), r_off, b);
+                    acc.absorb(&k);
+                }
+                let want = acc.finalize();
+                ctx.net.recv_digest_expect(P0, &want, "Π_G2A key authenticity")?;
+                Ok(Some(val))
+            }
+            _ => Ok(None),
+        }
+    })?;
+
+    // [[v−r]]^A by (P3, P0) + [[r]]^A
+    let vr_sh = vsh(ctx, (P3, P0), vr)?;
+    Ok(vr_sh + ra)
+}
+
+/// `Π_B2G` for one bit: `[[v]]^B → [[v]]^G` — two verifiable garbled
+/// sharings + free XOR. 1 round, κ bits online (Lemma C.6).
+pub fn b2g(ctx: &mut Ctx, v: &MShare<Bit>) -> Result<GShare, Abort> {
+    let me = ctx.id();
+    // offline: [[y]]^G, y = λ_{v,2} ⊕ λ_{v,3} (owners P1, P0)
+    let y_clear: Option<Vec<Bit>> = (me == P1 || me == P0).then(|| {
+        vec![v.lam(me, 2).unwrap() + v.lam(me, 3).unwrap()]
+    });
+    let y_g = ctx.offline(|ctx| g_vsh(ctx, (P1, P0), y_clear.as_deref(), 1))?;
+    // online: [[x]]^G, x = m_v ⊕ λ_{v,1} (owners P2, P3)
+    let x_clear: Option<Vec<Bit>> =
+        (me == P2 || me == P3).then(|| vec![v.m() + v.lam(me, 1).unwrap()]);
+    let x_g = g_vsh(ctx, (P2, P3), x_clear.as_deref(), 1)?;
+    Ok(crate::gc::g_xor(&x_g[0], &y_g[0]))
+}
+
+/// `Π_A2G`: `[[v]]^A → [[v]]^G` (64 bits) via a garbled subtractor on
+/// `x = m_v − λ_{v,1}` (P2,P3) and `y = λ_{v,2} + λ_{v,3}` (P1,P0).
+/// Online: 1 round, ℓκ bits (Lemma C.7).
+pub fn a2g(ctx: &mut Ctx, v: &MShare<Z64>) -> Result<Vec<GShare>, Abort> {
+    let me = ctx.id();
+    let y_clear: Option<Vec<Bit>> = (me == P1 || me == P0).then(|| {
+        let y = v.lam(me, 2).unwrap() + v.lam(me, 3).unwrap();
+        u64_bits(y.0, 64)
+    });
+    let y_g = ctx.offline(|ctx| g_vsh(ctx, (P1, P0), y_clear.as_deref(), 64))?;
+    let x_clear: Option<Vec<Bit>> = (me == P2 || me == P3).then(|| {
+        let x = v.m() - v.lam(me, 1).unwrap();
+        u64_bits(x.0, 64)
+    });
+    let x_g = g_vsh(ctx, (P2, P3), x_clear.as_deref(), 64)?;
+    let circuit = subtractor(64);
+    let mut inputs = x_g;
+    inputs.extend(y_g);
+    g_eval(ctx, &circuit, &inputs)
+}
+
+/// Garbled ℓ-bit division helper used by the MPC-friendly softmax (§VI-A.c:
+/// "we switch from arithmetic to garbled world and then use a division
+/// garbled circuit"). Non-restoring division is expensive; the NN layer
+/// instead uses the public-denominator path (see `ml::softmax`), and this
+/// adder is exposed for the mixed-world example.
+pub fn garbled_add(ctx: &mut Ctx, x: &[GShare], y: &[GShare]) -> Result<Vec<GShare>, Abort> {
+    assert_eq!(x.len(), y.len());
+    let circuit = adder(x.len());
+    let mut inputs = x.to_vec();
+    inputs.extend_from_slice(y);
+    g_eval(ctx, &circuit, &inputs)
+}
+
+/// A tiny garbled MUX (b ? x : y) used in tests of the garbled world.
+pub fn garbled_mux_circuit(bits: usize) -> crate::gc::circuit::Circuit {
+    let mut b = Builder::new(1 + 2 * bits);
+    let sel = 0u32;
+    let mut outs = Vec::with_capacity(bits);
+    for i in 0..bits {
+        let x = (1 + i) as u32;
+        let y = (1 + bits + i) as u32;
+        // out = y ⊕ b·(x⊕y)
+        let d = b.xor(x, y);
+        let t = b.and(sel, d);
+        outs.push(b.xor(y, t));
+    }
+    b.finish(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::g_share;
+    use crate::net::NetProfile;
+    use crate::proto::{run_4pc, share};
+    use crate::sharing::open;
+
+    #[test]
+    fn g2b_roundtrip() {
+        for bit in [false, true] {
+            let run = run_4pc(NetProfile::zero(), 140, move |ctx| {
+                let g = g_share(ctx, P3, (ctx.id() == P3).then_some(&[Bit(bit)][..]), 1)?;
+                let b = g2b(ctx, &g[0])?;
+                ctx.flush_verify()?;
+                Ok(b)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(open(&outs), Bit(bit), "g2b({bit})");
+        }
+    }
+
+    #[test]
+    fn g2a_roundtrip() {
+        for v in [0u64, 1, 0xDEADBEEF, (-999i64) as u64] {
+            let run = run_4pc(NetProfile::zero(), 141, move |ctx| {
+                let bits = u64_bits(v, 64);
+                let g = g_share(ctx, P1, (ctx.id() == P1).then_some(&bits[..]), 64)?;
+                let a = g2a(ctx, &g)?;
+                ctx.flush_verify()?;
+                Ok(a)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(open(&outs), Z64(v), "g2a({v})");
+        }
+    }
+
+    #[test]
+    fn b2g_roundtrip() {
+        for bit in [false, true] {
+            let run = run_4pc(NetProfile::zero(), 142, move |ctx| {
+                let b = share(ctx, P2, (ctx.id() == P2).then_some(Bit(bit)))?;
+                let g = b2g(ctx, &b)?;
+                let out = g_reconstruct(ctx, &[g], P0)?;
+                ctx.flush_verify()?;
+                Ok(out)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(outs[0], Some(vec![Bit(bit)]), "b2g({bit})");
+        }
+    }
+
+    #[test]
+    fn a2g_roundtrip() {
+        for v in [5u64, (-42i64) as u64, 1u64 << 62] {
+            let run = run_4pc(NetProfile::zero(), 143, move |ctx| {
+                let a = share(ctx, P1, (ctx.id() == P1).then_some(Z64(v)))?;
+                let g = a2g(ctx, &a)?;
+                let out = g_reconstruct(ctx, &g, P0)?;
+                ctx.flush_verify()?;
+                Ok(out)
+            });
+            let (outs, _) = run.expect_ok();
+            let bits = outs[0].clone().unwrap();
+            assert_eq!(bits_u64(&bits), v, "a2g({v})");
+        }
+    }
+
+    #[test]
+    fn a2g_then_g2a_identity() {
+        let run = run_4pc(NetProfile::zero(), 144, |ctx| {
+            let a = share(ctx, P2, (ctx.id() == P2).then_some(Z64(123_456_789_012)))?;
+            let g = a2g(ctx, &a)?;
+            let back = g2a(ctx, &g)?;
+            ctx.flush_verify()?;
+            Ok(back)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(open(&outs), Z64(123_456_789_012));
+    }
+
+    #[test]
+    fn garbled_mux_works() {
+        let c = garbled_mux_circuit(8);
+        use crate::gc::circuit::bits_u64 as b2u;
+        for sel in [false, true] {
+            let mut input = vec![Bit(sel)];
+            input.extend(u64_bits(0xAA, 8));
+            input.extend(u64_bits(0x55, 8));
+            let out = c.eval(&input);
+            assert_eq!(b2u(&out) as u8, if sel { 0xAA } else { 0x55 });
+        }
+    }
+
+    #[test]
+    fn g2b_online_cost_3_bits() {
+        let run = run_4pc(NetProfile::zero(), 145, |ctx| {
+            let g = g_share(ctx, P1, (ctx.id() == P1).then_some(&[Bit(true)][..]), 1)?;
+            let b = g2b(ctx, &g[0])?;
+            ctx.flush_verify()?;
+            Ok(b)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open(&outs), Bit(true));
+        // online: g_share key (κ=128) + colour bits (2) + v⊕r to P3 (1)
+        // + vsh (1 bit) = κ + 4 — the G2B-specific part is 3 bits + the
+        // colour-bit opening (Table I counts 3)
+        assert!(report.value_bits[1] <= 128 + 8, "bits {}", report.value_bits[1]);
+    }
+}

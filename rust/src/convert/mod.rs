@@ -1,0 +1,16 @@
+//! Sharing conversions (paper §IV-C, §V-B): the glue of the mixed-world
+//! framework. Each conversion reproduces the paper's figure and its cost
+//! lemma; the module tests assert the measured online bits/rounds against
+//! Tables I/IX/X.
+
+pub mod a2b;
+pub mod bit2a;
+pub mod bitext;
+pub mod boolean;
+pub mod garbled;
+
+pub use a2b::a2b;
+pub use bit2a::{b2a, bit2a, bitinj};
+pub use bitext::{bitext, bitext_many};
+pub use boolean::eval_bool_circuit;
+pub use garbled::{a2g, b2g, g2a, g2b};

@@ -1,0 +1,224 @@
+//! Coordinator: user-facing orchestration of the four-party cluster —
+//! the outsourced-MLaaS setting of §I where data owners secret-share their
+//! inputs among four servers, the offline dealer phase runs ahead of time,
+//! and the online phase answers training/prediction requests.
+//!
+//! The thread-per-party runtime lives in `net::run_cluster`; this module
+//! packages complete workloads (training loops with loss curves, batched
+//! prediction serving) behind simple entry points used by the CLI and the
+//! examples.
+
+use crate::crypto::Rng;
+use crate::ml::data::{class_batch, linreg_batch, logreg_batch};
+use crate::ml::{share_fixed_mat, F64Mat, LinReg, LogReg, Network, NetworkKind};
+use crate::net::{NetProfile, Phase, P1, P2};
+use crate::proto::{mult, reconstruct, run_4pc, share};
+use crate::ring::{FixedPoint, Z64};
+
+/// Quickstart demo: share → multiply → truncated multiply → reconstruct.
+pub fn demo_quickstart() {
+    let run = run_4pc(NetProfile::lan(), 42, |ctx| {
+        // P1 contributes x = 6.5, P2 contributes y = -2.25
+        let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(6.5)))?;
+        let y = share(ctx, P2, (ctx.id() == P2).then_some(FixedPoint::encode(-2.25)))?;
+        let xy = crate::proto::mult_tr(ctx, &x, &y)?;
+        let raw = mult(ctx, &x, &x)?; // x² without truncation (ring product)
+        let _ = raw;
+        reconstruct(ctx, &xy)
+    });
+    let (outs, report) = run.expect_ok();
+    println!("x·y = {}", FixedPoint::decode(outs[0]));
+    println!(
+        "online: {} rounds, {} value bits, simulated LAN latency {:.3} ms",
+        report.rounds[Phase::Online as usize],
+        report.value_bits[Phase::Online as usize],
+        report.online_latency() * 1e3,
+    );
+}
+
+/// Training driver used by `trident train` and the e2e example. Returns the
+/// per-iteration loss curve (reconstructed from the shared residuals).
+pub fn train_cli(model: &str, iters: usize, batch: usize, d: usize) -> Vec<f64> {
+    println!("secure training: model={model} iters={iters} batch={batch} d={d}");
+    let model = model.to_string();
+    let run = run_4pc(NetProfile::lan(), 99, move |ctx| {
+        let mut losses = Vec::new();
+        let mut rng = Rng::seeded(2024);
+        match model.as_str() {
+            "linreg" | "logreg" => {
+                let logistic = model == "logreg";
+                let data = if logistic {
+                    logreg_batch(&mut rng, batch, d)
+                } else {
+                    linreg_batch(&mut rng, batch, d)
+                };
+                let xs =
+                    share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&data.x), batch, d)?;
+                let ys =
+                    share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&data.y), batch, 1)?;
+                let w0 = F64Mat::zeros(d, 1);
+                let mut w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&w0), d, 1)?;
+                // step size must shrink with the feature count for GD
+                // stability: α = 2^-(log2 d + 1)
+                let lr_pow = ((d as f64).log2().ceil() as u32 + 1).max(2);
+                for _ in 0..iters {
+                    if logistic {
+                        let m = LogReg { d, batch, lr_pow };
+                        w = m.train_iteration(ctx, &w, &xs, &ys)?;
+                        let p = m.predict(ctx, &xs, &w)?;
+                        losses.push(mse_against(ctx, &p, &ys)?);
+                    } else {
+                        let m = LinReg { d, batch, lr_pow };
+                        w = m.train_iteration(ctx, &w, &xs, &ys)?;
+                        let p = m.predict(ctx, &xs, &w)?;
+                        losses.push(mse_against(ctx, &p, &ys)?);
+                    }
+                }
+            }
+            _ => {
+                let kind = if model == "cnn" { NetworkKind::Cnn } else { NetworkKind::Nn };
+                let mut net = Network::new(kind, batch);
+                if d != net.layers[0] {
+                    net.layers[0] = d;
+                }
+                let classes = *net.layers.last().unwrap();
+                let data = class_batch(&mut rng, batch, net.layers[0], classes);
+                let xs = share_fixed_mat(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1).then_some(&data.x),
+                    batch,
+                    net.layers[0],
+                )?;
+                let ts = share_fixed_mat(
+                    ctx,
+                    P2,
+                    (ctx.id() == P2).then_some(&data.t),
+                    batch,
+                    classes,
+                )?;
+                let init = net.init_weights_clear(&mut Rng::seeded(7));
+                let mut ws =
+                    net.share_weights(ctx, P1, (ctx.id() == P1).then_some(&init[..]))?;
+                for _ in 0..iters {
+                    ws = net.train_iteration(ctx, &ws, &xs, &ts)?;
+                    let p = net.predict(ctx, &ws, &xs)?;
+                    losses.push(mse_against(ctx, &p, &ts)?);
+                }
+            }
+        }
+        ctx.flush_verify()?;
+        Ok(losses)
+    });
+    let (outs, report) = run.expect_ok();
+    let losses = outs[1].clone();
+    for (i, l) in losses.iter().enumerate() {
+        println!("iter {i:>3}: loss {l:.6}");
+    }
+    println!(
+        "online totals: {} rounds, {:.1} KiB values, simulated LAN time {:.1} ms ({:.2} it/s)",
+        report.rounds[Phase::Online as usize],
+        report.value_bytes[Phase::Online as usize] as f64 / 1024.0,
+        report.online_latency() * 1e3,
+        iters as f64 / report.online_latency(),
+    );
+    losses
+}
+
+/// Reconstruct the mean-squared error between two shared matrices
+/// (output-stage reconstruction — the only values ever opened).
+fn mse_against(
+    ctx: &mut crate::proto::Ctx,
+    p: &crate::sharing::MMat<Z64>,
+    t: &crate::sharing::MMat<Z64>,
+) -> Result<f64, crate::net::Abort> {
+    let diff = p - t;
+    let opened = crate::proto::reconstruct::reconstruct_many(ctx, &diff.to_shares())?;
+    let n = opened.len() as f64;
+    Ok(opened
+        .iter()
+        .map(|&v| {
+            let f = FixedPoint::decode(v);
+            f * f
+        })
+        .sum::<f64>()
+        / n)
+}
+
+/// Prediction driver for `trident predict`.
+pub fn predict_cli(model: &str, batch: usize) {
+    let m = crate::bench::measure_predict(NetProfile::lan(), model, 784, batch);
+    println!(
+        "secure prediction: model={model} batch={batch} → {:.2} ms online (LAN), {} rounds, {} value bits",
+        m.online_latency() * 1e3,
+        m.online_rounds(),
+        m.online_bits(),
+    );
+    let wan = crate::bench::measure_predict(NetProfile::wan(), model, 784, batch);
+    println!("                   WAN latency {:.2} s", wan.online_latency());
+}
+
+/// Batched prediction serving demo: a stream of query batches answered by a
+/// persistent trained model (the MLaaS loop).
+pub fn serve_cli(queries: usize) {
+    println!("serving {queries} query batches (linreg d=784, B=100 each) …");
+    let run = run_4pc(NetProfile::lan(), 123, move |ctx| {
+        let d = 784;
+        let mut rng = Rng::seeded(5);
+        let w0 = {
+            let mut w = F64Mat::zeros(d, 1);
+            for j in 0..d {
+                w.set(j, 0, rng.normal() * 0.1);
+            }
+            w
+        };
+        let w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&w0), d, 1)?;
+        let model = LinReg::new(d, 100);
+        let mut latencies = Vec::new();
+        for _ in 0..queries {
+            let q = linreg_batch(&mut rng, 100, d);
+            let xs = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&q.x), 100, d)?;
+            let t0 = ctx.net.clock(Phase::Online);
+            let _p = model.predict(ctx, &xs, &w)?;
+            latencies.push(ctx.net.clock(Phase::Online) - t0);
+        }
+        ctx.flush_verify()?;
+        Ok(latencies)
+    });
+    let (outs, report) = run.expect_ok();
+    let lat = &outs[1];
+    let avg = lat.iter().sum::<f64>() / lat.len() as f64;
+    println!(
+        "served {} batches: avg {:.3} ms/batch (simulated LAN), throughput {:.0} queries/s",
+        lat.len(),
+        avg * 1e3,
+        100.0 / avg,
+    );
+    println!(
+        "total online bytes {:.1} KiB, wall {:?}",
+        report.total_bytes[Phase::Online as usize] as f64 / 1024.0,
+        report.wall
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quickstart_runs() {
+        demo_quickstart();
+    }
+
+    #[test]
+    fn train_cli_loss_decreases() {
+        let losses = train_cli("linreg", 12, 16, 8);
+        assert!(losses.last().unwrap() < &losses[0], "loss must drop: {losses:?}");
+    }
+
+    #[test]
+    fn tiny_nn_cli() {
+        let losses = train_cli("nn", 3, 8, 16);
+        assert_eq!(losses.len(), 3);
+    }
+}

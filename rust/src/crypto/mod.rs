@@ -1,0 +1,339 @@
+//! Cryptographic substrate (paper Appendix A).
+//!
+//! * [`Prf`] — the shared-key pseudo-random function `F : {0,1}^κ × {0,1}^κ → X`
+//!   used by `F_setup`-established keys for non-interactive correlated
+//!   randomness. Instantiated as fixed-key-free AES-128 over a counter, the
+//!   standard choice in the high-throughput honest-majority line of work
+//!   (Araki et al.) that Trident builds on.
+//! * [`hash_digest`] / [`HashAcc`] — the collision-resistant hash `H()`
+//!   (SHA-256, as in §VI) with an *accumulating* variant used to batch many
+//!   consistency checks into a single digest exchange — this is the
+//!   amortization every communication lemma in Appendices B–D relies on.
+//! * [`Commitment`] — hash-based commitments for the garbled world's key
+//!   delivery (`Π_Sh^G`, Fig. 6).
+//! * [`Rng`] — a fast, seedable local RNG (xoshiro256**) for dealer/test
+//!   randomness. NOT used for shared randomness (that is the PRF's job).
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use sha2::{Digest, Sha256};
+
+use crate::ring::Ring;
+
+/// κ = 128-bit computational security parameter (paper §IV-A).
+pub const KAPPA_BYTES: usize = 16;
+
+/// Key type for PRFs and garbling: 128-bit.
+pub type Key = [u8; 16];
+
+/// 256-bit hash digest.
+pub type Digest32 = [u8; 32];
+
+/// AES-128-based PRF with a monotone counter.
+///
+/// Two parties holding the same key and drawing the same number of elements
+/// in the same order obtain identical streams — the mechanism behind every
+/// "parties in P \ {P_j} together sample λ_{v,j}" step.
+#[derive(Clone)]
+pub struct Prf {
+    cipher: Aes128,
+    counter: u128,
+}
+
+impl std::fmt::Debug for Prf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Prf(ctr={})", self.counter)
+    }
+}
+
+impl Prf {
+    pub fn new(key: Key) -> Self {
+        Prf { cipher: Aes128::new(&key.into()), counter: 0 }
+    }
+
+    /// Next 16-byte pseudorandom block.
+    #[inline]
+    pub fn next_block(&mut self) -> [u8; 16] {
+        let mut block = self.counter.to_le_bytes();
+        self.counter += 1;
+        let mut b = aes::Block::from(block);
+        self.cipher.encrypt_block(&mut b);
+        block.copy_from_slice(&b);
+        block
+    }
+
+    /// Sample one ring element.
+    #[inline]
+    pub fn gen<R: Ring>(&mut self) -> R {
+        R::from_block(&self.next_block())
+    }
+
+    /// Sample `n` ring elements.
+    pub fn gen_vec<R: Ring>(&mut self, n: usize) -> Vec<R> {
+        (0..n).map(|_| self.gen()).collect()
+    }
+
+    /// Sample a κ-bit key (for garbled labels, offsets, …).
+    #[inline]
+    pub fn gen_key(&mut self) -> Key {
+        self.next_block()
+    }
+
+    /// Number of blocks drawn so far — synchronization sanity check.
+    pub fn position(&self) -> u128 {
+        self.counter
+    }
+}
+
+/// One-shot collision-resistant hash H(x).
+pub fn hash_digest(data: &[u8]) -> Digest32 {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize().into()
+}
+
+/// Accumulating hash: absorb many values, emit one digest.
+///
+/// "the corresponding values can be appended and hashed, resulting in an
+/// overall communication of only 3 ring elements" (§III-C) — protocols push
+/// every to-be-verified value into one of these and exchange a single digest
+/// at a flush point.
+#[derive(Clone)]
+pub struct HashAcc {
+    h: Sha256,
+    len: usize,
+}
+
+impl Default for HashAcc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HashAcc {
+    pub fn new() -> Self {
+        HashAcc { h: Sha256::new(), len: 0 }
+    }
+
+    pub fn absorb(&mut self, data: &[u8]) {
+        // length-prefix every item so absorb("ab","c") != absorb("a","bc")
+        self.h.update((data.len() as u64).to_le_bytes());
+        self.h.update(data);
+        self.len += 1;
+    }
+
+    pub fn absorb_ring<R: Ring>(&mut self, v: &R) {
+        let mut buf = Vec::with_capacity(R::WIRE_BYTES);
+        v.to_wire(&mut buf);
+        self.absorb(&buf);
+    }
+
+    /// Number of absorbed items.
+    pub fn items(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn finalize(self) -> Digest32 {
+        self.h.finalize().into()
+    }
+}
+
+/// Hash-based commitment `Com(m; r) = H(r ‖ m)` with 128-bit randomness.
+///
+/// Binding from collision resistance, hiding from the random prefix —
+/// sufficient for the garbled-sharing key commitments of Fig. 6/8.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Commitment(pub Digest32);
+
+impl Commitment {
+    pub fn commit(msg: &[u8], rand: &Key) -> Commitment {
+        let mut h = Sha256::new();
+        h.update(rand);
+        h.update(msg);
+        Commitment(h.finalize().into())
+    }
+
+    /// Verify an opening (message + randomness).
+    pub fn verify(&self, msg: &[u8], rand: &Key) -> bool {
+        Commitment::commit(msg, rand) == *self
+    }
+}
+
+/// xoshiro256** — fast local randomness for dealers, tests, and synthetic
+/// data. Deterministic from a seed so every experiment is reproducible.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn seeded(seed: u64) -> Rng {
+        // splitmix64 expansion of the seed
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// OS-seeded (non-deterministic) RNG.
+    pub fn from_entropy() -> Rng {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap();
+        Rng::seeded(t.as_nanos() as u64 ^ (std::process::id() as u64) << 32)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn gen<R: Ring>(&mut self) -> R {
+        let mut block = [0u8; 16];
+        block[..8].copy_from_slice(&self.next_u64().to_le_bytes());
+        block[8..].copy_from_slice(&self.next_u64().to_le_bytes());
+        R::from_block(&block)
+    }
+
+    pub fn gen_vec<R: Ring>(&mut self, n: usize) -> Vec<R> {
+        (0..n).map(|_| self.gen()).collect()
+    }
+
+    pub fn gen_key(&mut self) -> Key {
+        let mut k = [0u8; 16];
+        k[..8].copy_from_slice(&self.next_u64().to_le_bytes());
+        k[8..].copy_from_slice(&self.next_u64().to_le_bytes());
+        k
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller (for synthetic datasets).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::{Bit, Z64};
+
+    #[test]
+    fn prf_deterministic_and_synced() {
+        let k = [7u8; 16];
+        let mut a = Prf::new(k);
+        let mut b = Prf::new(k);
+        for _ in 0..100 {
+            assert_eq!(a.gen::<Z64>(), b.gen::<Z64>());
+        }
+        assert_eq!(a.position(), b.position());
+    }
+
+    #[test]
+    fn prf_differs_across_keys() {
+        let mut a = Prf::new([1u8; 16]);
+        let mut b = Prf::new([2u8; 16]);
+        let va: Vec<Z64> = a.gen_vec(8);
+        let vb: Vec<Z64> = b.gen_vec(8);
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn prf_stream_not_constant() {
+        let mut a = Prf::new([9u8; 16]);
+        let v: Vec<Z64> = a.gen_vec(16);
+        assert!(v.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn hash_acc_order_and_framing() {
+        let mut a = HashAcc::new();
+        a.absorb(b"ab");
+        a.absorb(b"c");
+        let mut b = HashAcc::new();
+        b.absorb(b"a");
+        b.absorb(b"bc");
+        assert_ne!(a.finalize(), b.finalize());
+
+        let mut c = HashAcc::new();
+        c.absorb_ring(&Z64(42));
+        c.absorb_ring(&Bit(true));
+        let mut d = HashAcc::new();
+        d.absorb_ring(&Z64(42));
+        d.absorb_ring(&Bit(true));
+        assert_eq!(c.finalize(), d.finalize());
+    }
+
+    #[test]
+    fn commitment_binding_hiding_smoke() {
+        let r1 = [1u8; 16];
+        let r2 = [2u8; 16];
+        let c = Commitment::commit(b"key0", &r1);
+        assert!(c.verify(b"key0", &r1));
+        assert!(!c.verify(b"key1", &r1));
+        assert!(!c.verify(b"key0", &r2));
+        // same message, different randomness => different commitment
+        assert_ne!(c, Commitment::commit(b"key0", &r2));
+    }
+
+    #[test]
+    fn rng_deterministic_per_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        let mut c = Rng::seeded(43);
+        let va: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..10).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn rng_uniform_in_range() {
+        let mut r = Rng::seeded(1);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::seeded(2);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,550 @@
+//! Boolean circuits for the garbled world.
+//!
+//! Free-XOR-friendly representation: XOR and NOT are free, AND costs two
+//! ciphertexts (half-gates). Builders cover the circuits the conversions
+//! need — `ℓ`-bit ripple-carry adder/subtractor (Figs. 10–14) — plus an
+//! AES-128-*shaped* benchmark circuit for Table XI (same AND count and
+//! depth as the Bristol AES-128 circuit; see DESIGN.md §3 on the
+//! substitution).
+
+use crate::ring::Bit;
+
+/// Gate in a boolean circuit. Wire ids: `0..n_inputs` are inputs; gate `g`
+/// drives wire `n_inputs + g`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Gate {
+    Xor(u32, u32),
+    And(u32, u32),
+    Not(u32),
+}
+
+/// A boolean circuit with explicit output wires.
+#[derive(Clone, Debug)]
+pub struct Circuit {
+    pub n_inputs: usize,
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<u32>,
+}
+
+impl Circuit {
+    pub fn n_wires(&self) -> usize {
+        self.n_inputs + self.gates.len()
+    }
+
+    /// Number of AND gates (the garbling cost driver).
+    pub fn and_count(&self) -> usize {
+        self.gates.iter().filter(|g| matches!(g, Gate::And(_, _))).count()
+    }
+
+    /// Multiplicative depth (longest AND chain).
+    pub fn and_depth(&self) -> usize {
+        let mut depth = vec![0usize; self.n_wires()];
+        for (g, gate) in self.gates.iter().enumerate() {
+            let w = self.n_inputs + g;
+            depth[w] = match *gate {
+                Gate::Xor(a, b) => depth[a as usize].max(depth[b as usize]),
+                Gate::And(a, b) => depth[a as usize].max(depth[b as usize]) + 1,
+                Gate::Not(a) => depth[a as usize],
+            };
+        }
+        self.outputs.iter().map(|&o| depth[o as usize]).max().unwrap_or(0)
+    }
+
+    /// Cleartext evaluation (the correctness oracle for garbling).
+    pub fn eval(&self, inputs: &[Bit]) -> Vec<Bit> {
+        assert_eq!(inputs.len(), self.n_inputs);
+        let mut w: Vec<Bit> = Vec::with_capacity(self.n_wires());
+        w.extend_from_slice(inputs);
+        for gate in &self.gates {
+            let v = match *gate {
+                Gate::Xor(a, b) => w[a as usize] + w[b as usize],
+                Gate::And(a, b) => w[a as usize] * w[b as usize],
+                Gate::Not(a) => w[a as usize].not(),
+            };
+            w.push(v);
+        }
+        self.outputs.iter().map(|&o| w[o as usize]).collect()
+    }
+}
+
+/// Incremental circuit builder.
+pub struct Builder {
+    n_inputs: usize,
+    gates: Vec<Gate>,
+}
+
+impl Builder {
+    pub fn new(n_inputs: usize) -> Builder {
+        Builder { n_inputs, gates: Vec::new() }
+    }
+
+    pub(crate) fn push(&mut self, g: Gate) -> u32 {
+        self.gates.push(g);
+        (self.n_inputs + self.gates.len() - 1) as u32
+    }
+
+    pub fn xor(&mut self, a: u32, b: u32) -> u32 {
+        self.push(Gate::Xor(a, b))
+    }
+
+    pub fn and(&mut self, a: u32, b: u32) -> u32 {
+        self.push(Gate::And(a, b))
+    }
+
+    pub fn not(&mut self, a: u32) -> u32 {
+        self.push(Gate::Not(a))
+    }
+
+    pub fn or(&mut self, a: u32, b: u32) -> u32 {
+        // a|b = ¬(¬a & ¬b)
+        let na = self.not(a);
+        let nb = self.not(b);
+        let n = self.and(na, nb);
+        self.not(n)
+    }
+
+    /// Full adder: returns (sum, carry_out). One AND via the
+    /// `c' = c ⊕ ((a⊕c)&(b⊕c))` identity.
+    pub fn full_adder(&mut self, a: u32, b: u32, c: u32) -> (u32, u32) {
+        let axc = self.xor(a, c);
+        let bxc = self.xor(b, c);
+        let sum = self.xor(axc, b);
+        let t = self.and(axc, bxc);
+        let cout = self.xor(c, t);
+        (sum, cout)
+    }
+
+    pub fn finish(self, outputs: Vec<u32>) -> Circuit {
+        Circuit { n_inputs: self.n_inputs, gates: self.gates, outputs }
+    }
+}
+
+/// `ℓ`-bit ripple-carry adder: inputs `x_0..x_{ℓ-1}, y_0..y_{ℓ-1}`
+/// (little-endian), outputs the `ℓ`-bit sum (mod 2^ℓ). ℓ−1 AND gates.
+pub fn adder(bits: usize) -> Circuit {
+    let mut b = Builder::new(2 * bits);
+    let mut outs = Vec::with_capacity(bits);
+    let mut carry: Option<u32> = None;
+    for i in 0..bits {
+        let x = i as u32;
+        let y = (bits + i) as u32;
+        match carry {
+            None => {
+                outs.push(b.xor(x, y));
+                if bits > 1 {
+                    carry = Some(b.and(x, y));
+                }
+            }
+            Some(c) => {
+                if i + 1 < bits {
+                    let (s, c2) = b.full_adder(x, y, c);
+                    outs.push(s);
+                    carry = Some(c2);
+                } else {
+                    // last bit: no carry-out needed → sum only, no AND
+                    let t = b.xor(x, y);
+                    outs.push(b.xor(t, c));
+                }
+            }
+        }
+    }
+    b.finish(outs)
+}
+
+/// `ℓ`-bit subtractor `x − y` (mod 2^ℓ): x + ¬y + 1 via borrow logic.
+pub fn subtractor(bits: usize) -> Circuit {
+    let mut b = Builder::new(2 * bits);
+    let mut outs = Vec::with_capacity(bits);
+    // x - y = x + ~y + 1: carry-in 1, ny = ¬y
+    let mut carry: Option<u32> = None;
+    for i in 0..bits {
+        let x = i as u32;
+        let ny = {
+            let y = (bits + i) as u32;
+            b.not(y)
+        };
+        match carry {
+            None => {
+                // carry-in = 1: sum = x ⊕ ¬y ⊕ 1, carry = x | ¬y? Using
+                // full-adder with constant 1: s = x⊕ny⊕1 = ¬(x⊕ny),
+                // c = (x & ny) | (x⊕ny)·1 = x | ny
+                let xn = b.xor(x, ny);
+                outs.push(b.not(xn));
+                if bits > 1 {
+                    carry = Some(b.or(x, ny));
+                }
+            }
+            Some(c) => {
+                if i + 1 < bits {
+                    let (s, c2) = b.full_adder(x, ny, c);
+                    outs.push(s);
+                    carry = Some(c2);
+                } else {
+                    let t = b.xor(x, ny);
+                    outs.push(b.xor(t, c));
+                }
+            }
+        }
+    }
+    b.finish(outs)
+}
+
+/// The most significant bit of `x − y` — the comparison/msb circuit used by
+/// boolean-world bit extraction (`msb(x−y) = sign`, §V-B).
+pub fn msb_of_diff(bits: usize) -> Circuit {
+    let mut c = subtractor(bits);
+    let msb = *c.outputs.last().unwrap();
+    c.outputs = vec![msb];
+    c
+}
+
+/// Constant-false wire (XOR of an input with itself).
+impl Builder {
+    pub fn const_false(&mut self) -> u32 {
+        self.xor(0, 0)
+    }
+
+    /// Subtract `y` from `x` (equal-width little-endian wire vectors),
+    /// returning `(difference, no_borrow)` — `no_borrow = 1` iff `x ≥ y`
+    /// (the carry-out of `x + ¬y + 1`).
+    pub fn sub_with_borrow(&mut self, x: &[u32], y: &[u32]) -> (Vec<u32>, u32) {
+        assert_eq!(x.len(), y.len());
+        let mut out = Vec::with_capacity(x.len());
+        let mut carry: Option<u32> = None;
+        for i in 0..x.len() {
+            let ny = self.not(y[i]);
+            match carry {
+                None => {
+                    // carry-in = 1
+                    let xn = self.xor(x[i], ny);
+                    out.push(self.not(xn));
+                    carry = Some(self.or(x[i], ny));
+                }
+                Some(c) => {
+                    let (s, c2) = self.full_adder(x[i], ny, c);
+                    out.push(s);
+                    carry = Some(c2);
+                }
+            }
+        }
+        (out, carry.unwrap())
+    }
+
+    /// Per-bit multiplexer: `sel ? a : b`.
+    pub fn mux(&mut self, sel: u32, a: &[u32], b: &[u32]) -> Vec<u32> {
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let d = self.xor(x, y);
+                let t = self.and(sel, d);
+                self.xor(y, t)
+            })
+            .collect()
+    }
+}
+
+/// Unsigned restoring divider: `Q = ⌊N / D⌋` for `bits`-wide inputs
+/// (inputs `n_0..n_{b-1}, d_0..d_{b-1}` little-endian; undefined for D=0).
+/// This is the "division garbled circuit" of the paper's MPC-friendly
+/// softmax (§VI-A.c): ~`bits·(2·bits)` AND gates, evaluated by P0 in the
+/// garbled world after an `Π_A2G` of numerator and denominator.
+pub fn divider(bits: usize) -> Circuit {
+    let mut b = Builder::new(2 * bits);
+    let d_wires: Vec<u32> = (bits..2 * bits).map(|i| i as u32).collect();
+    let f0 = b.const_false();
+    let mut r = vec![f0; bits];
+    let mut q = vec![f0; bits];
+    for i in (0..bits).rev() {
+        let r_top = r[bits - 1];
+        // R' = (R << 1) | n_i
+        let mut rp = Vec::with_capacity(bits);
+        rp.push(i as u32); // n_i
+        rp.extend_from_slice(&r[..bits - 1]);
+        let (t, no_borrow) = b.sub_with_borrow(&rp, &d_wires);
+        // R had a 65th bit (r_top): if set, R' ≥ D regardless
+        let ge = b.or(r_top, no_borrow);
+        q[i] = ge;
+        r = b.mux(ge, &t, &rp);
+    }
+    b.finish(q)
+}
+
+/// Parallel-prefix (Sklansky) adder with carry-in: `log ℓ` AND-depth,
+/// `O(ℓ log ℓ)` AND gates — the "optimized Parallel Prefix Adder" ABY3 uses
+/// and Trident's `Π_A2B` evaluates in the boolean world (Lemma C.8).
+pub fn ppa_adder(bits: usize, carry_in: bool) -> Circuit {
+    let mut b = Builder::new(2 * bits);
+    // propagate/generate per bit
+    let ps: Vec<u32> = (0..bits).map(|i| b.xor(i as u32, (bits + i) as u32)).collect();
+    let gs: Vec<u32> = (0..bits).map(|i| b.and(i as u32, (bits + i) as u32)).collect();
+    // Sklansky prefix tree over (G, P); span[i] = combined (G,P) of bits 0..=i
+    let mut gg = gs.clone();
+    let mut pp = ps.clone();
+    let mut step = 1usize;
+    while step < bits {
+        for i in 0..bits {
+            if (i / step) % 2 == 1 {
+                let j = (i / step) * step - 1; // rightmost index of the left block
+                // (G,P)[i] = (G[i] ⊕ P[i]&G[j], P[i]&P[j])
+                let t = b.and(pp[i], gg[j]);
+                gg[i] = b.xor(gg[i], t);
+                pp[i] = b.and(pp[i], pp[j]);
+            }
+        }
+        step *= 2;
+    }
+    // carries: c_0 = cin; c_{i} = G[i-1] ⊕ (P[i-1] & cin)
+    let mut outs = Vec::with_capacity(bits);
+    for i in 0..bits {
+        let ci = if i == 0 {
+            None // carry-in handled below
+        } else {
+            Some(if carry_in {
+                // G[i-1] ⊕ P[i-1] (cin = 1)
+                b.xor(gg[i - 1], pp[i - 1])
+            } else {
+                gg[i - 1]
+            })
+        };
+        let s = match ci {
+            Some(c) => b.xor(ps[i], c),
+            None => {
+                if carry_in {
+                    b.not(ps[i])
+                } else {
+                    ps[i]
+                }
+            }
+        };
+        outs.push(s);
+    }
+    b.finish(outs)
+}
+
+/// Parallel-prefix subtractor `x − y` (`x + ¬y + 1` with the PPA core).
+pub fn ppa_subtractor(bits: usize) -> Circuit {
+    // wrap ppa_adder(b, cin=1) with ¬y on the second operand
+    let inner = ppa_adder(bits, true);
+    let mut b = Builder::new(2 * bits);
+    // remap: first operand passthrough; second operand negated
+    let mut map: Vec<u32> = (0..bits as u32).collect();
+    for i in 0..bits {
+        map.push(b.not((bits + i) as u32));
+    }
+    // inline the inner circuit
+    for gate in &inner.gates {
+        let mp = |w: u32| map[w as usize];
+        let ng = match *gate {
+            Gate::Xor(x, y) => Gate::Xor(mp(x), mp(y)),
+            Gate::And(x, y) => Gate::And(mp(x), mp(y)),
+            Gate::Not(x) => Gate::Not(mp(x)),
+        };
+        let w = b.push(ng);
+        map.push(w);
+    }
+    let outputs = inner.outputs.iter().map(|&o| map[o as usize]).collect();
+    b.finish(outputs)
+}
+
+/// AES-128-*shaped* benchmark circuit for Table XI: ~6400 AND / ~28000 XOR
+/// gates arranged in 40 AND-layers (10 rounds × 4-deep S-box approximation),
+/// the published Bristol AES-128 profile. The function computed is not AES —
+/// Table XI depends only on gate counts and depth (see DESIGN.md §3).
+pub fn aes_shaped() -> Circuit {
+    layered_circuit(256, 40, 160, 704)
+}
+
+/// Generic layered benchmark circuit: `layers` AND-layers of `ands_per_layer`
+/// AND gates each, with `xors_per_layer` XORs mixing between layers.
+pub fn layered_circuit(
+    n_inputs: usize,
+    layers: usize,
+    ands_per_layer: usize,
+    xors_per_layer: usize,
+) -> Circuit {
+    let mut b = Builder::new(n_inputs);
+    // state wires start as the inputs
+    let mut state: Vec<u32> = (0..n_inputs as u32).collect();
+    let mut mix = 0usize;
+    for _layer in 0..layers {
+        let mut next = Vec::with_capacity(state.len());
+        for i in 0..ands_per_layer.min(state.len() / 2) {
+            let a = state[(2 * i) % state.len()];
+            let c = state[(2 * i + 1) % state.len()];
+            next.push(b.and(a, c));
+        }
+        for i in 0..xors_per_layer {
+            let a = state[(i + mix) % state.len()];
+            let c = next[i % next.len()];
+            next.push(b.xor(a, c));
+        }
+        mix += 1;
+        state = next;
+    }
+    let outputs = state.iter().take(128.min(state.len())).cloned().collect();
+    b.finish(outputs)
+}
+
+/// Encode a u64 as little-endian bits.
+pub fn u64_bits(v: u64, bits: usize) -> Vec<Bit> {
+    (0..bits).map(|i| Bit((v >> i) & 1 == 1)).collect()
+}
+
+/// Decode little-endian bits to u64.
+pub fn bits_u64(bits: &[Bit]) -> u64 {
+    bits.iter().enumerate().fold(0u64, |acc, (i, b)| acc | ((b.0 as u64) << i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+
+    #[test]
+    fn adder_matches_wrapping_add() {
+        let mut rng = Rng::seeded(70);
+        let c = adder(64);
+        for _ in 0..50 {
+            let x = rng.next_u64();
+            let y = rng.next_u64();
+            let mut input = u64_bits(x, 64);
+            input.extend(u64_bits(y, 64));
+            let out = c.eval(&input);
+            assert_eq!(bits_u64(&out), x.wrapping_add(y));
+        }
+    }
+
+    #[test]
+    fn subtractor_matches_wrapping_sub() {
+        let mut rng = Rng::seeded(71);
+        let c = subtractor(64);
+        for _ in 0..50 {
+            let x = rng.next_u64();
+            let y = rng.next_u64();
+            let mut input = u64_bits(x, 64);
+            input.extend(u64_bits(y, 64));
+            let out = c.eval(&input);
+            assert_eq!(bits_u64(&out), x.wrapping_sub(y), "{x} - {y}");
+        }
+    }
+
+    #[test]
+    fn small_width_adders() {
+        for bits in [1usize, 2, 8, 16] {
+            let c = adder(bits);
+            let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            for x in [0u64, 1, mask, mask / 2] {
+                for y in [0u64, 1, mask] {
+                    let mut input = u64_bits(x & mask, bits);
+                    input.extend(u64_bits(y & mask, bits));
+                    let out = c.eval(&input);
+                    assert_eq!(bits_u64(&out), x.wrapping_add(y) & mask);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn msb_of_diff_is_comparison() {
+        let mut rng = Rng::seeded(72);
+        let c = msb_of_diff(64);
+        for _ in 0..50 {
+            let x = rng.next_u64() as i64;
+            let y = rng.next_u64() as i64;
+            let mut input = u64_bits(x as u64, 64);
+            input.extend(u64_bits(y as u64, 64));
+            let out = c.eval(&input);
+            assert_eq!(out[0].0, x.wrapping_sub(y) < 0);
+        }
+    }
+
+    #[test]
+    fn adder_and_count_is_l_minus_1() {
+        assert_eq!(adder(64).and_count(), 63);
+        assert_eq!(subtractor(64).and_count(), 63); // OR's AND + 62 full adders
+    }
+
+    #[test]
+    fn aes_shaped_profile() {
+        let c = aes_shaped();
+        assert!((6000..7000).contains(&c.and_count()), "ANDs = {}", c.and_count());
+        assert_eq!(c.and_depth(), 40);
+    }
+
+    #[test]
+    fn divider_matches_integer_division() {
+        let mut rng = Rng::seeded(75);
+        let c = divider(64);
+        for _ in 0..25 {
+            let n = rng.next_u64();
+            let d = rng.next_u64().max(1);
+            let mut input = u64_bits(n, 64);
+            input.extend(u64_bits(d, 64));
+            let out = c.eval(&input);
+            assert_eq!(bits_u64(&out), n / d, "{n}/{d}");
+        }
+        // edges
+        for (n, d) in [(0u64, 5u64), (5, 5), (4, 5), (u64::MAX, 1), (u64::MAX, u64::MAX)] {
+            let mut input = u64_bits(n, 64);
+            input.extend(u64_bits(d, 64));
+            assert_eq!(bits_u64(&c.eval(&input)), n / d, "{n}/{d}");
+        }
+    }
+
+    #[test]
+    fn divider_small_widths() {
+        let c = divider(8);
+        for n in [0u64, 1, 100, 255] {
+            for d in [1u64, 3, 16, 255] {
+                let mut input = u64_bits(n, 8);
+                input.extend(u64_bits(d, 8));
+                assert_eq!(bits_u64(&c.eval(&input)), n / d, "{n}/{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn ppa_adder_matches_wrapping_add() {
+        let mut rng = Rng::seeded(73);
+        for cin in [false, true] {
+            let c = ppa_adder(64, cin);
+            assert!(c.and_depth() <= 8, "depth {}", c.and_depth());
+            for _ in 0..20 {
+                let x = rng.next_u64();
+                let y = rng.next_u64();
+                let mut input = u64_bits(x, 64);
+                input.extend(u64_bits(y, 64));
+                let out = c.eval(&input);
+                let want = x.wrapping_add(y).wrapping_add(cin as u64);
+                assert_eq!(bits_u64(&out), want, "{x}+{y}+{}", cin as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn ppa_subtractor_matches_wrapping_sub() {
+        let mut rng = Rng::seeded(74);
+        let c = ppa_subtractor(64);
+        for _ in 0..20 {
+            let x = rng.next_u64();
+            let y = rng.next_u64();
+            let mut input = u64_bits(x, 64);
+            input.extend(u64_bits(y, 64));
+            let out = c.eval(&input);
+            assert_eq!(bits_u64(&out), x.wrapping_sub(y));
+        }
+    }
+
+    #[test]
+    fn not_gate_and_or() {
+        let mut b = Builder::new(2);
+        let o = b.or(0, 1);
+        let c = b.finish(vec![o]);
+        for (x, y, want) in
+            [(false, false, false), (true, false, true), (false, true, true), (true, true, true)]
+        {
+            assert_eq!(c.eval(&[Bit(x), Bit(y)])[0], Bit(want));
+        }
+    }
+}

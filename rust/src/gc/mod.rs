@@ -1,0 +1,611 @@
+//! The Garbled World (paper §IV-A): MRZ-style garbling in the 4PC setting —
+//! `P1, P2, P3` are the garblers (sharing all garbling randomness through
+//! their triple key `P \ {P0}`), `P0` is the sole evaluator.
+//!
+//! Submodules: [`circuit`] (boolean circuits + builders), [`garble`]
+//! (half-gates/free-XOR/fixed-key-AES), and the 4PC protocols below
+//! (`Π_Sh^G`, `Π_vSh^G`, garbled evaluation, reconstruction).
+
+pub mod circuit;
+pub mod garble;
+
+use crate::crypto::{Commitment, Key};
+use crate::net::{Abort, MsgClass, PartyId, P0, P1, P2, P3};
+use crate::ring::Bit;
+use crate::setup::Scope;
+
+use crate::proto::Ctx;
+use circuit::Circuit;
+use garble::{active_label, evaluate, garble, output_k0, GarbledCircuit};
+
+/// A party's `[[·]]^G`-share of one bit: garblers hold the zero-label `K⁰`,
+/// the evaluator holds the active label `K^v`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GShare {
+    Garbler(Key),
+    Evaluator(Key),
+}
+
+impl GShare {
+    pub fn key(&self) -> Key {
+        match self {
+            GShare::Garbler(k) | GShare::Evaluator(k) => *k,
+        }
+    }
+}
+
+/// The garblers' shared global offset `R` (lsb 1), drawn eagerly at context
+/// creation from the `P\{P0}` triple key (see `Ctx::new`).
+pub fn offset(ctx: &mut Ctx) -> Key {
+    ctx.gc_offset.expect("P0 never learns R")
+}
+
+/// Garblers jointly sample a fresh zero-label.
+fn fresh_k0(ctx: &mut Ctx) -> Key {
+    ctx.keys.sample_key(Scope::Excl(P0))
+}
+
+/// Garblers jointly sample commitment randomness / permutation bits.
+fn shared_rand(ctx: &mut Ctx) -> Key {
+    ctx.keys.sample_key(Scope::Excl(P0))
+}
+
+fn xor_key(a: Key, b: Key) -> Key {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a[i] ^ b[i];
+    }
+    out
+}
+
+/// `Π_Sh^G(P_i, v)` for a garbler dealer (Fig. 6), batched over bits.
+/// Offline: garblers agree on `K⁰`; P1, P2 commit to `{K⁰, K¹}` towards P0
+/// in a random permuted order. Online: the dealer sends the active key plus
+/// the decommitment; P0 verifies. Amortized online cost: κ bits per bit
+/// shared (Lemma C.2).
+pub fn g_share(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    bits: Option<&[Bit]>,
+    n: usize,
+) -> Result<Vec<GShare>, Abort> {
+    assert!(dealer.is_evaluator(), "use g_share_p0 for a P0 dealer");
+    let me = ctx.id();
+    if me == dealer {
+        assert_eq!(bits.unwrap().len(), n);
+    }
+
+    // offline: labels + commitments
+    let offline_state = ctx.offline(|ctx| {
+        if me.is_evaluator() {
+            let r = offset(ctx);
+            let mut k0s = Vec::with_capacity(n);
+            let mut material = Vec::new(); // (rand0, rand1, perm)
+            for _ in 0..n {
+                let k0 = fresh_k0(ctx);
+                let k1 = xor_key(k0, r);
+                let r0 = shared_rand(ctx);
+                let r1 = shared_rand(ctx);
+                let perm = shared_rand(ctx)[0] & 1 == 1;
+                let c0 = Commitment::commit(&k0, &r0);
+                let c1 = Commitment::commit(&k1, &r1);
+                let (first, second) = if perm { (c1.clone(), c0.clone()) } else { (c0, c1) };
+                if me == P1 || me == P2 {
+                    // both send the permuted commitment pair to P0
+                    let mut buf = Vec::with_capacity(64);
+                    buf.extend_from_slice(&first.0);
+                    buf.extend_from_slice(&second.0);
+                    ctx.net.send(P0, &buf, MsgClass::Commit);
+                }
+                k0s.push(k0);
+                material.push((r0, r1, perm));
+            }
+            Ok::<_, Abort>((k0s, material, Vec::new()))
+        } else {
+            // P0: receive and cross-check the commitment pairs
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let a = ctx.net.recv(P1)?;
+                let b = ctx.net.recv(P2)?;
+                if a != b {
+                    return Err(ctx.net.abort("Π_Sh^G: commitment mismatch P1 vs P2".into()));
+                }
+                pairs.push(a);
+            }
+            Ok((Vec::new(), Vec::new(), pairs))
+        }
+    })?;
+    let (k0s, material, commit_pairs) = offline_state;
+
+    // online: dealer delivers active keys + decommitments
+    ctx.online(|ctx| {
+        if me == dealer {
+            let r = offset(ctx);
+            let bits = bits.unwrap();
+            for i in 0..n {
+                let kv = active_label(k0s[i], r, bits[i]);
+                // key travels as value traffic (κ bits), decommitment as
+                // amortized commitment traffic
+                ctx.net.send_with_bits(P0, &kv, MsgClass::Value, 128);
+                let (r0, r1, _) = material[i];
+                let rb = if bits[i].0 { r1 } else { r0 };
+                ctx.net.send(P0, &rb, MsgClass::Commit);
+            }
+        }
+        if me == P0 {
+            let mut out = Vec::with_capacity(n);
+            for pair in commit_pairs.iter().take(n) {
+                let kv = ctx.net.recv(dealer)?;
+                let rb = ctx.net.recv(dealer)?;
+                let mut key = [0u8; 16];
+                key.copy_from_slice(&kv);
+                let mut rand = [0u8; 16];
+                rand.copy_from_slice(&rb);
+                let com = Commitment::commit(&key, &rand);
+                let c_first: &[u8] = &pair[..32];
+                let c_second: &[u8] = &pair[32..];
+                if com.0.as_slice() != c_first && com.0.as_slice() != c_second {
+                    return Err(ctx
+                        .net
+                        .abort("Π_Sh^G: decommitment does not open either commitment".into()));
+                }
+                out.push(GShare::Evaluator(key));
+            }
+            return Ok(out);
+        }
+        Ok(k0s.into_iter().map(GShare::Garbler).collect())
+    })
+}
+
+/// `Π_Sh^G(P0, v)`: P0 splits `v = v1 ⊕ v2`, hands `v1`/`v2` to P1/P2, who
+/// then `Π_Sh^G` them; shares combine by free XOR (Fig. 6 text).
+pub fn g_share_p0(ctx: &mut Ctx, bits: Option<&[Bit]>, n: usize) -> Result<Vec<GShare>, Abort> {
+    let me = ctx.id();
+    // P0 → v1 to P1, v2 to P2 (online: these depend on the data)
+    let (v1, v2) = ctx.online(|ctx| {
+        match me {
+            P0 => {
+                let bits = bits.expect("P0 supplies bits");
+                let mut rng_bits = Vec::with_capacity(n);
+                for i in 0..n {
+                    let b1 = Bit(ctx.rng.next_u64() & 1 == 1);
+                    rng_bits.push((b1, bits[i] + b1));
+                }
+                let enc = |sel: fn(&(Bit, Bit)) -> Bit, v: &Vec<(Bit, Bit)>| {
+                    v.iter().map(|p| sel(p).as_u8()).collect::<Vec<u8>>()
+                };
+                let b1s = enc(|p| p.0, &rng_bits);
+                let b2s = enc(|p| p.1, &rng_bits);
+                ctx.net.send_with_bits(P1, &b1s, MsgClass::Value, n as u64);
+                ctx.net.send_with_bits(P2, &b2s, MsgClass::Value, n as u64);
+                Ok::<_, Abort>((
+                    Some(rng_bits.iter().map(|p| p.0).collect::<Vec<_>>()),
+                    Some(rng_bits.iter().map(|p| p.1).collect::<Vec<_>>()),
+                ))
+            }
+            P1 => {
+                let raw = ctx.net.recv(P0)?;
+                Ok((Some(raw.into_iter().map(|b| Bit(b != 0)).collect()), None))
+            }
+            P2 => {
+                let raw = ctx.net.recv(P0)?;
+                Ok((None, Some(raw.into_iter().map(|b| Bit(b != 0)).collect())))
+            }
+            _ => Ok((None, None)),
+        }
+    })?;
+    let s1 = g_share(ctx, P1, v1.as_deref(), n)?;
+    let s2 = g_share(ctx, P2, v2.as_deref(), n)?;
+    Ok(s1.iter().zip(s2.iter()).map(|(a, b)| g_xor(a, b)).collect())
+}
+
+/// `Π_vSh^G(P_i, P_j, v)` (Fig. 8): verifiable garbled sharing by two
+/// owners. Amortized online cost κ bits.
+pub fn g_vsh(
+    ctx: &mut Ctx,
+    (pi, pj): (PartyId, PartyId),
+    bits: Option<&[Bit]>,
+    n: usize,
+) -> Result<Vec<GShare>, Abort> {
+    assert!(pi.is_evaluator(), "P_i must be a garbler");
+    let me = ctx.id();
+    let k0s: Vec<Key> = ctx.offline(|ctx| {
+        if me.is_evaluator() {
+            (0..n).map(|_| fresh_k0(ctx)).collect()
+        } else {
+            Vec::new()
+        }
+    });
+
+    (|ctx: &mut Ctx| {
+        if pj == P0 {
+            // (P_k, P0): P_k and its next garbler send ordered commitments;
+            // P_k additionally decommits the actual key.
+            let helper = if pi == P3 { P1 } else { PartyId(pi.0 + 1) };
+            if me == pi || me == helper {
+                let r = offset(ctx);
+                for (i, &k0) in k0s.iter().enumerate() {
+                    let k1 = xor_key(k0, r);
+                    let r0 = shared_rand(ctx);
+                    let r1 = shared_rand(ctx);
+                    let c0 = Commitment::commit(&k0, &r0);
+                    let c1 = Commitment::commit(&k1, &r1);
+                    let mut buf = Vec::with_capacity(64);
+                    buf.extend_from_slice(&c0.0);
+                    buf.extend_from_slice(&c1.0);
+                    ctx.net.send(P0, &buf, MsgClass::Commit);
+                    if me == pi {
+                        let b = bits.unwrap()[i];
+                        let kv = active_label(k0, r, b);
+                        ctx.net.send_with_bits(P0, &kv, MsgClass::Value, 128);
+                        ctx.net.send(P0, if b.0 { &r1 } else { &r0 }, MsgClass::Commit);
+                    }
+                }
+                if me != pi && me != helper {
+                    unreachable!();
+                }
+            } else if me.is_evaluator() {
+                // third garbler: still consume the shared randomness so the
+                // Excl(P0) streams stay aligned
+                let _ = offset(ctx);
+                for _ in 0..n {
+                    let _ = shared_rand(ctx);
+                    let _ = shared_rand(ctx);
+                }
+            }
+            if me == P0 {
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let a = ctx.net.recv(pi)?;
+                    let kv = ctx.net.recv(pi)?;
+                    let rb = ctx.net.recv(pi)?;
+                    let b = ctx.net.recv(helper)?;
+                    if a != b {
+                        return Err(ctx.net.abort("Π_vSh^G: ordered commitments differ".into()));
+                    }
+                    let mut key = [0u8; 16];
+                    key.copy_from_slice(&kv);
+                    let mut rand = [0u8; 16];
+                    rand.copy_from_slice(&rb);
+                    let com = Commitment::commit(&key, &rand);
+                    if com.0.as_slice() != &a[..32] && com.0.as_slice() != &a[32..] {
+                        return Err(ctx.net.abort("Π_vSh^G: bad decommitment".into()));
+                    }
+                    out.push(GShare::Evaluator(key));
+                }
+                return Ok(out);
+            }
+        } else {
+            // both owners are garblers: P_i sends K^v, P_j vouches H(K^v)
+            if me == pi || me == pj {
+                let r = offset(ctx);
+                let bits = bits.unwrap();
+                for (i, &k0) in k0s.iter().enumerate() {
+                    let kv = active_label(k0, r, bits[i]);
+                    if me == pi {
+                        ctx.net.send_with_bits(P0, &kv, MsgClass::Value, 128);
+                    } else {
+                        ctx.vouch_bytes(P0, &kv);
+                    }
+                }
+            } else if me.is_evaluator() {
+                let _ = offset(ctx);
+            }
+            if me == P0 {
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let kv = ctx.net.recv(pi)?;
+                    ctx.expect_bytes(pj, &kv);
+                    let mut key = [0u8; 16];
+                    key.copy_from_slice(&kv);
+                    out.push(GShare::Evaluator(key));
+                }
+                return Ok(out);
+            }
+        }
+        Ok(k0s.into_iter().map(GShare::Garbler).collect())
+    })(ctx)
+}
+
+/// Free XOR of two garbled shares (both roles).
+pub fn g_xor(a: &GShare, b: &GShare) -> GShare {
+    match (a, b) {
+        (GShare::Garbler(x), GShare::Garbler(y)) => GShare::Garbler(xor_key(*x, *y)),
+        (GShare::Evaluator(x), GShare::Evaluator(y)) => GShare::Evaluator(xor_key(*x, *y)),
+        _ => panic!("mixed garbled share roles"),
+    }
+}
+
+/// NOT of a garbled share: garblers offset `K⁰` by `R`; P0's active label is
+/// unchanged (it now encodes the complement).
+pub fn g_not(ctx: &mut Ctx, a: &GShare) -> GShare {
+    match a {
+        GShare::Garbler(x) => GShare::Garbler(xor_key(*x, offset(ctx))),
+        GShare::Evaluator(x) => GShare::Evaluator(*x),
+    }
+}
+
+/// Garbled evaluation of `circuit` on shared inputs. Garblers derive the
+/// (identical) tables; P1 ships them to P0 (offline — they are
+/// data-independent), P2 vouches their hash; P0 evaluates online.
+pub fn g_eval(ctx: &mut Ctx, circuit: &Circuit, inputs: &[GShare]) -> Result<Vec<GShare>, Abort> {
+    assert_eq!(inputs.len(), circuit.n_inputs);
+    let me = ctx.id();
+    if me.is_evaluator() {
+        let r = offset(ctx);
+        let input_k0: Vec<Key> = inputs.iter().map(|s| s.key()).collect();
+        let g = ctx.net.timed(|| garble(circuit, r, &input_k0));
+        ctx.offline(|ctx| {
+            let bytes = g.gc.to_bytes();
+            match me {
+                P1 => ctx.net.send(P0, &bytes, MsgClass::Garbled),
+                P2 => ctx.vouch_bytes(P0, &bytes),
+                _ => {}
+            }
+        });
+        Ok(output_k0(circuit, &g).into_iter().map(GShare::Garbler).collect())
+    } else {
+        let gc = ctx.offline(|ctx| -> Result<GarbledCircuit, Abort> {
+            let bytes = if circuit.and_count() > 0 { ctx.net.recv(P1)? } else { Vec::new() };
+            ctx.expect_bytes(P2, &bytes);
+            GarbledCircuit::from_bytes(&bytes)
+                .ok_or_else(|| ctx.net.abort("malformed garbled circuit".into()))
+        })?;
+        ctx.online(|ctx| {
+            let active: Vec<Key> = inputs.iter().map(|s| s.key()).collect();
+            let out = ctx.net.timed(|| evaluate(circuit, &gc, &active));
+            Ok(out.into_iter().map(GShare::Evaluator).collect())
+        })
+    }
+}
+
+/// Reconstruct garbled-shared bits towards `target`.
+///
+/// * towards P0: P1 and P2 both send the colour bit `lsb(K⁰)`; P0 compares
+///   and decodes `v = lsb(K^v) ⊕ lsb(K⁰)`.
+/// * towards a garbler: P0 sends its active labels (authenticity of the
+///   garbling scheme makes lying infeasible); the garbler matches against
+///   `{K⁰, K¹}`.
+pub fn g_reconstruct(
+    ctx: &mut Ctx,
+    shares: &[GShare],
+    target: PartyId,
+) -> Result<Option<Vec<Bit>>, Abort> {
+    let me = ctx.id();
+    let n = shares.len();
+    ctx.online(|ctx| {
+        if target == P0 {
+            if me == P1 || me == P2 {
+                let colors: Vec<u8> = shares.iter().map(|s| s.key()[0] & 1).collect();
+                ctx.net.send_with_bits(P0, &colors, MsgClass::Value, n as u64);
+            }
+            if me == P0 {
+                let c1 = ctx.net.recv(P1)?;
+                let c2 = ctx.net.recv(P2)?;
+                if c1 != c2 {
+                    return Err(ctx.net.abort("garbled reconstruction: colour bits differ".into()));
+                }
+                let out = shares
+                    .iter()
+                    .zip(c1)
+                    .map(|(s, c)| Bit((s.key()[0] & 1) != (c & 1)))
+                    .collect();
+                return Ok(Some(out));
+            }
+            Ok(None)
+        } else {
+            if me == P0 {
+                let mut buf = Vec::with_capacity(16 * n);
+                for s in shares {
+                    buf.extend_from_slice(&s.key());
+                }
+                ctx.net.send_with_bits(target, &buf, MsgClass::Value, (128 * n) as u64);
+            }
+            if me == target {
+                let buf = ctx.net.recv(P0)?;
+                if buf.len() != 16 * n {
+                    return Err(ctx.net.abort("garbled reconstruction: short keys".into()));
+                }
+                let r = offset(ctx);
+                let mut out = Vec::with_capacity(n);
+                for (i, s) in shares.iter().enumerate() {
+                    let mut kv = [0u8; 16];
+                    kv.copy_from_slice(&buf[16 * i..16 * (i + 1)]);
+                    let k0 = s.key();
+                    let k1 = xor_key(k0, r);
+                    if kv == k0 {
+                        out.push(Bit(false));
+                    } else if kv == k1 {
+                        out.push(Bit(true));
+                    } else {
+                        return Err(ctx
+                            .net
+                            .abort("garbled reconstruction: invalid active label".into()));
+                    }
+                }
+                return Ok(Some(out));
+            }
+            if me.is_evaluator() {
+                let _ = offset(ctx);
+            }
+            Ok(None)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::circuit::{adder, bits_u64, subtractor, u64_bits};
+    use crate::net::NetProfile;
+    use crate::proto::{run_4pc, run_4pc_timeout};
+
+    #[test]
+    fn g_share_and_reconstruct_roundtrip() {
+        for dealer in [P1, P2, P3] {
+            let run = run_4pc(NetProfile::zero(), 90, move |ctx| {
+                let bits = vec![Bit(true), Bit(false), Bit(true)];
+                let shares =
+                    g_share(ctx, dealer, (ctx.id() == dealer).then_some(&bits[..]), 3)?;
+                let out = g_reconstruct(ctx, &shares, P0)?;
+                ctx.flush_verify()?;
+                Ok(out)
+            });
+            let (outs, _) = run.expect_ok();
+            assert_eq!(outs[0], Some(vec![Bit(true), Bit(false), Bit(true)]), "dealer {dealer}");
+        }
+    }
+
+    #[test]
+    fn g_share_p0_roundtrip() {
+        let run = run_4pc(NetProfile::zero(), 91, |ctx| {
+            let bits = vec![Bit(true), Bit(true), Bit(false), Bit(true)];
+            let shares = g_share_p0(ctx, (ctx.id() == P0).then_some(&bits[..]), 4)?;
+            // reconstruct towards a garbler (tests authenticity path)
+            let out = g_reconstruct(ctx, &shares, P3)?;
+            ctx.flush_verify()?;
+            Ok(out)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(outs[3], Some(vec![Bit(true), Bit(true), Bit(false), Bit(true)]));
+    }
+
+    #[test]
+    fn g_vsh_garbler_pair() {
+        let run = run_4pc(NetProfile::zero(), 92, |ctx| {
+            let bits = vec![Bit(false), Bit(true)];
+            let own = ctx.id() == P1 || ctx.id() == P3;
+            let shares = g_vsh(ctx, (P1, P3), own.then_some(&bits[..]), 2)?;
+            let out = g_reconstruct(ctx, &shares, P0)?;
+            ctx.flush_verify()?;
+            Ok(out)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(outs[0], Some(vec![Bit(false), Bit(true)]));
+    }
+
+    #[test]
+    fn g_vsh_with_p0() {
+        let run = run_4pc(NetProfile::zero(), 93, |ctx| {
+            let bits = vec![Bit(true)];
+            let own = ctx.id() == P2 || ctx.id() == P0;
+            let shares = g_vsh(ctx, (P2, P0), own.then_some(&bits[..]), 1)?;
+            let out = g_reconstruct(ctx, &shares, P1)?;
+            ctx.flush_verify()?;
+            Ok(out)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(outs[1], Some(vec![Bit(true)]));
+    }
+
+    #[test]
+    fn garbled_adder_end_to_end() {
+        let run = run_4pc(NetProfile::zero(), 94, |ctx| {
+            let x = 123456789u64;
+            let y = 987654321u64;
+            let xb = u64_bits(x, 64);
+            let yb = u64_bits(y, 64);
+            let xs = g_share(ctx, P1, (ctx.id() == P1).then_some(&xb[..]), 64)?;
+            let ys = g_share(ctx, P2, (ctx.id() == P2).then_some(&yb[..]), 64)?;
+            let circuit = adder(64);
+            let mut inputs = xs;
+            inputs.extend(ys);
+            let outs = g_eval(ctx, &circuit, &inputs)?;
+            let v = g_reconstruct(ctx, &outs, P0)?;
+            ctx.flush_verify()?;
+            Ok(v)
+        });
+        let (outs, report) = run.expect_ok();
+        let bits = outs[0].clone().unwrap();
+        assert_eq!(bits_u64(&bits), 123456789 + 987654321);
+        // garbled tables travel offline: 63 ANDs × 32 bytes
+        assert_eq!(report.garbled_bytes[0], 63 * 32);
+    }
+
+    #[test]
+    fn garbled_subtractor_to_garbler() {
+        let run = run_4pc(NetProfile::zero(), 95, |ctx| {
+            let x = 1000u64;
+            let y = 2024u64;
+            let xb = u64_bits(x, 64);
+            let yb = u64_bits(y, 64);
+            let xs = g_share(ctx, P3, (ctx.id() == P3).then_some(&xb[..]), 64)?;
+            let ys = g_share(ctx, P1, (ctx.id() == P1).then_some(&yb[..]), 64)?;
+            let circuit = subtractor(64);
+            let mut inputs = xs;
+            inputs.extend(ys);
+            let outs = g_eval(ctx, &circuit, &inputs)?;
+            let v = g_reconstruct(ctx, &outs, P2)?;
+            ctx.flush_verify()?;
+            Ok(v)
+        });
+        let (outs, _) = run.expect_ok();
+        let bits = outs[2].clone().unwrap();
+        assert_eq!(bits_u64(&bits), 1000u64.wrapping_sub(2024));
+    }
+
+    #[test]
+    fn malicious_p1_bad_table_detected() {
+        // P1 ships a corrupted garbled table; P2's vouched hash catches it
+        let run = run_4pc_timeout(
+            NetProfile::zero(),
+            96,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                let xb = vec![Bit(true)];
+                let yb = vec![Bit(false)];
+                let xs = g_share(ctx, P1, (ctx.id() == P1).then_some(&xb[..]), 1)?;
+                let ys = g_share(ctx, P2, (ctx.id() == P2).then_some(&yb[..]), 1)?;
+                let mut circuit = crate::gc::circuit::Builder::new(2);
+                let o = circuit.and(0, 1);
+                let circuit = circuit.finish(vec![o]);
+                let inputs = vec![xs[0], ys[0]];
+                if ctx.id() == P1 {
+                    // garble honestly then corrupt the shipped bytes
+                    let r = offset(ctx);
+                    let g = garble(&circuit, r, &[inputs[0].key(), inputs[1].key()]);
+                    let mut bytes = g.gc.to_bytes();
+                    bytes[3] ^= 0xFF;
+                    ctx.offline(|ctx| ctx.net.send(P0, &bytes, MsgClass::Garbled));
+                    ctx.flush_verify()?;
+                    return Ok(());
+                }
+                let outs = g_eval(ctx, &circuit, &inputs)?;
+                ctx.flush_verify()?;
+                let _ = outs;
+                Ok(())
+            },
+        );
+        assert!(run.any_verify_abort(), "corrupted garbled table must be caught");
+    }
+
+    #[test]
+    fn malicious_p0_wrong_label_rejected() {
+        // P0 sends a fabricated key during reconstruction to a garbler
+        let run = run_4pc_timeout(
+            NetProfile::zero(),
+            97,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                let bits = vec![Bit(true)];
+                let shares = g_share(ctx, P1, (ctx.id() == P1).then_some(&bits[..]), 1)?;
+                if ctx.id() == P0 {
+                    // fabricate a label
+                    ctx.online(|ctx| {
+                        ctx.net.send_with_bits(P2, &[0xABu8; 16], MsgClass::Value, 128);
+                    });
+                    ctx.flush_verify()?;
+                    return Ok(());
+                }
+                let out = g_reconstruct(ctx, &shares, P2)?;
+                ctx.flush_verify()?;
+                let _ = out;
+                Ok(())
+            },
+        );
+        assert!(
+            run.outputs[2].is_err(),
+            "P2 must reject an unauthenticated active label"
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! # Trident — efficient 4PC framework for privacy-preserving machine learning
+//!
+//! A full reproduction of *Trident: Efficient 4PC Framework for Privacy
+//! Preserving Machine Learning* (Rachuri & Suresh, NDSS 2020) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the 4PC protocol suite: sharing semantics,
+//!   multiplication/dot-product/truncation, the garbled world, all share
+//!   conversions, the ML building blocks, the ABY3/Gordon baselines, and the
+//!   metered four-party network runtime they execute on.
+//! * **Layer 2/1 (python/, build time only)** — JAX graphs of the party-local
+//!   share computations with a Pallas `masked_matmul` kernel at the hot spot,
+//!   AOT-lowered to HLO text artifacts.
+//! * **runtime/** bridges the two: the rust hot path executes the AOT
+//!   artifacts through the PJRT CPU client (`xla` crate), with a native
+//!   fallback for shapes without artifacts.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baseline;
+pub mod bench;
+pub mod convert;
+pub mod coordinator;
+pub mod crypto;
+pub mod gc;
+pub mod ml;
+pub mod net;
+pub mod proto;
+pub mod ring;
+pub mod runtime;
+pub mod setup;
+pub mod sharing;
+pub mod testutil;
+
+pub use net::{PartyId, P0, P1, P2, P3};
+pub use ring::{Bit, Ring, Z64};

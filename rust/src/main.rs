@@ -1,0 +1,73 @@
+//! Trident CLI — leader entrypoint.
+//!
+//! ```text
+//! trident quickstart                   # share → multiply → reconstruct demo
+//! trident train   [--model nn|cnn|linreg|logreg] [--iters N] [--batch B] [--features D]
+//! trident predict [--model ...] [--batch B]
+//! trident tables  [table1 ... fig20]   # regenerate the paper's evaluation
+//! trident serve   [--queries N]        # batched prediction serving demo
+//! ```
+
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let pjrt = trident::runtime::pjrt::init_default();
+
+    match cmd {
+        "quickstart" => {
+            trident::coordinator::demo_quickstart();
+        }
+        "train" => {
+            let model = flags.get("model").map(String::as_str).unwrap_or("nn");
+            let iters: usize = flags.get("iters").and_then(|v| v.parse().ok()).unwrap_or(10);
+            let batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(128);
+            let d: usize = flags.get("features").and_then(|v| v.parse().ok()).unwrap_or(784);
+            trident::coordinator::train_cli(model, iters, batch, d);
+        }
+        "predict" => {
+            let model = flags.get("model").map(String::as_str).unwrap_or("nn");
+            let batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(100);
+            trident::coordinator::predict_cli(model, batch);
+        }
+        "tables" => {
+            println!("pjrt: {}", if pjrt { "enabled" } else { "native fallback" });
+            let filter: Vec<String> = pos[1..].to_vec();
+            print!("{}", trident::bench::run_tables(&filter));
+        }
+        "serve" => {
+            let queries: usize = flags.get("queries").and_then(|v| v.parse().ok()).unwrap_or(8);
+            trident::coordinator::serve_cli(queries);
+        }
+        _ => {
+            println!(
+                "trident — 4PC privacy-preserving ML (NDSS'20 reproduction)\n\
+                 commands: quickstart | train | predict | tables | serve\n\
+                 see README.md"
+            );
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Activation functions (paper §V-C).
+//!
+//! * ReLU: `relu(v) = (1 ⊕ b)·v` with `b = msb(v)` — `Π_BitExt` then
+//!   `Π_BitInj`: 4 online rounds, `8ℓ+2` bits per element (Table II).
+//! * Sigmoid: the 3-segment approximation of SecureML/ABY3/Trident —
+//!   `sig(v) = (1⊕b1)·b2·(v+½) + (1⊕b2)` with `b1 = msb(v+½)`,
+//!   `b2 = msb(v−½)`: two batched `Π_BitExt`, one boolean AND, then the two
+//!   injections **batched into one `Π_BitInj` round** (the second term is
+//!   `BitInj(1⊕b2, [[1]])`), for 5 online rounds total.
+
+use crate::convert::bit2a::bitinj_many;
+use crate::convert::bitext::bitext_many;
+use crate::net::Abort;
+use crate::proto::mult::mult_many;
+use crate::proto::Ctx;
+use crate::ring::{fixed::FixedPoint, Bit, Z64};
+use crate::sharing::{MMat, MShare};
+
+/// Batched ReLU; also returns the `drelu` bits (`1 ⊕ msb(v)`), which the NN
+/// backward pass reuses for free.
+pub fn relu_many(
+    ctx: &mut Ctx,
+    vs: &[MShare<Z64>],
+) -> Result<(Vec<MShare<Z64>>, Vec<MShare<Bit>>), Abort> {
+    let bs = bitext_many(ctx, vs)?;
+    let nbs: Vec<MShare<Bit>> = bs.iter().map(|b| b.add_const(Bit(true))).collect();
+    let relu = bitinj_many(ctx, &nbs, vs)?;
+    Ok((relu, nbs))
+}
+
+/// Derivative of ReLU as boolean shares (`drelu(v) = 1 ⊕ msb(v)`).
+pub fn drelu_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>, Abort> {
+    let bs = bitext_many(ctx, vs)?;
+    Ok(bs.iter().map(|b| b.add_const(Bit(true))).collect())
+}
+
+/// Batched sigmoid approximation. 5 online rounds for the whole batch.
+pub fn sigmoid_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Z64>>, Abort> {
+    let n = vs.len();
+    let half = FixedPoint::encode(0.5);
+    let one = FixedPoint::encode(1.0);
+
+    // v ± ½ locally; both msb batches in ONE bitext_many (3 rounds)
+    let mut probes: Vec<MShare<Z64>> = Vec::with_capacity(2 * n);
+    probes.extend(vs.iter().map(|v| v.add_const(half)));
+    probes.extend(vs.iter().map(|v| v.add_const(-half)));
+    let bs = bitext_many(ctx, &probes)?;
+    let (b1, b2) = bs.split_at(n);
+
+    // c = (1⊕b1)·b2 — one boolean multiplication round
+    let nb1: Vec<MShare<Bit>> = b1.iter().map(|b| b.add_const(Bit(true))).collect();
+    let cs = mult_many(ctx, &nb1, b2)?;
+
+    // sig = BitInj(c, v+½) + BitInj(1⊕b2, [[1]]) — one batched Π_BitInj
+    let me = ctx.id();
+    let mut inj_bits: Vec<MShare<Bit>> = Vec::with_capacity(2 * n);
+    inj_bits.extend(cs.iter().cloned());
+    inj_bits.extend(b2.iter().map(|b| b.add_const(Bit(true))));
+    let mut inj_vals: Vec<MShare<Z64>> = Vec::with_capacity(2 * n);
+    inj_vals.extend(vs.iter().map(|v| v.add_const(half)));
+    inj_vals.extend((0..n).map(|_| MShare::of_public(me, one)));
+    let injected = bitinj_many(ctx, &inj_bits, &inj_vals)?;
+    let (t1, t2) = injected.split_at(n);
+    Ok((0..n).map(|i| t1[i] + t2[i]).collect())
+}
+
+/// ReLU over a shared matrix (elementwise), returning drelu bits alongside.
+pub fn relu_mat(
+    ctx: &mut Ctx,
+    m: &MMat<Z64>,
+) -> Result<(MMat<Z64>, Vec<MShare<Bit>>), Abort> {
+    let (rows, cols) = m.dims();
+    let shares = m.to_shares();
+    let (relu, drelu) = relu_many(ctx, &shares)?;
+    Ok((MMat::from_shares(rows, cols, &relu), drelu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetProfile, P1};
+    use crate::proto::{run_4pc, share};
+    use crate::ring::fixed::SCALE;
+    use crate::sharing::open;
+
+    #[test]
+    fn relu_positive_negative() {
+        for v in [3.5f64, -2.25, 0.125, -0.001, 100.0] {
+            let run = run_4pc(NetProfile::zero(), 150, move |ctx| {
+                let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(v)))?;
+                let (r, d) = relu_many(ctx, &[x])?;
+                ctx.flush_verify()?;
+                Ok((r[0], d[0]))
+            });
+            let (outs, _) = run.expect_ok();
+            let relu = FixedPoint::decode(open(&[outs[0].0, outs[1].0, outs[2].0, outs[3].0]));
+            let want = if v > 0.0 { v } else { 0.0 };
+            assert!((relu - want).abs() < 1.0 / SCALE, "relu({v}) = {relu}");
+            let drelu = open(&[outs[0].1, outs[1].1, outs[2].1, outs[3].1]);
+            assert_eq!(drelu, Bit(v > 0.0), "drelu({v})");
+        }
+    }
+
+    #[test]
+    fn relu_cost_table2() {
+        let run = run_4pc(NetProfile::zero(), 151, |ctx| {
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(-7.0)))?;
+            let (r, _) = relu_many(ctx, &[x])?;
+            ctx.flush_verify()?;
+            Ok(r[0])
+        });
+        let (_, report) = run.expect_ok();
+        // Table II: ReLU online 4 rounds, 8ℓ+2 bits (+1 input round / 2ℓ)
+        assert_eq!(report.rounds[1], 1 + 4, "rounds");
+        assert_eq!(report.value_bits[1] - 2 * 64, 8 * 64 + 2, "online bits");
+    }
+
+    #[test]
+    fn sigmoid_three_segments() {
+        let cases = [
+            (-5.0, 0.0),
+            (-0.6, 0.0),
+            (-0.25, 0.25),
+            (0.0, 0.5),
+            (0.3, 0.8),
+            (0.5, 1.0),
+            (4.0, 1.0),
+        ];
+        for (v, want) in cases {
+            let run = run_4pc(NetProfile::zero(), 152, move |ctx| {
+                let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(v)))?;
+                let s = sigmoid_many(ctx, &[x])?;
+                ctx.flush_verify()?;
+                Ok(s[0])
+            });
+            let (outs, _) = run.expect_ok();
+            let sig = FixedPoint::decode(open(&outs));
+            assert!((sig - want).abs() < 2.0 / SCALE, "sig({v}) = {sig}, want {want}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_cost_5_rounds() {
+        let run = run_4pc(NetProfile::zero(), 153, |ctx| {
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(0.1)))?;
+            let s = sigmoid_many(ctx, &[x])?;
+            ctx.flush_verify()?;
+            Ok(s[0])
+        });
+        let (_, report) = run.expect_ok();
+        // Table II: Sigmoid online 5 rounds (+ 1 input round)
+        assert_eq!(report.rounds[1], 1 + 5, "rounds");
+        // 16ℓ+7 online bits: 2 bitext (10ℓ+4) + AND (3) + 2-elt bitinj (6ℓ)
+        assert_eq!(report.value_bits[1] - 2 * 64, 16 * 64 + 7, "online bits");
+    }
+}

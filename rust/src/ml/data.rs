@@ -1,0 +1,191 @@
+//! Synthetic datasets with the shapes of the paper's benchmarks
+//! (DESIGN.md §3: the Kaggle/MNIST data is not available offline; the
+//! throughput/latency tables depend only on `(d, B)` and the accuracy claim
+//! is replaced by secure-vs-plaintext equivalence tests).
+
+use crate::crypto::Rng;
+
+use super::F64Mat;
+
+/// Dataset shapes from §VI ("Datasets" table).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// Candy Power Ranking — 13 features, 85 samples (logistic)
+    Candy,
+    /// Boston Housing — 14 features, 506 samples (linear)
+    Boston,
+    /// Weather WW2 — 31 features, ~119k samples (linear)
+    Weather,
+    /// CalCOFI — 74 features, ~876k samples (linear)
+    CalCofi,
+    /// Epileptic Seizures — 179 features, ~11.5k samples (logistic)
+    Epileptic,
+    /// Food Recipes — 680 features, ~20k samples (logistic)
+    Recipes,
+    /// MNIST — 784 features, 70k samples (NN/CNN + regressions)
+    Mnist,
+}
+
+impl Shape {
+    pub fn features(self) -> usize {
+        match self {
+            Shape::Candy => 13,
+            Shape::Boston => 14,
+            Shape::Weather => 31,
+            Shape::CalCofi => 74,
+            Shape::Epileptic => 179,
+            Shape::Recipes => 680,
+            Shape::Mnist => 784,
+        }
+    }
+
+    pub fn samples(self) -> usize {
+        match self {
+            Shape::Candy => 85,
+            Shape::Boston => 506,
+            Shape::Weather => 119_000,
+            Shape::CalCofi => 876_000,
+            Shape::Epileptic => 11_500,
+            Shape::Recipes => 20_000,
+            Shape::Mnist => 70_000,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Shape::Candy => "CD",
+            Shape::Boston => "BT",
+            Shape::Weather => "WR",
+            Shape::CalCofi => "CI",
+            Shape::Epileptic => "EP",
+            Shape::Recipes => "RE",
+            Shape::Mnist => "MNIST",
+        }
+    }
+}
+
+/// A regression batch: features `x` (B×d, values in [0,1)-ish) and targets
+/// `y` (B×1).
+pub struct Batch {
+    pub x: F64Mat,
+    pub y: F64Mat,
+    /// The ground-truth weights the generator used (for convergence tests).
+    pub w_true: Vec<f64>,
+}
+
+/// Linear-regression batch: `y = X·w* + ε`, `ε ~ N(0, 0.01)`.
+pub fn linreg_batch(rng: &mut Rng, batch: usize, d: usize) -> Batch {
+    let w_true: Vec<f64> = (0..d).map(|_| rng.normal() * 0.5).collect();
+    let mut x = F64Mat::zeros(batch, d);
+    let mut y = F64Mat::zeros(batch, 1);
+    for i in 0..batch {
+        let mut acc = 0.0;
+        for j in 0..d {
+            let v = rng.uniform();
+            x.set(i, j, v);
+            acc += v * w_true[j];
+        }
+        y.set(i, 0, acc + rng.normal() * 0.01);
+    }
+    Batch { x, y, w_true }
+}
+
+/// Logistic-regression batch: `y = 1[X·w* + ε > 0]`.
+pub fn logreg_batch(rng: &mut Rng, batch: usize, d: usize) -> Batch {
+    let w_true: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut x = F64Mat::zeros(batch, d);
+    let mut y = F64Mat::zeros(batch, 1);
+    for i in 0..batch {
+        let mut acc = 0.0;
+        for j in 0..d {
+            let v = rng.uniform() - 0.5;
+            x.set(i, j, v);
+            acc += v * w_true[j];
+        }
+        y.set(i, 0, if acc + rng.normal() * 0.05 > 0.0 { 1.0 } else { 0.0 });
+    }
+    Batch { x, y, w_true }
+}
+
+/// MNIST-shaped classification batch: `d` pixel features in [0,1), one-hot
+/// labels over `classes` derived from a random linear teacher.
+pub struct ClassBatch {
+    pub x: F64Mat,
+    /// one-hot targets, B×classes
+    pub t: F64Mat,
+}
+
+pub fn class_batch(rng: &mut Rng, batch: usize, d: usize, classes: usize) -> ClassBatch {
+    let teacher: Vec<f64> = (0..d * classes).map(|_| rng.normal() * 0.1).collect();
+    let mut x = F64Mat::zeros(batch, d);
+    let mut t = F64Mat::zeros(batch, classes);
+    for i in 0..batch {
+        for j in 0..d {
+            x.set(i, j, rng.uniform());
+        }
+        // argmax of teacher logits
+        let mut best = 0usize;
+        let mut best_v = f64::MIN;
+        for c in 0..classes {
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += x.at(i, j) * teacher[c * d + j];
+            }
+            if acc > best_v {
+                best_v = acc;
+                best = c;
+            }
+        }
+        t.set(i, best, 1.0);
+    }
+    ClassBatch { x, t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper_table() {
+        assert_eq!(Shape::Mnist.features(), 784);
+        assert_eq!(Shape::Boston.features(), 14);
+        assert_eq!(Shape::Recipes.features(), 680);
+        assert_eq!(Shape::CalCofi.samples(), 876_000);
+    }
+
+    #[test]
+    fn linreg_batch_is_consistent() {
+        let mut rng = Rng::seeded(200);
+        let b = linreg_batch(&mut rng, 32, 10);
+        assert_eq!(b.x.rows, 32);
+        assert_eq!(b.x.cols, 10);
+        // y ≈ Xw*
+        for i in 0..32 {
+            let mut acc = 0.0;
+            for j in 0..10 {
+                acc += b.x.at(i, j) * b.w_true[j];
+            }
+            assert!((b.y.at(i, 0) - acc).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn logreg_labels_binary() {
+        let mut rng = Rng::seeded(201);
+        let b = logreg_batch(&mut rng, 64, 13);
+        assert!(b.y.data.iter().all(|&v| v == 0.0 || v == 1.0));
+        // not degenerate
+        let ones: f64 = b.y.data.iter().sum();
+        assert!(ones > 5.0 && ones < 59.0, "ones = {ones}");
+    }
+
+    #[test]
+    fn class_batch_one_hot() {
+        let mut rng = Rng::seeded(202);
+        let b = class_batch(&mut rng, 16, 20, 10);
+        for i in 0..16 {
+            let row: f64 = (0..10).map(|c| b.t.at(i, c)).sum();
+            assert_eq!(row, 1.0);
+        }
+    }
+}

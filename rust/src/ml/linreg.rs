@@ -1,0 +1,212 @@
+//! Secure linear regression (paper §VI-A.a): mini-batch gradient descent
+//! entirely in the arithmetic world —
+//! `w ← w − (α/B)·Xᵀ∘(X∘w − y)` — two `Π_MatMulTr` per iteration, so the
+//! online cost is `3(B + d)` ring elements and 2 rounds regardless of the
+//! feature count (the dot-product property).
+
+use crate::net::Abort;
+use crate::proto::{matmul_tr, matmul_tr_shift, Ctx};
+use crate::ring::fixed::FRAC_BITS;
+use crate::ring::Z64;
+use crate::sharing::MMat;
+
+/// Linear-regression trainer configuration.
+#[derive(Copy, Clone, Debug)]
+pub struct LinReg {
+    pub d: usize,
+    pub batch: usize,
+    /// learning rate = 2^{−lr_pow} (α/B folded into the truncation:
+    /// effective shift = FRAC_BITS + lr_pow + log2(batch)).
+    pub lr_pow: u32,
+}
+
+impl LinReg {
+    pub fn new(d: usize, batch: usize) -> LinReg {
+        LinReg { d, batch, lr_pow: 7 }
+    }
+
+    /// Shift for the gradient matmul: divides by `2^{lr_pow}·B`.
+    fn grad_shift(&self) -> u32 {
+        FRAC_BITS + self.lr_pow + (self.batch as f64).log2().round() as u32
+    }
+
+    /// Forward pass: `[[u]] = [[X ∘ w]]` (truncated).
+    pub fn forward(
+        &self,
+        ctx: &mut Ctx,
+        x: &MMat<Z64>,
+        w: &MMat<Z64>,
+    ) -> Result<MMat<Z64>, Abort> {
+        matmul_tr(ctx, x, w)
+    }
+
+    /// One GD iteration; returns the updated weight share.
+    pub fn train_iteration(
+        &self,
+        ctx: &mut Ctx,
+        w: &MMat<Z64>,
+        x: &MMat<Z64>,
+        y: &MMat<Z64>,
+    ) -> Result<MMat<Z64>, Abort> {
+        let u = self.forward(ctx, x, w)?;
+        let e = &u - y;
+        let xt = x.transpose();
+        let grad = matmul_tr_shift(ctx, &xt, &e, self.grad_shift())?;
+        Ok(w - &grad)
+    }
+
+    /// Prediction = forward pass.
+    pub fn predict(
+        &self,
+        ctx: &mut Ctx,
+        x: &MMat<Z64>,
+        w: &MMat<Z64>,
+    ) -> Result<MMat<Z64>, Abort> {
+        self.forward(ctx, x, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::ml::data::linreg_batch;
+    use crate::ml::share_fixed_mat;
+    use crate::net::{NetProfile, P1, P2};
+    use crate::proto::run_4pc;
+    use crate::ring::FixedPoint;
+    use crate::sharing::mat::open_mat;
+
+    #[test]
+    fn secure_linreg_converges() {
+        // train on a fixed batch; the residual must drop substantially
+        let run = run_4pc(NetProfile::zero(), 210, |ctx| {
+            let mut rng = Rng::seeded(77);
+            let batch = linreg_batch(&mut rng, 32, 8);
+            let model = LinReg { d: 8, batch: 32, lr_pow: 2 };
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.x), 32, 8)?;
+            let ys = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&batch.y), 32, 1)?;
+            let zeros = crate::ml::F64Mat::zeros(8, 1);
+            let mut w =
+                share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&zeros), 8, 1)?;
+            for _ in 0..60 {
+                w = model.train_iteration(ctx, &w, &xs, &ys)?;
+            }
+            let u = model.predict(ctx, &xs, &w)?;
+            ctx.flush_verify()?;
+            Ok((w, u, batch))
+        });
+        let (outs, _) = run.expect_ok();
+        let (w0, u0, batch) = (&outs[0].0, &outs[0].1, &outs[1].2);
+        let w_open = open_mat(&[
+            w0.clone(),
+            outs[1].0.clone(),
+            outs[2].0.clone(),
+            outs[3].0.clone(),
+        ]);
+        let u_open = open_mat(&[
+            u0.clone(),
+            outs[1].1.clone(),
+            outs[2].1.clone(),
+            outs[3].1.clone(),
+        ]);
+        // residual ‖u − y‖ should be small after training
+        let mut mse = 0.0;
+        for i in 0..32 {
+            let pred = FixedPoint::decode(u_open[(i, 0)]);
+            let diff = pred - batch.y.at(i, 0);
+            mse += diff * diff;
+        }
+        mse /= 32.0;
+        assert!(mse < 0.05, "mse after training = {mse}");
+        // learned weights approach the teacher
+        let mut werr = 0.0;
+        for j in 0..8 {
+            werr += (FixedPoint::decode(w_open[(j, 0)]) - batch.w_true[j]).abs();
+        }
+        assert!(werr / 8.0 < 0.2, "avg weight error {werr}");
+    }
+
+    #[test]
+    fn secure_matches_plaintext_fixed_point() {
+        // one iteration secure vs the same iteration in cleartext fixed point
+        let run = run_4pc(NetProfile::zero(), 211, |ctx| {
+            let mut rng = Rng::seeded(78);
+            let batch = linreg_batch(&mut rng, 16, 4);
+            let model = LinReg { d: 4, batch: 16, lr_pow: 3 };
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.x), 16, 4)?;
+            let ys = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.y), 16, 1)?;
+            let mut init = crate::ml::F64Mat::zeros(4, 1);
+            for j in 0..4 {
+                init.set(j, 0, 0.1 * j as f64);
+            }
+            let w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&init), 4, 1)?;
+            let w1 = model.train_iteration(ctx, &w, &xs, &ys)?;
+            ctx.flush_verify()?;
+            Ok((w1, batch, init))
+        });
+        let (outs, _) = run.expect_ok();
+        let (batch, init) = (&outs[1].1, &outs[1].2);
+        let w_open = open_mat(&[
+            outs[0].0.clone(),
+            outs[1].0.clone(),
+            outs[2].0.clone(),
+            outs[3].0.clone(),
+        ]);
+        // plaintext float reference
+        let mut w_ref = init.clone();
+        let lr = 1.0 / (8.0 * 16.0); // 2^-3 / B
+        let mut u = vec![0.0; 16];
+        for i in 0..16 {
+            for j in 0..4 {
+                u[i] += batch.x.at(i, j) * w_ref.at(j, 0);
+            }
+        }
+        for j in 0..4 {
+            let mut g = 0.0;
+            for i in 0..16 {
+                g += batch.x.at(i, j) * (u[i] - batch.y.at(i, 0));
+            }
+            w_ref.set(j, 0, w_ref.at(j, 0) - lr * g);
+        }
+        for j in 0..4 {
+            let secure = FixedPoint::decode(w_open[(j, 0)]);
+            assert!(
+                (secure - w_ref.at(j, 0)).abs() < 0.01,
+                "w[{j}]: secure {secure} vs plain {}",
+                w_ref.at(j, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn per_iteration_online_cost_flat_in_d() {
+        // online bits per iteration = 3(B + d)·64 — the Table IV driver
+        let mut costs = Vec::new();
+        for d in [4usize, 32] {
+            let run = run_4pc(NetProfile::zero(), 212, move |ctx| {
+                let mut rng = Rng::seeded(79);
+                let batch = linreg_batch(&mut rng, 8, d);
+                let model = LinReg { d, batch: 8, lr_pow: 3 };
+                let xs =
+                    share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.x), 8, d)?;
+                let ys =
+                    share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.y), 8, 1)?;
+                let zeros = crate::ml::F64Mat::zeros(d, 1);
+                let w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&zeros), d, 1)?;
+                let report_before = ();
+                let w2 = model.train_iteration(ctx, &w, &xs, &ys)?;
+                ctx.flush_verify()?;
+                let _ = (report_before, w2);
+                Ok(())
+            });
+            let (_, report) = run.expect_ok();
+            // subtract input-sharing cost (2 copies of X, y, w)
+            let inputs = 2 * (8 * d + 8 + d) as u64 * 64;
+            costs.push((d, report.value_bits[1] - inputs));
+        }
+        // cost(d) = 3(B + d)·64 → difference between d=32 and d=4 is 3·28·64
+        let delta = costs[1].1 - costs[0].1;
+        assert_eq!(delta, 3 * 28 * 64, "costs: {costs:?}");
+    }
+}

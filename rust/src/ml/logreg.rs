@@ -1,0 +1,146 @@
+//! Secure logistic regression (paper §VI-A.b): linear regression plus the
+//! 3-segment sigmoid on the forward activations —
+//! `w ← w − (α/B)·Xᵀ∘(sig(X∘w) − y)`.
+
+use crate::net::Abort;
+use crate::proto::{matmul_tr, matmul_tr_shift, Ctx};
+use crate::ring::fixed::FRAC_BITS;
+use crate::ring::Z64;
+use crate::sharing::MMat;
+
+use super::activation::sigmoid_many;
+
+/// Logistic-regression trainer configuration.
+#[derive(Copy, Clone, Debug)]
+pub struct LogReg {
+    pub d: usize,
+    pub batch: usize,
+    pub lr_pow: u32,
+}
+
+impl LogReg {
+    pub fn new(d: usize, batch: usize) -> LogReg {
+        LogReg { d, batch, lr_pow: 4 }
+    }
+
+    fn grad_shift(&self) -> u32 {
+        FRAC_BITS + self.lr_pow + (self.batch as f64).log2().round() as u32
+    }
+
+    /// Forward pass with activation: `sig(X ∘ w)`.
+    pub fn forward(
+        &self,
+        ctx: &mut Ctx,
+        x: &MMat<Z64>,
+        w: &MMat<Z64>,
+    ) -> Result<MMat<Z64>, Abort> {
+        let u = matmul_tr(ctx, x, w)?;
+        let (rows, cols) = u.dims();
+        let act = sigmoid_many(ctx, &u.to_shares())?;
+        Ok(MMat::from_shares(rows, cols, &act))
+    }
+
+    /// One GD iteration.
+    pub fn train_iteration(
+        &self,
+        ctx: &mut Ctx,
+        w: &MMat<Z64>,
+        x: &MMat<Z64>,
+        y: &MMat<Z64>,
+    ) -> Result<MMat<Z64>, Abort> {
+        let a = self.forward(ctx, x, w)?;
+        let e = &a - y;
+        let xt = x.transpose();
+        let grad = matmul_tr_shift(ctx, &xt, &e, self.grad_shift())?;
+        Ok(w - &grad)
+    }
+
+    /// Prediction (probability estimates).
+    pub fn predict(
+        &self,
+        ctx: &mut Ctx,
+        x: &MMat<Z64>,
+        w: &MMat<Z64>,
+    ) -> Result<MMat<Z64>, Abort> {
+        self.forward(ctx, x, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::ml::data::logreg_batch;
+    use crate::ml::share_fixed_mat;
+    use crate::net::{NetProfile, P1, P3};
+    use crate::proto::run_4pc;
+    use crate::ring::FixedPoint;
+    use crate::sharing::mat::open_mat;
+
+    #[test]
+    fn secure_logreg_learns_separation() {
+        let run = run_4pc(NetProfile::zero(), 220, |ctx| {
+            let mut rng = Rng::seeded(88);
+            let batch = logreg_batch(&mut rng, 32, 6);
+            let model = LogReg { d: 6, batch: 32, lr_pow: 1 };
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.x), 32, 6)?;
+            let ys = share_fixed_mat(ctx, P3, (ctx.id() == P3).then_some(&batch.y), 32, 1)?;
+            let zeros = crate::ml::F64Mat::zeros(6, 1);
+            let mut w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&zeros), 6, 1)?;
+            for _ in 0..40 {
+                w = model.train_iteration(ctx, &w, &xs, &ys)?;
+            }
+            let p = model.predict(ctx, &xs, &w)?;
+            ctx.flush_verify()?;
+            Ok((p, batch))
+        });
+        let (outs, _) = run.expect_ok();
+        let batch = &outs[1].1;
+        let p = open_mat(&[
+            outs[0].0.clone(),
+            outs[1].0.clone(),
+            outs[2].0.clone(),
+            outs[3].0.clone(),
+        ]);
+        // training accuracy
+        let mut correct = 0;
+        for i in 0..32 {
+            let pred = FixedPoint::decode(p[(i, 0)]);
+            let label = if pred > 0.5 { 1.0 } else { 0.0 };
+            if label == batch.y.at(i, 0) {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 26, "train accuracy {correct}/32");
+    }
+
+    #[test]
+    fn logreg_iteration_cost() {
+        // one iteration = linreg cost + one batched sigmoid (B elements)
+        let run = run_4pc(NetProfile::zero(), 221, |ctx| {
+            let mut rng = Rng::seeded(89);
+            let b = 8usize;
+            let d = 4usize;
+            let batch = logreg_batch(&mut rng, b, d);
+            let model = LogReg { d, batch: b, lr_pow: 2 };
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.x), b, d)?;
+            let ys = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&batch.y), b, 1)?;
+            let zeros = crate::ml::F64Mat::zeros(d, 1);
+            let w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&zeros), d, 1)?;
+            let w2 = model.train_iteration(ctx, &w, &xs, &ys)?;
+            ctx.flush_verify()?;
+            let _ = w2;
+            Ok(())
+        });
+        let (_, report) = run.expect_ok();
+        let b = 8u64;
+        let d = 4u64;
+        let inputs = 2 * (b * d + b + d) * 64;
+        let online = report.value_bits[1] - inputs;
+        // linreg part 3(B+d)ℓ + sigmoid 16ℓ+7 per element over B elements
+        let want = 3 * (b + d) * 64 + b * (16 * 64 + 7);
+        assert_eq!(online, want, "online bits");
+        // rounds: 1 input + 2 matmul + 5 sigmoid = 8
+        assert_eq!(report.rounds[1], 8);
+    }
+}

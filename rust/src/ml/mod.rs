@@ -1,0 +1,93 @@
+//! Privacy-preserving machine learning on top of the 4PC framework
+//! (paper §V–§VI): activation functions, the four benchmark algorithms
+//! (linear regression, logistic regression, NN, CNN-as-FC), and synthetic
+//! dataset generators standing in for the Kaggle/MNIST data (DESIGN.md §3).
+
+pub mod activation;
+pub mod data;
+pub mod linreg;
+pub mod logreg;
+pub mod nn;
+pub mod softmax;
+
+pub use activation::{drelu_many, relu_many, sigmoid_many};
+pub use linreg::LinReg;
+pub use logreg::LogReg;
+pub use nn::{Network, NetworkKind};
+
+use crate::net::{Abort, PartyId};
+use crate::proto::Ctx;
+use crate::ring::{Matrix, Z64};
+use crate::sharing::MMat;
+
+/// Share a matrix of fixed-point values from `dealer` (input-sharing stage
+/// of the outsourced setting: data owners hand their rows to the servers).
+pub fn share_fixed_mat(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    m: Option<&F64Mat>,
+    rows: usize,
+    cols: usize,
+) -> Result<MMat<Z64>, Abort> {
+    let vs: Option<Vec<Z64>> = m.map(|m| {
+        m.data.iter().map(|&v| crate::ring::FixedPoint::encode(v)).collect()
+    });
+    let shares =
+        crate::proto::sharing::share_many_n(ctx, dealer, vs.as_deref(), rows * cols)?;
+    Ok(MMat::from_shares(rows, cols, &shares))
+}
+
+/// Plain `f64` matrix helper (row-major) used by the data generators.
+#[derive(Clone, Debug)]
+pub struct F64Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl F64Mat {
+    pub fn zeros(rows: usize, cols: usize) -> F64Mat {
+        F64Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn matmul(&self, o: &F64Mat) -> F64Mat {
+        assert_eq!(self.cols, o.rows);
+        let mut out = F64Mat::zeros(self.rows, o.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                for j in 0..o.cols {
+                    out.data[i * o.cols + j] += a * o.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> F64Mat {
+        let mut out = F64Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Encode into a fixed-point ring matrix.
+    pub fn encode(&self) -> Matrix<Z64> {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&v| crate::ring::FixedPoint::encode(v)).collect(),
+        )
+    }
+}

@@ -1,0 +1,84 @@
+//! MPC-friendly softmax (paper §VI-A.c):
+//! `smx(u_i) = relu(u_i) / Σ_j relu(u_j)`, with the division performed in
+//! the **garbled world** — arithmetic shares are converted with `Π_A2G`,
+//! P0 evaluates a restoring-divider circuit, and `Π_G2A` brings the
+//! fixed-point quotient back.
+
+use crate::convert::garbled::{a2g, g2a};
+use crate::gc::circuit::divider;
+use crate::gc::g_eval;
+use crate::net::Abort;
+use crate::proto::Ctx;
+use crate::ring::fixed::FRAC_BITS;
+use crate::ring::Z64;
+use crate::sharing::MShare;
+
+use super::activation::relu_many;
+
+/// Softmax over one score vector. Returns fixed-point probabilities
+/// (summing to ≈1). Heavy: one garbled 64-bit divider per class
+/// (~16k AND gates each) — the paper pays the same (§VI-A.c).
+pub fn softmax_garbled(
+    ctx: &mut Ctx,
+    scores: &[MShare<Z64>],
+) -> Result<Vec<MShare<Z64>>, Abort> {
+    let n = scores.len();
+    // numerators: relu(u_i), denominator: Σ relu(u_j) (local addition)
+    let (relu, _) = relu_many(ctx, scores)?;
+    let mut denom = MShare::zero(ctx.id());
+    for r in &relu {
+        denom = denom + *r;
+    }
+    // fixed-point quotient: (relu_i · 2^f) / denom
+    let div = divider(64);
+    let denom_g = a2g(ctx, &denom)?;
+    let mut out = Vec::with_capacity(n);
+    for r in &relu {
+        let num = r.scale(Z64(1u64 << FRAC_BITS));
+        let num_g = a2g(ctx, &num)?;
+        let mut inputs = num_g;
+        inputs.extend(denom_g.iter().cloned());
+        let q_g = g_eval(ctx, &div, &inputs)?;
+        out.push(g2a(ctx, &q_g)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetProfile, P1};
+    use crate::proto::{run_4pc, share};
+    use crate::ring::FixedPoint;
+    use crate::sharing::open;
+
+    #[test]
+    fn softmax_normalizes_and_orders() {
+        let run = run_4pc(NetProfile::zero(), 600, |ctx| {
+            let vals = [2.0f64, -1.0, 1.0];
+            let mut shares = Vec::new();
+            for v in vals {
+                shares.push(share(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1).then_some(FixedPoint::encode(v)),
+                )?);
+            }
+            let p = softmax_garbled(ctx, &shares)?;
+            ctx.flush_verify()?;
+            Ok(p)
+        });
+        let (outs, _) = run.expect_ok();
+        let probs: Vec<f64> = (0..3)
+            .map(|i| {
+                FixedPoint::decode(open(&[outs[0][i], outs[1][i], outs[2][i], outs[3][i]]))
+            })
+            .collect();
+        // relu(-1) = 0 → p1 = 0; p0 = 2/3; p2 = 1/3
+        assert!((probs[0] - 2.0 / 3.0).abs() < 0.01, "{probs:?}");
+        assert!(probs[1].abs() < 0.01, "{probs:?}");
+        assert!((probs[2] - 1.0 / 3.0).abs() < 0.01, "{probs:?}");
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 0.02, "sum {total}");
+    }
+}

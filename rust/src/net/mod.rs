@@ -1,0 +1,695 @@
+//! Four-party network runtime + measurement fabric.
+//!
+//! The paper benchmarks on four physical machines over LAN (1 Gbps,
+//! rtt 0.296 ms) and WAN (GCP, 40 Mbps, the §VI rtt matrix). We reproduce the
+//! *testbed* as an in-process cluster: each party is an OS thread running its
+//! party program; every protocol message really flows through an mpsc channel
+//! and is metered. Timing is a discrete-event virtual clock:
+//!
+//! * each party `i` carries a virtual clock `T_i` (per phase);
+//! * `send` charges serialization `bytes·8/bw` to the sender;
+//! * `recv` advances the receiver to `max(T_j, T_send + rtt_ij/2)` —
+//!   one-way latency is half the measured rtt;
+//! * rounds are measured, not asserted: messages carry the sender's round
+//!   counter `r`, and a receiver moves to `max(r_own, r_msg + 1)` — i.e. the
+//!   communication depth, which is exactly what the paper's round lemmas
+//!   count.
+//!
+//! Local compute enters the clock through [`PartyCtx::timed`], which measures
+//! real wall time of a closure and charges it to the party's clock. This is
+//! the model the paper itself uses to explain its LAN/WAN gains (§VI-A.a):
+//! time ≈ compute + rounds×latency + bytes/bandwidth.
+//!
+//! DESIGN.md §3 documents why this substitution preserves the benchmark
+//! shape; DESIGN.md §7 the exact accounting.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::crypto::Digest32;
+
+/// One of the four parties P0..P3. P0 is the "distributor"/helper that is
+/// offline-only except for input sharing and output reconstruction.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct PartyId(pub u8);
+
+pub const P0: PartyId = PartyId(0);
+pub const P1: PartyId = PartyId(1);
+pub const P2: PartyId = PartyId(2);
+pub const P3: PartyId = PartyId(3);
+
+/// All four parties, in order.
+pub const ALL: [PartyId; 4] = [P0, P1, P2, P3];
+/// The three online evaluators (P0 excluded).
+pub const EVALUATORS: [PartyId; 3] = [P1, P2, P3];
+
+impl PartyId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+
+    pub fn is_evaluator(self) -> bool {
+        self.0 != 0
+    }
+
+    /// The other two evaluators, for an evaluator id (cyclic order P1→P2→P3).
+    pub fn next_evaluator(self) -> PartyId {
+        debug_assert!(self.is_evaluator());
+        PartyId(1 + (self.0 % 3))
+    }
+
+    pub fn prev_evaluator(self) -> PartyId {
+        debug_assert!(self.is_evaluator());
+        PartyId(1 + ((self.0 + 1) % 3))
+    }
+}
+
+impl std::fmt::Display for PartyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "P{}", self.0)
+    }
+}
+
+/// Protocol phase, for separate offline/online accounting (the paper reports
+/// the two phases separately everywhere).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Phase {
+    Offline = 0,
+    Online = 1,
+}
+
+/// Message class, for the amortized-cost accounting of Appendices B–D:
+/// `Value` bytes are what the communication lemmas count; `Hash`/`Commit`
+/// are the (batched, amortized-away) verification traffic; `Garbled` is
+/// garbled-table + decoding material.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum MsgClass {
+    Value = 0,
+    Hash = 1,
+    Commit = 2,
+    Garbled = 3,
+    Control = 4,
+}
+
+const N_CLASS: usize = 5;
+
+/// Why a party program stopped.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum Abort {
+    /// A consistency check failed locally (the honest-party abort of the
+    /// paper's protocols).
+    #[error("verification failed: {0}")]
+    Verify(String),
+    /// A peer signalled abort.
+    #[error("abort signalled by {0}")]
+    Signalled(PartyId),
+    /// Channel closed / timed out (peer died).
+    #[error("channel to {0} broken")]
+    Channel(PartyId),
+}
+
+struct Envelope {
+    payload: Vec<u8>,
+    /// Sender's virtual send-completion time (after serialization).
+    t_send: f64,
+    /// Sender's round counter at send time.
+    round: u64,
+    class: MsgClass,
+    abort: bool,
+}
+
+/// Network profile: pairwise rtt (seconds) + per-link bandwidth (bits/s).
+#[derive(Clone, Debug)]
+pub struct NetProfile {
+    pub name: &'static str,
+    /// rtt[i][j] in seconds (symmetric, diag 0).
+    pub rtt: [[f64; 4]; 4],
+    /// Link bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetProfile {
+    /// §VI: LAN, 1 Gbps, rtt 0.296 ms between every pair.
+    pub fn lan() -> NetProfile {
+        let r = 0.296e-3;
+        let mut rtt = [[r; 4]; 4];
+        for (i, row) in rtt.iter_mut().enumerate() {
+            row[i] = 0.0;
+        }
+        NetProfile { name: "LAN", rtt, bandwidth_bps: 1e9 }
+    }
+
+    /// §VI: WAN (GCP: West Europe, East Australia, South Asia, SE Asia),
+    /// 40 Mbps, measured rtt matrix.
+    pub fn wan() -> NetProfile {
+        Self::wan_with_bandwidth(40e6)
+    }
+
+    /// WAN rtt matrix with a configurable bandwidth cap — Fig. 20's
+    /// "Throughput Gain in Low-end Networks" sweeps this from 0.5–40 Mbps.
+    pub fn wan_with_bandwidth(bps: f64) -> NetProfile {
+        let ms = 1e-3;
+        let mut rtt = [[0.0; 4]; 4];
+        let pairs = [
+            (0, 1, 274.83),
+            (0, 2, 174.13),
+            (0, 3, 219.45),
+            (1, 2, 152.3),
+            (1, 3, 60.19),
+            (2, 3, 92.63),
+        ];
+        for (i, j, v) in pairs {
+            rtt[i][j] = v * ms;
+            rtt[j][i] = v * ms;
+        }
+        NetProfile { name: "WAN", rtt, bandwidth_bps: bps }
+    }
+
+    /// Zero-cost network for pure-logic tests.
+    pub fn zero() -> NetProfile {
+        NetProfile { name: "zero", rtt: [[0.0; 4]; 4], bandwidth_bps: f64::INFINITY }
+    }
+}
+
+#[derive(Default, Clone, Debug)]
+struct MeterInner {
+    /// bytes[phase][class]
+    bytes: [[u64; N_CLASS]; 2],
+    /// analytic bits of `Value`-class traffic per phase (bit-granular: a
+    /// boolean share counts 1, a Z64 share 64) — what Tables I/II/IX/X count.
+    value_bits: [u64; 2],
+    /// bytes per directed pair (both phases)
+    pair_bytes: [[u64; 4]; 4],
+    /// messages per phase
+    msgs: [u64; 2],
+}
+
+/// Shared measurement fabric (wrapped in `Arc<Mutex<…>>`).
+#[derive(Clone, Default)]
+pub struct Meter {
+    inner: Arc<Mutex<MeterInner>>,
+}
+
+impl Meter {
+    fn record(&self, phase: Phase, class: MsgClass, from: PartyId, to: PartyId, bytes: usize, bits: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.bytes[phase as usize][class as usize] += bytes as u64;
+        if class == MsgClass::Value {
+            m.value_bits[phase as usize] += bits;
+        }
+        m.pair_bytes[from.idx()][to.idx()] += bytes as u64;
+        m.msgs[phase as usize] += 1;
+    }
+}
+
+/// Aggregated measurements of one cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct NetReport {
+    /// Value-class bytes, offline/online.
+    pub value_bytes: [u64; 2],
+    /// Analytic value bits, offline/online.
+    pub value_bits: [u64; 2],
+    /// Hash+commit verification bytes, offline/online.
+    pub verify_bytes: [u64; 2],
+    /// Garbled-material bytes, offline/online.
+    pub garbled_bytes: [u64; 2],
+    /// Total bytes offline/online (all classes).
+    pub total_bytes: [u64; 2],
+    /// Measured communication rounds (depth), offline/online.
+    pub rounds: [u64; 2],
+    /// Per-party virtual completion time (s), offline/online.
+    pub party_time: [[f64; 4]; 2],
+    /// Messages, offline/online.
+    pub msgs: [u64; 2],
+    /// Real wall-clock duration of the whole cluster run.
+    pub wall: Duration,
+}
+
+impl NetReport {
+    /// Max party virtual time in a phase = protocol latency.
+    pub fn latency(&self, phase: Phase) -> f64 {
+        self.party_time[phase as usize].iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Latency over the online evaluators only (P0 excluded).
+    pub fn online_latency(&self) -> f64 {
+        self.party_time[Phase::Online as usize][1..].iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Sum of all parties' virtual time in a phase — the monetary-cost
+    /// metric of Appendix E.
+    pub fn total_party_time(&self, phase: Phase) -> f64 {
+        self.party_time[phase as usize].iter().sum()
+    }
+}
+
+/// Per-party handle to the cluster: channels + clock + round counter.
+pub struct PartyCtx {
+    pub id: PartyId,
+    senders: [Option<Sender<Envelope>>; 4],
+    receivers: [Option<Receiver<Envelope>>; 4],
+    meter: Meter,
+    profile: Arc<NetProfile>,
+    /// Virtual clock per phase (seconds).
+    clock: [f64; 2],
+    /// Lamport-style round counter per phase.
+    round: [u64; 2],
+    phase: Phase,
+    recv_timeout: Duration,
+    aborted: bool,
+}
+
+impl PartyCtx {
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Switch to the online phase (clock and round counters are per-phase).
+    pub fn set_phase(&mut self, phase: Phase) {
+        self.phase = phase;
+    }
+
+    pub fn clock(&self, phase: Phase) -> f64 {
+        self.clock[phase as usize]
+    }
+
+    pub fn rounds(&self, phase: Phase) -> u64 {
+        self.round[phase as usize]
+    }
+
+    /// Reset clocks and round counters — benches call this after input
+    /// sharing to measure a steady-state iteration in isolation.
+    pub fn reset_clocks(&mut self) {
+        self.clock = [0.0; 2];
+        self.round = [0; 2];
+    }
+
+    /// Charge `dt` seconds of local compute to this party's virtual clock.
+    pub fn charge_compute(&mut self, dt: f64) {
+        self.clock[self.phase as usize] += dt;
+    }
+
+    /// Run `f`, measure its real duration, charge it to the virtual clock.
+    pub fn timed<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.charge_compute(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Send `payload` to `to`. `bits` is the analytic size for the cost
+    /// tables (pass `payload.len()*8` via [`PartyCtx::send`] when they
+    /// coincide).
+    pub fn send_with_bits(&mut self, to: PartyId, payload: &[u8], class: MsgClass, bits: u64) {
+        assert_ne!(to, self.id, "self-send");
+        let ph = self.phase as usize;
+        // serialization occupies the sender link
+        self.clock[ph] += payload.len() as f64 * 8.0 / self.profile.bandwidth_bps;
+        self.meter.record(self.phase, class, self.id, to, payload.len(), bits);
+        let env = Envelope {
+            payload: payload.to_vec(),
+            t_send: self.clock[ph],
+            round: self.round[ph],
+            class,
+            abort: false,
+        };
+        // A closed channel means the peer is gone; the subsequent recv from
+        // it will surface the abort, so ignore the send error here.
+        let _ = self.senders[to.idx()].as_ref().expect("channel").send(env);
+    }
+
+    pub fn send(&mut self, to: PartyId, payload: &[u8], class: MsgClass) {
+        self.send_with_bits(to, payload, class, payload.len() as u64 * 8)
+    }
+
+    /// Blocking receive from a specific peer; advances clock + round.
+    pub fn recv(&mut self, from: PartyId) -> Result<Vec<u8>, Abort> {
+        self.recv_tagged(from).map(|(p, _)| p)
+    }
+
+    /// [`PartyCtx::recv`] returning the sender's [`MsgClass`] tag — protocol
+    /// code asserts the class to catch vouch/expect pairing bugs loudly
+    /// instead of silently confusing a digest with a value message.
+    pub fn recv_tagged(&mut self, from: PartyId) -> Result<(Vec<u8>, MsgClass), Abort> {
+        assert_ne!(from, self.id, "self-recv");
+        let rx = self.receivers[from.idx()].as_ref().expect("channel");
+        let env = match rx.recv_timeout(self.recv_timeout) {
+            Ok(e) => e,
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                return Err(Abort::Channel(from))
+            }
+        };
+        if env.abort {
+            return Err(Abort::Signalled(from));
+        }
+        let ph = self.phase as usize;
+        let lat = self.profile.rtt[from.idx()][self.id.idx()] / 2.0;
+        self.clock[ph] = self.clock[ph].max(env.t_send + lat);
+        // Round depth counts protocol data (Value/Garbled) only: hash and
+        // commitment traffic is the amortized verification the paper's round
+        // lemmas exclude ("the cost gets amortized", Lemmas B.1–B.4).
+        if matches!(env.class, MsgClass::Value | MsgClass::Garbled) {
+            self.round[ph] = self.round[ph].max(env.round + 1);
+        }
+        Ok((env.payload, env.class))
+    }
+
+    /// Receive and require the payload to equal `expect` (consistency
+    /// check pattern: "abort if the received values are inconsistent").
+    pub fn recv_expect(&mut self, from: PartyId, expect: &[u8], what: &str) -> Result<(), Abort> {
+        let got = self.recv(from)?;
+        if got != expect {
+            return Err(self.abort(format!("{what}: inconsistent value from {from}")));
+        }
+        Ok(())
+    }
+
+    /// Broadcast abort to all peers and construct the local abort error.
+    pub fn abort(&mut self, why: String) -> Abort {
+        if !self.aborted {
+            self.aborted = true;
+            let ph = self.phase as usize;
+            for p in ALL {
+                if p != self.id {
+                    let env = Envelope {
+                        payload: Vec::new(),
+                        t_send: self.clock[ph],
+                        round: self.round[ph],
+                        class: MsgClass::Control,
+                        abort: true,
+                    };
+                    if let Some(tx) = self.senders[p.idx()].as_ref() {
+                        let _ = tx.send(env);
+                    }
+                }
+            }
+        }
+        Abort::Verify(why)
+    }
+
+    /// Send a digest (verification traffic).
+    pub fn send_digest(&mut self, to: PartyId, d: &Digest32) {
+        self.send(to, d, MsgClass::Hash);
+    }
+
+    /// Receive a digest and compare.
+    pub fn recv_digest_expect(&mut self, from: PartyId, expect: &Digest32, what: &str) -> Result<(), Abort> {
+        let (got, class) = self.recv_tagged(from)?;
+        if class != MsgClass::Hash {
+            return Err(self.abort(format!("{what}: expected digest from {from}, got {class:?}")));
+        }
+        if got != expect.as_slice() {
+            return Err(self.abort(format!("{what}: digest mismatch from {from}")));
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one party program.
+pub type PartyResult<T> = Result<T, Abort>;
+
+/// Results of a full cluster run.
+pub struct ClusterRun<T> {
+    /// Per-party program outputs (indexed by party).
+    pub outputs: [PartyResult<T>; 4],
+    pub report: NetReport,
+}
+
+impl<T> ClusterRun<T> {
+    /// Unwrap all four outputs, panicking on any abort (for tests/benches of
+    /// honest executions).
+    pub fn expect_ok(self) -> ([T; 4], NetReport) {
+        let [a, b, c, d] = self.outputs;
+        (
+            [
+                a.expect("P0 aborted"),
+                b.expect("P1 aborted"),
+                c.expect("P2 aborted"),
+                d.expect("P3 aborted"),
+            ],
+            self.report,
+        )
+    }
+
+    /// True if every party aborted-or-errored.
+    pub fn all_aborted(&self) -> bool {
+        self.outputs.iter().all(|o| o.is_err())
+    }
+
+    /// True if any honest party got a verification abort.
+    pub fn any_verify_abort(&self) -> bool {
+        self.outputs.iter().any(|o| matches!(o, Err(Abort::Verify(_)) | Err(Abort::Signalled(_))))
+    }
+}
+
+/// Build the 4-party cluster and run one party program per thread.
+///
+/// `program` receives the party's [`PartyCtx`]; it is cloned per thread via
+/// `Arc`. Returns per-party outputs plus the merged [`NetReport`].
+pub fn run_cluster<T, F>(profile: NetProfile, program: F) -> ClusterRun<T>
+where
+    T: Send + 'static,
+    F: Fn(&mut PartyCtx) -> PartyResult<T> + Send + Sync + 'static,
+{
+    run_cluster_timeout(profile, Duration::from_secs(30), program)
+}
+
+/// [`run_cluster`] with a custom recv timeout (tests that expect deadlocked
+/// aborts use a short one).
+pub fn run_cluster_timeout<T, F>(profile: NetProfile, timeout: Duration, program: F) -> ClusterRun<T>
+where
+    T: Send + 'static,
+    F: Fn(&mut PartyCtx) -> PartyResult<T> + Send + Sync + 'static,
+{
+    let meter = Meter::default();
+    let profile = Arc::new(profile);
+    // channels[from][to]
+    let mut txs: Vec<Vec<Option<Sender<Envelope>>>> = (0..4).map(|_| (0..4).map(|_| None).collect()).collect();
+    let mut rxs: Vec<Vec<Option<Receiver<Envelope>>>> = (0..4).map(|_| (0..4).map(|_| None).collect()).collect();
+    for i in 0..4 {
+        for j in 0..4 {
+            if i != j {
+                let (tx, rx) = std::sync::mpsc::channel();
+                txs[i][j] = Some(tx);
+                rxs[j][i] = Some(rx); // rxs[receiver][sender]
+            }
+        }
+    }
+
+    let program = Arc::new(program);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, (tx_row, rx_row)) in txs.into_iter().zip(rxs.into_iter()).enumerate() {
+        let mut ctx = PartyCtx {
+            id: PartyId(i as u8),
+            senders: tx_row.try_into().map_err(|_| ()).unwrap(),
+            receivers: rx_row.try_into().map_err(|_| ()).unwrap(),
+            meter: meter.clone(),
+            profile: profile.clone(),
+            clock: [0.0; 2],
+            round: [0; 2],
+            phase: Phase::Offline,
+            recv_timeout: timeout,
+            aborted: false,
+        };
+        let program = program.clone();
+        handles.push(std::thread::spawn(move || {
+            let out = program(&mut ctx);
+            let out = match out {
+                Ok(v) => Ok(v),
+                Err(Abort::Verify(w)) => {
+                    // make sure peers unblock
+                    ctx.abort(w.clone());
+                    Err(Abort::Verify(w))
+                }
+                e => e,
+            };
+            (out, ctx.clock, ctx.round)
+        }));
+    }
+
+    let mut outputs: Vec<Option<PartyResult<T>>> = (0..4).map(|_| None).collect();
+    let mut party_time = [[0.0f64; 4]; 2];
+    let mut rounds = [0u64; 2];
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok((out, clock, round)) => {
+                outputs[i] = Some(out);
+                party_time[0][i] = clock[0];
+                party_time[1][i] = clock[1];
+                rounds[0] = rounds[0].max(round[0]);
+                rounds[1] = rounds[1].max(round[1]);
+            }
+            Err(_) => outputs[i] = Some(Err(Abort::Channel(PartyId(i as u8)))),
+        }
+    }
+    let wall = t0.elapsed();
+
+    let m = meter.inner.lock().unwrap().clone();
+    let mut report = NetReport {
+        value_bytes: [m.bytes[0][0], m.bytes[1][0]],
+        value_bits: m.value_bits,
+        verify_bytes: [m.bytes[0][1] + m.bytes[0][2], m.bytes[1][1] + m.bytes[1][2]],
+        garbled_bytes: [m.bytes[0][3], m.bytes[1][3]],
+        total_bytes: [0, 0],
+        rounds,
+        party_time,
+        msgs: m.msgs,
+        wall,
+    };
+    for ph in 0..2 {
+        report.total_bytes[ph] = m.bytes[ph].iter().sum();
+    }
+
+    let mut it = outputs.into_iter().map(|o| o.unwrap());
+    ClusterRun {
+        outputs: [it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap()],
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong_counts_rounds_and_bytes() {
+        let run = run_cluster(NetProfile::zero(), |ctx| {
+            ctx.set_phase(Phase::Online);
+            match ctx.id {
+                P0 => {
+                    ctx.send(P1, &[1u8; 8], MsgClass::Value);
+                    let r = ctx.recv(P1)?;
+                    assert_eq!(r, vec![2u8; 8]);
+                }
+                P1 => {
+                    let r = ctx.recv(P0)?;
+                    assert_eq!(r, vec![1u8; 8]);
+                    ctx.send(P0, &[2u8; 8], MsgClass::Value);
+                }
+                _ => {}
+            }
+            Ok(())
+        });
+        let (_, report) = run.expect_ok();
+        assert_eq!(report.rounds[Phase::Online as usize], 2);
+        assert_eq!(report.value_bytes[Phase::Online as usize], 16);
+        assert_eq!(report.value_bits[Phase::Online as usize], 128);
+    }
+
+    #[test]
+    fn parallel_sends_are_one_round() {
+        // all three evaluators exchange simultaneously: depth 1
+        let run = run_cluster(NetProfile::zero(), |ctx| {
+            ctx.set_phase(Phase::Online);
+            if ctx.id.is_evaluator() {
+                ctx.send(ctx.id.next_evaluator(), &[ctx.id.0], MsgClass::Value);
+                let v = ctx.recv(ctx.id.prev_evaluator())?;
+                assert_eq!(v, vec![ctx.id.prev_evaluator().0]);
+            }
+            Ok(())
+        });
+        let (_, report) = run.expect_ok();
+        assert_eq!(report.rounds[Phase::Online as usize], 1);
+    }
+
+    #[test]
+    fn wan_latency_charged() {
+        let run = run_cluster(NetProfile::wan(), |ctx| {
+            ctx.set_phase(Phase::Online);
+            match ctx.id {
+                P1 => ctx.send(P3, &[0u8; 100], MsgClass::Value),
+                P3 => {
+                    ctx.recv(P1)?;
+                }
+                _ => {}
+            }
+            Ok(())
+        });
+        let (_, report) = run.expect_ok();
+        let t3 = report.party_time[Phase::Online as usize][3];
+        // one-way P1-P3 = 60.19/2 ms plus 800 bits / 40 Mbps
+        let expect = 60.19e-3 / 2.0 + 800.0 / 40e6;
+        assert!((t3 - expect).abs() < 1e-9, "t3={t3}, expect={expect}");
+        // P0 never active online
+        assert_eq!(report.party_time[Phase::Online as usize][0], 0.0);
+    }
+
+    #[test]
+    fn abort_propagates() {
+        let run = run_cluster_timeout(NetProfile::zero(), Duration::from_millis(500), |ctx| {
+            ctx.set_phase(Phase::Online);
+            match ctx.id {
+                P1 => Err(ctx.abort("cheater detected".into())),
+                P2 => {
+                    // P2 waits on P1 and sees the abort signal
+                    let r = ctx.recv(P1);
+                    assert!(matches!(r, Err(Abort::Signalled(P1))));
+                    r.map(|_| ())
+                }
+                _ => Ok(()),
+            }
+        });
+        assert!(run.outputs[1].is_err());
+        assert!(run.outputs[2].is_err());
+        assert!(run.outputs[0].is_ok());
+    }
+
+    #[test]
+    fn phase_accounting_separates() {
+        let run = run_cluster(NetProfile::zero(), |ctx| {
+            if ctx.id == P0 {
+                ctx.send(P1, &[9u8; 4], MsgClass::Value); // offline
+            }
+            if ctx.id == P1 {
+                ctx.recv(P0)?;
+            }
+            ctx.set_phase(Phase::Online);
+            if ctx.id == P1 {
+                ctx.send(P2, &[9u8; 2], MsgClass::Value); // online
+            }
+            if ctx.id == P2 {
+                ctx.recv(P1)?;
+            }
+            Ok(())
+        });
+        let (_, r) = run.expect_ok();
+        assert_eq!(r.value_bytes, [4, 2]);
+        assert_eq!(r.rounds[0], 1);
+        assert_eq!(r.rounds[1], 1);
+    }
+
+    #[test]
+    fn compute_charging() {
+        let run = run_cluster(NetProfile::zero(), |ctx| {
+            ctx.set_phase(Phase::Online);
+            if ctx.id == P1 {
+                ctx.charge_compute(0.125);
+            }
+            Ok(())
+        });
+        let (_, r) = run.expect_ok();
+        assert_eq!(r.party_time[1][1], 0.125);
+        assert_eq!(r.online_latency(), 0.125);
+    }
+
+    #[test]
+    fn bit_granular_metering() {
+        let run = run_cluster(NetProfile::zero(), |ctx| {
+            ctx.set_phase(Phase::Online);
+            if ctx.id == P1 {
+                // a boolean share travels as 1 byte but counts 1 analytic bit
+                ctx.send_with_bits(P2, &[1u8], MsgClass::Value, 1);
+            }
+            if ctx.id == P2 {
+                ctx.recv(P1)?;
+            }
+            Ok(())
+        });
+        let (_, r) = run.expect_ok();
+        assert_eq!(r.value_bits[1], 1);
+        assert_eq!(r.value_bytes[1], 1);
+    }
+}

@@ -1,0 +1,452 @@
+//! `Π_DotP` (Fig. 9) and its matrix generalisation — the communication cost
+//! is **independent of the vector length**: the evaluators sum their local
+//! per-element contributions before the single 3-element exchange. This is
+//! the protocol that makes Trident's ML training communication-flat in the
+//! feature dimension (§VI-A.a).
+//!
+//! The matrix form is the ML hot path: every party-local term is a dense
+//! u64 matmul (`−Λx_j∘M_y − M_x∘Λy_j + Γ_j + Λz_j`), which is exactly the
+//! computation the L1 Pallas kernel implements; `runtime::gemm` dispatches
+//! to the AOT PJRT artifact when one exists for the shape.
+
+use crate::net::{Abort, PartyId, EVALUATORS, P0};
+use crate::ring::{Matrix, Ring};
+use crate::runtime::gemm;
+use crate::sharing::{MMat, MShare};
+
+use super::mult::gamma_component;
+use super::Ctx;
+
+#[inline]
+fn succ(j: u8) -> u8 {
+    1 + (j % 3)
+}
+
+/// `Π_DotP(x⃗, y⃗)` — `[[z]] = [[x⃗ ⊙ y⃗]]`. One offline round (3ℓ) and one
+/// online round (3ℓ), independent of `d = x⃗.len()`.
+pub fn dotp<R: Ring>(ctx: &mut Ctx, xs: &[MShare<R>], ys: &[MShare<R>]) -> Result<MShare<R>, Abort> {
+    assert_eq!(xs.len(), ys.len());
+    let me = ctx.id();
+    let d = xs.len();
+
+    // ---- offline: λ_z + ⟨γ_xy⟩ with summed components ----
+    let (lam_z, gam_next, gam_prev, gam_all) = ctx.offline(|ctx| {
+        let lam_z: MShare<R> = super::mult::sample_lam_share(ctx);
+        let z = ctx.zero_share::<R>();
+        let mut mine = R::ZERO;
+        let mut all = [R::ZERO; 3];
+        match me {
+            P0 => {
+                let masks = [z.gamma.unwrap(), z.a.unwrap(), z.b.unwrap()];
+                for j in 1..=3u8 {
+                    let mut acc = R::ZERO;
+                    for i in 0..d {
+                        acc = acc
+                            + gamma_component(
+                                xs[i].lam(me, j).unwrap(),
+                                xs[i].lam(me, succ(j)).unwrap(),
+                                ys[i].lam(me, j).unwrap(),
+                                ys[i].lam(me, succ(j)).unwrap(),
+                                R::ZERO,
+                            );
+                    }
+                    all[(j - 1) as usize] = acc + masks[(j - 1) as usize];
+                }
+            }
+            _ => {
+                let j = me.next_evaluator().0;
+                let mask = match me.0 {
+                    1 => z.a.unwrap(),
+                    2 => z.b.unwrap(),
+                    3 => z.gamma.unwrap(),
+                    _ => unreachable!(),
+                };
+                for i in 0..d {
+                    mine = mine
+                        + gamma_component(
+                            xs[i].lam(me, j).unwrap(),
+                            xs[i].lam(me, succ(j)).unwrap(),
+                            ys[i].lam(me, j).unwrap(),
+                            ys[i].lam(me, succ(j)).unwrap(),
+                            R::ZERO,
+                        );
+                }
+                mine += mask;
+            }
+        }
+        // exchange summed γ components (3 ring elements total)
+        match me {
+            P0 => {
+                ctx.vouch_ring(crate::net::P1, &[all[2]]);
+                ctx.vouch_ring(crate::net::P2, &[all[0]]);
+                ctx.vouch_ring(crate::net::P3, &[all[1]]);
+                Ok::<_, Abort>((lam_z, R::ZERO, R::ZERO, Some(all)))
+            }
+            _ => {
+                ctx.send_ring1(me.prev_evaluator(), mine);
+                let got: R = ctx.recv_ring1(me.next_evaluator())?;
+                ctx.expect_ring(P0, &[got]);
+                Ok((lam_z, mine, got, None))
+            }
+        }
+    })?;
+    let _ = gam_all;
+
+    // ---- online: single 3-element exchange ----
+    ctx.online(|ctx| {
+        if me == P0 {
+            return Ok(lam_z);
+        }
+        let (jn, jp) = (me.next_evaluator().0, me.prev_evaluator().0);
+        let mut mp_next = gam_next + lam_z.lam(me, jn).unwrap();
+        let mut mp_prev = gam_prev + lam_z.lam(me, jp).unwrap();
+        for i in 0..d {
+            let (mx, my) = (xs[i].m(), ys[i].m());
+            mp_next = mp_next - xs[i].lam(me, jn).unwrap() * my - ys[i].lam(me, jn).unwrap() * mx;
+            mp_prev = mp_prev - xs[i].lam(me, jp).unwrap() * my - ys[i].lam(me, jp).unwrap() * mx;
+        }
+        ctx.send_ring1(me.prev_evaluator(), mp_prev);
+        ctx.vouch_ring(me.next_evaluator(), &[mp_next]);
+        let missing: R = ctx.recv_ring1(me.next_evaluator())?;
+        ctx.expect_ring(me.prev_evaluator(), &[missing]);
+        let mut m_z = mp_next + mp_prev + missing;
+        for i in 0..d {
+            m_z += xs[i].m() * ys[i].m();
+        }
+        match lam_z {
+            MShare::Eval { lam_next, lam_prev, .. } => {
+                Ok(MShare::Eval { m: m_z, lam_next, lam_prev })
+            }
+            _ => unreachable!(),
+        }
+    })
+}
+
+/// Offline correlation for a matrix product `[[X]] ∘ [[Y]]` with output
+/// shape `a×c`.
+pub(crate) struct MatmulCorr<R> {
+    /// λ_Z skeleton.
+    pub lam_z: MMat<R>,
+    /// γ matrices I hold: evaluators `[next, prev]`, P0 all three.
+    pub gamma: MatGamma<R>,
+}
+
+pub(crate) enum MatGamma<R> {
+    Helper([Matrix<R>; 3]),
+    Eval { next: Matrix<R>, prev: Matrix<R> },
+}
+
+/// Sample a fresh λ mask for an `a×c` matrix wire.
+pub(crate) fn sample_lam_mat<R: Ring>(ctx: &mut Ctx, rows: usize, cols: usize) -> MMat<R> {
+    let me = ctx.id();
+    let n = rows * cols;
+    let mut lam: [Option<Matrix<R>>; 3] = [None, None, None];
+    for j in EVALUATORS {
+        if let Some(v) = ctx.sample_lam_vec::<R>(j, n) {
+            lam[(j.0 - 1) as usize] = Some(Matrix::from_vec(rows, cols, v));
+        }
+    }
+    if me.is_evaluator() {
+        MMat::Eval {
+            m: Matrix::zeros(rows, cols),
+            lam_next: lam[(me.next_evaluator().0 - 1) as usize].take().unwrap(),
+            lam_prev: lam[(me.prev_evaluator().0 - 1) as usize].take().unwrap(),
+        }
+    } else {
+        MMat::Helper {
+            lam: [lam[0].take().unwrap(), lam[1].take().unwrap(), lam[2].take().unwrap()],
+        }
+    }
+}
+
+/// Zero-share matrices (Π_Zero elementwise).
+fn zero_mat<R: Ring>(ctx: &mut Ctx, rows: usize, cols: usize) -> [Option<Matrix<R>>; 3] {
+    let n = rows * cols;
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    let mut g = Vec::with_capacity(n);
+    let mut have = [false; 3];
+    for _ in 0..n {
+        let z = ctx.zero_share::<R>();
+        if let Some(v) = z.a {
+            a.push(v);
+            have[0] = true;
+        }
+        if let Some(v) = z.b {
+            b.push(v);
+            have[1] = true;
+        }
+        if let Some(v) = z.gamma {
+            g.push(v);
+            have[2] = true;
+        }
+    }
+    [
+        have[0].then(|| Matrix::from_vec(rows, cols, a)),
+        have[1].then(|| Matrix::from_vec(rows, cols, b)),
+        have[2].then(|| Matrix::from_vec(rows, cols, g)),
+    ]
+}
+
+/// γ matrix for component `j`:
+/// `Γ_j = Λx_j∘(Λy_j + Λy_{j+1}) + Λx_{j+1}∘Λy_j (+ zero-share mask)`.
+fn gamma_mat<R: Ring>(
+    ctx: &mut Ctx,
+    x: &MMat<R>,
+    y: &MMat<R>,
+    j: u8,
+    mask: &Matrix<R>,
+) -> Matrix<R> {
+    let me = ctx.id();
+    let lxj = x.lam(me, j).unwrap().clone();
+    let lxj1 = x.lam(me, succ(j)).unwrap().clone();
+    let lyj = y.lam(me, j).unwrap().clone();
+    let lyj1 = y.lam(me, succ(j)).unwrap().clone();
+    let prod = ctx.net.timed(|| {
+        let t1 = gemm(&lxj, &(&lyj + &lyj1));
+        let t2 = gemm(&lxj1, &lyj);
+        &t1 + &t2
+    });
+    &prod + mask
+}
+
+/// Offline phase for `matmul`/`matmul_tr`.
+pub(crate) fn matmul_offline<R: Ring>(
+    ctx: &mut Ctx,
+    x: &MMat<R>,
+    y: &MMat<R>,
+    with_lam_z: bool,
+) -> Result<MatmulCorr<R>, Abort> {
+    let me = ctx.id();
+    let (a, _b) = x.dims();
+    let c = y.cols();
+    assert_eq!(x.cols(), y.rows(), "matmul dims");
+    ctx.offline(|ctx| {
+        let lam_z = if with_lam_z {
+            sample_lam_mat(ctx, a, c)
+        } else {
+            MMat::zero(me, a, c)
+        };
+        let zs = zero_mat::<R>(ctx, a, c);
+        let gamma = match me {
+            P0 => {
+                // masks: γ1←Γ, γ2←A, γ3←B
+                let masks = [zs[2].clone().unwrap(), zs[0].clone().unwrap(), zs[1].clone().unwrap()];
+                let g1 = gamma_mat(ctx, x, y, 1, &masks[0]);
+                let g2 = gamma_mat(ctx, x, y, 2, &masks[1]);
+                let g3 = gamma_mat(ctx, x, y, 3, &masks[2]);
+                ctx.vouch_ring(crate::net::P1, g3.data());
+                ctx.vouch_ring(crate::net::P2, g1.data());
+                ctx.vouch_ring(crate::net::P3, g2.data());
+                MatGamma::Helper([g1, g2, g3])
+            }
+            _ => {
+                let j = me.next_evaluator().0;
+                let mask = match me.0 {
+                    1 => zs[0].clone().unwrap(),
+                    2 => zs[1].clone().unwrap(),
+                    3 => zs[2].clone().unwrap(),
+                    _ => unreachable!(),
+                };
+                let mine = gamma_mat(ctx, x, y, j, &mask);
+                ctx.send_ring(me.prev_evaluator(), mine.data());
+                let got: Vec<R> = ctx.recv_ring(me.next_evaluator(), a * c)?;
+                ctx.expect_ring(P0, &got);
+                MatGamma::Eval { next: mine, prev: Matrix::from_vec(a, c, got) }
+            }
+        };
+        Ok(MatmulCorr { lam_z, gamma })
+    })
+}
+
+/// The evaluator-local online term
+/// `M'_j = −Λx_j∘M_y − M_x∘Λy_j + Γ_j + Λz_j` — the **hot path**; the two
+/// matmuls are what `python/compile/kernels/masked_matmul.py` fuses.
+pub(crate) fn local_share_mat<R: Ring>(
+    ctx: &mut Ctx,
+    x: &MMat<R>,
+    y: &MMat<R>,
+    gamma_j: &Matrix<R>,
+    lam_z_j: &Matrix<R>,
+    j: u8,
+) -> Matrix<R> {
+    let me = ctx.id();
+    let lxj = x.lam(me, j).unwrap();
+    let lyj = y.lam(me, j).unwrap();
+    let (mx, my) = (x.m(), y.m());
+    ctx.net.timed(|| {
+        let t = crate::runtime::masked_matmul(lxj, my, mx, lyj, gamma_j, lam_z_j);
+        t
+    })
+}
+
+/// `[[Z]] = [[X]] ∘ [[Y]]` — matrix product with 3·(a·c) online ring
+/// elements, independent of the inner dimension (Π_DotP lifted to matrices).
+pub fn matmul<R: Ring>(ctx: &mut Ctx, x: &MMat<R>, y: &MMat<R>) -> Result<MMat<R>, Abort> {
+    let corr = matmul_offline(ctx, x, y, true)?;
+    matmul_online(ctx, x, y, &corr)
+}
+
+pub(crate) fn matmul_online<R: Ring>(
+    ctx: &mut Ctx,
+    x: &MMat<R>,
+    y: &MMat<R>,
+    corr: &MatmulCorr<R>,
+) -> Result<MMat<R>, Abort> {
+    let me = ctx.id();
+    let (a, c) = (x.rows(), y.cols());
+    ctx.online(|ctx| {
+        if me == P0 {
+            return Ok(corr.lam_z.clone());
+        }
+        let (g_next, g_prev) = match &corr.gamma {
+            MatGamma::Eval { next, prev } => (next, prev),
+            _ => unreachable!(),
+        };
+        let (jn, jp) = (me.next_evaluator().0, me.prev_evaluator().0);
+        let lz_n = corr.lam_z.lam(me, jn).unwrap().clone();
+        let lz_p = corr.lam_z.lam(me, jp).unwrap().clone();
+        let mp_next = local_share_mat(ctx, x, y, g_next, &lz_n, jn);
+        let mp_prev = local_share_mat(ctx, x, y, g_prev, &lz_p, jp);
+        ctx.send_ring(me.prev_evaluator(), mp_prev.data());
+        ctx.vouch_ring(me.next_evaluator(), mp_next.data());
+        let missing: Vec<R> = ctx.recv_ring(me.next_evaluator(), a * c)?;
+        ctx.expect_ring(me.prev_evaluator(), &missing);
+        let missing = Matrix::from_vec(a, c, missing);
+        let mxmy = ctx.net.timed(|| gemm(x.m(), y.m()));
+        let m_z = &(&(&mp_next + &mp_prev) + &missing) + &mxmy;
+        match &corr.lam_z {
+            MMat::Eval { lam_next, lam_prev, .. } => Ok(MMat::Eval {
+                m: m_z,
+                lam_next: lam_next.clone(),
+                lam_prev: lam_prev.clone(),
+            }),
+            _ => unreachable!(),
+        }
+    })
+}
+
+/// Who computes γ-component j (sanity helper used in tests).
+#[allow(dead_code)]
+pub(crate) fn gamma_owner(j: u8) -> PartyId {
+    match j {
+        2 => crate::net::P1,
+        3 => crate::net::P2,
+        1 => crate::net::P3,
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::net::{NetProfile, P1, P2};
+    use crate::proto::{run_4pc, share};
+    use crate::ring::Z64;
+    use crate::sharing::mat::open_mat;
+    use crate::sharing::open;
+
+    #[test]
+    fn dotp_opens_to_dot_product() {
+        let run = run_4pc(NetProfile::zero(), 41, |ctx| {
+            let xs = super::super::sharing::share_many_n(
+                ctx,
+                P1,
+                (ctx.id() == P1).then(|| (1..=100u64).map(Z64).collect::<Vec<_>>()).as_deref(),
+                100,
+            )?;
+            let ys = super::super::sharing::share_many_n(
+                ctx,
+                P2,
+                (ctx.id() == P2).then(|| (201..=300u64).map(Z64).collect::<Vec<_>>()).as_deref(),
+                100,
+            )?;
+            let z = dotp(ctx, &xs, &ys)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        });
+        let (outs, report) = run.expect_ok();
+        let expect: u64 = (1..=100u64).zip(201..=300u64).map(|(a, b)| a * b).sum();
+        assert_eq!(open(&outs), Z64(expect));
+        // THE headline property: dot-product online cost is 3ℓ bits,
+        // independent of d=100 (inputs: 2 dealers × 100 values × 2 receivers).
+        assert_eq!(report.value_bits[1] - 400 * 64, 3 * 64);
+        assert_eq!(report.value_bits[0], 3 * 64);
+    }
+
+    #[test]
+    fn dotp_cost_flat_in_dimension() {
+        let mut costs = Vec::new();
+        for d in [1usize, 10, 1000] {
+            let run = run_4pc(NetProfile::zero(), 42, move |ctx| {
+                let xs = super::super::sharing::share_many_n(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1).then(|| vec![Z64(3); d]).as_deref(),
+                    d,
+                )?;
+                let ys = super::super::sharing::share_many_n(
+                    ctx,
+                    P2,
+                    (ctx.id() == P2).then(|| vec![Z64(5); d]).as_deref(),
+                    d,
+                )?;
+                let z = dotp(ctx, &xs, &ys)?;
+                ctx.flush_verify()?;
+                Ok(z)
+            });
+            let (outs, report) = run.expect_ok();
+            assert_eq!(open(&outs), Z64(15 * d as u64));
+            costs.push(report.value_bits[1] - (4 * d as u64) * 64);
+        }
+        assert_eq!(costs[0], costs[1]);
+        assert_eq!(costs[1], costs[2]);
+    }
+
+    #[test]
+    fn matmul_opens_to_product() {
+        let mut rng = Rng::seeded(43);
+        let xm = Matrix::from_fn(4, 6, |_, _| rng.gen::<Z64>());
+        let ym = Matrix::from_fn(6, 3, |_, _| rng.gen::<Z64>());
+        let expect = xm.matmul(&ym);
+        let xm2 = xm.clone();
+        let ym2 = ym.clone();
+        let run = run_4pc(NetProfile::zero(), 44, move |ctx| {
+            let xsh = crate::testutil::share_mat(ctx, P1, &xm2)?;
+            let ysh = crate::testutil::share_mat(ctx, P2, &ym2)?;
+            let z = matmul(ctx, &xsh, &ysh)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open_mat(&outs), expect);
+        // online: inputs (4·6 + 6·3)·64 + 3·(4·3)·64 — flat in inner dim 6
+        let io = (4 * 6 + 6 * 3) as u64 * 64 * 2; // P1 and P2 dealer sends go to 2 peers each? no: dealer evaluator sends to 2 others → 2·n·64
+        let _ = io;
+        let mat_online = report.value_bits[1] - (4 * 6 + 6 * 3) as u64 * 2 * 64;
+        assert_eq!(mat_online, 3 * (4 * 3) as u64 * 64);
+    }
+
+    #[test]
+    fn matmul_chain_associates() {
+        // (X∘Y)∘w == X∘(Y∘w) through the protocol
+        let mut rng = Rng::seeded(45);
+        let x = Matrix::from_fn(3, 3, |_, _| rng.gen::<Z64>());
+        let y = Matrix::from_fn(3, 3, |_, _| rng.gen::<Z64>());
+        let w = Matrix::from_fn(3, 1, |_, _| rng.gen::<Z64>());
+        let expect = x.matmul(&y).matmul(&w);
+        let (x2, y2, w2) = (x.clone(), y.clone(), w.clone());
+        let run = run_4pc(NetProfile::zero(), 46, move |ctx| {
+            let xs = crate::testutil::share_mat(ctx, P1, &x2)?;
+            let ys = crate::testutil::share_mat(ctx, P2, &y2)?;
+            let ws = crate::testutil::share_mat(ctx, P1, &w2)?;
+            let xy = matmul(ctx, &xs, &ys)?;
+            let out = matmul(ctx, &xy, &ws)?;
+            ctx.flush_verify()?;
+            Ok(out)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(open_mat(&outs), expect);
+    }
+}

@@ -1,0 +1,569 @@
+//! Input-sharing protocols: `Π_Sh` (Fig. 1), `Π_aSh` (Fig. 2),
+//! `Π_vSh` (Fig. 7).
+//!
+//! Mask-sampling scopes follow the paper exactly:
+//! * dealer `P0`: each `λ_{v,j}` from the triple key `P\{P_j}` — P0 holds all
+//!   triple keys, so it knows the whole mask;
+//! * dealer `P_k` (evaluator): `λ_{v,k}` from the all-party key, the others
+//!   from `P\{P_j}` — again the dealer knows the whole mask, and each
+//!   evaluator `P_j` misses exactly `λ_{v,j}`;
+//! * verifiable `Π_vSh(P_i, P_j, ·)`: components indexed by `{i,j}∩{1,2,3}`
+//!   come from the all-party key so that **both** owners can compute `m_v`
+//!   (P0, when an owner, knows every mask anyway).
+
+use crate::net::{Abort, PartyId, EVALUATORS, P0};
+use crate::ring::Ring;
+use crate::setup::Scope;
+use crate::sharing::{MShare, RShare};
+
+use super::Ctx;
+
+/// Which scope component `j` of a sharing dealt by `dealer` is drawn from.
+fn lam_scope(dealer: PartyId, j: PartyId) -> Scope {
+    if dealer.is_evaluator() && dealer == j {
+        Scope::All
+    } else {
+        Scope::Excl(j)
+    }
+}
+
+/// Draw the λ components for a sharing dealt by `dealer`; returns
+/// `(my_share_skeleton, full_mask_if_known)`.
+fn sample_mask<R: Ring>(ctx: &mut Ctx, dealer: PartyId) -> (MShare<R>, Option<[R; 3]>) {
+    let me = ctx.id();
+    let mut lam = [None::<R>; 3];
+    for j in EVALUATORS {
+        let scope = lam_scope(dealer, j);
+        if scope.holds(me) {
+            lam[(j.0 - 1) as usize] = Some(ctx.keys.sample(scope));
+        }
+    }
+    let full = (lam.iter().all(Option::is_some))
+        .then(|| [lam[0].unwrap(), lam[1].unwrap(), lam[2].unwrap()]);
+    let skeleton = if me.is_evaluator() {
+        MShare::Eval {
+            m: R::ZERO, // filled online
+            lam_next: lam[(me.next_evaluator().0 - 1) as usize].expect("next λ held"),
+            lam_prev: lam[(me.prev_evaluator().0 - 1) as usize].expect("prev λ held"),
+        }
+    } else {
+        let f = full.expect("P0 knows all λ");
+        MShare::Helper { lam: f }
+    };
+    (skeleton, full)
+}
+
+/// `Π_Sh(P_i, v)` — dealer `dealer` shares `v` (Fig. 1). Pass `Some(v)` at
+/// the dealer, `None` elsewhere. Offline: non-interactive mask sampling.
+/// Online: one round, ≤ 3ℓ bits; evaluators cross-check `m_v` (batched).
+pub fn share<R: Ring>(ctx: &mut Ctx, dealer: PartyId, v: Option<R>) -> Result<MShare<R>, Abort> {
+    share_many_n(ctx, dealer, v.map(|x| vec![x]).as_deref(), 1).map(|mut v| v.pop().unwrap())
+}
+
+/// Batched [`share`]: one message carries all values (single round). The
+/// batch size is taken from the dealer's slice; every party must call with
+/// the same implied size, which non-dealers pass via [`share_many_n`] when
+/// they cannot infer it. This convenience wrapper requires the dealer's
+/// slice at the dealer and infers `n` from it at other parties via the
+/// public circuit topology embedded in the call site (both sides pass the
+/// same `n`).
+pub fn share_many<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    vs: Option<&[R]>,
+) -> Result<Vec<MShare<R>>, Abort> {
+    // Batch size is public circuit structure. When the caller is not the
+    // dealer it must know n anyway; we recover it from the dealer's first
+    // message only in the explicit-n variant. Here: all callers in this
+    // crate pass vs=Some at the dealer and know n statically — assert and
+    // delegate.
+    let n = match vs {
+        Some(v) => v.len(),
+        None => panic!(
+            "share_many without values requires the explicit-n variant \
+             share_many_n (batch size is public circuit structure)"
+        ),
+    };
+    share_many_n(ctx, dealer, vs, n)
+}
+
+/// [`share_many`] with an explicit public batch size `n`.
+pub fn share_many_n<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    vs: Option<&[R]>,
+    n: usize,
+) -> Result<Vec<MShare<R>>, Abort> {
+    let me = ctx.id();
+    if me == dealer {
+        assert!(vs.is_some(), "dealer must supply values");
+        assert_eq!(vs.unwrap().len(), n);
+    }
+    let masks: Vec<(MShare<R>, Option<[R; 3]>)> = ctx.offline(|ctx| {
+        (0..n).map(|_| sample_mask(ctx, dealer)).collect()
+    });
+
+    ctx.online(|ctx| {
+        if me == dealer {
+            let vs = vs.unwrap();
+            let ms: Vec<R> = vs
+                .iter()
+                .zip(masks.iter())
+                .map(|(&v, (_, full))| {
+                    let f = full.expect("dealer knows mask");
+                    v + f[0] + f[1] + f[2]
+                })
+                .collect();
+            for p in EVALUATORS {
+                if p != me {
+                    ctx.send_ring(p, &ms);
+                }
+            }
+            if me.is_evaluator() {
+                ctx.crosscheck_ring(&ms);
+                Ok(ms
+                    .into_iter()
+                    .zip(masks)
+                    .map(|(m, (skel, _))| fill_m(skel, m))
+                    .collect())
+            } else {
+                Ok(masks.into_iter().map(|(skel, _)| skel).collect())
+            }
+        } else if me.is_evaluator() {
+            let expect_n = masks.len();
+            let ms: Vec<R> = ctx.recv_ring(dealer, expect_n)?;
+            ctx.crosscheck_ring(&ms);
+            Ok(ms
+                .into_iter()
+                .zip(masks)
+                .map(|(m, (skel, _))| fill_m(skel, m))
+                .collect())
+        } else {
+            // P0, not dealer: holds only the mask components
+            Ok(masks.into_iter().map(|(skel, _)| skel).collect())
+        }
+    })
+}
+
+fn fill_m<R: Ring>(skel: MShare<R>, m_v: R) -> MShare<R> {
+    match skel {
+        MShare::Eval { lam_next, lam_prev, .. } => MShare::Eval { m: m_v, lam_next, lam_prev },
+        h => h,
+    }
+}
+
+/// `Π_aSh(P0, v)` — P0 deals a ⟨·⟩-sharing in the offline phase (Fig. 2).
+/// `v` is `Some` only at P0. Comm: 2ℓ bits, 1 round (offline).
+pub fn ash<R: Ring>(ctx: &mut Ctx, v: Option<R>) -> Result<RShare<R>, Abort> {
+    ash_many(ctx, v.map(|x| vec![x]).as_deref(), 1).map(|mut v| v.pop().unwrap())
+}
+
+/// Batched [`ash`]; `n` must be known to all parties (circuit-static).
+pub fn ash_many<R: Ring>(ctx: &mut Ctx, vs: Option<&[R]>, n: usize) -> Result<Vec<RShare<R>>, Abort> {
+    let me = ctx.id();
+    ctx.offline(|ctx| {
+        // P\{P1} samples v1, P\{P2} samples v2
+        let v1: Option<Vec<R>> = ctx.sample_lam_vec(crate::net::P1, n);
+        let v2: Option<Vec<R>> = ctx.sample_lam_vec(crate::net::P2, n);
+        match me {
+            P0 => {
+                let vs = vs.expect("P0 supplies values");
+                assert_eq!(vs.len(), n);
+                let v1 = v1.unwrap();
+                let v2 = v2.unwrap();
+                let v3: Vec<R> = vs
+                    .iter()
+                    .zip(v1.iter().zip(v2.iter()))
+                    .map(|(&v, (&a, &b))| v - a - b)
+                    .collect();
+                ctx.send_ring(crate::net::P1, &v3);
+                ctx.send_ring(crate::net::P2, &v3);
+                Ok((0..n)
+                    .map(|i| RShare::Helper { v: [v1[i], v2[i], v3[i]] })
+                    .collect())
+            }
+            crate::net::P1 => {
+                let v3: Vec<R> = ctx.recv_ring(P0, n)?;
+                // P1, P2 exchange H(v3)
+                ctx.vouch_ring(crate::net::P2, &v3);
+                ctx.expect_ring(crate::net::P2, &v3);
+                let v2 = v2.unwrap();
+                Ok((0..n).map(|i| RShare::Eval { next: v2[i], prev: v3[i] }).collect())
+            }
+            crate::net::P2 => {
+                let v3: Vec<R> = ctx.recv_ring(P0, n)?;
+                ctx.vouch_ring(crate::net::P1, &v3);
+                ctx.expect_ring(crate::net::P1, &v3);
+                let v1 = v1.unwrap();
+                Ok((0..n).map(|i| RShare::Eval { next: v3[i], prev: v1[i] }).collect())
+            }
+            crate::net::P3 => {
+                let v1 = v1.unwrap();
+                let v2 = v2.unwrap();
+                Ok((0..n).map(|i| RShare::Eval { next: v1[i], prev: v2[i] }).collect())
+            }
+            _ => unreachable!(),
+        }
+    })
+}
+
+/// `Π_vSh(P_i, P_j, v)` — verifiable sharing by two owners (Fig. 7).
+/// `v` is `Some` at both owners. One round; ℓ bits when both owners are
+/// evaluators, 2ℓ when P0 is an owner. The delivery runs in the **ambient**
+/// phase: conversions invoke Π_vSh both offline (e.g. the `r` of Π_BitExt)
+/// and online (e.g. the `x` of Π_A2B), exactly as the figures specify.
+pub fn vsh<R: Ring>(
+    ctx: &mut Ctx,
+    owners: (PartyId, PartyId),
+    v: Option<R>,
+) -> Result<MShare<R>, Abort> {
+    vsh_many(ctx, owners, v.map(|x| vec![x]).as_deref(), 1).map(|mut v| v.pop().unwrap())
+}
+
+/// Batched [`vsh`].
+pub fn vsh_many<R: Ring>(
+    ctx: &mut Ctx,
+    (pi, pj): (PartyId, PartyId),
+    vs: Option<&[R]>,
+    n: usize,
+) -> Result<Vec<MShare<R>>, Abort> {
+    assert_ne!(pi, pj);
+    assert!(pi.is_evaluator(), "sender P_i must be an evaluator");
+    let me = ctx.id();
+    let is_owner = me == pi || me == pj;
+    if is_owner {
+        assert!(vs.is_some(), "owners must supply values");
+    }
+
+    // Offline: λ_k from All if k is an (evaluator) owner, else Excl(k).
+    let masks: Vec<[Option<R>; 3]> = ctx.offline(|ctx| {
+        (0..n)
+            .map(|_| {
+                let mut lam = [None; 3];
+                for k in EVALUATORS {
+                    let scope = if k == pi || k == pj { Scope::All } else { Scope::Excl(k) };
+                    if scope.holds(me) {
+                        lam[(k.0 - 1) as usize] = Some(ctx.keys.sample(scope));
+                    }
+                }
+                lam
+            })
+            .collect()
+    });
+
+    (|ctx: &mut Ctx| {
+        // owners compute m = v + λ (they hold all components)
+        let ms_if_owner: Option<Vec<R>> = is_owner.then(|| {
+            vs.unwrap()
+                .iter()
+                .zip(masks.iter())
+                .map(|(&v, lam)| v + lam[0].unwrap() + lam[1].unwrap() + lam[2].unwrap())
+                .collect()
+        });
+
+        // recipients = evaluators that are not owners
+        let recipients: Vec<PartyId> =
+            EVALUATORS.into_iter().filter(|&p| p != pi && p != pj).collect();
+
+        let my_m: Option<Vec<R>> = if me == pi {
+            let ms = ms_if_owner.clone().unwrap();
+            for &p in &recipients {
+                ctx.send_ring(p, &ms);
+            }
+            Some(ms)
+        } else if me == pj {
+            let ms = ms_if_owner.clone().unwrap();
+            for &p in &recipients {
+                ctx.vouch_ring(p, &ms);
+            }
+            Some(ms)
+        } else if me.is_evaluator() {
+            let ms: Vec<R> = ctx.recv_ring(pi, n)?;
+            ctx.expect_ring(pj, &ms);
+            Some(ms)
+        } else {
+            None
+        };
+
+        Ok((0..n)
+            .map(|i| {
+                if me.is_evaluator() {
+                    let lam = masks[i];
+                    MShare::Eval {
+                        m: my_m.as_ref().unwrap()[i],
+                        lam_next: lam[(me.next_evaluator().0 - 1) as usize].expect("next λ"),
+                        lam_prev: lam[(me.prev_evaluator().0 - 1) as usize].expect("prev λ"),
+                    }
+                } else {
+                    let lam = masks[i];
+                    MShare::Helper {
+                        lam: [lam[0].unwrap(), lam[1].unwrap(), lam[2].unwrap()],
+                    }
+                }
+            })
+            .collect())
+    })(ctx)
+}
+
+/// Three parallel `Π_vSh` instances with the cyclic owner pattern
+/// `(P1,P3), (P2,P1), (P3,P2)` used by `Π_B2A` and `Π_BitInj` — every
+/// evaluator sends one message, vouches one hash and receives one message,
+/// so the whole trio completes in **one** round (3ℓ bits for ℓ-bit
+/// batches), matching Lemmas C.10/C.11.
+pub fn vsh_cycle<R: Ring>(
+    ctx: &mut Ctx,
+    vals: [Option<&[R]>; 3],
+    n: usize,
+) -> Result<[Vec<MShare<R>>; 3], Abort> {
+    use crate::net::{P1, P2, P3};
+    let owners = [(P1, P3), (P2, P1), (P3, P2)];
+    let me = ctx.id();
+    // masks for each sharing, in fixed order
+    let mut masks: Vec<Vec<[Option<R>; 3]>> = Vec::with_capacity(3);
+    for (pi, pj) in owners {
+        let m: Vec<[Option<R>; 3]> = ctx.offline(|ctx| {
+            (0..n)
+                .map(|_| {
+                    let mut lam = [None; 3];
+                    for k in EVALUATORS {
+                        let scope =
+                            if k == pi || k == pj { Scope::All } else { Scope::Excl(k) };
+                        if scope.holds(me) {
+                            lam[(k.0 - 1) as usize] = Some(ctx.keys.sample(scope));
+                        }
+                    }
+                    lam
+                })
+                .collect()
+        });
+        masks.push(m);
+    }
+    // compute my m-vectors where I am an owner
+    let mut ms: [Option<Vec<R>>; 3] = [None, None, None];
+    for (idx, (pi, pj)) in owners.into_iter().enumerate() {
+        if me == pi || me == pj {
+            let vs = vals[idx].expect("owner supplies values");
+            assert_eq!(vs.len(), n);
+            ms[idx] = Some(
+                vs.iter()
+                    .zip(&masks[idx])
+                    .map(|(&v, lam)| v + lam[0].unwrap() + lam[1].unwrap() + lam[2].unwrap())
+                    .collect(),
+            );
+        }
+    }
+    // sends first (parallel round): sender pi → the non-owner evaluator
+    if me.is_evaluator() {
+        for (idx, (pi, pj)) in owners.into_iter().enumerate() {
+            let recipient = EVALUATORS.into_iter().find(|&p| p != pi && p != pj).unwrap();
+            if me == pi {
+                ctx.send_ring(recipient, ms[idx].as_ref().unwrap());
+            } else if me == pj {
+                ctx.vouch_ring(recipient, ms[idx].as_ref().unwrap());
+            }
+        }
+        // receive the one sharing I don't own
+        for (idx, (pi, pj)) in owners.into_iter().enumerate() {
+            if me != pi && me != pj {
+                let got: Vec<R> = ctx.recv_ring(pi, n)?;
+                ctx.expect_ring(pj, &got);
+                ms[idx] = Some(got);
+            }
+        }
+    }
+    // assemble shares
+    let build = |idx: usize, ms: &[Option<Vec<R>>; 3], masks: &Vec<Vec<[Option<R>; 3]>>| {
+        (0..n)
+            .map(|i| {
+                let lam = masks[idx][i];
+                if me.is_evaluator() {
+                    MShare::Eval {
+                        m: ms[idx].as_ref().unwrap()[i],
+                        lam_next: lam[(me.next_evaluator().0 - 1) as usize].unwrap(),
+                        lam_prev: lam[(me.prev_evaluator().0 - 1) as usize].unwrap(),
+                    }
+                } else {
+                    MShare::Helper {
+                        lam: [lam[0].unwrap(), lam[1].unwrap(), lam[2].unwrap()],
+                    }
+                }
+            })
+            .collect::<Vec<_>>()
+    };
+    Ok([build(0, &ms, &masks), build(1, &ms, &masks), build(2, &ms, &masks)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetProfile, P1, P2, P3};
+    use crate::ring::{Bit, Z64};
+    use crate::sharing::{open, open_rss};
+
+    fn open_from_outputs<R: Ring>(outs: [MShare<R>; 4]) -> R {
+        open(&outs)
+    }
+
+    #[test]
+    fn share_by_each_dealer_opens_correctly() {
+        for dealer in crate::net::ALL {
+            let run = super::super::run_4pc(NetProfile::zero(), 11, move |ctx| {
+                let v = (ctx.id() == dealer).then_some(Z64(123456));
+                let sh = share(ctx, dealer, v)?;
+                ctx.flush_verify()?;
+                Ok(sh)
+            });
+            let (outs, report) = run.expect_ok();
+            assert_eq!(open_from_outputs(outs), Z64(123456), "dealer {dealer}");
+            // online: exactly one data round (verification is amortized)
+            assert_eq!(report.rounds[1], 1, "dealer {dealer}");
+            let expected_bits = if dealer == P0 { 3 * 64 } else { 2 * 64 };
+            assert_eq!(report.value_bits[1], expected_bits, "dealer {dealer}");
+        }
+    }
+
+    #[test]
+    fn share_boolean_world() {
+        let run = super::super::run_4pc(NetProfile::zero(), 12, |ctx| {
+            let v = (ctx.id() == P2).then_some(Bit(true));
+            let sh = share(ctx, P2, v)?;
+            ctx.flush_verify()?;
+            Ok(sh)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(open_from_outputs(outs), Bit(true));
+    }
+
+    #[test]
+    fn share_many_batches_one_round() {
+        let run = super::super::run_4pc(NetProfile::zero(), 13, |ctx| {
+            let vs = (ctx.id() == P1).then(|| (0..50u64).map(Z64).collect::<Vec<_>>());
+            let sh = share_many_n(ctx, P1, vs.as_deref(), 50)?;
+            ctx.flush_verify()?;
+            Ok(sh)
+        });
+        let (outs, report) = run.expect_ok();
+        // one data round for the whole batch
+        assert_eq!(report.rounds[1], 1);
+        for i in 0..50 {
+            assert_eq!(
+                open(&[outs[0][i], outs[1][i], outs[2][i], outs[3][i]]),
+                Z64(i as u64)
+            );
+        }
+    }
+
+    #[test]
+    fn ash_opens_and_costs_2l() {
+        let run = super::super::run_4pc(NetProfile::zero(), 14, |ctx| {
+            let v = (ctx.id() == P0).then_some(Z64(777));
+            let sh = ash(ctx, v)?;
+            ctx.flush_verify()?;
+            Ok(sh)
+        });
+        let (outs, report) = run.expect_ok();
+        let rss = [
+            match outs[1] {
+                s @ RShare::Eval { .. } => s,
+                _ => panic!(),
+            },
+            match outs[2] {
+                s @ RShare::Eval { .. } => s,
+                _ => panic!(),
+            },
+            match outs[3] {
+                s @ RShare::Eval { .. } => s,
+                _ => panic!(),
+            },
+        ];
+        assert_eq!(open_rss(&rss), Z64(777));
+        // offline comm 2ℓ, nothing online
+        assert_eq!(report.value_bits[0], 128);
+        assert_eq!(report.value_bits[1], 0);
+        // P0's helper view matches
+        if let RShare::Helper { v } = outs[0] {
+            assert_eq!(v[0] + v[1] + v[2], Z64(777));
+        } else {
+            panic!("P0 should be helper");
+        }
+    }
+
+    #[test]
+    fn vsh_evaluator_pair_costs_l() {
+        let run = super::super::run_4pc(NetProfile::zero(), 15, |ctx| {
+            let v = (ctx.id() == P1 || ctx.id() == P3).then_some(Z64(31415));
+            let sh = vsh(ctx, (P1, P3), v)?;
+            ctx.flush_verify()?;
+            Ok(sh)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open_from_outputs(outs), Z64(31415));
+        assert_eq!(report.value_bits[1], 64); // ℓ bits: P1→P2 only
+    }
+
+    #[test]
+    fn vsh_with_p0_costs_2l() {
+        let run = super::super::run_4pc(NetProfile::zero(), 16, |ctx| {
+            let v = (ctx.id() == P3 || ctx.id() == P0).then_some(Z64(2718));
+            let sh = vsh(ctx, (P3, P0), v)?;
+            ctx.flush_verify()?;
+            Ok(sh)
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(open_from_outputs(outs), Z64(2718));
+        assert_eq!(report.value_bits[1], 128); // 2ℓ: P3→P1, P3→P2
+    }
+
+    #[test]
+    fn malicious_dealer_inconsistent_m_detected() {
+        // dealer P0 sends different m to P1 vs P2/P3 → crosscheck aborts
+        let run = super::super::run_4pc_timeout(
+            NetProfile::zero(),
+            17,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                if ctx.id() == P0 {
+                    // cheat: emulate Π_Sh but with inconsistent m values
+                    ctx.offline(|ctx| {
+                        let _ = sample_mask::<Z64>(ctx, P0);
+                    });
+                    ctx.online(|ctx| {
+                        ctx.send_ring1(P1, Z64(1));
+                        ctx.send_ring1(P2, Z64(2)); // inconsistent!
+                        ctx.send_ring1(P3, Z64(1));
+                    });
+                    return Ok(());
+                }
+                let _sh = share::<Z64>(ctx, P0, None)?;
+                ctx.flush_verify()?;
+                Ok(())
+            },
+        );
+        assert!(run.any_verify_abort(), "evaluators must detect inconsistent m_v");
+    }
+
+    #[test]
+    fn malicious_p0_bad_v3_in_ash_detected() {
+        let run = super::super::run_4pc_timeout(
+            NetProfile::zero(),
+            18,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                if ctx.id() == P0 {
+                    ctx.offline(|ctx| {
+                        let _v1: Vec<Z64> = ctx.sample_lam_vec(P1, 1).unwrap();
+                        let _v2: Vec<Z64> = ctx.sample_lam_vec(P2, 1).unwrap();
+                        // send DIFFERENT v3 to P1 and P2
+                        ctx.send_ring1(P1, Z64(111));
+                        ctx.send_ring1(P2, Z64(222));
+                    });
+                    return Ok(());
+                }
+                let _ = ash::<Z64>(ctx, None)?;
+                ctx.flush_verify()?;
+                Ok(())
+            },
+        );
+        assert!(run.any_verify_abort(), "P1/P2 must detect inconsistent v3");
+    }
+}

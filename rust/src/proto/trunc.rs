@@ -1,0 +1,401 @@
+//! `Π_MultTr` (Fig. 18): multiplication with truncation at **no extra online
+//! cost** over `Π_Mult` — the paper's flagship ML optimisation. Instead of a
+//! boolean ripple-carry circuit (ABY3's 2ℓ−2-round offline), P0 — who knows
+//! the full random `r = r1+r2+r3` — locally produces the truncated pair
+//! `(r, rᵗ)` and ⟨·⟩-shares `rᵗ`; the evaluators verify it with one masked
+//! linear identity (`r = 2ᵈ·rᵗ + r_d`, Lemma D.1).
+//!
+//! Carry handling: `Σᵢ r_{d,i} = r_d + 2ᵈ·κ` with carry `κ ∈ {0,1,2}`, so
+//! the honest P0 sets `rᵗ = (r ≫ₐ d) − κ` — the unique value passing the
+//! check. The extra `κ` (≤ 2 ulp) is the probabilistic-truncation error
+//! inherited from SecureML; tests bound it empirically.
+//!
+//! Online: open `z − r` (3ℓ bits, same exchange as `Π_Mult` with `−rᵢ`
+//! replacing `+λ_{z,i}`), truncate the clear value locally (arithmetic
+//! shift), and add `[[rᵗ]]`.
+
+use crate::net::{Abort, EVALUATORS, P0, P1, P2};
+use crate::ring::{fixed::FRAC_BITS, Matrix, Z64};
+use crate::sharing::{MMat, MShare, RShare};
+
+use super::dotp::{local_share_mat, matmul_offline, MatGamma};
+use super::mult::{mult_offline, GammaView};
+use super::sharing::ash_many;
+use super::Ctx;
+
+/// A verified truncation pair: additive `r`-components (those I hold) and
+/// the `[[rᵗ]]` share (with `m = 0`, `λ = −rᵗ`).
+pub struct TruncPair {
+    /// r components I hold, by index 1..=3 (None where not held).
+    pub r: [Option<Z64>; 3],
+    /// `[[rᵗ]]` share.
+    pub rt: MShare<Z64>,
+}
+
+/// Offline generation + verification of `n` truncation pairs (Fig. 18,
+/// offline). `d = FRAC_BITS` unless overridden.
+pub fn trunc_pairs(ctx: &mut Ctx, n: usize, d: u32) -> Result<Vec<TruncPair>, Abort> {
+    let me = ctx.id();
+    ctx.offline(|ctx| {
+        // r_j sampled by P\{P_j}
+        let mut r: [Option<Vec<Z64>>; 3] = [None, None, None];
+        for j in EVALUATORS {
+            r[(j.0 - 1) as usize] = ctx.sample_lam_vec::<Z64>(j, n);
+        }
+        // P0 computes rᵗ and ⟨·⟩-shares it
+        let rts: Option<Vec<Z64>> = (me == P0).then(|| {
+            let r1 = r[0].as_ref().unwrap();
+            let r2 = r[1].as_ref().unwrap();
+            let r3 = r[2].as_ref().unwrap();
+            (0..n)
+                .map(|i| {
+                    let rr = r1[i] + r2[i] + r3[i];
+                    let kappa = ((r1[i].low_bits(d).0 as u128
+                        + r2[i].low_bits(d).0 as u128
+                        + r3[i].low_bits(d).0 as u128)
+                        >> d) as u64;
+                    rr.truncate(d) - Z64(kappa)
+                })
+                .collect()
+        });
+        let rt_shares: Vec<RShare<Z64>> = ash_many(ctx, rts.as_deref(), n)?;
+
+        // Verification (Fig. 18): P1 → (m1, H(c)) → P2; P2 checks
+        // H(m1+m2) == H(c). Batched: one message, one combined digest.
+        match me {
+            P1 => {
+                let r2 = r[1].as_ref().unwrap();
+                let mut m1s = Vec::with_capacity(n);
+                let mut c_acc = crate::crypto::HashAcc::new();
+                for i in 0..n {
+                    let c: Z64 = ctx.rng.gen();
+                    let r2t = rt_shares[i].component(me, 2).expect("P1 holds r2ᵗ");
+                    let m1 = r2[i] - Z64::wrapping_pow2(d) * r2t - r2[i].low_bits(d) + c;
+                    m1s.push(m1);
+                    c_acc.absorb_ring(&c);
+                }
+                ctx.send_ring(P2, &m1s);
+                let digest = c_acc.finalize();
+                ctx.net.send_digest(P2, &digest);
+            }
+            P2 => {
+                let m1s: Vec<Z64> = ctx.recv_ring(P1, n)?;
+                let r1 = r[0].as_ref().unwrap();
+                let r3 = r[2].as_ref().unwrap();
+                let mut sum_acc = crate::crypto::HashAcc::new();
+                for i in 0..n {
+                    let r1t = rt_shares[i].component(me, 1).expect("P2 holds r1ᵗ");
+                    let r3t = rt_shares[i].component(me, 3).expect("P2 holds r3ᵗ");
+                    let m2 = (r1[i] + r3[i])
+                        - Z64::wrapping_pow2(d) * (r1t + r3t)
+                        - (r1[i].low_bits(d) + r3[i].low_bits(d));
+                    sum_acc.absorb_ring(&(m1s[i] + m2));
+                }
+                let want = sum_acc.finalize();
+                ctx.net.recv_digest_expect(P1, &want, "Π_MultTr r/rᵗ check")?;
+            }
+            _ => {}
+        }
+
+        Ok((0..n)
+            .map(|i| TruncPair {
+                r: [
+                    r[0].as_ref().map(|v| v[i]),
+                    r[1].as_ref().map(|v| v[i]),
+                    r[2].as_ref().map(|v| v[i]),
+                ],
+                rt: rt_shares[i].into_mshare(),
+            })
+            .collect())
+    })
+}
+
+/// `Π_MultTr(x, y)` — `[[ (x·y) ≫ d ]]` at `Π_Mult`'s online cost
+/// (1 round, 3ℓ bits).
+pub fn mult_tr(ctx: &mut Ctx, x: &MShare<Z64>, y: &MShare<Z64>) -> Result<MShare<Z64>, Abort> {
+    mult_tr_many(ctx, std::slice::from_ref(x), std::slice::from_ref(y))
+        .map(|mut v| v.pop().unwrap())
+}
+
+/// Batched [`mult_tr`].
+pub fn mult_tr_many(
+    ctx: &mut Ctx,
+    xs: &[MShare<Z64>],
+    ys: &[MShare<Z64>],
+) -> Result<Vec<MShare<Z64>>, Abort> {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let me = ctx.id();
+    let corr = mult_offline(ctx, xs, ys, false)?;
+    let pairs = trunc_pairs(ctx, n, FRAC_BITS)?;
+
+    ctx.online(|ctx| {
+        if me == P0 {
+            // P0's output share: λ_{zᵗ} = −rᵗ (from the pair)
+            return Ok(pairs.iter().map(|p| p.rt).collect());
+        }
+        let (g_next, g_prev) = match &corr.gamma {
+            GammaView::Eval { next, prev } => (next, prev),
+            _ => unreachable!(),
+        };
+        let (jn, jp) = (me.next_evaluator().0, me.prev_evaluator().0);
+        let mut zp_next = Vec::with_capacity(n);
+        let mut zp_prev = Vec::with_capacity(n);
+        for i in 0..n {
+            let (mx, my) = (xs[i].m(), ys[i].m());
+            let r_n = pairs[i].r[(jn - 1) as usize].expect("hold r_next");
+            let r_p = pairs[i].r[(jp - 1) as usize].expect("hold r_prev");
+            zp_next.push(
+                -(xs[i].lam(me, jn).unwrap() * my) - ys[i].lam(me, jn).unwrap() * mx + g_next[i]
+                    - r_n,
+            );
+            zp_prev.push(
+                -(xs[i].lam(me, jp).unwrap() * my) - ys[i].lam(me, jp).unwrap() * mx + g_prev[i]
+                    - r_p,
+            );
+        }
+        ctx.send_ring(me.prev_evaluator(), &zp_prev);
+        ctx.vouch_ring(me.next_evaluator(), &zp_next);
+        let missing: Vec<Z64> = ctx.recv_ring(me.next_evaluator(), n)?;
+        ctx.expect_ring(me.prev_evaluator(), &missing);
+
+        Ok((0..n)
+            .map(|i| {
+                // all evaluators learn z − r in the clear (it is uniform)
+                let z_minus_r = zp_next[i] + zp_prev[i] + missing[i] + xs[i].m() * ys[i].m();
+                let zt_pub = z_minus_r.truncate(FRAC_BITS);
+                // [[zᵗ]] = [[ (z−r)ᵗ ]]_public + [[rᵗ]]
+                pairs[i].rt.add_const(zt_pub)
+            })
+            .collect())
+    })
+}
+
+/// Matrix variant used by ML: `[[ (X∘Y) ≫ d ]]` with 3·(a·c) online ring
+/// elements (the dot-product trick + free truncation).
+pub fn matmul_tr(ctx: &mut Ctx, x: &MMat<Z64>, y: &MMat<Z64>) -> Result<MMat<Z64>, Abort> {
+    matmul_tr_shift(ctx, x, y, FRAC_BITS)
+}
+
+/// [`matmul_tr`] with an explicit shift: ML weight updates fold the public
+/// `α/B = 2^{−k}` factor into the truncation (`shift = f + k`), so the
+/// learning-rate multiplication is free.
+pub fn matmul_tr_shift(
+    ctx: &mut Ctx,
+    x: &MMat<Z64>,
+    y: &MMat<Z64>,
+    shift: u32,
+) -> Result<MMat<Z64>, Abort> {
+    let me = ctx.id();
+    let (a, c) = (x.rows(), y.cols());
+    let n = a * c;
+    let corr = matmul_offline(ctx, x, y, false)?;
+    let pairs = trunc_pairs(ctx, n, shift)?;
+
+    ctx.online(|ctx| {
+        if me == P0 {
+            let shares: Vec<MShare<Z64>> = pairs.iter().map(|p| p.rt).collect();
+            return Ok(MMat::from_shares(a, c, &shares));
+        }
+        let (g_next, g_prev) = match &corr.gamma {
+            MatGamma::Eval { next, prev } => (next, prev),
+            _ => unreachable!(),
+        };
+        let (jn, jp) = (me.next_evaluator().0, me.prev_evaluator().0);
+        // r matrices for my two components
+        let r_mat = |j: u8| {
+            Matrix::from_vec(
+                a,
+                c,
+                pairs.iter().map(|p| p.r[(j - 1) as usize].expect("hold r_j")).collect(),
+            )
+        };
+        let neg_r_n = -&r_mat(jn);
+        let neg_r_p = -&r_mat(jp);
+        let zp_next = local_share_mat(ctx, x, y, g_next, &neg_r_n, jn);
+        let zp_prev = local_share_mat(ctx, x, y, g_prev, &neg_r_p, jp);
+        ctx.send_ring(me.prev_evaluator(), zp_prev.data());
+        ctx.vouch_ring(me.next_evaluator(), zp_next.data());
+        let missing: Vec<Z64> = ctx.recv_ring(me.next_evaluator(), n)?;
+        ctx.expect_ring(me.prev_evaluator(), &missing);
+        let missing = Matrix::from_vec(a, c, missing);
+        let mxmy = ctx.net.timed(|| crate::runtime::gemm(x.m(), y.m()));
+        let z_minus_r = &(&(&zp_next + &zp_prev) + &missing) + &mxmy;
+
+        let shares: Vec<MShare<Z64>> = (0..n)
+            .map(|i| {
+                let zt_pub = z_minus_r.data()[i].truncate(shift);
+                pairs[i].rt.add_const(zt_pub)
+            })
+            .collect();
+        Ok(MMat::from_shares(a, c, &shares))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::net::{NetProfile, P1, P2, P3};
+    use crate::proto::{run_4pc, run_4pc_timeout, share};
+    use crate::ring::fixed::{FixedPoint, SCALE};
+    use crate::sharing::mat::open_mat;
+    use crate::sharing::open;
+
+    #[test]
+    fn trunc_pair_identity_holds() {
+        let run = run_4pc(NetProfile::zero(), 61, |ctx| trunc_pairs(ctx, 16, FRAC_BITS));
+        let (outs, _) = run.expect_ok();
+        for i in 0..16 {
+            // open r from components (each component appears at ≥2 parties)
+            let r1 = outs[0][i].r[0].unwrap();
+            let r2 = outs[0][i].r[1].unwrap();
+            let r3 = outs[0][i].r[2].unwrap();
+            let r = r1 + r2 + r3;
+            let rt = open(&[outs[0][i].rt, outs[1][i].rt, outs[2][i].rt, outs[3][i].rt]);
+            // rᵗ within 2 of the true arithmetic shift
+            let diff = (r.truncate(FRAC_BITS) - rt).as_i64();
+            assert!((0..=2).contains(&diff), "rᵗ off by {diff}");
+        }
+    }
+
+    #[test]
+    fn mult_tr_fixed_point_accuracy() {
+        let cases = [(1.5, 2.5), (-3.25, 1.5), (0.75, -0.5), (-2.0, -2.0), (100.5, 0.125)];
+        for (a, b) in cases {
+            let run = run_4pc(NetProfile::zero(), 62, move |ctx| {
+                let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(a)))?;
+                let y = share(ctx, P2, (ctx.id() == P2).then_some(FixedPoint::encode(b)))?;
+                let z = mult_tr(ctx, &x, &y)?;
+                ctx.flush_verify()?;
+                Ok(z)
+            });
+            let (outs, _) = run.expect_ok();
+            let got = FixedPoint::decode(open(&outs));
+            let tol = (a.abs() + b.abs() + 4.0) / SCALE;
+            assert!((got - a * b).abs() <= tol, "{a}*{b}: got {got}");
+        }
+    }
+
+    #[test]
+    fn mult_tr_online_cost_equals_mult() {
+        // Table II headline: multiplication-with-truncation online cost is
+        // 3ℓ — identical to plain multiplication.
+        let run = run_4pc(NetProfile::zero(), 63, |ctx| {
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(2.0)))?;
+            let y = share(ctx, P2, (ctx.id() == P2).then_some(FixedPoint::encode(3.0)))?;
+            let z = mult_tr(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        });
+        let (_, report) = run.expect_ok();
+        assert_eq!(report.value_bits[1] - 4 * 64, 3 * 64, "online = 3ℓ");
+        // offline: γ (3ℓ) + aSh (2ℓ) + check (ℓ) = 6ℓ  (Lemma D.2)
+        assert_eq!(report.value_bits[0], 6 * 64, "offline = 6ℓ");
+        // offline rounds ≤ 2 (Lemma D.2)
+        assert!(report.rounds[0] <= 2, "offline rounds = {}", report.rounds[0]);
+    }
+
+    #[test]
+    fn mult_tr_error_statistics() {
+        // avg/max truncation error over many random fixed-point products
+        let run = run_4pc(NetProfile::zero(), 64, |ctx| {
+            let mut rng = Rng::seeded(999);
+            let raw: Vec<(f64, f64)> =
+                (0..64).map(|_| (rng.normal() * 10.0, rng.normal() * 10.0)).collect();
+            let xs = super::super::sharing::share_many_n(
+                ctx,
+                P1,
+                (ctx.id() == P1)
+                    .then(|| raw.iter().map(|c| FixedPoint::encode(c.0)).collect::<Vec<_>>())
+                    .as_deref(),
+                64,
+            )?;
+            let ys = super::super::sharing::share_many_n(
+                ctx,
+                P2,
+                (ctx.id() == P2)
+                    .then(|| raw.iter().map(|c| FixedPoint::encode(c.1)).collect::<Vec<_>>())
+                    .as_deref(),
+                64,
+            )?;
+            let zs = mult_tr_many(ctx, &xs, &ys)?;
+            ctx.flush_verify()?;
+            Ok((raw, zs))
+        });
+        let (outs, _) = run.expect_ok();
+        let raw = &outs[1].0;
+        for i in 0..raw.len() {
+            let got = FixedPoint::decode(open(&[
+                outs[0].1[i],
+                outs[1].1[i],
+                outs[2].1[i],
+                outs[3].1[i],
+            ]));
+            let (a, b) = raw[i];
+            let tol = (a.abs() + b.abs() + 4.0) / SCALE;
+            assert!((got - a * b).abs() <= tol, "case {i}: {a}*{b} → {got}");
+        }
+    }
+
+    #[test]
+    fn matmul_tr_matches_plain_fixed_matmul() {
+        let mut rng = Rng::seeded(65);
+        let a = Matrix::from_fn(3, 4, |_, _| FixedPoint::encode(rng.normal()));
+        let b = Matrix::from_fn(4, 2, |_, _| FixedPoint::encode(rng.normal()));
+        let (a2, b2) = (a.clone(), b.clone());
+        let run = run_4pc(NetProfile::zero(), 66, move |ctx| {
+            let xs = crate::testutil::share_mat(ctx, P1, &a2)?;
+            let ys = crate::testutil::share_mat(ctx, P3, &b2)?;
+            let z = matmul_tr(ctx, &xs, &ys)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        });
+        let (outs, report) = run.expect_ok();
+        let got = open_mat(&outs);
+        let clear = a.matmul(&b);
+        for i in 0..3 {
+            for j in 0..2 {
+                let want = FixedPoint::decode(clear[(i, j)].truncate(FRAC_BITS));
+                let gotv = FixedPoint::decode(got[(i, j)]);
+                assert!(
+                    (gotv - want).abs() <= 4.0 / SCALE,
+                    "({i},{j}): got {gotv}, want {want}"
+                );
+            }
+        }
+        // online cost: 3·(3·2)·64 + inputs
+        assert_eq!(report.value_bits[1] - ((3 * 4 + 4 * 2) as u64) * 2 * 64, 3 * 6 * 64);
+    }
+
+    #[test]
+    fn malicious_p0_bad_rt_detected() {
+        // P0 shares a wrong rᵗ → P2's check aborts
+        let run = run_4pc_timeout(
+            NetProfile::zero(),
+            67,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                if ctx.id() == crate::net::P0 {
+                    return ctx.offline(|ctx| {
+                        let n = 1;
+                        let d = FRAC_BITS;
+                        let r1: Vec<Z64> = ctx.sample_lam_vec(P1, n).unwrap();
+                        let r2: Vec<Z64> = ctx.sample_lam_vec(P2, n).unwrap();
+                        let r3: Vec<Z64> = ctx.sample_lam_vec(P3, n).unwrap();
+                        let rr = r1[0] + r2[0] + r3[0];
+                        // CHEAT: off-by-more-than-κ truncation
+                        let bad_rt = rr.truncate(d) + Z64(5);
+                        let _ = ash_many(ctx, Some(&[bad_rt]), 1)?;
+                        Ok(())
+                    });
+                }
+                let pairs = trunc_pairs(ctx, 1, FRAC_BITS)?;
+                ctx.flush_verify()?;
+                let _ = pairs;
+                Ok(())
+            },
+        );
+        assert!(run.any_verify_abort(), "bad rᵗ must be caught by the P1/P2 check");
+    }
+}

@@ -1,0 +1,114 @@
+//! Fixed-point embedding of decimals into `Z_{2^64}` (paper §V).
+//!
+//! "To represent decimal values, we use signed two's complement over Z_{2^ℓ},
+//! where the most significant bit represents the sign and the last d bits
+//! represent the fractional part." We follow SecureML/ABY3 and use
+//! `FRAC_BITS = 13` fractional bits.
+
+use super::Z64;
+
+/// Number of fractional bits in the embedding (SecureML's choice, kept by
+/// ABY3 and Trident).
+pub const FRAC_BITS: u32 = 13;
+
+/// Scale factor 2^FRAC_BITS.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Helpers for moving between `f64` and the ring embedding.
+///
+/// The embedding is exact for values representable in `Q50.13`; everything
+/// in the ML workloads (inputs normalised to [0,1], weights, activations)
+/// stays far inside that range.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct FixedPoint;
+
+impl FixedPoint {
+    /// Encode a decimal into the ring.
+    #[inline]
+    pub fn encode(v: f64) -> Z64 {
+        Z64(((v * SCALE).round() as i64) as u64)
+    }
+
+    /// Decode a ring element back into a decimal.
+    #[inline]
+    pub fn decode(v: Z64) -> f64 {
+        (v.0 as i64) as f64 / SCALE
+    }
+
+    /// Encode a slice.
+    pub fn encode_vec(vs: &[f64]) -> Vec<Z64> {
+        vs.iter().map(|&v| Self::encode(v)).collect()
+    }
+
+    /// Decode a slice.
+    pub fn decode_vec(vs: &[Z64]) -> Vec<f64> {
+        vs.iter().map(|&v| Self::decode(v)).collect()
+    }
+
+    /// The product of two encoded values carries 2·f fractional bits; this is
+    /// the local truncation that `Π_MultTr` applies to bring it back to f.
+    #[inline]
+    pub fn post_mul_truncate(v: Z64) -> Z64 {
+        v.truncate(FRAC_BITS)
+    }
+
+    /// Largest decimal magnitude exactly representable.
+    pub fn max_magnitude() -> f64 {
+        ((1u64 << 62) as f64) / SCALE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_on_grid() {
+        for v in [-100.0, -1.5, -0.0001220703125, 0.0, 0.5, 1.0, 3.25, 1e6] {
+            let enc = FixedPoint::encode(v);
+            let dec = FixedPoint::decode(enc);
+            assert!((dec - v).abs() <= 0.5 / SCALE, "roundtrip {v} -> {dec}");
+        }
+    }
+
+    #[test]
+    fn negative_encoding_is_twos_complement() {
+        let enc = FixedPoint::encode(-1.0);
+        assert_eq!(enc.0, (-(1i64 << FRAC_BITS)) as u64);
+        assert_eq!(enc.msb().0, true);
+    }
+
+    #[test]
+    fn mul_then_truncate_approximates_product() {
+        let cases = [(1.5, 2.25), (-3.0, 0.5), (0.125, -0.25), (100.0, -0.01)];
+        for (a, b) in cases {
+            let prod = FixedPoint::encode(a) * FixedPoint::encode(b);
+            let dec = FixedPoint::decode(FixedPoint::post_mul_truncate(prod));
+            // error = operand-encoding error (≤0.5 ulp each, scaled by the
+            // other operand) + 1 ulp truncation
+            let tol = (a.abs() + b.abs() + 2.0) * 0.5 / SCALE + 1.0 / SCALE;
+            assert!((dec - a * b).abs() < tol, "{a}*{b}: got {dec}, want {}", a * b);
+        }
+    }
+
+    #[test]
+    fn addition_is_exact() {
+        let a = FixedPoint::encode(1.25);
+        let b = FixedPoint::encode(-0.75);
+        assert_eq!(FixedPoint::decode(a + b), 0.5);
+    }
+
+    #[test]
+    fn truncation_error_at_most_one_ulp() {
+        // §VI-B: "Our truncation protocol causes a bit-error at the least
+        // significant bit position" — check the local op's error bound.
+        for i in 0..1000i64 {
+            let v = (i - 500) as f64 * 0.37;
+            let w = 0.77;
+            let prod = FixedPoint::encode(v) * FixedPoint::encode(w);
+            let got = FixedPoint::decode(FixedPoint::post_mul_truncate(prod));
+            let tol = (v.abs() + w.abs() + 2.0) * 0.5 / SCALE + 1.0 / SCALE;
+            assert!((got - v * w).abs() <= tol, "{v}*{w}: {got}");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Dense row-major matrices over a [`Ring`].
+//!
+//! This is the *local* linear algebra each party performs on its shares —
+//! `X_i ∘ w`, `X_i^T ∘ e`, the γ-products of `Π_DotP`'s offline phase, etc.
+//! The matmul here is the native fallback for the hot path; when an AOT HLO
+//! artifact for the shape exists, `runtime::Engine` executes the same
+//! computation through PJRT instead (see `runtime/`).
+
+use super::Ring;
+use std::ops::{Add, Index, IndexMut, Mul, Neg, Sub};
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Matrix<R> {
+    rows: usize,
+    cols: usize,
+    data: Vec<R>,
+}
+
+impl<R: Ring> Matrix<R> {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![R::ZERO; rows * cols] }
+    }
+
+    /// Build from a row-major vec (must have `rows*cols` elements).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<R>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix dims mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> R) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[R] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [R] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<R> {
+        self.data
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[R] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> Matrix<R> {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self ∘ rhs` over the ring (wrapping).
+    ///
+    /// ikj loop order so the inner loop streams both the row of `self` and
+    /// the row of `rhs` — this is the perf-relevant native path (see
+    /// EXPERIMENTS.md §Perf).
+    pub fn matmul(&self, rhs: &Matrix<R>) -> Matrix<R> {
+        assert_eq!(self.cols, rhs.rows, "matmul inner dims");
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise (Hadamard) product — the `⊗` of the NN backward pass.
+    pub fn hadamard(&self, rhs: &Matrix<R>) -> Matrix<R> {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self.data.iter().zip(&rhs.data).map(|(&a, &b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Map every element.
+    pub fn map(&self, f: impl Fn(R) -> R) -> Matrix<R> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Scale by a public ring constant (local op — linearity, §III-A.d).
+    pub fn scale(&self, c: R) -> Matrix<R> {
+        self.map(|v| c * v)
+    }
+}
+
+impl<R: Ring> Index<(usize, usize)> for Matrix<R> {
+    type Output = R;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &R {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl<R: Ring> IndexMut<(usize, usize)> for Matrix<R> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut R {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl<R: Ring> Add for &Matrix<R> {
+    type Output = Matrix<R>;
+    fn add(self, rhs: &Matrix<R>) -> Matrix<R> {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self.data.iter().zip(&rhs.data).map(|(&a, &b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl<R: Ring> Sub for &Matrix<R> {
+    type Output = Matrix<R>;
+    fn sub(self, rhs: &Matrix<R>) -> Matrix<R> {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self.data.iter().zip(&rhs.data).map(|(&a, &b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl<R: Ring> Neg for &Matrix<R> {
+    type Output = Matrix<R>;
+    fn neg(self) -> Matrix<R> {
+        self.map(|v| -v)
+    }
+}
+
+impl<R: Ring> Mul for &Matrix<R> {
+    type Output = Matrix<R>;
+    fn mul(self, rhs: &Matrix<R>) -> Matrix<R> {
+        self.matmul(rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::Z64;
+
+    fn m(rows: usize, cols: usize, vs: &[u64]) -> Matrix<Z64> {
+        Matrix::from_vec(rows, cols, vs.iter().map(|&v| Z64(v)).collect())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = m(2, 2, &[1, 2, 3, 4]);
+        let b = m(2, 2, &[5, 6, 7, 8]);
+        assert_eq!(a.matmul(&b), m(2, 2, &[19, 22, 43, 50]));
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = m(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let b = m(3, 1, &[7, 8, 9]);
+        assert_eq!(a.matmul(&b), m(2, 1, &[50, 122]));
+    }
+
+    #[test]
+    fn matmul_wraps() {
+        let a = m(1, 1, &[u64::MAX]);
+        let b = m(1, 1, &[2]);
+        assert_eq!(a.matmul(&b), m(1, 1, &[u64::MAX - 1]));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = m(2, 3, &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose()[(2, 1)], Z64(6));
+    }
+
+    #[test]
+    fn matmul_transpose_identity() {
+        // (A∘B)^T == B^T ∘ A^T
+        let a = m(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let b = m(3, 2, &[9, 8, 7, 6, 5, 4]);
+        assert_eq!(a.matmul(&b).transpose(), b.transpose().matmul(&a.transpose()));
+    }
+
+    #[test]
+    fn add_sub_hadamard() {
+        let a = m(2, 2, &[1, 2, 3, 4]);
+        let b = m(2, 2, &[10, 20, 30, 40]);
+        assert_eq!(&(&a + &b) - &b, a);
+        assert_eq!(a.hadamard(&b), m(2, 2, &[10, 40, 90, 160]));
+        assert_eq!(a.scale(Z64(3)), m(2, 2, &[3, 6, 9, 12]));
+    }
+
+    #[test]
+    fn distributivity_over_shares() {
+        // (A1+A2) ∘ B == A1∘B + A2∘B — the property that lets parties matmul
+        // additive shares locally.
+        let a1 = m(2, 2, &[1, 2, 3, 4]);
+        let a2 = m(2, 2, &[5, 6, 7, 8]);
+        let b = m(2, 2, &[2, 0, 1, 2]);
+        assert_eq!((&a1 + &a2).matmul(&b), &a1.matmul(&b) + &a2.matmul(&b));
+    }
+}

@@ -1,0 +1,423 @@
+//! Ring arithmetic substrate.
+//!
+//! Trident operates over the arithmetic ring `Z_{2^64}` and the boolean ring
+//! `Z_2` (paper §II). Both are exposed through the [`Ring`] trait so that the
+//! sharing semantics and most protocols (`Π_Sh`, `Π_Rec`, `Π_Mult`, …) can be
+//! written once and instantiated in either world — exactly the structure the
+//! paper uses ("The sharings work over both arithmetic (Z_{2^ℓ}) and boolean
+//! (Z_{2^1}) rings", §III-A).
+//!
+//! `Z64` is a transparent wrapper over `u64` with **wrapping** semantics: ring
+//! addition/multiplication are mod 2^64, which is what makes 64-bit CPUs (and
+//! the XLA u64 ops used by the L1/L2 artifacts) evaluate the ring natively —
+//! the "rings vs fields" argument of §I.
+
+pub mod fixed;
+pub mod matrix;
+
+pub use fixed::FixedPoint;
+pub use matrix::Matrix;
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Neg, Sub, SubAssign};
+
+/// A finite commutative ring with enough structure for Trident's sharings.
+///
+/// For `Z64` this is ordinary wrapping integer arithmetic; for [`Bit`] the
+/// addition is XOR and multiplication is AND (the paper's boolean world).
+pub trait Ring:
+    Copy
+    + Clone
+    + PartialEq
+    + Eq
+    + fmt::Debug
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + Default
+    + Send
+    + Sync
+    + 'static
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Size of one element on the wire, in bytes (ℓ/8 for Z_{2^ℓ}; bits are
+    /// metered as one byte on the wire but counted as 1 bit analytically).
+    const WIRE_BYTES: usize;
+    /// Number of bits of the ring (ℓ).
+    const BITS: usize;
+
+    /// Canonical little-endian wire encoding.
+    fn to_wire(&self, out: &mut Vec<u8>);
+    /// Inverse of [`Ring::to_wire`]. Returns the element and bytes consumed.
+    fn from_wire(buf: &[u8]) -> Option<(Self, usize)>;
+    /// Sample an element from a uniformly random 16-byte block (PRF output).
+    fn from_block(block: &[u8; 16]) -> Self;
+}
+
+/// An element of the arithmetic ring `Z_{2^64}`.
+///
+/// All arithmetic wraps mod 2^64. Decimal values are embedded via
+/// [`FixedPoint`] (§V: signed two's complement, low `f` bits fractional).
+#[derive(Copy, Clone, PartialEq, Eq, Default, Hash, PartialOrd, Ord)]
+#[repr(transparent)]
+pub struct Z64(pub u64);
+
+impl Z64 {
+    /// The most significant bit — the sign under the two's-complement
+    /// embedding; this is what `Π_BitExt` (secure comparison, §V-B) extracts.
+    #[inline]
+    pub fn msb(self) -> Bit {
+        Bit(((self.0 >> 63) & 1) == 1)
+    }
+
+    /// Arithmetic shift right by `d` preserving the embedded sign: the local
+    /// truncation operation of `Π_MultTr` (§V-A), identical to ABY3/SecureML.
+    #[inline]
+    pub fn truncate(self, d: u32) -> Z64 {
+        Z64(((self.0 as i64) >> d) as u64)
+    }
+
+    /// The low `d` bits (the `r_d` of the Π_MultTr correctness check).
+    #[inline]
+    pub fn low_bits(self, d: u32) -> Z64 {
+        if d >= 64 {
+            self
+        } else {
+            Z64(self.0 & ((1u64 << d) - 1))
+        }
+    }
+
+    /// Bit `i` of the canonical representative, as a boolean-ring element.
+    #[inline]
+    pub fn bit(self, i: usize) -> Bit {
+        Bit(((self.0 >> i) & 1) == 1)
+    }
+
+    /// Interpret as signed (the two's-complement embedding of §V).
+    #[inline]
+    pub fn as_i64(self) -> i64 {
+        self.0 as i64
+    }
+
+    #[inline]
+    pub fn wrapping_pow2(shift: u32) -> Z64 {
+        if shift >= 64 {
+            Z64(0)
+        } else {
+            Z64(1u64 << shift)
+        }
+    }
+}
+
+impl fmt::Debug for Z64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Z64({})", self.0)
+    }
+}
+
+impl fmt::Display for Z64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl Add for Z64 {
+    type Output = Z64;
+    #[inline]
+    fn add(self, rhs: Z64) -> Z64 {
+        Z64(self.0.wrapping_add(rhs.0))
+    }
+}
+
+impl Sub for Z64 {
+    type Output = Z64;
+    #[inline]
+    fn sub(self, rhs: Z64) -> Z64 {
+        Z64(self.0.wrapping_sub(rhs.0))
+    }
+}
+
+impl Mul for Z64 {
+    type Output = Z64;
+    #[inline]
+    fn mul(self, rhs: Z64) -> Z64 {
+        Z64(self.0.wrapping_mul(rhs.0))
+    }
+}
+
+impl Neg for Z64 {
+    type Output = Z64;
+    #[inline]
+    fn neg(self) -> Z64 {
+        Z64(self.0.wrapping_neg())
+    }
+}
+
+impl AddAssign for Z64 {
+    #[inline]
+    fn add_assign(&mut self, rhs: Z64) {
+        self.0 = self.0.wrapping_add(rhs.0);
+    }
+}
+
+impl SubAssign for Z64 {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Z64) {
+        self.0 = self.0.wrapping_sub(rhs.0);
+    }
+}
+
+impl From<u64> for Z64 {
+    #[inline]
+    fn from(v: u64) -> Z64 {
+        Z64(v)
+    }
+}
+
+impl From<i64> for Z64 {
+    #[inline]
+    fn from(v: i64) -> Z64 {
+        Z64(v as u64)
+    }
+}
+
+impl Ring for Z64 {
+    const ZERO: Z64 = Z64(0);
+    const ONE: Z64 = Z64(1);
+    const WIRE_BYTES: usize = 8;
+    const BITS: usize = 64;
+
+    #[inline]
+    fn to_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.0.to_le_bytes());
+    }
+
+    #[inline]
+    fn from_wire(buf: &[u8]) -> Option<(Z64, usize)> {
+        if buf.len() < 8 {
+            return None;
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&buf[..8]);
+        Some((Z64(u64::from_le_bytes(b)), 8))
+    }
+
+    #[inline]
+    fn from_block(block: &[u8; 16]) -> Z64 {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&block[..8]);
+        Z64(u64::from_le_bytes(b))
+    }
+}
+
+/// An element of the boolean ring `Z_2`: addition is XOR, multiplication AND.
+///
+/// Negation is the identity (−b ≡ b mod 2), which is why the generic
+/// subtraction-shaped protocol algebra specialises to XOR in the boolean
+/// world, matching e.g. `v = (m_v ⊕ λ_v,1) ⊕ (λ_v,2 ⊕ λ_v,3)` in `Π_B2G`.
+#[derive(Copy, Clone, PartialEq, Eq, Default, Hash, PartialOrd, Ord)]
+#[repr(transparent)]
+pub struct Bit(pub bool);
+
+impl Bit {
+    pub const FALSE: Bit = Bit(false);
+    pub const TRUE: Bit = Bit(true);
+
+    /// Lift into the arithmetic ring ("b over Z_{2^ℓ}" in Π_Bit2A).
+    #[inline]
+    pub fn to_z64(self) -> Z64 {
+        Z64(self.0 as u64)
+    }
+
+    #[inline]
+    pub fn not(self) -> Bit {
+        Bit(!self.0)
+    }
+
+    #[inline]
+    pub fn as_u8(self) -> u8 {
+        self.0 as u8
+    }
+}
+
+impl fmt::Debug for Bit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Bit({})", self.0 as u8)
+    }
+}
+
+impl Add for Bit {
+    type Output = Bit;
+    #[inline]
+    fn add(self, rhs: Bit) -> Bit {
+        Bit(self.0 ^ rhs.0)
+    }
+}
+
+impl Sub for Bit {
+    type Output = Bit;
+    #[inline]
+    fn sub(self, rhs: Bit) -> Bit {
+        Bit(self.0 ^ rhs.0)
+    }
+}
+
+impl Mul for Bit {
+    type Output = Bit;
+    #[inline]
+    fn mul(self, rhs: Bit) -> Bit {
+        Bit(self.0 & rhs.0)
+    }
+}
+
+impl Neg for Bit {
+    type Output = Bit;
+    #[inline]
+    fn neg(self) -> Bit {
+        self
+    }
+}
+
+impl AddAssign for Bit {
+    #[inline]
+    fn add_assign(&mut self, rhs: Bit) {
+        self.0 ^= rhs.0;
+    }
+}
+
+impl SubAssign for Bit {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Bit) {
+        self.0 ^= rhs.0;
+    }
+}
+
+impl Ring for Bit {
+    const ZERO: Bit = Bit(false);
+    const ONE: Bit = Bit(true);
+    // On the wire a bit travels as one byte; the *analytic* cost tables count
+    // it as 1 bit — net::Meter records both (see net::Meter::bits).
+    const WIRE_BYTES: usize = 1;
+    const BITS: usize = 1;
+
+    #[inline]
+    fn to_wire(&self, out: &mut Vec<u8>) {
+        out.push(self.0 as u8);
+    }
+
+    #[inline]
+    fn from_wire(buf: &[u8]) -> Option<(Bit, usize)> {
+        buf.first().map(|&b| (Bit(b != 0), 1))
+    }
+
+    #[inline]
+    fn from_block(block: &[u8; 16]) -> Bit {
+        Bit(block[0] & 1 == 1)
+    }
+}
+
+/// Dot product over any ring (the cleartext reference for `Π_DotP`).
+pub fn dot<R: Ring>(x: &[R], y: &[R]) -> R {
+    assert_eq!(x.len(), y.len(), "dot: length mismatch");
+    let mut acc = R::ZERO;
+    for (a, b) in x.iter().zip(y.iter()) {
+        acc += *a * *b;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn z64_wraps() {
+        assert_eq!(Z64(u64::MAX) + Z64(1), Z64(0));
+        assert_eq!(Z64(0) - Z64(1), Z64(u64::MAX));
+        assert_eq!(Z64(1u64 << 63) * Z64(2), Z64(0));
+        assert_eq!(-Z64(5), Z64(0) - Z64(5));
+    }
+
+    #[test]
+    fn z64_msb_is_sign() {
+        assert_eq!(Z64::from(-1i64).msb(), Bit(true));
+        assert_eq!(Z64::from(1i64).msb(), Bit(false));
+        assert_eq!(Z64(0).msb(), Bit(false));
+        assert_eq!(Z64(1u64 << 63).msb(), Bit(true));
+    }
+
+    #[test]
+    fn z64_truncate_signed() {
+        // truncation is an arithmetic shift: sign-preserving
+        let v = Z64::from(-(1i64 << 20));
+        assert_eq!(v.truncate(13).as_i64(), -(1i64 << 7));
+        let w = Z64::from(1i64 << 20);
+        assert_eq!(w.truncate(13).as_i64(), 1i64 << 7);
+    }
+
+    #[test]
+    fn z64_split_recombine() {
+        // r = 2^d * r^t + r_d  (the Π_MultTr correctness identity, Lemma D.1)
+        // holds exactly for non-negative representatives.
+        for raw in [0u64, 1, 8191, 8192, 123456789, (1u64 << 62) + 12345] {
+            let r = Z64(raw);
+            let d = 13u32;
+            let lhs = Z64::wrapping_pow2(d) * Z64(((r.0 as i64) >> d) as u64) + r.low_bits(d);
+            assert_eq!(lhs, r, "split identity failed for {raw}");
+        }
+    }
+
+    #[test]
+    fn bit_ring_axioms() {
+        for a in [Bit(false), Bit(true)] {
+            for b in [Bit(false), Bit(true)] {
+                assert_eq!(a + b, b + a);
+                assert_eq!(a * b, b * a);
+                assert_eq!(a + b, a - b); // characteristic 2
+                assert_eq!(-a, a);
+            }
+        }
+        assert_eq!(Bit(true) + Bit(true), Bit(false));
+        assert_eq!(Bit(true) * Bit(true), Bit(true));
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut buf = Vec::new();
+        Z64(0xDEADBEEF12345678).to_wire(&mut buf);
+        Bit(true).to_wire(&mut buf);
+        let (z, n) = Z64::from_wire(&buf).unwrap();
+        assert_eq!(z, Z64(0xDEADBEEF12345678));
+        let (b, _) = Bit::from_wire(&buf[n..]).unwrap();
+        assert_eq!(b, Bit(true));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<Z64> = (1..=10u64).map(Z64).collect();
+        let y: Vec<Z64> = (11..=20u64).map(Z64).collect();
+        let expect: u64 = (1..=10u64).zip(11..=20u64).map(|(a, b)| a * b).sum();
+        assert_eq!(dot(&x, &y), Z64(expect));
+    }
+
+    #[test]
+    fn bit_extraction_from_z64() {
+        let v = Z64(0b1011);
+        assert_eq!(v.bit(0), Bit(true));
+        assert_eq!(v.bit(1), Bit(true));
+        assert_eq!(v.bit(2), Bit(false));
+        assert_eq!(v.bit(3), Bit(true));
+        // recompose
+        let mut acc = 0u64;
+        for i in 0..64 {
+            acc |= (v.bit(i).0 as u64) << i;
+        }
+        assert_eq!(acc, v.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Execution engine for the party-local hot path.
+//!
+//! The heavy local work in `Π_DotP`/`Π_MultTr` (matrix form) is:
+//!
+//! * `masked_matmul`: `M' = Γ + Λz − Λx∘M_y − M_x∘Λy` (online), and
+//! * `gemm`: plain `A∘B` over `Z_{2^64}` (offline γ terms, `M_x∘M_y`).
+//!
+//! Both exist in two implementations:
+//! 1. **native** — fused wrapping-u64 loops in rust (always available, used
+//!    for odd shapes and the boolean world), and
+//! 2. **PJRT** — the AOT artifact compiled from the L2 JAX graph calling the
+//!    L1 Pallas kernel (`python/compile/`), loaded via the `xla` crate and
+//!    executed on the PJRT CPU client ([`pjrt`]).
+//!
+//! Dispatch ([`masked_matmul`], [`gemm`]) prefers the PJRT artifact when the
+//! engine is initialised and the element type is `Z64`; protocol code is
+//! oblivious to the choice.
+
+pub mod native;
+pub mod pjrt;
+
+use crate::ring::{Matrix, Ring};
+
+/// Plain ring matrix product (dispatching).
+pub fn gemm<R: Ring>(a: &Matrix<R>, b: &Matrix<R>) -> Matrix<R> {
+    if pjrt::prefer_pjrt() {
+        if let Some(out) = pjrt::try_gemm(a, b) {
+            return out;
+        }
+    }
+    native::gemm(a, b)
+}
+
+/// Fused online share computation
+/// `M' = −Λx∘M_y − M_x∘Λy + Γ + Λz` (dispatching).
+pub fn masked_matmul<R: Ring>(
+    lam_x: &Matrix<R>,
+    m_y: &Matrix<R>,
+    m_x: &Matrix<R>,
+    lam_y: &Matrix<R>,
+    gamma: &Matrix<R>,
+    lam_z: &Matrix<R>,
+) -> Matrix<R> {
+    if pjrt::prefer_pjrt() {
+        if let Some(out) = pjrt::try_masked_matmul(lam_x, m_y, m_x, lam_y, gamma, lam_z) {
+            return out;
+        }
+    }
+    native::masked_matmul(lam_x, m_y, m_x, lam_y, gamma, lam_z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::ring::Z64;
+
+    #[test]
+    fn dispatch_matches_native() {
+        let mut rng = Rng::seeded(50);
+        let a = Matrix::from_fn(7, 5, |_, _| rng.gen::<Z64>());
+        let b = Matrix::from_fn(5, 9, |_, _| rng.gen::<Z64>());
+        assert_eq!(gemm(&a, &b), a.matmul(&b));
+    }
+
+    #[test]
+    fn masked_matmul_formula() {
+        let mut rng = Rng::seeded(51);
+        let n = 6;
+        let mk = |rng: &mut Rng| Matrix::from_fn(n, n, |_, _| rng.gen::<Z64>());
+        let (lx, my, mx, ly, g, lz) =
+            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let got = masked_matmul(&lx, &my, &mx, &ly, &g, &lz);
+        let want = &(&g + &lz) - &(&lx.matmul(&my) + &mx.matmul(&ly));
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,86 @@
+//! Native (pure-rust) implementations of the hot-path kernels.
+//!
+//! The gemm is the ikj streaming loop from `ring::Matrix::matmul`; the
+//! masked matmul fuses the two products and the two additive terms in a
+//! single output pass to avoid materialising intermediates (see
+//! EXPERIMENTS.md §Perf for the before/after).
+
+use crate::ring::{Matrix, Ring};
+
+/// `A∘B` over the ring.
+pub fn gemm<R: Ring>(a: &Matrix<R>, b: &Matrix<R>) -> Matrix<R> {
+    a.matmul(b)
+}
+
+/// `−Λx∘M_y − M_x∘Λy + Γ + Λz` in one fused pass.
+pub fn masked_matmul<R: Ring>(
+    lam_x: &Matrix<R>,
+    m_y: &Matrix<R>,
+    m_x: &Matrix<R>,
+    lam_y: &Matrix<R>,
+    gamma: &Matrix<R>,
+    lam_z: &Matrix<R>,
+) -> Matrix<R> {
+    let (a, b) = (lam_x.rows(), lam_x.cols());
+    let c = m_y.cols();
+    assert_eq!(m_x.rows(), a);
+    assert_eq!(m_x.cols(), b);
+    assert_eq!(m_y.rows(), b);
+    assert_eq!(lam_y.rows(), b);
+    assert_eq!(lam_y.cols(), c);
+    assert_eq!(gamma.rows(), a);
+    assert_eq!(gamma.cols(), c);
+
+    // out = Γ + Λz
+    let mut out = gamma + lam_z;
+    // out -= Λx∘M_y + M_x∘Λy, accumulated in one ikj sweep over both terms
+    for i in 0..a {
+        let orow_start = i * c;
+        for k in 0..b {
+            let alx = lam_x.row(i)[k];
+            let amx = m_x.row(i)[k];
+            let my_row = m_y.row(k);
+            let ly_row = lam_y.row(k);
+            let orow = &mut out.data_mut()[orow_start..orow_start + c];
+            for ((o, &myv), &lyv) in orow.iter_mut().zip(my_row.iter()).zip(ly_row.iter()) {
+                *o -= alx * myv + amx * lyv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::ring::{Bit, Z64};
+
+    #[test]
+    fn fused_equals_composed_z64() {
+        let mut rng = Rng::seeded(52);
+        for (a, b, c) in [(1, 1, 1), (3, 4, 5), (8, 2, 8)] {
+            let lx = Matrix::from_fn(a, b, |_, _| rng.gen::<Z64>());
+            let mx = Matrix::from_fn(a, b, |_, _| rng.gen::<Z64>());
+            let my = Matrix::from_fn(b, c, |_, _| rng.gen::<Z64>());
+            let ly = Matrix::from_fn(b, c, |_, _| rng.gen::<Z64>());
+            let g = Matrix::from_fn(a, c, |_, _| rng.gen::<Z64>());
+            let lz = Matrix::from_fn(a, c, |_, _| rng.gen::<Z64>());
+            let got = masked_matmul(&lx, &my, &mx, &ly, &g, &lz);
+            let want = &(&g + &lz) - &(&lx.matmul(&my) + &mx.matmul(&ly));
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn fused_boolean_world() {
+        let mut rng = Rng::seeded(53);
+        let n = 5;
+        let mk = |rng: &mut Rng| Matrix::from_fn(n, n, |_, _| rng.gen::<Bit>());
+        let (lx, my, mx, ly, g, lz) =
+            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let got = masked_matmul(&lx, &my, &mx, &ly, &g, &lz);
+        let want = &(&g + &lz) - &(&lx.matmul(&my) + &mx.matmul(&ly));
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,312 @@
+//! Shared-key setup `F_setup` (Appendix A, Fig. 21) and zero-sharing `Π_Zero`
+//! (Fig. 22).
+//!
+//! `F_setup` establishes, among the four parties:
+//! * one key per **pair** `k_ij`,
+//! * one key per **triple** `k_ijk` (equivalently: per excluded party),
+//! * one key `k_P` shared by all.
+//!
+//! Every "parties in P \ {P_j} together sample …" step in the protocols is a
+//! draw from the triple key that excludes `P_j`. Correctness of the
+//! correlated draws relies on all holders of a key pulling the same number of
+//! elements in the same order — [`KeyChain`] keeps a per-key monotone counter
+//! and [`KeyChain::position`] lets tests assert the streams stayed in sync.
+
+use crate::crypto::{Key, Prf, Rng};
+use crate::net::{PartyId, ALL};
+use crate::ring::Ring;
+
+/// A key scope: who shares the key.
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub enum Scope {
+    /// `k_ij`, shared by the (unordered) pair.
+    Pair(PartyId, PartyId),
+    /// `k_ijk`, named by the single excluded party: `Excl(j)` is the key of
+    /// `P \ {P_j}`.
+    Excl(PartyId),
+    /// `k_P`, shared by everyone.
+    All,
+}
+
+impl Scope {
+    /// Canonicalize pair ordering.
+    fn canon(self) -> Scope {
+        match self {
+            Scope::Pair(a, b) if a.0 > b.0 => Scope::Pair(b, a),
+            s => s,
+        }
+    }
+
+    /// Does `p` hold this key?
+    pub fn holds(self, p: PartyId) -> bool {
+        match self.canon() {
+            Scope::Pair(a, b) => p == a || p == b,
+            Scope::Excl(j) => p != j,
+            Scope::All => true,
+        }
+    }
+}
+
+/// All scopes in canonical enumeration order (used by setup to derive keys).
+fn all_scopes() -> Vec<Scope> {
+    let mut v = Vec::new();
+    for i in 0..4u8 {
+        for j in (i + 1)..4 {
+            v.push(Scope::Pair(PartyId(i), PartyId(j)));
+        }
+    }
+    for j in ALL {
+        v.push(Scope::Excl(j));
+    }
+    v.push(Scope::All);
+    v
+}
+
+/// One party's view of the established keys: a PRF per held scope.
+pub struct KeyChain {
+    pub id: PartyId,
+    prfs: Vec<(Scope, Prf)>,
+}
+
+impl KeyChain {
+    fn prf(&mut self, scope: Scope) -> &mut Prf {
+        let scope = scope.canon();
+        assert!(scope.holds(self.id), "{} does not hold {scope:?}", self.id);
+        self.prfs
+            .iter_mut()
+            .find(|(s, _)| *s == scope)
+            .map(|(_, p)| p)
+            .expect("scope present")
+    }
+
+    /// Draw one ring element from the scope's shared stream.
+    pub fn sample<R: Ring>(&mut self, scope: Scope) -> R {
+        self.prf(scope).gen()
+    }
+
+    /// Draw a vector.
+    pub fn sample_vec<R: Ring>(&mut self, scope: Scope, n: usize) -> Vec<R> {
+        self.prf(scope).gen_vec(n)
+    }
+
+    /// Draw from the triple key excluding `j` ("parties in P\{P_j} sample").
+    pub fn sample_excl<R: Ring>(&mut self, j: PartyId) -> R {
+        self.sample(Scope::Excl(j))
+    }
+
+    pub fn sample_excl_vec<R: Ring>(&mut self, j: PartyId, n: usize) -> Vec<R> {
+        self.sample_vec(Scope::Excl(j), n)
+    }
+
+    /// Draw from the all-party key `k_P`.
+    pub fn sample_all<R: Ring>(&mut self) -> R {
+        self.sample(Scope::All)
+    }
+
+    /// Draw from the pairwise key with `other`.
+    pub fn sample_pair<R: Ring>(&mut self, other: PartyId) -> R {
+        self.sample(Scope::Pair(self.id, other))
+    }
+
+    pub fn sample_pair_vec<R: Ring>(&mut self, other: PartyId, n: usize) -> Vec<R> {
+        self.sample_vec(Scope::Pair(self.id, other), n)
+    }
+
+    /// Draw a κ-bit key (e.g. garbled-circuit offset R) from a scope.
+    pub fn sample_key(&mut self, scope: Scope) -> Key {
+        self.prf(scope).gen_key()
+    }
+
+    /// Stream position of a scope (sync sanity checks).
+    pub fn position(&mut self, scope: Scope) -> u128 {
+        self.prf(scope).position()
+    }
+}
+
+/// Trusted-dealer instantiation of `F_setup`: derive all scope keys from a
+/// master seed and hand each party its [`KeyChain`].
+///
+/// In deployment this is a one-time interactive setup (Fig. 21); the
+/// simulation derives it deterministically so experiments are reproducible.
+pub fn setup_keys(master_seed: u64) -> [KeyChain; 4] {
+    let mut rng = Rng::seeded(master_seed ^ SETUP_DOMAIN);
+    let scoped_keys: Vec<(Scope, Key)> = all_scopes().into_iter().map(|s| (s, rng.gen_key())).collect();
+    let mk = |id: PartyId| KeyChain {
+        id,
+        prfs: scoped_keys
+            .iter()
+            .filter(|(s, _)| s.holds(id))
+            .map(|(s, k)| (*s, Prf::new(*k)))
+            .collect(),
+    };
+    [mk(ALL[0]), mk(ALL[1]), mk(ALL[2]), mk(ALL[3])]
+}
+
+/// Domain separator ("trident\0") so setup seeds don't collide with other
+/// seeded RNG uses.
+const SETUP_DOMAIN: u64 = 0x7472_6964_656e_7400;
+
+/// Π_Zero output: the party's view of a fresh ⟨·⟩-sharing of zero.
+///
+/// `A + B + Γ = 0`, with `A` held by `{P0,P1}`, `B` by `{P0,P2}`,
+/// `Γ` by `{P0,P3}` (Fig. 22).
+#[derive(Clone, Debug, Default)]
+pub struct ZeroShare<R> {
+    pub a: Option<R>,
+    pub b: Option<R>,
+    pub gamma: Option<R>,
+}
+
+/// Non-interactive zero-sharing (Fig. 22). **Every** holder of a key draws
+/// from it (even when the drawn value does not enter its own share) so all
+/// streams stay aligned.
+pub fn zero_share<R: Ring>(keys: &mut KeyChain) -> ZeroShare<R> {
+    let id = keys.id;
+    // k1 = excl(P2), k2 = excl(P3), k3 = excl(P1) per Fig. 22's naming.
+    let f_k1: Option<R> = Scope::Excl(crate::net::P2).holds(id).then(|| keys.sample_excl(crate::net::P2));
+    let f_k2: Option<R> = Scope::Excl(crate::net::P3).holds(id).then(|| keys.sample_excl(crate::net::P3));
+    let f_k3: Option<R> = Scope::Excl(crate::net::P1).holds(id).then(|| keys.sample_excl(crate::net::P1));
+
+    let a = match (f_k2, f_k1) {
+        (Some(x2), Some(x1)) => Some(x2 - x1),
+        _ => None,
+    };
+    let b = match (f_k3, f_k2) {
+        (Some(x3), Some(x2)) => Some(x3 - x2),
+        _ => None,
+    };
+    let gamma = match (f_k1, f_k3) {
+        (Some(x1), Some(x3)) => Some(x1 - x3),
+        _ => None,
+    };
+    match id {
+        crate::net::P0 => ZeroShare { a, b, gamma },
+        crate::net::P1 => ZeroShare { a, b: None, gamma: None },
+        crate::net::P2 => ZeroShare { a: None, b, gamma: None },
+        crate::net::P3 => ZeroShare { a: None, b: None, gamma },
+        _ => unreachable!("invalid party id"),
+    }
+}
+
+/// Vector variant of [`zero_share`].
+pub fn zero_share_vec<R: Ring>(keys: &mut KeyChain, n: usize) -> Vec<ZeroShare<R>> {
+    (0..n).map(|_| zero_share(keys)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{P0, P1, P2, P3};
+    use crate::ring::{Bit, Z64};
+
+    #[test]
+    fn scopes_hold_correct_parties() {
+        assert!(Scope::Excl(P2).holds(P0));
+        assert!(!Scope::Excl(P2).holds(P2));
+        assert!(Scope::Pair(P1, P3).holds(P3));
+        assert!(!Scope::Pair(P1, P3).holds(P2));
+        assert!(Scope::All.holds(P0));
+        // pair canonicalization
+        assert!(Scope::Pair(P3, P1).holds(P1));
+    }
+
+    #[test]
+    fn correlated_draws_agree() {
+        let [mut k0, mut k1, mut k2, mut k3] = setup_keys(7);
+        // excl(P2): P0, P1, P3 agree; P2 cannot draw
+        let a: Z64 = k0.sample_excl(P2);
+        let b: Z64 = k1.sample_excl(P2);
+        let c: Z64 = k3.sample_excl(P2);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        // all-key agreement
+        let w: Z64 = k0.sample_all();
+        let x: Z64 = k1.sample_all();
+        let y: Z64 = k2.sample_all();
+        let z: Z64 = k3.sample_all();
+        assert_eq!(w, x);
+        assert_eq!(x, y);
+        assert_eq!(y, z);
+        // pairwise
+        let p: Z64 = k1.sample_pair(P2);
+        let q: Z64 = k2.sample_pair(P1);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_holder_cannot_draw() {
+        let [_, _, mut k2, _] = setup_keys(7);
+        let _: Z64 = k2.sample_excl(P2);
+    }
+
+    #[test]
+    fn different_seeds_different_keys() {
+        let [mut a0, ..] = setup_keys(1);
+        let [mut b0, ..] = setup_keys(2);
+        let x: Z64 = a0.sample_all();
+        let y: Z64 = b0.sample_all();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn zero_shares_sum_to_zero() {
+        let [mut k0, mut k1, mut k2, mut k3] = setup_keys(42);
+        for _ in 0..50 {
+            let z0 = zero_share::<Z64>(&mut k0);
+            let z1 = zero_share::<Z64>(&mut k1);
+            let z2 = zero_share::<Z64>(&mut k2);
+            let z3 = zero_share::<Z64>(&mut k3);
+            let a = z1.a.unwrap();
+            let b = z2.b.unwrap();
+            let g = z3.gamma.unwrap();
+            assert_eq!(a + b + g, Z64(0));
+            // P0 sees all three and they match
+            assert_eq!(z0.a.unwrap(), a);
+            assert_eq!(z0.b.unwrap(), b);
+            assert_eq!(z0.gamma.unwrap(), g);
+        }
+    }
+
+    #[test]
+    fn zero_shares_boolean_world() {
+        let [mut k0, mut k1, mut k2, mut k3] = setup_keys(43);
+        for _ in 0..32 {
+            let _ = zero_share::<Bit>(&mut k0);
+            let z1 = zero_share::<Bit>(&mut k1);
+            let z2 = zero_share::<Bit>(&mut k2);
+            let z3 = zero_share::<Bit>(&mut k3);
+            assert_eq!(z1.a.unwrap() + z2.b.unwrap() + z3.gamma.unwrap(), Bit(false));
+        }
+    }
+
+    #[test]
+    fn zero_shares_look_random() {
+        let [_, mut k1, ..] = setup_keys(44);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..64 {
+            seen.insert(zero_share::<Z64>(&mut k1).a.unwrap().0);
+        }
+        assert!(seen.len() > 60, "zero shares should be near-unique");
+    }
+
+    #[test]
+    fn streams_stay_in_position_sync() {
+        let [mut k0, mut k1, mut k2, mut k3] = setup_keys(45);
+        for _ in 0..10 {
+            let _ = zero_share::<Z64>(&mut k0);
+            let _ = zero_share::<Z64>(&mut k1);
+            let _ = zero_share::<Z64>(&mut k2);
+            let _ = zero_share::<Z64>(&mut k3);
+        }
+        for j in [P1, P2, P3] {
+            let mut positions = Vec::new();
+            for k in [&mut k0, &mut k1, &mut k2, &mut k3] {
+                if Scope::Excl(j).holds(k.id) {
+                    positions.push(k.position(Scope::Excl(j)));
+                }
+            }
+            assert!(positions.windows(2).all(|w| w[0] == w[1]), "desync on excl({j})");
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Matrix-valued `[[·]]`-shares — the ML hot-path representation.
+//!
+//! A `[[X]]` for a matrix `X` is elementwise `[[·]]`-sharing; storing it as a
+//! struct-of-matrices (`m`, `λ_next`, `λ_prev` / `λ_1..3`) keeps the party's
+//! local work as dense `ring::Matrix` ops, which is exactly the shape the
+//! L1/L2 artifacts consume (`runtime::MaskedMatmul`).
+
+use crate::net::PartyId;
+use crate::ring::{Matrix, Ring};
+use crate::sharing::MShare;
+
+/// Matrix-valued `[[·]]`-share (see [`MShare`] for the scalar semantics).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MMat<R> {
+    Helper { lam: [Matrix<R>; 3] },
+    Eval { m: Matrix<R>, lam_next: Matrix<R>, lam_prev: Matrix<R> },
+}
+
+impl<R: Ring> MMat<R> {
+    pub fn zero(me: PartyId, rows: usize, cols: usize) -> Self {
+        if me.is_evaluator() {
+            MMat::Eval {
+                m: Matrix::zeros(rows, cols),
+                lam_next: Matrix::zeros(rows, cols),
+                lam_prev: Matrix::zeros(rows, cols),
+            }
+        } else {
+            MMat::Helper {
+                lam: [
+                    Matrix::zeros(rows, cols),
+                    Matrix::zeros(rows, cols),
+                    Matrix::zeros(rows, cols),
+                ],
+            }
+        }
+    }
+
+    /// Share of a public matrix: `λ = 0`, `m = c`.
+    pub fn of_public(me: PartyId, c: Matrix<R>) -> Self {
+        let (rows, cols) = (c.rows(), c.cols());
+        if me.is_evaluator() {
+            MMat::Eval {
+                m: c,
+                lam_next: Matrix::zeros(rows, cols),
+                lam_prev: Matrix::zeros(rows, cols),
+            }
+        } else {
+            MMat::Helper {
+                lam: [
+                    Matrix::zeros(rows, cols),
+                    Matrix::zeros(rows, cols),
+                    Matrix::zeros(rows, cols),
+                ],
+            }
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            MMat::Helper { lam } => lam[0].rows(),
+            MMat::Eval { m, .. } => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            MMat::Helper { lam } => lam[0].cols(),
+            MMat::Eval { m, .. } => m.cols(),
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    /// The masked matrix `m_X` (evaluators only).
+    pub fn m(&self) -> &Matrix<R> {
+        match self {
+            MMat::Eval { m, .. } => m,
+            MMat::Helper { .. } => panic!("P0 holds no m"),
+        }
+    }
+
+    /// Mask component matrix `Λ_j` if held.
+    pub fn lam(&self, me: PartyId, j: u8) -> Option<&Matrix<R>> {
+        match self {
+            MMat::Helper { lam } => Some(&lam[(j - 1) as usize]),
+            MMat::Eval { lam_next, lam_prev, .. } => {
+                if me.next_evaluator().0 == j {
+                    Some(lam_next)
+                } else if me.prev_evaluator().0 == j {
+                    Some(lam_prev)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Extract the scalar share at (r, c).
+    pub fn at(&self, r: usize, c: usize) -> MShare<R> {
+        match self {
+            MMat::Helper { lam } => {
+                MShare::Helper { lam: [lam[0][(r, c)], lam[1][(r, c)], lam[2][(r, c)]] }
+            }
+            MMat::Eval { m, lam_next, lam_prev } => MShare::Eval {
+                m: m[(r, c)],
+                lam_next: lam_next[(r, c)],
+                lam_prev: lam_prev[(r, c)],
+            },
+        }
+    }
+
+    /// Build from per-element scalar shares (row-major).
+    pub fn from_shares(rows: usize, cols: usize, shares: &[MShare<R>]) -> Self {
+        assert_eq!(shares.len(), rows * cols);
+        match shares[0] {
+            MShare::Helper { .. } => {
+                let comp = |k: usize| {
+                    Matrix::from_vec(
+                        rows,
+                        cols,
+                        shares
+                            .iter()
+                            .map(|s| match s {
+                                MShare::Helper { lam } => lam[k],
+                                _ => panic!("mixed shares"),
+                            })
+                            .collect(),
+                    )
+                };
+                MMat::Helper { lam: [comp(0), comp(1), comp(2)] }
+            }
+            MShare::Eval { .. } => {
+                let pick = |f: fn(&MShare<R>) -> R| {
+                    Matrix::from_vec(rows, cols, shares.iter().map(f).collect())
+                };
+                MMat::Eval {
+                    m: pick(|s| match s {
+                        MShare::Eval { m, .. } => *m,
+                        _ => panic!("mixed shares"),
+                    }),
+                    lam_next: pick(|s| match s {
+                        MShare::Eval { lam_next, .. } => *lam_next,
+                        _ => panic!("mixed shares"),
+                    }),
+                    lam_prev: pick(|s| match s {
+                        MShare::Eval { lam_prev, .. } => *lam_prev,
+                        _ => panic!("mixed shares"),
+                    }),
+                }
+            }
+        }
+    }
+
+    /// Row-major vector of scalar shares.
+    pub fn to_shares(&self) -> Vec<MShare<R>> {
+        let (rows, cols) = self.dims();
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                out.push(self.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Transpose all components.
+    pub fn transpose(&self) -> Self {
+        match self {
+            MMat::Helper { lam } => MMat::Helper {
+                lam: [lam[0].transpose(), lam[1].transpose(), lam[2].transpose()],
+            },
+            MMat::Eval { m, lam_next, lam_prev } => MMat::Eval {
+                m: m.transpose(),
+                lam_next: lam_next.transpose(),
+                lam_prev: lam_prev.transpose(),
+            },
+        }
+    }
+
+    /// Add a public matrix (only `m` moves).
+    pub fn add_public(&self, c: &Matrix<R>) -> Self {
+        match self {
+            MMat::Eval { m, lam_next, lam_prev } => MMat::Eval {
+                m: m + c,
+                lam_next: lam_next.clone(),
+                lam_prev: lam_prev.clone(),
+            },
+            h @ MMat::Helper { .. } => h.clone(),
+        }
+    }
+
+    /// Multiply by a public ring scalar.
+    pub fn scale(&self, c: R) -> Self {
+        self.map(|x| x.scale(c))
+    }
+
+    fn map(&self, f: impl Fn(&Matrix<R>) -> Matrix<R>) -> Self {
+        match self {
+            MMat::Helper { lam } => MMat::Helper { lam: [f(&lam[0]), f(&lam[1]), f(&lam[2])] },
+            MMat::Eval { m, lam_next, lam_prev } => {
+                MMat::Eval { m: f(m), lam_next: f(lam_next), lam_prev: f(lam_prev) }
+            }
+        }
+    }
+
+    fn zip(&self, o: &Self, f: impl Fn(&Matrix<R>, &Matrix<R>) -> Matrix<R>) -> Self {
+        match (self, o) {
+            (MMat::Helper { lam: a }, MMat::Helper { lam: b }) => {
+                MMat::Helper { lam: [f(&a[0], &b[0]), f(&a[1], &b[1]), f(&a[2], &b[2])] }
+            }
+            (
+                MMat::Eval { m: ma, lam_next: na, lam_prev: pa },
+                MMat::Eval { m: mb, lam_next: nb, lam_prev: pb },
+            ) => MMat::Eval { m: f(ma, mb), lam_next: f(na, nb), lam_prev: f(pa, pb) },
+            _ => panic!("mixing helper and evaluator shares"),
+        }
+    }
+}
+
+impl<R: Ring> std::ops::Add for &MMat<R> {
+    type Output = MMat<R>;
+    fn add(self, rhs: Self) -> MMat<R> {
+        self.zip(rhs, |a, b| a + b)
+    }
+}
+
+impl<R: Ring> std::ops::Sub for &MMat<R> {
+    type Output = MMat<R>;
+    fn sub(self, rhs: Self) -> MMat<R> {
+        self.zip(rhs, |a, b| a - b)
+    }
+}
+
+/// Test helper: open a matrix sharing from all four views.
+pub fn open_mat<R: Ring>(shares: &[MMat<R>; 4]) -> Matrix<R> {
+    let (rows, cols) = shares[0].dims();
+    let mut out = Matrix::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            out[(r, c)] = super::open(&[
+                shares[0].at(r, c),
+                shares[1].at(r, c),
+                shares[2].at(r, c),
+                shares[3].at(r, c),
+            ]);
+        }
+    }
+    out
+}
+
+/// Test helper: deal a matrix sharing with PRG masks.
+pub fn deal_mat<R: Ring>(x: &Matrix<R>, rng: &mut crate::crypto::Rng) -> [MMat<R>; 4] {
+    let (rows, cols) = (x.rows(), x.cols());
+    let n = rows * cols;
+    let shares: Vec<[MShare<R>; 4]> = x
+        .data()
+        .iter()
+        .map(|&v| super::deal(v, [rng.gen(), rng.gen(), rng.gen()]))
+        .collect();
+    let pick = |i: usize| {
+        MMat::from_shares(rows, cols, &shares.iter().map(|s| s[i]).collect::<Vec<_>>()[..n])
+    };
+    [pick(0), pick(1), pick(2), pick(3)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::ring::Z64;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<Z64> {
+        Matrix::from_fn(rows, cols, |_, _| rng.gen())
+    }
+
+    #[test]
+    fn deal_open_mat_roundtrip() {
+        let mut rng = Rng::seeded(5);
+        let x = rand_mat(&mut rng, 3, 4);
+        let shares = deal_mat(&x, &mut rng);
+        assert_eq!(open_mat(&shares), x);
+    }
+
+    #[test]
+    fn mat_linearity() {
+        let mut rng = Rng::seeded(6);
+        let x = rand_mat(&mut rng, 2, 3);
+        let y = rand_mat(&mut rng, 2, 3);
+        let sx = deal_mat(&x, &mut rng);
+        let sy = deal_mat(&y, &mut rng);
+        let sum: Vec<MMat<Z64>> = (0..4).map(|i| &sx[i] + &sy[i]).collect();
+        assert_eq!(open_mat(&[sum[0].clone(), sum[1].clone(), sum[2].clone(), sum[3].clone()]), &x + &y);
+        let sc: Vec<MMat<Z64>> = (0..4).map(|i| sx[i].scale(Z64(7))).collect();
+        assert_eq!(
+            open_mat(&[sc[0].clone(), sc[1].clone(), sc[2].clone(), sc[3].clone()]),
+            x.scale(Z64(7))
+        );
+    }
+
+    #[test]
+    fn mat_transpose_and_scalar_access() {
+        let mut rng = Rng::seeded(7);
+        let x = rand_mat(&mut rng, 2, 5);
+        let shares = deal_mat(&x, &mut rng);
+        let t: Vec<MMat<Z64>> = shares.iter().map(|s| s.transpose()).collect();
+        assert_eq!(
+            open_mat(&[t[0].clone(), t[1].clone(), t[2].clone(), t[3].clone()]),
+            x.transpose()
+        );
+    }
+
+    #[test]
+    fn shares_roundtrip_scalar_vector() {
+        let mut rng = Rng::seeded(8);
+        let x = rand_mat(&mut rng, 3, 3);
+        let shares = deal_mat(&x, &mut rng);
+        for s in &shares {
+            let back = MMat::from_shares(3, 3, &s.to_shares());
+            assert_eq!(&back, s);
+        }
+    }
+
+    #[test]
+    fn add_public_only_moves_m() {
+        let mut rng = Rng::seeded(9);
+        let x = rand_mat(&mut rng, 2, 2);
+        let c = rand_mat(&mut rng, 2, 2);
+        let shares = deal_mat(&x, &mut rng);
+        let added: Vec<MMat<Z64>> = shares.iter().map(|s| s.add_public(&c)).collect();
+        assert_eq!(
+            open_mat(&[added[0].clone(), added[1].clone(), added[2].clone(), added[3].clone()]),
+            &x + &c
+        );
+    }
+}

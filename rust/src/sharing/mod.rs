@@ -1,0 +1,334 @@
+//! Trident's three sharing semantics (paper §III-A), over either ring.
+//!
+//! * `[·]`-sharing — plain 3-way additive sharing among the evaluators
+//!   `P1,P2,P3` (a bare ring element per party; no type needed).
+//! * [`RShare`] — `⟨·⟩`-sharing: replicated 3-way sharing where each
+//!   evaluator holds **two** of the three additive components:
+//!   `⟨v⟩_{P1} = (v2,v3)`, `⟨v⟩_{P2} = (v3,v1)`, `⟨v⟩_{P3} = (v1,v2)`.
+//! * [`MShare`] — `[[·]]`-sharing, the protocol's workhorse: a public-ish
+//!   masked value `m_v = v + λ_v` known to the evaluators, with the mask
+//!   `λ_v` ⟨·⟩-shared among them, and `P0` holding all three mask components
+//!   `λ_{v,1}, λ_{v,2}, λ_{v,3}` in clear.
+//!
+//! Component bookkeeping follows the cyclic convention: evaluator `P_i`
+//! holds components indexed `next(i)` and `prev(i)` of `{1,2,3}`
+//! (`P1 → (2,3)`, `P2 → (3,1)`, `P3 → (1,2)`).
+//!
+//! All sharings are linear (§III-A.d): addition, subtraction, negation and
+//! multiplication by public constants are local, as is adding a public
+//! constant to a `[[·]]`-share (only `m_v` moves).
+
+pub mod mat;
+
+pub use mat::MMat;
+
+use crate::net::PartyId;
+use crate::ring::Ring;
+
+/// `⟨·⟩`-share: the party's view of a replicated additive sharing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RShare<R> {
+    /// P0's view when it knows all components (e.g. after `Π_aSh`).
+    Helper { v: [R; 3] },
+    /// Evaluator view: components `v_{next(i)}` and `v_{prev(i)}`.
+    Eval { next: R, prev: R },
+}
+
+impl<R: Ring> RShare<R> {
+    /// The component `v_j` if this view holds it. `j ∈ {1,2,3}`.
+    pub fn component(&self, me: PartyId, j: u8) -> Option<R> {
+        debug_assert!((1..=3).contains(&j));
+        match self {
+            RShare::Helper { v } => Some(v[(j - 1) as usize]),
+            RShare::Eval { next, prev } => {
+                if me.next_evaluator().0 == j {
+                    Some(*next)
+                } else if me.prev_evaluator().0 == j {
+                    Some(*prev)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Convert `⟨v⟩` into `[[v]]` locally by setting `m_v = 0` and
+    /// `⟨λ_v⟩ = −⟨v⟩` (used by `Π_Bit2A`, `Π_MultTr`, `Π_BitInj`).
+    pub fn into_mshare(self) -> MShare<R> {
+        match self {
+            RShare::Helper { v } => MShare::Helper { lam: [-v[0], -v[1], -v[2]] },
+            RShare::Eval { next, prev } => {
+                MShare::Eval { m: R::ZERO, lam_next: -next, lam_prev: -prev }
+            }
+        }
+    }
+}
+
+/// `[[·]]`-share: the party's view of a masked sharing (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MShare<R> {
+    /// P0: all three mask components `(λ_{v,1}, λ_{v,2}, λ_{v,3})`.
+    Helper { lam: [R; 3] },
+    /// Evaluator `P_i`: `m_v` plus `λ_{v,next(i)}`, `λ_{v,prev(i)}`.
+    Eval { m: R, lam_next: R, lam_prev: R },
+}
+
+impl<R: Ring> MShare<R> {
+    /// The all-zero share of the public constant 0.
+    pub fn zero(me: PartyId) -> Self {
+        Self::of_public(me, R::ZERO)
+    }
+
+    /// Non-interactive share of a public constant: `λ = 0`, `m = c`
+    /// (the `Π_vSh(P1,P2,P3, v)` degenerate case of §IV-B.a).
+    pub fn of_public(me: PartyId, c: R) -> Self {
+        if me.is_evaluator() {
+            MShare::Eval { m: c, lam_next: R::ZERO, lam_prev: R::ZERO }
+        } else {
+            MShare::Helper { lam: [R::ZERO; 3] }
+        }
+    }
+
+    /// The masked value `m_v` (evaluators only).
+    pub fn m(&self) -> R {
+        match self {
+            MShare::Eval { m, .. } => *m,
+            MShare::Helper { .. } => panic!("P0 holds no m_v"),
+        }
+    }
+
+    /// Mask component `λ_{v,j}` if held.
+    pub fn lam(&self, me: PartyId, j: u8) -> Option<R> {
+        debug_assert!((1..=3).contains(&j));
+        match self {
+            MShare::Helper { lam } => Some(lam[(j - 1) as usize]),
+            MShare::Eval { lam_next, lam_prev, .. } => {
+                if me.next_evaluator().0 == j {
+                    Some(*lam_next)
+                } else if me.prev_evaluator().0 == j {
+                    Some(*lam_prev)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Add a public constant: `[[v + c]]` (only `m` moves; P0 unchanged).
+    pub fn add_const(&self, c: R) -> Self {
+        match *self {
+            MShare::Eval { m, lam_next, lam_prev } => {
+                MShare::Eval { m: m + c, lam_next, lam_prev }
+            }
+            h @ MShare::Helper { .. } => h,
+        }
+    }
+
+    /// Multiply by a public constant (all components scale).
+    pub fn scale(&self, c: R) -> Self {
+        self.map(|v| c * v)
+    }
+
+    fn map(&self, f: impl Fn(R) -> R) -> Self {
+        match *self {
+            MShare::Helper { lam } => MShare::Helper { lam: [f(lam[0]), f(lam[1]), f(lam[2])] },
+            MShare::Eval { m, lam_next, lam_prev } => {
+                MShare::Eval { m: f(m), lam_next: f(lam_next), lam_prev: f(lam_prev) }
+            }
+        }
+    }
+
+    fn zip(&self, o: &Self, f: impl Fn(R, R) -> R) -> Self {
+        match (*self, *o) {
+            (MShare::Helper { lam: a }, MShare::Helper { lam: b }) => {
+                MShare::Helper { lam: [f(a[0], b[0]), f(a[1], b[1]), f(a[2], b[2])] }
+            }
+            (
+                MShare::Eval { m: ma, lam_next: na, lam_prev: pa },
+                MShare::Eval { m: mb, lam_next: nb, lam_prev: pb },
+            ) => MShare::Eval { m: f(ma, mb), lam_next: f(na, nb), lam_prev: f(pa, pb) },
+            _ => panic!("mixing helper and evaluator shares"),
+        }
+    }
+}
+
+impl<R: Ring> std::ops::Add for MShare<R> {
+    type Output = MShare<R>;
+    fn add(self, rhs: Self) -> Self {
+        self.zip(&rhs, |a, b| a + b)
+    }
+}
+
+impl<R: Ring> std::ops::Sub for MShare<R> {
+    type Output = MShare<R>;
+    fn sub(self, rhs: Self) -> Self {
+        self.zip(&rhs, |a, b| a - b)
+    }
+}
+
+impl<R: Ring> std::ops::Neg for MShare<R> {
+    type Output = MShare<R>;
+    fn neg(self) -> Self {
+        self.map(|v| -v)
+    }
+}
+
+/// Test/debug helper: open a `[[·]]`-sharing given all four views.
+/// `v = m_v − λ_{v,1} − λ_{v,2} − λ_{v,3}`.
+pub fn open<R: Ring>(shares: &[MShare<R>; 4]) -> R {
+    let lam = match shares[0] {
+        MShare::Helper { lam } => lam,
+        _ => panic!("shares[0] must be P0's"),
+    };
+    // cross-check evaluator mask components against P0's
+    for (i, s) in shares.iter().enumerate().skip(1) {
+        let me = PartyId(i as u8);
+        for j in 1..=3u8 {
+            if let Some(l) = s.lam(me, j) {
+                assert_eq!(l, lam[(j - 1) as usize], "λ_{j} mismatch at P{i}");
+            }
+        }
+    }
+    let m = shares[1].m();
+    assert_eq!(m, shares[2].m(), "m mismatch P1/P2");
+    assert_eq!(m, shares[3].m(), "m mismatch P1/P3");
+    m - lam[0] - lam[1] - lam[2]
+}
+
+/// Test/debug helper: deal a `[[·]]`-sharing of `v` from explicit masks.
+pub fn deal<R: Ring>(v: R, lam: [R; 3]) -> [MShare<R>; 4] {
+    let m = v + lam[0] + lam[1] + lam[2];
+    [
+        MShare::Helper { lam },
+        MShare::Eval { m, lam_next: lam[1], lam_prev: lam[2] }, // P1: λ2, λ3
+        MShare::Eval { m, lam_next: lam[2], lam_prev: lam[0] }, // P2: λ3, λ1
+        MShare::Eval { m, lam_next: lam[0], lam_prev: lam[1] }, // P3: λ1, λ2
+    ]
+}
+
+/// Test/debug helper: open a `⟨·⟩`-sharing from the three evaluator views.
+pub fn open_rss<R: Ring>(shares: &[RShare<R>; 3]) -> R {
+    // P1 = (v2,v3), P2 = (v3,v1), P3 = (v1,v2); cross-check replicas.
+    let (v2, v3a) = match shares[0] {
+        RShare::Eval { next, prev } => (next, prev),
+        _ => panic!("evaluator share expected"),
+    };
+    let (v3b, v1a) = match shares[1] {
+        RShare::Eval { next, prev } => (next, prev),
+        _ => panic!("evaluator share expected"),
+    };
+    let (v1b, v2b) = match shares[2] {
+        RShare::Eval { next, prev } => (next, prev),
+        _ => panic!("evaluator share expected"),
+    };
+    assert_eq!(v3a, v3b, "v3 replica mismatch");
+    assert_eq!(v1a, v1b, "v1 replica mismatch");
+    assert_eq!(v2, v2b, "v2 replica mismatch");
+    v1a + v2 + v3a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Rng;
+    use crate::net::{P1, P2, P3};
+    use crate::ring::{Bit, Z64};
+
+    #[test]
+    fn deal_open_roundtrip() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..20 {
+            let v: Z64 = rng.gen();
+            let lam = [rng.gen(), rng.gen(), rng.gen()];
+            assert_eq!(open(&deal(v, lam)), v);
+        }
+    }
+
+    #[test]
+    fn linearity_add_sub_scale() {
+        let mut rng = Rng::seeded(2);
+        let x: Z64 = rng.gen();
+        let y: Z64 = rng.gen();
+        let c: Z64 = rng.gen();
+        let lx = [rng.gen(), rng.gen(), rng.gen()];
+        let ly = [rng.gen(), rng.gen(), rng.gen()];
+        let sx = deal(x, lx);
+        let sy = deal(y, ly);
+        let sum: Vec<_> = (0..4).map(|i| sx[i] + sy[i]).collect();
+        assert_eq!(open(&[sum[0], sum[1], sum[2], sum[3]]), x + y);
+        let dif: Vec<_> = (0..4).map(|i| sx[i] - sy[i]).collect();
+        assert_eq!(open(&[dif[0], dif[1], dif[2], dif[3]]), x - y);
+        let sc: Vec<_> = (0..4).map(|i| sx[i].scale(c)).collect();
+        assert_eq!(open(&[sc[0], sc[1], sc[2], sc[3]]), c * x);
+        let ac: Vec<_> = (0..4).map(|i| sx[i].add_const(c)).collect();
+        assert_eq!(open(&[ac[0], ac[1], ac[2], ac[3]]), x + c);
+        let neg: Vec<_> = (0..4).map(|i| -sx[i]).collect();
+        assert_eq!(open(&[neg[0], neg[1], neg[2], neg[3]]), -x);
+    }
+
+    #[test]
+    fn boolean_world_linearity() {
+        // in Z_2 the same algebra is XOR
+        let lam = [Bit(true), Bit(false), Bit(true)];
+        let s = deal(Bit(true), lam);
+        assert_eq!(open(&s), Bit(true));
+        let flipped: Vec<_> = (0..4).map(|i| s[i].add_const(Bit(true))).collect();
+        assert_eq!(open(&[flipped[0], flipped[1], flipped[2], flipped[3]]), Bit(false));
+    }
+
+    #[test]
+    fn lam_component_visibility() {
+        let s = deal(Z64(5), [Z64(10), Z64(20), Z64(30)]);
+        // P1 holds λ2, λ3 but not λ1
+        assert_eq!(s[1].lam(P1, 2), Some(Z64(20)));
+        assert_eq!(s[1].lam(P1, 3), Some(Z64(30)));
+        assert_eq!(s[1].lam(P1, 1), None);
+        // P2 holds λ3, λ1
+        assert_eq!(s[2].lam(P2, 3), Some(Z64(30)));
+        assert_eq!(s[2].lam(P2, 1), Some(Z64(10)));
+        assert_eq!(s[2].lam(P2, 2), None);
+        // P3 holds λ1, λ2
+        assert_eq!(s[3].lam(P3, 1), Some(Z64(10)));
+        assert_eq!(s[3].lam(P3, 2), Some(Z64(20)));
+        assert_eq!(s[3].lam(P3, 3), None);
+        // P0 holds all
+        for j in 1..=3 {
+            assert!(s[0].lam(crate::net::P0, j).is_some());
+        }
+    }
+
+    #[test]
+    fn rss_open_and_convert() {
+        let v = [Z64(100), Z64(200), Z64(300)];
+        let shares = [
+            RShare::Eval { next: v[1], prev: v[2] }, // P1: (v2, v3)
+            RShare::Eval { next: v[2], prev: v[0] }, // P2: (v3, v1)
+            RShare::Eval { next: v[0], prev: v[1] }, // P3: (v1, v2)
+        ];
+        assert_eq!(open_rss(&shares), Z64(600));
+        // ⟨v⟩ → [[v]] with m=0, λ=−v opens back to v
+        let m0 = RShare::Helper { v }.into_mshare();
+        let m1 = shares[0].into_mshare();
+        let m2 = shares[1].into_mshare();
+        let m3 = shares[2].into_mshare();
+        assert_eq!(open(&[m0, m1, m2, m3]), Z64(600));
+    }
+
+    #[test]
+    fn rss_component_access() {
+        let sh = RShare::Eval { next: Z64(7), prev: Z64(9) };
+        assert_eq!(sh.component(P2, 3), Some(Z64(7)));
+        assert_eq!(sh.component(P2, 1), Some(Z64(9)));
+        assert_eq!(sh.component(P2, 2), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "m mismatch")]
+    fn open_detects_inconsistent_m() {
+        let mut s = deal(Z64(5), [Z64(1), Z64(2), Z64(3)]);
+        if let MShare::Eval { ref mut m, .. } = s[2] {
+            *m += Z64(1);
+        }
+        let _ = open(&s);
+    }
+}

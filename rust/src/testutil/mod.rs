@@ -1,0 +1,123 @@
+//! Test utilities: protocol-level helpers and a miniature property-testing
+//! harness (the image has no `proptest`; [`forall`] covers the
+//! generate-check-shrink loop we need for coordinator invariants).
+
+use crate::crypto::Rng;
+use crate::net::{Abort, PartyId};
+use crate::proto::{sharing::share_many_n, Ctx};
+use crate::ring::{Matrix, Ring, Z64};
+use crate::sharing::MMat;
+
+/// Share a matrix from `dealer` inside a party program.
+pub fn share_mat(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    m: &Matrix<Z64>,
+) -> Result<MMat<Z64>, Abort> {
+    let vs = (ctx.id() == dealer).then(|| m.data().to_vec());
+    let shares = share_many_n(ctx, dealer, vs.as_deref(), m.rows() * m.cols())?;
+    Ok(MMat::from_shares(m.rows(), m.cols(), &shares))
+}
+
+/// Share a generic ring matrix from `dealer`.
+pub fn share_mat_r<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    m: &Matrix<R>,
+) -> Result<MMat<R>, Abort> {
+    let vs = (ctx.id() == dealer).then(|| m.data().to_vec());
+    let shares = share_many_n(ctx, dealer, vs.as_deref(), m.rows() * m.cols())?;
+    Ok(MMat::from_shares(m.rows(), m.cols(), &shares))
+}
+
+/// Mini property-test driver: run `check` on `iters` random inputs drawn by
+/// `gen`; on failure, greedily shrink with `shrink` and report the smallest
+/// failing case.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    iters: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seeded(seed);
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if let Err(first_err) = check(&case) {
+            // greedy shrink
+            let mut cur = case.clone();
+            let mut err = first_err;
+            'outer: loop {
+                for cand in shrink(&cur) {
+                    if let Err(e) = check(&cand) {
+                        cur = cand;
+                        err = e;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!("property failed (iter {i})\n  minimal case: {cur:?}\n  error: {err}");
+        }
+    }
+}
+
+/// Common shrinker for vectors: halves and single-element removals.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        let mut less = v.to_vec();
+        less.pop();
+        out.push(less);
+    }
+    out
+}
+
+/// Common shrinker for u64 values: toward zero.
+pub fn shrink_u64(v: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if v > 0 {
+        out.push(v / 2);
+        out.push(v - 1);
+        if v > 0xFF {
+            out.push(v & 0xFF);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_on_true_property() {
+        forall(
+            1,
+            100,
+            |rng| rng.next_u64(),
+            |&v| shrink_u64(v),
+            |&v| {
+                if v.wrapping_add(0) == v {
+                    Ok(())
+                } else {
+                    Err("identity".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_shrinks_to_minimal() {
+        forall(
+            2,
+            100,
+            |rng| rng.below(1000),
+            |&v| shrink_u64(v),
+            |&v| if v < 500 { Ok(()) } else { Err(format!("{v} too big")) },
+        );
+    }
+}

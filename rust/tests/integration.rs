@@ -1,0 +1,375 @@
+//! Cross-module integration + property tests: whole-pipeline flows,
+//! coordinator invariants under the mini property harness, and
+//! failure-injection beyond the per-module malicious tests.
+
+use trident::convert::{a2b, b2a, bitext};
+use trident::crypto::Rng;
+use trident::ml::share_fixed_mat;
+use trident::net::{Abort, NetProfile, Phase, P0, P1, P2, P3};
+use trident::proto::sharing::share_many_n;
+use trident::proto::{
+    matmul_tr, mult, mult_tr, reconstruct, run_4pc, run_4pc_timeout, share,
+};
+use trident::ring::{Bit, FixedPoint, Matrix, Ring, Z64};
+use trident::sharing::{mat::open_mat, open, MShare};
+use trident::testutil::{forall, shrink_vec};
+
+#[test]
+fn arithmetic_circuit_end_to_end() {
+    // (x + y)·z − 5, mixed dealers, opened by everyone
+    let run = run_4pc(NetProfile::lan(), 500, |ctx| {
+        let x = share(ctx, P0, (ctx.id() == P0).then_some(Z64(100)))?;
+        let y = share(ctx, P1, (ctx.id() == P1).then_some(Z64(23)))?;
+        let z = share(ctx, P2, (ctx.id() == P2).then_some(Z64(7)))?;
+        let s = x + y;
+        let p = mult(ctx, &s, &z)?;
+        let out = p.add_const(Z64(0) - Z64(5));
+        reconstruct(ctx, &out)
+    });
+    let (outs, _) = run.expect_ok();
+    assert!(outs.iter().all(|&v| v == Z64((100 + 23) * 7 - 5)));
+}
+
+#[test]
+fn property_linearity_of_shared_circuits() {
+    // ∀ random (a, b, c): open(a·[[x]] + b·[[y]] + c) == a·x + b·y + c
+    forall(
+        501,
+        25,
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+            )
+        },
+        |_| Vec::new(),
+        |&(x, y, a, b, c)| {
+            let run = run_4pc(NetProfile::zero(), x ^ y, move |ctx| {
+                let sx = share(ctx, P1, (ctx.id() == P1).then_some(Z64(x)))?;
+                let sy = share(ctx, P3, (ctx.id() == P3).then_some(Z64(y)))?;
+                let lin = sx.scale(Z64(a)) + sy.scale(Z64(b));
+                reconstruct(ctx, &lin.add_const(Z64(c)))
+            });
+            let (outs, _) = run.expect_ok();
+            let want = Z64(x.wrapping_mul(a).wrapping_add(y.wrapping_mul(b)).wrapping_add(c));
+            if outs[1] == want {
+                Ok(())
+            } else {
+                Err(format!("got {:?} want {want:?}", outs[1]))
+            }
+        },
+    );
+}
+
+#[test]
+fn property_mult_agrees_with_ring() {
+    forall(
+        502,
+        15,
+        |rng| (rng.next_u64(), rng.next_u64()),
+        |_| Vec::new(),
+        |&(x, y)| {
+            let run = run_4pc(NetProfile::zero(), x.wrapping_add(y), move |ctx| {
+                let sx = share(ctx, P1, (ctx.id() == P1).then_some(Z64(x)))?;
+                let sy = share(ctx, P2, (ctx.id() == P2).then_some(Z64(y)))?;
+                let z = mult(ctx, &sx, &sy)?;
+                ctx.flush_verify()?;
+                Ok(z)
+            });
+            let (outs, _) = run.expect_ok();
+            if open(&outs) == Z64(x.wrapping_mul(y)) {
+                Ok(())
+            } else {
+                Err(format!("{x}·{y} mismatch"))
+            }
+        },
+    );
+}
+
+#[test]
+fn property_a2b_b2a_identity_random() {
+    forall(
+        503,
+        8,
+        |rng| rng.next_u64(),
+        |&v| trident::testutil::shrink_u64(v).into_iter().collect(),
+        |&v| {
+            let run = run_4pc(NetProfile::zero(), v | 1, move |ctx| {
+                let a = share(ctx, P2, (ctx.id() == P2).then_some(Z64(v)))?;
+                let bits = a2b(ctx, &a)?;
+                let back = b2a(ctx, &bits)?;
+                ctx.flush_verify()?;
+                Ok(back)
+            });
+            let (outs, _) = run.expect_ok();
+            if open(&outs) == Z64(v) {
+                Ok(())
+            } else {
+                Err(format!("roundtrip broke for {v}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn property_batched_reconstruction_order_preserving() {
+    forall(
+        504,
+        10,
+        |rng| (0..rng.below(20) + 1).map(|_| rng.next_u64()).collect::<Vec<u64>>(),
+        |v| shrink_vec(v),
+        |vals| {
+            let v2 = vals.clone();
+            let n = vals.len();
+            let run = run_4pc(NetProfile::zero(), 504, move |ctx| {
+                let vs: Option<Vec<Z64>> =
+                    (ctx.id() == P1).then(|| v2.iter().map(|&x| Z64(x)).collect());
+                let shs = share_many_n(ctx, P1, vs.as_deref(), n)?;
+                ctx.flush_verify()?;
+                trident::proto::reconstruct::reconstruct_many(ctx, &shs)
+            });
+            let (outs, _) = run.expect_ok();
+            let want: Vec<Z64> = vals.iter().map(|&x| Z64(x)).collect();
+            if outs.iter().all(|o| *o == want) {
+                Ok(())
+            } else {
+                Err("order or value mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn secure_matmul_pipeline_matches_cleartext() {
+    let mut rng = Rng::seeded(505);
+    let a = Matrix::from_fn(5, 7, |_, _| rng.gen::<Z64>());
+    let b = Matrix::from_fn(7, 3, |_, _| rng.gen::<Z64>());
+    let (a2, b2) = (a.clone(), b.clone());
+    let run = run_4pc(NetProfile::zero(), 505, move |ctx| {
+        let sa = trident::testutil::share_mat(ctx, P1, &a2)?;
+        let sb = trident::testutil::share_mat(ctx, P2, &b2)?;
+        let sc = trident::proto::matmul(ctx, &sa, &sb)?;
+        ctx.flush_verify()?;
+        Ok(sc)
+    });
+    let (outs, _) = run.expect_ok();
+    assert_eq!(open_mat(&outs), a.matmul(&b));
+}
+
+#[test]
+fn relu_pipeline_fixed_point() {
+    // x shared → matmul_tr with weights → relu → open: matches cleartext
+    let run = run_4pc(NetProfile::zero(), 506, |ctx| {
+        let x = trident::ml::F64Mat {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, -2.0, 0.5, 3.0],
+        };
+        let w = trident::ml::F64Mat {
+            rows: 2,
+            cols: 1,
+            data: vec![1.5, 1.0],
+        };
+        let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&x), 2, 2)?;
+        let ws = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&w), 2, 1)?;
+        let u = matmul_tr(ctx, &xs, &ws)?;
+        let (r, _) = trident::ml::relu_many(ctx, &u.to_shares())?;
+        ctx.flush_verify()?;
+        trident::proto::reconstruct::reconstruct_many(ctx, &r)
+    });
+    let (outs, _) = run.expect_ok();
+    let got: Vec<f64> = outs[1].iter().map(|&v| FixedPoint::decode(v)).collect();
+    // cleartext: [1·1.5 + (−2)·1, 0.5·1.5 + 3·1] = [−0.5, 3.75] → relu
+    assert!((got[0] - 0.0).abs() < 0.01, "{got:?}");
+    assert!((got[1] - 3.75).abs() < 0.01, "{got:?}");
+}
+
+#[test]
+fn comparison_chain_bitext_bit2a() {
+    // sign(x) lifted back to arithmetic equals (x<0)
+    for v in [-5i64, 5] {
+        let run = run_4pc(NetProfile::zero(), 507, move |ctx| {
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(Z64::from(v)))?;
+            let b = bitext(ctx, &x)?;
+            let a = trident::convert::bit2a(ctx, &b)?;
+            ctx.flush_verify()?;
+            Ok(a)
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(open(&outs), Z64((v < 0) as u64));
+    }
+}
+
+#[test]
+fn cheater_cannot_flip_reconstruction() {
+    // P2 lies about λ1 during Π_Rec towards P1 → P0's vouched digest busts it
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        508,
+        std::time::Duration::from_millis(500),
+        |ctx| {
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(Z64(77)))?;
+            ctx.flush_verify()?;
+            if ctx.id() == P2 {
+                // emulate Π_Rec but send a corrupted λ1 to P1
+                return ctx.online(|ctx| {
+                    let bad = x.lam(P2, 1).unwrap() + Z64(1);
+                    ctx.send_ring(P1, &[bad]);
+                    let ms = [x.m()];
+                    ctx.vouch_ring(P0, &ms);
+                    let lam2: Vec<Z64> = ctx.recv_ring(P3, 1)?;
+                    ctx.expect_ring(P0, &lam2);
+                    let _ = ctx.flush_verify();
+                    Ok(Z64(0))
+                });
+            }
+            reconstruct(ctx, &x)
+        },
+    );
+    // P1 must abort (digest mismatch), honest P3/P0 still fine or aborted —
+    // but no honest party accepts a wrong value.
+    match &run.outputs[1] {
+        Err(_) => {}
+        Ok(v) => assert_eq!(*v, Z64(77), "P1 must never accept a flipped value"),
+    }
+    assert!(run.outputs[1].is_err(), "P1 should abort on digest mismatch");
+}
+
+#[test]
+fn dropout_party_aborts_cleanly() {
+    // P3 goes silent mid-protocol: everyone else times out / aborts, no hang
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        509,
+        std::time::Duration::from_millis(300),
+        |ctx| {
+            if ctx.id() == P3 {
+                return Ok(Z64(0)); // drops out before the mult
+            }
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(Z64(3)))?;
+            let y = share(ctx, P2, (ctx.id() == P2).then_some(Z64(4)))?;
+            let z = mult(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            reconstruct(ctx, &z)
+        },
+    );
+    assert!(
+        run.outputs.iter().skip(1).take(2).all(|o| o.is_err()),
+        "evaluators must abort when P3 vanishes"
+    );
+}
+
+#[test]
+fn boolean_and_arithmetic_worlds_consistent() {
+    // msb via Π_BitExt == msb via A2B's top bit, for the same share
+    let run = run_4pc(NetProfile::zero(), 510, |ctx| {
+        let x = share(ctx, P1, (ctx.id() == P1).then_some(Z64::from(-42i64)))?;
+        let fast = bitext(ctx, &x)?;
+        let bits = a2b(ctx, &x)?;
+        let slow = bits[63];
+        ctx.flush_verify()?;
+        Ok((fast, slow))
+    });
+    let (outs, _) = run.expect_ok();
+    let fast = open(&[outs[0].0, outs[1].0, outs[2].0, outs[3].0]);
+    let slow = open(&[outs[0].1, outs[1].1, outs[2].1, outs[3].1]);
+    assert_eq!(fast, Bit(true));
+    assert_eq!(slow, Bit(true));
+}
+
+#[test]
+fn trunc_pair_stream_stays_verified_under_load() {
+    // hundreds of truncated multiplications in one run: all checks pass,
+    // all results within tolerance
+    let run = run_4pc(NetProfile::zero(), 511, |ctx| {
+        let mut rng = Rng::seeded(99);
+        let raw: Vec<(f64, f64)> = (0..200).map(|_| (rng.normal(), rng.normal())).collect();
+        let r2 = raw.clone();
+        let xs: Option<Vec<Z64>> = (ctx.id() == P1)
+            .then(|| r2.iter().map(|c| FixedPoint::encode(c.0)).collect());
+        let ys: Option<Vec<Z64>> = (ctx.id() == P2)
+            .then(|| r2.iter().map(|c| FixedPoint::encode(c.1)).collect());
+        let sx = share_many_n(ctx, P1, xs.as_deref(), 200)?;
+        let sy = share_many_n(ctx, P2, ys.as_deref(), 200)?;
+        let zs = trident::proto::trunc::mult_tr_many(ctx, &sx, &sy)?;
+        ctx.flush_verify()?;
+        Ok((raw, zs))
+    });
+    let (outs, _) = run.expect_ok();
+    let raw = &outs[1].0;
+    for i in 0..200 {
+        let got = FixedPoint::decode(open(&[
+            outs[0].1[i],
+            outs[1].1[i],
+            outs[2].1[i],
+            outs[3].1[i],
+        ]));
+        let want = raw[i].0 * raw[i].1;
+        assert!((got - want).abs() < 0.01, "case {i}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn report_phases_never_mix() {
+    let run = run_4pc(NetProfile::wan(), 512, |ctx| {
+        let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(2.0)))?;
+        let y = share(ctx, P2, (ctx.id() == P2).then_some(FixedPoint::encode(3.0)))?;
+        let z = mult_tr(ctx, &x, &y)?;
+        ctx.flush_verify()?;
+        Ok(z)
+    });
+    let (_, report) = run.expect_ok();
+    // offline and online both nonzero, P0 idle online
+    assert!(report.value_bits[Phase::Offline as usize] > 0);
+    assert!(report.value_bits[Phase::Online as usize] > 0);
+    assert_eq!(report.party_time[Phase::Online as usize][0], 0.0);
+    assert!(report.party_time[Phase::Offline as usize][0] > 0.0);
+}
+
+#[test]
+fn mshare_share_vector_roundtrip_property() {
+    forall(
+        513,
+        20,
+        |rng| {
+            let n = (rng.below(8) + 1) as usize;
+            (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+        },
+        |v| shrink_vec(v),
+        |vals| {
+            // local (no network): deal/open roundtrip with random masks
+            let mut rng = Rng::seeded(vals.iter().fold(0u64, |a, &b| a.wrapping_add(b)) | 1);
+            for &v in vals {
+                let lam = [rng.gen(), rng.gen(), rng.gen()];
+                let shares = trident::sharing::deal(Z64(v), lam);
+                if trident::sharing::open(&shares) != Z64(v) {
+                    return Err(format!("deal/open broke for {v}"));
+                }
+                // linearity against a second sharing
+                let lam2 = [rng.gen(), rng.gen(), rng.gen()];
+                let shares2 = trident::sharing::deal(Z64(v).scale_id(), lam2);
+                let sum: Vec<MShare<Z64>> =
+                    (0..4).map(|i| shares[i] + shares2[i]).collect();
+                if trident::sharing::open(&[sum[0], sum[1], sum[2], sum[3]])
+                    != Z64(v.wrapping_add(v))
+                {
+                    return Err("linearity broke".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// helper for the property above
+trait ScaleId {
+    fn scale_id(self) -> Self;
+}
+impl ScaleId for Z64 {
+    fn scale_id(self) -> Self {
+        self
+    }
+}

@@ -1,22 +1,57 @@
 //! Secure prediction serving (the MLaaS scenario of §I): a model owner
-//! shares trained weights once; clients stream query batches; the four
-//! servers answer them with online latency independent of the feature
-//! count (Π_DotP) and P0 asleep for the whole online phase.
+//! shares trained weights once; clients stream queries; the four servers
+//! answer them with online latency independent of the feature count
+//! (Π_DotP) and P0 asleep for the whole online phase.
+//!
+//! This example drives the real serving engine (`trident::serve`): the
+//! offline pool is pre-stocked with truncation pairs, concurrent queries
+//! are coalesced into cross-request batches (one protocol round-trip per
+//! wave), and every response is verified before release. The same workload
+//! is replayed through the seed-style per-query inline path for contrast.
 //!
 //! ```sh
-//! cargo run --release --example secure_inference [batches]
+//! cargo run --release --example secure_inference [queries]
 //! ```
 
 use trident::net::{NetProfile, Phase};
+use trident::serve::{serve, ServeConfig};
 
 fn main() {
-    let batches: usize =
-        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(6);
+    let queries: usize =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(16);
     trident::runtime::pjrt::init_default();
 
-    trident::coordinator::serve_cli(batches);
+    // the CLI-level summary: pooled+coalesced vs inline
+    trident::coordinator::serve_cli(queries);
 
-    // latency breakdown across the paper's four models, LAN vs WAN
+    // pool-backed batch serving with a ReLU output layer, in detail
+    println!("\npool-backed ReLU serving (d=128, 4-row queries, coalesce 8):");
+    let cfg = ServeConfig {
+        d: 128,
+        rows_per_query: 4,
+        queries,
+        coalesce: 8,
+        pool: true,
+        relu: true,
+        seed: 42,
+    };
+    let s = serve(NetProfile::lan(), cfg);
+    println!(
+        "  {} queries in {} batches: {:.3} ms/query online, {} online rounds total",
+        s.queries,
+        s.batches,
+        s.per_query_latency() * 1e3,
+        s.online_rounds,
+    );
+    println!(
+        "  offline (pool fill + γ): {:.1} KiB, metered under Phase::Offline",
+        s.offline_value_bits as f64 / 8.0 / 1024.0,
+    );
+    if let Some(ps) = s.pool_stats {
+        println!("  pool: {} hits, {} misses", ps.hits(), ps.misses());
+    }
+
+    // latency breakdown across the paper's models, LAN vs WAN
     println!("\nper-model online prediction latency (d=784, B=100):");
     for model in ["linreg", "logreg", "nn"] {
         let lan = trident::bench::measure_predict(NetProfile::lan(), model, 784, 100);

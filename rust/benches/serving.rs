@@ -1,0 +1,62 @@
+//! `cargo bench --bench serving`
+//!
+//! Serving-engine benchmark: amortized per-query online cost of the
+//! offline-pool + cross-request-batching engine (`trident::serve`) against
+//! the seed's per-query inline path, plus a coalescing sweep over LAN and
+//! WAN. Hand-rolled harness (the offline image has no criterion).
+
+use trident::net::NetProfile;
+use trident::serve::{serve, ServeConfig};
+
+fn main() {
+    trident::runtime::pjrt::init_default();
+
+    print!("{}", trident::bench::serve_table());
+    println!();
+
+    println!("== coalescing sweep: 32 one-row queries, d=128, pool pre-stocked ==");
+    println!("net | coalesce | batches | online rounds | ms/query | B/query");
+    for profile in [NetProfile::lan(), NetProfile::wan()] {
+        for coalesce in [1usize, 2, 4, 8, 16, 32] {
+            let cfg = ServeConfig {
+                d: 128,
+                rows_per_query: 1,
+                queries: 32,
+                coalesce,
+                pool: true,
+                relu: false,
+                seed: 77,
+            };
+            let s = serve(profile.clone(), cfg);
+            println!(
+                "{:<3} | {coalesce:>8} | {:>7} | {:>13} | {:>8.3} | {:>7.0}",
+                profile.name,
+                s.batches,
+                s.online_rounds,
+                s.per_query_latency() * 1e3,
+                s.per_query_online_bytes(),
+            );
+        }
+    }
+
+    println!();
+    println!("== ReLU layer serving (pool feeds trunc + bitext material) ==");
+    for (pool, label) in [(false, "inline"), (true, "pooled")] {
+        let cfg = ServeConfig {
+            d: 64,
+            rows_per_query: 4,
+            queries: 8,
+            coalesce: 8,
+            pool,
+            relu: true,
+            seed: 78,
+        };
+        let s = serve(NetProfile::lan(), cfg);
+        println!(
+            "{label}: {:.3} ms/query online, offline {:.1} KiB, rounds {}",
+            s.per_query_latency() * 1e3,
+            s.offline_value_bits as f64 / 8.0 / 1024.0,
+            s.online_rounds,
+        );
+    }
+}

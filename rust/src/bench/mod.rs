@@ -623,6 +623,60 @@ pub fn fig20() -> String {
     out
 }
 
+/// Serving benchmark (beyond the paper): per-query amortized online cost
+/// of the pool + cross-request-batching engine vs the seed's per-query
+/// inline path. Offline cost (pool fill + γ exchanges) stays under
+/// `Phase::Offline` — the last column shows it is *moved*, not hidden.
+pub fn serve_table() -> String {
+    use crate::serve::{serve, ServeConfig};
+    let mut out = String::new();
+    out.push_str(
+        "== Serving: offline pool + cross-request batching (linreg d=128, 1-row queries, LAN) ==\n",
+    );
+    out.push_str(
+        "mode               | q  | batches | online rnds | ms/query | online B/query | offline KiB\n",
+    );
+    let base = ServeConfig {
+        d: 128,
+        rows_per_query: 1,
+        queries: 32,
+        coalesce: 1,
+        pool: false,
+        relu: false,
+        seed: 321,
+    };
+    let rows: Vec<(&str, ServeConfig)> = vec![
+        ("inline per-query", base.clone()),
+        ("pool, coalesce 1", ServeConfig { pool: true, ..base.clone() }),
+        ("pool, coalesce 8", ServeConfig { pool: true, coalesce: 8, ..base.clone() }),
+        ("pool, coalesce 32", ServeConfig { pool: true, coalesce: 32, ..base.clone() }),
+    ];
+    let mut inline_lat = None;
+    for (name, cfg) in rows {
+        let s = serve(NetProfile::lan(), cfg);
+        if inline_lat.is_none() {
+            inline_lat = Some(s.per_query_latency());
+        }
+        out.push_str(&format!(
+            "{name:<18} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>11.1}\n",
+            s.queries,
+            s.batches,
+            s.online_rounds,
+            s.per_query_latency() * 1e3,
+            s.per_query_online_bytes(),
+            s.offline_value_bits as f64 / 8.0 / 1024.0,
+        ));
+        if s.batches == 1 {
+            out.push_str(&format!(
+                "{:<18} |    |         |             | gain {:>5.1}x vs inline per-query\n",
+                "",
+                inline_lat.unwrap() / s.per_query_latency().max(1e-12),
+            ));
+        }
+    }
+    out
+}
+
 /// All tables, in paper order. `filter`: empty = all.
 pub fn run_tables(filter: &[String]) -> String {
     let all: Vec<(&str, fn() -> String)> = vec![
@@ -642,6 +696,7 @@ pub fn run_tables(filter: &[String]) -> String {
         ("table14", || table13_14()),
         ("table15", || table8_15()),
         ("fig20", fig20),
+        ("serve", serve_table),
     ];
     let mut out = String::new();
     let mut done = std::collections::HashSet::new();

@@ -7,7 +7,7 @@
 //! constant-round 3ℓ of Tables I/IX.
 
 use crate::net::{Abort, P0, P1, P2, P3};
-use crate::proto::mult::sample_lam_share;
+use crate::proto::mult::lam_shares;
 use crate::proto::sharing::ash_many;
 use crate::proto::Ctx;
 use crate::ring::{Bit, Z64};
@@ -110,8 +110,9 @@ fn mult_gamma_zero(
 ) -> Result<Vec<MShare<Z64>>, Abort> {
     let me = ctx.id();
     let n = us.len();
-    let lam_zs: Vec<MShare<Z64>> =
-        ctx.offline(|ctx| (0..n).map(|_| sample_lam_share(ctx)).collect());
+    // fresh λ_z per product — pool-aware ("bit2a material": the γ-free
+    // multiplication randomness)
+    let lam_zs: Vec<MShare<Z64>> = lam_shares(ctx, n);
     ctx.online(|ctx| {
         if me == P0 {
             return Ok(lam_zs);

@@ -25,18 +25,20 @@ use crate::proto::Ctx;
 use crate::ring::{Bit, Z64};
 use crate::sharing::MShare;
 
-/// `Π_BitExt`: `[[v]]^A → [[msb(v)]]^B`. Online: 3 rounds, 5ℓ+2 bits.
-pub fn bitext(ctx: &mut Ctx, v: &MShare<Z64>) -> Result<MShare<Bit>, Abort> {
-    bitext_many(ctx, std::slice::from_ref(v)).map(|mut o| o.pop().unwrap())
+/// `Π_BitExt` offline material: a shared random sign `[[r]]` together with
+/// its boolean-shared msb `[[msb r]]^B` — what [`crate::pool`] stocks for
+/// ReLU/Sigmoid serving.
+#[derive(Clone, Copy, Debug)]
+pub struct BitExtMask {
+    pub r: MShare<Z64>,
+    pub x: MShare<Bit>,
 }
 
-/// Batched [`bitext`] — parallel instances share the three rounds (the
-/// batching Sigmoid relies on for its 5-round total).
-pub fn bitext_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>, Abort> {
+/// Inline generation of `n` bit-extraction masks (the `Π_BitExt` offline
+/// phase): P1,P2 sample `r = ±1`, then `Π_vSh` both `[[r]]` and
+/// `[[msb r]]^B`. Also used by [`crate::pool::fill_bitext`].
+pub(crate) fn gen_bitext_masks(ctx: &mut Ctx, n: usize) -> Result<Vec<BitExtMask>, Abort> {
     let me = ctx.id();
-    let n = vs.len();
-
-    // ---- offline: P1,P2 sample r = ±1, share [[r]] and [[msb r]]^B ----
     let rs: Option<Vec<Z64>> = (me == P1 || me == P2).then(|| {
         (0..n)
             .map(|_| {
@@ -50,11 +52,35 @@ pub fn bitext_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>
             .collect()
     });
     let xs_clear: Option<Vec<Bit>> = rs.as_ref().map(|rs| rs.iter().map(|r| r.msb()).collect());
-    let (r_sh, x_sh) = ctx.offline(|ctx| -> Result<_, Abort> {
+    ctx.offline(|ctx| -> Result<_, Abort> {
         let r_sh = vsh_many(ctx, (P1, P2), rs.as_deref(), n)?;
         let x_sh = vsh_many::<Bit>(ctx, (P1, P2), xs_clear.as_deref(), n)?;
-        Ok((r_sh, x_sh))
-    })?;
+        Ok(r_sh
+            .into_iter()
+            .zip(x_sh)
+            .map(|(r, x)| BitExtMask { r, x })
+            .collect())
+    })
+}
+
+/// `Π_BitExt`: `[[v]]^A → [[msb(v)]]^B`. Online: 3 rounds, 5ℓ+2 bits.
+pub fn bitext(ctx: &mut Ctx, v: &MShare<Z64>) -> Result<MShare<Bit>, Abort> {
+    bitext_many(ctx, std::slice::from_ref(v)).map(|mut o| o.pop().unwrap())
+}
+
+/// Batched [`bitext`] — parallel instances share the three rounds (the
+/// batching Sigmoid relies on for its 5-round total). Pool-aware: the
+/// offline mask material is popped from an attached pool when stocked.
+pub fn bitext_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>, Abort> {
+    let n = vs.len();
+
+    // ---- offline: mask material (pooled or inline) ----
+    let masks: Vec<BitExtMask> = match ctx.pool.as_mut().and_then(|p| p.pop_bitext(n)) {
+        Some(m) => m,
+        None => gen_bitext_masks(ctx, n)?,
+    };
+    let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
+    let x_sh: Vec<MShare<Bit>> = masks.iter().map(|m| m.x).collect();
 
     // ---- online ----
     // [[rv]] = Π_Mult([[r]], [[v]]) — offline part of the mult is genuinely

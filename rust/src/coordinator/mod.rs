@@ -158,47 +158,58 @@ pub fn predict_cli(model: &str, batch: usize) {
     println!("                   WAN latency {:.2} s", wan.online_latency());
 }
 
-/// Batched prediction serving demo: a stream of query batches answered by a
-/// persistent trained model (the MLaaS loop).
+/// Batched prediction serving (the MLaaS loop), backed by the real engine:
+/// offline pool pre-stocked, concurrent queries coalesced into
+/// cross-request batches, every response verified before release. Prints
+/// the amortized per-query cost next to the seed's per-query inline path.
 pub fn serve_cli(queries: usize) {
-    println!("serving {queries} query batches (linreg d=784, B=100 each) …");
-    let run = run_4pc(NetProfile::lan(), 123, move |ctx| {
-        let d = 784;
-        let mut rng = Rng::seeded(5);
-        let w0 = {
-            let mut w = F64Mat::zeros(d, 1);
-            for j in 0..d {
-                w.set(j, 0, rng.normal() * 0.1);
-            }
-            w
-        };
-        let w = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&w0), d, 1)?;
-        let model = LinReg::new(d, 100);
-        let mut latencies = Vec::new();
-        for _ in 0..queries {
-            let q = linreg_batch(&mut rng, 100, d);
-            let xs = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&q.x), 100, d)?;
-            let t0 = ctx.net.clock(Phase::Online);
-            let _p = model.predict(ctx, &xs, &w)?;
-            latencies.push(ctx.net.clock(Phase::Online) - t0);
-        }
-        ctx.flush_verify()?;
-        Ok(latencies)
-    });
-    let (outs, report) = run.expect_ok();
-    let lat = &outs[1];
-    let avg = lat.iter().sum::<f64>() / lat.len() as f64;
+    use crate::serve::{serve, ServeConfig};
+    let cfg = ServeConfig {
+        d: 784,
+        rows_per_query: 1,
+        queries,
+        coalesce: queries.clamp(1, 16),
+        pool: true,
+        relu: false,
+        seed: 123,
+    };
     println!(
-        "served {} batches: avg {:.3} ms/batch (simulated LAN), throughput {:.0} queries/s",
-        lat.len(),
-        avg * 1e3,
-        100.0 / avg,
+        "serving {queries} queries (linreg d={}, {} rows each, coalesce ≤{}) …",
+        cfg.d, cfg.rows_per_query, cfg.coalesce
+    );
+    let pooled = serve(NetProfile::lan(), cfg.clone());
+    let inline = serve(
+        NetProfile::lan(),
+        ServeConfig { coalesce: 1, pool: false, ..cfg },
     );
     println!(
-        "total online bytes {:.1} KiB, wall {:?}",
-        report.total_bytes[Phase::Online as usize] as f64 / 1024.0,
-        report.wall
+        "pool+batch: {} batches | {:.3} ms/query | {:.0} B/query online | {} online rounds",
+        pooled.batches,
+        pooled.per_query_latency() * 1e3,
+        pooled.per_query_online_bytes(),
+        pooled.online_rounds,
     );
+    println!(
+        "inline    : {} batches | {:.3} ms/query | {:.0} B/query online | {} online rounds",
+        inline.batches,
+        inline.per_query_latency() * 1e3,
+        inline.per_query_online_bytes(),
+        inline.online_rounds,
+    );
+    println!(
+        "gain      : {:.1}× latency/query, {:.2}× bytes/query; offline (pool fill + γ) {:.1} KiB metered separately",
+        inline.per_query_latency() / pooled.per_query_latency().max(1e-12),
+        inline.per_query_online_bytes() / pooled.per_query_online_bytes().max(1e-12),
+        pooled.offline_value_bits as f64 / 8.0 / 1024.0,
+    );
+    if let Some(ps) = pooled.pool_stats {
+        println!(
+            "pool      : {} hits / {} misses, {} trunc pairs left",
+            ps.hits(),
+            ps.misses(),
+            pooled.pool_left_trunc
+        );
+    }
 }
 
 #[cfg(test)]

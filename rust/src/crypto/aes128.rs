@@ -1,0 +1,203 @@
+//! In-crate AES-128 encryption (FIPS 197) — the PRF substrate.
+//!
+//! Replaces the `aes` crate (unavailable in the offline build image). Only
+//! the encrypt direction is needed: the shared-key PRF and the fixed-key
+//! garbling hash both use AES in counter / Davies–Meyer-style modes.
+//!
+//! The S-box is derived at first use from its algebraic definition
+//! (GF(2^8) inversion + affine map) rather than transcribed, so it is
+//! correct by construction. Plain table-lookup rounds — fast enough for the
+//! in-process simulation; a deployment would use AES-NI.
+
+use std::sync::OnceLock;
+
+static SBOX: OnceLock<[u8; 256]> = OnceLock::new();
+
+/// GF(2^8) multiply-by-x (the `xtime` of FIPS 197), modulo x^8+x^4+x^3+x+1.
+#[inline]
+fn xtime(a: u8) -> u8 {
+    (a << 1) ^ (if a & 0x80 != 0 { 0x1b } else { 0 })
+}
+
+/// Build the S-box from log/antilog tables over generator 3.
+fn build_sbox() -> [u8; 256] {
+    let mut alog = [0u8; 256];
+    let mut log = [0u8; 256];
+    let mut x: u8 = 1;
+    for i in 0..255 {
+        alog[i] = x;
+        log[x as usize] = i as u8;
+        x = xtime(x) ^ x; // multiply by the generator 0x03
+    }
+    alog[255] = alog[0];
+    let mut sbox = [0u8; 256];
+    for (i, s) in sbox.iter_mut().enumerate() {
+        let inv = if i == 0 { 0 } else { alog[(255 - log[i] as usize) % 255] };
+        // affine transform: b ^ rot1(b) ^ rot2(b) ^ rot3(b) ^ rot4(b) ^ 0x63
+        *s = inv
+            ^ inv.rotate_left(1)
+            ^ inv.rotate_left(2)
+            ^ inv.rotate_left(3)
+            ^ inv.rotate_left(4)
+            ^ 0x63;
+    }
+    sbox
+}
+
+#[inline]
+fn sbox() -> &'static [u8; 256] {
+    SBOX.get_or_init(build_sbox)
+}
+
+/// An expanded AES-128 encryption key (11 round keys).
+#[derive(Clone)]
+pub struct Aes128 {
+    /// Round keys, flat column-major bytes (index `4·col + row`), matching
+    /// the state layout.
+    rk: [[u8; 16]; 11],
+}
+
+impl Aes128 {
+    pub fn new(key: [u8; 16]) -> Aes128 {
+        let sb = sbox();
+        // words as 4-byte columns
+        let mut w = [[0u8; 4]; 44];
+        for i in 0..4 {
+            w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        let mut rcon: u8 = 1;
+        for i in 4..44 {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                t.rotate_left(1); // RotWord
+                for b in &mut t {
+                    *b = sb[*b as usize]; // SubWord
+                }
+                t[0] ^= rcon;
+                rcon = xtime(rcon);
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - 4][j] ^ t[j];
+            }
+        }
+        let mut rk = [[0u8; 16]; 11];
+        for (r, round_key) in rk.iter_mut().enumerate() {
+            for c in 0..4 {
+                round_key[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        Aes128 { rk }
+    }
+
+    /// Encrypt one 16-byte block.
+    pub fn encrypt_block(&self, block: [u8; 16]) -> [u8; 16] {
+        let sb = sbox();
+        let mut s = block;
+        add_round_key(&mut s, &self.rk[0]);
+        for round in 1..10 {
+            sub_bytes(&mut s, sb);
+            shift_rows(&mut s);
+            mix_columns(&mut s);
+            add_round_key(&mut s, &self.rk[round]);
+        }
+        sub_bytes(&mut s, sb);
+        shift_rows(&mut s);
+        add_round_key(&mut s, &self.rk[10]);
+        s
+    }
+}
+
+#[inline]
+fn add_round_key(s: &mut [u8; 16], rk: &[u8; 16]) {
+    for i in 0..16 {
+        s[i] ^= rk[i];
+    }
+}
+
+#[inline]
+fn sub_bytes(s: &mut [u8; 16], sb: &[u8; 256]) {
+    for b in s.iter_mut() {
+        *b = sb[*b as usize];
+    }
+}
+
+/// Row `r` of the column-major state rotates left by `r`.
+#[inline]
+fn shift_rows(s: &mut [u8; 16]) {
+    let old = *s;
+    for r in 1..4 {
+        for c in 0..4 {
+            s[4 * c + r] = old[4 * ((c + r) % 4) + r];
+        }
+    }
+}
+
+#[inline]
+fn mix_columns(s: &mut [u8; 16]) {
+    for c in 0..4 {
+        let a0 = s[4 * c];
+        let a1 = s[4 * c + 1];
+        let a2 = s[4 * c + 2];
+        let a3 = s[4 * c + 3];
+        s[4 * c] = xtime(a0) ^ (xtime(a1) ^ a1) ^ a2 ^ a3;
+        s[4 * c + 1] = a0 ^ xtime(a1) ^ (xtime(a2) ^ a2) ^ a3;
+        s[4 * c + 2] = a0 ^ a1 ^ xtime(a2) ^ (xtime(a3) ^ a3);
+        s[4 * c + 3] = (xtime(a0) ^ a0) ^ a1 ^ a2 ^ xtime(a3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbox_known_entries() {
+        let sb = sbox();
+        assert_eq!(sb[0x00], 0x63);
+        assert_eq!(sb[0x01], 0x7c);
+        assert_eq!(sb[0x53], 0xed);
+        assert_eq!(sb[0xff], 0x16);
+    }
+
+    #[test]
+    fn fips197_appendix_b() {
+        // FIPS 197 Appendix B: key 2b7e..., plaintext 3243f6a8885a308d313198a2e0370734
+        let key = [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ];
+        let pt = [
+            0x32, 0x43, 0xf6, 0xa8, 0x88, 0x5a, 0x30, 0x8d, 0x31, 0x31, 0x98, 0xa2, 0xe0, 0x37,
+            0x07, 0x34,
+        ];
+        let want = [
+            0x39, 0x25, 0x84, 0x1d, 0x02, 0xdc, 0x09, 0xfb, 0xdc, 0x11, 0x85, 0x97, 0x19, 0x6a,
+            0x0b, 0x32,
+        ];
+        let aes = Aes128::new(key);
+        assert_eq!(aes.encrypt_block(pt), want);
+    }
+
+    #[test]
+    fn fips197_appendix_c1() {
+        // FIPS 197 Appendix C.1: key 000102...0f, plaintext 00112233...ff
+        let key: [u8; 16] = core::array::from_fn(|i| i as u8);
+        let pt: [u8; 16] = core::array::from_fn(|i| (i * 0x11) as u8);
+        let want = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        let aes = Aes128::new(key);
+        assert_eq!(aes.encrypt_block(pt), want);
+    }
+
+    #[test]
+    fn deterministic_and_key_sensitive() {
+        let a = Aes128::new([7u8; 16]);
+        let b = Aes128::new([7u8; 16]);
+        let c = Aes128::new([8u8; 16]);
+        let blk = [1u8; 16];
+        assert_eq!(a.encrypt_block(blk), b.encrypt_block(blk));
+        assert_ne!(a.encrypt_block(blk), c.encrypt_block(blk));
+    }
+}

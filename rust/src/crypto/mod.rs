@@ -14,9 +14,11 @@
 //! * [`Rng`] — a fast, seedable local RNG (xoshiro256**) for dealer/test
 //!   randomness. NOT used for shared randomness (that is the PRF's job).
 
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes128;
-use sha2::{Digest, Sha256};
+pub mod aes128;
+pub mod sha256;
+
+use aes128::Aes128;
+use sha256::Sha256;
 
 use crate::ring::Ring;
 
@@ -48,18 +50,15 @@ impl std::fmt::Debug for Prf {
 
 impl Prf {
     pub fn new(key: Key) -> Self {
-        Prf { cipher: Aes128::new(&key.into()), counter: 0 }
+        Prf { cipher: Aes128::new(key), counter: 0 }
     }
 
     /// Next 16-byte pseudorandom block.
     #[inline]
     pub fn next_block(&mut self) -> [u8; 16] {
-        let mut block = self.counter.to_le_bytes();
+        let block = self.counter.to_le_bytes();
         self.counter += 1;
-        let mut b = aes::Block::from(block);
-        self.cipher.encrypt_block(&mut b);
-        block.copy_from_slice(&b);
-        block
+        self.cipher.encrypt_block(block)
     }
 
     /// Sample one ring element.

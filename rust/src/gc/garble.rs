@@ -12,17 +12,21 @@
 //! the three garblers derive identical tables from their shared randomness,
 //! which is what lets P2 verify P1's tables with a single hash (Fig. 6).
 
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes128;
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
+use crate::crypto::aes128::Aes128;
 use crate::crypto::Key;
 use crate::ring::Bit;
 
 use super::circuit::{Circuit, Gate};
 
 /// Fixed AES key for the garbling hash (public constant).
-static FIXED_AES: Lazy<Aes128> = Lazy::new(|| Aes128::new(&[0x5Au8; 16].into()));
+static FIXED_AES: OnceLock<Aes128> = OnceLock::new();
+
+#[inline]
+fn fixed_aes() -> &'static Aes128 {
+    FIXED_AES.get_or_init(|| Aes128::new([0x5Au8; 16]))
+}
 
 #[inline]
 fn xor(a: Key, b: Key) -> Key {
@@ -56,11 +60,8 @@ pub fn gc_hash(k: Key, tweak: u64) -> Key {
     let dk = double(k);
     let mut block = dk;
     block[8..].iter_mut().zip(tweak.to_le_bytes()).for_each(|(b, t)| *b ^= t);
-    let mut blk = aes::Block::from(block);
-    FIXED_AES.encrypt_block(&mut blk);
-    let mut out: Key = blk.into();
-    out = xor(out, dk);
-    out
+    let out = fixed_aes().encrypt_block(block);
+    xor(out, dk)
 }
 
 /// One garbled AND gate: the two half-gate ciphertexts.

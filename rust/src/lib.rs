@@ -12,8 +12,23 @@
 //!   share computations with a Pallas `masked_matmul` kernel at the hot spot,
 //!   AOT-lowered to HLO text artifacts.
 //! * **runtime/** bridges the two: the rust hot path executes the AOT
-//!   artifacts through the PJRT CPU client (`xla` crate), with a native
-//!   fallback for shapes without artifacts.
+//!   artifacts through the PJRT CPU client (`xla` crate; stubbed in
+//!   offline builds), with a native fallback for shapes without artifacts.
+//!
+//! The serving stack on top of the protocol suite (§VI-A.a's
+//! offline/online decoupling as a system):
+//!
+//! * **pool/** — the offline precomputation pool: typed, keyed correlated
+//!   randomness (truncation pairs, λ_z skeletons, bit-extraction masks)
+//!   generated ahead of time under `Phase::Offline`; pool-aware protocol
+//!   entry points (`trunc_pairs`, `mult`/`dotp` λ draws, `bitext_many`)
+//!   pop from an attached pool and fall back to inline generation
+//!   deterministically on exhaustion.
+//! * **serve/** — the batched online serving engine: a request queue that
+//!   coalesces concurrent inference queries into cross-request protocol
+//!   batches (one round-trip per wave, not per query), drains the pool,
+//!   verifies every response before release, and reports per-query
+//!   amortized online cost through the meter.
 //!
 //! See DESIGN.md for the system inventory and per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -26,9 +41,11 @@ pub mod crypto;
 pub mod gc;
 pub mod ml;
 pub mod net;
+pub mod pool;
 pub mod proto;
 pub mod ring;
 pub mod runtime;
+pub mod serve;
 pub mod setup;
 pub mod sharing;
 pub mod testutil;

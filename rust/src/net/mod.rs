@@ -96,19 +96,28 @@ pub enum MsgClass {
 const N_CLASS: usize = 5;
 
 /// Why a party program stopped.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Abort {
     /// A consistency check failed locally (the honest-party abort of the
     /// paper's protocols).
-    #[error("verification failed: {0}")]
     Verify(String),
     /// A peer signalled abort.
-    #[error("abort signalled by {0}")]
     Signalled(PartyId),
     /// Channel closed / timed out (peer died).
-    #[error("channel to {0} broken")]
     Channel(PartyId),
 }
+
+impl std::fmt::Display for Abort {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Abort::Verify(why) => write!(f, "verification failed: {why}"),
+            Abort::Signalled(p) => write!(f, "abort signalled by {p}"),
+            Abort::Channel(p) => write!(f, "channel to {p} broken"),
+        }
+    }
+}
+
+impl std::error::Error for Abort {}
 
 struct Envelope {
     payload: Vec<u8>,

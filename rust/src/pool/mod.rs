@@ -1,0 +1,346 @@
+//! Offline precomputation pool — keyed, typed correlated randomness
+//! generated ahead of time (§VI-A.a's offline/online decoupling as a
+//! serving-system component).
+//!
+//! The paper's efficiency story assumes all input-independent work is done
+//! *before* queries arrive: the online phase then costs only
+//! `compute + rounds×latency + bytes/bandwidth`. The seed executed both
+//! phases inline per protocol call, so a serving deployment paid offline
+//! cost on every request. This module closes that gap:
+//!
+//! * [`Pool`] holds typed queues of pre-generated material:
+//!   - **truncation pairs** (`(r, [[rᵗ]])`, keyed by shift) for
+//!     `Π_MultTr`/`Π_MatMulTr`,
+//!   - **λ-skeletons** (fresh `[[0]]`-masks, arithmetic and boolean) — the
+//!     multiplication/dot-product output randomness of `Π_Mult`/`Π_DotP`
+//!     and the γ-free multiplication inside `Π_Bit2A`,
+//!   - **bit-extraction masks** (`[[r]], [[msb r]]^B` pairs) for
+//!     `Π_BitExt` and therefore ReLU/Sigmoid.
+//! * `fill_*` run the real generation protocols (messages, verification,
+//!   metering all land under [`Phase::Offline`](crate::net::Phase)) and
+//!   stock the party's pool.
+//! * Pool-aware entry points (`proto::trunc::trunc_pairs`,
+//!   `proto::mult::lam_shares`, `convert::bitext::bitext_many`) pop from an
+//!   attached pool and fall back to inline generation when it cannot serve
+//!   the full request.
+//!
+//! **Determinism contract.** Consumption is all-or-nothing per request: a
+//! pool either serves the entire batch or none of it, so all four parties —
+//! which fill and pop in lockstep, like the PRF streams the pool caches —
+//! agree on every fallback decision. Exhaustion therefore degrades to the
+//! seed's inline path, never to a desync.
+//!
+//! **Tamper safety.** Pool items are shares of *verified* correlations; a
+//! party that tampers with (or replays) its local copy is exactly a
+//! malicious party mis-executing the online phase, and the existing
+//! vouch/expect digests and reconstruction cross-checks catch it (the
+//! failure-injection suite in `tests/equivalence.rs` exercises both).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::convert::bitext::{gen_bitext_masks, BitExtMask};
+use crate::net::Abort;
+use crate::proto::mult::sample_lam_share;
+use crate::proto::trunc::{gen_trunc_pairs, TruncPair};
+use crate::proto::Ctx;
+use crate::ring::{Bit, Ring, Z64};
+use crate::sharing::MShare;
+
+/// Pool hit/miss counters, per material kind. A *miss* is recorded when a
+/// pool was attached but could not serve the full request (exhaustion →
+/// inline fallback); requests against an unattached pool are not counted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub trunc_hits: u64,
+    pub trunc_misses: u64,
+    pub lam_hits: u64,
+    pub lam_misses: u64,
+    pub bitext_hits: u64,
+    pub bitext_misses: u64,
+}
+
+impl PoolStats {
+    pub fn hits(&self) -> u64 {
+        self.trunc_hits + self.lam_hits + self.bitext_hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.trunc_misses + self.lam_misses + self.bitext_misses
+    }
+}
+
+/// One party's pool of pre-generated correlated randomness.
+#[derive(Default)]
+pub struct Pool {
+    /// Truncation pairs, keyed by the arithmetic shift they were built for.
+    trunc: HashMap<u32, VecDeque<TruncPair>>,
+    /// Fresh λ_z skeletons over `Z_{2^64}`.
+    lam_z64: VecDeque<MShare<Z64>>,
+    /// Fresh λ_z skeletons over `Z_2`.
+    lam_bit: VecDeque<MShare<Bit>>,
+    /// `Π_BitExt` offline material.
+    bitext: VecDeque<BitExtMask>,
+    stats: PoolStats,
+}
+
+impl Pool {
+    pub fn new() -> Pool {
+        Pool::default()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    // ---- stock levels ---------------------------------------------------
+
+    pub fn len_trunc(&self, shift: u32) -> usize {
+        self.trunc.get(&shift).map_or(0, VecDeque::len)
+    }
+
+    pub fn len_lam<R: Ring>(&self) -> usize {
+        self.lam_queue::<R>().map_or(0, VecDeque::len)
+    }
+
+    pub fn len_bitext(&self) -> usize {
+        self.bitext.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trunc.values().all(VecDeque::is_empty)
+            && self.lam_z64.is_empty()
+            && self.lam_bit.is_empty()
+            && self.bitext.is_empty()
+    }
+
+    // ---- typed λ queue dispatch -----------------------------------------
+
+    fn lam_queue<R: Ring>(&self) -> Option<&VecDeque<MShare<R>>> {
+        use std::any::Any;
+        if let Some(q) = (&self.lam_z64 as &dyn Any).downcast_ref::<VecDeque<MShare<R>>>() {
+            return Some(q);
+        }
+        (&self.lam_bit as &dyn Any).downcast_ref::<VecDeque<MShare<R>>>()
+    }
+
+    fn lam_queue_mut<R: Ring>(&mut self) -> Option<&mut VecDeque<MShare<R>>> {
+        use std::any::Any;
+        if (&self.lam_z64 as &dyn Any).is::<VecDeque<MShare<R>>>() {
+            return (&mut self.lam_z64 as &mut dyn Any).downcast_mut::<VecDeque<MShare<R>>>();
+        }
+        (&mut self.lam_bit as &mut dyn Any).downcast_mut::<VecDeque<MShare<R>>>()
+    }
+
+    // ---- push (fill side) -----------------------------------------------
+
+    pub fn push_trunc(&mut self, shift: u32, pairs: Vec<TruncPair>) {
+        self.trunc.entry(shift).or_default().extend(pairs);
+    }
+
+    pub fn push_lam<R: Ring>(&mut self, items: Vec<MShare<R>>) {
+        let q = self
+            .lam_queue_mut::<R>()
+            .expect("pool stocks Z64 and Bit λ-skeletons only");
+        q.extend(items);
+    }
+
+    pub fn push_bitext(&mut self, masks: Vec<BitExtMask>) {
+        self.bitext.extend(masks);
+    }
+
+    // ---- pop (consumption side; all-or-nothing) -------------------------
+
+    /// Pop `n` truncation pairs for `shift`, or None (recording a miss) if
+    /// fewer are stocked.
+    pub fn pop_trunc(&mut self, shift: u32, n: usize) -> Option<Vec<TruncPair>> {
+        let q = self.trunc.entry(shift).or_default();
+        if q.len() < n {
+            self.stats.trunc_misses += 1;
+            return None;
+        }
+        self.stats.trunc_hits += 1;
+        Some(q.drain(..n).collect())
+    }
+
+    /// Pop `n` λ-skeletons of ring `R`, or None (recording a miss).
+    pub fn pop_lam<R: Ring>(&mut self, n: usize) -> Option<Vec<MShare<R>>> {
+        let available = self.lam_queue::<R>().map(VecDeque::len);
+        match available {
+            Some(len) if len >= n => {
+                let out = self
+                    .lam_queue_mut::<R>()
+                    .expect("queue just observed")
+                    .drain(..n)
+                    .collect();
+                self.stats.lam_hits += 1;
+                Some(out)
+            }
+            Some(_) => {
+                self.stats.lam_misses += 1;
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Pop `n` bit-extraction masks, or None (recording a miss).
+    pub fn pop_bitext(&mut self, n: usize) -> Option<Vec<BitExtMask>> {
+        if self.bitext.len() < n {
+            self.stats.bitext_misses += 1;
+            return None;
+        }
+        self.stats.bitext_hits += 1;
+        Some(self.bitext.drain(..n).collect())
+    }
+
+    // ---- failure-injection hooks ----------------------------------------
+
+    /// Mutable access to the next-to-be-served truncation pair — the
+    /// tamper hook of the failure-injection suite (a locally corrupted pool
+    /// models a malicious party; the online checks must abort).
+    pub fn trunc_front_mut(&mut self, shift: u32) -> Option<&mut TruncPair> {
+        self.trunc.get_mut(&shift).and_then(VecDeque::front_mut)
+    }
+
+    /// Duplicate the front truncation pair (a replay: this party will serve
+    /// the same pair twice while its peers advance). Returns false when
+    /// nothing is stocked.
+    pub fn replay_front_trunc(&mut self, shift: u32) -> bool {
+        let q = match self.trunc.get_mut(&shift) {
+            Some(q) => q,
+            None => return false,
+        };
+        match q.front().cloned() {
+            Some(front) => {
+                q.push_front(front);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+// ---- fill protocols (4-party; run under Phase::Offline) ------------------
+
+/// Pre-generate `n` verified truncation pairs for `shift` into the attached
+/// pool. Runs the full Fig. 18 offline protocol (generation + the P1/P2
+/// linear check), metered under `Phase::Offline`.
+pub fn fill_trunc(ctx: &mut Ctx, n: usize, shift: u32) -> Result<(), Abort> {
+    let pairs = gen_trunc_pairs(ctx, n, shift)?;
+    ctx.pool
+        .as_mut()
+        .expect("fill_trunc requires an attached pool")
+        .push_trunc(shift, pairs);
+    Ok(())
+}
+
+/// Pre-draw `n` fresh λ_z skeletons of ring `R` into the attached pool
+/// (non-interactive: correlated PRF draws only).
+pub fn fill_lam<R: Ring>(ctx: &mut Ctx, n: usize) {
+    let items: Vec<MShare<R>> =
+        ctx.offline(|ctx| (0..n).map(|_| sample_lam_share(ctx)).collect());
+    ctx.pool
+        .as_mut()
+        .expect("fill_lam requires an attached pool")
+        .push_lam(items);
+}
+
+/// Pre-generate `n` bit-extraction masks (`[[r]]`, `[[msb r]]^B`) into the
+/// attached pool — the `Π_BitExt` offline material ReLU/Sigmoid consume.
+pub fn fill_bitext(ctx: &mut Ctx, n: usize) -> Result<(), Abort> {
+    let masks = gen_bitext_masks(ctx, n)?;
+    ctx.pool
+        .as_mut()
+        .expect("fill_bitext requires an attached pool")
+        .push_bitext(masks);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetProfile, P1, P2};
+    use crate::proto::{run_4pc, share};
+    use crate::ring::fixed::FRAC_BITS;
+    use crate::sharing::open;
+
+    #[test]
+    fn pop_is_all_or_nothing() {
+        let mut pool = Pool::new();
+        pool.push_lam::<Z64>(vec![MShare::Helper { lam: [Z64(1), Z64(2), Z64(3)] }; 4]);
+        assert_eq!(pool.len_lam::<Z64>(), 4);
+        // request more than stocked: nothing drained, miss recorded
+        assert!(pool.pop_lam::<Z64>(5).is_none());
+        assert_eq!(pool.len_lam::<Z64>(), 4);
+        assert_eq!(pool.stats().lam_misses, 1);
+        // exact request drains
+        assert!(pool.pop_lam::<Z64>(4).is_some());
+        assert_eq!(pool.len_lam::<Z64>(), 0);
+        assert_eq!(pool.stats().lam_hits, 1);
+    }
+
+    #[test]
+    fn lam_queues_are_typed() {
+        let mut pool = Pool::new();
+        pool.push_lam::<Bit>(vec![MShare::Helper { lam: [Bit(true); 3] }; 2]);
+        assert_eq!(pool.len_lam::<Bit>(), 2);
+        assert_eq!(pool.len_lam::<Z64>(), 0);
+        assert!(pool.pop_lam::<Z64>(1).is_none());
+        assert!(pool.pop_lam::<Bit>(2).is_some());
+    }
+
+    #[test]
+    fn fill_trunc_stocks_all_parties_in_sync() {
+        let run = run_4pc(NetProfile::zero(), 700, |ctx| {
+            ctx.attach_pool(Pool::new());
+            fill_trunc(ctx, 8, FRAC_BITS)?;
+            let pool = ctx.detach_pool().unwrap();
+            Ok((pool.len_trunc(FRAC_BITS), pool.stats()))
+        });
+        let (outs, report) = run.expect_ok();
+        for (len, _) in &outs {
+            assert_eq!(*len, 8);
+        }
+        // generation traffic is offline-only
+        assert!(report.value_bits[0] > 0);
+        assert_eq!(report.value_bits[1], 0);
+    }
+
+    #[test]
+    fn pooled_trunc_pairs_open_consistently() {
+        // pairs served from the pool satisfy the r/rᵗ relation, same as
+        // inline generation
+        let run = run_4pc(NetProfile::zero(), 701, |ctx| {
+            ctx.attach_pool(Pool::new());
+            fill_trunc(ctx, 4, FRAC_BITS)?;
+            crate::proto::trunc::trunc_pairs(ctx, 4, FRAC_BITS)
+        });
+        let (outs, _) = run.expect_ok();
+        for i in 0..4 {
+            let r = outs[0][i].r[0].unwrap() + outs[0][i].r[1].unwrap() + outs[0][i].r[2].unwrap();
+            let rt = open(&[outs[0][i].rt, outs[1][i].rt, outs[2][i].rt, outs[3][i].rt]);
+            let diff = (r.truncate(FRAC_BITS) - rt).as_i64();
+            assert!((0..=2).contains(&diff), "pair {i}: rᵗ off by {diff}");
+        }
+    }
+
+    #[test]
+    fn pool_backed_mult_opens_to_product() {
+        let run = run_4pc(NetProfile::zero(), 702, |ctx| {
+            ctx.attach_pool(Pool::new());
+            fill_lam::<Z64>(ctx, 2);
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(Z64(41)))?;
+            let y = share(ctx, P2, (ctx.id() == P2).then_some(Z64(1009)))?;
+            let z = crate::proto::mult(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            let stats = ctx.detach_pool().unwrap().stats();
+            Ok((z, stats))
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(
+            open(&[outs[0].0, outs[1].0, outs[2].0, outs[3].0]),
+            Z64(41 * 1009)
+        );
+        assert!(outs[1].1.lam_hits >= 1, "mult must draw λ_z from the pool");
+    }
+}

@@ -30,8 +30,9 @@ pub fn dotp<R: Ring>(ctx: &mut Ctx, xs: &[MShare<R>], ys: &[MShare<R>]) -> Resul
     let d = xs.len();
 
     // ---- offline: λ_z + ⟨γ_xy⟩ with summed components ----
-    let (lam_z, gam_next, gam_prev, gam_all) = ctx.offline(|ctx| {
-        let lam_z: MShare<R> = super::mult::sample_lam_share(ctx);
+    // λ_z is pool-aware: a stocked pool serves the pre-drawn skeleton
+    let lam_z: MShare<R> = super::mult::lam_shares(ctx, 1).pop().expect("one λ_z");
+    let (gam_next, gam_prev, gam_all) = ctx.offline(|ctx| {
         let z = ctx.zero_share::<R>();
         let mut mine = R::ZERO;
         let mut all = [R::ZERO; 3];
@@ -80,13 +81,13 @@ pub fn dotp<R: Ring>(ctx: &mut Ctx, xs: &[MShare<R>], ys: &[MShare<R>]) -> Resul
                 ctx.vouch_ring(crate::net::P1, &[all[2]]);
                 ctx.vouch_ring(crate::net::P2, &[all[0]]);
                 ctx.vouch_ring(crate::net::P3, &[all[1]]);
-                Ok::<_, Abort>((lam_z, R::ZERO, R::ZERO, Some(all)))
+                Ok::<_, Abort>((R::ZERO, R::ZERO, Some(all)))
             }
             _ => {
                 ctx.send_ring1(me.prev_evaluator(), mine);
                 let got: R = ctx.recv_ring1(me.next_evaluator())?;
                 ctx.expect_ring(P0, &[got]);
-                Ok((lam_z, mine, got, None))
+                Ok((mine, got, None))
             }
         }
     })?;

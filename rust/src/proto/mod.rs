@@ -24,7 +24,7 @@ pub use dotp::{dotp, matmul};
 pub use mult::{mult, mult_many};
 pub use reconstruct::{fair_reconstruct, reconstruct, reconstruct_to};
 pub use sharing::{ash, share, vsh};
-pub use trunc::{matmul_tr, matmul_tr_shift, mult_tr};
+pub use trunc::{matmul_tr, matmul_tr_shift, mult_tr, mult_tr_many, trunc_pairs, TruncPair};
 
 use crate::crypto::{HashAcc, Rng};
 use crate::net::{
@@ -50,6 +50,10 @@ pub struct Ctx<'a> {
     vouch: [[HashAcc; 4]; 2],
     /// Expected verification transcript per peer and phase.
     expect: [[HashAcc; 4]; 2],
+    /// Optional offline precomputation pool (see [`crate::pool`]): when
+    /// attached and stocked, pool-aware protocols pop pre-generated
+    /// correlated randomness instead of generating inline.
+    pub(crate) pool: Option<crate::pool::Pool>,
 }
 
 impl<'a> Ctx<'a> {
@@ -68,7 +72,34 @@ impl<'a> Ctx<'a> {
             gc_offset,
             vouch: Default::default(),
             expect: Default::default(),
+            pool: None,
         }
+    }
+
+    // ---- offline precomputation pool ------------------------------------
+
+    /// Attach an offline precomputation pool. Pool-aware protocols
+    /// (`trunc_pairs`, the λ_z draws of `mult`/`dotp`/`bit2a`, the mask
+    /// material of `bitext`) pop from it when stocked and fall back to
+    /// inline generation otherwise. **All four parties must attach (and
+    /// fill) their pools in lockstep** — pool consumption is part of the
+    /// public protocol schedule, exactly like the PRF streams it caches.
+    pub fn attach_pool(&mut self, pool: crate::pool::Pool) {
+        self.pool = Some(pool);
+    }
+
+    /// Detach and return the pool (e.g. to inspect [`crate::pool::PoolStats`]).
+    pub fn detach_pool(&mut self) -> Option<crate::pool::Pool> {
+        self.pool.take()
+    }
+
+    /// Mutable access to the attached pool, if any.
+    pub fn pool_mut(&mut self) -> Option<&mut crate::pool::Pool> {
+        self.pool.as_mut()
+    }
+
+    pub fn has_pool(&self) -> bool {
+        self.pool.is_some()
     }
 
     #[inline]

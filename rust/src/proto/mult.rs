@@ -61,10 +61,14 @@ pub(crate) fn mult_offline<R: Ring>(
     assert_eq!(xs.len(), ys.len());
     let n = xs.len();
     let me = ctx.id();
+    // fresh output mask λ_z (pool-aware: pops a pre-drawn skeleton when a
+    // stocked pool is attached)
+    let lam_z = if with_lam_z {
+        lam_shares::<R>(ctx, 1).pop().expect("one λ_z")
+    } else {
+        MShare::zero(me)
+    };
     ctx.offline(|ctx| {
-        // fresh output masks λ_z,j
-        let lam_z = if with_lam_z { sample_lam_share(ctx) } else { MShare::zero(me) };
-
         // zero shares and γ components
         let mut gamma_mine: Vec<R> = Vec::with_capacity(n); // the component I compute
         let mut gamma_all: [Vec<R>; 3] = [Vec::new(), Vec::new(), Vec::new()]; // P0 only
@@ -125,6 +129,22 @@ pub(crate) fn mult_offline<R: Ring>(
         };
         Ok(MultCorr { gamma, lam_z })
     })
+}
+
+/// Pool-aware batch of fresh λ_z skeletons: pops pre-generated material
+/// when a stocked pool is attached ([`crate::pool`]), otherwise draws
+/// inline from the correlated PRF streams under `Phase::Offline`. The
+/// decision is all-or-nothing so all parties agree on it.
+pub(crate) fn lam_shares<R: Ring>(ctx: &mut Ctx, n: usize) -> Vec<MShare<R>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    if let Some(pool) = ctx.pool.as_mut() {
+        if let Some(v) = pool.pop_lam::<R>(n) {
+            return v;
+        }
+    }
+    ctx.offline(|ctx| (0..n).map(|_| sample_lam_share(ctx)).collect())
 }
 
 /// Sample a fresh mask λ_z as an [`MShare`] skeleton (m = 0).
@@ -238,8 +258,8 @@ pub fn mult_many<R: Ring>(
     // caller's message coalescing) — instead, do it properly batched here.
     let n = xs.len();
     let me = ctx.id();
-    // λ_z for every gate
-    let lam_zs: Vec<MShare<R>> = ctx.offline(|ctx| (0..n).map(|_| sample_lam_share(ctx)).collect());
+    // λ_z for every gate (pool-aware)
+    let lam_zs: Vec<MShare<R>> = lam_shares(ctx, n);
     let corr0 = mult_offline(ctx, xs, ys, false)?;
     let mut out = Vec::with_capacity(n);
     // online, batched manually to keep one round for the whole slice

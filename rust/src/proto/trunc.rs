@@ -25,6 +25,7 @@ use super::Ctx;
 
 /// A verified truncation pair: additive `r`-components (those I hold) and
 /// the `[[rᵗ]]` share (with `m = 0`, `λ = −rᵗ`).
+#[derive(Clone, Debug)]
 pub struct TruncPair {
     /// r components I hold, by index 1..=3 (None where not held).
     pub r: [Option<Z64>; 3],
@@ -32,9 +33,23 @@ pub struct TruncPair {
     pub rt: MShare<Z64>,
 }
 
-/// Offline generation + verification of `n` truncation pairs (Fig. 18,
-/// offline). `d = FRAC_BITS` unless overridden.
+/// `n` verified truncation pairs for shift `d` (`FRAC_BITS` unless
+/// overridden). Pool-aware: pops pre-generated pairs when an attached
+/// [`crate::pool::Pool`] can serve the whole request, else runs the
+/// inline Fig. 18 offline protocol ([`gen_trunc_pairs`]). The decision is
+/// all-or-nothing, so all four parties take the same branch.
 pub fn trunc_pairs(ctx: &mut Ctx, n: usize, d: u32) -> Result<Vec<TruncPair>, Abort> {
+    if let Some(pool) = ctx.pool.as_mut() {
+        if let Some(pairs) = pool.pop_trunc(d, n) {
+            return Ok(pairs);
+        }
+    }
+    gen_trunc_pairs(ctx, n, d)
+}
+
+/// Offline generation + verification of `n` truncation pairs (Fig. 18,
+/// offline) — the inline path, also used by [`crate::pool::fill_trunc`].
+pub(crate) fn gen_trunc_pairs(ctx: &mut Ctx, n: usize, d: u32) -> Result<Vec<TruncPair>, Abort> {
     let me = ctx.id();
     ctx.offline(|ctx| {
         // r_j sampled by P\{P_j}

@@ -1,46 +1,35 @@
-//! PJRT-backed execution of the AOT artifacts.
+//! PJRT-backed execution of the AOT artifacts — **offline-image stub**.
 //!
-//! `make artifacts` lowers the L2 JAX graphs (calling the L1 Pallas kernels)
-//! to HLO text once; this module loads `artifacts/*.hlo.txt` through the
-//! `xla` crate (`PjRtClient::cpu` → `HloModuleProto::from_text_file` →
-//! `compile` → `execute`) and serves `gemm`/`masked_matmul` for the shapes
-//! that were lowered. Anything else falls back to the native kernels — the
-//! protocol layer never notices.
-//!
-//! The engine is opt-in (`init`/`init_default`): unit tests run native-only;
-//! the CLI, benches and examples enable it when `artifacts/` exists.
+//! The full engine loads `artifacts/*.hlo.txt` (lowered by
+//! `python/compile/aot.py` from the L2 JAX graphs calling the L1 Pallas
+//! kernels) through the `xla` crate's PJRT CPU client and serves
+//! `gemm`/`masked_matmul` for the shapes that were lowered. The offline
+//! build image has no crates.io mirror, so the `xla` dependency cannot be
+//! vendored; this module keeps the engine's exact public surface
+//! (`init`/`init_default`/`active`/`prefer_pjrt`/`try_*`) while reporting
+//! the engine as unavailable, so every caller — CLI, benches, examples,
+//! dispatchers in [`super`] — falls through to the fused native kernels
+//! without noticing. The §Perf pass measured the interpret-mode CPU
+//! artifacts at ~2.6× the fused native kernel anyway (see EXPERIMENTS.md);
+//! on real accelerator hardware the Mosaic lowering flips that, at which
+//! point this stub is replaced by the `xla`-backed engine again.
 
-use std::any::TypeId;
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+use std::sync::OnceLock;
 
-use once_cell::sync::OnceCell;
+use crate::ring::{Matrix, Ring};
 
-use crate::ring::{Matrix, Ring, Z64};
+/// Recorded engine configuration: `Some(dir)` would hold the validated
+/// artifact directory when a PJRT backend is linked in; the stub always
+/// records `None`.
+static CONFIG: OnceLock<Option<()>> = OnceLock::new();
 
-/// PJRT handles are not `Send`, so each party thread holds its own engine;
-/// the global config only records the (validated) artifact directory.
-static CONFIG: OnceCell<Option<PathBuf>> = OnceCell::new();
-
-struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    /// compiled executables keyed by artifact name
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// artifact names known missing (avoid re-stat'ing)
-    missing: HashMap<String, ()>,
-}
-
-thread_local! {
-    static ENGINE: RefCell<Option<Engine>> = const { RefCell::new(None) };
-}
-
-/// Initialise the PJRT engine from an artifact directory. Returns false if
-/// the directory does not exist.
+/// Initialise the PJRT engine from an artifact directory. The stub records
+/// the attempt and returns false: no PJRT backend is linked in this build.
 pub fn init(dir: &Path) -> bool {
-    CONFIG.get_or_init(|| dir.is_dir().then(|| dir.to_path_buf())).is_some()
-        && CONFIG.get().unwrap().is_some()
+    let _ = dir;
+    CONFIG.get_or_init(|| None);
+    false
 }
 
 /// Initialise from `$TRIDENT_ARTIFACTS` or `./artifacts`.
@@ -49,111 +38,24 @@ pub fn init_default() -> bool {
     init(Path::new(&dir))
 }
 
-/// Is the engine live?
+/// Is the engine live? (Always false in the stub build.)
 pub fn active() -> bool {
     matches!(CONFIG.get(), Some(Some(_)))
 }
 
-/// Hot-path dispatch policy. `TRIDENT_PJRT=off` disables the PJRT path for
-/// the protocol hot loop (the §Perf pass measured the interpret-mode CPU
-/// artifacts at ~2.6× the fused native kernel; on a real TPU the Mosaic
-/// lowering flips that — see EXPERIMENTS.md §Perf). Artifact-vs-native
-/// parity tests call `try_*` directly and are unaffected.
+/// Hot-path dispatch policy: prefer PJRT only when the engine is live and
+/// `TRIDENT_PJRT` does not disable it.
 pub fn prefer_pjrt() -> bool {
     active() && !matches!(std::env::var("TRIDENT_PJRT").as_deref(), Ok("off") | Ok("0"))
 }
 
-/// Execute artifact `name` on u64 input buffers with given dims; returns the
-/// flat u64 output or None if the artifact is unavailable.
-fn execute(name: &str, inputs: &[(&[u64], usize, usize)], out_len: usize) -> Option<Vec<u64>> {
-    let dir = CONFIG.get()?.as_ref()?.clone();
-    ENGINE.with(|cell| {
-        let mut slot = cell.borrow_mut();
-        if slot.is_none() {
-            match xla::PjRtClient::cpu() {
-                Ok(client) => {
-                    *slot = Some(Engine {
-                        client,
-                        dir,
-                        execs: HashMap::new(),
-                        missing: HashMap::new(),
-                    });
-                }
-                Err(e) => {
-                    eprintln!("trident: PJRT client unavailable: {e}");
-                    return None;
-                }
-            }
-        }
-        let eng = slot.as_mut().unwrap();
-        if eng.missing.contains_key(name) {
-            return None;
-        }
-        if !eng.execs.contains_key(name) {
-            let path = eng.dir.join(format!("{name}.hlo.txt"));
-            if !path.is_file() {
-                eng.missing.insert(name.to_string(), ());
-                return None;
-            }
-            let proto = xla::HloModuleProto::from_text_file(path.to_str()?).ok()?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            match eng.client.compile(&comp) {
-                Ok(exe) => {
-                    eng.execs.insert(name.to_string(), exe);
-                }
-                Err(e) => {
-                    eprintln!("trident: compile {name} failed: {e}");
-                    eng.missing.insert(name.to_string(), ());
-                    return None;
-                }
-            }
-        }
-        let exe = eng.execs.get(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, r, c)| {
-                xla::Literal::vec1(data).reshape(&[*r as i64, *c as i64]).expect("reshape")
-            })
-            .collect();
-        let result = exe.execute::<xla::Literal>(&literals).ok()?;
-        let lit = result[0][0].to_literal_sync().ok()?;
-        let out = lit.to_tuple1().ok()?;
-        let v = out.to_vec::<u64>().ok()?;
-        (v.len() == out_len).then_some(v)
-    })
-}
-
-#[inline]
-fn as_u64_mat<R: Ring>(m: &Matrix<R>) -> Option<(&[u64], usize, usize)> {
-    if TypeId::of::<R>() != TypeId::of::<Z64>() {
-        return None;
-    }
-    // SAFETY: Z64 is repr(transparent) over u64; guarded by the TypeId check.
-    let data: &[u64] =
-        unsafe { std::slice::from_raw_parts(m.data().as_ptr() as *const u64, m.data().len()) };
-    Some((data, m.rows(), m.cols()))
-}
-
-fn from_u64_mat<R: Ring>(rows: usize, cols: usize, v: Vec<u64>) -> Matrix<R> {
-    debug_assert_eq!(TypeId::of::<R>(), TypeId::of::<Z64>());
-    // SAFETY: guarded by caller's TypeId check; Z64 is repr(transparent).
-    let data: Vec<R> = unsafe {
-        let mut v = std::mem::ManuallyDrop::new(v);
-        Vec::from_raw_parts(v.as_mut_ptr() as *mut R, v.len(), v.capacity())
-    };
-    Matrix::from_vec(rows, cols, data)
-}
-
-/// PJRT gemm if an artifact for the shape exists.
+/// PJRT gemm if an artifact for the shape exists (stub: never).
 pub fn try_gemm<R: Ring>(a: &Matrix<R>, b: &Matrix<R>) -> Option<Matrix<R>> {
-    let (ad, ar, ac) = as_u64_mat(a)?;
-    let (bd, br, bc) = as_u64_mat(b)?;
-    let name = format!("gemm_{ar}x{ac}x{bc}");
-    let out = execute(&name, &[(ad, ar, ac), (bd, br, bc)], ar * bc)?;
-    Some(from_u64_mat(ar, bc, out))
+    let _ = (a, b);
+    None
 }
 
-/// PJRT fused masked matmul if an artifact for the shape exists.
+/// PJRT fused masked matmul if an artifact for the shape exists (stub: never).
 #[allow(clippy::too_many_arguments)]
 pub fn try_masked_matmul<R: Ring>(
     lam_x: &Matrix<R>,
@@ -163,22 +65,11 @@ pub fn try_masked_matmul<R: Ring>(
     gamma: &Matrix<R>,
     lam_z: &Matrix<R>,
 ) -> Option<Matrix<R>> {
-    let (lx, a, b) = as_u64_mat(lam_x)?;
-    let (my, _, c) = as_u64_mat(m_y)?;
-    let (mx, _, _) = as_u64_mat(m_x)?;
-    let (ly, _, _) = as_u64_mat(lam_y)?;
-    let (g, _, _) = as_u64_mat(gamma)?;
-    let (lz, _, _) = as_u64_mat(lam_z)?;
-    let name = format!("masked_matmul_{a}x{b}x{c}");
-    let out = execute(
-        &name,
-        &[(lx, a, b), (my, b, c), (mx, a, b), (ly, b, c), (g, a, c), (lz, a, c)],
-        a * c,
-    )?;
-    Some(from_u64_mat(a, c, out))
+    let _ = (lam_x, m_y, m_x, lam_y, gamma, lam_z);
+    None
 }
 
-/// PJRT offline γ-component if an artifact exists.
+/// PJRT offline γ-component if an artifact exists (stub: never).
 pub fn try_gamma<R: Ring>(
     lx_j: &Matrix<R>,
     lx_j1: &Matrix<R>,
@@ -186,67 +77,26 @@ pub fn try_gamma<R: Ring>(
     ly_j1: &Matrix<R>,
     mask: &Matrix<R>,
 ) -> Option<Matrix<R>> {
-    let (a0, a, b) = as_u64_mat(lx_j)?;
-    let (a1, _, _) = as_u64_mat(lx_j1)?;
-    let (b0, _, c) = as_u64_mat(ly_j)?;
-    let (b1, _, _) = as_u64_mat(ly_j1)?;
-    let (m, _, _) = as_u64_mat(mask)?;
-    let name = format!("gamma_{a}x{b}x{c}");
-    let out = execute(
-        &name,
-        &[(a0, a, b), (a1, a, b), (b0, b, c), (b1, b, c), (m, a, c)],
-        a * c,
-    )?;
-    Some(from_u64_mat(a, c, out))
+    let _ = (lx_j, lx_j1, ly_j, ly_j1, mask);
+    None
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::crypto::Rng;
-
-    fn engine_up() -> bool {
-        init(Path::new("artifacts")) && active()
-    }
+    use crate::ring::Z64;
 
     #[test]
-    fn pjrt_gemm_matches_native_when_available() {
-        if !engine_up() {
-            eprintln!("skipping: no artifacts/ (run `make artifacts`)");
-            return;
-        }
-        let mut rng = Rng::seeded(300);
-        let a = Matrix::from_fn(8, 8, |_, _| rng.gen::<Z64>());
-        let b = Matrix::from_fn(8, 8, |_, _| rng.gen::<Z64>());
-        let via_pjrt = try_gemm(&a, &b).expect("8x8x8 artifact present");
-        assert_eq!(via_pjrt, a.matmul(&b));
-    }
-
-    #[test]
-    fn pjrt_masked_matmul_matches_native() {
-        if !engine_up() {
-            eprintln!("skipping: no artifacts/");
-            return;
-        }
-        let mut rng = Rng::seeded(301);
-        let mk = |r: &mut Rng| Matrix::from_fn(8, 8, |_, _| r.gen::<Z64>());
-        let (lx, my, mx, ly, g, lz) =
-            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
-        let via_pjrt = try_masked_matmul(&lx, &my, &mx, &ly, &g, &lz).expect("artifact");
-        let native = super::super::native::masked_matmul(&lx, &my, &mx, &ly, &g, &lz);
-        assert_eq!(via_pjrt, native);
-    }
-
-    #[test]
-    fn unknown_shape_falls_back() {
-        if !engine_up() {
-            return;
-        }
+    fn stub_reports_unavailable_and_dispatch_falls_back() {
+        assert!(!init(Path::new("artifacts")));
+        assert!(!active());
+        assert!(!prefer_pjrt());
         let mut rng = Rng::seeded(302);
         let a = Matrix::from_fn(9, 7, |_, _| rng.gen::<Z64>());
         let b = Matrix::from_fn(7, 5, |_, _| rng.gen::<Z64>());
         assert!(try_gemm(&a, &b).is_none());
-        // the dispatcher still answers
+        // the dispatcher still answers through the native kernel
         assert_eq!(super::super::gemm(&a, &b), a.matmul(&b));
     }
 

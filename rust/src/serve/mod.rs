@@ -1,0 +1,424 @@
+//! Batched online serving engine — the MLaaS loop of §I run the way the
+//! paper's offline/online split intends: all input-independent work
+//! pre-generated into the [`crate::pool`], concurrent inference queries
+//! coalesced into cross-request batches so a whole wave of traffic costs
+//! one protocol round-trip, and per-query amortized cost reported through
+//! the existing meter.
+//!
+//! Pipeline per coalesced batch:
+//!
+//! 1. [`RequestQueue::next_batch`] pops up to `coalesce` pending queries
+//!    and stacks their feature rows into one matrix;
+//! 2. the data owner `Π_Sh`-shares the stacked matrix (one round for the
+//!    whole wave);
+//! 3. one `Π_MatMulTr` against the resident model (one round; truncation
+//!    pairs drained from the pool, so the per-request offline cost is the
+//!    γ-exchange only), optionally followed by a batched ReLU;
+//! 4. predictions are reconstructed towards the data owner and the batched
+//!    verification digests are flushed — every response is verified before
+//!    release.
+//!
+//! Rounds per batch are therefore **independent of how many queries were
+//! coalesced**; the per-query amortized rounds/latency/verification bytes
+//! shrink ~linearly in the coalescing factor (asserted by the meter
+//! regression tests and printed by `bench::serve_table` /
+//! `benches/serving.rs`).
+
+use std::collections::VecDeque;
+
+use crate::crypto::Rng;
+use crate::ml::{share_fixed_mat, F64Mat};
+use crate::net::{Abort, NetProfile, NetReport, Phase, P1, P2};
+use crate::pool::{self, Pool, PoolStats};
+use crate::proto::{matmul_tr, run_4pc, Ctx};
+use crate::ring::fixed::{FixedPoint, FRAC_BITS};
+use crate::ring::Z64;
+use crate::sharing::MMat;
+
+/// Domain separators so the model / query streams don't collide.
+const W_SEED: u64 = 0x7365_7276_655f_7731;
+const Q_SEED: u64 = 0x7365_7276_655f_7131;
+
+/// One inference query: `rows × d` feature rows. The clear values exist
+/// only at the data owner; the other parties see the public shape.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub id: usize,
+    pub rows: usize,
+    /// Feature rows, present at the data owner only.
+    pub x: Option<F64Mat>,
+}
+
+/// FIFO request queue with cross-request coalescing: `next_batch` drains up
+/// to `coalesce` pending queries into one protocol-level batch.
+pub struct RequestQueue {
+    pending: VecDeque<Query>,
+    coalesce: usize,
+}
+
+impl RequestQueue {
+    pub fn new(coalesce: usize) -> RequestQueue {
+        RequestQueue { pending: VecDeque::new(), coalesce: coalesce.max(1) }
+    }
+
+    pub fn push(&mut self, q: Query) {
+        self.pending.push_back(q);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Pop the next coalesced wave (up to `coalesce` queries), FIFO order.
+    pub fn next_batch(&mut self) -> Option<Vec<Query>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let take = self.coalesce.min(self.pending.len());
+        Some(self.pending.drain(..take).collect())
+    }
+}
+
+/// Serving workload configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Feature count.
+    pub d: usize,
+    /// Rows per query (a client-side mini-batch; 1 = single sample).
+    pub rows_per_query: usize,
+    /// Number of queries in the workload.
+    pub queries: usize,
+    /// Max queries coalesced into one protocol batch (1 = the seed's
+    /// per-query path).
+    pub coalesce: usize,
+    /// Pre-stock the offline pool before serving starts.
+    pub pool: bool,
+    /// Apply a batched ReLU after the linear layer (exercises the
+    /// bit-extraction pool material).
+    pub relu: bool,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            d: 784,
+            rows_per_query: 1,
+            queries: 8,
+            coalesce: 8,
+            pool: true,
+            relu: false,
+            seed: 123,
+        }
+    }
+}
+
+/// Per-party output of one serving run (internal).
+struct PartyOut {
+    /// Per-batch online virtual-time deltas.
+    batch_lat: Vec<f64>,
+    /// Per-batch online round deltas.
+    batch_rounds: Vec<u64>,
+    /// Decoded predictions, at the data owner only.
+    answers: Vec<f64>,
+    pool_stats: Option<PoolStats>,
+    pool_left_trunc: usize,
+}
+
+/// Aggregated serving measurements.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub queries: usize,
+    pub batches: usize,
+    pub rows: usize,
+    /// Online rounds of the serving loop (clocks reset after model setup
+    /// and pool fill).
+    pub online_rounds: u64,
+    /// Summed per-batch online latency (max across parties per batch).
+    pub online_latency: f64,
+    /// Online value bits of the serving loop (one-time model sharing
+    /// subtracted analytically).
+    pub online_value_bits: u64,
+    /// Total online bytes of the serving loop, all classes — includes the
+    /// amortized verification digests, which is where coalescing shows up
+    /// in bytes. The one-time model-share payload is subtracted
+    /// analytically; its verification digests travel on directions the
+    /// first batch flushes anyway (fixed 32-byte accumulators), so the
+    /// serving window is exact.
+    pub online_total_bytes: u64,
+    /// Offline value bits (pool fill + per-batch γ exchanges).
+    pub offline_value_bits: u64,
+    /// Pool counters (None when serving inline).
+    pub pool_stats: Option<PoolStats>,
+    /// Truncation pairs left unserved in the pool at shutdown.
+    pub pool_left_trunc: usize,
+    /// Online round cost of each coalesced batch (all ~equal: the rounds of
+    /// a single query, regardless of how many were coalesced).
+    pub rounds_per_batch: Vec<u64>,
+    /// Decoded predictions as seen by the data owner, query order.
+    pub answers: Vec<f64>,
+    pub report: NetReport,
+}
+
+impl ServeStats {
+    pub fn per_query_latency(&self) -> f64 {
+        self.online_latency / self.queries.max(1) as f64
+    }
+
+    pub fn per_query_rounds(&self) -> f64 {
+        self.online_rounds as f64 / self.queries.max(1) as f64
+    }
+
+    pub fn per_query_online_bytes(&self) -> f64 {
+        self.online_total_bytes as f64 / self.queries.max(1) as f64
+    }
+}
+
+/// Build the deterministic model weights (at the model owner).
+fn model_weights(d: usize, seed: u64) -> F64Mat {
+    let mut rng = Rng::seeded(seed ^ W_SEED);
+    let mut w = F64Mat::zeros(d, 1);
+    for j in 0..d {
+        w.set(j, 0, rng.normal() * 0.1);
+    }
+    w
+}
+
+/// Build the deterministic query stream (at the data owner).
+fn query_stream(cfg: &ServeConfig) -> Vec<F64Mat> {
+    let mut rng = Rng::seeded(cfg.seed ^ Q_SEED);
+    (0..cfg.queries)
+        .map(|_| {
+            let mut x = F64Mat::zeros(cfg.rows_per_query, cfg.d);
+            for r in 0..cfg.rows_per_query {
+                for c in 0..cfg.d {
+                    x.set(r, c, rng.normal());
+                }
+            }
+            x
+        })
+        .collect()
+}
+
+/// Cleartext reference for the workload (test oracle).
+pub fn cleartext_predictions(cfg: &ServeConfig) -> Vec<f64> {
+    let w = model_weights(cfg.d, cfg.seed);
+    let mut out = Vec::new();
+    for x in query_stream(cfg) {
+        let u = x.matmul(&w);
+        for r in 0..cfg.rows_per_query {
+            let v = u.at(r, 0);
+            out.push(if cfg.relu && v < 0.0 { 0.0 } else { v });
+        }
+    }
+    out
+}
+
+/// The per-party serving program.
+fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
+    // ---- resident model: shared once by the model owner P1 ----
+    let w0 = (ctx.id() == P1).then(|| model_weights(cfg.d, cfg.seed));
+    let w = share_fixed_mat(ctx, P1, w0.as_ref(), cfg.d, 1)?;
+
+    // ---- offline pre-stocking ----
+    let total_rows = cfg.queries * cfg.rows_per_query;
+    let coalesce = cfg.coalesce.max(1);
+    let batches = (cfg.queries + coalesce - 1) / coalesce;
+    if cfg.pool {
+        ctx.attach_pool(Pool::new());
+        pool::fill_trunc(ctx, total_rows, FRAC_BITS)?;
+        if cfg.relu {
+            pool::fill_bitext(ctx, total_rows)?;
+            // one λ_z per bitext_many invocation (its internal Π_Mult)
+            pool::fill_lam::<Z64>(ctx, batches);
+        }
+    }
+
+    // ---- request queue (values at the data owner P2 only) ----
+    let mut queue = RequestQueue::new(cfg.coalesce);
+    let xs_clear = (ctx.id() == P2).then(|| query_stream(cfg));
+    for id in 0..cfg.queries {
+        queue.push(Query {
+            id,
+            rows: cfg.rows_per_query,
+            x: xs_clear.as_ref().map(|v| v[id].clone()),
+        });
+    }
+
+    // ---- serving loop, measured in isolation ----
+    ctx.net.reset_clocks();
+    let mut out = PartyOut {
+        batch_lat: Vec::new(),
+        batch_rounds: Vec::new(),
+        answers: Vec::new(),
+        pool_stats: None,
+        pool_left_trunc: 0,
+    };
+    while let Some(batch) = queue.next_batch() {
+        let rows: usize = batch.iter().map(|q| q.rows).sum();
+        let t0 = ctx.net.clock(Phase::Online);
+        let r0 = ctx.net.rounds(Phase::Online);
+
+        // stack the wave into one cross-request matrix
+        let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
+            let mut m = F64Mat::zeros(rows, cfg.d);
+            let mut row = 0;
+            for q in &batch {
+                let x = q.x.as_ref().expect("data owner holds query rows");
+                for r in 0..q.rows {
+                    for c in 0..cfg.d {
+                        m.set(row, c, x.at(r, c));
+                    }
+                    row += 1;
+                }
+            }
+            m
+        });
+        let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, cfg.d)?;
+
+        // one truncated matmul for the whole wave
+        let mut u = matmul_tr(ctx, &x_sh, &w)?;
+        if cfg.relu {
+            let (r, _) = crate::ml::relu_many(ctx, &u.to_shares())?;
+            u = MMat::from_shares(rows, 1, &r);
+        }
+
+        // deliver: open towards the data owner, flushing verification
+        let opened =
+            crate::proto::reconstruct::reconstruct_to_many(ctx, &u.to_shares(), &[P2])?;
+        if let Some(vals) = opened {
+            out.answers.extend(vals.iter().map(|&v| FixedPoint::decode(v)));
+        }
+
+        out.batch_lat.push(ctx.net.clock(Phase::Online) - t0);
+        out.batch_rounds.push(ctx.net.rounds(Phase::Online) - r0);
+    }
+
+    if let Some(pool) = ctx.detach_pool() {
+        out.pool_stats = Some(pool.stats());
+        out.pool_left_trunc = pool.len_trunc(FRAC_BITS);
+    }
+    Ok(out)
+}
+
+/// Run the serving workload over `profile` and aggregate measurements.
+pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
+    let cfg2 = cfg.clone();
+    let run = run_4pc(profile, cfg.seed, move |ctx| serve_party(ctx, &cfg2));
+    let (outs, report) = run.expect_ok();
+
+    let batches = outs[1].batch_lat.len();
+    let mut online_latency = 0.0;
+    for i in 0..batches {
+        let batch_max = outs
+            .iter()
+            .map(|o| o.batch_lat[i])
+            .fold(0.0f64, f64::max);
+        online_latency += batch_max;
+    }
+    let w_share_bits = 2 * cfg.d as u64 * 64; // one-time model sharing
+    ServeStats {
+        queries: cfg.queries,
+        batches,
+        rows: cfg.queries * cfg.rows_per_query,
+        online_rounds: report.rounds[Phase::Online as usize],
+        online_latency,
+        online_value_bits: report.value_bits[Phase::Online as usize]
+            .saturating_sub(w_share_bits),
+        online_total_bytes: report.total_bytes[Phase::Online as usize]
+            .saturating_sub(w_share_bits / 8),
+        offline_value_bits: report.value_bits[Phase::Offline as usize],
+        pool_stats: outs[1].pool_stats,
+        pool_left_trunc: outs[1].pool_left_trunc,
+        rounds_per_batch: outs[1].batch_rounds.clone(),
+        answers: outs[2].answers.clone(),
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(queries: usize, coalesce: usize, pool: bool) -> ServeConfig {
+        ServeConfig {
+            d: 16,
+            rows_per_query: 2,
+            queries,
+            coalesce,
+            pool,
+            relu: false,
+            seed: 900,
+        }
+    }
+
+    #[test]
+    fn serving_answers_match_cleartext() {
+        for (pool, coalesce) in [(false, 1), (true, 4)] {
+            let c = cfg(4, coalesce, pool);
+            let stats = serve(NetProfile::zero(), c.clone());
+            let want = cleartext_predictions(&c);
+            assert_eq!(stats.answers.len(), want.len());
+            for (i, (got, want)) in stats.answers.iter().zip(&want).enumerate() {
+                assert!(
+                    (got - want).abs() < 0.01,
+                    "query row {i}: got {got}, want {want} (pool={pool})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_wave_costs_one_querys_rounds() {
+        // N coalesced queries: same online rounds as a single query
+        let one = serve(NetProfile::zero(), cfg(1, 1, true));
+        let wave = serve(NetProfile::zero(), cfg(6, 6, true));
+        assert_eq!(wave.batches, 1);
+        assert_eq!(
+            wave.online_rounds, one.online_rounds,
+            "coalescing must not add rounds"
+        );
+        // the seed's per-query path pays per query
+        let inline = serve(NetProfile::zero(), cfg(6, 1, false));
+        assert_eq!(inline.online_rounds, 6 * one.online_rounds);
+    }
+
+    #[test]
+    fn pool_drains_during_serving() {
+        let stats = serve(NetProfile::zero(), cfg(4, 2, true));
+        let ps = stats.pool_stats.expect("pool attached");
+        assert!(ps.trunc_hits >= 2, "trunc pairs must come from the pool: {ps:?}");
+        assert_eq!(stats.pool_left_trunc, 0, "pool sized to the workload drains fully");
+    }
+
+    #[test]
+    fn relu_serving_uses_bitext_pool() {
+        let mut c = cfg(2, 2, true);
+        c.relu = true;
+        let stats = serve(NetProfile::zero(), c.clone());
+        let ps = stats.pool_stats.expect("pool attached");
+        assert!(ps.bitext_hits >= 1, "relu must drain bitext masks: {ps:?}");
+        let want = cleartext_predictions(&c);
+        for (got, want) in stats.answers.iter().zip(&want) {
+            assert!((got - want).abs() < 0.01, "relu serving: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn request_queue_fifo_and_coalescing() {
+        let mut q = RequestQueue::new(3);
+        for id in 0..7 {
+            q.push(Query { id, rows: 1, x: None });
+        }
+        let b1 = q.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.next_batch().unwrap().len(), 3);
+        assert_eq!(q.next_batch().unwrap().len(), 1);
+        assert!(q.next_batch().is_none());
+        assert!(q.is_empty());
+    }
+}

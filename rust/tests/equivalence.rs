@@ -1,0 +1,661 @@
+//! Protocol-equivalence suite backing the offline pool + serving engine:
+//!
+//! * **batched == scalar**: `mult_many`/`mult_tr_many`/`bit2a_many`/
+//!   `bitext_many` open to the same values as their per-element scalar
+//!   counterparts (property-tested via `testutil::forall`);
+//! * **pool-backed == inline**: every protocol the pool feeds produces
+//!   the same opened outputs whether its correlated randomness was
+//!   pre-generated (`pool::fill_*`) or generated inline;
+//! * **failure injection**: a tampered or replayed pooled truncation pair
+//!   aborts in the online phase — never a wrong opened value at an honest
+//!   party — and pool exhaustion falls back deterministically;
+//! * **meter regressions**: pool attachment leaves `Π_MultTr`'s online
+//!   rounds/bits untouched (the paper-shaped cost), and a coalesced wave
+//!   of N queries costs the rounds of a single query.
+
+use trident::convert::{bit2a, bit2a_many, bitext, bitext_many};
+use trident::net::{NetProfile, P1, P2, P3};
+use trident::pool::{fill_bitext, fill_lam, fill_trunc, Pool};
+use trident::proto::sharing::share_many_n;
+use trident::proto::{
+    dotp, mult, mult_many, mult_tr, mult_tr_many, run_4pc, run_4pc_timeout, share,
+};
+use trident::ring::fixed::{FixedPoint, FRAC_BITS, SCALE};
+use trident::ring::{Bit, Z64};
+use trident::sharing::{open, MShare};
+use trident::testutil::{forall, shrink_vec};
+
+// ---------------------------------------------------------- batched == scalar
+
+#[test]
+fn property_mult_many_equals_scalar_mult() {
+    forall(
+        601,
+        6,
+        |rng| {
+            let n = (rng.below(6) + 1) as usize;
+            (0..2 * n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+        },
+        |v| shrink_vec(v).into_iter().filter(|v| v.len() % 2 == 0 && !v.is_empty()).collect(),
+        |vals| {
+            let n = vals.len() / 2;
+            let (xs, ys) = (vals[..n].to_vec(), vals[n..].to_vec());
+            let (x2, y2) = (xs.clone(), ys.clone());
+            let run = run_4pc(NetProfile::zero(), 601, move |ctx| {
+                let sx = share_many_n(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1).then(|| x2.iter().map(|&v| Z64(v)).collect::<Vec<_>>()).as_deref(),
+                    n,
+                )?;
+                let sy = share_many_n(
+                    ctx,
+                    P2,
+                    (ctx.id() == P2).then(|| y2.iter().map(|&v| Z64(v)).collect::<Vec<_>>()).as_deref(),
+                    n,
+                )?;
+                let batched = mult_many(ctx, &sx, &sy)?;
+                let mut scalar = Vec::with_capacity(n);
+                for i in 0..n {
+                    scalar.push(mult(ctx, &sx[i], &sy[i])?);
+                }
+                ctx.flush_verify()?;
+                Ok((batched, scalar))
+            });
+            let (outs, _) = run.expect_ok();
+            for i in 0..n {
+                let b = open(&[outs[0].0[i], outs[1].0[i], outs[2].0[i], outs[3].0[i]]);
+                let s = open(&[outs[0].1[i], outs[1].1[i], outs[2].1[i], outs[3].1[i]]);
+                let want = Z64(xs[i].wrapping_mul(ys[i]));
+                if b != want || s != want {
+                    return Err(format!(
+                        "gate {i}: batched {b:?}, scalar {s:?}, want {want:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_mult_tr_many_equals_scalar_mult_tr() {
+    forall(
+        602,
+        5,
+        |rng| {
+            let n = (rng.below(4) + 1) as usize;
+            (0..2 * n).map(|_| rng.normal() * 8.0).collect::<Vec<f64>>()
+        },
+        |v| shrink_vec(v).into_iter().filter(|v| v.len() % 2 == 0 && !v.is_empty()).collect(),
+        |vals| {
+            let n = vals.len() / 2;
+            let (xs, ys) = (vals[..n].to_vec(), vals[n..].to_vec());
+            let (x2, y2) = (xs.clone(), ys.clone());
+            let run = run_4pc(NetProfile::zero(), 602, move |ctx| {
+                let sx = share_many_n(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1)
+                        .then(|| x2.iter().map(|&v| FixedPoint::encode(v)).collect::<Vec<_>>())
+                        .as_deref(),
+                    n,
+                )?;
+                let sy = share_many_n(
+                    ctx,
+                    P2,
+                    (ctx.id() == P2)
+                        .then(|| y2.iter().map(|&v| FixedPoint::encode(v)).collect::<Vec<_>>())
+                        .as_deref(),
+                    n,
+                )?;
+                let batched = mult_tr_many(ctx, &sx, &sy)?;
+                let mut scalar = Vec::with_capacity(n);
+                for i in 0..n {
+                    scalar.push(mult_tr(ctx, &sx[i], &sy[i])?);
+                }
+                ctx.flush_verify()?;
+                Ok((batched, scalar))
+            });
+            let (outs, _) = run.expect_ok();
+            for i in 0..n {
+                let b = FixedPoint::decode(open(&[
+                    outs[0].0[i],
+                    outs[1].0[i],
+                    outs[2].0[i],
+                    outs[3].0[i],
+                ]));
+                let s = FixedPoint::decode(open(&[
+                    outs[0].1[i],
+                    outs[1].1[i],
+                    outs[2].1[i],
+                    outs[3].1[i],
+                ]));
+                let want = xs[i] * ys[i];
+                let tol = (xs[i].abs() + ys[i].abs() + 4.0) / SCALE;
+                if (b - want).abs() > tol || (s - want).abs() > tol {
+                    return Err(format!(
+                        "gate {i}: batched {b}, scalar {s}, want {want} (tol {tol})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_bit2a_many_equals_scalar_bit2a() {
+    forall(
+        603,
+        5,
+        |rng| {
+            let n = (rng.below(6) + 1) as usize;
+            (0..n).map(|_| rng.next_u64() & 1 == 1).collect::<Vec<bool>>()
+        },
+        |v| shrink_vec(v),
+        |bits| {
+            let n = bits.len();
+            let b2 = bits.clone();
+            let run = run_4pc(NetProfile::zero(), 603, move |ctx| {
+                let bs = share_many_n(
+                    ctx,
+                    P3,
+                    (ctx.id() == P3).then(|| b2.iter().map(|&b| Bit(b)).collect::<Vec<_>>()).as_deref(),
+                    n,
+                )?;
+                let batched = bit2a_many(ctx, &bs)?;
+                let mut scalar = Vec::with_capacity(n);
+                for b in &bs {
+                    scalar.push(bit2a(ctx, b)?);
+                }
+                ctx.flush_verify()?;
+                Ok((batched, scalar))
+            });
+            let (outs, _) = run.expect_ok();
+            for (i, &bit) in bits.iter().enumerate() {
+                let b = open(&[outs[0].0[i], outs[1].0[i], outs[2].0[i], outs[3].0[i]]);
+                let s = open(&[outs[0].1[i], outs[1].1[i], outs[2].1[i], outs[3].1[i]]);
+                let want = Z64(bit as u64);
+                if b != want || s != want {
+                    return Err(format!("bit {i}: batched {b:?}, scalar {s:?}, want {want:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_bitext_many_equals_scalar_bitext() {
+    forall(
+        604,
+        5,
+        |rng| {
+            let n = (rng.below(5) + 1) as usize;
+            (0..n)
+                .map(|_| {
+                    let v = rng.next_u64() as i64 / 4;
+                    if v == 0 {
+                        1
+                    } else {
+                        v
+                    }
+                })
+                .collect::<Vec<i64>>()
+        },
+        |v| shrink_vec(v).into_iter().filter(|v| !v.is_empty()).collect(),
+        |vals| {
+            let n = vals.len();
+            let v2 = vals.clone();
+            let run = run_4pc(NetProfile::zero(), 604, move |ctx| {
+                let vs = share_many_n(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1)
+                        .then(|| v2.iter().map(|&v| Z64::from(v)).collect::<Vec<_>>())
+                        .as_deref(),
+                    n,
+                )?;
+                let batched = bitext_many(ctx, &vs)?;
+                let mut scalar = Vec::with_capacity(n);
+                for v in &vs {
+                    scalar.push(bitext(ctx, v)?);
+                }
+                ctx.flush_verify()?;
+                Ok((batched, scalar))
+            });
+            let (outs, _) = run.expect_ok();
+            for (i, &v) in vals.iter().enumerate() {
+                let b = open(&[outs[0].0[i], outs[1].0[i], outs[2].0[i], outs[3].0[i]]);
+                let s = open(&[outs[0].1[i], outs[1].1[i], outs[2].1[i], outs[3].1[i]]);
+                let want = Bit(v < 0);
+                if b != want || s != want {
+                    return Err(format!("msb({v}): batched {b:?}, scalar {s:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------ pool-backed == inline
+
+/// Run `body` twice — once with a pre-stocked pool, once inline — and
+/// require identical opened outputs.
+fn assert_pool_inline_equal<F>(seed: u64, n: usize, body: F)
+where
+    F: Fn(&mut trident::proto::Ctx, bool) -> Result<Vec<MShare<Z64>>, trident::net::Abort>
+        + Send
+        + Sync
+        + Copy
+        + 'static,
+{
+    let pooled = run_4pc(NetProfile::zero(), seed, move |ctx| body(ctx, true));
+    let inline = run_4pc(NetProfile::zero(), seed, move |ctx| body(ctx, false));
+    let (po, _) = pooled.expect_ok();
+    let (io, _) = inline.expect_ok();
+    for i in 0..n {
+        let p = open(&[po[0][i], po[1][i], po[2][i], po[3][i]]);
+        let q = open(&[io[0][i], io[1][i], io[2][i], io[3][i]]);
+        assert_eq!(p, q, "pool-backed vs inline diverged at output {i}");
+    }
+}
+
+#[test]
+fn pool_inline_equivalence_mult_many() {
+    let n = 5;
+    assert_pool_inline_equal(611, n, move |ctx, pool| {
+        if pool {
+            ctx.attach_pool(Pool::new());
+            fill_lam::<Z64>(ctx, n);
+        }
+        let xs = share_many_n(
+            ctx,
+            P1,
+            (ctx.id() == P1).then(|| (1..=n as u64).map(Z64).collect::<Vec<_>>()).as_deref(),
+            n,
+        )?;
+        let ys = share_many_n(
+            ctx,
+            P2,
+            (ctx.id() == P2).then(|| (11..=10 + n as u64).map(Z64).collect::<Vec<_>>()).as_deref(),
+            n,
+        )?;
+        let zs = mult_many(ctx, &xs, &ys)?;
+        ctx.flush_verify()?;
+        if pool {
+            let stats = ctx.detach_pool().unwrap().stats();
+            assert!(stats.lam_hits >= 1, "pooled run must hit the λ pool: {stats:?}");
+        }
+        Ok(zs)
+    });
+}
+
+#[test]
+fn pool_inline_equivalence_dotp() {
+    assert_pool_inline_equal(612, 1, move |ctx, pool| {
+        if pool {
+            ctx.attach_pool(Pool::new());
+            fill_lam::<Z64>(ctx, 1);
+        }
+        let xs = share_many_n(
+            ctx,
+            P1,
+            (ctx.id() == P1).then(|| vec![Z64(3); 20]).as_deref(),
+            20,
+        )?;
+        let ys = share_many_n(
+            ctx,
+            P2,
+            (ctx.id() == P2).then(|| vec![Z64(7); 20]).as_deref(),
+            20,
+        )?;
+        let z = dotp(ctx, &xs, &ys)?;
+        ctx.flush_verify()?;
+        Ok(vec![z])
+    });
+}
+
+#[test]
+fn pool_inline_equivalence_bit2a_many() {
+    let bits = [true, false, true, true];
+    assert_pool_inline_equal(613, bits.len(), move |ctx, pool| {
+        let n = bits.len();
+        if pool {
+            ctx.attach_pool(Pool::new());
+            fill_lam::<Z64>(ctx, n);
+        }
+        let bs = share_many_n(
+            ctx,
+            P2,
+            (ctx.id() == P2).then(|| bits.iter().map(|&b| Bit(b)).collect::<Vec<_>>()).as_deref(),
+            n,
+        )?;
+        let out = bit2a_many(ctx, &bs)?;
+        ctx.flush_verify()?;
+        Ok(out)
+    });
+}
+
+#[test]
+fn pool_inline_equivalence_mult_tr_many() {
+    // truncation pairs differ between the two runs (they are fresh
+    // randomness), so equivalence is against the cleartext oracle within
+    // the probabilistic-truncation tolerance — for both runs.
+    let vals = [(1.5f64, 2.5f64), (-3.25, 1.5), (0.75, -4.0)];
+    let n = vals.len();
+    let runner = |pool: bool| {
+        run_4pc(NetProfile::zero(), 614, move |ctx| {
+            if pool {
+                ctx.attach_pool(Pool::new());
+                fill_trunc(ctx, n, FRAC_BITS)?;
+            }
+            let xs = share_many_n(
+                ctx,
+                P1,
+                (ctx.id() == P1)
+                    .then(|| vals.iter().map(|c| FixedPoint::encode(c.0)).collect::<Vec<_>>())
+                    .as_deref(),
+                n,
+            )?;
+            let ys = share_many_n(
+                ctx,
+                P2,
+                (ctx.id() == P2)
+                    .then(|| vals.iter().map(|c| FixedPoint::encode(c.1)).collect::<Vec<_>>())
+                    .as_deref(),
+                n,
+            )?;
+            let zs = mult_tr_many(ctx, &xs, &ys)?;
+            ctx.flush_verify()?;
+            let hits = ctx.detach_pool().map(|p| p.stats().trunc_hits).unwrap_or(0);
+            Ok((zs, hits))
+        })
+    };
+    for pool in [true, false] {
+        let (outs, _) = runner(pool).expect_ok();
+        if pool {
+            assert!(outs[1].1 >= 1, "pooled run must consume pooled pairs");
+        }
+        for (i, &(a, b)) in vals.iter().enumerate() {
+            let got = FixedPoint::decode(open(&[
+                outs[0].0[i],
+                outs[1].0[i],
+                outs[2].0[i],
+                outs[3].0[i],
+            ]));
+            let tol = (a.abs() + b.abs() + 4.0) / SCALE;
+            assert!(
+                (got - a * b).abs() <= tol,
+                "pool={pool} gate {i}: {a}·{b} → {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_inline_equivalence_bitext_and_relu() {
+    let vals = [-3.5f64, 2.25, -0.125, 7.0];
+    let n = vals.len();
+    assert_pool_inline_equal(615, n, move |ctx, pool| {
+        if pool {
+            ctx.attach_pool(Pool::new());
+            fill_bitext(ctx, n)?;
+            fill_lam::<Z64>(ctx, 1); // the Π_Mult inside Π_BitExt
+        }
+        let vs = share_many_n(
+            ctx,
+            P1,
+            (ctx.id() == P1)
+                .then(|| vals.iter().map(|&v| FixedPoint::encode(v)).collect::<Vec<_>>())
+                .as_deref(),
+            n,
+        )?;
+        let (relu, _drelu) = trident::ml::relu_many(ctx, &vs)?;
+        ctx.flush_verify()?;
+        if pool {
+            let stats = ctx.detach_pool().unwrap().stats();
+            assert!(stats.bitext_hits >= 1, "relu must pop bitext masks: {stats:?}");
+        }
+        Ok(relu)
+    });
+}
+
+// ---------------------------------------------------------- failure injection
+
+#[test]
+fn tampered_pool_trunc_pair_aborts_online() {
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        621,
+        std::time::Duration::from_millis(500),
+        |ctx| {
+            ctx.attach_pool(Pool::new());
+            fill_trunc(ctx, 1, FRAC_BITS)?;
+            let me = ctx.id();
+            if me == P2 {
+                // a malicious P2 corrupts its stored r1 component
+                let pair = ctx.pool_mut().unwrap().trunc_front_mut(FRAC_BITS).unwrap();
+                pair.r[0] = pair.r[0].map(|v| v + Z64(1));
+            }
+            let x = share(ctx, P1, (me == P1).then_some(FixedPoint::encode(2.0)))?;
+            let y = share(ctx, P2, (me == P2).then_some(FixedPoint::encode(3.0)))?;
+            let z = mult_tr(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        },
+    );
+    assert!(run.any_verify_abort(), "tampered pooled pair must abort, got ok");
+}
+
+#[test]
+fn replayed_pool_trunc_pair_aborts_online() {
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        622,
+        std::time::Duration::from_millis(500),
+        |ctx| {
+            ctx.attach_pool(Pool::new());
+            fill_trunc(ctx, 2, FRAC_BITS)?;
+            let me = ctx.id();
+            if me == P2 {
+                // P2 re-serves its first pair while the peers advance
+                assert!(ctx.pool_mut().unwrap().replay_front_trunc(FRAC_BITS));
+            }
+            let xs = share_many_n(
+                ctx,
+                P1,
+                (me == P1)
+                    .then(|| vec![FixedPoint::encode(1.5), FixedPoint::encode(-2.0)])
+                    .as_deref(),
+                2,
+            )?;
+            let ys = share_many_n(
+                ctx,
+                P2,
+                (me == P2)
+                    .then(|| vec![FixedPoint::encode(3.0), FixedPoint::encode(0.5)])
+                    .as_deref(),
+                2,
+            )?;
+            let zs = mult_tr_many(ctx, &xs, &ys)?;
+            ctx.flush_verify()?;
+            Ok(zs)
+        },
+    );
+    assert!(run.any_verify_abort(), "replayed pooled pair must abort");
+}
+
+#[test]
+fn tampered_pool_rt_never_yields_wrong_opened_value() {
+    // Corrupting the [[rᵗ]] mask component only skews the cheater's output
+    // share; the damage must surface as an abort during reconstruction,
+    // never as a wrong value accepted by an honest party.
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        623,
+        std::time::Duration::from_millis(500),
+        |ctx| {
+            ctx.attach_pool(Pool::new());
+            fill_trunc(ctx, 1, FRAC_BITS)?;
+            let me = ctx.id();
+            if me == P2 {
+                let pair = ctx.pool_mut().unwrap().trunc_front_mut(FRAC_BITS).unwrap();
+                if let MShare::Eval { lam_prev, .. } = &mut pair.rt {
+                    *lam_prev += Z64(1); // P2's copy of λ1
+                }
+            }
+            let x = share(ctx, P1, (me == P1).then_some(FixedPoint::encode(2.0)))?;
+            let y = share(ctx, P2, (me == P2).then_some(FixedPoint::encode(3.0)))?;
+            let z = mult_tr(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            trident::proto::reconstruct(ctx, &z)
+        },
+    );
+    // P1 receives the corrupted λ1 from P2; P0's vouched digest busts it
+    assert!(run.outputs[1].is_err(), "P1 must abort on the corrupted λ1");
+    // no honest party accepts a wrong value
+    for (i, out) in run.outputs.iter().enumerate() {
+        if i == 2 {
+            continue; // the cheater's own view is unconstrained
+        }
+        if let Ok(v) = out {
+            let got = FixedPoint::decode(*v);
+            assert!(
+                (got - 6.0).abs() < 0.01,
+                "P{i} accepted a wrong opened value: {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_exhaustion_falls_back_deterministically() {
+    let run = run_4pc(NetProfile::zero(), 624, |ctx| {
+        ctx.attach_pool(Pool::new());
+        fill_trunc(ctx, 2, FRAC_BITS)?;
+        // request MORE than stocked: every party falls back to inline
+        // generation, leaving the stock untouched
+        let xs = share_many_n(
+            ctx,
+            P1,
+            (ctx.id() == P1).then(|| vec![FixedPoint::encode(1.0); 4]).as_deref(),
+            4,
+        )?;
+        let ys = share_many_n(
+            ctx,
+            P2,
+            (ctx.id() == P2).then(|| vec![FixedPoint::encode(2.0); 4]).as_deref(),
+            4,
+        )?;
+        let zs = mult_tr_many(ctx, &xs, &ys)?;
+        ctx.flush_verify()?;
+        let pool = ctx.detach_pool().unwrap();
+        Ok((zs, pool.len_trunc(FRAC_BITS), pool.stats()))
+    });
+    let (outs, _) = run.expect_ok();
+    for i in 0..4 {
+        let got = FixedPoint::decode(open(&[
+            outs[0].0[i],
+            outs[1].0[i],
+            outs[2].0[i],
+            outs[3].0[i],
+        ]));
+        assert!((got - 2.0).abs() < 0.01, "fallback result {i}: {got}");
+    }
+    // stock untouched, exactly one recorded miss, at every party
+    for o in &outs {
+        assert_eq!(o.1, 2, "all-or-nothing: stock must be untouched");
+        assert_eq!(o.2.trunc_misses, 1);
+        assert_eq!(o.2.trunc_hits, 0);
+    }
+}
+
+// --------------------------------------------------------- meter regressions
+
+#[test]
+fn meter_pool_leaves_mult_tr_online_cost_unchanged() {
+    let runner = |pool: bool| {
+        run_4pc(NetProfile::zero(), 631, move |ctx| {
+            if pool {
+                ctx.attach_pool(Pool::new());
+                fill_trunc(ctx, 1, FRAC_BITS)?;
+            }
+            let x = share(ctx, P1, (ctx.id() == P1).then_some(FixedPoint::encode(2.0)))?;
+            let y = share(ctx, P2, (ctx.id() == P2).then_some(FixedPoint::encode(3.0)))?;
+            let z = mult_tr(ctx, &x, &y)?;
+            ctx.flush_verify()?;
+            Ok(z)
+        })
+    };
+    let (_, with_pool) = runner(true).expect_ok();
+    let (_, without) = runner(false).expect_ok();
+    // Table II shape: online rounds and value bits identical either way
+    assert_eq!(
+        with_pool.rounds[1], without.rounds[1],
+        "pool attachment must not change online rounds"
+    );
+    assert_eq!(
+        with_pool.value_bits[1], without.value_bits[1],
+        "pool attachment must not change online bits"
+    );
+    // offline work is moved (into the fill), not grown: same total bits
+    assert_eq!(
+        with_pool.value_bits[0], without.value_bits[0],
+        "pool moves offline cost, it must not grow it"
+    );
+    // online stays 3ℓ beyond the two input sharings (Lemma D.2)
+    assert_eq!(with_pool.value_bits[1] - 4 * 64, 3 * 64);
+}
+
+#[test]
+fn meter_coalesced_wave_costs_single_query_rounds() {
+    use trident::serve::{serve, ServeConfig};
+    let cfg = |queries: usize, coalesce: usize| ServeConfig {
+        d: 8,
+        rows_per_query: 1,
+        queries,
+        coalesce,
+        pool: true,
+        relu: false,
+        seed: 632,
+    };
+    let one = serve(NetProfile::zero(), cfg(1, 1));
+    let wave = serve(NetProfile::zero(), cfg(8, 8));
+    assert_eq!(wave.batches, 1);
+    assert_eq!(
+        wave.online_rounds, one.online_rounds,
+        "8 coalesced queries must cost ~1× (not 8×) the rounds of one query"
+    );
+    let inline = serve(NetProfile::zero(), cfg(8, 1));
+    assert_eq!(inline.online_rounds, 8 * one.online_rounds);
+}
+
+// --------------------------------------------------------- misc sanity: P0
+
+#[test]
+fn pool_backed_serving_keeps_p0_offline_only() {
+    use trident::serve::{serve, ServeConfig};
+    let s = serve(
+        NetProfile::wan(),
+        ServeConfig {
+            d: 8,
+            rows_per_query: 2,
+            queries: 4,
+            coalesce: 4,
+            pool: true,
+            relu: false,
+            seed: 640,
+        },
+    );
+    // P0 does no online work in the serving loop (reconstruction towards
+    // the data owner has P0 vouching only — hash traffic, zero rounds for
+    // value data from P0)
+    let p0_online = s.report.party_time[1][0];
+    let others: f64 = s.report.party_time[1][1..].iter().cloned().fold(0.0, f64::max);
+    assert!(
+        p0_online <= others,
+        "P0 online time {p0_online} must not exceed the evaluators' {others}"
+    );
+}

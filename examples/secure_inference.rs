@@ -13,25 +13,28 @@
 //! cargo run --release --example secure_inference [queries]
 //! ```
 
+use trident::coordinator::ServeCliOpts;
 use trident::net::{NetProfile, Phase};
-use trident::serve::{serve, ServeConfig};
+use trident::serve::{serve, PoolMode, ServeConfig};
 
 fn main() {
     let queries: usize =
         std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(16);
     trident::runtime::pjrt::init_default();
 
-    // the CLI-level summary: pooled+coalesced vs inline
-    trident::coordinator::serve_cli(queries);
+    // the CLI-level summary: keyed pool vs scalar pool vs inline
+    trident::coordinator::serve_cli(ServeCliOpts { queries, ..ServeCliOpts::default() });
 
-    // pool-backed batch serving with a ReLU output layer, in detail
-    println!("\npool-backed ReLU serving (d=128, 4-row queries, coalesce 8):");
+    // keyed-pool batch serving with a ReLU output layer, in detail
+    println!("\nkeyed-pool ReLU serving (d=128, 4-row queries, coalesce 8):");
     let cfg = ServeConfig {
         d: 128,
         rows_per_query: 4,
         queries,
         coalesce: 8,
-        pool: true,
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
         relu: true,
         seed: 42,
     };
@@ -44,11 +47,17 @@ fn main() {
         s.online_rounds,
     );
     println!(
-        "  offline (pool fill + γ): {:.1} KiB, metered under Phase::Offline",
+        "  offline (refill fills + live bitext γ): {:.1} KiB, metered under Phase::Offline",
         s.offline_value_bits as f64 / 8.0 / 1024.0,
     );
     if let Some(ps) = s.pool_stats {
-        println!("  pool: {} hits, {} misses", ps.hits(), ps.misses());
+        println!(
+            "  pool: {} hits, {} misses; refill {} keyed bundles over {} ticks",
+            ps.hits(),
+            ps.misses(),
+            s.refill_mat_items,
+            s.refill_ticks,
+        );
     }
 
     // latency breakdown across the paper's models, LAN vs WAN

@@ -1,12 +1,13 @@
 //! `cargo bench --bench serving`
 //!
 //! Serving-engine benchmark: amortized per-query online cost of the
-//! offline-pool + cross-request-batching engine (`trident::serve`) against
-//! the seed's per-query inline path, plus a coalescing sweep over LAN and
-//! WAN. Hand-rolled harness (the offline image has no criterion).
+//! circuit-keyed pool + cross-request-batching engine (`trident::serve`)
+//! against the scalar-pool and seed-style inline paths, plus a coalescing
+//! sweep over LAN and WAN. Hand-rolled harness (the offline image has no
+//! criterion).
 
 use trident::net::NetProfile;
-use trident::serve::{serve, ServeConfig};
+use trident::serve::{serve, PoolMode, ServeConfig};
 
 fn main() {
     trident::runtime::pjrt::init_default();
@@ -14,8 +15,8 @@ fn main() {
     print!("{}", trident::bench::serve_table());
     println!();
 
-    println!("== coalescing sweep: 32 one-row queries, d=128, pool pre-stocked ==");
-    println!("net | coalesce | batches | online rounds | ms/query | B/query");
+    println!("== coalescing sweep: 32 one-row queries, d=128, keyed pool + background refill ==");
+    println!("net | coalesce | batches | online rounds | ms/query | B/query | off msgs in waves");
     for profile in [NetProfile::lan(), NetProfile::wan()] {
         for coalesce in [1usize, 2, 4, 8, 16, 32] {
             let cfg = ServeConfig {
@@ -23,31 +24,40 @@ fn main() {
                 rows_per_query: 1,
                 queries: 32,
                 coalesce,
-                pool: true,
+                mode: PoolMode::Keyed,
+                low_water: 1,
+                high_water: 2,
                 relu: false,
                 seed: 77,
             };
             let s = serve(profile.clone(), cfg);
             println!(
-                "{:<3} | {coalesce:>8} | {:>7} | {:>13} | {:>8.3} | {:>7.0}",
+                "{:<3} | {coalesce:>8} | {:>7} | {:>13} | {:>8.3} | {:>7.0} | {:>17}",
                 profile.name,
                 s.batches,
                 s.online_rounds,
                 s.per_query_latency() * 1e3,
                 s.per_query_online_bytes(),
+                s.offline_msgs_in_waves,
             );
         }
     }
 
     println!();
-    println!("== ReLU layer serving (pool feeds trunc + bitext material) ==");
-    for (pool, label) in [(false, "inline"), (true, "pooled")] {
+    println!("== ReLU layer serving (pool feeds wire-mask bundles + bitext material) ==");
+    for (mode, label) in [
+        (PoolMode::Inline, "inline"),
+        (PoolMode::Scalar, "scalar"),
+        (PoolMode::Keyed, "keyed "),
+    ] {
         let cfg = ServeConfig {
             d: 64,
             rows_per_query: 4,
             queries: 8,
             coalesce: 8,
-            pool,
+            mode,
+            low_water: 1,
+            high_water: 2,
             relu: true,
             seed: 78,
         };

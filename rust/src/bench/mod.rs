@@ -624,32 +624,46 @@ pub fn fig20() -> String {
 }
 
 /// Serving benchmark (beyond the paper): per-query amortized online cost
-/// of the pool + cross-request-batching engine vs the seed's per-query
-/// inline path. Offline cost (pool fill + γ exchanges) stays under
-/// `Phase::Offline` — the last column shows it is *moved*, not hidden.
+/// of the serving engine across its three offline-material modes — the
+/// seed's inline per-query path, PR 1's scalar pools (γ-exchange still
+/// live), and the circuit-keyed matrix wire-mask pool (message-free
+/// per-request offline, `off msg/wave` = 0). Offline cost (pool fill /
+/// refill + any live γ exchanges) stays under `Phase::Offline` — the
+/// offline column shows it is *moved*, not hidden.
 pub fn serve_table() -> String {
-    use crate::serve::{serve, ServeConfig};
+    use crate::serve::{serve, PoolMode, ServeConfig};
     let mut out = String::new();
     out.push_str(
-        "== Serving: offline pool + cross-request batching (linreg d=128, 1-row queries, LAN) ==\n",
+        "== Serving: pooled-matrix vs scalar-pool vs inline (linreg d=128, 1-row queries, LAN) ==\n",
     );
     out.push_str(
-        "mode               | q  | batches | online rnds | ms/query | online B/query | offline KiB\n",
+        "mode                 | q  | batches | online rnds | ms/query | online B/query | offline KiB | off msg/wave\n",
     );
     let base = ServeConfig {
         d: 128,
         rows_per_query: 1,
         queries: 32,
         coalesce: 1,
-        pool: false,
+        mode: PoolMode::Inline,
+        low_water: 1,
+        high_water: 2,
         relu: false,
         seed: 321,
     };
     let rows: Vec<(&str, ServeConfig)> = vec![
         ("inline per-query", base.clone()),
-        ("pool, coalesce 1", ServeConfig { pool: true, ..base.clone() }),
-        ("pool, coalesce 8", ServeConfig { pool: true, coalesce: 8, ..base.clone() }),
-        ("pool, coalesce 32", ServeConfig { pool: true, coalesce: 32, ..base.clone() }),
+        (
+            "scalar, coalesce 8",
+            ServeConfig { mode: PoolMode::Scalar, coalesce: 8, ..base.clone() },
+        ),
+        (
+            "keyed,  coalesce 8",
+            ServeConfig { mode: PoolMode::Keyed, coalesce: 8, ..base.clone() },
+        ),
+        (
+            "keyed,  coalesce 32",
+            ServeConfig { mode: PoolMode::Keyed, coalesce: 32, ..base.clone() },
+        ),
     ];
     let mut inline_lat = None;
     for (name, cfg) in rows {
@@ -658,17 +672,18 @@ pub fn serve_table() -> String {
             inline_lat = Some(s.per_query_latency());
         }
         out.push_str(&format!(
-            "{name:<18} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>11.1}\n",
+            "{name:<20} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>11.1} | {:>12.1}\n",
             s.queries,
             s.batches,
             s.online_rounds,
             s.per_query_latency() * 1e3,
             s.per_query_online_bytes(),
             s.offline_value_bits as f64 / 8.0 / 1024.0,
+            s.offline_msgs_in_waves as f64 / s.batches.max(1) as f64,
         ));
         if s.batches == 1 {
             out.push_str(&format!(
-                "{:<18} |    |         |             | gain {:>5.1}x vs inline per-query\n",
+                "{:<20} |    |         |             | gain {:>5.1}x vs inline per-query\n",
                 "",
                 inline_lat.unwrap() / s.per_query_latency().max(1e-12),
             ));

@@ -158,56 +158,120 @@ pub fn predict_cli(model: &str, batch: usize) {
     println!("                   WAN latency {:.2} s", wan.online_latency());
 }
 
+/// Options for [`serve_cli`], filled from the `trident serve` CLI flags
+/// (`--queries`, `--coalesce`, `--mode inline|scalar|keyed`, `--low-water`,
+/// `--high-water`, `--relu`).
+#[derive(Clone, Debug)]
+pub struct ServeCliOpts {
+    pub queries: usize,
+    /// Defaults to `min(queries, 16)` when `None`.
+    pub coalesce: Option<usize>,
+    /// `"inline"`, `"scalar"` or `"keyed"`.
+    pub mode: String,
+    /// Background-refill low-water mark, in full-wave items.
+    pub low_water: usize,
+    /// Background-refill high-water mark, in full-wave items.
+    pub high_water: usize,
+    pub relu: bool,
+}
+
+impl Default for ServeCliOpts {
+    fn default() -> ServeCliOpts {
+        ServeCliOpts {
+            queries: 8,
+            coalesce: None,
+            mode: "keyed".into(),
+            low_water: 1,
+            high_water: 2,
+            relu: false,
+        }
+    }
+}
+
 /// Batched prediction serving (the MLaaS loop), backed by the real engine:
-/// offline pool pre-stocked, concurrent queries coalesced into
-/// cross-request batches, every response verified before release. Prints
-/// the amortized per-query cost next to the seed's per-query inline path.
-pub fn serve_cli(queries: usize) {
-    use crate::serve::{serve, ServeConfig};
+/// circuit-keyed pool pre-stocked and topped up by the background refill
+/// producer, concurrent queries coalesced into cross-request batches,
+/// every response verified before release. Prints the amortized per-query
+/// cost next to the scalar-pool and seed-style inline paths.
+pub fn serve_cli(opts: ServeCliOpts) {
+    use crate::serve::{serve, PoolMode, ServeConfig, ServeStats};
+    let mode = match opts.mode.as_str() {
+        "inline" => PoolMode::Inline,
+        "scalar" => PoolMode::Scalar,
+        "keyed" => PoolMode::Keyed,
+        other => {
+            println!("unknown --mode {other:?} (inline|scalar|keyed), using keyed");
+            PoolMode::Keyed
+        }
+    };
+    let queries = opts.queries;
+    // sanitize the water marks up front: a low mark above high would trip
+    // the in-protocol assertion in every party thread, and low = 0 never
+    // triggers a refill — both deserve a CLI-level message instead
+    let high_water = opts.high_water.max(1);
+    let mut low_water = opts.low_water;
+    if low_water > high_water {
+        println!("--low-water {low_water} exceeds --high-water {high_water}; clamping low to {high_water}");
+        low_water = high_water;
+    }
+    if low_water == 0 {
+        println!("--low-water 0 disables background refill: pools will never be (re)stocked");
+    }
     let cfg = ServeConfig {
         d: 784,
         rows_per_query: 1,
         queries,
-        coalesce: queries.clamp(1, 16),
-        pool: true,
-        relu: false,
+        coalesce: opts.coalesce.unwrap_or_else(|| queries.clamp(1, 16)),
+        mode,
+        low_water,
+        high_water,
+        relu: opts.relu,
         seed: 123,
     };
     println!(
-        "serving {queries} queries (linreg d={}, {} rows each, coalesce ≤{}) …",
-        cfg.d, cfg.rows_per_query, cfg.coalesce
+        "serving {queries} queries (linreg d={}, {} rows each, coalesce ≤{}, water marks {}/{}) …",
+        cfg.d, cfg.rows_per_query, cfg.coalesce, cfg.low_water, cfg.high_water
     );
-    let pooled = serve(NetProfile::lan(), cfg.clone());
+    let line = |name: &str, s: &ServeStats| {
+        println!(
+            "{name:<10}: {} batches | {:.3} ms/query | {:.0} B/query online | {} online rounds | {} offline msgs in waves",
+            s.batches,
+            s.per_query_latency() * 1e3,
+            s.per_query_online_bytes(),
+            s.online_rounds,
+            s.offline_msgs_in_waves,
+        );
+    };
+    let keyed = serve(NetProfile::lan(), ServeConfig { mode: PoolMode::Keyed, ..cfg.clone() });
+    let scalar = serve(NetProfile::lan(), ServeConfig { mode: PoolMode::Scalar, ..cfg.clone() });
     let inline = serve(
         NetProfile::lan(),
-        ServeConfig { coalesce: 1, pool: false, ..cfg },
+        ServeConfig { coalesce: 1, mode: PoolMode::Inline, ..cfg.clone() },
     );
+    line("keyed pool", &keyed);
+    line("scalar    ", &scalar);
+    line("inline    ", &inline);
+    // detail lines follow the --mode selection
+    let sel = match mode {
+        PoolMode::Keyed => &keyed,
+        PoolMode::Scalar => &scalar,
+        PoolMode::Inline => &inline,
+    };
     println!(
-        "pool+batch: {} batches | {:.3} ms/query | {:.0} B/query online | {} online rounds",
-        pooled.batches,
-        pooled.per_query_latency() * 1e3,
-        pooled.per_query_online_bytes(),
-        pooled.online_rounds,
+        "gain      : {:.1}× latency/query, {:.2}× bytes/query vs inline; refill {} bundles over {} ticks, offline {:.1} KiB metered separately",
+        inline.per_query_latency() / sel.per_query_latency().max(1e-12),
+        inline.per_query_online_bytes() / sel.per_query_online_bytes().max(1e-12),
+        sel.refill_mat_items,
+        sel.refill_ticks,
+        sel.offline_value_bits as f64 / 8.0 / 1024.0,
     );
-    println!(
-        "inline    : {} batches | {:.3} ms/query | {:.0} B/query online | {} online rounds",
-        inline.batches,
-        inline.per_query_latency() * 1e3,
-        inline.per_query_online_bytes(),
-        inline.online_rounds,
-    );
-    println!(
-        "gain      : {:.1}× latency/query, {:.2}× bytes/query; offline (pool fill + γ) {:.1} KiB metered separately",
-        inline.per_query_latency() / pooled.per_query_latency().max(1e-12),
-        inline.per_query_online_bytes() / pooled.per_query_online_bytes().max(1e-12),
-        pooled.offline_value_bits as f64 / 8.0 / 1024.0,
-    );
-    if let Some(ps) = pooled.pool_stats {
+    if let Some(ps) = sel.pool_stats {
         println!(
-            "pool      : {} hits / {} misses, {} trunc pairs left",
+            "pool      : {} hits / {} misses, {} keyed bundles left, per-wave offline silence: {}",
             ps.hits(),
             ps.misses(),
-            pooled.pool_left_trunc
+            sel.pool_left_mat,
+            if sel.offline_msgs_in_waves == 0 { "yes" } else { "NO" },
         );
     }
 }

@@ -19,16 +19,23 @@
 //! offline/online decoupling as a system):
 //!
 //! * **pool/** — the offline precomputation pool: typed, keyed correlated
-//!   randomness (truncation pairs, λ_z skeletons, bit-extraction masks)
-//!   generated ahead of time under `Phase::Offline`; pool-aware protocol
-//!   entry points (`trunc_pairs`, `mult`/`dotp` λ draws, `bitext_many`)
-//!   pop from an attached pool and fall back to inline generation
-//!   deterministically on exhaustion.
+//!   randomness (truncation pairs, λ_z skeletons, bit-extraction masks,
+//!   and circuit-position-keyed matrix wire-mask bundles: pre-drawn input
+//!   wire masks + pre-exchanged `⟨Γ⟩` per `CircuitKey`) generated ahead of
+//!   time under `Phase::Offline`, topped up between serving waves by a
+//!   background refill producer with low/high water marks; pool-aware
+//!   protocol entry points (`trunc_pairs`, `mult`/`dotp` λ draws,
+//!   `bitext_many`, `matmul_keyed`/`matmul_tr_keyed`) pop from an attached
+//!   pool and fall back to inline generation deterministically on
+//!   exhaustion.
 //! * **serve/** — the batched online serving engine: a request queue that
 //!   coalesces concurrent inference queries into cross-request protocol
-//!   batches (one round-trip per wave, not per query), drains the pool,
-//!   verifies every response before release, and reports per-query
-//!   amortized online cost through the meter.
+//!   batches (one round-trip per wave, not per query), registers its
+//!   model's circuit keys at load and drains one keyed bundle per wave —
+//!   making the linear layer's per-request offline phase **message-free**
+//!   (a ReLU layer's input-dependent γ-exchange stays live) — verifies
+//!   every response before release, and reports per-query amortized online
+//!   cost through the meter.
 //!
 //! See DESIGN.md for the system inventory and per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

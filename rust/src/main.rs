@@ -5,7 +5,9 @@
 //! trident train   [--model nn|cnn|linreg|logreg] [--iters N] [--batch B] [--features D]
 //! trident predict [--model ...] [--batch B]
 //! trident tables  [table1 ... fig20]   # regenerate the paper's evaluation
-//! trident serve   [--queries N]        # batched prediction serving demo
+//! trident serve   [--queries N] [--coalesce C] [--mode inline|scalar|keyed]
+//!                 [--low-water L] [--high-water H] [--relu]
+//!                                      # batched prediction serving demo
 //! ```
 
 use std::collections::HashMap;
@@ -59,8 +61,22 @@ fn main() {
             print!("{}", trident::bench::run_tables(&filter));
         }
         "serve" => {
-            let queries: usize = flags.get("queries").and_then(|v| v.parse().ok()).unwrap_or(8);
-            trident::coordinator::serve_cli(queries);
+            let mut opts = trident::coordinator::ServeCliOpts::default();
+            if let Some(q) = flags.get("queries").and_then(|v| v.parse().ok()) {
+                opts.queries = q;
+            }
+            opts.coalesce = flags.get("coalesce").and_then(|v| v.parse().ok());
+            if let Some(m) = flags.get("mode") {
+                opts.mode = m.clone();
+            }
+            if let Some(l) = flags.get("low-water").and_then(|v| v.parse().ok()) {
+                opts.low_water = l;
+            }
+            if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
+                opts.high_water = h;
+            }
+            opts.relu = flags.get("relu").map(String::as_str) == Some("true");
+            trident::coordinator::serve_cli(opts);
         }
         _ => {
             println!(

@@ -268,6 +268,13 @@ pub struct PartyCtx {
     phase: Phase,
     recv_timeout: Duration,
     aborted: bool,
+    /// Local sent-traffic counters per phase (messages / payload bytes).
+    /// Unlike the cluster-global [`Meter`], these move only when *this*
+    /// party sends, so a party program can meter one of its own code
+    /// windows (e.g. "this serving wave") without racing the other party
+    /// threads — the offline-silence regression tests depend on that.
+    sent_msgs: [u64; 2],
+    sent_bytes: [u64; 2],
 }
 
 impl PartyCtx {
@@ -295,6 +302,17 @@ impl PartyCtx {
         self.round = [0; 2];
     }
 
+    /// Messages this party has sent in `phase` (all classes, monotone —
+    /// window a code region by differencing two reads).
+    pub fn sent_msgs(&self, phase: Phase) -> u64 {
+        self.sent_msgs[phase as usize]
+    }
+
+    /// Payload bytes this party has sent in `phase` (all classes, monotone).
+    pub fn sent_bytes(&self, phase: Phase) -> u64 {
+        self.sent_bytes[phase as usize]
+    }
+
     /// Charge `dt` seconds of local compute to this party's virtual clock.
     pub fn charge_compute(&mut self, dt: f64) {
         self.clock[self.phase as usize] += dt;
@@ -316,6 +334,8 @@ impl PartyCtx {
         let ph = self.phase as usize;
         // serialization occupies the sender link
         self.clock[ph] += payload.len() as f64 * 8.0 / self.profile.bandwidth_bps;
+        self.sent_msgs[ph] += 1;
+        self.sent_bytes[ph] += payload.len() as u64;
         self.meter.record(self.phase, class, self.id, to, payload.len(), bits);
         let env = Envelope {
             payload: payload.to_vec(),
@@ -502,6 +522,8 @@ where
             phase: Phase::Offline,
             recv_timeout: timeout,
             aborted: false,
+            sent_msgs: [0; 2],
+            sent_bytes: [0; 2],
         };
         let program = program.clone();
         handles.push(std::thread::spawn(move || {

@@ -1,0 +1,272 @@
+//! Circuit-position-keyed **matrix wire-mask pooling** — the material that
+//! makes a pool-backed serving wave's per-request offline phase truly
+//! message-free (the one-time-setup direction Tetrad pushes for 4PC
+//! serving).
+//!
+//! The scalar pool (PR 1) stocks truncation pairs, λ skeletons and bitext
+//! masks, but every matrix product still ran `matmul_offline`'s γ-exchange
+//! live, so a "pool-backed" wave was not offline-silent. The missing piece
+//! is that the γ correlation depends on the **wire masks** of the two
+//! operands: to pre-exchange it, the input wire's mask must itself be
+//! pooled and later *used* by the input sharing. This module pools exactly
+//! that bundle, keyed by circuit position:
+//!
+//! ## `CircuitKey` layout
+//!
+//! A key names one matrix-product gate of a resident model's circuit:
+//!
+//! * `model` — resident-model id (multi-model residency shards pools by it);
+//! * `layer` — gate index inside the model's circuit;
+//! * `op` — [`OpKind::MatMul`] (ring product, pooled `λ_Z`) or
+//!   [`OpKind::MatMulTr`] (truncated product, pooled truncation pairs in
+//!   place of `λ_Z`, Fig. 18);
+//! * `rows × inner × cols` — the public gate shape (`X: rows×inner`,
+//!   resident `Y: inner×cols`);
+//! * `dealer` — who deals the live `X` online; the pooled wire mask is
+//!   drawn element-for-element through `Π_Sh`'s own mask sampler
+//!   ([`crate::proto::sharing::sample_mask`]), so the dealer knows the full
+//!   mask and can later send `m = X + Λ_X` without any offline step.
+//!
+//! ## Pooled item ([`MatCorr`])
+//!
+//! One item serves one whole gate evaluation: the pre-drawn `Λ_X` skeleton
+//! (plus the full mask at the dealer), the pre-exchanged `⟨Γ⟩` against the
+//! resident `Λ_Y`, and — per `op` — a pooled `λ_Z` skeleton or
+//! `rows·cols` verified truncation pairs. Pops are **all-or-nothing and
+//! atomic**: a wave either gets the entire bundle or falls back inline, so
+//! lockstep parties can never interleave material within one pop. Items
+//! carry a per-key fill sequence number; [`crate::pool::Pool::push_mat`]
+//! assigns it and pops are FIFO, so a background refill *appends* — it can
+//! never reorder material under a consumer.
+//!
+//! Items also embed their own key: popping under a different key fails
+//! closed ([`crate::pool::Pool::pop_mat`] errors and the popping party
+//! aborts) rather than silently running the online phase on wrong-position
+//! correlations.
+
+use crate::net::{Abort, PartyId};
+use crate::proto::dotp::{matmul_offline, MatGamma};
+use crate::proto::sharing::sample_mask;
+use crate::proto::trunc::{gen_trunc_pairs, TruncPair};
+use crate::proto::Ctx;
+use crate::ring::{Matrix, Z64};
+use crate::sharing::{MMat, MShare};
+
+/// Which matrix gate a [`CircuitKey`] names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Plain `Π_MatMul` — the pooled item carries a `λ_Z` skeleton.
+    MatMul,
+    /// `Π_MatMulTr` with this arithmetic shift — the pooled item carries
+    /// verified truncation pairs (`λ_{Zᵗ} = −rᵗ`) instead of `λ_Z`.
+    MatMulTr { shift: u32 },
+}
+
+/// A circuit position of a resident model: the index of one keyed queue of
+/// pre-generated matrix correlations (see the module docs for the layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CircuitKey {
+    /// Resident-model id.
+    pub model: u64,
+    /// Gate index inside the model's circuit.
+    pub layer: u32,
+    pub op: OpKind,
+    /// Rows of the live input `X` (a serving wave's stacked row count).
+    pub rows: usize,
+    /// Inner dimension (`X` cols == resident `Y` rows).
+    pub inner: usize,
+    /// Cols of the resident `Y`.
+    pub cols: usize,
+    /// Dealer of the live `X`.
+    pub dealer: PartyId,
+}
+
+/// One pooled correlation bundle for a circuit position — everything the
+/// gate's offline phase would otherwise produce live.
+#[derive(Clone)]
+pub struct MatCorr {
+    pub(crate) key: CircuitKey,
+    /// Pre-drawn input wire mask skeleton (`m` still zero).
+    pub(crate) lam_x: MMat<Z64>,
+    /// Full mask `Λ_X = Λ_1+Λ_2+Λ_3`, held where the dealer scope pattern
+    /// yields all components (the dealer, and P0).
+    pub(crate) lam_x_full: Option<Matrix<Z64>>,
+    /// Pre-exchanged `⟨Γ⟩` for `(Λ_X, Λ_Y)`.
+    pub(crate) gamma: MatGamma<Z64>,
+    /// `λ_Z` skeleton (`OpKind::MatMul`; all-zero otherwise).
+    pub(crate) lam_z: MMat<Z64>,
+    /// `rows·cols` verified truncation pairs (`OpKind::MatMulTr`).
+    pub(crate) pairs: Vec<TruncPair>,
+    /// Per-key fill sequence number, assigned by `Pool::push_mat` — lets
+    /// tests pin down FIFO/no-interleave behaviour under refill.
+    pub(crate) seq: u64,
+}
+
+impl MatCorr {
+    /// The circuit position this material was generated for.
+    pub fn key(&self) -> CircuitKey {
+        self.key
+    }
+
+    /// Fill sequence number within this item's keyed queue.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    // ---- failure-injection hooks (a locally corrupted pool models a
+    // malicious party; the online checks must abort) ----
+
+    /// Corrupt one held component of the pooled wire-mask skeleton.
+    pub fn tamper_lam_x(&mut self) {
+        match &mut self.lam_x {
+            MMat::Eval { lam_prev, .. } => lam_prev.data_mut()[0] += Z64(1),
+            MMat::Helper { lam } => lam[0].data_mut()[0] += Z64(1),
+        }
+    }
+
+    /// Corrupt a held `r` component of the first pooled truncation pair.
+    /// Returns false when the item carries no pairs (`OpKind::MatMul`).
+    pub fn tamper_pair_r(&mut self) -> bool {
+        if let Some(p) = self.pairs.first_mut() {
+            for c in p.r.iter_mut() {
+                if let Some(v) = c {
+                    *v += Z64(1);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// Pre-draw one input wire mask (PRF-only; no messages), element by element
+/// through `Π_Sh`'s own [`sample_mask`] — same scope pattern, same stream
+/// order as an inline sharing, so a pooled mask is draw-for-draw what the
+/// inline path would have produced. Returns the party's skeleton and —
+/// where all three components are held (dealer, P0) — the full mask.
+pub(crate) fn sample_wire_mask(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    rows: usize,
+    cols: usize,
+) -> (MMat<Z64>, Option<Matrix<Z64>>) {
+    ctx.offline(|ctx| {
+        let n = rows * cols;
+        let mut skels: Vec<MShare<Z64>> = Vec::with_capacity(n);
+        let mut fulls: Vec<Z64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (skel, full) = sample_mask::<Z64>(ctx, dealer);
+            skels.push(skel);
+            if let Some(f) = full {
+                fulls.push(f[0] + f[1] + f[2]);
+            }
+        }
+        let full = (fulls.len() == n).then(|| Matrix::from_vec(rows, cols, fulls));
+        (MMat::from_shares(rows, cols, &skels), full)
+    })
+}
+
+/// Pre-generate `n` circuit-keyed matrix correlations for `key` against the
+/// resident model share `w` into the attached pool. Runs the real offline
+/// protocols — wire-mask PRF draws, the `matmul_offline` γ-exchange,
+/// truncation-pair generation + verification — all metered under
+/// `Phase::Offline`, and flushes its own deferred verification digests so a
+/// later serving wave's flush carries no offline traffic.
+pub fn fill_mat(ctx: &mut Ctx, key: CircuitKey, w: &MMat<Z64>, n: usize) -> Result<(), Abort> {
+    assert_eq!(
+        (key.inner, key.cols),
+        w.dims(),
+        "resident model share must match the key shape"
+    );
+    assert!(ctx.has_pool(), "fill_mat requires an attached pool");
+    for _ in 0..n {
+        let (lam_x, lam_x_full) = sample_wire_mask(ctx, key.dealer, key.rows, key.inner);
+        let with_lam_z = matches!(key.op, OpKind::MatMul);
+        let corr = matmul_offline(ctx, &lam_x, w, with_lam_z)?;
+        let pairs = match key.op {
+            OpKind::MatMulTr { shift } => gen_trunc_pairs(ctx, key.rows * key.cols, shift)?,
+            OpKind::MatMul => Vec::new(),
+        };
+        let item = MatCorr {
+            key,
+            lam_x,
+            lam_x_full,
+            gamma: corr.gamma,
+            lam_z: corr.lam_z,
+            pairs,
+            seq: 0, // assigned by push_mat
+        };
+        ctx.pool.as_mut().expect("pool attached").push_mat(item);
+    }
+    // Fill is a natural barrier: settle the deferred offline digests here so
+    // the serving window between waves stays offline-silent.
+    ctx.flush_verify()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{P0, P2};
+    use crate::pool::Pool;
+    use crate::ring::fixed::FRAC_BITS;
+
+    fn key(layer: u32) -> CircuitKey {
+        CircuitKey {
+            model: 1,
+            layer,
+            op: OpKind::MatMulTr { shift: FRAC_BITS },
+            rows: 2,
+            inner: 3,
+            cols: 1,
+            dealer: P2,
+        }
+    }
+
+    fn dummy(k: CircuitKey) -> MatCorr {
+        MatCorr {
+            key: k,
+            lam_x: MMat::zero(P0, k.rows, k.inner),
+            lam_x_full: None,
+            gamma: MatGamma::Helper([
+                Matrix::zeros(k.rows, k.cols),
+                Matrix::zeros(k.rows, k.cols),
+                Matrix::zeros(k.rows, k.cols),
+            ]),
+            lam_z: MMat::zero(P0, k.rows, k.cols),
+            pairs: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn pop_is_fifo_and_refill_appends() {
+        let mut pool = Pool::new();
+        let k = key(0);
+        pool.push_mat(dummy(k));
+        pool.push_mat(dummy(k));
+        let a = pool.pop_mat(&k).unwrap().expect("stocked");
+        assert_eq!(a.seq(), 0);
+        // a background refill between pops appends — never interleaves
+        pool.push_mat(dummy(k));
+        let b = pool.pop_mat(&k).unwrap().expect("stocked");
+        assert_eq!(b.seq(), 1, "refill must append behind in-flight material");
+        let c = pool.pop_mat(&k).unwrap().expect("stocked");
+        assert_eq!(c.seq(), 2);
+        assert!(pool.pop_mat(&k).unwrap().is_none(), "drained");
+        assert_eq!(pool.stats().mat_hits, 3);
+        assert_eq!(pool.stats().mat_misses, 1);
+    }
+
+    #[test]
+    fn cross_key_pop_fails_closed() {
+        let mut pool = Pool::new();
+        let (ka, kb) = (key(0), key(1));
+        pool.push_mat(dummy(ka));
+        pool.push_mat(dummy(kb));
+        assert!(pool.cross_file_front_mat(&ka, &kb), "hook moves the item");
+        // the queue under kb now fronts material generated for ka
+        assert!(pool.pop_mat(&kb).is_err(), "wrong-key material must fail closed");
+        // the honest queue under ka is simply empty → miss, not an error
+        assert!(pool.pop_mat(&ka).unwrap().is_none());
+    }
+}

@@ -15,14 +15,24 @@
 //!     multiplication/dot-product output randomness of `Π_Mult`/`Π_DotP`
 //!     and the γ-free multiplication inside `Π_Bit2A`,
 //!   - **bit-extraction masks** (`[[r]], [[msb r]]^B` pairs) for
-//!     `Π_BitExt` and therefore ReLU/Sigmoid.
+//!     `Π_BitExt` and therefore ReLU/Sigmoid,
+//!   - **circuit-keyed matrix correlations** ([`mat`]): per
+//!     [`CircuitKey`] (model · layer · op · shape · dealer), the pre-drawn
+//!     input **wire mask**, the pre-exchanged `⟨Γ⟩` of `matmul_offline`
+//!     against the resident model, and the gate's `λ_Z`/truncation pairs —
+//!     the bundle that makes a pool-backed serving wave's per-request
+//!     offline phase **message-free**.
 //! * `fill_*` run the real generation protocols (messages, verification,
 //!   metering all land under [`Phase::Offline`](crate::net::Phase)) and
 //!   stock the party's pool.
+//! * A **background refill producer** ([`refill`]) registers per-resource
+//!   water marks and tops queues back up *between* serving waves instead of
+//!   one workload-sized up-front fill.
 //! * Pool-aware entry points (`proto::trunc::trunc_pairs`,
-//!   `proto::mult::lam_shares`, `convert::bitext::bitext_many`) pop from an
-//!   attached pool and fall back to inline generation when it cannot serve
-//!   the full request.
+//!   `proto::mult::lam_shares`, `convert::bitext::bitext_many`,
+//!   `proto::dotp::matmul_keyed`, `proto::trunc::matmul_tr_keyed`) pop from
+//!   an attached pool and fall back to inline generation when it cannot
+//!   serve the full request.
 //!
 //! **Determinism contract.** Consumption is all-or-nothing per request: a
 //! pool either serves the entire batch or none of it, so all four parties —
@@ -35,6 +45,12 @@
 //! malicious party mis-executing the online phase, and the existing
 //! vouch/expect digests and reconstruction cross-checks catch it (the
 //! failure-injection suite in `tests/equivalence.rs` exercises both).
+
+pub mod mat;
+pub mod refill;
+
+pub use mat::{fill_mat, CircuitKey, MatCorr, OpKind};
+pub use refill::{Refill, RefillOutcome, WaterMarks};
 
 use std::collections::{HashMap, VecDeque};
 
@@ -57,15 +73,18 @@ pub struct PoolStats {
     pub lam_misses: u64,
     pub bitext_hits: u64,
     pub bitext_misses: u64,
+    /// Circuit-keyed matrix correlation pops ([`mat`]).
+    pub mat_hits: u64,
+    pub mat_misses: u64,
 }
 
 impl PoolStats {
     pub fn hits(&self) -> u64 {
-        self.trunc_hits + self.lam_hits + self.bitext_hits
+        self.trunc_hits + self.lam_hits + self.bitext_hits + self.mat_hits
     }
 
     pub fn misses(&self) -> u64 {
-        self.trunc_misses + self.lam_misses + self.bitext_misses
+        self.trunc_misses + self.lam_misses + self.bitext_misses + self.mat_misses
     }
 }
 
@@ -80,6 +99,10 @@ pub struct Pool {
     lam_bit: VecDeque<MShare<Bit>>,
     /// `Π_BitExt` offline material.
     bitext: VecDeque<BitExtMask>,
+    /// Circuit-keyed matrix correlations (wire masks + `⟨Γ⟩` + pairs/λ_Z).
+    mat: HashMap<CircuitKey, VecDeque<MatCorr>>,
+    /// Per-key fill sequence counters (FIFO/no-interleave accounting).
+    mat_seq: HashMap<CircuitKey, u64>,
     stats: PoolStats,
 }
 
@@ -106,11 +129,16 @@ impl Pool {
         self.bitext.len()
     }
 
+    pub fn len_mat(&self, key: &CircuitKey) -> usize {
+        self.mat.get(key).map_or(0, VecDeque::len)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.trunc.values().all(VecDeque::is_empty)
             && self.lam_z64.is_empty()
             && self.lam_bit.is_empty()
             && self.bitext.is_empty()
+            && self.mat.values().all(VecDeque::is_empty)
     }
 
     // ---- typed λ queue dispatch -----------------------------------------
@@ -146,6 +174,16 @@ impl Pool {
 
     pub fn push_bitext(&mut self, masks: Vec<BitExtMask>) {
         self.bitext.extend(masks);
+    }
+
+    /// Stock one circuit-keyed matrix correlation under its embedded key,
+    /// stamping the per-key FIFO sequence number.
+    pub fn push_mat(&mut self, mut item: MatCorr) {
+        let key = item.key();
+        let seq = self.mat_seq.entry(key).or_insert(0);
+        item.seq = *seq;
+        *seq += 1;
+        self.mat.entry(key).or_default().push_back(item);
     }
 
     // ---- pop (consumption side; all-or-nothing) -------------------------
@@ -193,6 +231,37 @@ impl Pool {
         Some(self.bitext.drain(..n).collect())
     }
 
+    /// Pop one circuit-keyed matrix correlation. `Ok(None)` records a miss
+    /// (→ the caller's deterministic inline fallback); an `Err` means the
+    /// queue fronts material generated for a **different** key — the
+    /// caller must **fail closed** (abort), never run the online phase on
+    /// wrong-position correlations. The pop is atomic: the whole bundle
+    /// (wire mask + `⟨Γ⟩` + pairs) or nothing.
+    pub fn pop_mat(&mut self, key: &CircuitKey) -> Result<Option<MatCorr>, String> {
+        let q = match self.mat.get_mut(key) {
+            Some(q) => q,
+            None => {
+                self.stats.mat_misses += 1;
+                return Ok(None);
+            }
+        };
+        match q.pop_front() {
+            None => {
+                self.stats.mat_misses += 1;
+                Ok(None)
+            }
+            Some(item) if item.key() == *key => {
+                self.stats.mat_hits += 1;
+                Ok(Some(item))
+            }
+            Some(item) => Err(format!(
+                "pool material generated for {:?} popped under {:?} — failing closed",
+                item.key(),
+                key
+            )),
+        }
+    }
+
     // ---- failure-injection hooks ----------------------------------------
 
     /// Mutable access to the next-to-be-served truncation pair — the
@@ -217,6 +286,43 @@ impl Pool {
             }
             None => false,
         }
+    }
+
+    /// Mutable access to the next-to-be-served keyed matrix correlation —
+    /// the tamper hook for wire masks and pooled truncation pairs.
+    pub fn mat_front_mut(&mut self, key: &CircuitKey) -> Option<&mut MatCorr> {
+        self.mat.get_mut(key).and_then(VecDeque::front_mut)
+    }
+
+    /// Duplicate the front keyed matrix correlation (a replay of the
+    /// pre-exchanged `MatGamma` and its wire mask: this party will serve
+    /// the same bundle twice while its peers advance). Returns false when
+    /// nothing is stocked.
+    pub fn replay_front_mat(&mut self, key: &CircuitKey) -> bool {
+        let q = match self.mat.get_mut(key) {
+            Some(q) => q,
+            None => return false,
+        };
+        match q.front().cloned() {
+            Some(front) => {
+                q.push_front(front);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Move the front item of `from`'s queue to the front of `to`'s queue
+    /// *without* rewriting its embedded key — a malicious party serving
+    /// material at the wrong circuit position. The next honest `pop_mat`
+    /// under `to` fails closed. Returns false when `from` is unstocked.
+    pub fn cross_file_front_mat(&mut self, from: &CircuitKey, to: &CircuitKey) -> bool {
+        let item = match self.mat.get_mut(from).and_then(VecDeque::pop_front) {
+            Some(i) => i,
+            None => return false,
+        };
+        self.mat.entry(*to).or_default().push_front(item);
+        true
     }
 }
 

@@ -1,0 +1,226 @@
+//! Background pool refill — a **producer that tops queues up between
+//! serving waves** against low-water marks, replacing the one-shot
+//! workload-sized fill of PR 1.
+//!
+//! ## Refill state machine
+//!
+//! A [`Refill`] holds a set of registered targets, each pairing a pool
+//! resource with [`WaterMarks`] `{low, high}`. Every call to
+//! [`Refill::tick`] runs the same deterministic loop per target:
+//!
+//! ```text
+//!   CHECK  stock = pool.len(target)
+//!   ──────  stock ≥ low  → SKIP (no traffic at all)
+//!   ──────  stock < low  → FILL high − stock items (the real offline
+//!                          generation protocols, metered Phase::Offline),
+//!                          then settle the fill's verification digests
+//! ```
+//!
+//! **Lockstep determinism.** Stock levels are identical at all four
+//! parties (fills and pops run in lockstep, like the PRF streams the pool
+//! caches), so every party takes the same SKIP/FILL branch with the same
+//! count — a tick can never desynchronise the cluster. In a deployment the
+//! producer runs on its own connection whenever the serving loop is idle;
+//! the in-process cluster calls `tick` cooperatively at wave boundaries,
+//! which is the deterministic equivalent.
+//!
+//! **No interleaving.** A fill appends to the end of FIFO queues and keyed
+//! pops are whole-bundle atomic, so a refill between (or conceptually
+//! during) waves can never interleave material *within* one pop — asserted
+//! by the pool's sequence-number tests.
+//!
+//! **Offline-only traffic.** Everything a tick does is offline-phase:
+//! generation messages, verification, digests. The serving-wave windows
+//! around ticks stay offline-silent (the meter regression tests assert
+//! both directions).
+
+use crate::net::Abort;
+use crate::proto::Ctx;
+use crate::ring::Z64;
+use crate::sharing::MMat;
+
+use super::mat::{fill_mat, CircuitKey};
+use super::{fill_bitext, fill_lam, fill_trunc};
+
+/// Refill thresholds for one pooled resource, in items of that resource
+/// (keyed matrix bundles, truncation pairs, λ skeletons, bitext masks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaterMarks {
+    /// A tick refills only when stock has fallen **below** this.
+    pub low: usize,
+    /// A triggered refill tops the queue up to this.
+    pub high: usize,
+}
+
+impl WaterMarks {
+    pub fn new(low: usize, high: usize) -> WaterMarks {
+        assert!(low <= high, "low-water mark must not exceed high-water mark");
+        WaterMarks { low, high }
+    }
+}
+
+struct MatTarget {
+    key: CircuitKey,
+    /// Resident model share the γ correlations are generated against.
+    w: MMat<Z64>,
+    marks: WaterMarks,
+}
+
+struct TruncTarget {
+    shift: u32,
+    marks: WaterMarks,
+}
+
+/// The background refill producer: registered targets + cooperative
+/// [`Refill::tick`]. See the module docs for the state machine.
+#[derive(Default)]
+pub struct Refill {
+    mat: Vec<MatTarget>,
+    trunc: Vec<TruncTarget>,
+    lam_z64: Option<WaterMarks>,
+    bitext: Option<WaterMarks>,
+}
+
+/// What one tick generated, per resource (all zero ⇒ every stock was at or
+/// above its low-water mark and the tick was traffic-free).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RefillOutcome {
+    /// Keyed matrix correlation bundles filled.
+    pub mat_items: usize,
+    /// Truncation pairs filled.
+    pub trunc_pairs: usize,
+    /// λ_Z skeletons filled.
+    pub lam: usize,
+    /// Bit-extraction masks filled.
+    pub bitext: usize,
+}
+
+impl RefillOutcome {
+    pub fn total(&self) -> usize {
+        self.mat_items + self.trunc_pairs + self.lam + self.bitext
+    }
+}
+
+impl Refill {
+    pub fn new() -> Refill {
+        Refill::default()
+    }
+
+    /// Register a circuit position: the serving engine calls this once per
+    /// resident-model matrix gate at model-load time.
+    pub fn register_mat(&mut self, key: CircuitKey, w: MMat<Z64>, marks: WaterMarks) {
+        self.mat.push(MatTarget { key, w, marks });
+    }
+
+    pub fn register_trunc(&mut self, shift: u32, marks: WaterMarks) {
+        self.trunc.push(TruncTarget { shift, marks });
+    }
+
+    pub fn register_lam(&mut self, marks: WaterMarks) {
+        self.lam_z64 = Some(marks);
+    }
+
+    pub fn register_bitext(&mut self, marks: WaterMarks) {
+        self.bitext = Some(marks);
+    }
+
+    /// One cooperative refill step (all four parties call in lockstep
+    /// between serving waves). Checks every registered target against its
+    /// low-water mark and tops depleted queues back up to high; targets at
+    /// or above low generate **no traffic at all**.
+    pub fn tick(&self, ctx: &mut Ctx) -> Result<RefillOutcome, Abort> {
+        assert!(ctx.has_pool(), "refill tick requires an attached pool");
+        let mut out = RefillOutcome::default();
+        for t in &self.mat {
+            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_mat(&t.key));
+            if stock < t.marks.low {
+                let need = t.marks.high - stock;
+                fill_mat(ctx, t.key, &t.w, need)?;
+                out.mat_items += need;
+            }
+        }
+        for t in &self.trunc {
+            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_trunc(t.shift));
+            if stock < t.marks.low {
+                let need = t.marks.high - stock;
+                fill_trunc(ctx, need, t.shift)?;
+                out.trunc_pairs += need;
+            }
+        }
+        if let Some(marks) = self.lam_z64 {
+            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_lam::<Z64>());
+            if stock < marks.low {
+                let need = marks.high - stock;
+                fill_lam::<Z64>(ctx, need);
+                out.lam += need;
+            }
+        }
+        if let Some(marks) = self.bitext {
+            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_bitext());
+            if stock < marks.low {
+                let need = marks.high - stock;
+                fill_bitext(ctx, need)?;
+                out.bitext += need;
+            }
+        }
+        // Settle every fill's deferred verification digests at the tick
+        // boundary (fill_mat flushes its own; fill_trunc/fill_bitext defer
+        // theirs) so no offline-phase digest leaks into the next serving
+        // wave's flush window.
+        if out.total() > 0 {
+            ctx.flush_verify()?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetProfile, P1, P2};
+    use crate::pool::{CircuitKey, OpKind, Pool};
+    use crate::proto::run_4pc;
+    use crate::ring::fixed::FRAC_BITS;
+    use crate::ring::Matrix;
+
+    #[test]
+    fn refill_triggers_exactly_at_low_water() {
+        let key = CircuitKey {
+            model: 9,
+            layer: 0,
+            op: OpKind::MatMulTr { shift: FRAC_BITS },
+            rows: 1,
+            inner: 2,
+            cols: 1,
+            dealer: P2,
+        };
+        let run = run_4pc(NetProfile::zero(), 810, move |ctx| {
+            let w0 = Matrix::from_fn(2, 1, |r, _| crate::ring::Z64(3 + r as u64));
+            let w = crate::testutil::share_mat(ctx, P1, &w0)?;
+            ctx.attach_pool(Pool::new());
+            let mut refill = Refill::new();
+            refill.register_mat(key, w, WaterMarks::new(2, 3));
+            // empty pool: first tick fills to high
+            let t1 = refill.tick(ctx)?;
+            // stock 3 ≥ low 2: no-op
+            let t2 = refill.tick(ctx)?;
+            // pop one (stock 2, still ≥ low): no-op
+            let _ = ctx.pool_mut().unwrap().pop_mat(&key).unwrap().expect("stocked");
+            let t3 = refill.tick(ctx)?;
+            // pop one more (stock 1 < low): top back up to 3
+            let _ = ctx.pool_mut().unwrap().pop_mat(&key).unwrap().expect("stocked");
+            let t4 = refill.tick(ctx)?;
+            let left = ctx.pool.as_ref().unwrap().len_mat(&key);
+            ctx.flush_verify()?;
+            Ok((t1.mat_items, t2.mat_items, t3.mat_items, t4.mat_items, left))
+        });
+        let (outs, _) = run.expect_ok();
+        for (t1, t2, t3, t4, left) in &outs {
+            assert_eq!(*t1, 3, "cold pool fills to high");
+            assert_eq!(*t2, 0, "at high: no refill");
+            assert_eq!(*t3, 0, "at low mark exactly: no refill");
+            assert_eq!(*t4, 2, "below low: top back up to high");
+            assert_eq!(*left, 3);
+        }
+    }
+}

@@ -10,11 +10,13 @@
 //! to the AOT PJRT artifact when one exists for the shape.
 
 use crate::net::{Abort, PartyId, EVALUATORS, P0};
-use crate::ring::{Matrix, Ring};
+use crate::pool::{CircuitKey, MatCorr, OpKind};
+use crate::ring::{Matrix, Ring, Z64};
 use crate::runtime::gemm;
 use crate::sharing::{MMat, MShare};
 
 use super::mult::gamma_component;
+use super::sharing::{share_mat_n, share_mat_with_mask};
 use super::Ctx;
 
 #[inline]
@@ -132,6 +134,7 @@ pub(crate) struct MatmulCorr<R> {
     pub gamma: MatGamma<R>,
 }
 
+#[derive(Clone, Debug)]
 pub(crate) enum MatGamma<R> {
     Helper([Matrix<R>; 3]),
     Eval { next: Matrix<R>, prev: Matrix<R> },
@@ -275,10 +278,8 @@ pub(crate) fn local_share_mat<R: Ring>(
     let lxj = x.lam(me, j).unwrap();
     let lyj = y.lam(me, j).unwrap();
     let (mx, my) = (x.m(), y.m());
-    ctx.net.timed(|| {
-        let t = crate::runtime::masked_matmul(lxj, my, mx, lyj, gamma_j, lam_z_j);
-        t
-    })
+    ctx.net
+        .timed(|| crate::runtime::masked_matmul(lxj, my, mx, lyj, gamma_j, lam_z_j))
 }
 
 /// `[[Z]] = [[X]] ∘ [[Y]]` — matrix product with 3·(a·c) online ring
@@ -325,6 +326,56 @@ pub(crate) fn matmul_online<R: Ring>(
             _ => unreachable!(),
         }
     })
+}
+
+/// Lockstep pop of a circuit-keyed matrix correlation from the attached
+/// pool. `Ok(None)` on a miss or with no pool attached (→ the caller's
+/// deterministic inline fallback; all four parties fill and pop in
+/// lockstep, so they agree). Material filed under a different [`CircuitKey`]
+/// **fails closed**: the popping party aborts rather than running the
+/// online phase on wrong-position correlations.
+pub(crate) fn pop_keyed(ctx: &mut Ctx, key: &CircuitKey) -> Result<Option<MatCorr>, Abort> {
+    match ctx.pool.as_mut().map(|p| p.pop_mat(key)) {
+        None => Ok(None),
+        Some(Ok(item)) => Ok(item),
+        Some(Err(why)) => Err(ctx.net.abort(why)),
+    }
+}
+
+/// Pool-aware **circuit-keyed** matrix product: pops the pre-generated
+/// correlation for `key` (pre-drawn input wire mask `Λ_X`, pre-exchanged
+/// `⟨Γ⟩` against the resident `[[Y]]`, pooled `λ_Z`), shares the dealer's
+/// `X` under the pooled mask and runs only the online exchange — a hit
+/// performs **zero offline-phase messages**. A miss (exhausted or
+/// unattached pool, or a shape the key was not registered for) falls back
+/// to the inline share + [`matmul`] path; the pop decision is lockstep at
+/// all four parties, so the fallback is deterministic. Returns the input
+/// sharing alongside the product (multi-layer callers need both).
+pub fn matmul_keyed(
+    ctx: &mut Ctx,
+    key: &CircuitKey,
+    x_clear: Option<&Matrix<Z64>>,
+    y: &MMat<Z64>,
+) -> Result<(MMat<Z64>, MMat<Z64>), Abort> {
+    assert!(
+        matches!(key.op, OpKind::MatMul),
+        "matmul_keyed requires an OpKind::MatMul key"
+    );
+    assert_eq!((key.inner, key.cols), y.dims(), "resident Y must match the key shape");
+    match pop_keyed(ctx, key)? {
+        Some(item) => {
+            let MatCorr { lam_x, lam_x_full, gamma, lam_z, .. } = item;
+            let x = share_mat_with_mask(ctx, key.dealer, x_clear, lam_x, lam_x_full)?;
+            let corr = MatmulCorr { lam_z, gamma };
+            let z = matmul_online(ctx, &x, y, &corr)?;
+            Ok((x, z))
+        }
+        None => {
+            let x = share_mat_n(ctx, key.dealer, x_clear, key.rows, key.inner)?;
+            let z = matmul(ctx, &x, y)?;
+            Ok((x, z))
+        }
+    }
 }
 
 /// Who computes γ-component j (sanity helper used in tests).

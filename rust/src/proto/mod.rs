@@ -20,11 +20,13 @@ pub mod reconstruct;
 pub mod sharing;
 pub mod trunc;
 
-pub use dotp::{dotp, matmul};
+pub use dotp::{dotp, matmul, matmul_keyed};
 pub use mult::{mult, mult_many};
 pub use reconstruct::{fair_reconstruct, reconstruct, reconstruct_to};
-pub use sharing::{ash, share, vsh};
-pub use trunc::{matmul_tr, matmul_tr_shift, mult_tr, mult_tr_many, trunc_pairs, TruncPair};
+pub use sharing::{ash, share, share_mat_n, share_mat_with_mask, vsh};
+pub use trunc::{
+    matmul_tr, matmul_tr_keyed, matmul_tr_shift, mult_tr, mult_tr_many, trunc_pairs, TruncPair,
+};
 
 use crate::crypto::{HashAcc, Rng};
 use crate::net::{
@@ -80,10 +82,12 @@ impl<'a> Ctx<'a> {
 
     /// Attach an offline precomputation pool. Pool-aware protocols
     /// (`trunc_pairs`, the λ_z draws of `mult`/`dotp`/`bit2a`, the mask
-    /// material of `bitext`) pop from it when stocked and fall back to
-    /// inline generation otherwise. **All four parties must attach (and
-    /// fill) their pools in lockstep** — pool consumption is part of the
-    /// public protocol schedule, exactly like the PRF streams it caches.
+    /// material of `bitext`, and the circuit-keyed matrix correlations of
+    /// `matmul_keyed`/`matmul_tr_keyed`) pop from it when stocked and fall
+    /// back to inline generation otherwise. **All four parties must attach
+    /// (and fill) their pools in lockstep** — pool consumption is part of
+    /// the public protocol schedule, exactly like the PRF streams it
+    /// caches.
     pub fn attach_pool(&mut self, pool: crate::pool::Pool) {
         self.pool = Some(pool);
     }

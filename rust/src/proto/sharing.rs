@@ -12,9 +12,9 @@
 //!   (P0, when an owner, knows every mask anyway).
 
 use crate::net::{Abort, PartyId, EVALUATORS, P0};
-use crate::ring::Ring;
+use crate::ring::{Matrix, Ring};
 use crate::setup::Scope;
-use crate::sharing::{MShare, RShare};
+use crate::sharing::{MMat, MShare, RShare};
 
 use super::Ctx;
 
@@ -28,8 +28,11 @@ fn lam_scope(dealer: PartyId, j: PartyId) -> Scope {
 }
 
 /// Draw the λ components for a sharing dealt by `dealer`; returns
-/// `(my_share_skeleton, full_mask_if_known)`.
-fn sample_mask<R: Ring>(ctx: &mut Ctx, dealer: PartyId) -> (MShare<R>, Option<[R; 3]>) {
+/// `(my_share_skeleton, full_mask_if_known)`. Also the single source of
+/// truth for [`crate::pool::mat`]'s pre-drawn wire masks, which must follow
+/// the exact dealer scope pattern (and draw order) of `Π_Sh` so a pooled
+/// mask is indistinguishable from an inline-sampled one.
+pub(crate) fn sample_mask<R: Ring>(ctx: &mut Ctx, dealer: PartyId) -> (MShare<R>, Option<[R; 3]>) {
     let me = ctx.id();
     let mut lam = [None::<R>; 3];
     for j in EVALUATORS {
@@ -142,6 +145,81 @@ pub fn share_many_n<R: Ring>(
             // P0, not dealer: holds only the mask components
             Ok(masks.into_iter().map(|(skel, _)| skel).collect())
         }
+    })
+}
+
+/// Share a whole matrix from `dealer` (batched `Π_Sh`; the shape is public
+/// circuit structure). Pass the clear matrix at the dealer, `None` elsewhere.
+pub fn share_mat_n<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    m: Option<&Matrix<R>>,
+    rows: usize,
+    cols: usize,
+) -> Result<MMat<R>, Abort> {
+    if let Some(m) = m {
+        assert_eq!((m.rows(), m.cols()), (rows, cols), "dealer matrix shape");
+    }
+    let vs: Option<Vec<R>> = m.map(|m| m.data().to_vec());
+    let shares = share_many_n(ctx, dealer, vs.as_deref(), rows * cols)?;
+    Ok(MMat::from_shares(rows, cols, &shares))
+}
+
+/// `Π_Sh` against a **pre-drawn pooled wire mask** (see
+/// [`crate::pool::mat`]): the mask skeleton `Λ_X` (and, at the dealer, the
+/// full mask `Λ_X = Λ_1+Λ_2+Λ_3`) was sampled at pool-fill time with the
+/// dealer scope pattern of [`lam_scope`], so the online step is delivery
+/// only — the dealer sends `m = X + Λ_X` to the other evaluators, who
+/// cross-check it exactly as in the inline protocol. **Zero offline work**:
+/// no PRF draws, no messages; this is what makes a pool-backed serving
+/// wave's per-request offline phase message-free.
+pub fn share_mat_with_mask<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    x: Option<&Matrix<R>>,
+    skel: MMat<R>,
+    full: Option<Matrix<R>>,
+) -> Result<MMat<R>, Abort> {
+    // NOTE: this is [`share_many_n`]'s online delivery transplanted onto a
+    // pre-drawn mask (dealer send → evaluator crosscheck → fill m). The two
+    // must stay message-for-message identical — the pooled==inline
+    // equivalence suite pins that; change them together.
+    let me = ctx.id();
+    let (rows, cols) = skel.dims();
+    let n = rows * cols;
+    ctx.online(|ctx| {
+        let my_m: Option<Vec<R>> = if me == dealer {
+            let x = x.expect("dealer must supply the clear matrix");
+            assert_eq!((x.rows(), x.cols()), (rows, cols), "dealer matrix shape");
+            let full = full.expect("pooled wire mask must carry the dealer's full mask");
+            let ms: Vec<R> =
+                x.data().iter().zip(full.data()).map(|(&v, &l)| v + l).collect();
+            for p in EVALUATORS {
+                if p != me {
+                    ctx.send_ring(p, &ms);
+                }
+            }
+            if me.is_evaluator() {
+                ctx.crosscheck_ring(&ms);
+                Some(ms)
+            } else {
+                None
+            }
+        } else if me.is_evaluator() {
+            let ms: Vec<R> = ctx.recv_ring(dealer, n)?;
+            ctx.crosscheck_ring(&ms);
+            Some(ms)
+        } else {
+            None
+        };
+        Ok(match skel {
+            MMat::Eval { lam_next, lam_prev, .. } => MMat::Eval {
+                m: Matrix::from_vec(rows, cols, my_m.expect("evaluator holds m")),
+                lam_next,
+                lam_prev,
+            },
+            h @ MMat::Helper { .. } => h,
+        })
     })
 }
 
@@ -372,7 +450,7 @@ pub fn vsh_cycle<R: Ring>(
         }
     }
     // assemble shares
-    let build = |idx: usize, ms: &[Option<Vec<R>>; 3], masks: &Vec<Vec<[Option<R>; 3]>>| {
+    let build = |idx: usize, ms: &[Option<Vec<R>>; 3], masks: &[Vec<[Option<R>; 3]>]| {
         (0..n)
             .map(|i| {
                 let lam = masks[idx][i];

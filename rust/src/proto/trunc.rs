@@ -15,12 +15,13 @@
 //! shift), and add `[[rᵗ]]`.
 
 use crate::net::{Abort, EVALUATORS, P0, P1, P2};
+use crate::pool::{CircuitKey, MatCorr, OpKind};
 use crate::ring::{fixed::FRAC_BITS, Matrix, Z64};
 use crate::sharing::{MMat, MShare, RShare};
 
-use super::dotp::{local_share_mat, matmul_offline, MatGamma};
+use super::dotp::{local_share_mat, matmul_offline, pop_keyed, MatGamma};
 use super::mult::{mult_offline, GammaView};
-use super::sharing::ash_many;
+use super::sharing::{ash_many, share_mat_n, share_mat_with_mask};
 use super::Ctx;
 
 /// A verified truncation pair: additive `r`-components (those I hold) and
@@ -201,18 +202,35 @@ pub fn matmul_tr_shift(
     y: &MMat<Z64>,
     shift: u32,
 ) -> Result<MMat<Z64>, Abort> {
+    let corr = matmul_offline(ctx, x, y, false)?;
+    let pairs = trunc_pairs(ctx, x.rows() * y.cols(), shift)?;
+    matmul_tr_online(ctx, x, y, &corr.gamma, &pairs, shift)
+}
+
+/// Online phase of `Π_MatMulTr`, given the offline correlation (`⟨Γ⟩` for
+/// the wire-mask pair and one verified truncation pair per output element).
+/// Shared by the inline path above and the circuit-keyed pooled path
+/// ([`matmul_tr_keyed`]), which differ only in where the correlation comes
+/// from.
+pub(crate) fn matmul_tr_online(
+    ctx: &mut Ctx,
+    x: &MMat<Z64>,
+    y: &MMat<Z64>,
+    gamma: &MatGamma<Z64>,
+    pairs: &[TruncPair],
+    shift: u32,
+) -> Result<MMat<Z64>, Abort> {
     let me = ctx.id();
     let (a, c) = (x.rows(), y.cols());
     let n = a * c;
-    let corr = matmul_offline(ctx, x, y, false)?;
-    let pairs = trunc_pairs(ctx, n, shift)?;
+    assert_eq!(pairs.len(), n, "one truncation pair per output element");
 
     ctx.online(|ctx| {
         if me == P0 {
             let shares: Vec<MShare<Z64>> = pairs.iter().map(|p| p.rt).collect();
             return Ok(MMat::from_shares(a, c, &shares));
         }
-        let (g_next, g_prev) = match &corr.gamma {
+        let (g_next, g_prev) = match gamma {
             MatGamma::Eval { next, prev } => (next, prev),
             _ => unreachable!(),
         };
@@ -245,6 +263,43 @@ pub fn matmul_tr_shift(
             .collect();
         Ok(MMat::from_shares(a, c, &shares))
     })
+}
+
+/// Pool-aware **circuit-keyed** `Π_MatMulTr` — the pooled serving hot path.
+/// Pops the correlation pre-generated for `key` (pre-drawn input wire mask
+/// `Λ_X`, pre-exchanged `⟨Γ⟩` against the resident `[[Y]]`, and one verified
+/// truncation pair per output element), shares the dealer's `X` under the
+/// pooled mask and runs only the online exchange: a hit performs **zero
+/// offline-phase messages**, which is what makes a warm-pool serving wave's
+/// per-request offline phase message-free. A miss falls back to the inline
+/// share + [`matmul_tr_shift`] path; the pop decision is lockstep at all
+/// four parties, so the fallback is deterministic. Material filed under a
+/// different key fails closed (the popping party aborts — never a wrong
+/// honest opened value). Returns the input sharing alongside the product.
+pub fn matmul_tr_keyed(
+    ctx: &mut Ctx,
+    key: &CircuitKey,
+    x_clear: Option<&Matrix<Z64>>,
+    y: &MMat<Z64>,
+) -> Result<(MMat<Z64>, MMat<Z64>), Abort> {
+    let shift = match key.op {
+        OpKind::MatMulTr { shift } => shift,
+        OpKind::MatMul => panic!("matmul_tr_keyed requires an OpKind::MatMulTr key"),
+    };
+    assert_eq!((key.inner, key.cols), y.dims(), "resident Y must match the key shape");
+    match pop_keyed(ctx, key)? {
+        Some(item) => {
+            let MatCorr { lam_x, lam_x_full, gamma, pairs, .. } = item;
+            let x = share_mat_with_mask(ctx, key.dealer, x_clear, lam_x, lam_x_full)?;
+            let z = matmul_tr_online(ctx, &x, y, &gamma, &pairs, shift)?;
+            Ok((x, z))
+        }
+        None => {
+            let x = share_mat_n(ctx, key.dealer, x_clear, key.rows, key.inner)?;
+            let z = matmul_tr_shift(ctx, &x, y, shift)?;
+            Ok((x, z))
+        }
+    }
 }
 
 #[cfg(test)]

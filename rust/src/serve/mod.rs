@@ -5,34 +5,52 @@
 //! one protocol round-trip, and per-query amortized cost reported through
 //! the existing meter.
 //!
-//! Pipeline per coalesced batch:
+//! ## Pool modes
 //!
-//! 1. [`RequestQueue::next_batch`] pops up to `coalesce` pending queries
-//!    and stacks their feature rows into one matrix;
-//! 2. the data owner `Π_Sh`-shares the stacked matrix (one round for the
-//!    whole wave);
-//! 3. one `Π_MatMulTr` against the resident model (one round; truncation
-//!    pairs drained from the pool, so the per-request offline cost is the
-//!    γ-exchange only), optionally followed by a batched ReLU;
-//! 4. predictions are reconstructed towards the data owner and the batched
-//!    verification digests are flushed — every response is verified before
-//!    release.
+//! * [`PoolMode::Inline`] — the seed's path: every wave runs its own
+//!   offline phase live (γ-exchange + truncation-pair generation).
+//! * [`PoolMode::Scalar`] — PR 1's typed scalar pools: truncation pairs /
+//!   λ / bitext masks pre-generated, but `matmul_offline`'s γ-exchange
+//!   still runs live per wave, so the per-request offline phase is cheap
+//!   but **not** message-free.
+//! * [`PoolMode::Keyed`] — circuit-position-keyed matrix wire-mask pooling
+//!   ([`crate::pool::mat`]): at model load the engine registers one
+//!   [`CircuitKey`] per resident matrix gate; each wave then drains one
+//!   keyed bundle (pre-drawn input wire mask, pre-exchanged `⟨Γ⟩`,
+//!   truncation pairs) and the **linear-layer wave performs zero
+//!   offline-phase messages** — the property the meter regression suite
+//!   pins down via the per-party sent-traffic counters. Scope note: a
+//!   ReLU output layer still runs `Π_BitExt`'s *input-dependent*
+//!   multiplication γ-exchange live inside the wave (only its mask
+//!   material is poolable), so keyed+relu waves are cheap but not silent —
+//!   pooling that γ per circuit position is an open ROADMAP item.
 //!
-//! Rounds per batch are therefore **independent of how many queries were
-//! coalesced**; the per-query amortized rounds/latency/verification bytes
-//! shrink ~linearly in the coalescing factor (asserted by the meter
-//! regression tests and printed by `bench::serve_table` /
-//! `benches/serving.rs`).
+//! ## Background refill
+//!
+//! Instead of one up-front fill sized to the workload, the engine drives a
+//! [`Refill`] producer: targets registered at load with `{low, high}`
+//! water marks, topped up cooperatively **between** waves
+//! ([`crate::pool::refill`] documents the state machine and why the
+//! lockstep decision is deterministic). Refill traffic is metered
+//! `Phase::Offline` only; a trailing partial wave (fewer rows than the
+//! registered key) falls back to the inline path deterministically.
+//!
+//! Pipeline per coalesced batch: stack up to `coalesce` pending queries
+//! into one matrix; share it (under the pooled wire mask in keyed mode);
+//! one `Π_MatMulTr` against the resident model (optionally + batched
+//! ReLU); reconstruct towards the data owner with the batched verification
+//! digests flushed — every response is verified before release. Rounds per
+//! batch are independent of how many queries were coalesced.
 
 use std::collections::VecDeque;
 
 use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, Phase, P1, P2};
-use crate::pool::{self, Pool, PoolStats};
-use crate::proto::{matmul_tr, run_4pc, Ctx};
+use crate::pool::{CircuitKey, OpKind, Pool, PoolStats, Refill, RefillOutcome, WaterMarks};
+use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
 use crate::ring::fixed::{FixedPoint, FRAC_BITS};
-use crate::ring::Z64;
+use crate::ring::{Matrix, Z64};
 use crate::sharing::MMat;
 
 /// Domain separators so the model / query streams don't collide.
@@ -83,6 +101,14 @@ impl RequestQueue {
     }
 }
 
+/// How the engine sources its offline material (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    Inline,
+    Scalar,
+    Keyed,
+}
+
 /// Serving workload configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -95,8 +121,13 @@ pub struct ServeConfig {
     /// Max queries coalesced into one protocol batch (1 = the seed's
     /// per-query path).
     pub coalesce: usize,
-    /// Pre-stock the offline pool before serving starts.
-    pub pool: bool,
+    /// Offline-material sourcing mode.
+    pub mode: PoolMode,
+    /// Refill low-water mark, in full-wave items (keyed bundles; scalar
+    /// resources are scaled by their per-wave consumption).
+    pub low_water: usize,
+    /// Refill high-water mark, same units.
+    pub high_water: usize,
     /// Apply a batched ReLU after the linear layer (exercises the
     /// bit-extraction pool material).
     pub relu: bool,
@@ -110,11 +141,41 @@ impl Default for ServeConfig {
             rows_per_query: 1,
             queries: 8,
             coalesce: 8,
-            pool: true,
+            mode: PoolMode::Keyed,
+            low_water: 1,
+            high_water: 2,
             relu: false,
             seed: 123,
         }
     }
+}
+
+/// The circuit key of the resident linear layer for a wave of `rows`
+/// stacked feature rows.
+pub fn wave_key(cfg: &ServeConfig, rows: usize) -> CircuitKey {
+    CircuitKey {
+        model: cfg.seed,
+        layer: 0,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows,
+        inner: cfg.d,
+        cols: 1,
+        dealer: P2,
+    }
+}
+
+/// The coalescing factor actually achievable: `coalesce` capped by the
+/// workload size, so a `coalesce > queries` config still registers (and
+/// refills) the key real waves will pop rather than an oversized one no
+/// wave can ever hit.
+fn effective_coalesce(cfg: &ServeConfig) -> usize {
+    cfg.coalesce.max(1).min(cfg.queries.max(1))
+}
+
+/// The key the engine registers at model load: a **full** coalesced wave.
+/// Trailing partial waves key differently and fall back inline.
+pub fn model_key(cfg: &ServeConfig) -> CircuitKey {
+    wave_key(cfg, effective_coalesce(cfg) * cfg.rows_per_query)
 }
 
 /// Per-party output of one serving run (internal).
@@ -123,10 +184,20 @@ struct PartyOut {
     batch_lat: Vec<f64>,
     /// Per-batch online round deltas.
     batch_rounds: Vec<u64>,
+    /// Per-batch offline messages *sent by this party* inside the wave
+    /// window (local counters — race-free across threads).
+    wave_offline_msgs: Vec<u64>,
+    wave_offline_bytes: Vec<u64>,
+    /// Refill outcomes, tick order (warm-up tick first).
+    refill_outcomes: Vec<RefillOutcome>,
+    /// Online messages this party sent inside refill ticks (must be 0:
+    /// refill traffic is Phase::Offline only).
+    tick_online_msgs: u64,
     /// Decoded predictions, at the data owner only.
     answers: Vec<f64>,
     pool_stats: Option<PoolStats>,
     pool_left_trunc: usize,
+    pool_left_mat: usize,
 }
 
 /// Aggregated serving measurements.
@@ -136,7 +207,7 @@ pub struct ServeStats {
     pub batches: usize,
     pub rows: usize,
     /// Online rounds of the serving loop (clocks reset after model setup
-    /// and pool fill).
+    /// and pool warm-up).
     pub online_rounds: u64,
     /// Summed per-batch online latency (max across parties per batch).
     pub online_latency: f64,
@@ -150,12 +221,28 @@ pub struct ServeStats {
     /// first batch flushes anyway (fixed 32-byte accumulators), so the
     /// serving window is exact.
     pub online_total_bytes: u64,
-    /// Offline value bits (pool fill + per-batch γ exchanges).
+    /// Offline value bits (pool fill / refill + any live γ exchanges).
     pub offline_value_bits: u64,
+    /// Offline-phase messages sent by **any** party inside a serving-wave
+    /// window, summed over waves — 0 for a warm keyed pool (the
+    /// offline-silence property), > 0 whenever a wave runs γ-exchange or
+    /// pair generation live.
+    pub offline_msgs_in_waves: u64,
+    /// Same window, payload bytes.
+    pub offline_bytes_in_waves: u64,
+    /// Refill ticks taken (including the warm-up tick).
+    pub refill_ticks: usize,
+    /// Keyed matrix bundles generated by refill ticks.
+    pub refill_mat_items: usize,
+    /// Online messages sent inside refill ticks (refill is offline-only,
+    /// so this must be 0; summed over parties).
+    pub refill_online_msgs: u64,
     /// Pool counters (None when serving inline).
     pub pool_stats: Option<PoolStats>,
     /// Truncation pairs left unserved in the pool at shutdown.
     pub pool_left_trunc: usize,
+    /// Keyed bundles left under the registered model key at shutdown.
+    pub pool_left_mat: usize,
     /// Online round cost of each coalesced batch (all ~equal: the rounds of
     /// a single query, regardless of how many were coalesced).
     pub rounds_per_batch: Vec<u64>,
@@ -220,22 +307,67 @@ pub fn cleartext_predictions(cfg: &ServeConfig) -> Vec<f64> {
 
 /// The per-party serving program.
 fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
-    // ---- resident model: shared once by the model owner P1 ----
+    // ---- resident model: shared once by the model owner P1, and the
+    // sharing verified before any pool material is generated against it ----
     let w0 = (ctx.id() == P1).then(|| model_weights(cfg.d, cfg.seed));
     let w = share_fixed_mat(ctx, P1, w0.as_ref(), cfg.d, 1)?;
+    ctx.flush_verify()?;
 
-    // ---- offline pre-stocking ----
-    let total_rows = cfg.queries * cfg.rows_per_query;
-    let coalesce = cfg.coalesce.max(1);
-    let batches = (cfg.queries + coalesce - 1) / coalesce;
-    if cfg.pool {
-        ctx.attach_pool(Pool::new());
-        pool::fill_trunc(ctx, total_rows, FRAC_BITS)?;
-        if cfg.relu {
-            pool::fill_bitext(ctx, total_rows)?;
-            // one λ_z per bitext_many invocation (its internal Π_Mult)
-            pool::fill_lam::<Z64>(ctx, batches);
+    // ---- register pool targets with the background refill producer ----
+    let wave_rows = effective_coalesce(cfg) * cfg.rows_per_query;
+    let mut refill = Refill::new();
+    // scalar resources are consumed `wave_rows` items per wave — scale the
+    // water marks so one "full-wave item" means the same thing everywhere
+    let scaled_marks =
+        || WaterMarks::new(cfg.low_water * wave_rows, cfg.high_water.max(1) * wave_rows);
+    match cfg.mode {
+        PoolMode::Inline => {}
+        PoolMode::Scalar => {
+            ctx.attach_pool(Pool::new());
+            refill.register_trunc(FRAC_BITS, scaled_marks());
+            if cfg.relu {
+                refill.register_bitext(scaled_marks());
+                // one λ_z per bitext_many invocation (its internal Π_Mult)
+                refill.register_lam(WaterMarks::new(cfg.low_water, cfg.high_water.max(1)));
+            }
         }
+        PoolMode::Keyed => {
+            ctx.attach_pool(Pool::new());
+            refill.register_mat(
+                model_key(cfg),
+                w.clone(),
+                WaterMarks::new(cfg.low_water, cfg.high_water.max(1)),
+            );
+            if cfg.relu {
+                refill.register_bitext(scaled_marks());
+                refill.register_lam(WaterMarks::new(cfg.low_water, cfg.high_water.max(1)));
+            }
+        }
+    }
+
+    let mut out = PartyOut {
+        batch_lat: Vec::new(),
+        batch_rounds: Vec::new(),
+        wave_offline_msgs: Vec::new(),
+        wave_offline_bytes: Vec::new(),
+        refill_outcomes: Vec::new(),
+        tick_online_msgs: 0,
+        answers: Vec::new(),
+        pool_stats: None,
+        pool_left_trunc: 0,
+        pool_left_mat: 0,
+    };
+
+    // warm-up: the first "between waves" slot is before the first wave
+    let tick = |ctx: &mut Ctx, out: &mut PartyOut| -> Result<(), Abort> {
+        let m0 = ctx.net.sent_msgs(Phase::Online);
+        let outcome = refill.tick(ctx)?;
+        out.tick_online_msgs += ctx.net.sent_msgs(Phase::Online) - m0;
+        out.refill_outcomes.push(outcome);
+        Ok(())
+    };
+    if cfg.mode != PoolMode::Inline {
+        tick(ctx, &mut out)?;
     }
 
     // ---- request queue (values at the data owner P2 only) ----
@@ -251,17 +383,12 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
 
     // ---- serving loop, measured in isolation ----
     ctx.net.reset_clocks();
-    let mut out = PartyOut {
-        batch_lat: Vec::new(),
-        batch_rounds: Vec::new(),
-        answers: Vec::new(),
-        pool_stats: None,
-        pool_left_trunc: 0,
-    };
     while let Some(batch) = queue.next_batch() {
         let rows: usize = batch.iter().map(|q| q.rows).sum();
         let t0 = ctx.net.clock(Phase::Online);
         let r0 = ctx.net.rounds(Phase::Online);
+        let om0 = ctx.net.sent_msgs(Phase::Offline);
+        let ob0 = ctx.net.sent_bytes(Phase::Offline);
 
         // stack the wave into one cross-request matrix
         let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
@@ -278,10 +405,20 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
             }
             m
         });
-        let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, cfg.d)?;
 
         // one truncated matmul for the whole wave
-        let mut u = matmul_tr(ctx, &x_sh, &w)?;
+        let mut u = match cfg.mode {
+            PoolMode::Keyed => {
+                let key = wave_key(cfg, rows);
+                let x_enc: Option<Matrix<Z64>> = stacked.as_ref().map(F64Mat::encode);
+                let (_x, u) = matmul_tr_keyed(ctx, &key, x_enc.as_ref(), &w)?;
+                u
+            }
+            _ => {
+                let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, cfg.d)?;
+                matmul_tr(ctx, &x_sh, &w)?
+            }
+        };
         if cfg.relu {
             let (r, _) = crate::ml::relu_many(ctx, &u.to_shares())?;
             u = MMat::from_shares(rows, 1, &r);
@@ -296,11 +433,22 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
 
         out.batch_lat.push(ctx.net.clock(Phase::Online) - t0);
         out.batch_rounds.push(ctx.net.rounds(Phase::Online) - r0);
+        out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
+        out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
+
+        // between waves: the background producer tops the pools back up —
+        // but only while a full wave remains; a trailing partial wave keys
+        // differently and falls back inline, so refilling for it would only
+        // strand a full-wave bundle in the pool
+        if cfg.mode != PoolMode::Inline && queue.len() >= effective_coalesce(cfg) {
+            tick(ctx, &mut out)?;
+        }
     }
 
     if let Some(pool) = ctx.detach_pool() {
         out.pool_stats = Some(pool.stats());
         out.pool_left_trunc = pool.len_trunc(FRAC_BITS);
+        out.pool_left_mat = pool.len_mat(&model_key(cfg));
     }
     Ok(out)
 }
@@ -321,6 +469,10 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
         online_latency += batch_max;
     }
     let w_share_bits = 2 * cfg.d as u64 * 64; // one-time model sharing
+    let offline_msgs_in_waves: u64 =
+        outs.iter().map(|o| o.wave_offline_msgs.iter().sum::<u64>()).sum();
+    let offline_bytes_in_waves: u64 =
+        outs.iter().map(|o| o.wave_offline_bytes.iter().sum::<u64>()).sum();
     ServeStats {
         queries: cfg.queries,
         batches,
@@ -332,8 +484,14 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
         online_total_bytes: report.total_bytes[Phase::Online as usize]
             .saturating_sub(w_share_bits / 8),
         offline_value_bits: report.value_bits[Phase::Offline as usize],
+        offline_msgs_in_waves,
+        offline_bytes_in_waves,
+        refill_ticks: outs[1].refill_outcomes.len(),
+        refill_mat_items: outs[1].refill_outcomes.iter().map(|o| o.mat_items).sum(),
+        refill_online_msgs: outs.iter().map(|o| o.tick_online_msgs).sum(),
         pool_stats: outs[1].pool_stats,
         pool_left_trunc: outs[1].pool_left_trunc,
+        pool_left_mat: outs[1].pool_left_mat,
         rounds_per_batch: outs[1].batch_rounds.clone(),
         answers: outs[2].answers.clone(),
         report,
@@ -344,13 +502,15 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
 mod tests {
     use super::*;
 
-    fn cfg(queries: usize, coalesce: usize, pool: bool) -> ServeConfig {
+    fn cfg(queries: usize, coalesce: usize, mode: PoolMode) -> ServeConfig {
         ServeConfig {
             d: 16,
             rows_per_query: 2,
             queries,
             coalesce,
-            pool,
+            mode,
+            low_water: 1,
+            high_water: 1,
             relu: false,
             seed: 900,
         }
@@ -358,15 +518,17 @@ mod tests {
 
     #[test]
     fn serving_answers_match_cleartext() {
-        for (pool, coalesce) in [(false, 1), (true, 4)] {
-            let c = cfg(4, coalesce, pool);
+        for (mode, coalesce) in
+            [(PoolMode::Inline, 1), (PoolMode::Scalar, 4), (PoolMode::Keyed, 4)]
+        {
+            let c = cfg(4, coalesce, mode);
             let stats = serve(NetProfile::zero(), c.clone());
             let want = cleartext_predictions(&c);
             assert_eq!(stats.answers.len(), want.len());
             for (i, (got, want)) in stats.answers.iter().zip(&want).enumerate() {
                 assert!(
                     (got - want).abs() < 0.01,
-                    "query row {i}: got {got}, want {want} (pool={pool})"
+                    "query row {i}: got {got}, want {want} ({mode:?})"
                 );
             }
         }
@@ -375,36 +537,88 @@ mod tests {
     #[test]
     fn coalesced_wave_costs_one_querys_rounds() {
         // N coalesced queries: same online rounds as a single query
-        let one = serve(NetProfile::zero(), cfg(1, 1, true));
-        let wave = serve(NetProfile::zero(), cfg(6, 6, true));
+        let one = serve(NetProfile::zero(), cfg(1, 1, PoolMode::Keyed));
+        let wave = serve(NetProfile::zero(), cfg(6, 6, PoolMode::Keyed));
         assert_eq!(wave.batches, 1);
         assert_eq!(
             wave.online_rounds, one.online_rounds,
             "coalescing must not add rounds"
         );
         // the seed's per-query path pays per query
-        let inline = serve(NetProfile::zero(), cfg(6, 1, false));
+        let inline = serve(NetProfile::zero(), cfg(6, 1, PoolMode::Inline));
         assert_eq!(inline.online_rounds, 6 * one.online_rounds);
     }
 
     #[test]
-    fn pool_drains_during_serving() {
-        let stats = serve(NetProfile::zero(), cfg(4, 2, true));
+    fn keyed_pool_drains_and_refills_during_serving() {
+        // low == high == 1: fill 1 → pop → refill 1 → pop → … (the
+        // tightest refill cadence; also proves a refill between pops never
+        // interleaves material inside a pop)
+        let stats = serve(NetProfile::zero(), cfg(4, 2, PoolMode::Keyed));
+        let ps = stats.pool_stats.expect("pool attached");
+        assert_eq!(ps.mat_hits, 2, "both waves must drain a keyed bundle: {ps:?}");
+        assert_eq!(ps.mat_misses, 0);
+        assert_eq!(stats.refill_ticks, 2, "warm-up tick + one between-waves tick");
+        assert_eq!(stats.refill_mat_items, 2);
+        assert_eq!(stats.refill_online_msgs, 0, "refill traffic is offline-only");
+        assert_eq!(stats.pool_left_mat, 0, "no tick after the last wave");
+    }
+
+    #[test]
+    fn scalar_pool_drains_during_serving() {
+        let stats = serve(NetProfile::zero(), cfg(4, 2, PoolMode::Scalar));
         let ps = stats.pool_stats.expect("pool attached");
         assert!(ps.trunc_hits >= 2, "trunc pairs must come from the pool: {ps:?}");
-        assert_eq!(stats.pool_left_trunc, 0, "pool sized to the workload drains fully");
     }
 
     #[test]
     fn relu_serving_uses_bitext_pool() {
-        let mut c = cfg(2, 2, true);
-        c.relu = true;
+        for mode in [PoolMode::Scalar, PoolMode::Keyed] {
+            let mut c = cfg(2, 2, mode);
+            c.relu = true;
+            let stats = serve(NetProfile::zero(), c.clone());
+            let ps = stats.pool_stats.expect("pool attached");
+            assert!(ps.bitext_hits >= 1, "relu must drain bitext masks: {ps:?}");
+            let want = cleartext_predictions(&c);
+            for (got, want) in stats.answers.iter().zip(&want) {
+                assert!((got - want).abs() < 0.01, "relu serving ({mode:?}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_coalesce_still_hits_keyed_pool() {
+        // coalesce 8 > queries 2: the registered key must match the wave the
+        // workload can actually produce (2 queries · 2 rows), not a
+        // never-popped 8-query shape
+        let c = cfg(2, 8, PoolMode::Keyed);
         let stats = serve(NetProfile::zero(), c.clone());
         let ps = stats.pool_stats.expect("pool attached");
-        assert!(ps.bitext_hits >= 1, "relu must drain bitext masks: {ps:?}");
+        assert_eq!(ps.mat_hits, 1, "the single wave must hit the keyed pool: {ps:?}");
+        assert_eq!(ps.mat_misses, 0);
         let want = cleartext_predictions(&c);
         for (got, want) in stats.answers.iter().zip(&want) {
-            assert!((got - want).abs() < 0.01, "relu serving: {got} vs {want}");
+            assert!((got - want).abs() < 0.01, "oversized-coalesce wave: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn partial_trailing_wave_falls_back_inline() {
+        // 5 queries, coalesce 2 → waves of 2,2,1: the 1-query wave keys
+        // differently from the registered full-wave key and must fall back
+        // inline — deterministically, with correct answers.
+        let c = cfg(5, 2, PoolMode::Keyed);
+        let stats = serve(NetProfile::zero(), c.clone());
+        let ps = stats.pool_stats.expect("pool attached");
+        assert_eq!(ps.mat_hits, 2);
+        assert_eq!(ps.mat_misses, 1, "partial wave is a keyed miss: {ps:?}");
+        assert_eq!(
+            stats.pool_left_mat, 0,
+            "no full-wave bundle may be stranded for a partial trailing wave"
+        );
+        let want = cleartext_predictions(&c);
+        for (got, want) in stats.answers.iter().zip(&want) {
+            assert!((got - want).abs() < 0.01, "fallback wave: {got} vs {want}");
         }
     }
 

@@ -4,19 +4,18 @@
 
 use crate::crypto::Rng;
 use crate::net::{Abort, PartyId};
-use crate::proto::{sharing::share_many_n, Ctx};
+use crate::proto::{sharing::share_mat_n, Ctx};
 use crate::ring::{Matrix, Ring, Z64};
 use crate::sharing::MMat;
 
-/// Share a matrix from `dealer` inside a party program.
+/// Share a matrix from `dealer` inside a party program (every party passes
+/// the same matrix; only the dealer's values are used).
 pub fn share_mat(
     ctx: &mut Ctx,
     dealer: PartyId,
     m: &Matrix<Z64>,
 ) -> Result<MMat<Z64>, Abort> {
-    let vs = (ctx.id() == dealer).then(|| m.data().to_vec());
-    let shares = share_many_n(ctx, dealer, vs.as_deref(), m.rows() * m.cols())?;
-    Ok(MMat::from_shares(m.rows(), m.cols(), &shares))
+    share_mat_r(ctx, dealer, m)
 }
 
 /// Share a generic ring matrix from `dealer`.
@@ -25,9 +24,7 @@ pub fn share_mat_r<R: Ring>(
     dealer: PartyId,
     m: &Matrix<R>,
 ) -> Result<MMat<R>, Abort> {
-    let vs = (ctx.id() == dealer).then(|| m.data().to_vec());
-    let shares = share_many_n(ctx, dealer, vs.as_deref(), m.rows() * m.cols())?;
-    Ok(MMat::from_shares(m.rows(), m.cols(), &shares))
+    share_mat_n(ctx, dealer, (ctx.id() == dealer).then_some(m), m.rows(), m.cols())
 }
 
 /// Mini property-test driver: run `check` on `iters` random inputs drawn by

@@ -9,21 +9,30 @@
 //! * **failure injection**: a tampered or replayed pooled truncation pair
 //!   aborts in the online phase — never a wrong opened value at an honest
 //!   party — and pool exhaustion falls back deterministically;
+//! * **circuit-keyed matrix pooling**: `matmul`/`matmul_tr` through the
+//!   keyed wire-mask pool open to the inline/cleartext values over a shape
+//!   grid (1×k, k×1, non-square); a keyed gate and a whole warm-pool
+//!   serving wave send **zero offline-phase messages** (asserted via the
+//!   per-party sent-traffic counters); tampered wire masks, replayed
+//!   `MatGamma` bundles and cross-key material all end in `Abort`;
 //! * **meter regressions**: pool attachment leaves `Π_MultTr`'s online
 //!   rounds/bits untouched (the paper-shaped cost), and a coalesced wave
 //!   of N queries costs the rounds of a single query.
 
 use trident::convert::{bit2a, bit2a_many, bitext, bitext_many};
-use trident::net::{NetProfile, P1, P2, P3};
-use trident::pool::{fill_bitext, fill_lam, fill_trunc, Pool};
+use trident::crypto::Rng;
+use trident::net::{NetProfile, Phase, P1, P2, P3};
+use trident::pool::{fill_bitext, fill_lam, fill_mat, fill_trunc, CircuitKey, OpKind, Pool};
 use trident::proto::sharing::share_many_n;
 use trident::proto::{
-    dotp, mult, mult_many, mult_tr, mult_tr_many, run_4pc, run_4pc_timeout, share,
+    dotp, matmul, matmul_keyed, matmul_tr_keyed, mult, mult_many, mult_tr, mult_tr_many,
+    run_4pc, run_4pc_timeout, share,
 };
 use trident::ring::fixed::{FixedPoint, FRAC_BITS, SCALE};
-use trident::ring::{Bit, Z64};
+use trident::ring::{Bit, Matrix, Z64};
+use trident::sharing::mat::open_mat;
 use trident::sharing::{open, MShare};
-use trident::testutil::{forall, shrink_vec};
+use trident::testutil::{forall, share_mat, shrink_vec};
 
 // ---------------------------------------------------------- batched == scalar
 
@@ -611,13 +620,15 @@ fn meter_pool_leaves_mult_tr_online_cost_unchanged() {
 
 #[test]
 fn meter_coalesced_wave_costs_single_query_rounds() {
-    use trident::serve::{serve, ServeConfig};
+    use trident::serve::{serve, PoolMode, ServeConfig};
     let cfg = |queries: usize, coalesce: usize| ServeConfig {
         d: 8,
         rows_per_query: 1,
         queries,
         coalesce,
-        pool: true,
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 1,
         relu: false,
         seed: 632,
     };
@@ -628,15 +639,495 @@ fn meter_coalesced_wave_costs_single_query_rounds() {
         wave.online_rounds, one.online_rounds,
         "8 coalesced queries must cost ~1× (not 8×) the rounds of one query"
     );
-    let inline = serve(NetProfile::zero(), cfg(8, 1));
+    let inline = serve(
+        NetProfile::zero(),
+        ServeConfig { mode: PoolMode::Inline, ..cfg(8, 1) },
+    );
     assert_eq!(inline.online_rounds, 8 * one.online_rounds);
+}
+
+// ------------------------------------------ circuit-keyed pool == inline
+
+/// Run one `OpKind::MatMul` gate through the circuit-keyed pool and through
+/// the inline path; require both to open to the exact ring product, the
+/// keyed gate to be served from the pool, and the keyed gate window to send
+/// **zero offline-phase messages** at every party.
+fn check_keyed_matmul_matches_inline(
+    a: usize,
+    b: usize,
+    c: usize,
+    vals: Vec<u64>,
+) -> Result<(), String> {
+    assert_eq!(vals.len(), a * b + b * c);
+    let x = Matrix::from_vec(a, b, vals[..a * b].iter().map(|&v| Z64(v)).collect());
+    let y = Matrix::from_vec(b, c, vals[a * b..].iter().map(|&v| Z64(v)).collect());
+    let key = CircuitKey {
+        model: 41,
+        layer: 7,
+        op: OpKind::MatMul,
+        rows: a,
+        inner: b,
+        cols: c,
+        dealer: P2,
+    };
+    let (x2, y2) = (x.clone(), y.clone());
+    let run = run_4pc(NetProfile::zero(), 641, move |ctx| {
+        // resident Y from the model owner; live X arrives from P2 per gate
+        let ysh = share_mat(ctx, P1, &y2)?;
+        ctx.attach_pool(Pool::new());
+        fill_mat(ctx, key, &ysh, 1)?;
+        let off0 = ctx.net.sent_msgs(Phase::Offline);
+        let (_xsh, z_keyed) =
+            matmul_keyed(ctx, &key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+        let off_sent = ctx.net.sent_msgs(Phase::Offline) - off0;
+        let xsh = share_mat(ctx, P2, &x2)?;
+        let z_inline = matmul(ctx, &xsh, &ysh)?;
+        ctx.flush_verify()?;
+        let hits = ctx.detach_pool().unwrap().stats().mat_hits;
+        Ok((z_keyed, z_inline, off_sent, hits))
+    });
+    let (outs, _) = run.expect_ok();
+    let keyed = open_mat(&[
+        outs[0].0.clone(),
+        outs[1].0.clone(),
+        outs[2].0.clone(),
+        outs[3].0.clone(),
+    ]);
+    let inline = open_mat(&[
+        outs[0].1.clone(),
+        outs[1].1.clone(),
+        outs[2].1.clone(),
+        outs[3].1.clone(),
+    ]);
+    let want = x.matmul(&y);
+    if keyed != want {
+        return Err(format!("{a}×{b}×{c}: keyed product diverged from cleartext"));
+    }
+    if inline != want {
+        return Err(format!("{a}×{b}×{c}: inline product diverged from cleartext"));
+    }
+    for (i, o) in outs.iter().enumerate() {
+        if o.2 != 0 {
+            return Err(format!(
+                "P{i} sent {} offline-phase messages inside the keyed gate",
+                o.2
+            ));
+        }
+        if o.3 != 1 {
+            return Err(format!("P{i}: keyed gate must be served from the pool"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn property_matmul_keyed_equals_inline_for_random_shapes() {
+    forall(
+        641,
+        5,
+        |rng| {
+            let a = (rng.below(3) + 1) as usize;
+            let b = (rng.below(4) + 1) as usize;
+            let c = (rng.below(3) + 1) as usize;
+            let vals: Vec<u64> = (0..(a * b + b * c)).map(|_| rng.next_u64()).collect();
+            (a, b, c, vals)
+        },
+        |_| Vec::new(), // shapes don't shrink meaningfully
+        |case| {
+            let (a, b, c, vals) = case.clone();
+            check_keyed_matmul_matches_inline(a, b, c, vals)
+        },
+    );
+}
+
+#[test]
+fn keyed_matmul_shape_grid_including_vectors() {
+    // the explicit grid the suite promises: 1×k, k×1, non-square, scalar
+    let mut rng = Rng::seeded(642);
+    for (a, b, c) in [(1, 5, 1), (5, 1, 3), (1, 1, 1), (2, 3, 4), (3, 4, 1)] {
+        let vals: Vec<u64> = (0..(a * b + b * c)).map(|_| rng.next_u64()).collect();
+        check_keyed_matmul_matches_inline(a, b, c, vals)
+            .unwrap_or_else(|e| panic!("shape {a}×{b}×{c}: {e}"));
+    }
+}
+
+#[test]
+fn keyed_matmul_tr_matches_cleartext_over_shape_grid() {
+    let mut rng = Rng::seeded(645);
+    for (a, b, c) in [(1usize, 4usize, 1usize), (4, 1, 2), (2, 3, 2)] {
+        let xf: Vec<f64> = (0..a * b).map(|_| rng.normal()).collect();
+        let yf: Vec<f64> = (0..b * c).map(|_| rng.normal()).collect();
+        let x = Matrix::from_vec(a, b, xf.iter().map(|&v| FixedPoint::encode(v)).collect());
+        let y = Matrix::from_vec(b, c, yf.iter().map(|&v| FixedPoint::encode(v)).collect());
+        let key = CircuitKey {
+            model: 5,
+            layer: 1,
+            op: OpKind::MatMulTr { shift: FRAC_BITS },
+            rows: a,
+            inner: b,
+            cols: c,
+            dealer: P2,
+        };
+        let (x2, y2) = (x.clone(), y.clone());
+        let run = run_4pc(NetProfile::zero(), 646, move |ctx| {
+            let ysh = share_mat(ctx, P1, &y2)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat(ctx, key, &ysh, 1)?;
+            let off0 = ctx.net.sent_msgs(Phase::Offline);
+            let (_xsh, z) =
+                matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+            let off_sent = ctx.net.sent_msgs(Phase::Offline) - off0;
+            ctx.flush_verify()?;
+            Ok((z, off_sent))
+        });
+        let (outs, _) = run.expect_ok();
+        let got = open_mat(&[
+            outs[0].0.clone(),
+            outs[1].0.clone(),
+            outs[2].0.clone(),
+            outs[3].0.clone(),
+        ]);
+        // oracle: the same fixed-point ring product, truncated — isolates
+        // the protocol's ≤2-ulp probabilistic-truncation error from the
+        // f64→fixed encoding error of the inputs
+        let clear = x.matmul(&y);
+        for i in 0..a {
+            for j in 0..c {
+                let want = FixedPoint::decode(clear[(i, j)].truncate(FRAC_BITS));
+                let gotv = FixedPoint::decode(got[(i, j)]);
+                assert!(
+                    (gotv - want).abs() <= 4.0 / SCALE,
+                    "{a}×{b}×{c} ({i},{j}): keyed {gotv}, fixed-point oracle {want}"
+                );
+            }
+        }
+        for (p, o) in outs.iter().enumerate() {
+            assert_eq!(o.1, 0, "P{p} sent offline messages inside the keyed Π_MatMulTr");
+        }
+    }
+}
+
+#[test]
+fn keyed_matmul_tr_online_cost_matches_inline_3l() {
+    // A 1×1×1 keyed gate ≡ scalar Π_MultTr: online = input delivery (2ℓ:
+    // the dealer sends m to the two other evaluators) + the 3ℓ exchange,
+    // in 2 data rounds — identical to the inline path, which additionally
+    // pays its offline phase live. Pooling must move offline cost, not
+    // grow it, and must leave the Table-II online shape untouched.
+    let key = CircuitKey {
+        model: 6,
+        layer: 0,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows: 1,
+        inner: 1,
+        cols: 1,
+        dealer: P2,
+    };
+    let x = Matrix::from_vec(1, 1, vec![FixedPoint::encode(2.0)]);
+    let y = Matrix::from_vec(1, 1, vec![FixedPoint::encode(3.0)]);
+    let (x2, y2) = (x.clone(), y.clone());
+    let keyed = run_4pc(NetProfile::zero(), 647, move |ctx| {
+        let ysh = share_mat(ctx, P1, &y2)?;
+        ctx.attach_pool(Pool::new());
+        fill_mat(ctx, key, &ysh, 1)?;
+        let (_xsh, z) = matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+        ctx.flush_verify()?;
+        Ok(z)
+    });
+    let (x3, y3) = (x.clone(), y.clone());
+    let inline = run_4pc(NetProfile::zero(), 647, move |ctx| {
+        let ysh = share_mat(ctx, P1, &y3)?;
+        let xsh = share_mat(ctx, P2, &x3)?;
+        let z = trident::proto::matmul_tr(ctx, &xsh, &ysh)?;
+        ctx.flush_verify()?;
+        Ok(z)
+    });
+    let (kouts, krep) = keyed.expect_ok();
+    let (iouts, irep) = inline.expect_ok();
+    let kv = FixedPoint::decode(
+        open_mat(&[kouts[0].clone(), kouts[1].clone(), kouts[2].clone(), kouts[3].clone()])
+            [(0, 0)],
+    );
+    let iv = FixedPoint::decode(
+        open_mat(&[iouts[0].clone(), iouts[1].clone(), iouts[2].clone(), iouts[3].clone()])
+            [(0, 0)],
+    );
+    assert!((kv - 6.0).abs() < 0.01 && (iv - 6.0).abs() < 0.01);
+    // Π_MultTr online shape: y-share (2ℓ) + x-delivery (2ℓ) + 3ℓ exchange
+    assert_eq!(krep.value_bits[1], (2 + 2 + 3) * 64, "keyed online = inputs + 3ℓ");
+    assert_eq!(krep.value_bits[1], irep.value_bits[1], "online bits identical");
+    assert_eq!(krep.rounds[1], irep.rounds[1], "online rounds identical");
+    // offline cost is moved into the fill, not grown (value bits equal)
+    assert_eq!(krep.value_bits[0], irep.value_bits[0], "offline bits moved, not grown");
+}
+
+#[test]
+fn keyed_exhaustion_falls_back_inline_deterministically() {
+    let key = CircuitKey {
+        model: 8,
+        layer: 0,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows: 2,
+        inner: 2,
+        cols: 1,
+        dealer: P2,
+    };
+    let x = Matrix::from_vec(
+        2,
+        2,
+        vec![
+            FixedPoint::encode(1.0),
+            FixedPoint::encode(2.0),
+            FixedPoint::encode(-1.5),
+            FixedPoint::encode(0.5),
+        ],
+    );
+    let y = Matrix::from_vec(2, 1, vec![FixedPoint::encode(3.0), FixedPoint::encode(-2.0)]);
+    let want = [1.0 * 3.0 + 2.0 * -2.0, -1.5 * 3.0 + 0.5 * -2.0];
+    let (x2, y2) = (x.clone(), y.clone());
+    let run = run_4pc(NetProfile::zero(), 648, move |ctx| {
+        let ysh = share_mat(ctx, P1, &y2)?;
+        ctx.attach_pool(Pool::new());
+        fill_mat(ctx, key, &ysh, 1)?;
+        // first gate drains the only bundle; the second falls back inline —
+        // at every party, in lockstep
+        let (_x1, z1) = matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+        let (_x2, z2) = matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+        ctx.flush_verify()?;
+        let stats = ctx.detach_pool().unwrap().stats();
+        Ok((z1, z2, stats))
+    });
+    let (outs, _) = run.expect_ok();
+    for pick in [0usize, 1] {
+        let z = |i: usize| match pick {
+            0 => outs[i].0.clone(),
+            _ => outs[i].1.clone(),
+        };
+        let opened = open_mat(&[z(0), z(1), z(2), z(3)]);
+        for (r, want) in want.iter().enumerate() {
+            let got = FixedPoint::decode(opened[(r, 0)]);
+            assert!(
+                (got - want).abs() < 0.01,
+                "gate {pick}, row {r}: got {got}, want {want}"
+            );
+        }
+    }
+    for o in &outs {
+        assert_eq!(o.2.mat_hits, 1, "first gate pooled");
+        assert_eq!(o.2.mat_misses, 1, "second gate fell back");
+    }
+}
+
+// -------------------------------------------- keyed-pool failure injection
+
+/// Shared fixture for the keyed adversarial tests: resident 3×1 model,
+/// 2×3 live input, `Π_MatMulTr` key dealt by P2.
+fn adversarial_fixture() -> (CircuitKey, Matrix<Z64>, Matrix<Z64>, [f64; 2]) {
+    let key = CircuitKey {
+        model: 3,
+        layer: 2,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows: 2,
+        inner: 3,
+        cols: 1,
+        dealer: P2,
+    };
+    let xf = [1.5, -2.0, 0.5, 3.0, 0.25, -1.0];
+    let yf = [2.0, 1.0, -4.0];
+    let x = Matrix::from_vec(2, 3, xf.iter().map(|&v| FixedPoint::encode(v)).collect());
+    let y = Matrix::from_vec(3, 1, yf.iter().map(|&v| FixedPoint::encode(v)).collect());
+    let want = [
+        xf[0] * yf[0] + xf[1] * yf[1] + xf[2] * yf[2],
+        xf[3] * yf[0] + xf[4] * yf[1] + xf[5] * yf[2],
+    ];
+    (key, x, y, want)
+}
+
+#[test]
+fn tampered_keyed_wire_mask_aborts_never_wrong_value() {
+    let (key, x, y, want) = adversarial_fixture();
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        661,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat(ctx, key, &ysh, 1)?;
+            if ctx.id() == P3 {
+                // malicious P3 corrupts a held component of the pooled Λ_X
+                ctx.pool_mut().unwrap().mat_front_mut(&key).unwrap().tamper_lam_x();
+            }
+            let (_xsh, z) =
+                matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            ctx.flush_verify()?;
+            trident::proto::reconstruct::reconstruct_many(ctx, &z.to_shares())
+        },
+    );
+    assert!(run.any_verify_abort(), "tampered pooled wire mask must abort");
+    for (i, out) in run.outputs.iter().enumerate() {
+        if i == 3 {
+            continue; // the cheater's own view is unconstrained
+        }
+        if let Ok(vals) = out {
+            for (r, want) in want.iter().enumerate() {
+                let got = FixedPoint::decode(vals[r]);
+                assert!(
+                    (got - want).abs() < 0.01,
+                    "P{i} accepted a wrong opened value: {got} (want {want})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tampered_keyed_trunc_pair_aborts() {
+    let (key, x, y, _) = adversarial_fixture();
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        662,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat(ctx, key, &ysh, 1)?;
+            if ctx.id() == P1 {
+                // corrupt a held r component of the bundle's first pair
+                assert!(ctx
+                    .pool_mut()
+                    .unwrap()
+                    .mat_front_mut(&key)
+                    .unwrap()
+                    .tamper_pair_r());
+            }
+            let (_xsh, z) =
+                matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            ctx.flush_verify()?;
+            let _ = z;
+            Ok(())
+        },
+    );
+    assert!(run.any_verify_abort(), "tampered pooled truncation pair must abort");
+}
+
+#[test]
+fn replayed_keyed_gamma_bundle_aborts() {
+    let (key, x, y, _) = adversarial_fixture();
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        663,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat(ctx, key, &ysh, 2)?;
+            if ctx.id() == P1 {
+                // P1 re-serves its first ⟨Γ⟩/wire-mask bundle while the
+                // peers advance to the second
+                assert!(ctx.pool_mut().unwrap().replay_front_mat(&key));
+            }
+            let (_x1, z1) =
+                matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            let (_x2, z2) =
+                matmul_tr_keyed(ctx, &key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            ctx.flush_verify()?;
+            let _ = (z1, z2);
+            Ok(())
+        },
+    );
+    assert!(run.any_verify_abort(), "replayed keyed bundle must abort");
+}
+
+#[test]
+fn cross_keyed_material_fails_closed() {
+    let (key_a, x, y, _) = adversarial_fixture();
+    let key_b = CircuitKey { layer: key_a.layer + 1, ..key_a };
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        664,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat(ctx, key_a, &ysh, 1)?;
+            fill_mat(ctx, key_b, &ysh, 1)?;
+            if ctx.id() == P1 {
+                // P1 files layer-a material at layer b's position (same
+                // shape — only the embedded key differs)
+                assert!(ctx.pool_mut().unwrap().cross_file_front_mat(&key_a, &key_b));
+            }
+            // the wave for layer b: P1's pop must fail closed, aborting
+            // before any online message is computed from wrong material
+            let (_xsh, z) =
+                matmul_tr_keyed(ctx, &key_b, (ctx.id() == P2).then_some(&x), &ysh)?;
+            ctx.flush_verify()?;
+            let _ = z;
+            Ok(())
+        },
+    );
+    assert!(
+        matches!(run.outputs[1], Err(trident::net::Abort::Verify(_))),
+        "P1 must fail closed on cross-keyed material: {:?}",
+        run.outputs[1].as_ref().err()
+    );
+    assert!(run.any_verify_abort());
+}
+
+// ------------------------------------------- offline-silence serving waves
+
+#[test]
+fn warm_keyed_pool_serving_wave_is_offline_message_free() {
+    use trident::serve::{cleartext_predictions, serve, PoolMode, ServeConfig};
+    let cfg = ServeConfig {
+        d: 16,
+        rows_per_query: 2,
+        queries: 6,
+        coalesce: 3,
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        relu: false,
+        seed: 650,
+    };
+    let s = serve(NetProfile::zero(), cfg.clone());
+    // THE tentpole property: with a warm circuit-keyed pool, no party sends
+    // a single offline-phase message inside any serving wave — the
+    // per-request offline phase is truly message-free.
+    assert_eq!(
+        s.offline_msgs_in_waves, 0,
+        "warm keyed pool must leave every serving wave offline-silent"
+    );
+    assert_eq!(s.offline_bytes_in_waves, 0);
+    // background refill ran, and its traffic is Phase::Offline only
+    assert!(s.refill_mat_items >= 2, "refill must have produced bundles");
+    assert_eq!(s.refill_online_msgs, 0, "refill traffic must be offline-phase only");
+    // every response still verified-correct
+    let want = cleartext_predictions(&cfg);
+    assert_eq!(s.answers.len(), want.len());
+    for (got, want) in s.answers.iter().zip(&want) {
+        assert!((got - want).abs() < 0.01, "silent wave answer: {got} vs {want}");
+    }
+    // the scalar pool still runs the γ-exchange live inside waves …
+    let scalar = serve(
+        NetProfile::zero(),
+        ServeConfig { mode: PoolMode::Scalar, ..cfg.clone() },
+    );
+    assert!(
+        scalar.offline_msgs_in_waves > 0,
+        "scalar pools still γ-exchange inside waves"
+    );
+    // … while Π_MultTr's online shape (3ℓ / 1 round per gate) is identical
+    // either way: same online rounds and value bits for the same workload
+    assert_eq!(s.online_rounds, scalar.online_rounds);
+    assert_eq!(s.online_value_bits, scalar.online_value_bits);
 }
 
 // --------------------------------------------------------- misc sanity: P0
 
 #[test]
 fn pool_backed_serving_keeps_p0_offline_only() {
-    use trident::serve::{serve, ServeConfig};
+    use trident::serve::{serve, PoolMode, ServeConfig};
     let s = serve(
         NetProfile::wan(),
         ServeConfig {
@@ -644,7 +1135,9 @@ fn pool_backed_serving_keeps_p0_offline_only() {
             rows_per_query: 2,
             queries: 4,
             coalesce: 4,
-            pool: true,
+            mode: PoolMode::Keyed,
+            low_water: 1,
+            high_water: 1,
             relu: false,
             seed: 640,
         },

@@ -15,7 +15,8 @@
 
 use trident::coordinator::ServeCliOpts;
 use trident::net::{NetProfile, Phase};
-use trident::serve::{serve, PoolMode, ServeConfig};
+use trident::sched::TenantSpec;
+use trident::serve::{serve, serve_multi, MultiServeConfig, PoolMode, ServeConfig};
 
 fn main() {
     let queries: usize =
@@ -59,6 +60,33 @@ fn main() {
             s.refill_ticks,
         );
     }
+
+    // multi-tenant serving: two resident models with different priorities
+    // behind one cluster — the sched subsystem (model registry with
+    // per-tenant keyed pools, deadline/priority queue, weighted
+    // round-robin wave planner) decides whose wave runs next
+    println!("\nmulti-tenant serving (2 resident models, different priorities, WRR 2:1):");
+    let mut fast = TenantSpec::new("fast", 1, 64, queries, 4);
+    fast.weight = 2;
+    fast.class = 0; // highest priority
+    let mut bulk = TenantSpec::new("bulk", 2, 64, queries, 4);
+    bulk.weight = 1;
+    bulk.class = 1; // lower priority; aging keeps it from starving
+    bulk.deadline_ticks = Some(8);
+    let mcfg = MultiServeConfig {
+        tenants: vec![fast, bulk],
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        age_every: 2,
+        seed: 42,
+    };
+    let ms = serve_multi(NetProfile::lan(), mcfg);
+    print!("{}", trident::bench::tenant_table(&ms));
+    println!(
+        "  warm waves offline-silent per tenant: {}",
+        if ms.offline_msgs_in_waves == 0 { "yes" } else { "NO" },
+    );
 
     // latency breakdown across the paper's models, LAN vs WAN
     println!("\nper-model online prediction latency (d=784, B=100):");

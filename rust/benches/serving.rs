@@ -12,7 +12,10 @@ use trident::serve::{serve, PoolMode, ServeConfig};
 fn main() {
     trident::runtime::pjrt::init_default();
 
-    print!("{}", trident::bench::serve_table());
+    // run the mode sweep + two-tenant workload once; the text tables and
+    // the JSON artifact below render the same measurements
+    let bench = trident::bench::run_serving_bench();
+    print!("{}", trident::bench::serve_table_from(&bench.modes));
     println!();
 
     println!("== coalescing sweep: 32 one-row queries, d=128, keyed pool + background refill ==");
@@ -44,6 +47,10 @@ fn main() {
     }
 
     println!();
+    println!("== Multi-tenant serving: 2 resident models, WRR 2:1, LAN ==");
+    print!("{}", trident::bench::tenant_table(&bench.tenants));
+
+    println!();
     println!("== ReLU layer serving (pool feeds wire-mask bundles + bitext material) ==");
     for (mode, label) in [
         (PoolMode::Inline, "inline"),
@@ -68,5 +75,13 @@ fn main() {
             s.offline_value_bits as f64 / 8.0 / 1024.0,
             s.online_rounds,
         );
+    }
+
+    // machine-readable perf trajectory, tracked across PRs at the repo
+    // root — same measurements as the tables above, rendered once
+    println!();
+    match trident::bench::write_serving_bench_json_from(&bench, "BENCH_serving.json") {
+        Ok(_) => println!("wrote BENCH_serving.json"),
+        Err(e) => println!("could not write BENCH_serving.json: {e}"),
     }
 }

@@ -630,15 +630,8 @@ pub fn fig20() -> String {
 /// per-request offline, `off msg/wave` = 0). Offline cost (pool fill /
 /// refill + any live γ exchanges) stays under `Phase::Offline` — the
 /// offline column shows it is *moved*, not hidden.
-pub fn serve_table() -> String {
+fn serve_mode_rows() -> Vec<(&'static str, crate::serve::ServeStats)> {
     use crate::serve::{serve, PoolMode, ServeConfig};
-    let mut out = String::new();
-    out.push_str(
-        "== Serving: pooled-matrix vs scalar-pool vs inline (linreg d=128, 1-row queries, LAN) ==\n",
-    );
-    out.push_str(
-        "mode                 | q  | batches | online rnds | ms/query | online B/query | offline KiB | off msg/wave\n",
-    );
     let base = ServeConfig {
         d: 128,
         rows_per_query: 1,
@@ -650,24 +643,63 @@ pub fn serve_table() -> String {
         relu: false,
         seed: 321,
     };
-    let rows: Vec<(&str, ServeConfig)> = vec![
-        ("inline per-query", base.clone()),
+    vec![
+        ("inline per-query", serve(NetProfile::lan(), base.clone())),
         (
             "scalar, coalesce 8",
-            ServeConfig { mode: PoolMode::Scalar, coalesce: 8, ..base.clone() },
+            serve(
+                NetProfile::lan(),
+                ServeConfig { mode: PoolMode::Scalar, coalesce: 8, ..base.clone() },
+            ),
         ),
         (
             "keyed,  coalesce 8",
-            ServeConfig { mode: PoolMode::Keyed, coalesce: 8, ..base.clone() },
+            serve(
+                NetProfile::lan(),
+                ServeConfig { mode: PoolMode::Keyed, coalesce: 8, ..base.clone() },
+            ),
         ),
         (
             "keyed,  coalesce 32",
-            ServeConfig { mode: PoolMode::Keyed, coalesce: 32, ..base.clone() },
+            serve(NetProfile::lan(), ServeConfig { mode: PoolMode::Keyed, coalesce: 32, ..base }),
         ),
-    ];
+    ]
+}
+
+/// One full serving-benchmark run: the single-model mode sweep plus the
+/// canonical two-tenant workload. Compute it once and feed both the text
+/// tables and the JSON writer — every row is a real 4PC cluster run, so
+/// re-running for a second output format doubles bench wall time.
+pub struct ServingBench {
+    pub modes: Vec<(&'static str, crate::serve::ServeStats)>,
+    pub tenants_cfg: crate::serve::MultiServeConfig,
+    pub tenants: crate::serve::MultiServeStats,
+}
+
+pub fn run_serving_bench() -> ServingBench {
+    let cfg = demo_tenants(12);
+    ServingBench {
+        modes: serve_mode_rows(),
+        tenants: crate::serve::serve_multi(NetProfile::lan(), cfg.clone()),
+        tenants_cfg: cfg,
+    }
+}
+
+pub fn serve_table() -> String {
+    serve_table_from(&serve_mode_rows())
+}
+
+/// Render the single-model serving table from precomputed rows.
+pub fn serve_table_from(rows: &[(&'static str, crate::serve::ServeStats)]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "== Serving: pooled-matrix vs scalar-pool vs inline (linreg d=128, 1-row queries, LAN) ==\n",
+    );
+    out.push_str(
+        "mode                 | q  | batches | online rnds | ms/query | online B/query | offline KiB | off msg/wave\n",
+    );
     let mut inline_lat = None;
-    for (name, cfg) in rows {
-        let s = serve(NetProfile::lan(), cfg);
+    for (name, s) in rows {
         if inline_lat.is_none() {
             inline_lat = Some(s.per_query_latency());
         }
@@ -692,6 +724,172 @@ pub fn serve_table() -> String {
     out
 }
 
+/// Canonical multi-tenant demo workload for the per-tenant table/JSON: two
+/// resident models behind one cluster — a weight-2 class-0 tenant and a
+/// weight-1 class-1 tenant with a 6-tick deadline (aging every 2 ticks
+/// keeps the low-priority tenant from starving; the deadline column shows
+/// expiry accounting in action).
+pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
+    use crate::sched::TenantSpec;
+    use crate::serve::{MultiServeConfig, PoolMode};
+    let mut prio = TenantSpec::new("prio", 1, 64, queries, 4);
+    prio.weight = 2;
+    prio.class = 0;
+    let mut batch = TenantSpec::new("batch", 2, 64, queries, 4);
+    batch.weight = 1;
+    batch.class = 1;
+    batch.deadline_ticks = Some(6);
+    MultiServeConfig {
+        tenants: vec![prio, batch],
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        age_every: 2,
+        seed: 333,
+    }
+}
+
+/// Per-tenant serving table: one row per resident model of a
+/// [`crate::serve::MultiServeStats`] run.
+pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "tenant   | sub | adm | rej | served | expired | waves (keyed/inl) | p50 ms | p99 ms | sojourn t | off msg/wave | share\n",
+    );
+    for ts in &stats.tenants {
+        out.push_str(&format!(
+            "{:<8} | {:>3} | {:>3} | {:>3} | {:>6} | {:>7} | {:>5} ({:>2}/{:>2})      | {:>6.3} | {:>6.3} | {:>9.1} | {:>12.2} | {:>4.0}%\n",
+            ts.name,
+            ts.submitted,
+            ts.admitted,
+            ts.rejected,
+            ts.served,
+            ts.expired,
+            ts.waves,
+            ts.keyed_waves,
+            ts.inline_waves,
+            ts.p50_latency * 1e3,
+            ts.p99_latency * 1e3,
+            ts.mean_sojourn_ticks,
+            ts.offline_msgs_in_waves as f64 / ts.waves.max(1) as f64,
+            100.0 * ts.waves as f64 / stats.waves.max(1) as f64,
+        ));
+    }
+    out.push_str(&format!(
+        "total    : {} waves over {} ticks | {} online rounds | refill online msgs {} | aged promotions {}\n",
+        stats.waves, stats.ticks, stats.online_rounds, stats.refill_online_msgs, stats.aged_promotions,
+    ));
+    out
+}
+
+/// Multi-tenant serving table (beyond the paper): the scheduler subsystem
+/// — per-model keyed pools, deadline/priority queue, weighted-round-robin
+/// wave planner — serving two resident models behind one cluster.
+pub fn serve_tenants_table() -> String {
+    use crate::serve::serve_multi;
+    let mut out = String::new();
+    out.push_str("== Multi-tenant serving: 2 resident models, WRR 2:1, LAN ==\n");
+    out.push_str(&tenant_table(&serve_multi(NetProfile::lan(), demo_tenants(12))));
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable serving benchmark: the mode table and the per-tenant
+/// table as one JSON document, so the perf trajectory is trackable across
+/// PRs (`BENCH_serving.json` at the repo root; see
+/// [`write_serving_bench_json`]). Runs the full benchmark — callers that
+/// already hold a [`ServingBench`] should use [`serving_bench_json_from`].
+pub fn serving_bench_json() -> String {
+    serving_bench_json_from(&run_serving_bench())
+}
+
+/// Render the JSON document from a precomputed [`ServingBench`].
+pub fn serving_bench_json_from(bench: &ServingBench) -> String {
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/1\",\n");
+    out.push_str("  \"modes\": [\n");
+    let rows = &bench.modes;
+    for (i, (name, s)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"queries\": {}, \"batches\": {}, \"online_rounds\": {}, \"ms_per_query\": {:.6}, \"online_bytes_per_query\": {:.1}, \"offline_kib\": {:.3}, \"off_msgs_per_wave\": {:.3}}}{}\n",
+            json_escape(name),
+            s.queries,
+            s.batches,
+            s.online_rounds,
+            s.per_query_latency() * 1e3,
+            s.per_query_online_bytes(),
+            s.offline_value_bits as f64 / 8.0 / 1024.0,
+            s.offline_msgs_in_waves as f64 / s.batches.max(1) as f64,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n");
+    let (cfg, stats) = (&bench.tenants_cfg, &bench.tenants);
+    out.push_str("  \"tenants\": [\n");
+    for (t, ts) in stats.tenants.iter().enumerate() {
+        let spec = &cfg.tenants[t];
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"wave_share\": {:.4}}}{}\n",
+            json_escape(&ts.name),
+            spec.weight,
+            spec.class,
+            ts.submitted,
+            ts.admitted,
+            ts.rejected,
+            ts.served,
+            ts.expired,
+            ts.waves,
+            ts.keyed_waves,
+            ts.inline_waves,
+            ts.p50_latency * 1e3,
+            ts.p99_latency * 1e3,
+            ts.mean_sojourn_ticks,
+            ts.offline_msgs_in_waves,
+            ts.waves as f64 / stats.waves.max(1) as f64,
+            if t + 1 < stats.tenants.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str(&format!(
+        "  \"totals\": {{\"waves\": {}, \"ticks\": {}, \"online_rounds\": {}, \"offline_msgs_in_waves\": {}, \"refill_online_msgs\": {}, \"aged_promotions\": {}}}\n",
+        stats.waves,
+        stats.ticks,
+        stats.online_rounds,
+        stats.offline_msgs_in_waves,
+        stats.refill_online_msgs,
+        stats.aged_promotions,
+    ));
+    out.push_str("}\n");
+    out
+}
+
+/// Run the serving benchmarks and write the JSON document to `path`
+/// (`BENCH_serving.json` at the repo root by convention). Returns the JSON.
+pub fn write_serving_bench_json(path: &str) -> std::io::Result<String> {
+    write_serving_bench_json_from(&run_serving_bench(), path)
+}
+
+/// Write the JSON document for a precomputed [`ServingBench`] to `path`.
+pub fn write_serving_bench_json_from(
+    bench: &ServingBench,
+    path: &str,
+) -> std::io::Result<String> {
+    let json = serving_bench_json_from(bench);
+    std::fs::write(path, &json)?;
+    Ok(json)
+}
+
 /// All tables, in paper order. `filter`: empty = all.
 pub fn run_tables(filter: &[String]) -> String {
     let all: Vec<(&str, fn() -> String)> = vec![
@@ -712,6 +910,7 @@ pub fn run_tables(filter: &[String]) -> String {
         ("table15", || table8_15()),
         ("fig20", fig20),
         ("serve", serve_table),
+        ("serve-tenants", serve_tenants_table),
     ];
     let mut out = String::new();
     let mut done = std::collections::HashSet::new();

@@ -276,6 +276,104 @@ pub fn serve_cli(opts: ServeCliOpts) {
     }
 }
 
+/// Options for the multi-tenant `trident serve --models m1,m2 …` path
+/// (`--weights`, `--priorities`, `--deadline-ms`, `--cap`, `--json`).
+#[derive(Clone, Debug)]
+pub struct MultiServeCliOpts {
+    /// Tenant/model names, registry order (`--models m1,m2`).
+    pub models: Vec<String>,
+    /// Weighted-round-robin shares (`--weights 2,1`); missing entries
+    /// default to 1.
+    pub weights: Vec<u64>,
+    /// Priority classes, 0 = highest (`--priorities 0,1`); missing entries
+    /// default to 0.
+    pub priorities: Vec<u8>,
+    /// Relative query deadline for every tenant (`--deadline-ms D`). The
+    /// scheduler runs on logical ticks (one tick ≈ one serving wave ≈ 1 ms
+    /// on the simulated LAN profile), so D maps to D ticks.
+    pub deadline_ms: Option<u64>,
+    /// Queries per tenant.
+    pub queries: usize,
+    /// Per-tenant coalescing factor; defaults to `min(queries, 8)`.
+    pub coalesce: Option<usize>,
+    pub low_water: usize,
+    pub high_water: usize,
+    /// Admission-control in-flight cap per tenant (`--cap N`).
+    pub cap: Option<usize>,
+    /// Also write the machine-readable benchmark (`BENCH_serving.json`).
+    pub json: bool,
+}
+
+impl Default for MultiServeCliOpts {
+    fn default() -> MultiServeCliOpts {
+        MultiServeCliOpts {
+            models: vec!["m1".into(), "m2".into()],
+            weights: Vec::new(),
+            priorities: Vec::new(),
+            deadline_ms: None,
+            queries: 12,
+            coalesce: None,
+            low_water: 1,
+            high_water: 2,
+            cap: None,
+            json: false,
+        }
+    }
+}
+
+/// Multi-tenant prediction serving: N resident models loaded into the
+/// model registry (one keyed pool shard + refill targets per tenant), the
+/// deadline/priority queue at the request edge, and the weighted
+/// round-robin wave planner deciding whose coalesced wave runs next.
+/// Prints the per-tenant stats table.
+pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
+    use crate::sched::TenantSpec;
+    use crate::serve::{serve_multi, MultiServeConfig, PoolMode};
+    let queries = opts.queries.max(1);
+    let coalesce = opts.coalesce.unwrap_or_else(|| queries.clamp(1, 8));
+    let tenants: Vec<TenantSpec> = opts
+        .models
+        .iter()
+        .enumerate()
+        .map(|(t, name)| {
+            let mut s = TenantSpec::new(name, t as u64 + 1, 128, queries, coalesce);
+            s.weight = opts.weights.get(t).copied().unwrap_or(1).max(1);
+            s.class = opts.priorities.get(t).copied().unwrap_or(0);
+            s.deadline_ticks = opts.deadline_ms;
+            s.inflight_cap = opts.cap;
+            s
+        })
+        .collect();
+    let cfg = MultiServeConfig {
+        tenants,
+        mode: PoolMode::Keyed,
+        low_water: opts.low_water.max(1),
+        high_water: opts.high_water.max(1),
+        age_every: 2,
+        seed: 333,
+    };
+    println!(
+        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN) …",
+        cfg.tenants.len(),
+    );
+    let stats = serve_multi(crate::net::NetProfile::lan(), cfg);
+    print!("{}", crate::bench::tenant_table(&stats));
+    if stats.offline_msgs_in_waves == 0 {
+        println!("per-wave offline silence: yes (every tenant, every warm wave)");
+    } else {
+        println!(
+            "per-wave offline silence: NO ({} offline msgs inside waves — inline fallbacks or cold pools)",
+            stats.offline_msgs_in_waves
+        );
+    }
+    if opts.json {
+        match crate::bench::write_serving_bench_json("BENCH_serving.json") {
+            Ok(_) => println!("wrote BENCH_serving.json"),
+            Err(e) => println!("could not write BENCH_serving.json: {e}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -36,6 +36,15 @@
 //!   (a ReLU layer's input-dependent γ-exchange stays live) — verifies
 //!   every response before release, and reports per-query amortized online
 //!   cost through the meter.
+//! * **sched/** — the multi-tenant scheduler over the serving stack: a
+//!   model registry holding N resident models with per-tenant keyed pools
+//!   (the `CircuitKey::model` field shards the offline material; a
+//!   cross-tenant pop fails closed), a deadline/priority request queue
+//!   (priority classes, EDF within a class, aging for starvation freedom,
+//!   per-tenant admission caps), and a weighted-round-robin wave planner
+//!   that interleaves refill ticks for the most-depleted tenant pool —
+//!   all driven by logical ticks, lockstep-deterministic at the four
+//!   parties (`serve::multi` is the engine that executes its decisions).
 //!
 //! See DESIGN.md for the system inventory and per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -52,6 +61,7 @@ pub mod pool;
 pub mod proto;
 pub mod ring;
 pub mod runtime;
+pub mod sched;
 pub mod serve;
 pub mod setup;
 pub mod sharing;

@@ -4,13 +4,43 @@
 //! trident quickstart                   # share → multiply → reconstruct demo
 //! trident train   [--model nn|cnn|linreg|logreg] [--iters N] [--batch B] [--features D]
 //! trident predict [--model ...] [--batch B]
-//! trident tables  [table1 ... fig20]   # regenerate the paper's evaluation
+//! trident tables  [table1 ... fig20 serve serve-tenants] [--json]
+//!                                      # regenerate the paper's evaluation
 //! trident serve   [--queries N] [--coalesce C] [--mode inline|scalar|keyed]
-//!                 [--low-water L] [--high-water H] [--relu]
+//!                 [--low-water L] [--high-water H] [--relu] [--json]
 //!                                      # batched prediction serving demo
+//! trident serve   --models m1,m2 [--weights 2,1] [--priorities 0,1]
+//!                 [--deadline-ms D] [--cap N] [--queries N] [--coalesce C]
+//!                 [--low-water L] [--high-water H] [--json]
+//!                                      # multi-tenant scheduler demo
 //! ```
+//!
+//! `--json` (serve / tables) additionally writes the machine-readable
+//! serving benchmark to `BENCH_serving.json` at the repo root.
 
 use std::collections::HashMap;
+
+/// Parse a comma-separated numeric flag **positionally**: an unparsable
+/// entry keeps its slot (with `default` and a warning) instead of being
+/// dropped, so later values never shift onto the wrong model.
+fn parse_num_list<T>(raw: Option<&String>, key: &str, default: T) -> Vec<T>
+where
+    T: std::str::FromStr + Copy + std::fmt::Display,
+{
+    match raw {
+        None => Vec::new(),
+        Some(v) => v
+            .split(',')
+            .enumerate()
+            .map(|(i, tok)| {
+                tok.trim().parse().unwrap_or_else(|_| {
+                    println!("--{key} entry {i} ({tok:?}) is not a number; using {default}");
+                    default
+                })
+            })
+            .collect(),
+    }
+}
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -59,30 +89,67 @@ fn main() {
             println!("pjrt: {}", if pjrt { "enabled" } else { "native fallback" });
             let filter: Vec<String> = pos[1..].to_vec();
             print!("{}", trident::bench::run_tables(&filter));
+            if flags.get("json").map(String::as_str) == Some("true") {
+                match trident::bench::write_serving_bench_json("BENCH_serving.json") {
+                    Ok(_) => println!("wrote BENCH_serving.json"),
+                    Err(e) => println!("could not write BENCH_serving.json: {e}"),
+                }
+            }
         }
         "serve" => {
-            let mut opts = trident::coordinator::ServeCliOpts::default();
-            if let Some(q) = flags.get("queries").and_then(|v| v.parse().ok()) {
-                opts.queries = q;
+            let json = flags.get("json").map(String::as_str) == Some("true");
+            if let Some(models) = flags.get("models") {
+                // multi-tenant path: the scheduler subsystem over N models
+                let mut opts = trident::coordinator::MultiServeCliOpts {
+                    models: models.split(',').map(str::trim).map(String::from).collect(),
+                    json,
+                    ..trident::coordinator::MultiServeCliOpts::default()
+                };
+                opts.weights = parse_num_list(flags.get("weights"), "weights", 1u64);
+                opts.priorities = parse_num_list(flags.get("priorities"), "priorities", 0u8);
+                opts.deadline_ms = flags.get("deadline-ms").and_then(|v| v.parse().ok());
+                opts.cap = flags.get("cap").and_then(|v| v.parse().ok());
+                if let Some(q) = flags.get("queries").and_then(|v| v.parse().ok()) {
+                    opts.queries = q;
+                }
+                opts.coalesce = flags.get("coalesce").and_then(|v| v.parse().ok());
+                if let Some(l) = flags.get("low-water").and_then(|v| v.parse().ok()) {
+                    opts.low_water = l;
+                }
+                if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
+                    opts.high_water = h;
+                }
+                trident::coordinator::serve_tenants_cli(opts);
+            } else {
+                let mut opts = trident::coordinator::ServeCliOpts::default();
+                if let Some(q) = flags.get("queries").and_then(|v| v.parse().ok()) {
+                    opts.queries = q;
+                }
+                opts.coalesce = flags.get("coalesce").and_then(|v| v.parse().ok());
+                if let Some(m) = flags.get("mode") {
+                    opts.mode = m.clone();
+                }
+                if let Some(l) = flags.get("low-water").and_then(|v| v.parse().ok()) {
+                    opts.low_water = l;
+                }
+                if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
+                    opts.high_water = h;
+                }
+                opts.relu = flags.get("relu").map(String::as_str) == Some("true");
+                trident::coordinator::serve_cli(opts);
+                if json {
+                    match trident::bench::write_serving_bench_json("BENCH_serving.json") {
+                        Ok(_) => println!("wrote BENCH_serving.json"),
+                        Err(e) => println!("could not write BENCH_serving.json: {e}"),
+                    }
+                }
             }
-            opts.coalesce = flags.get("coalesce").and_then(|v| v.parse().ok());
-            if let Some(m) = flags.get("mode") {
-                opts.mode = m.clone();
-            }
-            if let Some(l) = flags.get("low-water").and_then(|v| v.parse().ok()) {
-                opts.low_water = l;
-            }
-            if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
-                opts.high_water = h;
-            }
-            opts.relu = flags.get("relu").map(String::as_str) == Some("true");
-            trident::coordinator::serve_cli(opts);
         }
         _ => {
             println!(
                 "trident — 4PC privacy-preserving ML (NDSS'20 reproduction)\n\
                  commands: quickstart | train | predict | tables | serve\n\
-                 see README.md"
+                 serve --models m1,m2 runs the multi-tenant scheduler; see README.md"
             );
         }
     }

@@ -1,0 +1,56 @@
+//! Multi-tenant scheduler — the framework layer between the request edge
+//! and the serving engine (`crate::serve`), turning the single-resident
+//! pool+wave machinery of PRs 1–2 into a *serving platform*: N resident
+//! models sharing the four parties, each model's offline material staged
+//! ahead of its own traffic, and a deterministic planner deciding whose
+//! wave runs next.
+//!
+//! ## Components
+//!
+//! * [`ModelRegistry`] ([`registry`]) — loads N resident models, registers
+//!   each model's [`CircuitKey`](crate::pool::CircuitKey)s (the `model`
+//!   field the keyed pool already carries is the tenant id), and pairs each
+//!   tenant with its own background-refill targets. Pooled offline
+//!   material is thereby **sharded per tenant**: a pop under tenant A's
+//!   key can never serve tenant B's correlation — wrong-tenant material
+//!   fails closed exactly like wrong-layer material
+//!   ([`crate::pool::Pool::pop_mat`]).
+//! * [`SchedQueue`] ([`queue`]) — replaces the FIFO-only
+//!   [`RequestQueue`](crate::serve::RequestQueue) path: priority classes
+//!   (0 = highest), **earliest-deadline-first within a class**, per-query
+//!   expiry accounting (an expired query is counted and dropped, never
+//!   served past its deadline), a starvation-freedom **aging** rule, and
+//!   admission control with per-tenant in-flight caps.
+//! * [`WavePlanner`] ([`planner`]) — picks the next tenant to serve by
+//!   **smooth weighted round-robin** over the tenants eligible at the
+//!   queue's best priority class (weights = tenant shares), so the wave
+//!   split tracks the share split to within one wave over any window.
+//!   Between waves the engine interleaves one refill tick for the
+//!   **most-depleted** tenant pool ([`ModelRegistry::most_depleted`]).
+//!
+//! ## Lockstep determinism: logical ticks, no wall-clock
+//!
+//! Every scheduling decision must be taken identically by all four party
+//! threads — a desynchronised pop or refill is a protocol break, not a
+//! performance bug. The scheduler therefore never reads a wall clock (and
+//! never reads the per-party *virtual* clocks, which legitimately differ
+//! across parties): time is a **logical tick counter** advanced once per
+//! planner iteration, shared by construction. Arrivals, deadlines, expiry
+//! and aging are all expressed in ticks; query metadata (tenant, id, rows,
+//! class, arrival, deadline) is public schedule state, identical at every
+//! party, while the query *payload* exists only at the data owner. Tests
+//! stay deterministic for the same reason the protocols do: same inputs,
+//! same tick sequence, same decisions.
+//!
+//! The CLI maps `--deadline-ms N` to N logical ticks (one tick ≈ one
+//! serving wave ≈ 1 ms on the simulated LAN profile); a deployment with
+//! real clocks would instead stamp ticks from a leader-sequenced arrival
+//! log — the tick abstraction is the point, not the unit.
+
+pub mod planner;
+pub mod queue;
+pub mod registry;
+
+pub use planner::WavePlanner;
+pub use queue::{SchedQueue, SchedQueueStats, SchedQuery};
+pub use registry::{tenant_wave_key, tenant_weights, ModelRegistry, ResidentModel, TenantSpec};

@@ -1,0 +1,390 @@
+//! Deadline/priority request queue with admission control — the
+//! multi-tenant replacement for the FIFO-only
+//! [`RequestQueue`](crate::serve::RequestQueue) path.
+//!
+//! ## Ordering
+//!
+//! Each query carries a **priority class** (0 = highest) and an optional
+//! **absolute deadline** in logical ticks (see the [`crate::sched`] module
+//! docs for why the scheduler runs on ticks, never wall-clock). Within one
+//! tenant's backlog, service order is:
+//!
+//! 1. effective priority class (ascending — see *Aging* below),
+//! 2. earliest deadline first (queries without a deadline sort last),
+//! 3. arrival tick, then query id — a total order, so every party pops the
+//!    same batch.
+//!
+//! ## Aging (starvation freedom)
+//!
+//! A saturating stream of class-0 queries would otherwise starve class-1
+//! forever. With `age_every = A > 0`, a query's *effective* class drops by
+//! one for every `A` ticks it has waited: any query reaches class 0 after
+//! at most `A · class` ticks and then competes on (deadline, arrival),
+//! where its older arrival wins. `age_every = 0` disables aging.
+//!
+//! ## Expiry
+//!
+//! A query whose deadline has passed (`deadline < now`) is **counted and
+//! dropped** at the tick boundary — it is never served late, and it stops
+//! occupying its tenant's in-flight budget. A deadline equal to the
+//! current tick is still serviceable: the deadline bounds the last tick at
+//! which service may *start*.
+//!
+//! ## Admission control
+//!
+//! Per-tenant in-flight caps bound how much backlog one tenant can park in
+//! the platform: a query is rejected at [`SchedQueue::admit`] when its
+//! tenant already has `cap` queries admitted-but-unanswered (queued or in
+//! service). Rejection is load shedding, not queueing — the caller sees it
+//! immediately and the query is counted per tenant.
+
+use crate::ml::F64Mat;
+
+/// One tenant-tagged inference query. The clear feature rows exist only at
+/// the data owner; everything else is public schedule metadata, identical
+/// at all four parties.
+#[derive(Clone, Debug)]
+pub struct SchedQuery {
+    /// Tenant (resident-model) index in the registry.
+    pub tenant: usize,
+    /// Query id, unique within its tenant.
+    pub id: usize,
+    /// Feature rows in this query.
+    pub rows: usize,
+    /// Priority class, 0 = highest.
+    pub class: u8,
+    /// Arrival logical tick.
+    pub arrival: u64,
+    /// Absolute deadline tick (last tick service may start); `None` = no
+    /// deadline.
+    pub deadline: Option<u64>,
+    /// Feature rows, present at the data owner only.
+    pub x: Option<F64Mat>,
+}
+
+/// Per-tenant accounting of everything the queue decided.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SchedQueueStats {
+    /// Queries offered to `admit` per tenant.
+    pub submitted: Vec<usize>,
+    /// Queries accepted per tenant.
+    pub admitted: Vec<usize>,
+    /// Queries shed by the in-flight cap per tenant.
+    pub rejected: Vec<usize>,
+    /// Queries dropped past their deadline per tenant (never served).
+    pub expired: Vec<usize>,
+    /// Queries completed per tenant.
+    pub served: Vec<usize>,
+    /// Pops in which aging lifted at least one query above a younger,
+    /// nominally-higher-priority one.
+    pub aged_promotions: u64,
+}
+
+/// Deadline/priority-aware multi-tenant queue (see the module docs).
+pub struct SchedQueue {
+    pending: Vec<SchedQuery>,
+    /// Promote a waiting query one class per this many ticks (0 = off).
+    age_every: u64,
+    /// Per-tenant in-flight caps (`usize::MAX` = uncapped).
+    caps: Vec<usize>,
+    /// Admitted-but-unanswered count per tenant (queued + in service).
+    inflight: Vec<usize>,
+    stats: SchedQueueStats,
+}
+
+impl SchedQueue {
+    pub fn new(tenants: usize, age_every: u64) -> SchedQueue {
+        SchedQueue {
+            pending: Vec::new(),
+            age_every,
+            caps: vec![usize::MAX; tenants],
+            inflight: vec![0; tenants],
+            stats: SchedQueueStats {
+                submitted: vec![0; tenants],
+                admitted: vec![0; tenants],
+                rejected: vec![0; tenants],
+                expired: vec![0; tenants],
+                served: vec![0; tenants],
+                aged_promotions: 0,
+            },
+        }
+    }
+
+    /// Cap tenant `t`'s admitted-but-unanswered queries.
+    pub fn set_cap(&mut self, t: usize, cap: usize) {
+        self.caps[t] = cap.max(1);
+    }
+
+    pub fn stats(&self) -> &SchedQueueStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Pending (not yet popped) queries of tenant `t`.
+    pub fn pending_tenant(&self, t: usize) -> usize {
+        self.pending.iter().filter(|q| q.tenant == t).count()
+    }
+
+    /// Admit or shed one query (admission control). Returns whether the
+    /// query was accepted.
+    pub fn admit(&mut self, q: SchedQuery) -> bool {
+        let t = q.tenant;
+        self.stats.submitted[t] += 1;
+        if self.inflight[t] >= self.caps[t] {
+            self.stats.rejected[t] += 1;
+            return false;
+        }
+        self.inflight[t] += 1;
+        self.stats.admitted[t] += 1;
+        self.pending.push(q);
+        true
+    }
+
+    /// Effective priority class of `q` at tick `now`: the nominal class
+    /// minus one per `age_every` ticks waited (saturating at 0).
+    fn effective_class(&self, q: &SchedQuery, now: u64) -> u8 {
+        if self.age_every == 0 {
+            return q.class;
+        }
+        let waited = now.saturating_sub(q.arrival) / self.age_every;
+        q.class.saturating_sub(waited.min(u8::MAX as u64) as u8)
+    }
+
+    /// Drop every pending query whose deadline has passed, counting it per
+    /// tenant. Call once per tick, before planning. Returns how many were
+    /// dropped.
+    pub fn expire(&mut self, now: u64) -> usize {
+        let mut dropped = 0;
+        let mut i = 0;
+        while i < self.pending.len() {
+            let past = matches!(self.pending[i].deadline, Some(d) if d < now);
+            if past {
+                let q = self.pending.remove(i);
+                self.stats.expired[q.tenant] += 1;
+                self.inflight[q.tenant] -= 1;
+                dropped += 1;
+            } else {
+                i += 1;
+            }
+        }
+        dropped
+    }
+
+    /// The best (lowest) effective class over all pending queries.
+    pub fn best_class(&self, now: u64) -> Option<u8> {
+        self.pending.iter().map(|q| self.effective_class(q, now)).min()
+    }
+
+    /// Eligibility mask for the planner: tenant `t` is eligible when it has
+    /// a pending query at the queue-wide best effective class.
+    pub fn eligible_mask(&self, tenants: usize, now: u64) -> Vec<bool> {
+        let mut mask = vec![false; tenants];
+        if let Some(best) = self.best_class(now) {
+            for q in &self.pending {
+                if self.effective_class(q, now) == best {
+                    mask[q.tenant] = true;
+                }
+            }
+        }
+        mask
+    }
+
+    /// Total order for one tenant's backlog: effective class, then EDF
+    /// (no deadline sorts last), then arrival, then id.
+    fn order_key(&self, q: &SchedQuery, now: u64) -> (u8, u64, u64, usize) {
+        (
+            self.effective_class(q, now),
+            q.deadline.unwrap_or(u64::MAX),
+            q.arrival,
+            q.id,
+        )
+    }
+
+    /// Pop tenant `t`'s next coalesced batch: up to `coalesce` queries
+    /// (0 is guarded — treated as 1), best-first in the order above. Once
+    /// a tenant is picked the batch fills with its best remaining queries
+    /// regardless of class, to maximize coalescing. Deterministic: all
+    /// parties hold identical metadata and pop identical batches — in
+    /// particular the trailing partial batch (fewer than `coalesce`
+    /// pending) is the same at every party.
+    pub fn pop_batch(&mut self, t: usize, coalesce: usize, now: u64) -> Vec<SchedQuery> {
+        let coalesce = coalesce.max(1);
+        let mut idxs: Vec<usize> = (0..self.pending.len())
+            .filter(|&i| self.pending[i].tenant == t)
+            .collect();
+        idxs.sort_by_key(|&i| self.order_key(&self.pending[i], now));
+        idxs.truncate(coalesce);
+        // detect an aging promotion: a nominally worse class scheduled
+        // ahead of a better one still pending for this tenant
+        if let Some(&first) = idxs.first() {
+            let first_class = self.pending[first].class;
+            let jumped = self
+                .pending
+                .iter()
+                .any(|q| q.tenant == t && q.class < first_class);
+            if jumped {
+                self.stats.aged_promotions += 1;
+            }
+        }
+        // remove back-to-front so earlier indices stay valid, then restore
+        // the service order (the batch row order is the schedule order at
+        // every party)
+        idxs.sort_unstable();
+        let mut keyed = Vec::with_capacity(idxs.len());
+        for i in idxs.into_iter().rev() {
+            let key = self.order_key(&self.pending[i], now);
+            keyed.push((key, self.pending.remove(i)));
+        }
+        keyed.sort_by(|a, b| a.0.cmp(&b.0));
+        keyed.into_iter().map(|(_, q)| q).collect()
+    }
+
+    /// Mark `n` of tenant `t`'s in-service queries answered.
+    pub fn complete(&mut self, t: usize, n: usize) {
+        self.inflight[t] -= n;
+        self.stats.served[t] += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(tenant: usize, id: usize, class: u8, arrival: u64, deadline: Option<u64>) -> SchedQuery {
+        SchedQuery { tenant, id, rows: 1, class, arrival, deadline, x: None }
+    }
+
+    #[test]
+    fn edf_orders_within_a_priority_class() {
+        let mut sq = SchedQueue::new(1, 0);
+        assert!(sq.admit(q(0, 0, 1, 0, Some(9))));
+        assert!(sq.admit(q(0, 1, 1, 0, Some(3))));
+        assert!(sq.admit(q(0, 2, 1, 0, None)));
+        assert!(sq.admit(q(0, 3, 1, 0, Some(5))));
+        let batch = sq.pop_batch(0, 4, 0);
+        let ids: Vec<usize> = batch.iter().map(|q| q.id).collect();
+        // earliest deadline first; no-deadline sorts last
+        assert_eq!(ids, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn priority_class_beats_deadline_across_classes() {
+        let mut sq = SchedQueue::new(1, 0);
+        assert!(sq.admit(q(0, 0, 1, 0, Some(1)))); // urgent but class 1
+        assert!(sq.admit(q(0, 1, 0, 0, Some(50)))); // relaxed but class 0
+        let batch = sq.pop_batch(0, 2, 0);
+        assert_eq!(batch[0].id, 1, "class 0 schedules before class 1");
+        assert_eq!(batch[1].id, 0);
+    }
+
+    #[test]
+    fn aging_prevents_starvation_under_saturating_high_priority_stream() {
+        // class-1 query at tick 0; one fresh class-0 query arrives every
+        // tick and one query is served per tick. Without aging the class-1
+        // query would wait forever; with age_every = 3 it must be served by
+        // tick 3 (it reaches effective class 0 and wins on arrival).
+        let mut sq = SchedQueue::new(1, 3);
+        assert!(sq.admit(q(0, 100, 1, 0, None)));
+        let mut served_low_at = None;
+        for now in 0..10u64 {
+            sq.expire(now);
+            assert!(sq.admit(q(0, now as usize, 0, now, None)));
+            let batch = sq.pop_batch(0, 1, now);
+            assert_eq!(batch.len(), 1);
+            sq.complete(0, 1);
+            if batch[0].id == 100 {
+                served_low_at = Some(now);
+                break;
+            }
+        }
+        let at = served_low_at.expect("aged query must eventually be served");
+        assert_eq!(at, 3, "effective class reaches 0 after age_every ticks");
+        assert!(sq.stats().aged_promotions >= 1, "promotion must be accounted");
+        // control: with aging disabled the class-1 query is still waiting
+        // after the same workload
+        let mut no_age = SchedQueue::new(1, 0);
+        assert!(no_age.admit(q(0, 100, 1, 0, None)));
+        for now in 0..10u64 {
+            assert!(no_age.admit(q(0, now as usize, 0, now, None)));
+            let batch = no_age.pop_batch(0, 1, now);
+            assert_ne!(batch[0].id, 100, "without aging class 0 always wins");
+            no_age.complete(0, 1);
+        }
+    }
+
+    #[test]
+    fn expired_queries_are_counted_and_never_served() {
+        let mut sq = SchedQueue::new(1, 0);
+        assert!(sq.admit(q(0, 0, 0, 0, Some(1))));
+        assert!(sq.admit(q(0, 1, 0, 0, Some(4))));
+        // a deadline equal to `now` is still serviceable …
+        assert_eq!(sq.expire(1), 0);
+        // … but one tick later the id-0 query is past due
+        assert_eq!(sq.expire(2), 1);
+        assert_eq!(sq.stats().expired[0], 1);
+        let batch = sq.pop_batch(0, 4, 2);
+        assert_eq!(batch.len(), 1, "expired query must never be served");
+        assert_eq!(batch[0].id, 1);
+        sq.complete(0, 1);
+        assert_eq!(sq.stats().served[0], 1);
+    }
+
+    #[test]
+    fn admission_cap_sheds_load_per_tenant() {
+        let mut sq = SchedQueue::new(2, 0);
+        sq.set_cap(0, 2);
+        for id in 0..5 {
+            sq.admit(q(0, id, 0, 0, None));
+            assert!(sq.admit(q(1, id, 0, 0, None)), "uncapped tenant takes all");
+        }
+        assert_eq!(sq.stats().admitted[0], 2);
+        assert_eq!(sq.stats().rejected[0], 3);
+        assert_eq!(sq.stats().rejected[1], 0);
+        // completing frees budget for later arrivals
+        let batch = sq.pop_batch(0, 2, 0);
+        assert_eq!(batch.len(), 2);
+        sq.complete(0, 2);
+        assert!(sq.admit(q(0, 9, 0, 1, None)), "freed in-flight budget re-admits");
+    }
+
+    #[test]
+    fn coalesce_zero_is_guarded_and_trailing_partial_batch_is_deterministic() {
+        let mut sq = SchedQueue::new(1, 0);
+        for id in 0..5 {
+            assert!(sq.admit(q(0, id, 0, 0, None)));
+        }
+        // coalesce == 0 must behave as 1, not panic or drain nothing
+        let b0 = sq.pop_batch(0, 0, 0);
+        assert_eq!(b0.len(), 1);
+        assert_eq!(b0[0].id, 0);
+        // waves of 2 then the trailing partial wave of 1, same every run
+        let b1 = sq.pop_batch(0, 2, 0);
+        assert_eq!(b1.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 2]);
+        let b2 = sq.pop_batch(0, 2, 0);
+        assert_eq!(b2.iter().map(|q| q.id).collect::<Vec<_>>(), vec![3, 4]);
+        let b3 = sq.pop_batch(0, 2, 0);
+        assert!(b3.is_empty(), "drained queue pops an empty batch");
+    }
+
+    #[test]
+    fn eligibility_mask_tracks_best_effective_class() {
+        let mut sq = SchedQueue::new(3, 0);
+        assert!(sq.admit(q(0, 0, 1, 0, None)));
+        assert!(sq.admit(q(1, 0, 0, 0, None)));
+        assert!(sq.admit(q(2, 0, 1, 0, None)));
+        assert_eq!(sq.best_class(0), Some(0));
+        assert_eq!(sq.eligible_mask(3, 0), vec![false, true, false]);
+        let b = sq.pop_batch(1, 1, 0);
+        assert_eq!(b.len(), 1);
+        sq.complete(1, 1);
+        assert_eq!(sq.best_class(0), Some(1));
+        assert_eq!(sq.eligible_mask(3, 0), vec![true, false, true]);
+    }
+}

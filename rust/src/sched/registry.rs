@@ -1,0 +1,405 @@
+//! Model registry — multi-model residency over the circuit-keyed pool.
+//!
+//! The registry owns the platform's resident models. For each tenant it
+//! holds the shared weights, the tenant's [`CircuitKey`] (whose `model`
+//! field **is** the tenant id — the keyed pool of `pool/mat.rs` shards by
+//! it, so tenant A's pre-generated correlations are unreachable under
+//! tenant B's key and a cross-tenant pop fails closed), and a private
+//! background-[`Refill`] producer with that tenant's water marks. The
+//! serving engine interleaves refill ticks **per tenant** between waves,
+//! steered to the most-depleted pool ([`ModelRegistry::most_depleted`]).
+//!
+//! Loading is a lockstep protocol step: every party calls
+//! [`ModelRegistry::load`] in the same tenant order, the model owner (P1)
+//! contributing the weight values, and the sharing is verified before any
+//! pool material is generated against it. All registry state that steers
+//! scheduling (keys, marks, stock levels) is public and identical at the
+//! four parties.
+
+use crate::crypto::Rng;
+use crate::ml::{share_fixed_mat, F64Mat};
+use crate::net::{Abort, P1, P2};
+use crate::pool::{fill_mat, CircuitKey, OpKind, Refill, RefillOutcome, WaterMarks};
+use crate::proto::Ctx;
+use crate::ring::fixed::FRAC_BITS;
+use crate::ring::Z64;
+use crate::sharing::MMat;
+
+/// Domain separator for per-tenant resident weights.
+const TW_SEED: u64 = 0x7363_6864_5f77_3174;
+
+/// One tenant of the serving platform: a resident model plus its traffic
+/// contract. Everything here is public schedule metadata, identical at all
+/// four parties.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Human-readable tenant/model name (CLI `--models m1,m2`).
+    pub name: String,
+    /// Resident-model id — becomes `CircuitKey::model`, sharding the
+    /// pooled offline material per tenant.
+    pub model: u64,
+    /// Feature count of the tenant's linear model.
+    pub d: usize,
+    /// Rows per query (client-side mini-batch).
+    pub rows_per_query: usize,
+    /// Queries this tenant submits in the workload.
+    pub queries: usize,
+    /// Max queries coalesced into one of this tenant's waves.
+    pub coalesce: usize,
+    /// Weighted-round-robin share.
+    pub weight: u64,
+    /// Priority class of this tenant's queries (0 = highest).
+    pub class: u8,
+    /// Relative deadline in logical ticks (`None` = no deadline).
+    pub deadline_ticks: Option<u64>,
+    /// Admission-control cap on admitted-but-unanswered queries
+    /// (`None` = uncapped).
+    pub inflight_cap: Option<usize>,
+    /// Arrivals per logical tick (0 = the whole workload arrives at tick 0).
+    pub arrive_per_tick: usize,
+    /// Apply a batched ReLU after the linear layer.
+    pub relu: bool,
+    /// Seed for this tenant's deterministic weights/queries.
+    pub seed: u64,
+}
+
+impl TenantSpec {
+    /// A small default contract: weight 1, class 0, no deadline, no cap.
+    pub fn new(name: &str, model: u64, d: usize, queries: usize, coalesce: usize) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            model,
+            d,
+            rows_per_query: 1,
+            queries,
+            coalesce,
+            weight: 1,
+            class: 0,
+            deadline_ticks: None,
+            inflight_cap: None,
+            arrive_per_tick: 0,
+            relu: false,
+            seed: 0x7465_6e61 ^ model,
+        }
+    }
+
+    /// The coalescing factor real waves can reach (`coalesce` capped by the
+    /// workload, 0 guarded as 1) — the registered key must match a wave the
+    /// tenant can actually produce.
+    pub fn effective_coalesce(&self) -> usize {
+        self.coalesce.max(1).min(self.queries.max(1))
+    }
+
+    /// Stacked rows of one full coalesced wave.
+    pub fn wave_rows(&self) -> usize {
+        self.effective_coalesce() * self.rows_per_query
+    }
+
+    /// The circuit key of this tenant's resident linear layer for a full
+    /// coalesced wave (the key the registry registers and refills).
+    pub fn key(&self) -> CircuitKey {
+        tenant_wave_key(self, self.wave_rows())
+    }
+
+    /// Arrival tick of query `id` under this tenant's arrival plan.
+    pub fn arrival_tick(&self, id: usize) -> u64 {
+        if self.arrive_per_tick == 0 {
+            0
+        } else {
+            (id / self.arrive_per_tick) as u64
+        }
+    }
+}
+
+/// The circuit key of tenant `spec`'s linear layer for a wave of `rows`
+/// stacked feature rows (a trailing partial wave keys differently from
+/// [`TenantSpec::key`] and falls back inline).
+pub fn tenant_wave_key(spec: &TenantSpec, rows: usize) -> CircuitKey {
+    CircuitKey {
+        model: spec.model,
+        layer: 0,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows,
+        inner: spec.d,
+        cols: 1,
+        dealer: P2,
+    }
+}
+
+/// Deterministic resident weights for a tenant (at the model owner).
+pub fn tenant_weights(d: usize, seed: u64) -> F64Mat {
+    let mut rng = Rng::seeded(seed ^ TW_SEED);
+    let mut w = F64Mat::zeros(d, 1);
+    for j in 0..d {
+        w.set(j, 0, rng.normal() * 0.1);
+    }
+    w
+}
+
+/// One loaded resident model: spec + shared weights + registered key +
+/// private refill producer.
+pub struct ResidentModel {
+    pub spec: TenantSpec,
+    /// The tenant's shared resident weights (`d × 1`).
+    pub w: MMat<Z64>,
+    /// The registered full-wave circuit key.
+    pub key: CircuitKey,
+    marks: WaterMarks,
+    refill: Refill,
+}
+
+impl ResidentModel {
+    /// The refill water marks this tenant was registered with (high is
+    /// clamped to the tenant's total full-wave demand at load).
+    pub fn marks(&self) -> WaterMarks {
+        self.marks
+    }
+}
+
+/// Registry of resident models (see the module docs).
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Vec<ResidentModel>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn model(&self, t: usize) -> &ResidentModel {
+        &self.models[t]
+    }
+
+    /// Tenant weights for the wave planner, registry order.
+    pub fn planner_weights(&self) -> Vec<u64> {
+        self.models.iter().map(|m| m.spec.weight).collect()
+    }
+
+    /// Load one resident model (lockstep at all four parties, same tenant
+    /// order everywhere): P1 contributes the deterministic weights, and the
+    /// tenant's full-wave circuit key is registered with a private refill
+    /// producer at `{low, high}` water marks (keyed-matrix bundles; plus
+    /// scaled bit-extraction material when the tenant's pipeline ends in a
+    /// ReLU). Returns the tenant index. The caller must flush verification
+    /// after the last `load`, before any pool fill runs against the
+    /// weights.
+    pub fn load(
+        &mut self,
+        ctx: &mut Ctx,
+        spec: TenantSpec,
+        low_water: usize,
+        high_water: usize,
+    ) -> Result<usize, Abort> {
+        // the model id IS the pool shard: two tenants sharing one id would
+        // file correlations generated against different resident weights
+        // into one keyed queue, and the embedded-key fail-closed check
+        // could no longer tell them apart — reject at load, loudly
+        assert!(
+            self.models.iter().all(|m| m.spec.model != spec.model),
+            "duplicate tenant model id {}: per-tenant pool sharding requires a unique CircuitKey::model per resident model",
+            spec.model
+        );
+        let w0 = (ctx.id() == P1).then(|| tenant_weights(spec.d, spec.seed));
+        let w = share_fixed_mat(ctx, P1, w0.as_ref(), spec.d, 1)?;
+        let key = spec.key();
+        // clamp the high-water mark to the tenant's total full-wave demand
+        // so neither the warm-up fill nor a steady-state top-up can stock
+        // more bundles than real waves will ever pop (a partial trailing
+        // wave keys differently and consumes nothing)
+        let total_full_waves = spec.queries.max(1) / spec.effective_coalesce();
+        let high = high_water.max(1).min(total_full_waves.max(1));
+        let marks = WaterMarks::new(low_water.min(high), high);
+        // keyed matrix bundles are filled by [`ModelRegistry::tick`] itself
+        // (so the top-up can be capped by remaining demand); the private
+        // Refill producer carries only the tenant's shapeless material
+        // (bit-extraction masks + λ for a ReLU pipeline)
+        let mut refill = Refill::new();
+        if spec.relu {
+            let rows = spec.wave_rows();
+            refill.register_bitext(WaterMarks::new(marks.low * rows, marks.high * rows));
+            refill.register_lam(marks);
+        }
+        self.models.push(ResidentModel { spec, w, key, marks, refill });
+        Ok(self.models.len() - 1)
+    }
+
+    /// One cooperative refill step for tenant `t`'s pool targets (lockstep;
+    /// offline-phase traffic only — see [`crate::pool::refill`]). The keyed
+    /// top-up follows the refill state machine (`stock < low` → fill
+    /// towards `high`) but never stocks more than `max_mat` bundles — the
+    /// caller passes the tenant's remaining full-wave demand, so a
+    /// late-run tick cannot strand material a trailing partial wave would
+    /// never pop. `max_mat` is public schedule state, identical at all
+    /// four parties.
+    pub fn tick(
+        &self,
+        ctx: &mut Ctx,
+        t: usize,
+        max_mat: usize,
+    ) -> Result<RefillOutcome, Abort> {
+        let m = &self.models[t];
+        let mut out = RefillOutcome::default();
+        let stock = ctx.pool.as_ref().map_or(0, |p| p.len_mat(&m.key));
+        if stock < m.marks.low {
+            let need = (m.marks.high - stock).min(max_mat.saturating_sub(stock));
+            if need > 0 {
+                fill_mat(ctx, m.key, &m.w, need)?;
+                out.mat_items = need;
+            }
+        }
+        let rest = m.refill.tick(ctx)?;
+        out.trunc_pairs = rest.trunc_pairs;
+        out.lam = rest.lam;
+        out.bitext = rest.bitext;
+        Ok(out)
+    }
+
+    /// The most-depleted tenant pool among `eligible` tenants: largest
+    /// keyed-bundle deficit **below the tenant's low-water mark** — i.e.
+    /// the tenant whose next refill tick will actually fill (a tick on a
+    /// pool at or above low is a no-op by the refill state machine, so
+    /// picking one would waste the between-waves slot). Ties go to the
+    /// lowest tenant index; `None` when no eligible pool is below low.
+    /// Deterministic — stock levels are lockstep state.
+    pub fn most_depleted(&self, ctx: &Ctx, eligible: &[bool]) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (deficit, tenant)
+        for (t, m) in self.models.iter().enumerate() {
+            if !eligible.get(t).copied().unwrap_or(false) {
+                continue;
+            }
+            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_mat(&m.key));
+            let deficit = m.marks.low.saturating_sub(stock);
+            if deficit == 0 {
+                continue;
+            }
+            match best {
+                Some((d, _)) if d >= deficit => {}
+                _ => best = Some((deficit, t)),
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetProfile;
+    use crate::pool::Pool;
+    use crate::proto::run_4pc;
+
+    fn spec(name: &str, model: u64, d: usize) -> TenantSpec {
+        TenantSpec::new(name, model, d, 4, 2)
+    }
+
+    #[test]
+    fn keys_are_sharded_by_tenant_model_id() {
+        let a = spec("m1", 11, 4);
+        let b = spec("m2", 22, 4);
+        assert_ne!(a.key(), b.key(), "same shape, different tenant → different key");
+        assert_eq!(a.key().model, 11);
+        assert_eq!(b.key().model, 22);
+    }
+
+    #[test]
+    fn effective_coalesce_guards_zero_and_oversize() {
+        let mut s = spec("m", 1, 4);
+        s.coalesce = 0;
+        assert_eq!(s.effective_coalesce(), 1, "coalesce 0 treated as 1");
+        s.coalesce = 99;
+        assert_eq!(s.effective_coalesce(), s.queries, "capped by the workload");
+    }
+
+    #[test]
+    fn arrival_plan_is_deterministic() {
+        let mut s = spec("m", 1, 4);
+        assert_eq!(s.arrival_tick(3), 0, "burst plan: everything at tick 0");
+        s.arrive_per_tick = 2;
+        assert_eq!(
+            (0..6).map(|i| s.arrival_tick(i)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1, 2, 2]
+        );
+    }
+
+    #[test]
+    fn registry_rejects_duplicate_model_ids() {
+        // the assert fires inside every party thread (same public spec at
+        // all four), so each thread dies before any protocol message and
+        // the cluster reports four dead parties
+        let run = run_4pc(NetProfile::zero(), 911, |ctx| {
+            let mut reg = ModelRegistry::new();
+            reg.load(ctx, spec("m1", 7, 3), 1, 2)?;
+            // same model id with different weights/seed: must fail fast at
+            // load instead of silently sharing one pool shard
+            reg.load(ctx, TenantSpec::new("m1-again", 7, 3, 4, 2), 1, 2)?;
+            Ok(())
+        });
+        assert!(run.all_aborted(), "duplicate model id must refuse to load");
+    }
+
+    #[test]
+    fn high_water_is_clamped_to_total_full_wave_demand() {
+        let run = run_4pc(NetProfile::zero(), 912, |ctx| {
+            let mut reg = ModelRegistry::new();
+            // 4 queries at coalesce 2 = 2 full waves, but high-water 5:
+            // stocking 5 bundles would strand 3 — the registry clamps
+            let t = reg.load(ctx, spec("m1", 11, 3), 1, 5)?;
+            ctx.flush_verify()?;
+            Ok(reg.model(t).marks())
+        });
+        let (outs, _) = run.expect_ok();
+        for m in &outs {
+            assert_eq!(m.high, 2, "high clamped to the 2 poppable full waves");
+            assert_eq!(m.low, 1);
+        }
+    }
+
+    #[test]
+    fn registry_loads_tenants_and_steers_refill_to_the_most_depleted_pool() {
+        let run = run_4pc(NetProfile::zero(), 910, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let ta = reg.load(ctx, spec("m1", 11, 3), 1, 2)?;
+            let tb = reg.load(ctx, spec("m2", 22, 3), 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            // both pools empty, both eligible: deficit ties → lowest index
+            assert_eq!(reg.most_depleted(ctx, &[true, true]), Some(ta));
+            let o = reg.tick(ctx, ta, 8)?;
+            assert_eq!(o.mat_items, 2, "cold pool fills to high");
+            // tenant A full: B is now the most depleted
+            assert_eq!(reg.most_depleted(ctx, &[true, true]), Some(tb));
+            // … unless B is ineligible
+            assert_eq!(reg.most_depleted(ctx, &[true, false]), None);
+            // a demand cap below the water marks bounds the top-up
+            let o = reg.tick(ctx, tb, 1)?;
+            assert_eq!(o.mat_items, 1, "top-up capped by remaining demand");
+            let o = reg.tick(ctx, tb, 8)?;
+            assert_eq!(o.mat_items, 0, "stock 1 is at low water: no refill");
+            let _ = ctx.pool_mut().unwrap().pop_mat(&reg.model(tb).key).unwrap();
+            let o = reg.tick(ctx, tb, 8)?;
+            assert_eq!(o.mat_items, 2, "uncapped refill tops back up to high");
+            assert_eq!(reg.most_depleted(ctx, &[true, true]), None, "both full");
+            let pool = ctx.detach_pool().unwrap();
+            Ok((
+                pool.len_mat(&reg.model(ta).key),
+                pool.len_mat(&reg.model(tb).key),
+            ))
+        });
+        let (outs, report) = run.expect_ok();
+        for (a, b) in &outs {
+            assert_eq!(*a, 2);
+            assert_eq!(*b, 2);
+        }
+        // registry loading + refill generation is offline-silent online
+        assert!(report.value_bits[0] > 0, "fills are offline traffic");
+    }
+}

@@ -41,6 +41,21 @@
 //! ReLU); reconstruct towards the data owner with the batched verification
 //! digests flushed — every response is verified before release. Rounds per
 //! batch are independent of how many queries were coalesced.
+//!
+//! ## Multi-tenant serving
+//!
+//! [`multi`] lifts this engine to N resident models behind one cluster:
+//! the [`crate::sched`] subsystem (model registry with per-tenant keyed
+//! pools, deadline/priority queue, weighted-round-robin wave planner with
+//! most-depleted refill steering) decides whose wave runs next, and each
+//! wave executes the per-model pipeline above.
+
+pub mod multi;
+
+pub use multi::{
+    cleartext_tenant_predictions, serve_multi, tenant_query_stream, MultiServeConfig,
+    MultiServeStats, TenantServeStats,
+};
 
 use std::collections::VecDeque;
 
@@ -69,6 +84,12 @@ pub struct Query {
 
 /// FIFO request queue with cross-request coalescing: `next_batch` drains up
 /// to `coalesce` pending queries into one protocol-level batch.
+///
+/// This is the single-tenant edge. The multi-tenant path
+/// ([`multi::serve_multi`]) replaces it with the deadline/priority-aware
+/// [`crate::sched::SchedQueue`] (priority classes, EDF, aging, admission
+/// control); both guard `coalesce == 0` as 1 and pop a deterministic
+/// trailing partial batch.
 pub struct RequestQueue {
     pending: VecDeque<Query>,
     coalesce: usize,
@@ -634,5 +655,33 @@ mod tests {
         assert_eq!(q.next_batch().unwrap().len(), 1);
         assert!(q.next_batch().is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn request_queue_guards_coalesce_zero_and_pops_deterministic_trailing_batch() {
+        // coalesce 0 must behave as 1, not drain nothing / divide by zero
+        let mut q = RequestQueue::new(0);
+        for id in 0..2 {
+            q.push(Query { id, rows: 1, x: None });
+        }
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id, 0);
+        assert_eq!(q.next_batch().unwrap()[0].id, 1);
+        assert!(q.next_batch().is_none());
+        // a coalesce-0 ServeConfig registers the 1-query wave key, so real
+        // waves still hit the pool instead of always falling back inline
+        let c = ServeConfig { coalesce: 0, queries: 2, ..ServeConfig::default() };
+        assert_eq!(model_key(&c).rows, c.rows_per_query);
+        // trailing partial batch: 5 queries at coalesce 2 always pop as
+        // [0,1], [2,3], [4] — byte-for-byte the same schedule every run
+        let mut q = RequestQueue::new(2);
+        for id in 0..5 {
+            q.push(Query { id, rows: 1, x: None });
+        }
+        let ids: Vec<Vec<usize>> = std::iter::from_fn(|| q.next_batch())
+            .map(|b| b.iter().map(|q| q.id).collect())
+            .collect();
+        assert_eq!(ids, vec![vec![0, 1], vec![2, 3], vec![4]]);
     }
 }

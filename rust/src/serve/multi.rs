@@ -1,0 +1,694 @@
+//! Multi-tenant serving engine — N resident models behind one four-party
+//! cluster, scheduled by the [`crate::sched`] subsystem.
+//!
+//! The single-tenant engine (`serve::serve`) runs one model, one keyed
+//! pool, one FIFO queue. This engine runs one **engine instance per
+//! resident model** over shared parties: the [`ModelRegistry`] loads every
+//! tenant's weights and registers a per-tenant [`CircuitKey`] (the keyed
+//! pool shards by the key's `model` field, so tenant material never
+//! crosses — a wrong-tenant pop fails closed); the [`SchedQueue`] admits
+//! tenant-tagged queries under per-tenant in-flight caps and orders them
+//! by priority class + EDF with aging; the [`WavePlanner`] grants waves by
+//! weighted round-robin across the tenants eligible at the best class;
+//! and between waves one refill tick tops up the **most-depleted** tenant
+//! pool that can still consume a full wave.
+//!
+//! Everything the scheduler decides is driven by logical ticks and public
+//! metadata — lockstep-deterministic across the four party threads (the
+//! [`crate::sched`] module docs explain why wall-clock is banned here).
+//! Per-wave protocol execution is exactly the single-tenant path: stack
+//! the batch, one `Π_MatMulTr` against that tenant's resident weights
+//! (keyed bundle on a hit, deterministic inline fallback on a miss or a
+//! trailing partial wave), optional batched ReLU, verified reconstruction
+//! towards the data owner.
+//!
+//! Scope note: keyed matrix bundles are tenant-sharded; bit-extraction
+//! masks (`relu: true` tenants) are input- and position-independent
+//! material and stay in the shared typed queue, topped up by whichever
+//! tenant's refill tick runs — sharing them leaks nothing and wastes
+//! nothing.
+
+use crate::crypto::Rng;
+use crate::ml::{share_fixed_mat, F64Mat};
+use crate::net::{Abort, NetProfile, NetReport, Phase, P2};
+use crate::pool::{Pool, PoolStats};
+use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
+use crate::ring::fixed::FixedPoint;
+use crate::ring::{Matrix, Z64};
+use crate::sched::{
+    tenant_wave_key, tenant_weights, ModelRegistry, SchedQueue, SchedQueueStats, SchedQuery,
+    TenantSpec, WavePlanner,
+};
+use crate::sharing::MMat;
+
+use super::PoolMode;
+
+/// Domain separator for per-tenant query streams.
+const TQ_SEED: u64 = 0x7363_6864_5f71_3174;
+
+/// Multi-tenant serving workload.
+#[derive(Clone, Debug)]
+pub struct MultiServeConfig {
+    pub tenants: Vec<TenantSpec>,
+    /// `Inline` (seed-style per-wave offline) or `Keyed` (per-tenant
+    /// circuit-keyed pools). `Scalar` is not meaningful per tenant.
+    pub mode: PoolMode,
+    /// Per-tenant refill low-water mark, in full-wave keyed bundles.
+    pub low_water: usize,
+    /// Per-tenant refill high-water mark, same units.
+    pub high_water: usize,
+    /// Aging rule: promote a waiting query one priority class per this
+    /// many ticks (0 = off). See [`crate::sched::queue`].
+    pub age_every: u64,
+    pub seed: u64,
+}
+
+impl Default for MultiServeConfig {
+    fn default() -> MultiServeConfig {
+        MultiServeConfig {
+            tenants: Vec::new(),
+            mode: PoolMode::Keyed,
+            low_water: 1,
+            high_water: 2,
+            age_every: 4,
+            seed: 1234,
+        }
+    }
+}
+
+/// Deterministic query stream for one tenant (at the data owner).
+pub fn tenant_query_stream(spec: &TenantSpec) -> Vec<F64Mat> {
+    let mut rng = Rng::seeded(spec.seed ^ TQ_SEED);
+    (0..spec.queries)
+        .map(|_| {
+            let mut x = F64Mat::zeros(spec.rows_per_query, spec.d);
+            for r in 0..spec.rows_per_query {
+                for c in 0..spec.d {
+                    x.set(r, c, rng.normal());
+                }
+            }
+            x
+        })
+        .collect()
+}
+
+/// Cleartext reference per tenant: one `Vec<f64>` of row predictions per
+/// query, in query-id order (test oracle).
+pub fn cleartext_tenant_predictions(spec: &TenantSpec) -> Vec<Vec<f64>> {
+    let w = tenant_weights(spec.d, spec.seed);
+    tenant_query_stream(spec)
+        .iter()
+        .map(|x| {
+            let u = x.matmul(&w);
+            (0..spec.rows_per_query)
+                .map(|r| {
+                    let v = u.at(r, 0);
+                    if spec.relu && v < 0.0 {
+                        0.0
+                    } else {
+                        v
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-party output of one multi-tenant run (internal).
+struct MultiPartyOut {
+    /// Tenant served per wave, wave order (identical at all parties).
+    wave_tenant: Vec<usize>,
+    /// Per-wave online virtual-time delta (this party).
+    wave_lat: Vec<f64>,
+    wave_rounds: Vec<u64>,
+    /// Offline messages/bytes *this party* sent inside the wave window.
+    wave_offline_msgs: Vec<u64>,
+    wave_offline_bytes: Vec<u64>,
+    /// Whether the wave drained a keyed bundle (vs inline fallback).
+    wave_keyed_hit: Vec<bool>,
+    /// `(query id, sojourn ticks)` per query of each wave.
+    wave_sojourn: Vec<Vec<(usize, u64)>>,
+    /// Refill ticks / keyed bundles generated, per tenant.
+    refill_ticks: Vec<usize>,
+    refill_mat_items: Vec<usize>,
+    /// Online messages sent inside refill ticks (must stay 0).
+    tick_online_msgs: u64,
+    /// Logical ticks the loop ran for.
+    ticks: u64,
+    /// Decoded predictions per tenant (`(query id, row values)`), at the
+    /// data owner only.
+    answers: Vec<Vec<(usize, Vec<f64>)>>,
+    queue_stats: SchedQueueStats,
+    pool_stats: Option<PoolStats>,
+    pool_left_mat: Vec<usize>,
+}
+
+impl MultiPartyOut {
+    fn new(nt: usize) -> MultiPartyOut {
+        MultiPartyOut {
+            wave_tenant: Vec::new(),
+            wave_lat: Vec::new(),
+            wave_rounds: Vec::new(),
+            wave_offline_msgs: Vec::new(),
+            wave_offline_bytes: Vec::new(),
+            wave_keyed_hit: Vec::new(),
+            wave_sojourn: Vec::new(),
+            refill_ticks: vec![0; nt],
+            refill_mat_items: vec![0; nt],
+            tick_online_msgs: 0,
+            ticks: 0,
+            answers: vec![Vec::new(); nt],
+            queue_stats: SchedQueueStats::default(),
+            pool_stats: None,
+            pool_left_mat: vec![0; nt],
+        }
+    }
+}
+
+/// Aggregated per-tenant serving measurements.
+#[derive(Clone, Debug)]
+pub struct TenantServeStats {
+    pub name: String,
+    /// Queries offered / accepted / shed by admission control / answered /
+    /// dropped past deadline.
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub served: usize,
+    pub expired: usize,
+    /// Waves granted to this tenant, and how they sourced their offline
+    /// material (keyed-pool hit vs deterministic inline fallback).
+    pub waves: usize,
+    pub keyed_waves: usize,
+    pub inline_waves: usize,
+    /// Per-query online wave latency percentiles (virtual seconds; every
+    /// query in a wave experiences that wave's latency).
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Queueing delay in logical ticks (admission → service start).
+    pub mean_sojourn_ticks: f64,
+    pub max_sojourn_ticks: u64,
+    /// Offline-phase messages any party sent inside this tenant's wave
+    /// windows (0 for warm keyed pools).
+    pub offline_msgs_in_waves: u64,
+    pub refill_ticks: usize,
+    pub refill_mat_items: usize,
+    /// Keyed bundles left under this tenant's key at shutdown.
+    pub pool_left_mat: usize,
+    /// Decoded predictions (`(query id, row values)`), query-id order, as
+    /// seen by the data owner.
+    pub answers: Vec<(usize, Vec<f64>)>,
+}
+
+/// Aggregated measurements of a multi-tenant run.
+#[derive(Clone, Debug)]
+pub struct MultiServeStats {
+    pub tenants: Vec<TenantServeStats>,
+    /// Total waves served, and the tenant of each wave in order (the
+    /// planner's grant sequence — share-split assertions read this).
+    pub waves: usize,
+    pub wave_tenants: Vec<usize>,
+    /// Online round cost of each wave (independent of how many queries the
+    /// wave coalesced — the single-query shape, per tenant model).
+    pub wave_rounds: Vec<u64>,
+    /// Offline messages sent by any party inside each wave window.
+    pub wave_offline_msgs: Vec<u64>,
+    /// Logical ticks the scheduler ran for.
+    pub ticks: u64,
+    pub online_rounds: u64,
+    /// Summed per-wave online latency (max across parties per wave).
+    pub online_latency: f64,
+    pub offline_msgs_in_waves: u64,
+    pub offline_bytes_in_waves: u64,
+    /// Online messages inside refill ticks, summed over parties (must be 0).
+    pub refill_online_msgs: u64,
+    /// Pops where aging lifted an older lower-priority query (queue stat).
+    pub aged_promotions: u64,
+    pub pool_stats: Option<PoolStats>,
+    pub report: NetReport,
+}
+
+/// Nearest-rank percentile of an unsorted sample (`p` in `[0, 1]`).
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let idx = ((v.len() - 1) as f64 * p).round() as usize;
+    v[idx]
+}
+
+/// One metered refill tick for tenant `t`, with the keyed top-up capped at
+/// `max_mat` bundles — the tenant's remaining full-wave demand (refill
+/// traffic must be offline-phase only; the online-message window check
+/// pins that down).
+fn tick_tenant(
+    ctx: &mut Ctx,
+    reg: &ModelRegistry,
+    out: &mut MultiPartyOut,
+    t: usize,
+    max_mat: usize,
+) -> Result<(), Abort> {
+    let m0 = ctx.net.sent_msgs(Phase::Online);
+    let o = reg.tick(ctx, t, max_mat)?;
+    out.tick_online_msgs += ctx.net.sent_msgs(Phase::Online) - m0;
+    out.refill_ticks[t] += 1;
+    out.refill_mat_items[t] += o.mat_items;
+    Ok(())
+}
+
+/// The per-party multi-tenant serving program.
+fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiPartyOut, Abort> {
+    let nt = cfg.tenants.len();
+    assert!(nt > 0, "serve_multi needs at least one tenant");
+    assert!(
+        cfg.mode != PoolMode::Scalar,
+        "multi-tenant serving shards keyed material per tenant; use Inline or Keyed"
+    );
+    let keyed = cfg.mode == PoolMode::Keyed;
+
+    // ---- model load: registry shares every tenant's weights (lockstep
+    // tenant order), verified before any pool material is generated ----
+    let mut reg = ModelRegistry::new();
+    for spec in &cfg.tenants {
+        reg.load(ctx, spec.clone(), cfg.low_water, cfg.high_water)?;
+    }
+    ctx.flush_verify()?;
+
+    let mut out = MultiPartyOut::new(nt);
+    if keyed {
+        ctx.attach_pool(Pool::new());
+        // warm-up: stock every tenant's pool before the first wave (the
+        // top-up is capped by the tenant's total full-wave demand)
+        for t in 0..nt {
+            let s = &cfg.tenants[t];
+            tick_tenant(ctx, &reg, &mut out, t, s.queries / s.effective_coalesce())?;
+        }
+    }
+
+    // ---- admission edge: queue + per-tenant caps + arrival plan ----
+    let mut queue = SchedQueue::new(nt, cfg.age_every);
+    for (t, spec) in cfg.tenants.iter().enumerate() {
+        if let Some(cap) = spec.inflight_cap {
+            queue.set_cap(t, cap);
+        }
+    }
+    let streams: Option<Vec<Vec<F64Mat>>> =
+        (ctx.id() == P2).then(|| cfg.tenants.iter().map(tenant_query_stream).collect());
+    let mut next_q = vec![0usize; nt];
+
+    // ---- scheduling loop, measured in isolation ----
+    ctx.net.reset_clocks();
+    let mut planner = WavePlanner::new(&reg.planner_weights());
+    let mut now: u64 = 0;
+    loop {
+        // 1. arrivals due at this tick enter admission control
+        for t in 0..nt {
+            let spec = &cfg.tenants[t];
+            while next_q[t] < spec.queries && spec.arrival_tick(next_q[t]) <= now {
+                let id = next_q[t];
+                let arrival = spec.arrival_tick(id);
+                queue.admit(SchedQuery {
+                    tenant: t,
+                    id,
+                    rows: spec.rows_per_query,
+                    class: spec.class,
+                    arrival,
+                    deadline: spec.deadline_ticks.map(|dl| arrival + dl),
+                    x: streams.as_ref().map(|s| s[t][id].clone()),
+                });
+                next_q[t] += 1;
+            }
+        }
+        // 2. expiry sweep: past-deadline queries are counted, never served
+        queue.expire(now);
+        // 3. termination
+        let arrivals_done = (0..nt).all(|t| next_q[t] >= cfg.tenants[t].queries);
+        if queue.is_empty() && arrivals_done {
+            break;
+        }
+        // 4. grant the wave: WRR across tenants eligible at the best class
+        let elig = queue.eligible_mask(nt, now);
+        let t = match planner.next(&elig) {
+            Some(t) => t,
+            None => {
+                // backlog empty, arrivals still due later: idle tick
+                now += 1;
+                continue;
+            }
+        };
+        let spec = &cfg.tenants[t];
+        let batch = queue.pop_batch(t, spec.effective_coalesce(), now);
+        debug_assert!(!batch.is_empty(), "an eligible tenant must yield a batch");
+
+        // 5. run the tenant's wave (the single-tenant pipeline, per model)
+        let rows: usize = batch.iter().map(|q| q.rows).sum();
+        let t0 = ctx.net.clock(Phase::Online);
+        let r0 = ctx.net.rounds(Phase::Online);
+        let om0 = ctx.net.sent_msgs(Phase::Offline);
+        let ob0 = ctx.net.sent_bytes(Phase::Offline);
+        let h0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits);
+
+        let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
+            let mut m = F64Mat::zeros(rows, spec.d);
+            let mut row = 0;
+            for q in &batch {
+                let x = q.x.as_ref().expect("data owner holds query rows");
+                for r in 0..q.rows {
+                    for c in 0..spec.d {
+                        m.set(row, c, x.at(r, c));
+                    }
+                    row += 1;
+                }
+            }
+            m
+        });
+        let w = &reg.model(t).w;
+        let mut u = if keyed {
+            let key = tenant_wave_key(spec, rows);
+            let x_enc: Option<Matrix<Z64>> = stacked.as_ref().map(F64Mat::encode);
+            let (_x, u) = matmul_tr_keyed(ctx, &key, x_enc.as_ref(), w)?;
+            u
+        } else {
+            let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
+            matmul_tr(ctx, &x_sh, w)?
+        };
+        if spec.relu {
+            let (r, _) = crate::ml::relu_many(ctx, &u.to_shares())?;
+            u = MMat::from_shares(rows, 1, &r);
+        }
+        let opened =
+            crate::proto::reconstruct::reconstruct_to_many(ctx, &u.to_shares(), &[P2])?;
+        if let Some(vals) = opened {
+            let mut off = 0;
+            for q in &batch {
+                let a: Vec<f64> =
+                    vals[off..off + q.rows].iter().map(|&v| FixedPoint::decode(v)).collect();
+                out.answers[t].push((q.id, a));
+                off += q.rows;
+            }
+        }
+
+        out.wave_tenant.push(t);
+        out.wave_lat.push(ctx.net.clock(Phase::Online) - t0);
+        out.wave_rounds.push(ctx.net.rounds(Phase::Online) - r0);
+        out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
+        out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
+        out.wave_keyed_hit
+            .push(ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits) > h0);
+        out.wave_sojourn
+            .push(batch.iter().map(|q| (q.id, now - q.arrival)).collect());
+        queue.complete(t, batch.len());
+
+        // 6. between waves: one refill tick for the most-depleted tenant
+        // pool that can still consume a full wave; the tick's top-up is
+        // capped at the tenant's remaining full-wave demand, so a late-run
+        // refill can never stock a bundle the trailing partial wave (which
+        // keys differently) would strand — only deadline expiry can still
+        // orphan stocked material
+        if keyed {
+            let remaining_waves: Vec<usize> = (0..nt)
+                .map(|tt| {
+                    let s = &cfg.tenants[tt];
+                    let remaining = (s.queries - next_q[tt]) + queue.pending_tenant(tt);
+                    remaining / s.effective_coalesce()
+                })
+                .collect();
+            let can_consume: Vec<bool> = remaining_waves.iter().map(|&w| w >= 1).collect();
+            if let Some(tt) = reg.most_depleted(ctx, &can_consume) {
+                tick_tenant(ctx, &reg, &mut out, tt, remaining_waves[tt])?;
+            }
+        }
+        now += 1;
+    }
+    out.ticks = now;
+
+    if let Some(pool) = ctx.detach_pool() {
+        out.pool_stats = Some(pool.stats());
+        for t in 0..nt {
+            out.pool_left_mat[t] = pool.len_mat(&reg.model(t).key);
+        }
+    }
+    out.queue_stats = queue.stats().clone();
+    Ok(out)
+}
+
+/// Run the multi-tenant workload over `profile` and aggregate per-tenant
+/// measurements.
+pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStats {
+    let cfg2 = cfg.clone();
+    let run = run_4pc(profile, cfg.seed, move |ctx| serve_multi_party(ctx, &cfg2));
+    let (outs, report) = run.expect_ok();
+    let nt = cfg.tenants.len();
+    let waves = outs[1].wave_tenant.len();
+
+    // per-wave latency is the max across parties; per-wave offline traffic
+    // is summed over the parties' local sent counters (race-free)
+    let wave_lat: Vec<f64> = (0..waves)
+        .map(|i| outs.iter().map(|o| o.wave_lat[i]).fold(0.0f64, f64::max))
+        .collect();
+    let wave_off_msgs: Vec<u64> =
+        (0..waves).map(|i| outs.iter().map(|o| o.wave_offline_msgs[i]).sum()).collect();
+    let wave_off_bytes: Vec<u64> =
+        (0..waves).map(|i| outs.iter().map(|o| o.wave_offline_bytes[i]).sum()).collect();
+    let qs = &outs[1].queue_stats;
+
+    let mut tenants = Vec::with_capacity(nt);
+    for t in 0..nt {
+        let spec = &cfg.tenants[t];
+        let mut lats: Vec<f64> = Vec::new();
+        let mut sojourns: Vec<u64> = Vec::new();
+        let (mut waves_t, mut keyed_waves, mut inline_waves) = (0usize, 0usize, 0usize);
+        let mut offm = 0u64;
+        for i in 0..waves {
+            if outs[1].wave_tenant[i] != t {
+                continue;
+            }
+            waves_t += 1;
+            if outs[1].wave_keyed_hit[i] {
+                keyed_waves += 1;
+            } else {
+                inline_waves += 1;
+            }
+            offm += wave_off_msgs[i];
+            for &(_qid, so) in &outs[1].wave_sojourn[i] {
+                sojourns.push(so);
+                lats.push(wave_lat[i]);
+            }
+        }
+        let mut answers = outs[2].answers[t].clone();
+        answers.sort_by_key(|(id, _)| *id);
+        tenants.push(TenantServeStats {
+            name: spec.name.clone(),
+            submitted: qs.submitted[t],
+            admitted: qs.admitted[t],
+            rejected: qs.rejected[t],
+            served: qs.served[t],
+            expired: qs.expired[t],
+            waves: waves_t,
+            keyed_waves,
+            inline_waves,
+            p50_latency: percentile(&lats, 0.50),
+            p99_latency: percentile(&lats, 0.99),
+            mean_sojourn_ticks: if sojourns.is_empty() {
+                0.0
+            } else {
+                sojourns.iter().sum::<u64>() as f64 / sojourns.len() as f64
+            },
+            max_sojourn_ticks: sojourns.iter().copied().max().unwrap_or(0),
+            offline_msgs_in_waves: offm,
+            refill_ticks: outs[1].refill_ticks[t],
+            refill_mat_items: outs[1].refill_mat_items[t],
+            pool_left_mat: outs[1].pool_left_mat[t],
+            answers,
+        });
+    }
+
+    MultiServeStats {
+        tenants,
+        waves,
+        wave_tenants: outs[1].wave_tenant.clone(),
+        wave_rounds: outs[1].wave_rounds.clone(),
+        wave_offline_msgs: wave_off_msgs.clone(),
+        ticks: outs[1].ticks,
+        online_rounds: report.rounds[Phase::Online as usize],
+        online_latency: wave_lat.iter().sum(),
+        offline_msgs_in_waves: wave_off_msgs.iter().sum(),
+        offline_bytes_in_waves: wave_off_bytes.iter().sum(),
+        refill_online_msgs: outs.iter().map(|o| o.tick_online_msgs).sum(),
+        aged_promotions: qs.aged_promotions,
+        pool_stats: outs[1].pool_stats,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, model: u64, queries: usize, coalesce: usize) -> TenantSpec {
+        let mut s = TenantSpec::new(name, model, 12, queries, coalesce);
+        s.rows_per_query = 2;
+        s
+    }
+
+    fn two_tenant_cfg(mode: PoolMode) -> MultiServeConfig {
+        MultiServeConfig {
+            tenants: vec![spec("m1", 1, 4, 2), spec("m2", 2, 4, 2)],
+            mode,
+            low_water: 1,
+            high_water: 2,
+            age_every: 0,
+            seed: 1400,
+        }
+    }
+
+    fn assert_answers_match_cleartext(stats: &MultiServeStats, cfg: &MultiServeConfig) {
+        for (t, ts) in stats.tenants.iter().enumerate() {
+            let want = cleartext_tenant_predictions(&cfg.tenants[t]);
+            assert_eq!(ts.answers.len(), ts.served, "one answer entry per served query");
+            for (qid, rows) in &ts.answers {
+                for (r, got) in rows.iter().enumerate() {
+                    let w = want[*qid][r];
+                    assert!(
+                        (got - w).abs() < 0.01,
+                        "tenant {t} query {qid} row {r}: got {got}, want {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_tenant_answers_match_cleartext_keyed_and_inline() {
+        for mode in [PoolMode::Keyed, PoolMode::Inline] {
+            let cfg = two_tenant_cfg(mode);
+            let stats = serve_multi(NetProfile::zero(), cfg.clone());
+            for ts in &stats.tenants {
+                assert_eq!(ts.served, 4, "all queries answered ({mode:?})");
+                assert_eq!(ts.expired, 0);
+                assert_eq!(ts.rejected, 0);
+            }
+            assert_answers_match_cleartext(&stats, &cfg);
+        }
+    }
+
+    #[test]
+    fn keyed_two_tenant_waves_hit_their_own_pools() {
+        let cfg = two_tenant_cfg(PoolMode::Keyed);
+        let stats = serve_multi(NetProfile::zero(), cfg);
+        for ts in &stats.tenants {
+            assert_eq!(ts.waves, 2, "4 queries / coalesce 2");
+            assert_eq!(ts.keyed_waves, 2, "full waves must drain keyed bundles: {ts:?}");
+            assert_eq!(ts.inline_waves, 0);
+        }
+        assert_eq!(stats.refill_online_msgs, 0, "refill traffic is offline-only");
+    }
+
+    #[test]
+    fn higher_priority_tenant_is_served_first() {
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[0].class = 1;
+        cfg.tenants[1].class = 0; // m2 outranks m1
+        cfg.age_every = 0; // no aging: strict priority
+        let stats = serve_multi(NetProfile::zero(), cfg);
+        assert_eq!(
+            &stats.wave_tenants[..2],
+            &[1, 1],
+            "class-0 tenant's waves must all precede class-1's: {:?}",
+            stats.wave_tenants
+        );
+        assert_eq!(&stats.wave_tenants[2..], &[0, 0]);
+    }
+
+    #[test]
+    fn deadline_expiry_counts_but_never_serves() {
+        // one tenant, coalesce 1, 4 queries all at tick 0, deadline 1 tick:
+        // waves at ticks 0 and 1 serve two queries; at tick 2 the remaining
+        // two are past due and must be dropped, not served.
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants.truncate(1);
+        cfg.tenants[0] = {
+            let mut s = spec("m1", 1, 4, 1);
+            s.deadline_ticks = Some(1);
+            s
+        };
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.served, 2, "only in-deadline queries served: {ts:?}");
+        assert_eq!(ts.expired, 2, "late queries counted as expired");
+        assert_eq!(ts.answers.len(), 2);
+        // EDF kept service in arrival order here, so the served ids are 0,1
+        let ids: Vec<usize> = ts.answers.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn admission_cap_sheds_burst_but_fits_staggered_arrivals() {
+        // burst: 5 queries at tick 0 under a cap of 2 → 3 shed
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants.truncate(1);
+        cfg.tenants[0] = {
+            let mut s = spec("m1", 1, 5, 1);
+            s.inflight_cap = Some(2);
+            s
+        };
+        let stats = serve_multi(NetProfile::zero(), cfg);
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.admitted, 2);
+        assert_eq!(ts.rejected, 3);
+        assert_eq!(ts.served, 2);
+        // staggered: one arrival per tick under the same cap → nothing shed
+        let mut cfg2 = two_tenant_cfg(PoolMode::Keyed);
+        cfg2.tenants.truncate(1);
+        cfg2.tenants[0] = {
+            let mut s = spec("m1", 1, 5, 1);
+            s.inflight_cap = Some(2);
+            s.arrive_per_tick = 1;
+            s
+        };
+        let stats2 = serve_multi(NetProfile::zero(), cfg2);
+        let ts2 = &stats2.tenants[0];
+        assert_eq!(ts2.rejected, 0, "service keeps up with staggered arrivals: {ts2:?}");
+        assert_eq!(ts2.served, 5);
+    }
+
+    #[test]
+    fn weighted_round_robin_splits_waves_by_share() {
+        let mut cfg = MultiServeConfig {
+            tenants: vec![spec("heavy", 1, 12, 2), spec("light", 2, 12, 2)],
+            mode: PoolMode::Keyed,
+            low_water: 1,
+            high_water: 2,
+            age_every: 0,
+            seed: 1401,
+        };
+        cfg.tenants[0].weight = 2;
+        cfg.tenants[1].weight = 1;
+        let stats = serve_multi(NetProfile::zero(), cfg);
+        // while both tenants are backlogged (first 9 waves), the 2:1 share
+        // must hold to within one wave
+        let heavy_prefix =
+            stats.wave_tenants[..9].iter().filter(|&&t| t == 0).count() as f64;
+        assert!(
+            (heavy_prefix - 6.0).abs() <= 1.0,
+            "2:1 split over 9 saturated waves, got {heavy_prefix} heavy waves: {:?}",
+            stats.wave_tenants
+        );
+        // both drain completely in the end
+        assert_eq!(stats.tenants[0].served, 12);
+        assert_eq!(stats.tenants[1].served, 12);
+    }
+
+    #[test]
+    fn relu_tenant_coexists_with_linear_tenant() {
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[1].relu = true;
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        assert_answers_match_cleartext(&stats, &cfg);
+        let ps = stats.pool_stats.expect("pool attached");
+        assert!(ps.bitext_hits >= 1, "relu tenant must drain bitext masks: {ps:?}");
+    }
+}

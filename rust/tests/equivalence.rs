@@ -17,7 +17,14 @@
 //!   `MatGamma` bundles and cross-key material all end in `Abort`;
 //! * **meter regressions**: pool attachment leaves `Π_MultTr`'s online
 //!   rounds/bits untouched (the paper-shaped cost), and a coalesced wave
-//!   of N queries costs the rounds of a single query.
+//!   of N queries costs the rounds of a single query;
+//! * **multi-tenant scheduling** (`sched` + `serve::multi`): per-tenant
+//!   keyed waves open to the same values as the inline path (both vs the
+//!   cleartext oracle), a cross-tenant pool pop **fails closed** (tenant
+//!   A's correlation is never served to tenant B), a two-tenant warm run
+//!   keeps **every** wave offline-silent per tenant, and the weighted
+//!   round-robin planner's share split holds within one wave over a
+//!   saturated window.
 
 use trident::convert::{bit2a, bit2a_many, bitext, bitext_many};
 use trident::crypto::Rng;
@@ -1151,4 +1158,204 @@ fn pool_backed_serving_keeps_p0_offline_only() {
         p0_online <= others,
         "P0 online time {p0_online} must not exceed the evaluators' {others}"
     );
+}
+
+// -------------------------------------------------- multi-tenant scheduling
+
+/// Two resident models (same shapes, different tenant ids) with enough
+/// demand for three full waves each.
+fn two_tenant_cfg(
+    mode: trident::serve::PoolMode,
+    low: usize,
+    high: usize,
+) -> trident::serve::MultiServeConfig {
+    use trident::sched::TenantSpec;
+    let mk = |name: &str, model: u64| {
+        let mut s = TenantSpec::new(name, model, 16, 9, 3);
+        s.rows_per_query = 2;
+        s
+    };
+    trident::serve::MultiServeConfig {
+        tenants: vec![mk("m1", 1), mk("m2", 2)],
+        mode,
+        low_water: low,
+        high_water: high,
+        age_every: 0,
+        seed: 1660,
+    }
+}
+
+fn assert_tenant_answers_match_cleartext(
+    stats: &trident::serve::MultiServeStats,
+    cfg: &trident::serve::MultiServeConfig,
+    label: &str,
+) {
+    use trident::serve::cleartext_tenant_predictions;
+    for (t, ts) in stats.tenants.iter().enumerate() {
+        let want = cleartext_tenant_predictions(&cfg.tenants[t]);
+        assert_eq!(ts.answers.len(), ts.served, "{label}: one answer per served query");
+        for (qid, rows) in &ts.answers {
+            for (r, got) in rows.iter().enumerate() {
+                let w = want[*qid][r];
+                assert!(
+                    (got - w).abs() < 0.01,
+                    "{label}: tenant {t} query {qid} row {r}: got {got}, want {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_keyed_waves_open_identical_values_to_inline() {
+    use trident::serve::{serve_multi, PoolMode};
+    // the same two-tenant workload through the per-tenant keyed pools and
+    // through the seed-style inline path: both must reproduce the
+    // cleartext oracle per tenant, query for query
+    let kcfg = two_tenant_cfg(PoolMode::Keyed, 1, 2);
+    let keyed = serve_multi(NetProfile::zero(), kcfg.clone());
+    let icfg = two_tenant_cfg(PoolMode::Inline, 1, 2);
+    let inline = serve_multi(NetProfile::zero(), icfg.clone());
+    for s in [&keyed, &inline] {
+        for ts in &s.tenants {
+            assert_eq!(ts.served, 9, "all queries answered");
+            assert_eq!(ts.expired, 0);
+            assert_eq!(ts.rejected, 0);
+        }
+    }
+    assert_tenant_answers_match_cleartext(&keyed, &kcfg, "keyed");
+    assert_tenant_answers_match_cleartext(&inline, &icfg, "inline");
+    // same schedule either way (the planner is mode-independent) …
+    assert_eq!(keyed.wave_tenants, inline.wave_tenants);
+    // … but only the keyed run drains per-tenant pools
+    for ts in &keyed.tenants {
+        assert_eq!(ts.keyed_waves, ts.waves, "keyed: every full wave hits its pool");
+    }
+    for ts in &inline.tenants {
+        assert_eq!(ts.inline_waves, ts.waves, "inline: no pool exists to hit");
+    }
+}
+
+#[test]
+fn cross_tenant_pool_pop_fails_closed() {
+    use trident::sched::TenantSpec;
+    // two tenants with byte-identical gate shapes — only the tenant/model
+    // id in the circuit key differs
+    let spec_a = TenantSpec::new("tenant-a", 101, 3, 4, 2);
+    let spec_b = TenantSpec::new("tenant-b", 202, 3, 4, 2);
+    let (key_a, key_b) = (spec_a.key(), spec_b.key());
+    assert_eq!((key_a.rows, key_a.inner, key_a.cols), (key_b.rows, key_b.inner, key_b.cols));
+    assert_ne!(key_a, key_b, "tenant id shards the key space");
+    let xf = [1.5, -2.0, 0.5, 3.0, 0.25, -1.0];
+    let yf = [2.0, 1.0, -4.0];
+    let want = [
+        xf[0] * yf[0] + xf[1] * yf[1] + xf[2] * yf[2],
+        xf[3] * yf[0] + xf[4] * yf[1] + xf[5] * yf[2],
+    ];
+    let x = Matrix::from_vec(2, 3, xf.iter().map(|&v| FixedPoint::encode(v)).collect());
+    let y = Matrix::from_vec(3, 1, yf.iter().map(|&v| FixedPoint::encode(v)).collect());
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        665,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat(ctx, key_a, &ysh, 1)?;
+            fill_mat(ctx, key_b, &ysh, 1)?;
+            if ctx.id() == P1 {
+                // malicious P1 files tenant A's correlation at tenant B's
+                // position (shape-compatible, so only the embedded key
+                // can catch it)
+                assert!(ctx.pool_mut().unwrap().cross_file_front_mat(&key_a, &key_b));
+            }
+            // tenant B's wave: P1's pop must fail closed before any online
+            // message is computed from tenant A's material
+            let (_xsh, z) =
+                matmul_tr_keyed(ctx, &key_b, (ctx.id() == P2).then_some(&x), &ysh)?;
+            ctx.flush_verify()?;
+            trident::proto::reconstruct::reconstruct_many(ctx, &z.to_shares())
+        },
+    );
+    assert!(
+        matches!(run.outputs[1], Err(trident::net::Abort::Verify(_))),
+        "P1 must fail closed on cross-tenant material: {:?}",
+        run.outputs[1].as_ref().err()
+    );
+    assert!(run.any_verify_abort());
+    // an honest party that did complete never accepted a wrong value
+    for (i, out) in run.outputs.iter().enumerate() {
+        if i == 1 {
+            continue; // the cheater's own view is unconstrained
+        }
+        if let Ok(vals) = out {
+            for (r, want) in want.iter().enumerate() {
+                let got = FixedPoint::decode(vals[r]);
+                assert!(
+                    (got - want).abs() < 0.01,
+                    "P{i} accepted a wrong opened value: {got} (want {want})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn two_tenant_warm_run_keeps_every_wave_offline_silent() {
+    use trident::serve::{serve_multi, PoolMode};
+    // low == high == 1: the tightest refill cadence — every wave pops the
+    // single stocked bundle and the between-waves tick restocks the
+    // most-depleted tenant, so warmth is maintained by interleaved refill,
+    // not by over-provisioning
+    let cfg = two_tenant_cfg(PoolMode::Keyed, 1, 1);
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.waves, 6, "3 full waves per tenant");
+    for (i, m) in s.wave_offline_msgs.iter().enumerate() {
+        assert_eq!(
+            *m, 0,
+            "wave {i} (tenant {}) sent offline-phase messages inside the wave window",
+            s.wave_tenants[i]
+        );
+    }
+    for ts in &s.tenants {
+        assert_eq!(ts.offline_msgs_in_waves, 0, "per-tenant offline silence: {ts:?}");
+        assert_eq!(ts.keyed_waves, ts.waves, "every wave drained a keyed bundle");
+        assert!(
+            ts.refill_ticks >= 2,
+            "warm-up + interleaved between-wave refills: {ts:?}"
+        );
+        assert_eq!(ts.pool_left_mat, 0, "no bundle stranded at shutdown");
+    }
+    assert_eq!(s.refill_online_msgs, 0, "refill traffic is offline-phase only");
+    assert_tenant_answers_match_cleartext(&s, &cfg, "warm two-tenant");
+}
+
+#[test]
+fn wrr_share_split_asserted_within_tolerance() {
+    use trident::sched::TenantSpec;
+    use trident::serve::{serve_multi, MultiServeConfig, PoolMode};
+    let mk = |name: &str, model: u64, weight: u64| {
+        let mut s = TenantSpec::new(name, model, 8, 12, 2);
+        s.weight = weight;
+        s
+    };
+    let cfg = MultiServeConfig {
+        tenants: vec![mk("heavy", 1, 2), mk("light", 2, 1)],
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        age_every: 0,
+        seed: 1661,
+    };
+    let s = serve_multi(NetProfile::zero(), cfg);
+    // heavy needs 6 waves, light 6; both are backlogged for the first 9
+    // waves, where the 2:1 share must hold to within one wave
+    let heavy = s.wave_tenants[..9].iter().filter(|&&t| t == 0).count() as f64;
+    assert!(
+        (heavy - 6.0).abs() <= 1.0,
+        "2:1 split over a saturated 9-wave window: got {heavy} heavy waves ({:?})",
+        s.wave_tenants
+    );
+    assert_eq!(s.tenants[0].served, 12);
+    assert_eq!(s.tenants[1].served, 12);
 }

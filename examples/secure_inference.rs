@@ -26,7 +26,12 @@ fn main() {
     // the CLI-level summary: keyed pool vs scalar pool vs inline
     trident::coordinator::serve_cli(ServeCliOpts { queries, ..ServeCliOpts::default() });
 
-    // keyed-pool batch serving with a ReLU output layer, in detail
+    // keyed-pool batch serving with a ReLU output layer, in detail. Since
+    // the nonlinear pool landed, the whole warm wave — share, Π_MatMulTr,
+    // ReLU, reconstruct — is offline-silent: the ReluCorr bundle carries
+    // the bitext masks, the pre-exchanged γ of the r·v product and the
+    // pre-checked Π_BitInj material, so no offline-phase message is left
+    // to send per request.
     println!("\nkeyed-pool ReLU serving (d=128, 4-row queries, coalesce 8):");
     let cfg = ServeConfig {
         d: 128,
@@ -48,8 +53,12 @@ fn main() {
         s.online_rounds,
     );
     println!(
-        "  offline (refill fills + live bitext γ): {:.1} KiB, metered under Phase::Offline",
+        "  offline (refill fills, between waves): {:.1} KiB under Phase::Offline; \
+         in-wave offline msgs: {} (mat {} | relu {})",
         s.offline_value_bits as f64 / 8.0 / 1024.0,
+        s.offline_msgs_in_waves,
+        s.offline_msgs_matmul,
+        s.offline_msgs_relu,
     );
     if let Some(ps) = s.pool_stats {
         println!(

@@ -51,7 +51,7 @@ fn main() {
     print!("{}", trident::bench::tenant_table(&bench.tenants));
 
     println!();
-    println!("== ReLU layer serving (pool feeds wire-mask bundles + bitext material) ==");
+    println!("== ReLU layer serving (keyed mode drains paired MatCorr+ReluCorr bundles) ==");
     for (mode, label) in [
         (PoolMode::Inline, "inline"),
         (PoolMode::Scalar, "scalar"),
@@ -70,10 +70,13 @@ fn main() {
         };
         let s = serve(NetProfile::lan(), cfg);
         println!(
-            "{label}: {:.3} ms/query online, offline {:.1} KiB, rounds {}",
+            "{label}: {:.3} ms/query online, offline {:.1} KiB, rounds {}, off msgs in waves {} (mat {} | relu {})",
             s.per_query_latency() * 1e3,
             s.offline_value_bits as f64 / 8.0 / 1024.0,
             s.online_rounds,
+            s.offline_msgs_in_waves,
+            s.offline_msgs_matmul,
+            s.offline_msgs_relu,
         );
     }
 
@@ -82,6 +85,12 @@ fn main() {
     println!();
     match trident::bench::write_serving_bench_json_from(&bench, "BENCH_serving.json") {
         Ok(_) => println!("wrote BENCH_serving.json"),
-        Err(e) => println!("could not write BENCH_serving.json: {e}"),
+        Err(e) => {
+            // fail the bench run loudly: CI uploads this file as the perf
+            // trajectory, and a swallowed write error would publish the
+            // committed placeholder as if it were measured numbers
+            eprintln!("could not write BENCH_serving.json: {e}");
+            std::process::exit(1);
+        }
     }
 }

@@ -661,7 +661,27 @@ fn serve_mode_rows() -> Vec<(&'static str, crate::serve::ServeStats)> {
         ),
         (
             "keyed,  coalesce 32",
-            serve(NetProfile::lan(), ServeConfig { mode: PoolMode::Keyed, coalesce: 32, ..base }),
+            serve(
+                NetProfile::lan(),
+                ServeConfig { mode: PoolMode::Keyed, coalesce: 32, ..base.clone() },
+            ),
+        ),
+        // the relu pair makes the off-msg split meaningful: the scalar pool
+        // still works offline in-wave for the nonlinear leg, the keyed
+        // nonlinear pool is silent through the whole pipeline
+        (
+            "scalar+relu, coal 8",
+            serve(
+                NetProfile::lan(),
+                ServeConfig { mode: PoolMode::Scalar, coalesce: 8, relu: true, ..base.clone() },
+            ),
+        ),
+        (
+            "keyed+relu,  coal 8",
+            serve(
+                NetProfile::lan(),
+                ServeConfig { mode: PoolMode::Keyed, coalesce: 8, relu: true, ..base },
+            ),
         ),
     ]
 }
@@ -696,22 +716,25 @@ pub fn serve_table_from(rows: &[(&'static str, crate::serve::ServeStats)]) -> St
         "== Serving: pooled-matrix vs scalar-pool vs inline (linreg d=128, 1-row queries, LAN) ==\n",
     );
     out.push_str(
-        "mode                 | q  | batches | online rnds | ms/query | online B/query | offline KiB | off msg/wave\n",
+        "mode                 | q  | batches | online rnds | ms/query | online B/query | offline KiB | off msg/wave (mat|relu)\n",
     );
     let mut inline_lat = None;
     for (name, s) in rows {
         if inline_lat.is_none() {
             inline_lat = Some(s.per_query_latency());
         }
+        let per_wave = |m: u64| m as f64 / s.batches.max(1) as f64;
         out.push_str(&format!(
-            "{name:<20} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>11.1} | {:>12.1}\n",
+            "{name:<20} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>11.1} | {:>8.1} ({:.1}|{:.1})\n",
             s.queries,
             s.batches,
             s.online_rounds,
             s.per_query_latency() * 1e3,
             s.per_query_online_bytes(),
             s.offline_value_bits as f64 / 8.0 / 1024.0,
-            s.offline_msgs_in_waves as f64 / s.batches.max(1) as f64,
+            per_wave(s.offline_msgs_in_waves),
+            per_wave(s.offline_msgs_matmul),
+            per_wave(s.offline_msgs_relu),
         ));
         if s.batches == 1 {
             out.push_str(&format!(
@@ -739,6 +762,10 @@ pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
     batch.weight = 1;
     batch.class = 1;
     batch.deadline_ticks = Some(6);
+    // a ReLU pipeline on the batch tenant: its waves drain paired
+    // MatCorr+ReluCorr bundles, so the off-msg (mat|relu) columns show the
+    // nonlinear leg silent too
+    batch.relu = true;
     MultiServeConfig {
         tenants: vec![prio, batch],
         mode: PoolMode::Keyed,
@@ -754,11 +781,12 @@ pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
 pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
     let mut out = String::new();
     out.push_str(
-        "tenant   | sub | adm | rej | served | expired | waves (keyed/inl) | p50 ms | p99 ms | sojourn t | off msg/wave | share\n",
+        "tenant   | sub | adm | rej | served | expired | waves (keyed/inl) | p50 ms | p99 ms | sojourn t | off msg/wave (mat|relu) | share\n",
     );
     for ts in &stats.tenants {
+        let per_wave = |m: u64| m as f64 / ts.waves.max(1) as f64;
         out.push_str(&format!(
-            "{:<8} | {:>3} | {:>3} | {:>3} | {:>6} | {:>7} | {:>5} ({:>2}/{:>2})      | {:>6.3} | {:>6.3} | {:>9.1} | {:>12.2} | {:>4.0}%\n",
+            "{:<8} | {:>3} | {:>3} | {:>3} | {:>6} | {:>7} | {:>5} ({:>2}/{:>2})      | {:>6.3} | {:>6.3} | {:>9.1} | {:>9.2} ({:.1}|{:.1})   | {:>4.0}%\n",
             ts.name,
             ts.submitted,
             ts.admitted,
@@ -771,7 +799,9 @@ pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
             ts.p50_latency * 1e3,
             ts.p99_latency * 1e3,
             ts.mean_sojourn_ticks,
-            ts.offline_msgs_in_waves as f64 / ts.waves.max(1) as f64,
+            per_wave(ts.offline_msgs_in_waves),
+            per_wave(ts.offline_msgs_matmul),
+            per_wave(ts.offline_msgs_relu),
             100.0 * ts.waves as f64 / stats.waves.max(1) as f64,
         ));
     }
@@ -821,8 +851,11 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
     out.push_str("  \"modes\": [\n");
     let rows = &bench.modes;
     for (i, (name, s)) in rows.iter().enumerate() {
+        // the per-op split uses the same per-wave unit as off_msgs_per_wave
+        // so mat + relu ≈ total holds row-internally
+        let per_wave = |m: u64| m as f64 / s.batches.max(1) as f64;
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"queries\": {}, \"batches\": {}, \"online_rounds\": {}, \"ms_per_query\": {:.6}, \"online_bytes_per_query\": {:.1}, \"offline_kib\": {:.3}, \"off_msgs_per_wave\": {:.3}}}{}\n",
+            "    {{\"name\": \"{}\", \"queries\": {}, \"batches\": {}, \"online_rounds\": {}, \"ms_per_query\": {:.6}, \"online_bytes_per_query\": {:.1}, \"offline_kib\": {:.3}, \"off_msgs_per_wave\": {:.3}, \"off_msgs_matmul_per_wave\": {:.3}, \"off_msgs_relu_per_wave\": {:.3}}}{}\n",
             json_escape(name),
             s.queries,
             s.batches,
@@ -830,7 +863,9 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             s.per_query_latency() * 1e3,
             s.per_query_online_bytes(),
             s.offline_value_bits as f64 / 8.0 / 1024.0,
-            s.offline_msgs_in_waves as f64 / s.batches.max(1) as f64,
+            per_wave(s.offline_msgs_in_waves),
+            per_wave(s.offline_msgs_matmul),
+            per_wave(s.offline_msgs_relu),
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -840,7 +875,7 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
     for (t, ts) in stats.tenants.iter().enumerate() {
         let spec = &cfg.tenants[t];
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"wave_share\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"wave_share\": {:.4}}}{}\n",
             json_escape(&ts.name),
             spec.weight,
             spec.class,
@@ -856,17 +891,21 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.p99_latency * 1e3,
             ts.mean_sojourn_ticks,
             ts.offline_msgs_in_waves,
+            ts.offline_msgs_matmul,
+            ts.offline_msgs_relu,
             ts.waves as f64 / stats.waves.max(1) as f64,
             if t + 1 < stats.tenants.len() { "," } else { "" },
         ));
     }
     out.push_str("  ],\n");
     out.push_str(&format!(
-        "  \"totals\": {{\"waves\": {}, \"ticks\": {}, \"online_rounds\": {}, \"offline_msgs_in_waves\": {}, \"refill_online_msgs\": {}, \"aged_promotions\": {}}}\n",
+        "  \"totals\": {{\"waves\": {}, \"ticks\": {}, \"online_rounds\": {}, \"offline_msgs_in_waves\": {}, \"offline_msgs_matmul\": {}, \"offline_msgs_relu\": {}, \"refill_online_msgs\": {}, \"aged_promotions\": {}}}\n",
         stats.waves,
         stats.ticks,
         stats.online_rounds,
         stats.offline_msgs_in_waves,
+        stats.offline_msgs_matmul,
+        stats.offline_msgs_relu,
         stats.refill_online_msgs,
         stats.aged_promotions,
     ));

@@ -240,17 +240,41 @@ pub fn bitinj(ctx: &mut Ctx, b: &MShare<Bit>, v: &MShare<Z64>) -> Result<MShare<
         .map(|mut o| o.pop().unwrap())
 }
 
+/// Pre-exchanged, pre-**checked** `Π_BitInj` offline material for a batch:
+/// `⟨λ_b'⟩` (the Bit2A lift of the injected bits' masks) and `⟨λ_b·λ_v⟩`.
+/// Depends only on the λ components of the bit and value wires, so a
+/// circuit-keyed pool can generate it at fill time against pooled masks
+/// ([`crate::pool::relu`]) and inject it into [`bitinj_online`] — the
+/// verification messages of Figs. 15/17 then run at fill, not in the wave.
+#[derive(Clone)]
+pub struct BitInjCorr {
+    pub(crate) y1: Vec<RShare<Z64>>,
+    pub(crate) y2: Vec<RShare<Z64>>,
+}
+
 /// Batched [`bitinj`].
 pub fn bitinj_many(
     ctx: &mut Ctx,
     bs: &[MShare<Bit>],
     vs: &[MShare<Z64>],
 ) -> Result<Vec<MShare<Z64>>, Abort> {
+    let corr = bitinj_offline(ctx, bs, vs)?;
+    bitinj_online(ctx, bs, vs, &corr)
+}
+
+/// The offline phase of `Π_BitInj` (Fig. 17): produce and check `⟨λ_b'⟩`
+/// and `⟨λ_b·λ_v⟩`. Reads only the λ components of `bs`/`vs` — `m` may
+/// still be zero skeletons, which is how the pool pre-generates this
+/// material per circuit position.
+pub(crate) fn bitinj_offline(
+    ctx: &mut Ctx,
+    bs: &[MShare<Bit>],
+    vs: &[MShare<Z64>],
+) -> Result<BitInjCorr, Abort> {
     assert_eq!(bs.len(), vs.len());
     let me = ctx.id();
     let n = bs.len();
 
-    // ---- offline ----
     // ⟨y1⟩ = ⟨λ_b'⟩ with the Bit2A check
     let y1 = share_lifted_lambda(ctx, bs)?;
     // ⟨y2⟩ = ⟨λ_b·λ_v⟩ with the γ-style check
@@ -318,8 +342,22 @@ pub fn bitinj_many(
         }
         Ok(y2)
     })?;
+    Ok(BitInjCorr { y1, y2 })
+}
 
-    // ---- online (Fig. 17) ----
+/// The online phase of `Π_BitInj` (Fig. 17), given the offline material —
+/// one round, 3ℓ bits, whether the correlation was generated inline or
+/// popped from a circuit-keyed pool.
+pub(crate) fn bitinj_online(
+    ctx: &mut Ctx,
+    bs: &[MShare<Bit>],
+    vs: &[MShare<Z64>],
+    corr: &BitInjCorr,
+) -> Result<Vec<MShare<Z64>>, Abort> {
+    assert_eq!(bs.len(), vs.len());
+    let me = ctx.id();
+    let n = bs.len();
+    let (y1, y2) = (&corr.y1, &corr.y2);
     ctx.online(|ctx| {
         let cs: Option<Vec<(Z64, Z64, Z64)>> = me.is_evaluator().then(|| {
             (0..n)

@@ -17,10 +17,12 @@
 //! the multiplicative-masking privacy of the opened `rv` (already fragile
 //! in the original construction) is traded for functional correctness.
 
+use crate::convert::bit2a::BitInjCorr;
 use crate::net::{Abort, P0, P1, P2, P3};
-use crate::proto::mult::{mult_offline, mult_online_many};
+use crate::pool::{CircuitKey, OpKind, ReluCorr};
+use crate::proto::mult::{mult_offline, mult_online_many, MultCorr};
 use crate::proto::reconstruct::reconstruct_to_many;
-use crate::proto::sharing::vsh_many;
+use crate::proto::sharing::{sample_vsh_masks, vsh_deliver, vsh_many, VshMask};
 use crate::proto::Ctx;
 use crate::ring::{Bit, Z64};
 use crate::sharing::MShare;
@@ -70,7 +72,10 @@ pub fn bitext(ctx: &mut Ctx, v: &MShare<Z64>) -> Result<MShare<Bit>, Abort> {
 
 /// Batched [`bitext`] — parallel instances share the three rounds (the
 /// batching Sigmoid relies on for its 5-round total). Pool-aware: the
-/// offline mask material is popped from an attached pool when stocked.
+/// offline mask material is popped from an attached pool when stocked
+/// (the typed queue serves position-independent masks; the internal
+/// `Π_Mult` γ still exchanges live — the **circuit-keyed** path
+/// [`bitext_many_keyed`] pools that too).
 pub fn bitext_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>, Abort> {
     let n = vs.len();
 
@@ -80,18 +85,74 @@ pub fn bitext_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>
         None => gen_bitext_masks(ctx, n)?,
     };
     let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
-    let x_sh: Vec<MShare<Bit>> = masks.iter().map(|m| m.x).collect();
 
-    // ---- online ----
     // [[rv]] = Π_Mult([[r]], [[v]]) — offline part of the mult is genuinely
-    // offline (γ from the masks)
+    // offline (γ from the masks), but it γ-exchanges live inside the call
     let corr = mult_offline(ctx, &r_sh, vs, true)?;
-    let rv = mult_online_many(ctx, &r_sh, vs, &corr)?;
+    let y_masks = sample_vsh_masks::<Bit>(ctx, (P3, P0), n);
+    bitext_online(ctx, vs, &masks, &corr, &y_masks)
+}
+
+/// Pool-aware **circuit-keyed** batched bit extraction — the nonlinear leg
+/// of a keyed serving wave. Pops the whole [`ReluCorr`] bundle
+/// pre-generated for `key` (bit-extraction masks, the pre-exchanged
+/// `⟨γ_{r·v}⟩` of the internal `Π_Mult`, the pre-drawn `y` sharing mask
+/// and the pre-checked `Π_BitInj` material): a hit runs **only** the
+/// online phase — same 3 rounds, same `5ℓ+2` bits — and sends **zero
+/// offline-phase messages**; the bundle's injection material is returned
+/// for the follow-on `Π_BitInj` ([`crate::ml::relu_many_keyed`]). A miss
+/// (exhausted or unattached pool, or an unregistered width) falls back to
+/// the inline [`bitext_many`] and returns `None`; the pop decision is
+/// lockstep at all four parties, so the fallback is deterministic.
+/// Material filed under a different [`CircuitKey`] **fails closed**: the
+/// popping party aborts rather than opening `r·v` under wrong-position
+/// masks.
+pub fn bitext_many_keyed(
+    ctx: &mut Ctx,
+    key: &CircuitKey,
+    vs: &[MShare<Z64>],
+) -> Result<(Vec<MShare<Bit>>, Option<BitInjCorr>), Abort> {
+    let n = vs.len();
+    match key.op {
+        OpKind::Relu { n: width } => assert_eq!(width, n, "key width must match the batch"),
+        _ => panic!("bitext_many_keyed requires an OpKind::Relu key"),
+    }
+    let popped = match ctx.pool.as_mut().map(|p| p.pop_relu(key)) {
+        None => None,
+        Some(Ok(item)) => item,
+        Some(Err(why)) => return Err(ctx.net.abort(why)),
+    };
+    match popped {
+        Some(bundle) => {
+            let ReluCorr { masks, gamma, lam_z, y_masks, binj, .. } = bundle;
+            let corr = MultCorr { gamma, lam_z };
+            let bits = bitext_online(ctx, vs, &masks, &corr, &y_masks)?;
+            Ok((bits, Some(binj)))
+        }
+        None => Ok((bitext_many(ctx, vs)?, None)),
+    }
+}
+
+/// The online phase of `Π_BitExt`, shared by the inline and circuit-keyed
+/// paths (which differ only in where the offline material comes from):
+/// the `Π_Mult` online exchange for `[[rv]]`, the opening towards P0/P3,
+/// and the `y = msb(rv)` delivery under the pre-drawn mask.
+fn bitext_online(
+    ctx: &mut Ctx,
+    vs: &[MShare<Z64>],
+    masks: &[BitExtMask],
+    corr: &MultCorr<Z64>,
+    y_masks: &[VshMask<Bit>],
+) -> Result<Vec<MShare<Bit>>, Abort> {
+    let n = vs.len();
+    let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
+    let x_sh: Vec<MShare<Bit>> = masks.iter().map(|m| m.x).collect();
+    let rv = mult_online_many(ctx, &r_sh, vs, corr)?;
     // open rv towards P0 and P3
     let opened = reconstruct_to_many(ctx, &rv, &[P0, P3])?;
     // y = msb(rv), boolean-shared by (P3, P0)
     let ys: Option<Vec<Bit>> = opened.map(|vals| vals.iter().map(|v| v.msb()).collect());
-    let y_sh = vsh_many::<Bit>(ctx, (P3, P0), ys.as_deref(), n)?;
+    let y_sh = vsh_deliver::<Bit>(ctx, (P3, P0), ys.as_deref(), y_masks)?;
     // [[msb v]]^B = [[x]]^B ⊕ [[y]]^B
     Ok((0..n).map(|i| x_sh[i] + y_sh[i]).collect())
 }
@@ -151,6 +212,52 @@ mod tests {
         assert_eq!(report.value_bits[1] - 2 * 64, 5 * 64 + 2, "online bits");
         // offline: vsh(r)=ℓ + vsh^B(x)=1 + mult offline 3ℓ = 4ℓ+1 (Lemma D.3)
         assert_eq!(report.value_bits[0], 4 * 64 + 1, "offline bits");
+    }
+
+    #[test]
+    fn bitext_keyed_matches_inline_and_is_offline_silent() {
+        use crate::net::Phase;
+        use crate::pool::Pool;
+        let vals = [-9i64, 42];
+        let run = run_4pc(NetProfile::zero(), 124, move |ctx| {
+            let vs = crate::proto::sharing::share_many_n(
+                ctx,
+                P1,
+                (ctx.id() == P1)
+                    .then(|| vals.iter().map(|&v| Z64::from(v)).collect::<Vec<_>>())
+                    .as_deref(),
+                2,
+            )?;
+            let key = crate::pool::CircuitKey {
+                model: 77,
+                layer: 0,
+                op: OpKind::Relu { n: 2 },
+                rows: 2,
+                inner: 1,
+                cols: 1,
+                dealer: P1,
+            };
+            // generate the bundle against the live wire's λ (what
+            // fill_mat_relu does with the pooled pairs' λ = −rᵗ)
+            ctx.attach_pool(Pool::new());
+            let corr = crate::pool::relu::gen_relu_corr(ctx, key, &vs)?;
+            ctx.pool_mut().unwrap().push_relu(corr);
+            ctx.flush_verify()?; // settle the fill's deferred digests
+            let off0 = ctx.net.sent_msgs(Phase::Offline);
+            let (bits, binj) = bitext_many_keyed(ctx, &key, &vs)?;
+            let off_sent = ctx.net.sent_msgs(Phase::Offline) - off0;
+            ctx.flush_verify()?;
+            Ok((bits, binj.is_some(), off_sent))
+        });
+        let (outs, _) = run.expect_ok();
+        for (i, &v) in vals.iter().enumerate() {
+            let b = open(&[outs[0].0[i], outs[1].0[i], outs[2].0[i], outs[3].0[i]]);
+            assert_eq!(b, Bit(v < 0), "keyed msb({v})");
+        }
+        for (p, o) in outs.iter().enumerate() {
+            assert!(o.1, "P{p}: a stocked keyed pop must hit");
+            assert_eq!(o.2, 0, "P{p} sent offline messages inside the keyed bitext");
+        }
     }
 
     #[test]

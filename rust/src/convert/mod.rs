@@ -10,7 +10,7 @@ pub mod boolean;
 pub mod garbled;
 
 pub use a2b::a2b;
-pub use bit2a::{b2a, bit2a, bit2a_many, bitinj, bitinj_many};
-pub use bitext::{bitext, bitext_many, BitExtMask};
+pub use bit2a::{b2a, bit2a, bit2a_many, bitinj, bitinj_many, BitInjCorr};
+pub use bitext::{bitext, bitext_many, bitext_many_keyed, BitExtMask};
 pub use boolean::eval_bool_circuit;
 pub use garbled::{a2g, b2g, g2a, g2b};

@@ -20,22 +20,26 @@
 //!
 //! * **pool/** — the offline precomputation pool: typed, keyed correlated
 //!   randomness (truncation pairs, λ_z skeletons, bit-extraction masks,
-//!   and circuit-position-keyed matrix wire-mask bundles: pre-drawn input
-//!   wire masks + pre-exchanged `⟨Γ⟩` per `CircuitKey`) generated ahead of
-//!   time under `Phase::Offline`, topped up between serving waves by a
-//!   background refill producer with low/high water marks; pool-aware
-//!   protocol entry points (`trunc_pairs`, `mult`/`dotp` λ draws,
-//!   `bitext_many`, `matmul_keyed`/`matmul_tr_keyed`) pop from an attached
-//!   pool and fall back to inline generation deterministically on
-//!   exhaustion.
+//!   circuit-position-keyed matrix wire-mask bundles — pre-drawn input
+//!   wire masks + pre-exchanged `⟨Γ⟩` per `CircuitKey` — and
+//!   circuit-keyed **nonlinear bundles**: `ReluCorr` = bitext masks +
+//!   pre-exchanged `⟨γ_{r·v}⟩` + pre-checked `Π_BitInj` material, paired
+//!   with the matrix bundle) generated ahead of time under
+//!   `Phase::Offline`, topped up between serving waves by a background
+//!   refill producer with low/high water marks; pool-aware protocol entry
+//!   points (`trunc_pairs`, `mult`/`dotp` λ draws, `bitext_many`,
+//!   `matmul_keyed`/`matmul_tr_keyed`, `bitext_many_keyed`/
+//!   `relu_many_keyed`) pop from an attached pool and fall back to inline
+//!   generation deterministically on exhaustion.
 //! * **serve/** — the batched online serving engine: a request queue that
 //!   coalesces concurrent inference queries into cross-request protocol
 //!   batches (one round-trip per wave, not per query), registers its
-//!   model's circuit keys at load and drains one keyed bundle per wave —
-//!   making the linear layer's per-request offline phase **message-free**
-//!   (a ReLU layer's input-dependent γ-exchange stays live) — verifies
-//!   every response before release, and reports per-query amortized online
-//!   cost through the meter.
+//!   model's circuit keys at load — the matrix gate and its paired ReLU
+//!   position — and drains the keyed bundles per wave, making the
+//!   **whole** per-request offline phase message-free (ReLU included);
+//!   verifies every response before release, and reports per-query
+//!   amortized online cost (with a per-op matmul/relu offline-message
+//!   split) through the meter.
 //! * **sched/** — the multi-tenant scheduler over the serving stack: a
 //!   model registry holding N resident models with per-tenant keyed pools
 //!   (the `CircuitKey::model` field shards the offline material; a

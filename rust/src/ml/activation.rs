@@ -8,9 +8,10 @@
 //!   injections **batched into one `Π_BitInj` round** (the second term is
 //!   `BitInj(1⊕b2, [[1]])`), for 5 online rounds total.
 
-use crate::convert::bit2a::bitinj_many;
-use crate::convert::bitext::bitext_many;
+use crate::convert::bit2a::{bitinj_many, bitinj_online};
+use crate::convert::bitext::{bitext_many, bitext_many_keyed};
 use crate::net::Abort;
+use crate::pool::CircuitKey;
 use crate::proto::mult::mult_many;
 use crate::proto::Ctx;
 use crate::ring::{fixed::FixedPoint, Bit, Z64};
@@ -25,6 +26,29 @@ pub fn relu_many(
     let bs = bitext_many(ctx, vs)?;
     let nbs: Vec<MShare<Bit>> = bs.iter().map(|b| b.add_const(Bit(true))).collect();
     let relu = bitinj_many(ctx, &nbs, vs)?;
+    Ok((relu, nbs))
+}
+
+/// Batched ReLU through the **circuit-keyed nonlinear pool**: pops the
+/// position's whole [`crate::pool::ReluCorr`] bundle (bit-extraction masks,
+/// pre-exchanged `⟨γ_{r·v}⟩`, pre-checked `Π_BitInj` material) so a warm
+/// keyed wave's ReLU sends **zero offline-phase messages** — same online
+/// rounds and bits as [`relu_many`]. A miss falls back to the inline path
+/// deterministically (the pop decision is lockstep at all four parties);
+/// wrong-key material fails closed.
+pub fn relu_many_keyed(
+    ctx: &mut Ctx,
+    key: &CircuitKey,
+    vs: &[MShare<Z64>],
+) -> Result<(Vec<MShare<Z64>>, Vec<MShare<Bit>>), Abort> {
+    let (bs, binj) = bitext_many_keyed(ctx, key, vs)?;
+    let nbs: Vec<MShare<Bit>> = bs.iter().map(|b| b.add_const(Bit(true))).collect();
+    let relu = match &binj {
+        // the pooled material was generated for λ_b (= λ_{1⊕b}) — inject
+        // with the online phase only
+        Some(corr) => bitinj_online(ctx, &nbs, vs, corr)?,
+        None => bitinj_many(ctx, &nbs, vs)?,
+    };
     Ok((relu, nbs))
 }
 

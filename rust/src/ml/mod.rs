@@ -10,7 +10,7 @@ pub mod logreg;
 pub mod nn;
 pub mod softmax;
 
-pub use activation::{drelu_many, relu_many, sigmoid_many};
+pub use activation::{drelu_many, relu_many, relu_many_keyed, sigmoid_many};
 pub use linreg::LinReg;
 pub use logreg::LogReg;
 pub use nn::{Network, NetworkKind};

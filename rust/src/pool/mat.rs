@@ -52,7 +52,7 @@ use crate::proto::Ctx;
 use crate::ring::{Matrix, Z64};
 use crate::sharing::{MMat, MShare};
 
-/// Which matrix gate a [`CircuitKey`] names.
+/// Which gate a [`CircuitKey`] names.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// Plain `Π_MatMul` — the pooled item carries a `λ_Z` skeleton.
@@ -60,6 +60,12 @@ pub enum OpKind {
     /// `Π_MatMulTr` with this arithmetic shift — the pooled item carries
     /// verified truncation pairs (`λ_{Zᵗ} = −rᵗ`) instead of `λ_Z`.
     MatMulTr { shift: u32 },
+    /// Batched ReLU over the `n`-element output of this position's matrix
+    /// gate (`n` is the underlying `Π_BitExt` width). The pooled item is a
+    /// [`crate::pool::relu::ReluCorr`] bundle, generated **against** the
+    /// position's matrix bundle so the `γ_{r·v}` correlation matches the
+    /// wave's actual output masks (see [`crate::pool::relu`]).
+    Relu { n: usize },
 }
 
 /// A circuit position of a resident model: the index of one keyed queue of
@@ -173,34 +179,48 @@ pub(crate) fn sample_wire_mask(
 /// `Phase::Offline`, and flushes its own deferred verification digests so a
 /// later serving wave's flush carries no offline traffic.
 pub fn fill_mat(ctx: &mut Ctx, key: CircuitKey, w: &MMat<Z64>, n: usize) -> Result<(), Abort> {
-    assert_eq!(
-        (key.inner, key.cols),
-        w.dims(),
-        "resident model share must match the key shape"
-    );
     assert!(ctx.has_pool(), "fill_mat requires an attached pool");
     for _ in 0..n {
-        let (lam_x, lam_x_full) = sample_wire_mask(ctx, key.dealer, key.rows, key.inner);
-        let with_lam_z = matches!(key.op, OpKind::MatMul);
-        let corr = matmul_offline(ctx, &lam_x, w, with_lam_z)?;
-        let pairs = match key.op {
-            OpKind::MatMulTr { shift } => gen_trunc_pairs(ctx, key.rows * key.cols, shift)?,
-            OpKind::MatMul => Vec::new(),
-        };
-        let item = MatCorr {
-            key,
-            lam_x,
-            lam_x_full,
-            gamma: corr.gamma,
-            lam_z: corr.lam_z,
-            pairs,
-            seq: 0, // assigned by push_mat
-        };
+        let item = gen_mat_corr(ctx, key, w)?;
         ctx.pool.as_mut().expect("pool attached").push_mat(item);
     }
     // Fill is a natural barrier: settle the deferred offline digests here so
     // the serving window between waves stays offline-silent.
     ctx.flush_verify()
+}
+
+/// Generate one [`MatCorr`] bundle for `key` against the resident share
+/// `w` — the loop body of [`fill_mat`], split out so
+/// [`crate::pool::relu::fill_mat_relu`] can pair each matrix bundle with
+/// the ReLU bundle generated **against its truncation pairs**. Deferred
+/// verification digests are the caller's to flush.
+pub(crate) fn gen_mat_corr(
+    ctx: &mut Ctx,
+    key: CircuitKey,
+    w: &MMat<Z64>,
+) -> Result<MatCorr, Abort> {
+    assert_eq!(
+        (key.inner, key.cols),
+        w.dims(),
+        "resident model share must match the key shape"
+    );
+    let (lam_x, lam_x_full) = sample_wire_mask(ctx, key.dealer, key.rows, key.inner);
+    let with_lam_z = matches!(key.op, OpKind::MatMul);
+    let corr = matmul_offline(ctx, &lam_x, w, with_lam_z)?;
+    let pairs = match key.op {
+        OpKind::MatMulTr { shift } => gen_trunc_pairs(ctx, key.rows * key.cols, shift)?,
+        OpKind::MatMul => Vec::new(),
+        OpKind::Relu { .. } => panic!("Relu positions pool ReluCorr bundles, not MatCorr"),
+    };
+    Ok(MatCorr {
+        key,
+        lam_x,
+        lam_x_full,
+        gamma: corr.gamma,
+        lam_z: corr.lam_z,
+        pairs,
+        seq: 0, // assigned by push_mat
+    })
 }
 
 #[cfg(test)]

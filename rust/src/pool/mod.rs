@@ -20,8 +20,14 @@
 //!     [`CircuitKey`] (model · layer · op · shape · dealer), the pre-drawn
 //!     input **wire mask**, the pre-exchanged `⟨Γ⟩` of `matmul_offline`
 //!     against the resident model, and the gate's `λ_Z`/truncation pairs —
-//!     the bundle that makes a pool-backed serving wave's per-request
-//!     offline phase **message-free**.
+//!     the bundle that makes a pool-backed serving wave's linear layer
+//!     **message-free** per request,
+//!   - **circuit-keyed nonlinear bundles** ([`relu`]): per
+//!     `OpKind::Relu` position, the bit-extraction masks **plus** the
+//!     pre-exchanged `⟨γ_{r·v}⟩` of `Π_BitExt`'s internal `Π_Mult` and the
+//!     pre-checked `Π_BitInj` material, generated paired with the matrix
+//!     bundle — completing the invariant that **every** per-request
+//!     message in a warm keyed wave is online-phase.
 //! * `fill_*` run the real generation protocols (messages, verification,
 //!   metering all land under [`Phase::Offline`](crate::net::Phase)) and
 //!   stock the party's pool.
@@ -48,9 +54,11 @@
 
 pub mod mat;
 pub mod refill;
+pub mod relu;
 
 pub use mat::{fill_mat, CircuitKey, MatCorr, OpKind};
 pub use refill::{Refill, RefillOutcome, WaterMarks};
+pub use relu::{fill_mat_relu, relu_key_for, ReluCorr};
 
 use std::collections::{HashMap, VecDeque};
 
@@ -76,15 +84,22 @@ pub struct PoolStats {
     /// Circuit-keyed matrix correlation pops ([`mat`]).
     pub mat_hits: u64,
     pub mat_misses: u64,
+    /// Circuit-keyed nonlinear (ReLU) bundle pops ([`relu`]).
+    pub relu_hits: u64,
+    pub relu_misses: u64,
 }
 
 impl PoolStats {
     pub fn hits(&self) -> u64 {
-        self.trunc_hits + self.lam_hits + self.bitext_hits + self.mat_hits
+        self.trunc_hits + self.lam_hits + self.bitext_hits + self.mat_hits + self.relu_hits
     }
 
     pub fn misses(&self) -> u64 {
-        self.trunc_misses + self.lam_misses + self.bitext_misses + self.mat_misses
+        self.trunc_misses
+            + self.lam_misses
+            + self.bitext_misses
+            + self.mat_misses
+            + self.relu_misses
     }
 }
 
@@ -103,6 +118,10 @@ pub struct Pool {
     mat: HashMap<CircuitKey, VecDeque<MatCorr>>,
     /// Per-key fill sequence counters (FIFO/no-interleave accounting).
     mat_seq: HashMap<CircuitKey, u64>,
+    /// Circuit-keyed nonlinear bundles ([`relu`]: bitext masks +
+    /// pre-exchanged `⟨γ_{r·v}⟩` + pre-checked `Π_BitInj` material).
+    relu: HashMap<CircuitKey, VecDeque<ReluCorr>>,
+    relu_seq: HashMap<CircuitKey, u64>,
     stats: PoolStats,
 }
 
@@ -133,12 +152,17 @@ impl Pool {
         self.mat.get(key).map_or(0, VecDeque::len)
     }
 
+    pub fn len_relu(&self, key: &CircuitKey) -> usize {
+        self.relu.get(key).map_or(0, VecDeque::len)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.trunc.values().all(VecDeque::is_empty)
             && self.lam_z64.is_empty()
             && self.lam_bit.is_empty()
             && self.bitext.is_empty()
             && self.mat.values().all(VecDeque::is_empty)
+            && self.relu.values().all(VecDeque::is_empty)
     }
 
     // ---- typed λ queue dispatch -----------------------------------------
@@ -184,6 +208,16 @@ impl Pool {
         item.seq = *seq;
         *seq += 1;
         self.mat.entry(key).or_default().push_back(item);
+    }
+
+    /// Stock one circuit-keyed nonlinear bundle under its embedded key,
+    /// stamping the per-key FIFO sequence number.
+    pub fn push_relu(&mut self, mut item: ReluCorr) {
+        let key = item.key();
+        let seq = self.relu_seq.entry(key).or_insert(0);
+        item.seq = *seq;
+        *seq += 1;
+        self.relu.entry(key).or_default().push_back(item);
     }
 
     // ---- pop (consumption side; all-or-nothing) -------------------------
@@ -262,6 +296,37 @@ impl Pool {
         }
     }
 
+    /// Pop one circuit-keyed nonlinear bundle — the [`pop_mat`](Pool::pop_mat)
+    /// semantics, verbatim: `Ok(None)` records a miss (→ the caller's
+    /// deterministic inline fallback); `Err` means the queue fronts
+    /// material generated for a **different** key and the caller must fail
+    /// closed. The pop is atomic: the whole bundle (masks + `⟨γ⟩` +
+    /// `Π_BitInj` material) or nothing.
+    pub fn pop_relu(&mut self, key: &CircuitKey) -> Result<Option<ReluCorr>, String> {
+        let q = match self.relu.get_mut(key) {
+            Some(q) => q,
+            None => {
+                self.stats.relu_misses += 1;
+                return Ok(None);
+            }
+        };
+        match q.pop_front() {
+            None => {
+                self.stats.relu_misses += 1;
+                Ok(None)
+            }
+            Some(item) if item.key() == *key => {
+                self.stats.relu_hits += 1;
+                Ok(Some(item))
+            }
+            Some(item) => Err(format!(
+                "relu pool material generated for {:?} popped under {:?} — failing closed",
+                item.key(),
+                key
+            )),
+        }
+    }
+
     // ---- failure-injection hooks ----------------------------------------
 
     /// Mutable access to the next-to-be-served truncation pair — the
@@ -322,6 +387,42 @@ impl Pool {
             None => return false,
         };
         self.mat.entry(*to).or_default().push_front(item);
+        true
+    }
+
+    /// Mutable access to the next-to-be-served nonlinear bundle — the
+    /// tamper hook for `⟨γ_{r·v}⟩` and the bit-extraction masks.
+    pub fn relu_front_mut(&mut self, key: &CircuitKey) -> Option<&mut ReluCorr> {
+        self.relu.get_mut(key).and_then(VecDeque::front_mut)
+    }
+
+    /// Duplicate the front nonlinear bundle (a replay: this party will
+    /// serve the same masks/γ/injection material twice while its peers
+    /// advance). Returns false when nothing is stocked.
+    pub fn replay_front_relu(&mut self, key: &CircuitKey) -> bool {
+        let q = match self.relu.get_mut(key) {
+            Some(q) => q,
+            None => return false,
+        };
+        match q.front().cloned() {
+            Some(front) => {
+                q.push_front(front);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// [`cross_file_front_mat`](Pool::cross_file_front_mat) for nonlinear
+    /// bundles: file `from`'s front item at `to`'s position without
+    /// rewriting its embedded key. The next honest `pop_relu` under `to`
+    /// fails closed. Returns false when `from` is unstocked.
+    pub fn cross_file_front_relu(&mut self, from: &CircuitKey, to: &CircuitKey) -> bool {
+        let item = match self.relu.get_mut(from).and_then(VecDeque::pop_front) {
+            Some(i) => i,
+            None => return false,
+        };
+        self.relu.entry(*to).or_default().push_front(item);
         true
     }
 }

@@ -40,6 +40,7 @@ use crate::ring::Z64;
 use crate::sharing::MMat;
 
 use super::mat::{fill_mat, CircuitKey};
+use super::relu::fill_mat_relu;
 use super::{fill_bitext, fill_lam, fill_trunc};
 
 /// Refill thresholds for one pooled resource, in items of that resource
@@ -61,6 +62,10 @@ impl WaterMarks {
 
 struct MatTarget {
     key: CircuitKey,
+    /// The paired nonlinear position, when the gate feeds a ReLU: the tick
+    /// then fills **paired** bundles ([`fill_mat_relu`]) so the matrix and
+    /// ReLU queues advance in lockstep.
+    relu: Option<CircuitKey>,
     /// Resident model share the γ correlations are generated against.
     w: MMat<Z64>,
     marks: WaterMarks,
@@ -87,6 +92,9 @@ pub struct Refill {
 pub struct RefillOutcome {
     /// Keyed matrix correlation bundles filled.
     pub mat_items: usize,
+    /// Keyed nonlinear (ReLU) bundles filled — always paired one-for-one
+    /// with `mat_items` for a ReLU-registered gate.
+    pub relu_items: usize,
     /// Truncation pairs filled.
     pub trunc_pairs: usize,
     /// λ_Z skeletons filled.
@@ -97,7 +105,7 @@ pub struct RefillOutcome {
 
 impl RefillOutcome {
     pub fn total(&self) -> usize {
-        self.mat_items + self.trunc_pairs + self.lam + self.bitext
+        self.mat_items + self.relu_items + self.trunc_pairs + self.lam + self.bitext
     }
 }
 
@@ -109,7 +117,20 @@ impl Refill {
     /// Register a circuit position: the serving engine calls this once per
     /// resident-model matrix gate at model-load time.
     pub fn register_mat(&mut self, key: CircuitKey, w: MMat<Z64>, marks: WaterMarks) {
-        self.mat.push(MatTarget { key, w, marks });
+        self.mat.push(MatTarget { key, relu: None, w, marks });
+    }
+
+    /// Register a matrix gate **together with its trailing ReLU**: the tick
+    /// fills paired `MatCorr`+`ReluCorr` bundles ([`fill_mat_relu`]) so the
+    /// nonlinear leg of a keyed wave is offline-silent too.
+    pub fn register_mat_relu(
+        &mut self,
+        key: CircuitKey,
+        relu: CircuitKey,
+        w: MMat<Z64>,
+        marks: WaterMarks,
+    ) {
+        self.mat.push(MatTarget { key, relu: Some(relu), w, marks });
     }
 
     pub fn register_trunc(&mut self, shift: u32, marks: WaterMarks) {
@@ -132,10 +153,22 @@ impl Refill {
         assert!(ctx.has_pool(), "refill tick requires an attached pool");
         let mut out = RefillOutcome::default();
         for t in &self.mat {
-            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_mat(&t.key));
+            // a ReLU-paired gate refills on the paired stock (the min of the
+            // two queues — always equal under paired fills/pops, but the min
+            // keeps the state machine safe under any skew)
+            let stock = ctx.pool.as_ref().map_or(0, |p| match &t.relu {
+                Some(rk) => p.len_mat(&t.key).min(p.len_relu(rk)),
+                None => p.len_mat(&t.key),
+            });
             if stock < t.marks.low {
                 let need = t.marks.high - stock;
-                fill_mat(ctx, t.key, &t.w, need)?;
+                match &t.relu {
+                    Some(rk) => {
+                        fill_mat_relu(ctx, t.key, *rk, &t.w, need)?;
+                        out.relu_items += need;
+                    }
+                    None => fill_mat(ctx, t.key, &t.w, need)?,
+                }
                 out.mat_items += need;
             }
         }

@@ -1,0 +1,279 @@
+//! Circuit-keyed **nonlinear correlation pooling** — extends the keyed
+//! matrix pool ([`super::mat`]) to ReLU so a warm keyed wave's *entire*
+//! pipeline (share → `Π_MatMulTr` → ReLU → reconstruct) sends **zero
+//! offline-phase messages**.
+//!
+//! ## Why the matrix pool alone was not enough
+//!
+//! PR 2 made the linear layer offline-silent, but ReLU still leaked
+//! offline work into the wave: `Π_BitExt`'s internal `Π_Mult` γ-exchanged
+//! live (only its *mask* material was poolable from the shared typed
+//! queue), and `Π_BitInj`'s offline sharings + checks (Figs. 15/17) ran
+//! live too. Both depend only on **wire masks** that are themselves
+//! poolable per circuit position:
+//!
+//! * the multiplication is `r·v` where `r` comes from the pooled
+//!   [`BitExtMask`] and `v` is the `Π_MatMulTr` output, whose mask is
+//!   `λ_v = −rᵗ` — embedded in the *matrix* bundle's truncation pairs;
+//! * the injected bit's mask is `λ_b = λ_x ⊕ λ_y`, where `λ_x` comes from
+//!   the pooled mask and `λ_y` is the `(P3, P0)` `Π_vSh` mask of
+//!   `y = msb(rv)` — pre-drawable with `Π_vSh`'s own scope pattern.
+//!
+//! ## `ReluCorr` bundle
+//!
+//! One bundle serves one whole keyed ReLU evaluation of width `n`
+//! ([`super::mat::OpKind::Relu`]): the `n` bit-extraction masks, the
+//! pre-exchanged `⟨γ_{r·v}⟩` + `λ_z` of the internal `Π_Mult`, the
+//! pre-drawn `y`-sharing masks, and the pre-exchanged + pre-**checked**
+//! `Π_BitInj` material. Because `γ_{r·v}` and the injection material are
+//! functions of the *matrix* bundle's truncation pairs, a ReLU bundle is
+//! generated **paired** with its matrix bundle ([`fill_mat_relu`]) and the
+//! two queues drain in lockstep — bundle `k` of the ReLU queue matches
+//! bundle `k` of the matrix queue by FIFO construction.
+//!
+//! Pops carry the same semantics as the matrix pool: atomic whole-bundle,
+//! per-key FIFO sequence numbers, wrong-key pops **fail closed** (abort,
+//! never an online phase run on wrong-position correlations), and the
+//! failure-injection hooks model a malicious party corrupting or
+//! replaying its local copy — the online vouch/expect digests catch every
+//! case (`tests/equivalence.rs` locks this down).
+
+use crate::convert::bit2a::{bitinj_offline, BitInjCorr};
+use crate::convert::bitext::{gen_bitext_masks, BitExtMask};
+use crate::net::{Abort, P0, P3};
+use crate::proto::mult::{mult_gamma_offline, sample_lam_share, GammaView};
+use crate::proto::sharing::{sample_vsh_masks, vsh_mask_skeleton, VshMask};
+use crate::proto::Ctx;
+use crate::ring::{Bit, Z64};
+use crate::sharing::{MMat, MShare};
+
+use super::mat::{gen_mat_corr, CircuitKey, OpKind};
+
+/// The ReLU position riding a matrix gate: same model/layer/shape/dealer,
+/// `op` replaced by [`OpKind::Relu`] over the gate's `rows·cols` outputs.
+pub fn relu_key_for(mat_key: &CircuitKey) -> CircuitKey {
+    CircuitKey {
+        op: OpKind::Relu { n: mat_key.rows * mat_key.cols },
+        ..*mat_key
+    }
+}
+
+/// One pooled nonlinear correlation bundle — everything the keyed ReLU's
+/// offline phase would otherwise produce live (see the module docs).
+#[derive(Clone)]
+pub struct ReluCorr {
+    pub(crate) key: CircuitKey,
+    /// `Π_BitExt` mask material: `[[r]]`, `[[msb r]]^B` per element.
+    pub(crate) masks: Vec<BitExtMask>,
+    /// Pre-exchanged `⟨γ_{r·v}⟩` against the paired matrix bundle's
+    /// output masks (`λ_v = −rᵗ`).
+    pub(crate) gamma: GammaView<Z64>,
+    /// λ_z skeleton of the internal `Π_Mult` (shared across the batch,
+    /// exactly like the inline path).
+    pub(crate) lam_z: MShare<Z64>,
+    /// Pre-drawn `(P3, P0)` `Π_vSh` masks for `y = msb(rv)`.
+    pub(crate) y_masks: Vec<VshMask<Bit>>,
+    /// Pre-exchanged + pre-checked `Π_BitInj` material for `(1⊕b)·v`.
+    pub(crate) binj: BitInjCorr,
+    /// Per-key fill sequence number, assigned by
+    /// [`crate::pool::Pool::push_relu`].
+    pub(crate) seq: u64,
+}
+
+impl ReluCorr {
+    /// The circuit position this material was generated for.
+    pub fn key(&self) -> CircuitKey {
+        self.key
+    }
+
+    /// Fill sequence number within this item's keyed queue.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    // ---- failure-injection hooks (a locally corrupted pool models a
+    // malicious party; the online checks must abort) ----
+
+    /// Corrupt one held element of the pre-exchanged `⟨γ_{r·v}⟩`.
+    pub fn tamper_gamma(&mut self) {
+        match &mut self.gamma {
+            GammaView::Eval { next, .. } => next[0] += Z64(1),
+            GammaView::Helper(all) => all[0][0] += Z64(1),
+        }
+    }
+
+    /// Corrupt a held λ component of the first mask's `[[r]]` share.
+    pub fn tamper_mask_r(&mut self) {
+        match &mut self.masks[0].r {
+            MShare::Eval { lam_next, .. } => *lam_next += Z64(1),
+            MShare::Helper { lam } => lam[0] += Z64(1),
+        }
+    }
+}
+
+/// Generate one [`ReluCorr`] bundle for `key` against the output-wire
+/// skeletons `vs_skel` of the paired matrix bundle (`m = 0`, `λ_v = −rᵗ`).
+/// Runs the real offline protocols — mask generation, the `Π_Mult`
+/// γ-exchange, the `Π_BitInj` sharings and checks — all metered under
+/// `Phase::Offline`. Deferred digests are the caller's to flush.
+pub(crate) fn gen_relu_corr(
+    ctx: &mut Ctx,
+    key: CircuitKey,
+    vs_skel: &[MShare<Z64>],
+) -> Result<ReluCorr, Abort> {
+    let n = match key.op {
+        OpKind::Relu { n } => n,
+        _ => panic!("gen_relu_corr requires an OpKind::Relu key"),
+    };
+    assert_eq!(vs_skel.len(), n, "one output-wire skeleton per ReLU element");
+    let me = ctx.id();
+
+    let masks = gen_bitext_masks(ctx, n)?;
+    let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
+    // the internal Π_Mult's correlation: λ_z (PRF-only) + the γ-exchange,
+    // computed against λ_r (pooled) and λ_v (the pairs' −rᵗ)
+    let lam_z = ctx.offline(|ctx| sample_lam_share::<Z64>(ctx));
+    let gamma = mult_gamma_offline(ctx, &r_sh, vs_skel)?;
+    // the y = msb(rv) sharing mask, with Π_vSh's own (P3, P0) scope pattern
+    let y_masks = sample_vsh_masks::<Bit>(ctx, (P3, P0), n);
+    // the injected bit's wire is b = x ⊕ y: λ_b = λ_x ⊕ λ_y, m still 0 —
+    // Π_BitInj's offline phase reads only the λ components
+    let b_skel: Vec<MShare<Bit>> = masks
+        .iter()
+        .zip(&y_masks)
+        .map(|(m, ym)| m.x + vsh_mask_skeleton(me, ym))
+        .collect();
+    let binj = bitinj_offline(ctx, &b_skel, vs_skel)?;
+
+    Ok(ReluCorr {
+        key,
+        masks,
+        gamma,
+        lam_z,
+        y_masks,
+        binj,
+        seq: 0, // assigned by push_relu
+    })
+}
+
+/// Pre-generate `n` **paired** matrix + ReLU correlation bundles into the
+/// attached pool: each [`super::MatCorr`] for `mat_key` is immediately
+/// followed by the [`ReluCorr`] for `relu_key` generated against its
+/// truncation pairs, so the two keyed queues advance in lockstep and
+/// bundle `k` of one always matches bundle `k` of the other. Runs the real
+/// offline protocols (metered `Phase::Offline`) and flushes its own
+/// deferred verification digests, so a later serving wave's flush carries
+/// no offline traffic.
+pub fn fill_mat_relu(
+    ctx: &mut Ctx,
+    mat_key: CircuitKey,
+    relu_key: CircuitKey,
+    w: &MMat<Z64>,
+    n: usize,
+) -> Result<(), Abort> {
+    assert!(
+        matches!(mat_key.op, OpKind::MatMulTr { .. }),
+        "a pooled ReLU rides a truncated matrix gate"
+    );
+    assert_eq!(
+        relu_key,
+        relu_key_for(&mat_key),
+        "the ReLU key must be the mat key's paired position"
+    );
+    assert!(ctx.has_pool(), "fill_mat_relu requires an attached pool");
+    for _ in 0..n {
+        let mat = gen_mat_corr(ctx, mat_key, w)?;
+        // the wave's ReLU input is the Π_MatMulTr output, whose share is
+        // pairs[i].rt.add_const(·): λ_v = λ(rt), m online-only — so the
+        // pairs' rt shares ARE the output-wire skeletons
+        let vs_skel: Vec<MShare<Z64>> = mat.pairs.iter().map(|p| p.rt).collect();
+        let relu = gen_relu_corr(ctx, relu_key, &vs_skel)?;
+        let pool = ctx.pool.as_mut().expect("pool attached");
+        pool.push_mat(mat);
+        pool.push_relu(relu);
+    }
+    ctx.flush_verify()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetProfile, P1, P2};
+    use crate::pool::Pool;
+    use crate::proto::run_4pc;
+    use crate::ring::fixed::FRAC_BITS;
+    use crate::ring::Matrix;
+
+    fn mat_key(layer: u32) -> CircuitKey {
+        CircuitKey {
+            model: 4,
+            layer,
+            op: OpKind::MatMulTr { shift: FRAC_BITS },
+            rows: 2,
+            inner: 2,
+            cols: 1,
+            dealer: P2,
+        }
+    }
+
+    #[test]
+    fn relu_key_mirrors_the_mat_position() {
+        let mk = mat_key(3);
+        let rk = relu_key_for(&mk);
+        assert_eq!(rk.op, OpKind::Relu { n: 2 });
+        assert_eq!((rk.model, rk.layer, rk.dealer), (mk.model, mk.layer, mk.dealer));
+        // different layers → different relu keys (position-keyed)
+        assert_ne!(relu_key_for(&mat_key(4)), rk);
+    }
+
+    #[test]
+    fn fill_pairs_mat_and_relu_queues_in_lockstep() {
+        let mk = mat_key(0);
+        let rk = relu_key_for(&mk);
+        let run = run_4pc(NetProfile::zero(), 870, move |ctx| {
+            let w0 = Matrix::from_fn(2, 1, |r, _| Z64(5 + r as u64));
+            let w = crate::testutil::share_mat(ctx, P1, &w0)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mk, rk, &w, 2)?;
+            let pool = ctx.pool.as_ref().unwrap();
+            let lens = (pool.len_mat(&mk), pool.len_relu(&rk));
+            // FIFO seq numbers advance together
+            let a = ctx.pool_mut().unwrap().pop_relu(&rk).unwrap().expect("stocked");
+            let b = ctx.pool_mut().unwrap().pop_relu(&rk).unwrap().expect("stocked");
+            Ok((lens, a.seq(), b.seq()))
+        });
+        let (outs, report) = run.expect_ok();
+        for ((m, r), s0, s1) in &outs {
+            assert_eq!((*m, *r), (2, 2), "paired fill stocks both queues");
+            assert_eq!((*s0, *s1), (0, 1), "FIFO seq order");
+        }
+        // generation is offline traffic (online carries only the one-time
+        // resident-weight sharing, 2·d·ℓ bits)
+        assert!(report.value_bits[0] > 0);
+        assert_eq!(report.value_bits[1], 2 * 2 * 64, "fill itself must be online-silent");
+    }
+
+    #[test]
+    fn cross_key_relu_pop_fails_closed() {
+        let (ka, kb) = (relu_key_for(&mat_key(0)), relu_key_for(&mat_key(1)));
+        let run = run_4pc(NetProfile::zero(), 871, move |ctx| {
+            let w0 = Matrix::from_fn(2, 1, |r, _| Z64(9 + r as u64));
+            let w = crate::testutil::share_mat(ctx, P1, &w0)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_key(0), ka, &w, 1)?;
+            fill_mat_relu(ctx, mat_key(1), kb, &w, 1)?;
+            let pool = ctx.pool_mut().unwrap();
+            assert!(pool.cross_file_front_relu(&ka, &kb), "hook moves the item");
+            // kb's queue now fronts ka-keyed material → fail closed
+            let err = pool.pop_relu(&kb).is_err();
+            // ka's queue is simply empty → miss, not an error
+            let miss = pool.pop_relu(&ka).unwrap().is_none();
+            Ok((err, miss))
+        });
+        let (outs, _) = run.expect_ok();
+        for (err, miss) in &outs {
+            assert!(*err, "wrong-key relu material must fail closed");
+            assert!(*miss);
+        }
+    }
+}

@@ -44,6 +44,7 @@ pub(crate) struct MultCorr<R> {
     pub lam_z: MShare<R>,
 }
 
+#[derive(Clone)]
 pub(crate) enum GammaView<R> {
     Helper([Vec<R>; 3]),
     Eval { next: Vec<R>, prev: Vec<R> },
@@ -58,8 +59,6 @@ pub(crate) fn mult_offline<R: Ring>(
     ys: &[MShare<R>],
     with_lam_z: bool,
 ) -> Result<MultCorr<R>, Abort> {
-    assert_eq!(xs.len(), ys.len());
-    let n = xs.len();
     let me = ctx.id();
     // fresh output mask λ_z (pool-aware: pops a pre-drawn skeleton when a
     // stocked pool is attached)
@@ -68,6 +67,24 @@ pub(crate) fn mult_offline<R: Ring>(
     } else {
         MShare::zero(me)
     };
+    let gamma = mult_gamma_offline(ctx, xs, ys)?;
+    Ok(MultCorr { gamma, lam_z })
+}
+
+/// The γ-exchange half of the `Π_Mult` offline phase, split out of
+/// [`mult_offline`] so a **pooled** correlation can be produced at fill
+/// time and injected at wave time ([`crate::pool::relu`] generates the
+/// `⟨γ_{r·v}⟩` of a ReLU gate's internal multiplication against the
+/// position's pooled masks this way). Only the λ components of `xs`/`ys`
+/// are read — `m` may still be zero skeletons.
+pub(crate) fn mult_gamma_offline<R: Ring>(
+    ctx: &mut Ctx,
+    xs: &[MShare<R>],
+    ys: &[MShare<R>],
+) -> Result<GammaView<R>, Abort> {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let me = ctx.id();
     ctx.offline(|ctx| {
         // zero shares and γ components
         let mut gamma_mine: Vec<R> = Vec::with_capacity(n); // the component I compute
@@ -127,7 +144,7 @@ pub(crate) fn mult_offline<R: Ring>(
                 GammaView::Eval { next: gamma_mine, prev: got }
             }
         };
-        Ok(MultCorr { gamma, lam_z })
+        Ok(gamma)
     })
 }
 

@@ -298,23 +298,23 @@ pub fn vsh<R: Ring>(
     vsh_many(ctx, owners, v.map(|x| vec![x]).as_deref(), 1).map(|mut v| v.pop().unwrap())
 }
 
-/// Batched [`vsh`].
-pub fn vsh_many<R: Ring>(
+/// One party's view of a pre-drawn `Π_vSh` mask: λ components indexed
+/// `j − 1`, `None` where the party's scope does not cover them. Pooled by
+/// [`crate::pool::relu`] so a keyed wave's `y`-sharing is delivery-only.
+pub(crate) type VshMask<R> = [Option<R>; 3];
+
+/// The offline half of [`vsh_many`]: draw the λ components for `n`
+/// sharings owned by `(pi, pj)` — `λ_k` from `All` if `k` is an
+/// (evaluator) owner, else `Excl(k)`. PRF-only, no messages; also the
+/// single source of truth for the pooled masks of [`crate::pool::relu`],
+/// which must follow the exact scope pattern (and draw order) of `Π_vSh`.
+pub(crate) fn sample_vsh_masks<R: Ring>(
     ctx: &mut Ctx,
     (pi, pj): (PartyId, PartyId),
-    vs: Option<&[R]>,
     n: usize,
-) -> Result<Vec<MShare<R>>, Abort> {
-    assert_ne!(pi, pj);
-    assert!(pi.is_evaluator(), "sender P_i must be an evaluator");
+) -> Vec<VshMask<R>> {
     let me = ctx.id();
-    let is_owner = me == pi || me == pj;
-    if is_owner {
-        assert!(vs.is_some(), "owners must supply values");
-    }
-
-    // Offline: λ_k from All if k is an (evaluator) owner, else Excl(k).
-    let masks: Vec<[Option<R>; 3]> = ctx.offline(|ctx| {
+    ctx.offline(|ctx| {
         (0..n)
             .map(|_| {
                 let mut lam = [None; 3];
@@ -327,7 +327,53 @@ pub fn vsh_many<R: Ring>(
                 lam
             })
             .collect()
-    });
+    })
+}
+
+/// The party's `[[·]]`-skeleton (`m = 0`) for a pre-drawn `Π_vSh` mask.
+pub(crate) fn vsh_mask_skeleton<R: Ring>(me: PartyId, mask: &VshMask<R>) -> MShare<R> {
+    if me.is_evaluator() {
+        MShare::Eval {
+            m: R::ZERO,
+            lam_next: mask[(me.next_evaluator().0 - 1) as usize].expect("next λ held"),
+            lam_prev: mask[(me.prev_evaluator().0 - 1) as usize].expect("prev λ held"),
+        }
+    } else {
+        MShare::Helper {
+            lam: [mask[0].unwrap(), mask[1].unwrap(), mask[2].unwrap()],
+        }
+    }
+}
+
+/// Batched [`vsh`].
+pub fn vsh_many<R: Ring>(
+    ctx: &mut Ctx,
+    (pi, pj): (PartyId, PartyId),
+    vs: Option<&[R]>,
+    n: usize,
+) -> Result<Vec<MShare<R>>, Abort> {
+    let masks = sample_vsh_masks(ctx, (pi, pj), n);
+    vsh_deliver(ctx, (pi, pj), vs, &masks)
+}
+
+/// The online half of [`vsh_many`]: owners compute `m = v + λ` over the
+/// given masks (pre-drawn inline or popped from a pool), the sender
+/// delivers, the co-owner vouches, the recipient cross-checks — runs in
+/// the **ambient** phase, message-for-message the delivery of `Π_vSh`.
+pub(crate) fn vsh_deliver<R: Ring>(
+    ctx: &mut Ctx,
+    (pi, pj): (PartyId, PartyId),
+    vs: Option<&[R]>,
+    masks: &[VshMask<R>],
+) -> Result<Vec<MShare<R>>, Abort> {
+    assert_ne!(pi, pj);
+    assert!(pi.is_evaluator(), "sender P_i must be an evaluator");
+    let me = ctx.id();
+    let n = masks.len();
+    let is_owner = me == pi || me == pj;
+    if is_owner {
+        assert_eq!(vs.expect("owners must supply values").len(), n);
+    }
 
     (|ctx: &mut Ctx| {
         // owners compute m = v + λ (they hold all components)

@@ -284,7 +284,7 @@ pub fn matmul_tr_keyed(
 ) -> Result<(MMat<Z64>, MMat<Z64>), Abort> {
     let shift = match key.op {
         OpKind::MatMulTr { shift } => shift,
-        OpKind::MatMul => panic!("matmul_tr_keyed requires an OpKind::MatMulTr key"),
+        _ => panic!("matmul_tr_keyed requires an OpKind::MatMulTr key"),
     };
     assert_eq!((key.inner, key.cols), y.dims(), "resident Y must match the key shape");
     match pop_keyed(ctx, key)? {

@@ -53,4 +53,6 @@ pub mod registry;
 
 pub use planner::WavePlanner;
 pub use queue::{SchedQueue, SchedQueueStats, SchedQuery};
-pub use registry::{tenant_wave_key, tenant_weights, ModelRegistry, ResidentModel, TenantSpec};
+pub use registry::{
+    tenant_relu_key, tenant_wave_key, tenant_weights, ModelRegistry, ResidentModel, TenantSpec,
+};

@@ -19,7 +19,9 @@
 use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, P1, P2};
-use crate::pool::{fill_mat, CircuitKey, OpKind, Refill, RefillOutcome, WaterMarks};
+use crate::pool::{
+    fill_mat, fill_mat_relu, relu_key_for, CircuitKey, OpKind, Refill, RefillOutcome, WaterMarks,
+};
 use crate::proto::Ctx;
 use crate::ring::fixed::FRAC_BITS;
 use crate::ring::Z64;
@@ -101,6 +103,15 @@ impl TenantSpec {
         tenant_wave_key(self, self.wave_rows())
     }
 
+    /// The paired nonlinear circuit key of a `relu: true` tenant's full
+    /// coalesced wave (`None` for linear tenants). Keyed by the tenant's
+    /// model id like the matrix key, so the formerly-shared bit-extraction
+    /// material is **sharded per tenant** and a cross-tenant pop fails
+    /// closed — per-tenant offline budgets are exact.
+    pub fn relu_key(&self) -> Option<CircuitKey> {
+        self.relu.then(|| tenant_relu_key(self, self.wave_rows()))
+    }
+
     /// Arrival tick of query `id` under this tenant's arrival plan.
     pub fn arrival_tick(&self, id: usize) -> u64 {
         if self.arrive_per_tick == 0 {
@@ -126,6 +137,13 @@ pub fn tenant_wave_key(spec: &TenantSpec, rows: usize) -> CircuitKey {
     }
 }
 
+/// The nonlinear circuit key of tenant `spec`'s wave of `rows` stacked
+/// rows — the [`tenant_wave_key`] position with `op` replaced by
+/// `OpKind::Relu` over the wave's outputs.
+pub fn tenant_relu_key(spec: &TenantSpec, rows: usize) -> CircuitKey {
+    relu_key_for(&tenant_wave_key(spec, rows))
+}
+
 /// Deterministic resident weights for a tenant (at the model owner).
 pub fn tenant_weights(d: usize, seed: u64) -> F64Mat {
     let mut rng = Rng::seeded(seed ^ TW_SEED);
@@ -144,6 +162,9 @@ pub struct ResidentModel {
     pub w: MMat<Z64>,
     /// The registered full-wave circuit key.
     pub key: CircuitKey,
+    /// The paired full-wave nonlinear key (`relu: true` tenants): the
+    /// tick fills `MatCorr`+`ReluCorr` bundles in lockstep pairs.
+    pub relu_key: Option<CircuitKey>,
     marks: WaterMarks,
     refill: Refill,
 }
@@ -211,6 +232,7 @@ impl ModelRegistry {
         let w0 = (ctx.id() == P1).then(|| tenant_weights(spec.d, spec.seed));
         let w = share_fixed_mat(ctx, P1, w0.as_ref(), spec.d, 1)?;
         let key = spec.key();
+        let relu_key = spec.relu_key();
         // clamp the high-water mark to the tenant's total full-wave demand
         // so neither the warm-up fill nor a steady-state top-up can stock
         // more bundles than real waves will ever pop (a partial trailing
@@ -218,17 +240,16 @@ impl ModelRegistry {
         let total_full_waves = spec.queries.max(1) / spec.effective_coalesce();
         let high = high_water.max(1).min(total_full_waves.max(1));
         let marks = WaterMarks::new(low_water.min(high), high);
-        // keyed matrix bundles are filled by [`ModelRegistry::tick`] itself
-        // (so the top-up can be capped by remaining demand); the private
-        // Refill producer carries only the tenant's shapeless material
-        // (bit-extraction masks + λ for a ReLU pipeline)
-        let mut refill = Refill::new();
-        if spec.relu {
-            let rows = spec.wave_rows();
-            refill.register_bitext(WaterMarks::new(marks.low * rows, marks.high * rows));
-            refill.register_lam(marks);
-        }
-        self.models.push(ResidentModel { spec, w, key, marks, refill });
+        // keyed bundles — matrix AND (for `relu: true` tenants) the paired
+        // nonlinear bundles — are filled by [`ModelRegistry::tick`] itself,
+        // so the top-up can be capped by remaining demand. Nothing is
+        // registered on the formerly-shared typed bitext/λ queues any more:
+        // a tenant's nonlinear material lives under its own circuit key,
+        // which is what makes per-tenant offline budgets exact. The private
+        // producer stays for shapeless per-tenant targets a future pipeline
+        // may add.
+        let refill = Refill::new();
+        self.models.push(ResidentModel { spec, w, key, relu_key, marks, refill });
         Ok(self.models.len() - 1)
     }
 
@@ -248,11 +269,17 @@ impl ModelRegistry {
     ) -> Result<RefillOutcome, Abort> {
         let m = &self.models[t];
         let mut out = RefillOutcome::default();
-        let stock = ctx.pool.as_ref().map_or(0, |p| p.len_mat(&m.key));
+        let stock = ctx.pool.as_ref().map_or(0, |p| Self::paired_stock(p, m));
         if stock < m.marks.low {
             let need = (m.marks.high - stock).min(max_mat.saturating_sub(stock));
             if need > 0 {
-                fill_mat(ctx, m.key, &m.w, need)?;
+                match &m.relu_key {
+                    Some(rk) => {
+                        fill_mat_relu(ctx, m.key, *rk, &m.w, need)?;
+                        out.relu_items = need;
+                    }
+                    None => fill_mat(ctx, m.key, &m.w, need)?,
+                }
                 out.mat_items = need;
             }
         }
@@ -261,6 +288,17 @@ impl ModelRegistry {
         out.lam = rest.lam;
         out.bitext = rest.bitext;
         Ok(out)
+    }
+
+    /// The tenant's poppable keyed stock: matrix bundles, paired with the
+    /// nonlinear bundles for a ReLU tenant (the min keeps the refill state
+    /// machine safe under any skew, though paired fills/pops keep the two
+    /// queues equal by construction).
+    fn paired_stock(pool: &crate::pool::Pool, m: &ResidentModel) -> usize {
+        match &m.relu_key {
+            Some(rk) => pool.len_mat(&m.key).min(pool.len_relu(rk)),
+            None => pool.len_mat(&m.key),
+        }
     }
 
     /// The most-depleted tenant pool among `eligible` tenants: largest
@@ -276,7 +314,7 @@ impl ModelRegistry {
             if !eligible.get(t).copied().unwrap_or(false) {
                 continue;
             }
-            let stock = ctx.pool.as_ref().map_or(0, |p| p.len_mat(&m.key));
+            let stock = ctx.pool.as_ref().map_or(0, |p| Self::paired_stock(p, m));
             let deficit = m.marks.low.saturating_sub(stock);
             if deficit == 0 {
                 continue;
@@ -360,6 +398,47 @@ mod tests {
         for m in &outs {
             assert_eq!(m.high, 2, "high clamped to the 2 poppable full waves");
             assert_eq!(m.low, 1);
+        }
+    }
+
+    #[test]
+    fn relu_tenant_refills_paired_bundles_per_tenant() {
+        // a `relu: true` tenant's nonlinear material is keyed by ITS model
+        // id (no shared typed queue): the tick fills MatCorr+ReluCorr in
+        // pairs, the watermark state machine runs on the paired stock, and
+        // another tenant's key never sees the material
+        let run = run_4pc(NetProfile::zero(), 913, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let mut sa = spec("m1", 31, 3);
+            sa.relu = true;
+            let ta = reg.load(ctx, sa, 1, 2)?;
+            let tb = reg.load(ctx, spec("m2", 32, 3), 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            let o = reg.tick(ctx, ta, 8)?;
+            assert_eq!((o.mat_items, o.relu_items), (2, 2), "paired cold fill");
+            let (mk, rk) = (reg.model(ta).key, reg.model(ta).relu_key.expect("relu key"));
+            assert_eq!(rk.model, 31, "nonlinear material is sharded by tenant id");
+            // tenant B's position (same shape, different model id) sees
+            // none of tenant A's nonlinear material
+            let rk_b = relu_key_for(&reg.model(tb).key);
+            assert_eq!(ctx.pool.as_ref().unwrap().len_relu(&rk_b), 0);
+            // pop one pair → stock 1, at low: no refill
+            let _ = ctx.pool_mut().unwrap().pop_mat(&mk).unwrap().expect("stocked");
+            let _ = ctx.pool_mut().unwrap().pop_relu(&rk).unwrap().expect("stocked");
+            let o = reg.tick(ctx, ta, 8)?;
+            assert_eq!(o.relu_items, 0, "stock 1 is at low water: no refill");
+            // pop the second pair → stock 0 < low: paired top-up to high
+            let _ = ctx.pool_mut().unwrap().pop_mat(&mk).unwrap().expect("stocked");
+            let _ = ctx.pool_mut().unwrap().pop_relu(&rk).unwrap().expect("stocked");
+            let o = reg.tick(ctx, ta, 8)?;
+            assert_eq!((o.mat_items, o.relu_items), (2, 2), "paired top-up to high");
+            let pool = ctx.detach_pool().unwrap();
+            Ok((pool.len_mat(&mk), pool.len_relu(&rk)))
+        });
+        let (outs, _) = run.expect_ok();
+        for (m, r) in &outs {
+            assert_eq!((*m, *r), (2, 2), "mat and relu queues stay paired");
         }
     }
 

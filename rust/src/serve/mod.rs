@@ -13,17 +13,17 @@
 //!   λ / bitext masks pre-generated, but `matmul_offline`'s γ-exchange
 //!   still runs live per wave, so the per-request offline phase is cheap
 //!   but **not** message-free.
-//! * [`PoolMode::Keyed`] — circuit-position-keyed matrix wire-mask pooling
-//!   ([`crate::pool::mat`]): at model load the engine registers one
-//!   [`CircuitKey`] per resident matrix gate; each wave then drains one
-//!   keyed bundle (pre-drawn input wire mask, pre-exchanged `⟨Γ⟩`,
-//!   truncation pairs) and the **linear-layer wave performs zero
-//!   offline-phase messages** — the property the meter regression suite
-//!   pins down via the per-party sent-traffic counters. Scope note: a
-//!   ReLU output layer still runs `Π_BitExt`'s *input-dependent*
-//!   multiplication γ-exchange live inside the wave (only its mask
-//!   material is poolable), so keyed+relu waves are cheap but not silent —
-//!   pooling that γ per circuit position is an open ROADMAP item.
+//! * [`PoolMode::Keyed`] — circuit-position-keyed pooling
+//!   ([`crate::pool::mat`] + [`crate::pool::relu`]): at model load the
+//!   engine registers one [`CircuitKey`] per resident gate — the matrix
+//!   position and, for a ReLU pipeline, its **paired nonlinear position**.
+//!   Each wave then drains one keyed matrix bundle (pre-drawn input wire
+//!   mask, pre-exchanged `⟨Γ⟩`, truncation pairs) and, when the pipeline
+//!   ends in a ReLU, one paired `ReluCorr` bundle (bit-extraction masks,
+//!   pre-exchanged `⟨γ_{r·v}⟩`, pre-checked `Π_BitInj` material) — so the
+//!   **whole wave performs zero offline-phase messages**, the framework's
+//!   core invariant, pinned down per op by the per-party sent-traffic
+//!   counters (`offline_msgs_matmul` / `offline_msgs_relu`).
 //!
 //! ## Background refill
 //!
@@ -62,7 +62,9 @@ use std::collections::VecDeque;
 use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, Phase, P1, P2};
-use crate::pool::{CircuitKey, OpKind, Pool, PoolStats, Refill, RefillOutcome, WaterMarks};
+use crate::pool::{
+    relu_key_for, CircuitKey, OpKind, Pool, PoolStats, Refill, RefillOutcome, WaterMarks,
+};
 use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
 use crate::ring::fixed::{FixedPoint, FRAC_BITS};
 use crate::ring::{Matrix, Z64};
@@ -199,6 +201,17 @@ pub fn model_key(cfg: &ServeConfig) -> CircuitKey {
     wave_key(cfg, effective_coalesce(cfg) * cfg.rows_per_query)
 }
 
+/// The paired nonlinear key of a wave of `rows` stacked rows (`relu: true`
+/// workloads).
+pub fn relu_wave_key(cfg: &ServeConfig, rows: usize) -> CircuitKey {
+    relu_key_for(&wave_key(cfg, rows))
+}
+
+/// The nonlinear key the engine registers at model load (full wave).
+pub fn model_relu_key(cfg: &ServeConfig) -> CircuitKey {
+    relu_key_for(&model_key(cfg))
+}
+
 /// Per-party output of one serving run (internal).
 struct PartyOut {
     /// Per-batch online virtual-time deltas.
@@ -209,6 +222,11 @@ struct PartyOut {
     /// window (local counters — race-free across threads).
     wave_offline_msgs: Vec<u64>,
     wave_offline_bytes: Vec<u64>,
+    /// Per-batch offline messages inside the matrix-gate sub-window
+    /// (share → `Π_MatMulTr`) and the ReLU sub-window — attributes the
+    /// silence claim per op.
+    wave_offline_msgs_mat: Vec<u64>,
+    wave_offline_msgs_relu: Vec<u64>,
     /// Refill outcomes, tick order (warm-up tick first).
     refill_outcomes: Vec<RefillOutcome>,
     /// Online messages this party sent inside refill ticks (must be 0:
@@ -219,6 +237,7 @@ struct PartyOut {
     pool_stats: Option<PoolStats>,
     pool_left_trunc: usize,
     pool_left_mat: usize,
+    pool_left_relu: usize,
 }
 
 /// Aggregated serving measurements.
@@ -251,6 +270,13 @@ pub struct ServeStats {
     pub offline_msgs_in_waves: u64,
     /// Same window, payload bytes.
     pub offline_bytes_in_waves: u64,
+    /// The matrix-gate share of `offline_msgs_in_waves` (share →
+    /// `Π_MatMulTr` sub-window) — attributes the silence claim per op.
+    pub offline_msgs_matmul: u64,
+    /// The ReLU share of `offline_msgs_in_waves` (0 when `relu: false`, 0
+    /// for warm keyed ReLU bundles, > 0 when `Π_BitExt`/`Π_BitInj` offline
+    /// work runs live inside the wave).
+    pub offline_msgs_relu: u64,
     /// Refill ticks taken (including the warm-up tick).
     pub refill_ticks: usize,
     /// Keyed matrix bundles generated by refill ticks.
@@ -264,6 +290,9 @@ pub struct ServeStats {
     pub pool_left_trunc: usize,
     /// Keyed bundles left under the registered model key at shutdown.
     pub pool_left_mat: usize,
+    /// Nonlinear bundles left under the registered ReLU key at shutdown
+    /// (paired with `pool_left_mat` for `relu: true` keyed workloads).
+    pub pool_left_relu: usize,
     /// Online round cost of each coalesced batch (all ~equal: the rounds of
     /// a single query, regardless of how many were coalesced).
     pub rounds_per_batch: Vec<u64>,
@@ -354,14 +383,14 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
         }
         PoolMode::Keyed => {
             ctx.attach_pool(Pool::new());
-            refill.register_mat(
-                model_key(cfg),
-                w.clone(),
-                WaterMarks::new(cfg.low_water, cfg.high_water.max(1)),
-            );
+            let marks = WaterMarks::new(cfg.low_water, cfg.high_water.max(1));
             if cfg.relu {
-                refill.register_bitext(scaled_marks());
-                refill.register_lam(WaterMarks::new(cfg.low_water, cfg.high_water.max(1)));
+                // paired matrix + nonlinear bundles: the whole wave —
+                // including the ReLU — then drains keyed material and sends
+                // zero offline-phase messages
+                refill.register_mat_relu(model_key(cfg), model_relu_key(cfg), w.clone(), marks);
+            } else {
+                refill.register_mat(model_key(cfg), w.clone(), marks);
             }
         }
     }
@@ -371,12 +400,15 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
         batch_rounds: Vec::new(),
         wave_offline_msgs: Vec::new(),
         wave_offline_bytes: Vec::new(),
+        wave_offline_msgs_mat: Vec::new(),
+        wave_offline_msgs_relu: Vec::new(),
         refill_outcomes: Vec::new(),
         tick_online_msgs: 0,
         answers: Vec::new(),
         pool_stats: None,
         pool_left_trunc: 0,
         pool_left_mat: 0,
+        pool_left_relu: 0,
     };
 
     // warm-up: the first "between waves" slot is before the first wave
@@ -440,10 +472,19 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
                 matmul_tr(ctx, &x_sh, &w)?
             }
         };
+        let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
+        let or0 = ctx.net.sent_msgs(Phase::Offline);
         if cfg.relu {
-            let (r, _) = crate::ml::relu_many(ctx, &u.to_shares())?;
+            let shares = u.to_shares();
+            let (r, _) = match cfg.mode {
+                PoolMode::Keyed => {
+                    crate::ml::relu_many_keyed(ctx, &relu_wave_key(cfg, rows), &shares)?
+                }
+                _ => crate::ml::relu_many(ctx, &shares)?,
+            };
             u = MMat::from_shares(rows, 1, &r);
         }
+        let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
 
         // deliver: open towards the data owner, flushing verification
         let opened =
@@ -456,6 +497,8 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
         out.batch_rounds.push(ctx.net.rounds(Phase::Online) - r0);
         out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
         out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
+        out.wave_offline_msgs_mat.push(om_mat);
+        out.wave_offline_msgs_relu.push(om_relu);
 
         // between waves: the background producer tops the pools back up —
         // but only while a full wave remains; a trailing partial wave keys
@@ -470,6 +513,7 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
         out.pool_stats = Some(pool.stats());
         out.pool_left_trunc = pool.len_trunc(FRAC_BITS);
         out.pool_left_mat = pool.len_mat(&model_key(cfg));
+        out.pool_left_relu = pool.len_relu(&model_relu_key(cfg));
     }
     Ok(out)
 }
@@ -494,6 +538,10 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
         outs.iter().map(|o| o.wave_offline_msgs.iter().sum::<u64>()).sum();
     let offline_bytes_in_waves: u64 =
         outs.iter().map(|o| o.wave_offline_bytes.iter().sum::<u64>()).sum();
+    let offline_msgs_matmul: u64 =
+        outs.iter().map(|o| o.wave_offline_msgs_mat.iter().sum::<u64>()).sum();
+    let offline_msgs_relu: u64 =
+        outs.iter().map(|o| o.wave_offline_msgs_relu.iter().sum::<u64>()).sum();
     ServeStats {
         queries: cfg.queries,
         batches,
@@ -507,12 +555,15 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
         offline_value_bits: report.value_bits[Phase::Offline as usize],
         offline_msgs_in_waves,
         offline_bytes_in_waves,
+        offline_msgs_matmul,
+        offline_msgs_relu,
         refill_ticks: outs[1].refill_outcomes.len(),
         refill_mat_items: outs[1].refill_outcomes.iter().map(|o| o.mat_items).sum(),
         refill_online_msgs: outs.iter().map(|o| o.tick_online_msgs).sum(),
         pool_stats: outs[1].pool_stats,
         pool_left_trunc: outs[1].pool_left_trunc,
         pool_left_mat: outs[1].pool_left_mat,
+        pool_left_relu: outs[1].pool_left_relu,
         rounds_per_batch: outs[1].batch_rounds.clone(),
         answers: outs[2].answers.clone(),
         report,
@@ -599,11 +650,39 @@ mod tests {
             c.relu = true;
             let stats = serve(NetProfile::zero(), c.clone());
             let ps = stats.pool_stats.expect("pool attached");
-            assert!(ps.bitext_hits >= 1, "relu must drain bitext masks: {ps:?}");
+            match mode {
+                // scalar: position-independent masks from the typed queue
+                PoolMode::Scalar => {
+                    assert!(ps.bitext_hits >= 1, "relu must drain bitext masks: {ps:?}")
+                }
+                // keyed: the wave drains one whole nonlinear bundle instead
+                _ => assert!(ps.relu_hits >= 1, "relu must drain keyed bundles: {ps:?}"),
+            }
             let want = cleartext_predictions(&c);
             for (got, want) in stats.answers.iter().zip(&want) {
                 assert!((got - want).abs() < 0.01, "relu serving ({mode:?}): {got} vs {want}");
             }
+        }
+    }
+
+    #[test]
+    fn keyed_relu_wave_drains_paired_bundles_and_strands_nothing() {
+        // 4 queries at coalesce 2 → two full relu waves: each drains one
+        // matrix + one nonlinear bundle; refill tops both up in pairs and
+        // nothing is stranded at shutdown
+        let mut c = cfg(4, 2, PoolMode::Keyed);
+        c.relu = true;
+        let stats = serve(NetProfile::zero(), c.clone());
+        let ps = stats.pool_stats.expect("pool attached");
+        assert_eq!(ps.mat_hits, 2, "both waves drain a matrix bundle: {ps:?}");
+        assert_eq!(ps.relu_hits, 2, "both waves drain a nonlinear bundle: {ps:?}");
+        assert_eq!(ps.relu_misses, 0);
+        assert_eq!(ps.bitext_hits, 0, "keyed mode never touches the typed bitext queue");
+        assert_eq!(stats.pool_left_mat, 0);
+        assert_eq!(stats.pool_left_relu, 0, "paired queues drain in lockstep");
+        let want = cleartext_predictions(&c);
+        for (got, want) in stats.answers.iter().zip(&want) {
+            assert!((got - want).abs() < 0.01, "keyed relu wave: {got} vs {want}");
         }
     }
 

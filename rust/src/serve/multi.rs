@@ -22,11 +22,14 @@
 //! trailing partial wave), optional batched ReLU, verified reconstruction
 //! towards the data owner.
 //!
-//! Scope note: keyed matrix bundles are tenant-sharded; bit-extraction
-//! masks (`relu: true` tenants) are input- and position-independent
-//! material and stay in the shared typed queue, topped up by whichever
-//! tenant's refill tick runs — sharing them leaks nothing and wastes
-//! nothing.
+//! Nonlinear material is tenant-sharded too: a `relu: true` tenant's
+//! bit-extraction masks, `⟨γ_{r·v}⟩` and `Π_BitInj` correlations live in
+//! [`crate::pool::relu::ReluCorr`] bundles under the tenant's own
+//! `OpKind::Relu` circuit key, generated **paired** with the matrix
+//! bundles — so per-tenant offline budgets are exact, a cross-tenant pop
+//! fails closed, and a warm keyed wave is offline-silent through the
+//! whole pipeline, ReLU included (the per-op counters
+//! `offline_msgs_matmul` / `offline_msgs_relu` attribute the claim).
 
 use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
@@ -36,8 +39,8 @@ use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
 use crate::ring::fixed::FixedPoint;
 use crate::ring::{Matrix, Z64};
 use crate::sched::{
-    tenant_wave_key, tenant_weights, ModelRegistry, SchedQueue, SchedQueueStats, SchedQuery,
-    TenantSpec, WavePlanner,
+    tenant_relu_key, tenant_wave_key, tenant_weights, ModelRegistry, SchedQueue, SchedQueueStats,
+    SchedQuery, TenantSpec, WavePlanner,
 };
 use crate::sharing::MMat;
 
@@ -124,6 +127,10 @@ struct MultiPartyOut {
     /// Offline messages/bytes *this party* sent inside the wave window.
     wave_offline_msgs: Vec<u64>,
     wave_offline_bytes: Vec<u64>,
+    /// Per-wave offline messages inside the matrix-gate and ReLU
+    /// sub-windows — attributes the silence claim per op.
+    wave_offline_msgs_mat: Vec<u64>,
+    wave_offline_msgs_relu: Vec<u64>,
     /// Whether the wave drained a keyed bundle (vs inline fallback).
     wave_keyed_hit: Vec<bool>,
     /// `(query id, sojourn ticks)` per query of each wave.
@@ -141,6 +148,7 @@ struct MultiPartyOut {
     queue_stats: SchedQueueStats,
     pool_stats: Option<PoolStats>,
     pool_left_mat: Vec<usize>,
+    pool_left_relu: Vec<usize>,
 }
 
 impl MultiPartyOut {
@@ -151,6 +159,8 @@ impl MultiPartyOut {
             wave_rounds: Vec::new(),
             wave_offline_msgs: Vec::new(),
             wave_offline_bytes: Vec::new(),
+            wave_offline_msgs_mat: Vec::new(),
+            wave_offline_msgs_relu: Vec::new(),
             wave_keyed_hit: Vec::new(),
             wave_sojourn: Vec::new(),
             refill_ticks: vec![0; nt],
@@ -161,6 +171,7 @@ impl MultiPartyOut {
             queue_stats: SchedQueueStats::default(),
             pool_stats: None,
             pool_left_mat: vec![0; nt],
+            pool_left_relu: vec![0; nt],
         }
     }
 }
@@ -191,10 +202,17 @@ pub struct TenantServeStats {
     /// Offline-phase messages any party sent inside this tenant's wave
     /// windows (0 for warm keyed pools).
     pub offline_msgs_in_waves: u64,
+    /// The matrix-gate / ReLU split of `offline_msgs_in_waves` — the
+    /// silence claim, attributable per op.
+    pub offline_msgs_matmul: u64,
+    pub offline_msgs_relu: u64,
     pub refill_ticks: usize,
     pub refill_mat_items: usize,
     /// Keyed bundles left under this tenant's key at shutdown.
     pub pool_left_mat: usize,
+    /// Nonlinear bundles left under this tenant's ReLU key at shutdown
+    /// (always paired with `pool_left_mat` for `relu: true` tenants).
+    pub pool_left_relu: usize,
     /// Decoded predictions (`(query id, row values)`), query-id order, as
     /// seen by the data owner.
     pub answers: Vec<(usize, Vec<f64>)>,
@@ -220,6 +238,9 @@ pub struct MultiServeStats {
     pub online_latency: f64,
     pub offline_msgs_in_waves: u64,
     pub offline_bytes_in_waves: u64,
+    /// The matrix-gate / ReLU split of `offline_msgs_in_waves`.
+    pub offline_msgs_matmul: u64,
+    pub offline_msgs_relu: u64,
     /// Online messages inside refill ticks, summed over parties (must be 0).
     pub refill_online_msgs: u64,
     /// Pops where aging lifted an older lower-priority query (queue stat).
@@ -374,10 +395,18 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
             let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
             matmul_tr(ctx, &x_sh, w)?
         };
+        let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
+        let or0 = ctx.net.sent_msgs(Phase::Offline);
         if spec.relu {
-            let (r, _) = crate::ml::relu_many(ctx, &u.to_shares())?;
+            let shares = u.to_shares();
+            let (r, _) = if keyed {
+                crate::ml::relu_many_keyed(ctx, &tenant_relu_key(spec, rows), &shares)?
+            } else {
+                crate::ml::relu_many(ctx, &shares)?
+            };
             u = MMat::from_shares(rows, 1, &r);
         }
+        let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
         let opened =
             crate::proto::reconstruct::reconstruct_to_many(ctx, &u.to_shares(), &[P2])?;
         if let Some(vals) = opened {
@@ -395,6 +424,8 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         out.wave_rounds.push(ctx.net.rounds(Phase::Online) - r0);
         out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
         out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
+        out.wave_offline_msgs_mat.push(om_mat);
+        out.wave_offline_msgs_relu.push(om_relu);
         out.wave_keyed_hit
             .push(ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits) > h0);
         out.wave_sojourn
@@ -428,6 +459,8 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         out.pool_stats = Some(pool.stats());
         for t in 0..nt {
             out.pool_left_mat[t] = pool.len_mat(&reg.model(t).key);
+            out.pool_left_relu[t] =
+                reg.model(t).relu_key.map_or(0, |rk| pool.len_relu(&rk));
         }
     }
     out.queue_stats = queue.stats().clone();
@@ -452,6 +485,10 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
         (0..waves).map(|i| outs.iter().map(|o| o.wave_offline_msgs[i]).sum()).collect();
     let wave_off_bytes: Vec<u64> =
         (0..waves).map(|i| outs.iter().map(|o| o.wave_offline_bytes[i]).sum()).collect();
+    let wave_off_mat: Vec<u64> =
+        (0..waves).map(|i| outs.iter().map(|o| o.wave_offline_msgs_mat[i]).sum()).collect();
+    let wave_off_relu: Vec<u64> =
+        (0..waves).map(|i| outs.iter().map(|o| o.wave_offline_msgs_relu[i]).sum()).collect();
     let qs = &outs[1].queue_stats;
 
     let mut tenants = Vec::with_capacity(nt);
@@ -460,7 +497,7 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
         let mut lats: Vec<f64> = Vec::new();
         let mut sojourns: Vec<u64> = Vec::new();
         let (mut waves_t, mut keyed_waves, mut inline_waves) = (0usize, 0usize, 0usize);
-        let mut offm = 0u64;
+        let (mut offm, mut offm_mat, mut offm_relu) = (0u64, 0u64, 0u64);
         for i in 0..waves {
             if outs[1].wave_tenant[i] != t {
                 continue;
@@ -472,6 +509,8 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
                 inline_waves += 1;
             }
             offm += wave_off_msgs[i];
+            offm_mat += wave_off_mat[i];
+            offm_relu += wave_off_relu[i];
             for &(_qid, so) in &outs[1].wave_sojourn[i] {
                 sojourns.push(so);
                 lats.push(wave_lat[i]);
@@ -498,9 +537,12 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
             },
             max_sojourn_ticks: sojourns.iter().copied().max().unwrap_or(0),
             offline_msgs_in_waves: offm,
+            offline_msgs_matmul: offm_mat,
+            offline_msgs_relu: offm_relu,
             refill_ticks: outs[1].refill_ticks[t],
             refill_mat_items: outs[1].refill_mat_items[t],
             pool_left_mat: outs[1].pool_left_mat[t],
+            pool_left_relu: outs[1].pool_left_relu[t],
             answers,
         });
     }
@@ -516,6 +558,8 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
         online_latency: wave_lat.iter().sum(),
         offline_msgs_in_waves: wave_off_msgs.iter().sum(),
         offline_bytes_in_waves: wave_off_bytes.iter().sum(),
+        offline_msgs_matmul: wave_off_mat.iter().sum(),
+        offline_msgs_relu: wave_off_relu.iter().sum(),
         refill_online_msgs: outs.iter().map(|o| o.tick_online_msgs).sum(),
         aged_promotions: qs.aged_promotions,
         pool_stats: outs[1].pool_stats,
@@ -689,6 +733,16 @@ mod tests {
         let stats = serve_multi(NetProfile::zero(), cfg.clone());
         assert_answers_match_cleartext(&stats, &cfg);
         let ps = stats.pool_stats.expect("pool attached");
-        assert!(ps.bitext_hits >= 1, "relu tenant must drain bitext masks: {ps:?}");
+        assert!(
+            ps.relu_hits >= 1,
+            "relu tenant must drain its keyed nonlinear bundles: {ps:?}"
+        );
+        assert_eq!(
+            ps.bitext_hits, 0,
+            "keyed tenants never touch the shared typed bitext queue: {ps:?}"
+        );
+        // the linear tenant consumed no nonlinear material
+        assert_eq!(stats.tenants[0].offline_msgs_relu, 0);
+        assert_eq!(stats.tenants[1].pool_left_relu, 0, "paired queues drain together");
     }
 }

@@ -29,7 +29,10 @@
 use trident::convert::{bit2a, bit2a_many, bitext, bitext_many};
 use trident::crypto::Rng;
 use trident::net::{NetProfile, Phase, P1, P2, P3};
-use trident::pool::{fill_bitext, fill_lam, fill_mat, fill_trunc, CircuitKey, OpKind, Pool};
+use trident::pool::{
+    fill_bitext, fill_lam, fill_mat, fill_mat_relu, fill_trunc, relu_key_for, CircuitKey, OpKind,
+    Pool,
+};
 use trident::proto::sharing::share_many_n;
 use trident::proto::{
     dotp, matmul, matmul_keyed, matmul_tr_keyed, mult, mult_many, mult_tr, mult_tr_many,
@@ -1158,6 +1161,446 @@ fn pool_backed_serving_keeps_p0_offline_only() {
         p0_online <= others,
         "P0 online time {p0_online} must not exceed the evaluators' {others}"
     );
+}
+
+// ---------------------------------------- circuit-keyed nonlinear (ReLU) pool
+
+/// Fixture for the keyed ReLU pipeline: resident `inner×cols` model dealt
+/// by P1, live `rows×inner` input dealt by P2, `Π_MatMulTr` + ReLU.
+fn relu_fixture(
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    seed: u64,
+) -> (CircuitKey, CircuitKey, Matrix<Z64>, Matrix<Z64>, Vec<f64>) {
+    let mat_key = CircuitKey {
+        model: 50 + seed,
+        layer: 0,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows,
+        inner,
+        cols,
+        dealer: P2,
+    };
+    let relu_key = relu_key_for(&mat_key);
+    let mut rng = Rng::seeded(seed);
+    let xf: Vec<f64> = (0..rows * inner).map(|_| rng.normal()).collect();
+    let yf: Vec<f64> = (0..inner * cols).map(|_| rng.normal()).collect();
+    let x = Matrix::from_vec(rows, inner, xf.iter().map(|&v| FixedPoint::encode(v)).collect());
+    let y = Matrix::from_vec(inner, cols, yf.iter().map(|&v| FixedPoint::encode(v)).collect());
+    // oracle on the fixed-point ring product (isolates the ≤2-ulp
+    // probabilistic-truncation error from the f64→fixed encoding error)
+    let clear = x.matmul(&y);
+    let want: Vec<f64> = clear
+        .data()
+        .iter()
+        .map(|&v| FixedPoint::decode(v.truncate(FRAC_BITS)).max(0.0))
+        .collect();
+    (mat_key, relu_key, x, y, want)
+}
+
+#[test]
+fn relu_pool_keyed_pipeline_matches_inline_and_cleartext_over_shape_grid() {
+    for (rows, inner, cols) in [(1usize, 3usize, 1usize), (3, 1, 1), (2, 3, 1), (2, 2, 2)] {
+        let (mat_key, relu_key, x, y, want) =
+            relu_fixture(rows, inner, cols, 7 + rows as u64 * 10 + inner as u64);
+        let (x2, y2) = (x.clone(), y.clone());
+        let run = run_4pc(NetProfile::zero(), 681, move |ctx| {
+            let ysh = share_mat(ctx, P1, &y2)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_key, relu_key, &ysh, 1)?;
+            // --- keyed pipeline, windowed: zero offline-phase sends ---
+            let off0 = ctx.net.sent_msgs(Phase::Offline);
+            let (_xsh, u) =
+                matmul_tr_keyed(ctx, &mat_key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+            let (keyed, _) = trident::ml::relu_many_keyed(ctx, &relu_key, &u.to_shares())?;
+            let off_sent = ctx.net.sent_msgs(Phase::Offline) - off0;
+            // --- inline pipeline over the same inputs ---
+            let xsh = share_mat(ctx, P2, &x2)?;
+            let u2 = trident::proto::matmul_tr(ctx, &xsh, &ysh)?;
+            let (inline, _) = trident::ml::relu_many(ctx, &u2.to_shares())?;
+            ctx.flush_verify()?;
+            let stats = ctx.detach_pool().unwrap().stats();
+            Ok((keyed, inline, off_sent, stats))
+        });
+        let (outs, _) = run.expect_ok();
+        for (i, want) in want.iter().enumerate() {
+            let k = FixedPoint::decode(open(&[
+                outs[0].0[i],
+                outs[1].0[i],
+                outs[2].0[i],
+                outs[3].0[i],
+            ]));
+            let il = FixedPoint::decode(open(&[
+                outs[0].1[i],
+                outs[1].1[i],
+                outs[2].1[i],
+                outs[3].1[i],
+            ]));
+            let tol = 4.0 / SCALE;
+            assert!(
+                (k - want).abs() <= tol,
+                "{rows}×{inner}×{cols} out {i}: keyed relu {k}, oracle {want}"
+            );
+            assert!(
+                (il - want).abs() <= tol,
+                "{rows}×{inner}×{cols} out {i}: inline relu {il}, oracle {want}"
+            );
+        }
+        for (p, o) in outs.iter().enumerate() {
+            assert_eq!(
+                o.2, 0,
+                "P{p} sent offline messages inside the keyed matmul_tr→relu pipeline"
+            );
+            assert_eq!(o.3.mat_hits, 1, "P{p}: matrix bundle drained");
+            assert_eq!(o.3.relu_hits, 1, "P{p}: nonlinear bundle drained");
+        }
+    }
+}
+
+#[test]
+fn relu_pool_mult_online_cost_unchanged_and_offline_moved_not_grown() {
+    // 1×1×1 gate + width-1 ReLU: the keyed pipeline must keep the exact
+    // online shape of the inline path — Π_Mult's 3ℓ/1-round exchange
+    // included — and move its offline bits into the fill without growing
+    // them.
+    let (mat_key, relu_key, x, y, _) = relu_fixture(1, 1, 1, 99);
+    let (x2, y2) = (x.clone(), y.clone());
+    let keyed = run_4pc(NetProfile::zero(), 682, move |ctx| {
+        let ysh = share_mat(ctx, P1, &y2)?;
+        ctx.attach_pool(Pool::new());
+        fill_mat_relu(ctx, mat_key, relu_key, &ysh, 1)?;
+        let (_xsh, u) = matmul_tr_keyed(ctx, &mat_key, (ctx.id() == P2).then_some(&x2), &ysh)?;
+        let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_key, &u.to_shares())?;
+        ctx.flush_verify()?;
+        Ok(r)
+    });
+    let (x3, y3) = (x.clone(), y.clone());
+    let inline = run_4pc(NetProfile::zero(), 682, move |ctx| {
+        let ysh = share_mat(ctx, P1, &y3)?;
+        let xsh = share_mat(ctx, P2, &x3)?;
+        let u = trident::proto::matmul_tr(ctx, &xsh, &ysh)?;
+        let (r, _) = trident::ml::relu_many(ctx, &u.to_shares())?;
+        ctx.flush_verify()?;
+        Ok(r)
+    });
+    let (kouts, krep) = keyed.expect_ok();
+    let (iouts, irep) = inline.expect_ok();
+    let kv = FixedPoint::decode(open(&[kouts[0][0], kouts[1][0], kouts[2][0], kouts[3][0]]));
+    let iv = FixedPoint::decode(open(&[iouts[0][0], iouts[1][0], iouts[2][0], iouts[3][0]]));
+    assert!((kv - iv).abs() <= 4.0 / SCALE, "keyed {kv} vs inline {iv}");
+    assert_eq!(
+        krep.value_bits[1], irep.value_bits[1],
+        "online bits identical (Π_Mult stays 3ℓ)"
+    );
+    assert_eq!(krep.rounds[1], irep.rounds[1], "online rounds identical");
+    assert_eq!(
+        krep.value_bits[0], irep.value_bits[0],
+        "offline bits moved into the fill, not grown"
+    );
+}
+
+#[test]
+fn relu_pool_warm_keyed_relu_waves_offline_silent_single_tenant() {
+    use trident::serve::{cleartext_predictions, serve, PoolMode, ServeConfig};
+    let cfg = ServeConfig {
+        d: 12,
+        rows_per_query: 2,
+        queries: 6,
+        coalesce: 3,
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        relu: true,
+        seed: 683,
+    };
+    let s = serve(NetProfile::zero(), cfg.clone());
+    // THE tentpole property, now through the nonlinear layer too: no party
+    // sends a single offline-phase message inside any serving wave
+    assert_eq!(s.offline_msgs_in_waves, 0, "keyed relu waves must be offline-silent");
+    assert_eq!(s.offline_msgs_matmul, 0, "matrix sub-window silent");
+    assert_eq!(s.offline_msgs_relu, 0, "relu sub-window silent");
+    assert_eq!(s.refill_online_msgs, 0, "refill traffic is offline-phase only");
+    let want = cleartext_predictions(&cfg);
+    assert_eq!(s.answers.len(), want.len());
+    for (got, want) in s.answers.iter().zip(&want) {
+        assert!((got - want).abs() < 0.01, "silent relu wave answer: {got} vs {want}");
+    }
+    // the scalar pool still runs the bitext γ-exchange and the Π_BitInj
+    // offline sharings live inside the wave — and the per-op split shows
+    // exactly where
+    let scalar = serve(NetProfile::zero(), ServeConfig { mode: PoolMode::Scalar, ..cfg });
+    assert!(scalar.offline_msgs_relu > 0, "scalar relu still works offline in-wave");
+    // … while the online shape is identical either way
+    assert_eq!(s.online_rounds, scalar.online_rounds);
+    assert_eq!(s.online_value_bits, scalar.online_value_bits);
+}
+
+#[test]
+fn relu_pool_two_tenant_warm_relu_run_every_wave_silent() {
+    use trident::serve::{serve_multi, PoolMode};
+    // the acceptance-criteria run: two --relu tenants, tightest refill
+    // cadence (low == high == 1), warmth maintained by interleaved refill
+    let mut cfg = two_tenant_cfg(PoolMode::Keyed, 1, 1);
+    for t in &mut cfg.tenants {
+        t.relu = true;
+    }
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.waves, 6, "3 full waves per tenant");
+    for (i, m) in s.wave_offline_msgs.iter().enumerate() {
+        assert_eq!(
+            *m, 0,
+            "wave {i} (tenant {}) sent offline-phase messages inside the wave window",
+            s.wave_tenants[i]
+        );
+    }
+    assert_eq!(s.offline_msgs_matmul, 0);
+    assert_eq!(s.offline_msgs_relu, 0, "the nonlinear leg is silent in every wave");
+    for ts in &s.tenants {
+        assert_eq!(ts.offline_msgs_in_waves, 0, "per-tenant offline silence: {ts:?}");
+        assert_eq!(ts.keyed_waves, ts.waves, "every wave drained keyed bundles");
+        assert_eq!(ts.pool_left_mat, 0, "no matrix bundle stranded");
+        assert_eq!(ts.pool_left_relu, 0, "no nonlinear bundle stranded");
+    }
+    assert_eq!(s.refill_online_msgs, 0, "refill traffic is offline-phase only");
+    let ps = s.pool_stats.expect("pool attached");
+    assert_eq!(ps.relu_hits, 6, "one nonlinear bundle per wave: {ps:?}");
+    assert_eq!(ps.bitext_hits, 0, "the shared typed bitext queue is never touched");
+    assert_tenant_answers_match_cleartext(&s, &cfg, "warm two-tenant relu");
+}
+
+#[test]
+fn relu_pool_tampered_gamma_aborts_never_wrong_value() {
+    let (mat_key, relu_key, x, y, want) = relu_fixture(2, 3, 1, 55);
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        684,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_key, relu_key, &ysh, 1)?;
+            if ctx.id() == P1 {
+                // malicious P1 corrupts its held ⟨γ_{r·v}⟩ component
+                ctx.pool_mut().unwrap().relu_front_mut(&relu_key).unwrap().tamper_gamma();
+            }
+            let (_xsh, u) =
+                matmul_tr_keyed(ctx, &mat_key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_key, &u.to_shares())?;
+            ctx.flush_verify()?;
+            trident::proto::reconstruct::reconstruct_many(ctx, &r)
+        },
+    );
+    assert!(run.any_verify_abort(), "tampered pooled γ must abort");
+    for (i, out) in run.outputs.iter().enumerate() {
+        if i == 1 {
+            continue; // the cheater's own view is unconstrained
+        }
+        if let Ok(vals) = out {
+            for (r, want) in want.iter().enumerate() {
+                let got = FixedPoint::decode(vals[r]);
+                assert!(
+                    (got - want).abs() < 0.01,
+                    "P{i} accepted a wrong opened value: {got} (want {want})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn relu_pool_tampered_bitext_mask_aborts() {
+    let (mat_key, relu_key, x, y, _) = relu_fixture(2, 3, 1, 56);
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        685,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_key, relu_key, &ysh, 1)?;
+            if ctx.id() == P3 {
+                // malicious P3 corrupts a held λ component of [[r]]
+                ctx.pool_mut().unwrap().relu_front_mut(&relu_key).unwrap().tamper_mask_r();
+            }
+            let (_xsh, u) =
+                matmul_tr_keyed(ctx, &mat_key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_key, &u.to_shares())?;
+            ctx.flush_verify()?;
+            let _ = r;
+            Ok(())
+        },
+    );
+    assert!(run.any_verify_abort(), "tampered pooled BitExtMask must abort");
+}
+
+#[test]
+fn relu_pool_replayed_bundle_aborts() {
+    let (mat_key, relu_key, x, y, _) = relu_fixture(2, 3, 1, 57);
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        686,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_key, relu_key, &ysh, 2)?;
+            if ctx.id() == P1 {
+                // P1 re-serves its first nonlinear bundle while the peers
+                // advance to the second
+                assert!(ctx.pool_mut().unwrap().replay_front_relu(&relu_key));
+            }
+            for _ in 0..2 {
+                let (_xsh, u) =
+                    matmul_tr_keyed(ctx, &mat_key, (ctx.id() == P2).then_some(&x), &ysh)?;
+                let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_key, &u.to_shares())?;
+                let _ = r;
+            }
+            ctx.flush_verify()?;
+            Ok(())
+        },
+    );
+    assert!(run.any_verify_abort(), "replayed nonlinear bundle must abort");
+}
+
+#[test]
+fn relu_pool_cross_key_pop_fails_closed() {
+    let (mat_a, relu_a, x, y, _) = relu_fixture(2, 3, 1, 58);
+    let mat_b = CircuitKey { layer: mat_a.layer + 1, ..mat_a };
+    let relu_b = relu_key_for(&mat_b);
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        687,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_a, relu_a, &ysh, 1)?;
+            fill_mat_relu(ctx, mat_b, relu_b, &ysh, 1)?;
+            if ctx.id() == P1 {
+                // P1 files layer-a nonlinear material at layer b's position
+                assert!(ctx.pool_mut().unwrap().cross_file_front_relu(&relu_a, &relu_b));
+            }
+            // layer b's wave: P1's relu pop must fail closed before any
+            // online message is computed from wrong-position masks
+            let (_xsh, u) =
+                matmul_tr_keyed(ctx, &mat_b, (ctx.id() == P2).then_some(&x), &ysh)?;
+            let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_b, &u.to_shares())?;
+            ctx.flush_verify()?;
+            let _ = r;
+            Ok(())
+        },
+    );
+    assert!(
+        matches!(run.outputs[1], Err(trident::net::Abort::Verify(_))),
+        "P1 must fail closed on cross-keyed nonlinear material: {:?}",
+        run.outputs[1].as_ref().err()
+    );
+    assert!(run.any_verify_abort());
+}
+
+#[test]
+fn relu_pool_cross_tenant_pop_fails_closed() {
+    use trident::sched::{tenant_relu_key, tenant_wave_key, TenantSpec};
+    // two relu tenants with byte-identical wave shapes — only the tenant
+    // id in the circuit key differs
+    let mk = |name: &str, model: u64| {
+        let mut s = TenantSpec::new(name, model, 3, 4, 2);
+        s.relu = true;
+        s
+    };
+    let (spec_a, spec_b) = (mk("tenant-a", 301), mk("tenant-b", 302));
+    let rows = spec_a.wave_rows();
+    let (mat_a, relu_a) = (tenant_wave_key(&spec_a, rows), tenant_relu_key(&spec_a, rows));
+    let (mat_b, relu_b) = (tenant_wave_key(&spec_b, rows), tenant_relu_key(&spec_b, rows));
+    assert_ne!(relu_a, relu_b, "tenant id shards the nonlinear key space");
+    let (_, _, x, y, want) = relu_fixture(rows, spec_a.d, 1, 59);
+    let run = run_4pc_timeout(
+        NetProfile::zero(),
+        688,
+        std::time::Duration::from_millis(500),
+        move |ctx| {
+            let ysh = share_mat(ctx, P1, &y)?;
+            ctx.attach_pool(Pool::new());
+            fill_mat_relu(ctx, mat_a, relu_a, &ysh, 1)?;
+            fill_mat_relu(ctx, mat_b, relu_b, &ysh, 1)?;
+            if ctx.id() == P1 {
+                // malicious P1 files tenant A's nonlinear correlation at
+                // tenant B's position (shape-compatible, so only the
+                // embedded key can catch it)
+                assert!(ctx.pool_mut().unwrap().cross_file_front_relu(&relu_a, &relu_b));
+            }
+            let (_xsh, u) =
+                matmul_tr_keyed(ctx, &mat_b, (ctx.id() == P2).then_some(&x), &ysh)?;
+            let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_b, &u.to_shares())?;
+            ctx.flush_verify()?;
+            trident::proto::reconstruct::reconstruct_many(ctx, &r)
+        },
+    );
+    assert!(
+        matches!(run.outputs[1], Err(trident::net::Abort::Verify(_))),
+        "P1 must fail closed on cross-tenant nonlinear material: {:?}",
+        run.outputs[1].as_ref().err()
+    );
+    assert!(run.any_verify_abort());
+    // an honest party that did complete never accepted a wrong value
+    for (i, out) in run.outputs.iter().enumerate() {
+        if i == 1 {
+            continue;
+        }
+        if let Ok(vals) = out {
+            for (r, want) in want.iter().enumerate() {
+                let got = FixedPoint::decode(vals[r]);
+                assert!(
+                    (got - want).abs() < 0.01,
+                    "P{i} accepted a wrong opened value: {got} (want {want})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn relu_pool_exhaustion_falls_back_inline_deterministically() {
+    let (mat_key, relu_key, x, y, want) = relu_fixture(2, 3, 1, 60);
+    let run = run_4pc(NetProfile::zero(), 689, move |ctx| {
+        let ysh = share_mat(ctx, P1, &y)?;
+        ctx.attach_pool(Pool::new());
+        fill_mat_relu(ctx, mat_key, relu_key, &ysh, 1)?;
+        // first pipeline drains the only bundle pair; the second falls
+        // back inline — at every party, in lockstep
+        let mut outs = Vec::new();
+        for _ in 0..2 {
+            let (_xsh, u) =
+                matmul_tr_keyed(ctx, &mat_key, (ctx.id() == P2).then_some(&x), &ysh)?;
+            let (r, _) = trident::ml::relu_many_keyed(ctx, &relu_key, &u.to_shares())?;
+            outs.push(r);
+        }
+        ctx.flush_verify()?;
+        let stats = ctx.detach_pool().unwrap().stats();
+        Ok((outs, stats))
+    });
+    let (outs, _) = run.expect_ok();
+    for pipeline in 0..2 {
+        for (r, want) in want.iter().enumerate() {
+            let got = FixedPoint::decode(open(&[
+                outs[0].0[pipeline][r],
+                outs[1].0[pipeline][r],
+                outs[2].0[pipeline][r],
+                outs[3].0[pipeline][r],
+            ]));
+            assert!(
+                (got - want).abs() < 0.01,
+                "pipeline {pipeline} out {r}: got {got}, want {want}"
+            );
+        }
+    }
+    for o in &outs {
+        assert_eq!(o.1.relu_hits, 1, "first pipeline drained the bundle");
+        assert_eq!(o.1.relu_misses, 1, "second pipeline fell back inline");
+        assert_eq!(o.1.mat_hits, 1);
+        assert_eq!(o.1.mat_misses, 1);
+    }
 }
 
 // -------------------------------------------------- multi-tenant scheduling

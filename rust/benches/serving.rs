@@ -16,6 +16,7 @@ fn main() {
     // the JSON artifact below render the same measurements
     let bench = trident::bench::run_serving_bench();
     print!("{}", trident::bench::serve_table_from(&bench.modes));
+    print!("{}", trident::bench::fill_throughput_line(&bench.fill));
     println!();
 
     println!("== coalescing sweep: 32 one-row queries, d=128, keyed pool + background refill ==");

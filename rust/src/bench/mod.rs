@@ -686,14 +686,75 @@ fn serve_mode_rows() -> Vec<(&'static str, crate::serve::ServeStats)> {
     ]
 }
 
+/// Offline fill throughput: items generated per wall-clock second by the
+/// real 4-party fill protocols (the keystream-batched PRF is the hot path
+/// here — every mask/pair element used to burn one AES block per element,
+/// a `Π_BitExt` position ~64 blocks per party; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+pub struct FillThroughput {
+    /// `fill_bitext` masks per second (each = one `[[r]]`, `[[msb r]]^B`).
+    pub bitext_masks_per_s: f64,
+    /// `fill_trunc` verified truncation pairs per second.
+    pub trunc_pairs_per_s: f64,
+    /// `fill_lam` λ-skeletons per second (PRF-only, no messages).
+    pub lam_per_s: f64,
+}
+
+/// Measure the offline fill throughput over the zero-cost network (pure
+/// generation speed, no simulated latency).
+pub fn measure_fill_throughput() -> FillThroughput {
+    use crate::pool::{fill_bitext, fill_lam, fill_trunc, Pool};
+    use crate::ring::fixed::FRAC_BITS;
+    use crate::ring::Z64;
+    let per_s = |items: usize, wall: std::time::Duration| {
+        items as f64 / wall.as_secs_f64().max(1e-9)
+    };
+    let nb = 1024usize;
+    let run = run_4pc(NetProfile::zero(), 9001, move |ctx| {
+        ctx.attach_pool(Pool::new());
+        fill_bitext(ctx, nb)?;
+        ctx.flush_verify()
+    });
+    let (_, rb) = run.expect_ok();
+    let nt = 4096usize;
+    let run = run_4pc(NetProfile::zero(), 9002, move |ctx| {
+        ctx.attach_pool(Pool::new());
+        fill_trunc(ctx, nt, FRAC_BITS)?;
+        ctx.flush_verify()
+    });
+    let (_, rt) = run.expect_ok();
+    let nl = 16384usize;
+    let run = run_4pc(NetProfile::zero(), 9003, move |ctx| {
+        ctx.attach_pool(Pool::new());
+        fill_lam::<Z64>(ctx, nl);
+        Ok(())
+    });
+    let (_, rl) = run.expect_ok();
+    FillThroughput {
+        bitext_masks_per_s: per_s(nb, rb.wall),
+        trunc_pairs_per_s: per_s(nt, rt.wall),
+        lam_per_s: per_s(nl, rl.wall),
+    }
+}
+
+/// Render the fill-throughput line appended to the serving table.
+pub fn fill_throughput_line(f: &FillThroughput) -> String {
+    format!(
+        "offline fill throughput: {:.0} bitext masks/s | {:.0} trunc pairs/s | {:.0} λ-skeletons/s\n",
+        f.bitext_masks_per_s, f.trunc_pairs_per_s, f.lam_per_s,
+    )
+}
+
 /// One full serving-benchmark run: the single-model mode sweep plus the
-/// canonical two-tenant workload. Compute it once and feed both the text
-/// tables and the JSON writer — every row is a real 4PC cluster run, so
-/// re-running for a second output format doubles bench wall time.
+/// canonical two-tenant workload and the offline fill throughput. Compute
+/// it once and feed both the text tables and the JSON writer — every row
+/// is a real 4PC cluster run, so re-running for a second output format
+/// doubles bench wall time.
 pub struct ServingBench {
     pub modes: Vec<(&'static str, crate::serve::ServeStats)>,
     pub tenants_cfg: crate::serve::MultiServeConfig,
     pub tenants: crate::serve::MultiServeStats,
+    pub fill: FillThroughput,
 }
 
 pub fn run_serving_bench() -> ServingBench {
@@ -702,11 +763,14 @@ pub fn run_serving_bench() -> ServingBench {
         modes: serve_mode_rows(),
         tenants: crate::serve::serve_multi(NetProfile::lan(), cfg.clone()),
         tenants_cfg: cfg,
+        fill: measure_fill_throughput(),
     }
 }
 
 pub fn serve_table() -> String {
-    serve_table_from(&serve_mode_rows())
+    let mut out = serve_table_from(&serve_mode_rows());
+    out.push_str(&fill_throughput_line(&measure_fill_throughput()));
+    out
 }
 
 /// Render the single-model serving table from precomputed rows.
@@ -716,7 +780,7 @@ pub fn serve_table_from(rows: &[(&'static str, crate::serve::ServeStats)]) -> St
         "== Serving: pooled-matrix vs scalar-pool vs inline (linreg d=128, 1-row queries, LAN) ==\n",
     );
     out.push_str(
-        "mode                 | q  | batches | online rnds | ms/query | online B/query | offline KiB | off msg/wave (mat|relu)\n",
+        "mode                 | q  | batches | online rnds | ms/query | online B/query | comp ms/wave | val B/wave | offline KiB | off msg/wave (mat|relu)\n",
     );
     let mut inline_lat = None;
     for (name, s) in rows {
@@ -725,12 +789,14 @@ pub fn serve_table_from(rows: &[(&'static str, crate::serve::ServeStats)]) -> St
         }
         let per_wave = |m: u64| m as f64 / s.batches.max(1) as f64;
         out.push_str(&format!(
-            "{name:<20} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>11.1} | {:>8.1} ({:.1}|{:.1})\n",
+            "{name:<20} | {:<2} | {:>7} | {:>11} | {:>8.4} | {:>14.0} | {:>12.4} | {:>10.0} | {:>11.1} | {:>8.1} ({:.1}|{:.1})\n",
             s.queries,
             s.batches,
             s.online_rounds,
             s.per_query_latency() * 1e3,
             s.per_query_online_bytes(),
+            s.compute_ms_per_wave(),
+            s.value_bytes_per_wave(),
             s.offline_value_bits as f64 / 8.0 / 1024.0,
             per_wave(s.offline_msgs_in_waves),
             per_wave(s.offline_msgs_matmul),
@@ -846,8 +912,17 @@ pub fn serving_bench_json() -> String {
 }
 
 /// Render the JSON document from a precomputed [`ServingBench`].
+///
+/// Schema 2 (this PR) extends schema 1 with the per-wave `compute_ms` /
+/// `value_bytes` columns on every mode row and a top-level
+/// `offline_fill_throughput` object — the regression-gated numbers for the
+/// keystream-batched PRF and the packed/flat hot path.
 pub fn serving_bench_json_from(bench: &ServingBench) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/1\",\n");
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/2\",\n");
+    out.push_str(&format!(
+        "  \"offline_fill_throughput\": {{\"bitext_masks_per_s\": {:.1}, \"trunc_pairs_per_s\": {:.1}, \"lam_skeletons_per_s\": {:.1}}},\n",
+        bench.fill.bitext_masks_per_s, bench.fill.trunc_pairs_per_s, bench.fill.lam_per_s,
+    ));
     out.push_str("  \"modes\": [\n");
     let rows = &bench.modes;
     for (i, (name, s)) in rows.iter().enumerate() {
@@ -855,13 +930,15 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
         // so mat + relu ≈ total holds row-internally
         let per_wave = |m: u64| m as f64 / s.batches.max(1) as f64;
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"queries\": {}, \"batches\": {}, \"online_rounds\": {}, \"ms_per_query\": {:.6}, \"online_bytes_per_query\": {:.1}, \"offline_kib\": {:.3}, \"off_msgs_per_wave\": {:.3}, \"off_msgs_matmul_per_wave\": {:.3}, \"off_msgs_relu_per_wave\": {:.3}}}{}\n",
+            "    {{\"name\": \"{}\", \"queries\": {}, \"batches\": {}, \"online_rounds\": {}, \"ms_per_query\": {:.6}, \"online_bytes_per_query\": {:.1}, \"compute_ms_per_wave\": {:.6}, \"value_bytes_per_wave\": {:.1}, \"offline_kib\": {:.3}, \"off_msgs_per_wave\": {:.3}, \"off_msgs_matmul_per_wave\": {:.3}, \"off_msgs_relu_per_wave\": {:.3}}}{}\n",
             json_escape(name),
             s.queries,
             s.batches,
             s.online_rounds,
             s.per_query_latency() * 1e3,
             s.per_query_online_bytes(),
+            s.compute_ms_per_wave(),
+            s.value_bytes_per_wave(),
             s.offline_value_bits as f64 / 8.0 / 1024.0,
             per_wave(s.offline_msgs_in_waves),
             per_wave(s.offline_msgs_matmul),

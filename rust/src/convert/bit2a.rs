@@ -34,26 +34,28 @@ fn share_lifted_lambda(ctx: &mut Ctx, bs: &[MShare<Bit>]) -> Result<Vec<RShare<Z
         // blinded by r. Batched into one message + one digest.
         match me {
             P1 => {
-                let mut payload = Vec::with_capacity(n * 9);
-                let mut x1_bits = Vec::with_capacity(n);
+                // packed payload: the n 64-bit y1 values followed by the n
+                // x1 bits at 8/byte — (8n + ⌈n/8⌉) bytes, still metered as
+                // the lemma-accurate 65n analytic bits (see the metering
+                // contract at `Ctx::send_ring`)
+                use crate::ring::Ring;
+                let mut y1s: Vec<Z64> = Vec::with_capacity(n);
+                let mut x1s: Vec<Bit> = Vec::with_capacity(n);
                 for (i, b) in bs.iter().enumerate() {
                     let r: Z64 = ctx.keys.sample_pair(P2);
                     let rb = Bit(ctx.keys.sample_pair::<Z64>(P2).0 & 1 == 1);
                     let rbp = rb.to_z64();
                     let lam3 = b.lam(me, 3).expect("P1 holds λ_b,3");
-                    let x1 = lam3 + rb;
                     let (u2, u3) = match u_shares[i] {
                         RShare::Eval { next, prev } => (next, prev),
                         _ => unreachable!(),
                     };
-                    let y1 = (u2 + u3) * (Z64(1) - Z64(2) * rbp) + rbp + r;
-                    x1_bits.push(x1);
-                    let mut buf = Vec::new();
-                    use crate::ring::Ring;
-                    y1.to_wire(&mut buf);
-                    payload.extend_from_slice(&buf);
-                    payload.push(x1.as_u8());
+                    y1s.push((u2 + u3) * (Z64(1) - Z64(2) * rbp) + rbp + r);
+                    x1s.push(lam3 + rb);
                 }
+                let mut payload = Vec::with_capacity(8 * n + n.div_ceil(8));
+                Z64::to_wire_bulk(&y1s, &mut payload);
+                Bit::to_wire_bulk(&x1s, &mut payload);
                 ctx.net.send_with_bits(
                     P3,
                     &payload,
@@ -78,17 +80,23 @@ fn share_lifted_lambda(ctx: &mut Ctx, bs: &[MShare<Bit>]) -> Result<Vec<RShare<Z
                 ctx.net.send_digest(P3, &d);
             }
             P3 => {
+                use crate::ring::Ring;
                 let payload = ctx.net.recv(P1)?;
+                let (y1s, used_y) = match Z64::from_wire_bulk(&payload, n) {
+                    Some(v) => v,
+                    None => return Err(ctx.net.abort("Π_Bit2A: short y1 payload".into())),
+                };
+                let x1s = match Bit::from_wire_bulk(&payload[used_y..], n) {
+                    Some((bits, used_x)) if used_y + used_x == payload.len() => bits,
+                    _ => return Err(ctx.net.abort("Π_Bit2A: malformed x1 payload".into())),
+                };
                 let mut acc = crate::crypto::HashAcc::new();
                 for (i, b) in bs.iter().enumerate() {
-                    let chunk = &payload[i * 9..(i + 1) * 9];
-                    let y1 = Z64(u64::from_le_bytes(chunk[..8].try_into().unwrap()));
-                    let x1 = Bit(chunk[8] & 1 == 1);
                     let lam1 = b.lam(me, 1).expect("P3 holds λ_b,1");
                     let lam2 = b.lam(me, 2).expect("P3 holds λ_b,2");
-                    let x = x1 + lam1 + lam2; // λ_b ⊕ r_b
+                    let x = x1s[i] + lam1 + lam2; // λ_b ⊕ r_b
                     let xp = x.to_z64();
-                    acc.absorb_ring(&(xp - y1));
+                    acc.absorb_ring(&(xp - y1s[i]));
                 }
                 let want = acc.finalize();
                 ctx.net.recv_digest_expect(P2, &want, "Π_Bit2A λ_b lift check")?;

@@ -261,6 +261,53 @@ mod tests {
     }
 
     #[test]
+    fn bitext_boolean_rounds_pack_on_wire() {
+        // The packed-codec acceptance check: the boolean legs of a
+        // bitext_many round shrink ~8× in payload bytes while the metered
+        // analytic bits and the round count stay byte-for-byte unchanged.
+        use crate::net::Phase;
+        let n: usize = 64;
+        let run = run_4pc(NetProfile::zero(), 125, move |ctx| {
+            let vals: Option<Vec<Z64>> = (ctx.id() == P1)
+                .then(|| (0..n as i64).map(|i| Z64::from(i - 32)).collect());
+            let vs = crate::proto::sharing::share_many_n(ctx, P1, vals.as_deref(), n)?;
+            ctx.flush_verify()?; // settle the input crosscheck digests
+            let b0 = ctx.net.sent_bytes(Phase::Online);
+            let bits = bitext_many(ctx, &vs)?;
+            let sent = ctx.net.sent_bytes(Phase::Online) - b0;
+            ctx.flush_verify()?;
+            Ok((bits, sent))
+        });
+        let (outs, report) = run.expect_ok();
+        for i in 0..n {
+            let b = open(&[outs[0].0[i], outs[1].0[i], outs[2].0[i], outs[3].0[i]]);
+            assert_eq!(b, Bit((i as i64 - 32) < 0), "case {i}");
+        }
+        // P3's online sends inside the window: the Π_Mult exchange (8n B),
+        // the two y-share deliveries — ⌈n/8⌉ B each, down from n B each
+        // before the packed codec — plus batched 32-byte digests.
+        let p3 = outs[3].1 as usize;
+        assert!(p3 >= 8 * n + 2 * n.div_ceil(8), "P3 window too small: {p3}");
+        assert!(
+            p3 < 8 * n + 2 * n + 32,
+            "P3 window {p3}: boolean y-deliveries must be packed 8 bits/byte"
+        );
+        // cluster totals: exact packed value payload; analytic bits and
+        // rounds byte-for-byte unchanged (Lemma D.3 + the input round)
+        assert_eq!(
+            report.value_bytes[1] as usize,
+            56 * n + 2 * n.div_ceil(8),
+            "online value payload: 7 Z64 legs + 2 packed boolean legs + inputs"
+        );
+        assert_eq!(
+            report.value_bits[1] as usize,
+            2 * 64 * n + n * (5 * 64 + 2),
+            "metered analytic bits unchanged"
+        );
+        assert_eq!(report.rounds[1], 1 + 3, "round count unchanged");
+    }
+
+    #[test]
     fn bitext_many_shares_rounds() {
         let run = run_4pc(NetProfile::zero(), 123, |ctx| {
             let vals = [-3i64, 7, -11, 13];

@@ -133,9 +133,10 @@ fn mse_against(
     t: &crate::sharing::MMat<Z64>,
 ) -> Result<f64, crate::net::Abort> {
     let diff = p - t;
-    let opened = crate::proto::reconstruct::reconstruct_many(ctx, &diff.to_shares())?;
-    let n = opened.len() as f64;
+    let opened = crate::proto::reconstruct::reconstruct_mat(ctx, &diff)?;
+    let n = opened.data().len() as f64;
     Ok(opened
+        .data()
         .iter()
         .map(|&v| {
             let f = FixedPoint::decode(v);

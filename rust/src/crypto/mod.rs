@@ -31,56 +31,193 @@ pub type Key = [u8; 16];
 /// 256-bit hash digest.
 pub type Digest32 = [u8; 32];
 
-/// AES-128-based PRF with a monotone counter.
+/// AES-128-based PRF with a monotone counter, consumed as a **buffered
+/// CTR keystream**.
 ///
 /// Two parties holding the same key and drawing the same number of elements
 /// in the same order obtain identical streams — the mechanism behind every
 /// "parties in P \ {P_j} together sample λ_{v,j}" step.
+///
+/// ## Keystream consumption contract
+///
+/// The seed burned one full `encrypt_block` per drawn element — a single
+/// [`crate::ring::Bit`] cost 16 keystream bytes. Elements now slice a
+/// shared keystream instead, and every holder of a key consumes it the
+/// same way, so the streams stay lockstep-deterministic:
+///
+/// * sub-byte rings (`Bit`) consume exactly `BITS` keystream **bits**
+///   (LSB-first within each byte) — a `Bit` vector unpacks 128 elements
+///   per AES block;
+/// * byte-granular rings consume `WIRE_BYTES` bytes, little-endian (the
+///   canonical [`Ring::from_wire`] decode) — `Z64` uses **both** 8-byte
+///   lanes of a block; byte draws first round the cursor up to the next
+///   byte boundary;
+/// * κ-bit key draws ([`Prf::gen_key`]) consume 16 bytes.
+///
+/// `gen_vec(n)` is consumption-for-consumption identical to `n` scalar
+/// `gen` calls (it only fills whole blocks in bulk), so batched pool fills
+/// and per-element inline draws leave every party at the same
+/// [`Prf::position`] — the lockstep-determinism guard the pool fills rely
+/// on, pinned by the `keystream_*` tests below.
 #[derive(Clone)]
 pub struct Prf {
     cipher: Aes128,
+    /// CTR block counter: keystream blocks generated so far.
     counter: u128,
+    /// Current keystream block; valid from bit `used` onward.
+    buf: [u8; 16],
+    /// Bits of `buf` already consumed (128 ⇒ a fresh block is needed).
+    used: usize,
+    /// Reusable bulk-fill buffer: `gen_vec` slices elements out of it, so
+    /// a large draw costs one resize instead of a per-element allocation.
+    scratch: Vec<u8>,
 }
 
 impl std::fmt::Debug for Prf {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Prf(ctr={})", self.counter)
+        write!(f, "Prf(ctr={}, used={})", self.counter, self.used)
     }
 }
 
 impl Prf {
     pub fn new(key: Key) -> Self {
-        Prf { cipher: Aes128::new(key), counter: 0 }
+        Prf {
+            cipher: Aes128::new(key),
+            counter: 0,
+            buf: [0u8; 16],
+            used: 128,
+            scratch: Vec::new(),
+        }
     }
 
-    /// Next 16-byte pseudorandom block.
+    /// Encrypt the next counter block (the only place the counter moves).
+    #[inline]
+    fn next_keystream_block(&mut self) -> [u8; 16] {
+        let block = self.cipher.encrypt_block(self.counter.to_le_bytes());
+        self.counter += 1;
+        block
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        self.buf = self.next_keystream_block();
+        self.used = 0;
+    }
+
+    /// One keystream bit (LSB-first within each byte of the block).
+    #[inline]
+    fn take_bit(&mut self) -> bool {
+        if self.used == 128 {
+            self.refill();
+        }
+        let bit = (self.buf[self.used / 8] >> (self.used % 8)) & 1;
+        self.used += 1;
+        bit == 1
+    }
+
+    /// Fill `out` with keystream bytes: aligns to a byte boundary, drains
+    /// the buffered partial block, then encrypts whole blocks straight into
+    /// the destination (the bulk path `gen_vec` rides). An empty request
+    /// consumes nothing — zero elements must leave the stream untouched so
+    /// an empty bulk draw stays lockstep with "no draw at all" at peers.
+    fn take_bytes(&mut self, out: &mut [u8]) {
+        if out.is_empty() {
+            return;
+        }
+        self.used = (self.used + 7) & !7;
+        let mut filled = 0;
+        while self.used < 128 && filled < out.len() {
+            out[filled] = self.buf[self.used / 8];
+            self.used += 8;
+            filled += 1;
+        }
+        while out.len() - filled >= 16 {
+            let block = self.next_keystream_block();
+            out[filled..filled + 16].copy_from_slice(&block);
+            filled += 16;
+        }
+        if filled < out.len() {
+            self.refill();
+            let tail = out.len() - filled;
+            out[filled..].copy_from_slice(&self.buf[..tail]);
+            self.used = 8 * tail;
+        }
+    }
+
+    /// Next 16 keystream bytes (byte-aligned; spans blocks when the cursor
+    /// is mid-block).
     #[inline]
     pub fn next_block(&mut self) -> [u8; 16] {
-        let block = self.counter.to_le_bytes();
-        self.counter += 1;
-        self.cipher.encrypt_block(block)
+        let mut out = [0u8; 16];
+        self.take_bytes(&mut out);
+        out
     }
 
-    /// Sample one ring element.
+    /// One sub-byte element: exactly `R::BITS` keystream bits, LSB-first
+    /// into the canonical one-byte wire encoding.
+    #[inline]
+    fn gen_sub_byte<R: Ring>(&mut self) -> R {
+        let mut byte = 0u8;
+        for k in 0..R::BITS {
+            byte |= (self.take_bit() as u8) << k;
+        }
+        R::from_wire(&[byte]).expect("sub-byte ring decodes from one byte").0
+    }
+
+    /// Sample one ring element (see the consumption contract above).
     #[inline]
     pub fn gen<R: Ring>(&mut self) -> R {
-        R::from_block(&self.next_block())
+        if R::BITS < 8 {
+            self.gen_sub_byte()
+        } else {
+            debug_assert!(R::WIRE_BYTES <= 16, "ring element exceeds one block");
+            let mut tmp = [0u8; 16];
+            let nb = R::WIRE_BYTES;
+            self.take_bytes(&mut tmp[..nb]);
+            R::from_wire(&tmp[..nb]).expect("keystream bytes decode").0
+        }
     }
 
-    /// Sample `n` ring elements.
+    /// Sample `n` ring elements — consumption-identical to `n` [`Prf::gen`]
+    /// calls, but whole blocks are filled in bulk and elements sliced out
+    /// of the reusable buffer.
     pub fn gen_vec<R: Ring>(&mut self, n: usize) -> Vec<R> {
-        (0..n).map(|_| self.gen()).collect()
+        if R::BITS < 8 {
+            // 128 bits per block, unpacked straight from the buffer
+            (0..n).map(|_| self.gen_sub_byte()).collect()
+        } else {
+            let nb = R::WIRE_BYTES;
+            let mut scratch = std::mem::take(&mut self.scratch);
+            scratch.clear();
+            scratch.resize(n * nb, 0);
+            self.take_bytes(&mut scratch);
+            let out = scratch
+                .chunks_exact(nb)
+                .map(|c| R::from_wire(c).expect("keystream bytes decode").0)
+                .collect();
+            self.scratch = scratch;
+            out
+        }
     }
 
-    /// Sample a κ-bit key (for garbled labels, offsets, …).
+    /// Sample a κ-bit key (for garbled labels, offsets, …): 16 keystream
+    /// bytes.
     #[inline]
     pub fn gen_key(&mut self) -> Key {
         self.next_block()
     }
 
-    /// Number of blocks drawn so far — synchronization sanity check.
+    /// Number of keystream blocks generated so far — the synchronization
+    /// sanity check. Identical draw sequences leave identical positions,
+    /// whether drawn per element or via `gen_vec`.
     pub fn position(&self) -> u128 {
         self.counter
+    }
+
+    /// Exact keystream cursor in bits (finer-grained than [`Prf::position`];
+    /// also equal across parties after identical draw sequences).
+    pub fn stream_bits(&self) -> u128 {
+        self.counter * 128 - (128 - self.used as u128)
     }
 }
 
@@ -270,6 +407,87 @@ mod tests {
         let mut a = Prf::new([9u8; 16]);
         let v: Vec<Z64> = a.gen_vec(16);
         assert!(v.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn keystream_batched_equals_per_element_z64() {
+        let k = [3u8; 16];
+        let mut batched = Prf::new(k);
+        let mut scalar = Prf::new(k);
+        let vb: Vec<Z64> = batched.gen_vec(7);
+        let vs: Vec<Z64> = (0..7).map(|_| scalar.gen()).collect();
+        assert_eq!(vb, vs, "gen_vec must slice the same keystream as n× gen");
+        assert_eq!(batched.position(), scalar.position());
+        assert_eq!(batched.stream_bits(), scalar.stream_bits());
+        // Z64 consumes both 8-byte lanes: 7 elements = 56 bytes = 4 blocks
+        assert_eq!(batched.position(), 4);
+    }
+
+    #[test]
+    fn keystream_batched_equals_per_element_bits() {
+        let k = [4u8; 16];
+        let mut batched = Prf::new(k);
+        let mut scalar = Prf::new(k);
+        let vb: Vec<Bit> = batched.gen_vec(300);
+        let vs: Vec<Bit> = (0..300).map(|_| scalar.gen()).collect();
+        assert_eq!(vb, vs);
+        assert_eq!(batched.position(), scalar.position());
+        assert_eq!(batched.stream_bits(), scalar.stream_bits());
+        // bit vectors unpack 128 bits per block: 300 bits = 3 blocks
+        assert_eq!(batched.position(), 3);
+        assert!(vb.iter().any(|b| b.0) && vb.iter().any(|b| !b.0));
+    }
+
+    #[test]
+    fn keystream_mixed_sequences_stay_in_lockstep() {
+        // the pool-fill guard: a party that fills in batches and a party
+        // that draws per element must agree on every value AND position,
+        // over a mixed Z64 / Bit / key sequence
+        let k = [5u8; 16];
+        let mut a = Prf::new(k);
+        let mut b = Prf::new(k);
+        let a1: Vec<Z64> = a.gen_vec(3);
+        let a2: Vec<Bit> = a.gen_vec(130);
+        let a3: Z64 = a.gen();
+        let a4 = a.gen_key();
+        let b1: Vec<Z64> = (0..3).map(|_| b.gen()).collect();
+        let b2: Vec<Bit> = (0..130).map(|_| b.gen()).collect();
+        let b3: Z64 = b.gen();
+        let b4 = b.gen_key();
+        assert_eq!((a1, a2, a3, a4), (b1, b2, b3, b4));
+        assert_eq!(a.position(), b.position());
+        assert_eq!(a.stream_bits(), b.stream_bits());
+        // and the streams keep agreeing afterwards
+        assert_eq!(a.gen::<Z64>(), b.gen::<Z64>());
+    }
+
+    #[test]
+    fn keystream_empty_bulk_draw_consumes_nothing() {
+        // an empty gen_vec must equal "no draw at all" even mid-byte —
+        // otherwise a party handed an empty batch desyncs from peers
+        let k = [7u8; 16];
+        let mut a = Prf::new(k);
+        let mut b = Prf::new(k);
+        let _: Bit = a.gen();
+        let _: Bit = b.gen();
+        let v: Vec<Z64> = a.gen_vec(0);
+        assert!(v.is_empty());
+        assert_eq!(a.stream_bits(), b.stream_bits());
+        assert_eq!(a.gen::<Z64>(), b.gen::<Z64>());
+    }
+
+    #[test]
+    fn keystream_byte_draws_align_after_bits() {
+        // byte draws round the cursor up to the next byte boundary — the
+        // same deterministic rule at every party
+        let k = [6u8; 16];
+        let mut a = Prf::new(k);
+        let mut b = Prf::new(k);
+        let _: Bit = a.gen();
+        let _: Bit = b.gen();
+        assert_eq!(a.gen::<Z64>(), b.gen::<Z64>());
+        assert_eq!(a.stream_bits(), b.stream_bits());
+        assert_eq!(a.stream_bits(), 8 + 64, "1 bit aligned to a byte + 8 bytes");
     }
 
     #[test]

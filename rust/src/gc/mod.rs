@@ -166,31 +166,22 @@ pub fn g_share_p0(ctx: &mut Ctx, bits: Option<&[Bit]>, n: usize) -> Result<Vec<G
         match me {
             P0 => {
                 let bits = bits.expect("P0 supplies bits");
-                let mut rng_bits = Vec::with_capacity(n);
-                for i in 0..n {
+                assert_eq!(bits.len(), n, "dealer must supply exactly n bits");
+                let mut b1s: Vec<Bit> = Vec::with_capacity(n);
+                let mut b2s: Vec<Bit> = Vec::with_capacity(n);
+                for &b in bits {
                     let b1 = Bit(ctx.rng.next_u64() & 1 == 1);
-                    rng_bits.push((b1, bits[i] + b1));
+                    b1s.push(b1);
+                    b2s.push(b + b1);
                 }
-                let enc = |sel: fn(&(Bit, Bit)) -> Bit, v: &Vec<(Bit, Bit)>| {
-                    v.iter().map(|p| sel(p).as_u8()).collect::<Vec<u8>>()
-                };
-                let b1s = enc(|p| p.0, &rng_bits);
-                let b2s = enc(|p| p.1, &rng_bits);
-                ctx.net.send_with_bits(P1, &b1s, MsgClass::Value, n as u64);
-                ctx.net.send_with_bits(P2, &b2s, MsgClass::Value, n as u64);
-                Ok::<_, Abort>((
-                    Some(rng_bits.iter().map(|p| p.0).collect::<Vec<_>>()),
-                    Some(rng_bits.iter().map(|p| p.1).collect::<Vec<_>>()),
-                ))
+                // packed boolean deliveries: ⌈n/8⌉ payload bytes each,
+                // still metered as n analytic bits
+                ctx.send_bits(P1, &b1s);
+                ctx.send_bits(P2, &b2s);
+                Ok::<_, Abort>((Some(b1s), Some(b2s)))
             }
-            P1 => {
-                let raw = ctx.net.recv(P0)?;
-                Ok((Some(raw.into_iter().map(|b| Bit(b != 0)).collect()), None))
-            }
-            P2 => {
-                let raw = ctx.net.recv(P0)?;
-                Ok((None, Some(raw.into_iter().map(|b| Bit(b != 0)).collect())))
-            }
+            P1 => Ok((Some(ctx.recv_bits(P0, n)?), None)),
+            P2 => Ok((None, Some(ctx.recv_bits(P0, n)?))),
             _ => Ok((None, None)),
         }
     })?;
@@ -376,19 +367,21 @@ pub fn g_reconstruct(
     ctx.online(|ctx| {
         if target == P0 {
             if me == P1 || me == P2 {
-                let colors: Vec<u8> = shares.iter().map(|s| s.key()[0] & 1).collect();
-                ctx.net.send_with_bits(P0, &colors, MsgClass::Value, n as u64);
+                // colour bits packed 8/byte; metered as n analytic bits
+                let colors: Vec<Bit> =
+                    shares.iter().map(|s| Bit(s.key()[0] & 1 == 1)).collect();
+                ctx.send_bits(P0, &colors);
             }
             if me == P0 {
-                let c1 = ctx.net.recv(P1)?;
-                let c2 = ctx.net.recv(P2)?;
+                let c1 = ctx.recv_bits(P1, n)?;
+                let c2 = ctx.recv_bits(P2, n)?;
                 if c1 != c2 {
                     return Err(ctx.net.abort("garbled reconstruction: colour bits differ".into()));
                 }
                 let out = shares
                     .iter()
                     .zip(c1)
-                    .map(|(s, c)| Bit((s.key()[0] & 1) != (c & 1)))
+                    .map(|(s, c)| Bit((s.key()[0] & 1 == 1) != c.0))
                     .collect();
                 return Ok(Some(out));
             }

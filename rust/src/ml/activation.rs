@@ -99,6 +99,22 @@ pub fn relu_mat(
     Ok((MMat::from_shares(rows, cols, &relu), drelu))
 }
 
+/// [`relu_mat`] through the circuit-keyed nonlinear pool — the serving
+/// wave's matrix-level entry point ([`relu_many_keyed`] semantics: whole
+/// [`crate::pool::ReluCorr`] bundle pop, deterministic inline fallback,
+/// wrong-key pops fail closed). Keeps the share-vector conversion in one
+/// place so the wave pipeline itself stays on SoA matrices end to end.
+pub fn relu_mat_keyed(
+    ctx: &mut Ctx,
+    key: &CircuitKey,
+    m: &MMat<Z64>,
+) -> Result<(MMat<Z64>, Vec<MShare<Bit>>), Abort> {
+    let (rows, cols) = m.dims();
+    let shares = m.to_shares();
+    let (relu, drelu) = relu_many_keyed(ctx, key, &shares)?;
+    Ok((MMat::from_shares(rows, cols, &relu), drelu))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,9 @@ pub mod logreg;
 pub mod nn;
 pub mod softmax;
 
-pub use activation::{drelu_many, relu_many, relu_many_keyed, sigmoid_many};
+pub use activation::{
+    drelu_many, relu_many, relu_many_keyed, relu_mat, relu_mat_keyed, sigmoid_many,
+};
 pub use linreg::LinReg;
 pub use logreg::LogReg;
 pub use nn::{Network, NetworkKind};
@@ -29,12 +31,10 @@ pub fn share_fixed_mat(
     rows: usize,
     cols: usize,
 ) -> Result<MMat<Z64>, Abort> {
-    let vs: Option<Vec<Z64>> = m.map(|m| {
-        m.data.iter().map(|&v| crate::ring::FixedPoint::encode(v)).collect()
-    });
-    let shares =
-        crate::proto::sharing::share_many_n(ctx, dealer, vs.as_deref(), rows * cols)?;
-    Ok(MMat::from_shares(rows, cols, &shares))
+    // flat path: encode once, share as a matrix — the SoA share_mat_n
+    // builds the component matrices directly (no per-element round-trip)
+    let enc: Option<Matrix<Z64>> = m.map(F64Mat::encode);
+    crate::proto::sharing::share_mat_n(ctx, dealer, enc.as_ref(), rows, cols)
 }
 
 /// Plain `f64` matrix helper (row-major) used by the data generators.

@@ -275,6 +275,15 @@ pub struct PartyCtx {
     /// threads — the offline-silence regression tests depend on that.
     sent_msgs: [u64; 2],
     sent_bytes: [u64; 2],
+    /// `Value`-class payload bytes only (the class the communication
+    /// lemmas count) — the serving engine's per-wave `value_bytes` column,
+    /// kept apart from digests/commitments in [`PartyCtx::sent_bytes`].
+    sent_value_bytes: [u64; 2],
+    /// Local compute seconds charged via [`PartyCtx::charge_compute`] /
+    /// [`PartyCtx::timed`], per phase (monotone — the virtual clock mixes
+    /// compute with serialization and latency; this separates it so the
+    /// serving engine can report a per-wave compute column).
+    compute: [f64; 2],
 }
 
 impl PartyCtx {
@@ -313,9 +322,22 @@ impl PartyCtx {
         self.sent_bytes[phase as usize]
     }
 
+    /// `Value`-class payload bytes this party has sent in `phase`
+    /// (monotone; excludes hash/commit/garbled traffic).
+    pub fn sent_value_bytes(&self, phase: Phase) -> u64 {
+        self.sent_value_bytes[phase as usize]
+    }
+
+    /// Local compute seconds charged in `phase` (monotone — window a code
+    /// region by differencing two reads, like [`PartyCtx::sent_bytes`]).
+    pub fn compute_time(&self, phase: Phase) -> f64 {
+        self.compute[phase as usize]
+    }
+
     /// Charge `dt` seconds of local compute to this party's virtual clock.
     pub fn charge_compute(&mut self, dt: f64) {
         self.clock[self.phase as usize] += dt;
+        self.compute[self.phase as usize] += dt;
     }
 
     /// Run `f`, measure its real duration, charge it to the virtual clock.
@@ -336,6 +358,9 @@ impl PartyCtx {
         self.clock[ph] += payload.len() as f64 * 8.0 / self.profile.bandwidth_bps;
         self.sent_msgs[ph] += 1;
         self.sent_bytes[ph] += payload.len() as u64;
+        if class == MsgClass::Value {
+            self.sent_value_bytes[ph] += payload.len() as u64;
+        }
         self.meter.record(self.phase, class, self.id, to, payload.len(), bits);
         let env = Envelope {
             payload: payload.to_vec(),
@@ -524,6 +549,8 @@ where
             aborted: false,
             sent_msgs: [0; 2],
             sent_bytes: [0; 2],
+            sent_value_bytes: [0; 2],
+            compute: [0.0; 2],
         };
         let program = program.clone();
         handles.push(std::thread::spawn(move || {
@@ -698,6 +725,8 @@ mod tests {
             ctx.set_phase(Phase::Online);
             if ctx.id == P1 {
                 ctx.charge_compute(0.125);
+                assert_eq!(ctx.compute_time(Phase::Online), 0.125);
+                assert_eq!(ctx.compute_time(Phase::Offline), 0.0);
             }
             Ok(())
         });

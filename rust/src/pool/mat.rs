@@ -23,9 +23,11 @@
 //! * `rows × inner × cols` — the public gate shape (`X: rows×inner`,
 //!   resident `Y: inner×cols`);
 //! * `dealer` — who deals the live `X` online; the pooled wire mask is
-//!   drawn element-for-element through `Π_Sh`'s own mask sampler
-//!   ([`crate::proto::sharing::sample_mask`]), so the dealer knows the full
-//!   mask and can later send `m = X + Λ_X` without any offline step.
+//!   drawn through `Π_Sh`'s own batched mask sampler
+//!   ([`crate::proto::sharing::sample_mask_vecs`] — per-scope bulk
+//!   keystream draws, value-identical to the per-element path), so the
+//!   dealer knows the full mask and can later send `m = X + Λ_X` without
+//!   any offline step.
 //!
 //! ## Pooled item ([`MatCorr`])
 //!
@@ -46,11 +48,11 @@
 
 use crate::net::{Abort, PartyId};
 use crate::proto::dotp::{matmul_offline, MatGamma};
-use crate::proto::sharing::sample_mask;
+use crate::proto::sharing::{assemble_mmat, full_masks, sample_mask_vecs};
 use crate::proto::trunc::{gen_trunc_pairs, TruncPair};
 use crate::proto::Ctx;
 use crate::ring::{Matrix, Z64};
-use crate::sharing::{MMat, MShare};
+use crate::sharing::MMat;
 
 /// Which gate a [`CircuitKey`] names.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -145,11 +147,14 @@ impl MatCorr {
     }
 }
 
-/// Pre-draw one input wire mask (PRF-only; no messages), element by element
-/// through `Π_Sh`'s own [`sample_mask`] — same scope pattern, same stream
-/// order as an inline sharing, so a pooled mask is draw-for-draw what the
-/// inline path would have produced. Returns the party's skeleton and —
-/// where all three components are held (dealer, P0) — the full mask.
+/// Pre-draw one input wire mask (PRF-only; no messages) through `Π_Sh`'s
+/// own batched mask sampler ([`sample_mask_vecs`]) — same scope pattern,
+/// same per-stream order as an inline sharing, so a pooled mask is
+/// draw-for-draw what the inline path would have produced, while the
+/// keystream fills in one bulk pass per scope and the SoA component
+/// matrices are built directly (no per-element `MShare` materialisation).
+/// Returns the party's skeleton and — where all three components are held
+/// (dealer, P0) — the full mask.
 pub(crate) fn sample_wire_mask(
     ctx: &mut Ctx,
     dealer: PartyId,
@@ -157,18 +162,14 @@ pub(crate) fn sample_wire_mask(
     cols: usize,
 ) -> (MMat<Z64>, Option<Matrix<Z64>>) {
     ctx.offline(|ctx| {
+        let me = ctx.id();
         let n = rows * cols;
-        let mut skels: Vec<MShare<Z64>> = Vec::with_capacity(n);
-        let mut fulls: Vec<Z64> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (skel, full) = sample_mask::<Z64>(ctx, dealer);
-            skels.push(skel);
-            if let Some(f) = full {
-                fulls.push(f[0] + f[1] + f[2]);
-            }
-        }
-        let full = (fulls.len() == n).then(|| Matrix::from_vec(rows, cols, fulls));
-        (MMat::from_shares(rows, cols, &skels), full)
+        let lam = sample_mask_vecs::<Z64>(ctx, dealer, n);
+        let full = full_masks(&lam, n).map(|v| Matrix::from_vec(rows, cols, v));
+        // same assembly helper as share_mat_n — the pooled==inline mask
+        // layout invariant lives in proto::sharing, not here
+        let m_skel = me.is_evaluator().then(|| Matrix::zeros(rows, cols));
+        (assemble_mmat(me, lam, m_skel, rows, cols), full)
     })
 }
 

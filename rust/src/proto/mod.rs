@@ -13,6 +13,11 @@
 //! Protocols switch phases internally ([`Ctx::offline`]/[`Ctx::online`]) so
 //! that the metered bytes/rounds/virtual-time land in the right bucket even
 //! when a caller interleaves gates.
+//!
+//! Boolean messages are **byte-packed on the wire** (8 shares per payload
+//! byte) while the meter keeps counting lemma-accurate analytic bits —
+//! payload bytes and metered bits intentionally diverge for boolean
+//! traffic; see the metering contract documented at [`Ctx::send_ring`].
 
 pub mod dotp;
 pub mod mult;
@@ -22,7 +27,9 @@ pub mod trunc;
 
 pub use dotp::{dotp, matmul, matmul_keyed};
 pub use mult::{mult, mult_many};
-pub use reconstruct::{fair_reconstruct, reconstruct, reconstruct_to};
+pub use reconstruct::{
+    fair_reconstruct, reconstruct, reconstruct_mat, reconstruct_mat_to, reconstruct_to,
+};
 pub use sharing::{ash, share, share_mat_n, share_mat_with_mask, vsh};
 pub use trunc::{
     matmul_tr, matmul_tr_keyed, matmul_tr_shift, mult_tr, mult_tr_many, trunc_pairs, TruncPair,
@@ -32,7 +39,7 @@ use crate::crypto::{HashAcc, Rng};
 use crate::net::{
     run_cluster_timeout, Abort, ClusterRun, MsgClass, NetProfile, PartyCtx, PartyId, Phase, ALL,
 };
-use crate::ring::Ring;
+use crate::ring::{Bit, Ring};
 use crate::setup::{setup_keys, KeyChain, Scope, ZeroShare};
 
 /// Per-party protocol context: transport + key material + deferred
@@ -134,18 +141,37 @@ impl<'a> Ctx<'a> {
     }
 
     // ---- ring-element wire helpers -------------------------------------
+    //
+    // ## Metering contract: payload bytes vs analytic bits
+    //
+    // Ring slices travel under the **bulk wire codec**
+    // ([`Ring::to_wire_bulk`]): byte-granular rings serialize to
+    // `n·WIRE_BYTES` bytes, and boolean slices pack 8 bits per byte —
+    // `⌈n/8⌉` payload bytes for an `n`-bit message. The analytic meter
+    // ([`crate::net::Meter`], fed through `send_with_bits`) keeps counting
+    // `n·BITS` bits regardless, because that is what the paper's
+    // communication lemmas (Appendices B–D) and the §VI tables count.
+    //
+    // These two numbers **intentionally diverge for boolean messages**:
+    // `NetReport::value_bits` is the lemma-accurate cost (a boolean share
+    // = 1 bit), while `NetReport::value_bytes` / `PartyCtx::sent_bytes`
+    // are the physical payload (8 bits/byte plus a zero-padded trailing
+    // byte). A future codec change must preserve the `bits` argument of
+    // `send_with_bits` as-is or it silently breaks the §VI tables; the
+    // payload side is free to get tighter. Rounds are unaffected either
+    // way: packing changes message *size*, never message *count*.
 
-    /// Send a slice of ring elements (Value class, bit-accurate metering).
+    /// Send a slice of ring elements (Value class; packed bulk codec on
+    /// the wire, lemma-accurate analytic bits in the meter — see the
+    /// metering contract above).
     pub fn send_ring<R: Ring>(&mut self, to: PartyId, vals: &[R]) {
-        let mut buf = Vec::with_capacity(vals.len() * R::WIRE_BYTES);
-        for v in vals {
-            v.to_wire(&mut buf);
-        }
+        let mut buf = Vec::with_capacity(R::wire_len(vals.len()));
+        R::to_wire_bulk(vals, &mut buf);
         self.net
             .send_with_bits(to, &buf, MsgClass::Value, (vals.len() * R::BITS) as u64);
     }
 
-    /// Receive exactly `n` ring elements.
+    /// Receive exactly `n` ring elements (inverse of [`Ctx::send_ring`]).
     pub fn recv_ring<R: Ring>(&mut self, from: PartyId, n: usize) -> Result<Vec<R>, Abort> {
         let (buf, class) = self.net.recv_tagged(from)?;
         if class != MsgClass::Value {
@@ -153,33 +179,53 @@ impl<'a> Ctx<'a> {
                 .net
                 .abort(format!("expected value message from {from}, got {class:?}")));
         }
-        let mut out = Vec::with_capacity(n);
-        let mut off = 0;
-        for _ in 0..n {
-            match R::from_wire(&buf[off..]) {
-                Some((v, used)) => {
-                    out.push(v);
-                    off += used;
-                }
-                None => {
-                    return Err(self
-                        .net
-                        .abort(format!("short ring message from {from}")))
-                }
-            }
+        match R::from_wire_bulk(&buf, n) {
+            Some((out, used)) if used == buf.len() => Ok(out),
+            Some(_) => Err(self.net.abort(format!("oversized ring message from {from}"))),
+            None => Err(self
+                .net
+                .abort(format!("short or malformed ring message from {from}"))),
         }
-        if off != buf.len() {
-            return Err(self.net.abort(format!("oversized ring message from {from}")));
-        }
-        Ok(out)
     }
 
+    /// Bulk boolean send: `n` bits travel as `⌈n/8⌉` payload bytes while
+    /// the meter still counts `n` analytic bits. Alias of
+    /// [`Ctx::send_ring`] over [`Bit`] for call sites that are explicitly
+    /// boolean (conversions, GC bit deliveries).
+    pub fn send_bits(&mut self, to: PartyId, bits: &[Bit]) {
+        self.send_ring(to, bits);
+    }
+
+    /// Inverse of [`Ctx::send_bits`].
+    pub fn recv_bits(&mut self, from: PartyId, n: usize) -> Result<Vec<Bit>, Abort> {
+        self.recv_ring(from, n)
+    }
+
+    /// Scalar fast path: one element per message (the γ-exchange of
+    /// `Π_Mult`/`Π_DotP` on the 1×1 path) encodes into a stack buffer —
+    /// no per-message `Vec` allocation.
     pub fn send_ring1<R: Ring>(&mut self, to: PartyId, v: R) {
-        self.send_ring(to, &[v]);
+        let mut buf = [0u8; 16];
+        let used = v.to_wire_into(&mut buf);
+        self.net
+            .send_with_bits(to, &buf[..used], MsgClass::Value, R::BITS as u64);
     }
 
+    /// Scalar fast path: decode one element straight from the payload —
+    /// no intermediate `Vec<R>`.
     pub fn recv_ring1<R: Ring>(&mut self, from: PartyId) -> Result<R, Abort> {
-        Ok(self.recv_ring::<R>(from, 1)?[0])
+        let (buf, class) = self.net.recv_tagged(from)?;
+        if class != MsgClass::Value {
+            return Err(self
+                .net
+                .abort(format!("expected value message from {from}, got {class:?}")));
+        }
+        match R::from_wire(&buf) {
+            Some((v, used)) if used == buf.len() => Ok(v),
+            _ => Err(self
+                .net
+                .abort(format!("malformed scalar ring message from {from}"))),
+        }
     }
 
     // ---- deferred batched verification ----------------------------------
@@ -395,6 +441,53 @@ mod tests {
         let (outs, report) = run.expect_ok();
         assert_eq!(outs[2], vec![Z64(1), Z64(2), Z64(3)]);
         assert_eq!(report.value_bits[1], 192);
+    }
+
+    #[test]
+    fn bit_slice_packs_8_per_byte_on_wire() {
+        use crate::ring::Bit;
+        let run = run_4pc(NetProfile::zero(), 8, |ctx| {
+            ctx.online(|ctx| match ctx.id() {
+                P1 => {
+                    let bits: Vec<Bit> = (0..100).map(|i| Bit(i % 7 == 0)).collect();
+                    let b0 = ctx.net.sent_bytes(crate::net::Phase::Online);
+                    ctx.send_bits(P2, &bits);
+                    Ok((bits, ctx.net.sent_bytes(crate::net::Phase::Online) - b0))
+                }
+                P2 => Ok((ctx.recv_bits(P1, 100)?, 0)),
+                _ => Ok((vec![], 0)),
+            })
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(outs[2].0, outs[1].0, "packed bits decode to the sent values");
+        // payload: ⌈100/8⌉ = 13 bytes; meter: 100 analytic bits
+        assert_eq!(outs[1].1, 13, "8 bits per payload byte");
+        assert_eq!(report.value_bytes[1], 13);
+        assert_eq!(report.value_bits[1], 100, "lemma-accurate bit metering unchanged");
+    }
+
+    #[test]
+    fn scalar_fast_path_roundtrip() {
+        use crate::ring::Bit;
+        let run = run_4pc(NetProfile::zero(), 9, |ctx| {
+            ctx.online(|ctx| match ctx.id() {
+                P1 => {
+                    ctx.send_ring1(P2, Z64(0xABCD));
+                    ctx.send_ring1(P2, Bit(true));
+                    Ok((Z64(0), Bit(false)))
+                }
+                P2 => {
+                    let z: Z64 = ctx.recv_ring1(P1)?;
+                    let b: Bit = ctx.recv_ring1(P1)?;
+                    Ok((z, b))
+                }
+                _ => Ok((Z64(0), Bit(false))),
+            })
+        });
+        let (outs, report) = run.expect_ok();
+        assert_eq!(outs[2], (Z64(0xABCD), Bit(true)));
+        assert_eq!(report.value_bits[1], 64 + 1);
+        assert_eq!(report.value_bytes[1], 8 + 1);
     }
 
     #[test]

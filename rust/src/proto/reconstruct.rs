@@ -2,8 +2,8 @@
 //! party, and the fair variant `Π_fRec` (Fig. 5).
 
 use crate::net::{Abort, PartyId, EVALUATORS, P0, P1, P2, P3};
-use crate::ring::Ring;
-use crate::sharing::MShare;
+use crate::ring::{Matrix, Ring};
+use crate::sharing::{MMat, MShare};
 
 use super::Ctx;
 
@@ -200,6 +200,130 @@ pub fn reconstruct_to_many<R: Ring>(
     })
 }
 
+/// [`reconstruct_many`] over a whole matrix sharing — the flat serving
+/// path: the λ-component and `m` **matrices are the message payloads**
+/// (SoA slice views), so no per-element [`MShare`] vector is ever
+/// materialised. Message-for-message identical to
+/// `reconstruct_many(ctx, &sh.to_shares())`.
+pub fn reconstruct_mat<R: Ring>(ctx: &mut Ctx, sh: &MMat<R>) -> Result<Matrix<R>, Abort> {
+    let me = ctx.id();
+    let (rows, cols) = sh.dims();
+    let n = rows * cols;
+    ctx.online(|ctx| {
+        match sh {
+            MMat::Helper { lam } => {
+                // P0 vouches H(Λ_t) to each evaluator, receives M from P1
+                // and H(M) from P2.
+                for t in EVALUATORS {
+                    ctx.vouch_ring(t, lam[(t.0 - 1) as usize].data());
+                }
+                let ms: Vec<R> = ctx.recv_ring(P1, n)?;
+                ctx.expect_ring(P2, &ms);
+                ctx.flush_verify()?;
+                let data = ms
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &m)| m - lam[0].data()[i] - lam[1].data()[i] - lam[2].data()[i])
+                    .collect();
+                Ok(Matrix::from_vec(rows, cols, data))
+            }
+            MMat::Eval { m, lam_next, lam_prev } => {
+                let (lam_src, _) = rec_sources(me);
+                // send duties first (non-blocking), as in reconstruct_many
+                for target in EVALUATORS {
+                    if target != me && rec_sources(target).0 == me {
+                        let vals = sh.lam(me, target.0).expect("source holds λ_target");
+                        ctx.send_ring(target, vals.data());
+                    }
+                }
+                if me == P1 {
+                    ctx.send_ring(P0, m.data());
+                }
+                if me == P2 {
+                    ctx.vouch_ring(P0, m.data());
+                }
+                let lam_i: Vec<R> = ctx.recv_ring(lam_src, n)?;
+                ctx.expect_ring(P0, &lam_i);
+                ctx.flush_verify()?;
+                let data = (0..n)
+                    .map(|i| m.data()[i] - lam_i[i] - lam_next.data()[i] - lam_prev.data()[i])
+                    .collect();
+                Ok(Matrix::from_vec(rows, cols, data))
+            }
+        }
+    })
+}
+
+/// [`reconstruct_to_many`] over a whole matrix sharing — the flat serving
+/// delivery (`serve`'s reconstruct-to-owner stage): SoA payloads, no
+/// intermediate share vector. Message-for-message identical to
+/// `reconstruct_to_many(ctx, &sh.to_shares(), targets)`.
+pub fn reconstruct_mat_to<R: Ring>(
+    ctx: &mut Ctx,
+    sh: &MMat<R>,
+    targets: &[PartyId],
+) -> Result<Option<Matrix<R>>, Abort> {
+    let me = ctx.id();
+    let (rows, cols) = sh.dims();
+    let n = rows * cols;
+    ctx.online(|ctx| {
+        let mut my_value: Option<Matrix<R>> = None;
+        // send duties
+        for &t in targets {
+            if t == me {
+                continue;
+            }
+            if t == P0 {
+                if me == P1 {
+                    ctx.send_ring(P0, sh.m().data());
+                }
+                if me == P2 {
+                    ctx.vouch_ring(P0, sh.m().data());
+                }
+            } else {
+                let (src, _) = rec_sources(t);
+                if me == src {
+                    ctx.send_ring(t, sh.lam(me, t.0).expect("src holds λ_t").data());
+                }
+                if me == P0 {
+                    ctx.vouch_ring(t, sh.lam(P0, t.0).expect("P0 holds λ").data());
+                }
+            }
+        }
+        // receive if I'm a target
+        if targets.contains(&me) {
+            match sh {
+                MMat::Helper { lam } => {
+                    let ms: Vec<R> = ctx.recv_ring(P1, n)?;
+                    ctx.expect_ring(P2, &ms);
+                    let data = ms
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &m)| {
+                            m - lam[0].data()[i] - lam[1].data()[i] - lam[2].data()[i]
+                        })
+                        .collect();
+                    my_value = Some(Matrix::from_vec(rows, cols, data));
+                }
+                MMat::Eval { m, lam_next, lam_prev } => {
+                    let (src, _) = rec_sources(me);
+                    let lam_i: Vec<R> = ctx.recv_ring(src, n)?;
+                    ctx.expect_ring(P0, &lam_i);
+                    let data = (0..n)
+                        .map(|i| {
+                            m.data()[i] - lam_i[i] - lam_next.data()[i] - lam_prev.data()[i]
+                        })
+                        .collect();
+                    my_value = Some(Matrix::from_vec(rows, cols, data));
+                }
+            }
+        }
+        // every party flushes, exactly as in reconstruct_to_many
+        ctx.flush_verify()?;
+        Ok(my_value)
+    })
+}
+
 /// `Π_fRec` (Fig. 5) — fair reconstruction: liveness bits through P0,
 /// majority agreement on continue/abort, then missing shares delivered with
 /// 2-of-3 redundancy so every party picks the majority value.
@@ -367,6 +491,29 @@ mod tests {
         assert_eq!(outs[3], Some(Z64(555)));
         assert_eq!(outs[1], None);
         assert_eq!(outs[2], None);
+    }
+
+    #[test]
+    fn reconstruct_mat_flat_matches_elementwise() {
+        use crate::ring::Matrix;
+        let run = run_4pc(NetProfile::zero(), 27, |ctx| {
+            let x = (ctx.id() == P1)
+                .then(|| Matrix::from_fn(3, 2, |r, c| Z64((10 * r + c) as u64)));
+            let sh = super::super::sharing::share_mat_n(ctx, P1, x.as_ref(), 3, 2)?;
+            ctx.flush_verify()?;
+            let all = reconstruct_mat(ctx, &sh)?;
+            let subset = reconstruct_mat_to(ctx, &sh, &[P0, P2])?;
+            Ok((all, subset))
+        });
+        let (outs, _) = run.expect_ok();
+        let want = Matrix::from_fn(3, 2, |r, c| Z64((10 * r + c) as u64));
+        for (p, (all, _)) in outs.iter().enumerate() {
+            assert_eq!(all, &want, "P{p} full reconstruction");
+        }
+        assert_eq!(outs[0].1.as_ref(), Some(&want));
+        assert_eq!(outs[2].1.as_ref(), Some(&want));
+        assert_eq!(outs[1].1, None);
+        assert_eq!(outs[3].1, None);
     }
 
     #[test]

@@ -27,33 +27,68 @@ fn lam_scope(dealer: PartyId, j: PartyId) -> Scope {
     }
 }
 
-/// Draw the λ components for a sharing dealt by `dealer`; returns
-/// `(my_share_skeleton, full_mask_if_known)`. Also the single source of
-/// truth for [`crate::pool::mat`]'s pre-drawn wire masks, which must follow
-/// the exact dealer scope pattern (and draw order) of `Π_Sh` so a pooled
-/// mask is indistinguishable from an inline-sampled one.
-pub(crate) fn sample_mask<R: Ring>(ctx: &mut Ctx, dealer: PartyId) -> (MShare<R>, Option<[R; 3]>) {
+/// Draw the λ components for `n` sharings dealt by `dealer` — the single
+/// source of truth for the dealer scope pattern of `Π_Sh`. Components are
+/// drawn **per scope** (one bulk `sample_vec` per component) instead of
+/// `n` interleaved per-element draws; the per-scope PRF streams are
+/// independent, so the values are draw-for-draw what the per-element path
+/// would have produced while the keystream refills in one pass — the
+/// flat-buffer fill path of [`share_many_n`]/[`share_mat_n`] and
+/// [`crate::pool::mat`]'s pooled wire masks. Returns the component vectors
+/// indexed `j − 1` (`None` where this party's scopes do not cover them).
+pub(crate) fn sample_mask_vecs<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    n: usize,
+) -> [Option<Vec<R>>; 3] {
     let me = ctx.id();
-    let mut lam = [None::<R>; 3];
+    let mut lam: [Option<Vec<R>>; 3] = [None, None, None];
     for j in EVALUATORS {
         let scope = lam_scope(dealer, j);
         if scope.holds(me) {
-            lam[(j.0 - 1) as usize] = Some(ctx.keys.sample(scope));
+            lam[(j.0 - 1) as usize] = Some(ctx.keys.sample_vec(scope, n));
         }
     }
-    let full = (lam.iter().all(Option::is_some))
-        .then(|| [lam[0].unwrap(), lam[1].unwrap(), lam[2].unwrap()]);
-    let skeleton = if me.is_evaluator() {
-        MShare::Eval {
-            m: R::ZERO, // filled online
-            lam_next: lam[(me.next_evaluator().0 - 1) as usize].expect("next λ held"),
-            lam_prev: lam[(me.prev_evaluator().0 - 1) as usize].expect("prev λ held"),
+    lam
+}
+
+/// The full mask `Λ = λ1 + λ2 + λ3` per element, where all three component
+/// vectors are held (the dealer, and P0). Shared with
+/// [`crate::pool::mat::sample_wire_mask`] so the pooled==inline mask
+/// invariant lives in one place.
+pub(crate) fn full_masks<R: Ring>(lam: &[Option<Vec<R>>; 3], n: usize) -> Option<Vec<R>> {
+    match (&lam[0], &lam[1], &lam[2]) {
+        (Some(l1), Some(l2), Some(l3)) => {
+            Some((0..n).map(|i| l1[i] + l2[i] + l3[i]).collect())
+        }
+        _ => None,
+    }
+}
+
+/// Assemble a party's SoA matrix share from per-scope λ component vectors
+/// (`m` present at evaluators only). The single source of truth for the
+/// Eval/Helper component layout — [`share_mat_n`] and
+/// [`crate::pool::mat::sample_wire_mask`] both build through it, so a
+/// layout change cannot desync pooled wire masks from inline sharings.
+pub(crate) fn assemble_mmat<R: Ring>(
+    me: PartyId,
+    mut lam: [Option<Vec<R>>; 3],
+    m: Option<Matrix<R>>,
+    rows: usize,
+    cols: usize,
+) -> MMat<R> {
+    let mut take = |j: u8| {
+        Matrix::from_vec(rows, cols, lam[(j - 1) as usize].take().expect("λ held"))
+    };
+    if me.is_evaluator() {
+        MMat::Eval {
+            m: m.expect("evaluator holds m"),
+            lam_next: take(me.next_evaluator().0),
+            lam_prev: take(me.prev_evaluator().0),
         }
     } else {
-        let f = full.expect("P0 knows all λ");
-        MShare::Helper { lam: f }
-    };
-    (skeleton, full)
+        MMat::Helper { lam: [take(1), take(2), take(3)] }
+    }
 }
 
 /// `Π_Sh(P_i, v)` — dealer `dealer` shares `v` (Fig. 1). Pass `Some(v)` at
@@ -90,6 +125,46 @@ pub fn share_many<R: Ring>(
     share_many_n(ctx, dealer, vs, n)
 }
 
+/// The online delivery of `Π_Sh`: the dealer sends `m = v + Λ` to the other
+/// evaluators; every evaluator cross-checks the common `m`. Returns my
+/// `m`-vector (`None` at P0 when it is not the dealer's audience… P0 never
+/// holds `m`). Shared by [`share_many_n`] and [`share_mat_n`] and
+/// message-for-message the delivery of [`share_mat_with_mask`] — the
+/// pooled==inline equivalence suite pins that; change them together.
+fn share_deliver<R: Ring>(
+    ctx: &mut Ctx,
+    dealer: PartyId,
+    vs: Option<&[R]>,
+    full: Option<&[R]>,
+    n: usize,
+) -> Result<Option<Vec<R>>, Abort> {
+    let me = ctx.id();
+    if me == dealer {
+        let vs = vs.expect("dealer must supply values");
+        assert_eq!(vs.len(), n);
+        let f = full.expect("dealer knows the full mask");
+        let ms: Vec<R> = vs.iter().zip(f).map(|(&v, &l)| v + l).collect();
+        for p in EVALUATORS {
+            if p != me {
+                ctx.send_ring(p, &ms);
+            }
+        }
+        if me.is_evaluator() {
+            ctx.crosscheck_ring(&ms);
+            Ok(Some(ms))
+        } else {
+            Ok(None)
+        }
+    } else if me.is_evaluator() {
+        let ms: Vec<R> = ctx.recv_ring(dealer, n)?;
+        ctx.crosscheck_ring(&ms);
+        Ok(Some(ms))
+    } else {
+        // P0, not dealer: holds only the mask components
+        Ok(None)
+    }
+}
+
 /// [`share_many`] with an explicit public batch size `n`.
 pub fn share_many_n<R: Ring>(
     ctx: &mut Ctx,
@@ -98,58 +173,42 @@ pub fn share_many_n<R: Ring>(
     n: usize,
 ) -> Result<Vec<MShare<R>>, Abort> {
     let me = ctx.id();
-    if me == dealer {
-        assert!(vs.is_some(), "dealer must supply values");
-        assert_eq!(vs.unwrap().len(), n);
-    }
-    let masks: Vec<(MShare<R>, Option<[R; 3]>)> = ctx.offline(|ctx| {
-        (0..n).map(|_| sample_mask(ctx, dealer)).collect()
-    });
+    let lam = ctx.offline(|ctx| sample_mask_vecs::<R>(ctx, dealer, n));
+    let full = full_masks(&lam, n);
 
     ctx.online(|ctx| {
-        if me == dealer {
-            let vs = vs.unwrap();
-            let ms: Vec<R> = vs
-                .iter()
-                .zip(masks.iter())
-                .map(|(&v, (_, full))| {
-                    let f = full.expect("dealer knows mask");
-                    v + f[0] + f[1] + f[2]
-                })
-                .collect();
-            for p in EVALUATORS {
-                if p != me {
-                    ctx.send_ring(p, &ms);
+        let my_m = share_deliver(ctx, dealer, vs, full.as_deref(), n)?;
+        Ok((0..n)
+            .map(|i| {
+                if me.is_evaluator() {
+                    MShare::Eval {
+                        m: my_m.as_ref().expect("evaluator holds m")[i],
+                        lam_next: lam[(me.next_evaluator().0 - 1) as usize]
+                            .as_ref()
+                            .expect("next λ held")[i],
+                        lam_prev: lam[(me.prev_evaluator().0 - 1) as usize]
+                            .as_ref()
+                            .expect("prev λ held")[i],
+                    }
+                } else {
+                    MShare::Helper {
+                        lam: [
+                            lam[0].as_ref().expect("P0 holds λ1")[i],
+                            lam[1].as_ref().expect("P0 holds λ2")[i],
+                            lam[2].as_ref().expect("P0 holds λ3")[i],
+                        ],
+                    }
                 }
-            }
-            if me.is_evaluator() {
-                ctx.crosscheck_ring(&ms);
-                Ok(ms
-                    .into_iter()
-                    .zip(masks)
-                    .map(|(m, (skel, _))| fill_m(skel, m))
-                    .collect())
-            } else {
-                Ok(masks.into_iter().map(|(skel, _)| skel).collect())
-            }
-        } else if me.is_evaluator() {
-            let expect_n = masks.len();
-            let ms: Vec<R> = ctx.recv_ring(dealer, expect_n)?;
-            ctx.crosscheck_ring(&ms);
-            Ok(ms
-                .into_iter()
-                .zip(masks)
-                .map(|(m, (skel, _))| fill_m(skel, m))
-                .collect())
-        } else {
-            // P0, not dealer: holds only the mask components
-            Ok(masks.into_iter().map(|(skel, _)| skel).collect())
-        }
+            })
+            .collect())
     })
 }
 
 /// Share a whole matrix from `dealer` (batched `Π_Sh`; the shape is public
-/// circuit structure). Pass the clear matrix at the dealer, `None` elsewhere.
+/// circuit structure). Pass the clear matrix at the dealer, `None`
+/// elsewhere. **Flat path**: the mask components are drawn per scope into
+/// SoA component matrices and the share is assembled directly — no
+/// per-element [`MShare`] materialisation, no `from_shares` pass.
 pub fn share_mat_n<R: Ring>(
     ctx: &mut Ctx,
     dealer: PartyId,
@@ -157,12 +216,19 @@ pub fn share_mat_n<R: Ring>(
     rows: usize,
     cols: usize,
 ) -> Result<MMat<R>, Abort> {
+    let me = ctx.id();
+    let n = rows * cols;
     if let Some(m) = m {
         assert_eq!((m.rows(), m.cols()), (rows, cols), "dealer matrix shape");
     }
-    let vs: Option<Vec<R>> = m.map(|m| m.data().to_vec());
-    let shares = share_many_n(ctx, dealer, vs.as_deref(), rows * cols)?;
-    Ok(MMat::from_shares(rows, cols, &shares))
+    let lam = ctx.offline(|ctx| sample_mask_vecs::<R>(ctx, dealer, n));
+    let full = full_masks(&lam, n);
+
+    ctx.online(|ctx| {
+        let my_m = share_deliver(ctx, dealer, m.map(Matrix::data), full.as_deref(), n)?;
+        let m_mat = my_m.map(|v| Matrix::from_vec(rows, cols, v));
+        Ok(assemble_mmat(me, lam, m_mat, rows, cols))
+    })
 }
 
 /// `Π_Sh` against a **pre-drawn pooled wire mask** (see
@@ -180,10 +246,11 @@ pub fn share_mat_with_mask<R: Ring>(
     skel: MMat<R>,
     full: Option<Matrix<R>>,
 ) -> Result<MMat<R>, Abort> {
-    // NOTE: this is [`share_many_n`]'s online delivery transplanted onto a
-    // pre-drawn mask (dealer send → evaluator crosscheck → fill m). The two
-    // must stay message-for-message identical — the pooled==inline
-    // equivalence suite pins that; change them together.
+    // NOTE: this is [`share_deliver`] (the online delivery of
+    // share_many_n / share_mat_n) transplanted onto a pre-drawn mask
+    // (dealer send → evaluator crosscheck → fill m). The two must stay
+    // message-for-message identical — the pooled==inline equivalence suite
+    // pins that; change them together.
     let me = ctx.id();
     let (rows, cols) = skel.dims();
     let n = rows * cols;
@@ -221,13 +288,6 @@ pub fn share_mat_with_mask<R: Ring>(
             h @ MMat::Helper { .. } => h,
         })
     })
-}
-
-fn fill_m<R: Ring>(skel: MShare<R>, m_v: R) -> MShare<R> {
-    match skel {
-        MShare::Eval { lam_next, lam_prev, .. } => MShare::Eval { m: m_v, lam_next, lam_prev },
-        h => h,
-    }
 }
 
 /// `Π_aSh(P0, v)` — P0 deals a ⟨·⟩-sharing in the offline phase (Fig. 2).
@@ -649,7 +709,7 @@ mod tests {
                 if ctx.id() == P0 {
                     // cheat: emulate Π_Sh but with inconsistent m values
                     ctx.offline(|ctx| {
-                        let _ = sample_mask::<Z64>(ctx, P0);
+                        let _ = sample_mask_vecs::<Z64>(ctx, P0, 1);
                     });
                     ctx.online(|ctx| {
                         ctx.send_ring1(P1, Z64(1));

@@ -227,8 +227,31 @@ pub(crate) fn matmul_tr_online(
 
     ctx.online(|ctx| {
         if me == P0 {
-            let shares: Vec<MShare<Z64>> = pairs.iter().map(|p| p.rt).collect();
-            return Ok(MMat::from_shares(a, c, &shares));
+            // SoA output: P0's share is the pairs' −rᵗ components, column
+            // by column — no per-element MShare round-trip
+            let mut l = [
+                Vec::with_capacity(n),
+                Vec::with_capacity(n),
+                Vec::with_capacity(n),
+            ];
+            for p in pairs {
+                match p.rt {
+                    MShare::Helper { lam } => {
+                        l[0].push(lam[0]);
+                        l[1].push(lam[1]);
+                        l[2].push(lam[2]);
+                    }
+                    _ => unreachable!("P0 holds helper rt shares"),
+                }
+            }
+            let [l1, l2, l3] = l;
+            return Ok(MMat::Helper {
+                lam: [
+                    Matrix::from_vec(a, c, l1),
+                    Matrix::from_vec(a, c, l2),
+                    Matrix::from_vec(a, c, l3),
+                ],
+            });
         }
         let (g_next, g_prev) = match gamma {
             MatGamma::Eval { next, prev } => (next, prev),
@@ -255,13 +278,27 @@ pub(crate) fn matmul_tr_online(
         let mxmy = ctx.net.timed(|| crate::runtime::gemm(x.m(), y.m()));
         let z_minus_r = &(&(&zp_next + &zp_prev) + &missing) + &mxmy;
 
-        let shares: Vec<MShare<Z64>> = (0..n)
-            .map(|i| {
-                let zt_pub = z_minus_r.data()[i].truncate(shift);
-                pairs[i].rt.add_const(zt_pub)
-            })
-            .collect();
-        Ok(MMat::from_shares(a, c, &shares))
+        // SoA output: m = (z − r) ≫ shift (the pairs' rt carries m = 0),
+        // λ straight from the pairs' components — one pass, no
+        // Vec<MShare> + from_shares round-trip
+        let mut m = Vec::with_capacity(n);
+        let mut l_next = Vec::with_capacity(n);
+        let mut l_prev = Vec::with_capacity(n);
+        for (i, p) in pairs.iter().enumerate() {
+            match p.rt {
+                MShare::Eval { lam_next, lam_prev, .. } => {
+                    m.push(z_minus_r.data()[i].truncate(shift));
+                    l_next.push(lam_next);
+                    l_prev.push(lam_prev);
+                }
+                _ => unreachable!("evaluators hold eval rt shares"),
+            }
+        }
+        Ok(MMat::Eval {
+            m: Matrix::from_vec(a, c, m),
+            lam_next: Matrix::from_vec(a, c, l_next),
+            lam_prev: Matrix::from_vec(a, c, l_prev),
+        })
     })
 }
 

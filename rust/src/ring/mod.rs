@@ -58,6 +58,44 @@ pub trait Ring:
     fn from_wire(buf: &[u8]) -> Option<(Self, usize)>;
     /// Sample an element from a uniformly random 16-byte block (PRF output).
     fn from_block(block: &[u8; 16]) -> Self;
+
+    /// Fixed-size encode into a caller-provided buffer (the scalar
+    /// fast path of `Ctx::send_ring1`: no per-message `Vec`). Writes at
+    /// most [`Ring::WIRE_BYTES`] bytes and returns the count.
+    fn to_wire_into(&self, out: &mut [u8]) -> usize;
+
+    /// Payload bytes of `n` elements under the **bulk** wire codec
+    /// ([`Ring::to_wire_bulk`]): `n·WIRE_BYTES` for byte-granular rings;
+    /// the boolean ring overrides this to `⌈n/8⌉` — bits pack 8 per byte
+    /// on the wire while the analytic meters keep counting `n` bits.
+    fn wire_len(n: usize) -> usize {
+        n * Self::WIRE_BYTES
+    }
+
+    /// Bulk wire encoding of a slice. Default: element-wise
+    /// [`Ring::to_wire`]; [`Bit`] overrides it to pack 8 bits per byte
+    /// (LSB-first), zero-padding the trailing byte.
+    fn to_wire_bulk(vals: &[Self], out: &mut Vec<u8>) {
+        out.reserve(Self::wire_len(vals.len()));
+        for v in vals {
+            v.to_wire(out);
+        }
+    }
+
+    /// Inverse of [`Ring::to_wire_bulk`]: decode exactly `n` elements,
+    /// returning them and the bytes consumed. `None` on short or malformed
+    /// input — for the packed boolean codec that includes non-zero padding
+    /// bits, so a sender cannot smuggle payload past the metered count.
+    fn from_wire_bulk(buf: &[u8], n: usize) -> Option<(Vec<Self>, usize)> {
+        let mut out = Vec::with_capacity(n);
+        let mut off = 0;
+        for _ in 0..n {
+            let (v, used) = Self::from_wire(&buf[off..])?;
+            out.push(v);
+            off += used;
+        }
+        Some((out, off))
+    }
 }
 
 /// An element of the arithmetic ring `Z_{2^64}`.
@@ -214,6 +252,12 @@ impl Ring for Z64 {
         b.copy_from_slice(&block[..8]);
         Z64(u64::from_le_bytes(b))
     }
+
+    #[inline]
+    fn to_wire_into(&self, out: &mut [u8]) -> usize {
+        out[..8].copy_from_slice(&self.0.to_le_bytes());
+        8
+    }
 }
 
 /// An element of the boolean ring `Z_2`: addition is XOR, multiplication AND.
@@ -301,8 +345,9 @@ impl SubAssign for Bit {
 impl Ring for Bit {
     const ZERO: Bit = Bit(false);
     const ONE: Bit = Bit(true);
-    // On the wire a bit travels as one byte; the *analytic* cost tables count
-    // it as 1 bit — net::Meter records both (see net::Meter::bits).
+    // A *lone* bit travels as one byte; slices go through the packed bulk
+    // codec below (8 bits/byte). The analytic cost tables count 1 bit
+    // either way — net::Meter records both (see net::Meter::bits).
     const WIRE_BYTES: usize = 1;
     const BITS: usize = 1;
 
@@ -319,6 +364,48 @@ impl Ring for Bit {
     #[inline]
     fn from_block(block: &[u8; 16]) -> Bit {
         Bit(block[0] & 1 == 1)
+    }
+
+    #[inline]
+    fn to_wire_into(&self, out: &mut [u8]) -> usize {
+        out[0] = self.0 as u8;
+        1
+    }
+
+    fn wire_len(n: usize) -> usize {
+        n.div_ceil(8)
+    }
+
+    /// Packed boolean codec: 8 bits per byte, LSB-first, zero-padded
+    /// trailing byte — the byte-optimal encoding the boolean-world
+    /// communication lemmas count.
+    fn to_wire_bulk(vals: &[Self], out: &mut Vec<u8>) {
+        out.reserve(vals.len().div_ceil(8));
+        let mut acc = 0u8;
+        for (i, b) in vals.iter().enumerate() {
+            acc |= (b.0 as u8) << (i % 8);
+            if i % 8 == 7 {
+                out.push(acc);
+                acc = 0;
+            }
+        }
+        if vals.len() % 8 != 0 {
+            out.push(acc);
+        }
+    }
+
+    fn from_wire_bulk(buf: &[u8], n: usize) -> Option<(Vec<Bit>, usize)> {
+        let nb = n.div_ceil(8);
+        if buf.len() < nb {
+            return None;
+        }
+        // reject non-zero padding: the unused high bits of the trailing
+        // byte carry no metered payload and must not carry covert one
+        if n % 8 != 0 && (buf[nb - 1] >> (n % 8)) != 0 {
+            return None;
+        }
+        let out = (0..n).map(|i| Bit((buf[i / 8] >> (i % 8)) & 1 == 1)).collect();
+        Some((out, nb))
     }
 }
 
@@ -396,6 +483,55 @@ mod tests {
         assert_eq!(z, Z64(0xDEADBEEF12345678));
         let (b, _) = Bit::from_wire(&buf[n..]).unwrap();
         assert_eq!(b, Bit(true));
+    }
+
+    #[test]
+    fn packed_bit_codec_roundtrip_and_padding() {
+        // all lengths around byte boundaries round-trip
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 63, 64, 65] {
+            let bits: Vec<Bit> = (0..n).map(|i| Bit(i % 3 == 0)).collect();
+            let mut buf = Vec::new();
+            Bit::to_wire_bulk(&bits, &mut buf);
+            assert_eq!(buf.len(), n.div_ceil(8), "n={n}: 8 bits per byte");
+            assert_eq!(buf.len(), Bit::wire_len(n));
+            let (back, used) = Bit::from_wire_bulk(&buf, n).expect("roundtrip");
+            assert_eq!(back, bits, "n={n}");
+            assert_eq!(used, buf.len());
+        }
+        // non-zero padding bits are rejected (no covert payload)
+        let mut buf = Vec::new();
+        Bit::to_wire_bulk(&[Bit(true), Bit(false), Bit(true)], &mut buf);
+        buf[0] |= 0x80;
+        assert!(Bit::from_wire_bulk(&buf, 3).is_none(), "padding must be zero");
+        // short input is rejected
+        assert!(Bit::from_wire_bulk(&[], 1).is_none());
+    }
+
+    #[test]
+    fn bulk_codec_default_matches_elementwise() {
+        let vals = [Z64(1), Z64(u64::MAX), Z64(0xDEADBEEF)];
+        let mut bulk = Vec::new();
+        Z64::to_wire_bulk(&vals, &mut bulk);
+        let mut each = Vec::new();
+        for v in &vals {
+            v.to_wire(&mut each);
+        }
+        assert_eq!(bulk, each);
+        assert_eq!(bulk.len(), Z64::wire_len(3));
+        let (back, used) = Z64::from_wire_bulk(&bulk, 3).unwrap();
+        assert_eq!(back, vals.to_vec());
+        assert_eq!(used, 24);
+    }
+
+    #[test]
+    fn to_wire_into_matches_to_wire() {
+        let mut stack = [0u8; 16];
+        let used = Z64(0x0102030405060708).to_wire_into(&mut stack);
+        let mut heap = Vec::new();
+        Z64(0x0102030405060708).to_wire(&mut heap);
+        assert_eq!(&stack[..used], &heap[..]);
+        let used = Bit(true).to_wire_into(&mut stack);
+        assert_eq!(&stack[..used], &[1u8]);
     }
 
     #[test]

@@ -68,7 +68,6 @@ use crate::pool::{
 use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
 use crate::ring::fixed::{FixedPoint, FRAC_BITS};
 use crate::ring::{Matrix, Z64};
-use crate::sharing::MMat;
 
 /// Domain separators so the model / query streams don't collide.
 const W_SEED: u64 = 0x7365_7276_655f_7731;
@@ -218,6 +217,12 @@ struct PartyOut {
     batch_lat: Vec<f64>,
     /// Per-batch online round deltas.
     batch_rounds: Vec<u64>,
+    /// Per-batch local-compute seconds (the `timed` closures of the wave:
+    /// masked matmuls, truncation, decode) — the `compute_ms` column.
+    batch_compute: Vec<f64>,
+    /// Per-batch online `Value`-class payload bytes sent by *this* party
+    /// (digests/commitments excluded — same class the lemmas count).
+    batch_value_bytes: Vec<u64>,
     /// Per-batch offline messages *sent by this party* inside the wave
     /// window (local counters — race-free across threads).
     wave_offline_msgs: Vec<u64>,
@@ -263,6 +268,14 @@ pub struct ServeStats {
     pub online_total_bytes: u64,
     /// Offline value bits (pool fill / refill + any live γ exchanges).
     pub offline_value_bits: u64,
+    /// Summed per-wave local-compute seconds (max across parties per wave)
+    /// — the serving loop's `compute_ms` column, separated from network
+    /// latency by the party-local compute meter.
+    pub compute_in_waves: f64,
+    /// Online `Value`-class payload bytes sent inside wave windows, summed
+    /// over parties and waves (digests excluded — comparable to the
+    /// analytic value-byte counts) — the per-wave `value_bytes` column.
+    pub value_bytes_in_waves: u64,
     /// Offline-phase messages sent by **any** party inside a serving-wave
     /// window, summed over waves — 0 for a warm keyed pool (the
     /// offline-silence property), > 0 whenever a wave runs γ-exchange or
@@ -312,6 +325,17 @@ impl ServeStats {
 
     pub fn per_query_online_bytes(&self) -> f64 {
         self.online_total_bytes as f64 / self.queries.max(1) as f64
+    }
+
+    /// Mean local-compute milliseconds per wave (max across parties).
+    pub fn compute_ms_per_wave(&self) -> f64 {
+        self.compute_in_waves * 1e3 / self.batches.max(1) as f64
+    }
+
+    /// Mean online `Value`-class payload bytes per wave (summed over the
+    /// four parties).
+    pub fn value_bytes_per_wave(&self) -> f64 {
+        self.value_bytes_in_waves as f64 / self.batches.max(1) as f64
     }
 }
 
@@ -398,6 +422,8 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
     let mut out = PartyOut {
         batch_lat: Vec::new(),
         batch_rounds: Vec::new(),
+        batch_compute: Vec::new(),
+        batch_value_bytes: Vec::new(),
         wave_offline_msgs: Vec::new(),
         wave_offline_bytes: Vec::new(),
         wave_offline_msgs_mat: Vec::new(),
@@ -440,6 +466,8 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
         let rows: usize = batch.iter().map(|q| q.rows).sum();
         let t0 = ctx.net.clock(Phase::Online);
         let r0 = ctx.net.rounds(Phase::Online);
+        let c0 = ctx.net.compute_time(Phase::Online);
+        let vb0 = ctx.net.sent_value_bytes(Phase::Online);
         let om0 = ctx.net.sent_msgs(Phase::Offline);
         let ob0 = ctx.net.sent_bytes(Phase::Offline);
 
@@ -475,26 +503,28 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
         let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
         let or0 = ctx.net.sent_msgs(Phase::Offline);
         if cfg.relu {
-            let shares = u.to_shares();
-            let (r, _) = match cfg.mode {
+            // flat path: the wave stays on SoA matrices; the share-vector
+            // conversion lives inside the mat-level ReLU entry points
+            u = match cfg.mode {
                 PoolMode::Keyed => {
-                    crate::ml::relu_many_keyed(ctx, &relu_wave_key(cfg, rows), &shares)?
+                    crate::ml::relu_mat_keyed(ctx, &relu_wave_key(cfg, rows), &u)?.0
                 }
-                _ => crate::ml::relu_many(ctx, &shares)?,
+                _ => crate::ml::relu_mat(ctx, &u)?.0,
             };
-            u = MMat::from_shares(rows, 1, &r);
         }
         let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
 
-        // deliver: open towards the data owner, flushing verification
-        let opened =
-            crate::proto::reconstruct::reconstruct_to_many(ctx, &u.to_shares(), &[P2])?;
+        // deliver: open towards the data owner, flushing verification —
+        // SoA reconstruction, no per-element share vector
+        let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
         if let Some(vals) = opened {
-            out.answers.extend(vals.iter().map(|&v| FixedPoint::decode(v)));
+            out.answers.extend(vals.data().iter().map(|&v| FixedPoint::decode(v)));
         }
 
         out.batch_lat.push(ctx.net.clock(Phase::Online) - t0);
         out.batch_rounds.push(ctx.net.rounds(Phase::Online) - r0);
+        out.batch_compute.push(ctx.net.compute_time(Phase::Online) - c0);
+        out.batch_value_bytes.push(ctx.net.sent_value_bytes(Phase::Online) - vb0);
         out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
         out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
         out.wave_offline_msgs_mat.push(om_mat);
@@ -526,13 +556,20 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
 
     let batches = outs[1].batch_lat.len();
     let mut online_latency = 0.0;
+    let mut compute_in_waves = 0.0;
     for i in 0..batches {
         let batch_max = outs
             .iter()
             .map(|o| o.batch_lat[i])
             .fold(0.0f64, f64::max);
         online_latency += batch_max;
+        compute_in_waves += outs
+            .iter()
+            .map(|o| o.batch_compute[i])
+            .fold(0.0f64, f64::max);
     }
+    let value_bytes_in_waves: u64 =
+        outs.iter().map(|o| o.batch_value_bytes.iter().sum::<u64>()).sum();
     let w_share_bits = 2 * cfg.d as u64 * 64; // one-time model sharing
     let offline_msgs_in_waves: u64 =
         outs.iter().map(|o| o.wave_offline_msgs.iter().sum::<u64>()).sum();
@@ -553,6 +590,8 @@ pub fn serve(profile: NetProfile, cfg: ServeConfig) -> ServeStats {
         online_total_bytes: report.total_bytes[Phase::Online as usize]
             .saturating_sub(w_share_bits / 8),
         offline_value_bits: report.value_bits[Phase::Offline as usize],
+        compute_in_waves,
+        value_bytes_in_waves,
         offline_msgs_in_waves,
         offline_bytes_in_waves,
         offline_msgs_matmul,
@@ -634,6 +673,23 @@ mod tests {
         assert_eq!(stats.refill_mat_items, 2);
         assert_eq!(stats.refill_online_msgs, 0, "refill traffic is offline-only");
         assert_eq!(stats.pool_left_mat, 0, "no tick after the last wave");
+    }
+
+    #[test]
+    fn wave_compute_and_bytes_metrics_populate() {
+        let stats = serve(NetProfile::zero(), cfg(4, 2, PoolMode::Keyed));
+        assert_eq!(stats.batches, 2);
+        assert!(stats.value_bytes_in_waves > 0, "waves send value payload");
+        assert!(stats.value_bytes_per_wave() > 0.0);
+        // Value class only: the wave windows must not book more value
+        // bytes than the whole run's value traffic
+        assert!(
+            stats.value_bytes_in_waves
+                <= stats.report.value_bytes[Phase::Online as usize],
+            "per-wave value bytes exclude digest traffic"
+        );
+        assert!(stats.compute_in_waves >= 0.0);
+        assert!(stats.compute_ms_per_wave().is_finite());
     }
 
     #[test]

@@ -42,8 +42,6 @@ use crate::sched::{
     tenant_relu_key, tenant_wave_key, tenant_weights, ModelRegistry, SchedQueue, SchedQueueStats,
     SchedQuery, TenantSpec, WavePlanner,
 };
-use crate::sharing::MMat;
-
 use super::PoolMode;
 
 /// Domain separator for per-tenant query streams.
@@ -398,22 +396,23 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
         let or0 = ctx.net.sent_msgs(Phase::Offline);
         if spec.relu {
-            let shares = u.to_shares();
-            let (r, _) = if keyed {
-                crate::ml::relu_many_keyed(ctx, &tenant_relu_key(spec, rows), &shares)?
+            // flat path: SoA matrices end to end (share-vector conversion
+            // lives inside the mat-level ReLU entry points)
+            u = if keyed {
+                crate::ml::relu_mat_keyed(ctx, &tenant_relu_key(spec, rows), &u)?.0
             } else {
-                crate::ml::relu_many(ctx, &shares)?
+                crate::ml::relu_mat(ctx, &u)?.0
             };
-            u = MMat::from_shares(rows, 1, &r);
         }
         let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
-        let opened =
-            crate::proto::reconstruct::reconstruct_to_many(ctx, &u.to_shares(), &[P2])?;
+        let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
         if let Some(vals) = opened {
             let mut off = 0;
             for q in &batch {
-                let a: Vec<f64> =
-                    vals[off..off + q.rows].iter().map(|&v| FixedPoint::decode(v)).collect();
+                let a: Vec<f64> = vals.data()[off..off + q.rows]
+                    .iter()
+                    .map(|&v| FixedPoint::decode(v))
+                    .collect();
                 out.answers[t].push((q.id, a));
                 off += q.rows;
             }

@@ -291,6 +291,32 @@ mod tests {
     }
 
     #[test]
+    fn batched_and_per_element_draws_stay_in_lockstep() {
+        // the pool-fill guard at the KeyChain level: one holder fills in
+        // one gen_vec batch while the others draw per element — identical
+        // values and identical stream positions, over Z64, Bit and a mixed
+        // sequence (the keystream-batched PRF must be consumption-
+        // equivalent to the per-element path at every party)
+        let [mut k0, mut k1, _, mut k3] = setup_keys(46);
+        let batched: Vec<Z64> = k0.sample_excl_vec(P2, 5);
+        let scalar: Vec<Z64> = (0..5).map(|_| k1.sample_excl(P2)).collect();
+        let scalar3: Vec<Z64> = (0..5).map(|_| k3.sample_excl(P2)).collect();
+        assert_eq!(batched, scalar);
+        assert_eq!(scalar, scalar3);
+
+        let bb: Vec<Bit> = k0.sample_excl_vec(P2, 137);
+        let sb: Vec<Bit> = (0..137).map(|_| k1.sample_excl(P2)).collect();
+        assert_eq!(bb, sb);
+
+        // mixed tail: a Z64 draw after the bit batch stays aligned too
+        let z0: Z64 = k0.sample_excl(P2);
+        let z1: Z64 = k1.sample_excl(P2);
+        assert_eq!(z0, z1);
+        assert_eq!(k0.position(Scope::Excl(P2)), k1.position(Scope::Excl(P2)));
+        assert_eq!(k0.position(Scope::Excl(P2)), k3.position(Scope::Excl(P2)) + 2);
+    }
+
+    #[test]
     fn streams_stay_in_position_sync() {
         let [mut k0, mut k1, mut k2, mut k3] = setup_keys(45);
         for _ in 0..10 {

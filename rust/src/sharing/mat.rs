@@ -4,6 +4,14 @@
 //! struct-of-matrices (`m`, `λ_next`, `λ_prev` / `λ_1..3`) keeps the party's
 //! local work as dense `ring::Matrix` ops, which is exactly the shape the
 //! L1/L2 artifacts consume (`runtime::MaskedMatmul`).
+//!
+//! The component matrices **are** the wire payloads: the serving hot path
+//! (`share_mat_n`, `matmul_tr_online`, `reconstruct_mat_to`, the pooled
+//! wire-mask fills) reads and builds them directly through the SoA views
+//! ([`MMat::m`]/[`MMat::lam`] + `Matrix::data` slices, and the public
+//! variant constructors) — [`MMat::to_shares`]/[`MMat::at`] are the
+//! per-element compatibility path for share-level protocols, not the
+//! wave pipeline.
 
 use crate::net::PartyId;
 use crate::ring::{Matrix, Ring};

@@ -839,6 +839,7 @@ pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
         high_water: 2,
         age_every: 2,
         seed: 333,
+        ..MultiServeConfig::default()
     }
 }
 
@@ -847,12 +848,16 @@ pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
 pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
     let mut out = String::new();
     out.push_str(
-        "tenant   | sub | adm | rej | served | expired | waves (keyed/inl) | p50 ms | p99 ms | sojourn t | off msg/wave (mat|relu) | share\n",
+        "tenant   | sub | adm | rej | served | expired | waves (keyed/inl) | part | p50 ms | p99 ms | sojourn t | off msg/wave (mat|relu) | share | quarantine\n",
     );
     for ts in &stats.tenants {
         let per_wave = |m: u64| m as f64 / ts.waves.max(1) as f64;
+        let quarantine = match ts.quarantined_at {
+            Some(tick) => format!("t{tick} ({}r/{}l)", ts.requeued, ts.lost),
+            None => "-".into(),
+        };
         out.push_str(&format!(
-            "{:<8} | {:>3} | {:>3} | {:>3} | {:>6} | {:>7} | {:>5} ({:>2}/{:>2})      | {:>6.3} | {:>6.3} | {:>9.1} | {:>9.2} ({:.1}|{:.1})   | {:>4.0}%\n",
+            "{:<8} | {:>3} | {:>3} | {:>3} | {:>6} | {:>7} | {:>5} ({:>2}/{:>2})      | {:>4} | {:>6.3} | {:>6.3} | {:>9.1} | {:>9.2} ({:.1}|{:.1})   | {:>4.0}% | {quarantine}\n",
             ts.name,
             ts.submitted,
             ts.admitted,
@@ -862,6 +867,7 @@ pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
             ts.waves,
             ts.keyed_waves,
             ts.inline_waves,
+            ts.partial_waves,
             ts.p50_latency * 1e3,
             ts.p99_latency * 1e3,
             ts.mean_sojourn_ticks,
@@ -872,8 +878,9 @@ pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
         ));
     }
     out.push_str(&format!(
-        "total    : {} waves over {} ticks | {} online rounds | refill online msgs {} | aged promotions {}\n",
+        "total    : {} waves over {} ticks | {} online rounds | refill online msgs {} | aged promotions {} | quarantines {}\n",
         stats.waves, stats.ticks, stats.online_rounds, stats.refill_online_msgs, stats.aged_promotions,
+        stats.quarantines.len(),
     ));
     out
 }
@@ -913,12 +920,16 @@ pub fn serving_bench_json() -> String {
 
 /// Render the JSON document from a precomputed [`ServingBench`].
 ///
-/// Schema 2 (this PR) extends schema 1 with the per-wave `compute_ms` /
+/// Schema 2 extended schema 1 with the per-wave `compute_ms` /
 /// `value_bytes` columns on every mode row and a top-level
 /// `offline_fill_throughput` object — the regression-gated numbers for the
-/// keystream-batched PRF and the packed/flat hot path.
+/// keystream-batched PRF and the packed/flat hot path. Schema 3 (this PR)
+/// adds the containment fields: per-tenant `partial_waves` /
+/// `partial_keyed_waves` (the trailing-partial-batch keyed-pool fix) and
+/// `quarantined_at` / `requeued` / `lost`, plus a top-level `quarantines`
+/// array (empty for the honest benchmark run).
 pub fn serving_bench_json_from(bench: &ServingBench) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/2\",\n");
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/3\",\n");
     out.push_str(&format!(
         "  \"offline_fill_throughput\": {{\"bitext_masks_per_s\": {:.1}, \"trunc_pairs_per_s\": {:.1}, \"lam_skeletons_per_s\": {:.1}}},\n",
         bench.fill.bitext_masks_per_s, bench.fill.trunc_pairs_per_s, bench.fill.lam_per_s,
@@ -952,7 +963,7 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
     for (t, ts) in stats.tenants.iter().enumerate() {
         let spec = &cfg.tenants[t];
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"wave_share\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"wave_share\": {:.4}}}{}\n",
             json_escape(&ts.name),
             spec.weight,
             spec.class,
@@ -964,6 +975,11 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.waves,
             ts.keyed_waves,
             ts.inline_waves,
+            ts.partial_waves,
+            ts.partial_keyed_waves,
+            ts.quarantined_at.map_or("null".into(), |t| t.to_string()),
+            ts.requeued,
+            ts.lost,
             ts.p50_latency * 1e3,
             ts.p99_latency * 1e3,
             ts.mean_sojourn_ticks,
@@ -972,6 +988,21 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.offline_msgs_relu,
             ts.waves as f64 / stats.waves.max(1) as f64,
             if t + 1 < stats.tenants.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"quarantines\": [\n");
+    for (i, q) in stats.quarantines.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"tenant\": {}, \"at_tick\": {}, \"requeued\": {}, \"lost\": {}, \"drained_mat\": {}, \"drained_relu\": {}, \"why\": \"{}\"}}{}\n",
+            q.tenant,
+            q.at_tick,
+            q.requeued,
+            q.lost,
+            q.drained_mat,
+            q.drained_relu,
+            json_escape(&q.why),
+            if i + 1 < stats.quarantines.len() { "," } else { "" },
         ));
     }
     out.push_str("  ],\n");

@@ -301,6 +301,11 @@ pub struct MultiServeCliOpts {
     pub high_water: usize,
     /// Admission-control in-flight cap per tenant (`--cap N`).
     pub cap: Option<usize>,
+    /// Abort blast-radius containment demo (`--containment`): enables the
+    /// four-party wave-outcome barrier AND injects a deterministic
+    /// mid-serve tamper fault (P1 corrupts tenant 0's second keyed wave),
+    /// so the run shows a quarantine instead of failing closed.
+    pub containment: bool,
     /// Also write the machine-readable benchmark (`BENCH_serving.json`).
     pub json: bool,
 }
@@ -317,6 +322,7 @@ impl Default for MultiServeCliOpts {
             low_water: 1,
             high_water: 2,
             cap: None,
+            containment: false,
             json: false,
         }
     }
@@ -329,7 +335,7 @@ impl Default for MultiServeCliOpts {
 /// Prints the per-tenant stats table.
 pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
     use crate::sched::TenantSpec;
-    use crate::serve::{serve_multi, MultiServeConfig, PoolMode};
+    use crate::serve::{serve_multi, FaultKind, FaultPlan, MultiServeConfig, PoolMode};
     let queries = opts.queries.max(1);
     let coalesce = opts.coalesce.unwrap_or_else(|| queries.clamp(1, 8));
     let tenants: Vec<TenantSpec> = opts
@@ -352,10 +358,18 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
         high_water: opts.high_water.max(1),
         age_every: 2,
         seed: 333,
+        containment: opts.containment,
+        fault: opts.containment.then_some(FaultPlan {
+            party: crate::net::P1,
+            tenant: 0,
+            wave: 1,
+            kind: FaultKind::TamperMatLamX,
+        }),
     };
     println!(
-        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN) …",
+        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN{}) …",
         cfg.tenants.len(),
+        if opts.containment { ", containment on + injected tamper fault" } else { "" },
     );
     let stats = serve_multi(crate::net::NetProfile::lan(), cfg);
     print!("{}", crate::bench::tenant_table(&stats));
@@ -366,6 +380,15 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
             "per-wave offline silence: NO ({} offline msgs inside waves — inline fallbacks or cold pools)",
             stats.offline_msgs_in_waves
         );
+    }
+    for q in &stats.quarantines {
+        println!(
+            "quarantine: tenant {} at tick {} — {} re-queued, {} lost, {} mat / {} relu bundles drained ({})",
+            q.tenant, q.at_tick, q.requeued, q.lost, q.drained_mat, q.drained_relu, q.why,
+        );
+    }
+    if opts.containment && stats.quarantines.is_empty() {
+        println!("quarantine: none (containment enabled, no wave aborted)");
     }
     if opts.json {
         match crate::bench::write_serving_bench_json("BENCH_serving.json") {
@@ -394,5 +417,16 @@ mod tests {
     fn tiny_nn_cli() {
         let losses = train_cli("nn", 3, 8, 16);
         assert_eq!(losses.len(), 3);
+    }
+
+    #[test]
+    fn serve_tenants_cli_containment_demo_runs() {
+        // the --containment demo injects a tamper fault against tenant 0's
+        // second wave; the run must quarantine and finish, not panic
+        let mut opts = MultiServeCliOpts::default();
+        opts.queries = 6;
+        opts.coalesce = Some(3);
+        opts.containment = true;
+        serve_tenants_cli(opts);
     }
 }

@@ -11,8 +11,11 @@
 //!                                      # batched prediction serving demo
 //! trident serve   --models m1,m2 [--weights 2,1] [--priorities 0,1]
 //!                 [--deadline-ms D] [--cap N] [--queries N] [--coalesce C]
-//!                 [--low-water L] [--high-water H] [--json]
-//!                                      # multi-tenant scheduler demo
+//!                 [--low-water L] [--high-water H] [--containment] [--json]
+//!                                      # multi-tenant scheduler demo;
+//!                                      # --containment injects a mid-serve
+//!                                      # tamper fault and quarantines the
+//!                                      # poisoned tenant instead of dying
 //! ```
 //!
 //! `--json` (serve / tables) additionally writes the machine-readable
@@ -119,6 +122,7 @@ fn main() {
                 if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
                     opts.high_water = h;
                 }
+                opts.containment = flags.get("containment").map(String::as_str) == Some("true");
                 trident::coordinator::serve_tenants_cli(opts);
             } else {
                 let mut opts = trident::coordinator::ServeCliOpts::default();

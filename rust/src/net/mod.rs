@@ -96,6 +96,31 @@ pub enum MsgClass {
 const N_CLASS: usize = 5;
 
 /// Why a party program stopped.
+///
+/// ## Abort-scoping contract (tenant-scoped vs party-scoped)
+///
+/// Like the metering contract above, this is an invariant callers build on:
+///
+/// * **Party-scoped** aborts — [`Abort::Verify`], [`Abort::Signalled`],
+///   [`Abort::Channel`] — implicate a *party* (a failed consistency check,
+///   a peer's abort signal, a dead channel). They always fail the whole
+///   run closed: no containment layer may swallow them, because the
+///   paper's one-malicious-corruption security argument is exactly that an
+///   honest party stops the world when verification fails.
+/// * **Tenant-scoped** aborts — [`Abort::TenantScoped`] — carry the
+///   *provenance* of an in-wave failure: which tenant's wave (the pool
+///   shard `model`), at which logical `tick`, and why. All three fields
+///   are public schedule metadata, identical at the four parties, so a
+///   containment decision made on them is lockstep-deterministic. The
+///   variant is only ever constructed by the serving engine's wave
+///   wrapper *after* the four parties have exchanged wave outcomes over
+///   [`PartyCtx::wave_barrier`]; the underlying protocol error stays one
+///   of the party-scoped variants until that barrier agrees the blast
+///   radius is one tenant's keyed material. A `TenantScoped` abort that
+///   escapes to the caller (containment disabled, or escalation —
+///   e.g. a party died, or the failing wave ran inline generation whose
+///   correlated PRF draws cannot be re-synchronised) fails the run closed
+///   exactly like a party-scoped one.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Abort {
     /// A consistency check failed locally (the honest-party abort of the
@@ -105,6 +130,11 @@ pub enum Abort {
     Signalled(PartyId),
     /// Channel closed / timed out (peer died).
     Channel(PartyId),
+    /// An in-wave failure attributed (by the four-party wave barrier) to
+    /// one tenant's wave — see the abort-scoping contract above. `model`
+    /// is the tenant's pool-shard id ([`crate::pool::CircuitKey`]'s
+    /// `model` field), `tick` the logical tick of the poisoned wave.
+    TenantScoped { model: u64, tick: u64, why: String },
 }
 
 impl std::fmt::Display for Abort {
@@ -113,6 +143,9 @@ impl std::fmt::Display for Abort {
             Abort::Verify(why) => write!(f, "verification failed: {why}"),
             Abort::Signalled(p) => write!(f, "abort signalled by {p}"),
             Abort::Channel(p) => write!(f, "channel to {p} broken"),
+            Abort::TenantScoped { model, tick, why } => {
+                write!(f, "tenant-scoped abort (model {model}, tick {tick}): {why}")
+            }
         }
     }
 }
@@ -420,27 +453,103 @@ impl PartyCtx {
         Ok(())
     }
 
-    /// Broadcast abort to all peers and construct the local abort error.
-    pub fn abort(&mut self, why: String) -> Abort {
-        if !self.aborted {
-            self.aborted = true;
-            let ph = self.phase as usize;
-            for p in ALL {
-                if p != self.id {
-                    let env = Envelope {
-                        payload: Vec::new(),
-                        t_send: self.clock[ph],
-                        round: self.round[ph],
-                        class: MsgClass::Control,
-                        abort: true,
-                    };
-                    if let Some(tx) = self.senders[p.idx()].as_ref() {
-                        let _ = tx.send(env);
-                    }
+    /// Broadcast the abort signal to all peers (idempotent — the flag keeps
+    /// a party from flooding twice). Split out of [`PartyCtx::abort`] so a
+    /// containment wrapper can also unblock peers when the local error is
+    /// *not* a fresh verification failure (e.g. the wave died on a
+    /// [`Abort::Signalled`] from a third party, or a fail-closed pool pop).
+    pub fn signal_abort(&mut self) {
+        if self.aborted {
+            return;
+        }
+        self.aborted = true;
+        let ph = self.phase as usize;
+        for p in ALL {
+            if p != self.id {
+                let env = Envelope {
+                    payload: Vec::new(),
+                    t_send: self.clock[ph],
+                    round: self.round[ph],
+                    class: MsgClass::Control,
+                    abort: true,
+                };
+                if let Some(tx) = self.senders[p.idx()].as_ref() {
+                    let _ = tx.send(env);
                 }
             }
         }
+    }
+
+    /// Broadcast abort to all peers and construct the local abort error.
+    pub fn abort(&mut self, why: String) -> Abort {
+        self.signal_abort();
         Abort::Verify(why)
+    }
+
+    /// Four-party **wave-outcome barrier** — the containment layer's
+    /// agreement step, run by every party after every serving wave when
+    /// abort-blast-radius containment is enabled.
+    ///
+    /// Each party broadcasts one `Control`-class envelope carrying the
+    /// public `(wave, status)` pair and then drains each peer channel up
+    /// to that peer's matching barrier envelope, skipping whatever the
+    /// aborted wave left in flight (stale value/digest payloads, abort
+    /// signals — per-channel FIFO guarantees the peer's barrier envelope
+    /// comes after all of its wave traffic). Returns all four statuses,
+    /// indexed by party, identical at every party — any containment
+    /// decision derived from them is therefore lockstep-deterministic.
+    ///
+    /// The barrier also re-arms the abort flood (`aborted = false`): a
+    /// contained wave is over, and a *later* failure must broadcast again.
+    /// A party that died before its barrier send surfaces here as
+    /// [`Abort::Channel`] — a dead party always fails the run closed, the
+    /// barrier never outvotes it.
+    ///
+    /// Barrier traffic is `Control` class: excluded from round counting
+    /// and from `Value`-class byte accounting by the metering contract, so
+    /// enabling containment does not perturb the paper-facing tables.
+    pub fn wave_barrier(&mut self, wave: u64, status: u8) -> Result<[u8; 4], Abort> {
+        let mut payload = [0u8; 9];
+        payload[..8].copy_from_slice(&wave.to_le_bytes());
+        payload[8] = status;
+        for p in ALL {
+            if p != self.id {
+                self.send(p, &payload, MsgClass::Control);
+            }
+        }
+        let mut statuses = [0u8; 4];
+        statuses[self.id.idx()] = status;
+        let ph = self.phase as usize;
+        for p in ALL {
+            if p == self.id {
+                continue;
+            }
+            loop {
+                let rx = self.receivers[p.idx()].as_ref().expect("channel");
+                let env = match rx.recv_timeout(self.recv_timeout) {
+                    Ok(e) => e,
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                        return Err(Abort::Channel(p))
+                    }
+                };
+                // skip the aborted wave's leftovers: abort signals and any
+                // stale value/digest traffic still queued ahead of the
+                // peer's barrier envelope
+                if env.abort || env.class != MsgClass::Control {
+                    continue;
+                }
+                if env.payload.len() == 9 && env.payload[..8] == wave.to_le_bytes() {
+                    statuses[p.idx()] = env.payload[8];
+                    let lat = self.profile.rtt[p.idx()][self.id.idx()] / 2.0;
+                    self.clock[ph] = self.clock[ph].max(env.t_send + lat);
+                    break;
+                }
+                // a Control envelope for another wave index is stale
+                // barrier debris from a skipped epoch — drain it too
+            }
+        }
+        self.aborted = false;
+        Ok(statuses)
     }
 
     /// Send a digest (verification traffic).
@@ -494,7 +603,12 @@ impl<T> ClusterRun<T> {
 
     /// True if any honest party got a verification abort.
     pub fn any_verify_abort(&self) -> bool {
-        self.outputs.iter().any(|o| matches!(o, Err(Abort::Verify(_)) | Err(Abort::Signalled(_))))
+        self.outputs.iter().any(|o| {
+            matches!(
+                o,
+                Err(Abort::Verify(_)) | Err(Abort::Signalled(_)) | Err(Abort::TenantScoped { .. })
+            )
+        })
     }
 }
 
@@ -693,6 +807,34 @@ mod tests {
         assert!(run.outputs[1].is_err());
         assert!(run.outputs[2].is_err());
         assert!(run.outputs[0].is_ok());
+    }
+
+    #[test]
+    fn wave_barrier_agrees_and_drains_stale_traffic() {
+        let run = run_cluster_timeout(NetProfile::zero(), Duration::from_millis(500), |ctx| {
+            ctx.set_phase(Phase::Online);
+            // P1's wave "fails": it leaves a stale value message in P2's
+            // channel and floods abort signals before entering the barrier
+            if ctx.id == P1 {
+                ctx.send(P2, &[7u8; 4], MsgClass::Value);
+                ctx.signal_abort();
+            }
+            let statuses = ctx.wave_barrier(3, u8::from(ctx.id == P1))?;
+            // the barrier re-arms the abort flood: a later failure at the
+            // same party must broadcast fresh signals, observable at P2
+            if ctx.id == P1 {
+                ctx.signal_abort();
+            }
+            if ctx.id == P2 {
+                let r = ctx.recv(P1);
+                assert!(matches!(r, Err(Abort::Signalled(P1))), "re-armed flood: {r:?}");
+            }
+            Ok(statuses)
+        });
+        let (outs, _) = run.expect_ok();
+        for s in &outs {
+            assert_eq!(*s, [0, 1, 0, 0], "identical statuses at all four parties");
+        }
     }
 
     #[test]

@@ -116,6 +116,13 @@ impl MatCorr {
         self.key
     }
 
+    /// The resident model (= tenant) this material belongs to — the shard
+    /// axis [`crate::pool::Pool::quarantine_model`] drains and poisons when
+    /// a tenant-scoped abort quarantines its owner.
+    pub fn model(&self) -> u64 {
+        self.key.model
+    }
+
     /// Fill sequence number within this item's keyed queue.
     pub fn seq(&self) -> u64 {
         self.seq

@@ -60,7 +60,7 @@ pub use mat::{fill_mat, CircuitKey, MatCorr, OpKind};
 pub use refill::{Refill, RefillOutcome, WaterMarks};
 pub use relu::{fill_mat_relu, relu_key_for, ReluCorr};
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::convert::bitext::{gen_bitext_masks, BitExtMask};
 use crate::net::Abort;
@@ -122,6 +122,10 @@ pub struct Pool {
     /// pre-exchanged `⟨γ_{r·v}⟩` + pre-checked `Π_BitInj` material).
     relu: HashMap<CircuitKey, VecDeque<ReluCorr>>,
     relu_seq: HashMap<CircuitKey, u64>,
+    /// Models whose keyed shards are quarantined: their stock is drained
+    /// and future pushes for them are dropped, so every pop under their
+    /// keys deterministically **misses** (→ the secure inline fallback).
+    quarantined: HashSet<u64>,
     stats: PoolStats,
 }
 
@@ -201,9 +205,13 @@ impl Pool {
     }
 
     /// Stock one circuit-keyed matrix correlation under its embedded key,
-    /// stamping the per-key FIFO sequence number.
+    /// stamping the per-key FIFO sequence number. Pushes for a
+    /// [quarantined](Pool::quarantine_model) model are dropped.
     pub fn push_mat(&mut self, mut item: MatCorr) {
         let key = item.key();
+        if self.quarantined.contains(&key.model) {
+            return;
+        }
         let seq = self.mat_seq.entry(key).or_insert(0);
         item.seq = *seq;
         *seq += 1;
@@ -211,9 +219,13 @@ impl Pool {
     }
 
     /// Stock one circuit-keyed nonlinear bundle under its embedded key,
-    /// stamping the per-key FIFO sequence number.
+    /// stamping the per-key FIFO sequence number. Pushes for a
+    /// [quarantined](Pool::quarantine_model) model are dropped.
     pub fn push_relu(&mut self, mut item: ReluCorr) {
         let key = item.key();
+        if self.quarantined.contains(&key.model) {
+            return;
+        }
         let seq = self.relu_seq.entry(key).or_insert(0);
         item.seq = *seq;
         *seq += 1;
@@ -325,6 +337,39 @@ impl Pool {
                 key
             )),
         }
+    }
+
+    // ---- quarantine (abort blast-radius containment) --------------------
+
+    /// Drain-and-poison every keyed shard belonging to `model`: all stocked
+    /// [`MatCorr`]/[`ReluCorr`] bundles whose embedded key names the model
+    /// are discarded **now**, and future [`push_mat`](Pool::push_mat)/
+    /// [`push_relu`](Pool::push_relu) for the model are dropped, so every
+    /// later pop under its keys deterministically misses and the tenant is
+    /// served by the secure inline path. Returns `(mat, relu)` drained
+    /// counts. All four parties quarantine in lockstep (the decision is a
+    /// function of public wave metadata), so stock levels stay agreed.
+    pub fn quarantine_model(&mut self, model: u64) -> (usize, usize) {
+        self.quarantined.insert(model);
+        let mut drained = (0usize, 0usize);
+        for (key, q) in self.mat.iter_mut() {
+            if key.model == model {
+                drained.0 += q.len();
+                q.clear();
+            }
+        }
+        for (key, q) in self.relu.iter_mut() {
+            if key.model == model {
+                drained.1 += q.len();
+                q.clear();
+            }
+        }
+        drained
+    }
+
+    /// Whether `model`'s keyed shards are quarantined.
+    pub fn is_model_quarantined(&self, model: u64) -> bool {
+        self.quarantined.contains(&model)
     }
 
     // ---- failure-injection hooks ----------------------------------------
@@ -529,6 +574,60 @@ mod tests {
             let diff = (r.truncate(FRAC_BITS) - rt).as_i64();
             assert!((0..=2).contains(&diff), "pair {i}: rᵗ off by {diff}");
         }
+    }
+
+    #[test]
+    fn quarantine_drains_and_poisons_only_the_named_model() {
+        use crate::net::P0;
+        use crate::proto::dotp::MatGamma;
+        use crate::ring::Matrix;
+        use crate::sharing::MMat;
+
+        fn key(model: u64) -> CircuitKey {
+            CircuitKey {
+                model,
+                layer: 0,
+                op: OpKind::MatMulTr { shift: FRAC_BITS },
+                rows: 2,
+                inner: 3,
+                cols: 1,
+                dealer: P2,
+            }
+        }
+        fn dummy(k: CircuitKey) -> MatCorr {
+            MatCorr {
+                key: k,
+                lam_x: MMat::zero(P0, k.rows, k.inner),
+                lam_x_full: None,
+                gamma: MatGamma::Helper([
+                    Matrix::zeros(k.rows, k.cols),
+                    Matrix::zeros(k.rows, k.cols),
+                    Matrix::zeros(k.rows, k.cols),
+                ]),
+                lam_z: MMat::zero(P0, k.rows, k.cols),
+                pairs: Vec::new(),
+                seq: 0,
+            }
+        }
+
+        let mut pool = Pool::new();
+        let (ka, kb) = (key(7), key(8));
+        pool.push_mat(dummy(ka));
+        pool.push_mat(dummy(ka));
+        pool.push_mat(dummy(kb));
+
+        let (mat, relu) = pool.quarantine_model(7);
+        assert_eq!((mat, relu), (2, 0), "only model 7's stock is drained");
+        assert!(pool.is_model_quarantined(7));
+        assert!(!pool.is_model_quarantined(8));
+
+        // poisoned: restocking is dropped, pops deterministically miss
+        pool.push_mat(dummy(ka));
+        assert_eq!(pool.len_mat(&ka), 0, "restock of a quarantined model is dropped");
+        assert!(pool.pop_mat(&ka).unwrap().is_none(), "quarantined pop is a miss");
+
+        // the innocent model's shard is untouched
+        assert!(pool.pop_mat(&kb).unwrap().is_some());
     }
 
     #[test]

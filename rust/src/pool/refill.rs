@@ -133,6 +133,17 @@ impl Refill {
         self.mat.push(MatTarget { key, relu: Some(relu), w, marks });
     }
 
+    /// Remove every registered matrix/ReLU target belonging to `model` —
+    /// the refill leg of quarantine: a contained tenant's positions stop
+    /// being topped up (and the pool's push guard would drop the items
+    /// anyway). Returns how many targets were deregistered. Lockstep-safe:
+    /// all four parties deregister from the same public wave metadata.
+    pub fn deregister_model(&mut self, model: u64) -> usize {
+        let before = self.mat.len();
+        self.mat.retain(|t| t.key.model != model);
+        before - self.mat.len()
+    }
+
     pub fn register_trunc(&mut self, shift: u32, marks: WaterMarks) {
         self.trunc.push(TruncTarget { shift, marks });
     }
@@ -254,6 +265,41 @@ mod tests {
             assert_eq!(*t3, 0, "at low mark exactly: no refill");
             assert_eq!(*t4, 2, "below low: top back up to high");
             assert_eq!(*left, 3);
+        }
+    }
+
+    #[test]
+    fn deregister_model_stops_refilling_only_that_model() {
+        fn key(model: u64) -> CircuitKey {
+            CircuitKey {
+                model,
+                layer: 0,
+                op: OpKind::MatMulTr { shift: FRAC_BITS },
+                rows: 1,
+                inner: 2,
+                cols: 1,
+                dealer: P2,
+            }
+        }
+        let run = run_4pc(NetProfile::zero(), 811, move |ctx| {
+            let w0 = Matrix::from_fn(2, 1, |r, _| crate::ring::Z64(3 + r as u64));
+            let w = crate::testutil::share_mat(ctx, P1, &w0)?;
+            ctx.attach_pool(Pool::new());
+            let mut refill = Refill::new();
+            refill.register_mat(key(5), w.clone(), WaterMarks::new(1, 2));
+            refill.register_mat(key(6), w, WaterMarks::new(1, 2));
+            assert_eq!(refill.deregister_model(5), 1, "one target removed");
+            assert_eq!(refill.deregister_model(5), 0, "idempotent");
+            let t = refill.tick(ctx)?;
+            let pool = ctx.pool.as_ref().unwrap();
+            let lens = (pool.len_mat(&key(5)), pool.len_mat(&key(6)));
+            ctx.flush_verify()?;
+            Ok((t.mat_items, lens))
+        });
+        let (outs, _) = run.expect_ok();
+        for (items, (m5, m6)) in &outs {
+            assert_eq!(*items, 2, "only the surviving model refills");
+            assert_eq!((*m5, *m6), (0, 2), "deregistered model gets no stock");
         }
     }
 }

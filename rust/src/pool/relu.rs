@@ -91,6 +91,13 @@ impl ReluCorr {
         self.seq
     }
 
+    /// The resident model (= tenant) this material belongs to — the shard
+    /// axis [`crate::pool::Pool::quarantine_model`] drains and poisons when
+    /// a tenant-scoped abort quarantines its owner.
+    pub fn model(&self) -> u64 {
+        self.key.model
+    }
+
     // ---- failure-injection hooks (a locally corrupted pool models a
     // malicious party; the online checks must abort) ----
 

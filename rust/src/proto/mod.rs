@@ -303,6 +303,19 @@ impl<'a> Ctx<'a> {
         Ok(())
     }
 
+    /// Discard every pending vouch/expect transcript without exchanging
+    /// digests. **Containment-only**: after the wave barrier has agreed an
+    /// aborted wave's blast radius is one tenant, the half-accumulated
+    /// transcripts of that dead wave must not poison the next wave's
+    /// flush (the erring parties stopped mid-protocol, so the per-peer
+    /// accumulators are asymmetric by construction). On the happy path
+    /// every wave settles its own digests inside `reconstruct_mat_to`, so
+    /// this only ever drops checks whose wave already failed closed.
+    pub fn reset_verify(&mut self) {
+        self.vouch = Default::default();
+        self.expect = Default::default();
+    }
+
     /// True if any deferred checks are pending (test hook).
     pub fn has_pending_verification(&self) -> bool {
         self.vouch

@@ -168,7 +168,12 @@ impl SchedQueue {
             if past {
                 let q = self.pending.remove(i);
                 self.stats.expired[q.tenant] += 1;
-                self.inflight[q.tenant] -= 1;
+                debug_assert!(
+                    self.inflight[q.tenant] > 0,
+                    "expire underflows tenant {}'s in-flight count",
+                    q.tenant
+                );
+                self.inflight[q.tenant] = self.inflight[q.tenant].saturating_sub(1);
                 dropped += 1;
             } else {
                 i += 1;
@@ -246,10 +251,28 @@ impl SchedQueue {
         keyed.into_iter().map(|(_, q)| q).collect()
     }
 
-    /// Mark `n` of tenant `t`'s in-service queries answered.
+    /// Mark `n` of tenant `t`'s in-service queries answered. The in-flight
+    /// decrement saturates (with a `debug_assert!`): a miscounting caller
+    /// is a bug, but wrapping would permanently jam the tenant's admission
+    /// cap in release builds.
     pub fn complete(&mut self, t: usize, n: usize) {
-        self.inflight[t] -= n;
+        debug_assert!(
+            self.inflight[t] >= n,
+            "complete({t}, {n}) underflows the in-flight count {}",
+            self.inflight[t]
+        );
+        self.inflight[t] = self.inflight[t].saturating_sub(n);
         self.stats.served[t] += n;
+    }
+
+    /// Re-admit a popped-but-unanswered query after a contained abort: the
+    /// query returns to the backlog with its **original** arrival tick (and
+    /// class/deadline), so aging and EDF treat it exactly as if its wave
+    /// had never run. No admission control and no stat changes — the query
+    /// was already admitted and is still counted in-flight (its wave never
+    /// called [`complete`](SchedQueue::complete)).
+    pub fn readmit(&mut self, q: SchedQuery) {
+        self.pending.push(q);
     }
 }
 
@@ -371,6 +394,49 @@ mod tests {
         assert_eq!(b2.iter().map(|q| q.id).collect::<Vec<_>>(), vec![3, 4]);
         let b3 = sq.pop_batch(0, 2, 0);
         assert!(b3.is_empty(), "drained queue pops an empty batch");
+    }
+
+    #[test]
+    fn readmit_restores_original_order_without_touching_accounting() {
+        let mut sq = SchedQueue::new(1, 0);
+        assert!(sq.admit(q(0, 0, 0, 0, Some(9))));
+        assert!(sq.admit(q(0, 1, 0, 1, Some(9))));
+        assert!(sq.admit(q(0, 2, 0, 2, Some(9))));
+        let batch = sq.pop_batch(0, 2, 3);
+        assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1]);
+        // the wave aborted: both queries go back with their original ticks
+        for q in batch {
+            sq.readmit(q);
+        }
+        assert_eq!(sq.pending_tenant(0), 3);
+        // accounting unchanged: still 3 admitted, 0 served, 0 expired
+        assert_eq!(sq.stats().admitted[0], 3);
+        assert_eq!(sq.stats().served[0], 0);
+        // original arrival restored → the re-queued ids still sort first
+        let again = sq.pop_batch(0, 3, 4);
+        assert_eq!(again.iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        sq.complete(0, 3);
+        // all in-flight budget released: a full cap is available again
+        sq.set_cap(0, 1);
+        assert!(sq.admit(q(0, 9, 0, 5, None)), "in-flight budget fully freed");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "underflows")]
+    fn complete_underflow_panics_in_debug() {
+        let mut sq = SchedQueue::new(1, 0);
+        sq.complete(0, 1);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn complete_underflow_saturates_in_release() {
+        let mut sq = SchedQueue::new(1, 0);
+        sq.complete(0, 1);
+        // saturated, not wrapped: admission stays unjammed
+        sq.set_cap(0, 1);
+        assert!(sq.admit(q(0, 0, 0, 0, None)));
     }
 
     #[test]

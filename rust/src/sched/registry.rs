@@ -112,6 +112,32 @@ impl TenantSpec {
         self.relu.then(|| tenant_relu_key(self, self.wave_rows()))
     }
 
+    /// Stacked rows of the trailing **partial** wave, when the workload
+    /// does not divide evenly (`queries % coalesce ≠ 0`); `None` when every
+    /// wave is full. The partial wave is a real wave the tenant always
+    /// produces exactly once per workload — its key must be registered at
+    /// load like the full-wave key, or the last wave silently misses the
+    /// pool and serves inline.
+    pub fn partial_rows(&self) -> Option<usize> {
+        let rem = self.queries % self.effective_coalesce();
+        (rem != 0).then(|| rem * self.rows_per_query)
+    }
+
+    /// The circuit key of the trailing partial wave (`None` when the
+    /// workload divides evenly).
+    pub fn partial_key(&self) -> Option<CircuitKey> {
+        self.partial_rows().map(|rows| tenant_wave_key(self, rows))
+    }
+
+    /// The paired nonlinear key of the trailing partial wave (`relu: true`
+    /// tenants with a partial wave only).
+    pub fn partial_relu_key(&self) -> Option<CircuitKey> {
+        if !self.relu {
+            return None;
+        }
+        self.partial_rows().map(|rows| tenant_relu_key(self, rows))
+    }
+
     /// Arrival tick of query `id` under this tenant's arrival plan.
     pub fn arrival_tick(&self, id: usize) -> u64 {
         if self.arrive_per_tick == 0 {
@@ -123,8 +149,9 @@ impl TenantSpec {
 }
 
 /// The circuit key of tenant `spec`'s linear layer for a wave of `rows`
-/// stacked feature rows (a trailing partial wave keys differently from
-/// [`TenantSpec::key`] and falls back inline).
+/// stacked feature rows. A trailing partial wave keys differently from
+/// [`TenantSpec::key`] — its key is registered separately at load
+/// ([`TenantSpec::partial_key`]) so it hits the pool like any full wave.
 pub fn tenant_wave_key(spec: &TenantSpec, rows: usize) -> CircuitKey {
     CircuitKey {
         model: spec.model,
@@ -165,6 +192,15 @@ pub struct ResidentModel {
     /// The paired full-wave nonlinear key (`relu: true` tenants): the
     /// tick fills `MatCorr`+`ReluCorr` bundles in lockstep pairs.
     pub relu_key: Option<CircuitKey>,
+    /// The trailing partial wave's circuit key, when the workload does not
+    /// divide evenly — stocked exactly once at warm-up
+    /// ([`ModelRegistry::warm_partial`]), never refilled between waves.
+    pub partial_key: Option<CircuitKey>,
+    /// The partial wave's paired nonlinear key (`relu: true` tenants).
+    pub partial_relu_key: Option<CircuitKey>,
+    /// Quarantined after a tenant-scoped abort: refill ticks become no-ops
+    /// and the depletion steering skips the tenant.
+    quarantined: bool,
     marks: WaterMarks,
     refill: Refill,
 }
@@ -233,10 +269,13 @@ impl ModelRegistry {
         let w = share_fixed_mat(ctx, P1, w0.as_ref(), spec.d, 1)?;
         let key = spec.key();
         let relu_key = spec.relu_key();
+        let partial_key = spec.partial_key();
+        let partial_relu_key = spec.partial_relu_key();
         // clamp the high-water mark to the tenant's total full-wave demand
         // so neither the warm-up fill nor a steady-state top-up can stock
-        // more bundles than real waves will ever pop (a partial trailing
-        // wave keys differently and consumes nothing)
+        // more bundles than real waves will ever pop (the trailing partial
+        // wave keys differently and is stocked exactly once at warm-up by
+        // `warm_partial`, outside this state machine)
         let total_full_waves = spec.queries.max(1) / spec.effective_coalesce();
         let high = high_water.max(1).min(total_full_waves.max(1));
         let marks = WaterMarks::new(low_water.min(high), high);
@@ -249,8 +288,62 @@ impl ModelRegistry {
         // producer stays for shapeless per-tenant targets a future pipeline
         // may add.
         let refill = Refill::new();
-        self.models.push(ResidentModel { spec, w, key, relu_key, marks, refill });
+        self.models.push(ResidentModel {
+            spec,
+            w,
+            key,
+            relu_key,
+            partial_key,
+            partial_relu_key,
+            quarantined: false,
+            marks,
+            refill,
+        });
         Ok(self.models.len() - 1)
+    }
+
+    /// Stock tenant `t`'s trailing-partial-wave position with exactly one
+    /// bundle (paired with its ReLU for `relu: true` tenants). Called once
+    /// during warm-up; a no-op for tenants whose workload divides evenly,
+    /// whose partial position is already stocked, or who are quarantined.
+    /// Lockstep-deterministic like every fill.
+    pub fn warm_partial(&self, ctx: &mut Ctx, t: usize) -> Result<RefillOutcome, Abort> {
+        let m = &self.models[t];
+        let mut out = RefillOutcome::default();
+        let pk = match (&m.partial_key, m.quarantined) {
+            (Some(pk), false) => *pk,
+            _ => return Ok(out),
+        };
+        if ctx.pool.as_ref().map_or(0, |p| p.len_mat(&pk)) > 0 {
+            return Ok(out);
+        }
+        match &m.partial_relu_key {
+            Some(rk) => {
+                fill_mat_relu(ctx, pk, *rk, &m.w, 1)?;
+                out.relu_items = 1;
+            }
+            None => fill_mat(ctx, pk, &m.w, 1)?,
+        }
+        out.mat_items = 1;
+        Ok(out)
+    }
+
+    /// Quarantine tenant `t` after a tenant-scoped abort: its refill ticks
+    /// become no-ops, the between-waves depletion steering skips it, and
+    /// its private producer's keyed targets are deregistered. The pool-side
+    /// drain-and-poison ([`crate::pool::Pool::quarantine_model`]) is the
+    /// caller's companion step. Idempotent; lockstep-deterministic (driven
+    /// by public wave metadata).
+    pub fn quarantine(&mut self, t: usize) {
+        let m = &mut self.models[t];
+        m.quarantined = true;
+        let model = m.spec.model;
+        m.refill.deregister_model(model);
+    }
+
+    /// Whether tenant `t` has been quarantined.
+    pub fn is_quarantined(&self, t: usize) -> bool {
+        self.models[t].quarantined
     }
 
     /// One cooperative refill step for tenant `t`'s pool targets (lockstep;
@@ -269,6 +362,11 @@ impl ModelRegistry {
     ) -> Result<RefillOutcome, Abort> {
         let m = &self.models[t];
         let mut out = RefillOutcome::default();
+        if m.quarantined {
+            // the pool-side push guard would drop the items anyway; skip
+            // the generation traffic entirely
+            return Ok(out);
+        }
         let stock = ctx.pool.as_ref().map_or(0, |p| Self::paired_stock(p, m));
         if stock < m.marks.low {
             let need = (m.marks.high - stock).min(max_mat.saturating_sub(stock));
@@ -311,7 +409,7 @@ impl ModelRegistry {
     pub fn most_depleted(&self, ctx: &Ctx, eligible: &[bool]) -> Option<usize> {
         let mut best: Option<(usize, usize)> = None; // (deficit, tenant)
         for (t, m) in self.models.iter().enumerate() {
-            if !eligible.get(t).copied().unwrap_or(false) {
+            if !eligible.get(t).copied().unwrap_or(false) || m.quarantined {
                 continue;
             }
             let stock = ctx.pool.as_ref().map_or(0, |p| Self::paired_stock(p, m));
@@ -439,6 +537,73 @@ mod tests {
         let (outs, _) = run.expect_ok();
         for (m, r) in &outs {
             assert_eq!((*m, *r), (2, 2), "mat and relu queues stay paired");
+        }
+    }
+
+    #[test]
+    fn partial_wave_key_is_registered_and_warmed_once() {
+        // 5 queries at coalesce 2 → two full waves + one partial wave of 1
+        let mut s = spec("m1", 41, 3);
+        s.queries = 5;
+        s.relu = true;
+        assert_eq!(s.partial_rows(), Some(1));
+        let pk = s.partial_key().expect("uneven workload has a partial key");
+        assert_eq!(pk.rows, 1);
+        assert_ne!(pk, s.key(), "partial wave is its own circuit position");
+        // even workload: no partial position at all
+        let mut even = spec("m2", 42, 3);
+        even.queries = 4;
+        assert_eq!(even.partial_key(), None);
+
+        let run = run_4pc(NetProfile::zero(), 914, move |ctx| {
+            let mut reg = ModelRegistry::new();
+            let s = {
+                let mut s = spec("m1", 41, 3);
+                s.queries = 5;
+                s.relu = true;
+                s
+            };
+            let t = reg.load(ctx, s, 1, 4)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            let m = reg.model(t);
+            let (pk, prk) = (m.partial_key.unwrap(), m.partial_relu_key.unwrap());
+            let o1 = reg.warm_partial(ctx, t)?;
+            // idempotent: the position is stocked, a second warm is a no-op
+            let o2 = reg.warm_partial(ctx, t)?;
+            let pool = ctx.pool.as_ref().unwrap();
+            Ok((o1.mat_items, o1.relu_items, o2.mat_items, pool.len_mat(&pk), pool.len_relu(&prk)))
+        });
+        let (outs, _) = run.expect_ok();
+        for (m1, r1, m2, pm, pr) in &outs {
+            assert_eq!((*m1, *r1), (1, 1), "one paired partial bundle");
+            assert_eq!(*m2, 0, "second warm-up is a no-op");
+            assert_eq!((*pm, *pr), (1, 1), "partial position stocked exactly once");
+        }
+    }
+
+    #[test]
+    fn quarantined_tenant_stops_refilling_and_steering() {
+        let run = run_4pc(NetProfile::zero(), 915, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let ta = reg.load(ctx, spec("m1", 51, 3), 1, 2)?;
+            let tb = reg.load(ctx, spec("m2", 52, 3), 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            reg.quarantine(ta);
+            assert!(reg.is_quarantined(ta));
+            // a tick on the quarantined tenant is a silent no-op
+            let o = reg.tick(ctx, ta, 8)?;
+            assert_eq!(o.mat_items, 0, "quarantined tick fills nothing");
+            // steering skips the quarantined tenant even though it is the
+            // most depleted
+            assert_eq!(reg.most_depleted(ctx, &[true, true]), Some(tb));
+            let o = reg.tick(ctx, tb, 8)?;
+            Ok(o.mat_items)
+        });
+        let (outs, _) = run.expect_ok();
+        for items in &outs {
+            assert_eq!(*items, 2, "the innocent tenant keeps refilling");
         }
     }
 

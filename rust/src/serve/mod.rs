@@ -32,8 +32,11 @@
 //! water marks, topped up cooperatively **between** waves
 //! ([`crate::pool::refill`] documents the state machine and why the
 //! lockstep decision is deterministic). Refill traffic is metered
-//! `Phase::Offline` only; a trailing partial wave (fewer rows than the
-//! registered key) falls back to the inline path deterministically.
+//! `Phase::Offline` only. The single-tenant engine registers one
+//! full-wave key, so its trailing partial wave (fewer rows than the
+//! registered key) falls back to the inline path deterministically; the
+//! multi-tenant registry additionally registers the partial-wave shape at
+//! load and warms it once, keeping full AND partial waves offline-silent.
 //!
 //! Pipeline per coalesced batch: stack up to `coalesce` pending queries
 //! into one matrix; share it (under the pooled wire mask in keyed mode);
@@ -48,13 +51,16 @@
 //! the [`crate::sched`] subsystem (model registry with per-tenant keyed
 //! pools, deadline/priority queue, weighted-round-robin wave planner with
 //! most-depleted refill steering) decides whose wave runs next, and each
-//! wave executes the per-model pipeline above.
+//! wave executes the per-model pipeline above. With containment enabled,
+//! a keyed wave that aborts is scoped over a four-party outcome barrier:
+//! the poisoned tenant is quarantined and everyone else keeps being
+//! served (see [`multi`] and the abort-scoping contract in [`crate::net`]).
 
 pub mod multi;
 
 pub use multi::{
-    cleartext_tenant_predictions, serve_multi, tenant_query_stream, MultiServeConfig,
-    MultiServeStats, TenantServeStats,
+    cleartext_tenant_predictions, serve_multi, serve_multi_checked, tenant_query_stream,
+    FaultKind, FaultPlan, MultiServeConfig, MultiServeStats, QuarantineStats, TenantServeStats,
 };
 
 use std::collections::VecDeque;

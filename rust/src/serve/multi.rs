@@ -18,9 +18,17 @@
 //! [`crate::sched`] module docs explain why wall-clock is banned here).
 //! Per-wave protocol execution is exactly the single-tenant path: stack
 //! the batch, one `Π_MatMulTr` against that tenant's resident weights
-//! (keyed bundle on a hit, deterministic inline fallback on a miss or a
-//! trailing partial wave), optional batched ReLU, verified reconstruction
-//! towards the data owner.
+//! (keyed bundle on a hit — the trailing partial wave has its own key,
+//! registered at load and warmed once — deterministic inline fallback on
+//! a miss), optional batched ReLU, verified reconstruction towards the
+//! data owner.
+//!
+//! With `containment: true`, every keyed wave body is wrapped in the
+//! abort-blast-radius boundary: on a failure the four parties agree over
+//! [`crate::net::PartyCtx::wave_barrier`] whether the blast radius is one
+//! tenant's keyed material (→ quarantine the tenant, re-admit the wave's
+//! queries, keep serving) or the run itself (→ fail closed, exactly the
+//! paper's contract — see the abort-scoping contract in [`crate::net`]).
 //!
 //! Nonlinear material is tenant-sharded too: a `relu: true` tenant's
 //! bit-extraction masks, `⟨γ_{r·v}⟩` and `Π_BitInj` correlations live in
@@ -33,7 +41,7 @@
 
 use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
-use crate::net::{Abort, NetProfile, NetReport, Phase, P2};
+use crate::net::{Abort, NetProfile, NetReport, PartyId, Phase, P2};
 use crate::pool::{Pool, PoolStats};
 use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
 use crate::ring::fixed::FixedPoint;
@@ -62,6 +70,18 @@ pub struct MultiServeConfig {
     /// many ticks (0 = off). See [`crate::sched::queue`].
     pub age_every: u64,
     pub seed: u64,
+    /// Abort blast-radius containment: when a keyed wave fails and the
+    /// four-party wave barrier agrees the blast radius is one tenant's
+    /// keyed material, quarantine that tenant (drain-and-poison its pool
+    /// shards, stop its refills) and keep serving everyone else — the
+    /// wave's queries are re-admitted with their original arrival ticks.
+    /// Party-scoped aborts (and keyed failures that interrupted inline
+    /// generation) still fail the whole run closed. Off by default: any
+    /// abort is run-fatal, the pre-containment behaviour.
+    pub containment: bool,
+    /// Mid-serve fault injection (tests and CLI demos drive the
+    /// containment path with it). `None` = honest run.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for MultiServeConfig {
@@ -73,8 +93,59 @@ impl Default for MultiServeConfig {
             high_water: 2,
             age_every: 4,
             seed: 1234,
+            containment: false,
+            fault: None,
         }
     }
+}
+
+/// What a mid-serve injected fault does (see [`FaultPlan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The faulty party corrupts the wire-mask skeleton of the victim
+    /// tenant's front keyed matrix bundle right before its wave pops it —
+    /// a malicious party serving tampered pool material mid-run.
+    TamperMatLamX,
+    /// Same, for the front nonlinear bundle's pre-exchanged `⟨γ_{r·v}⟩`
+    /// (`relu: true` tenants).
+    TamperReluGamma,
+    /// The faulty party raises a verification abort **between** waves — a
+    /// party-scoped failure outside any wave body. Containment must not
+    /// catch it: the run fails closed.
+    AbortOffWave,
+}
+
+/// One injected mid-serve fault: `party` acts maliciously against
+/// `tenant`'s `wave`-th granted wave (0-based, counted per tenant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub party: PartyId,
+    pub tenant: usize,
+    pub wave: usize,
+    pub kind: FaultKind,
+}
+
+/// Per-tenant quarantine record of a contained abort. Every field is
+/// derived from public wave metadata agreed over the four-party barrier,
+/// so all four parties produce identical records (asserted at
+/// aggregation).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuarantineStats {
+    /// Quarantined tenant index.
+    pub tenant: usize,
+    /// Logical tick of the containment decision.
+    pub at_tick: u64,
+    /// The poisoned wave's queries re-admitted with their original
+    /// arrival ticks (served later over the secure inline path).
+    pub requeued: usize,
+    /// The poisoned wave's queries past their deadline at re-admission —
+    /// swept as expired on the next tick, never served.
+    pub lost: usize,
+    /// Keyed matrix / nonlinear bundles drained from the poisoned shards.
+    pub drained_mat: usize,
+    pub drained_relu: usize,
+    /// Why (public): the barrier statuses that produced the decision.
+    pub why: String,
 }
 
 /// Deterministic query stream for one tenant (at the data owner).
@@ -131,8 +202,13 @@ struct MultiPartyOut {
     wave_offline_msgs_relu: Vec<u64>,
     /// Whether the wave drained a keyed bundle (vs inline fallback).
     wave_keyed_hit: Vec<bool>,
+    /// Whether the wave was a trailing partial batch (fewer queries than
+    /// the tenant's coalescing factor).
+    wave_partial: Vec<bool>,
     /// `(query id, sojourn ticks)` per query of each wave.
     wave_sojourn: Vec<Vec<(usize, u64)>>,
+    /// Contained aborts, decision order (identical at all parties).
+    quarantines: Vec<QuarantineStats>,
     /// Refill ticks / keyed bundles generated, per tenant.
     refill_ticks: Vec<usize>,
     refill_mat_items: Vec<usize>,
@@ -160,7 +236,9 @@ impl MultiPartyOut {
             wave_offline_msgs_mat: Vec::new(),
             wave_offline_msgs_relu: Vec::new(),
             wave_keyed_hit: Vec::new(),
+            wave_partial: Vec::new(),
             wave_sojourn: Vec::new(),
+            quarantines: Vec::new(),
             refill_ticks: vec![0; nt],
             refill_mat_items: vec![0; nt],
             tick_online_msgs: 0,
@@ -190,6 +268,16 @@ pub struct TenantServeStats {
     pub waves: usize,
     pub keyed_waves: usize,
     pub inline_waves: usize,
+    /// Trailing partial waves (fewer queries than the coalescing factor),
+    /// and how many of them still hit the keyed pool (the registered
+    /// partial-wave key — counted either way).
+    pub partial_waves: usize,
+    pub partial_keyed_waves: usize,
+    /// Tick at which this tenant was quarantined by a contained abort
+    /// (`None` = never), plus the poisoned wave's re-queued/lost split.
+    pub quarantined_at: Option<u64>,
+    pub requeued: usize,
+    pub lost: usize,
     /// Per-query online wave latency percentiles (virtual seconds; every
     /// query in a wave experiences that wave's latency).
     pub p50_latency: f64,
@@ -243,19 +331,26 @@ pub struct MultiServeStats {
     pub refill_online_msgs: u64,
     /// Pops where aging lifted an older lower-priority query (queue stat).
     pub aged_promotions: u64,
+    /// Contained aborts in decision order (empty for honest runs and for
+    /// runs with containment off). Identical at all four parties.
+    pub quarantines: Vec<QuarantineStats>,
     pub pool_stats: Option<PoolStats>,
     pub report: NetReport,
 }
 
-/// Nearest-rank percentile of an unsorted sample (`p` in `[0, 1]`).
+/// Nearest-rank percentile of an unsorted sample (`p` in `[0, 1]`): the
+/// smallest sorted value with at least `p·n` samples at or below it, i.e.
+/// rank `⌈p·n⌉` (1-based, clamped to `[1, n]` so `p = 0` reads the
+/// minimum and `p = 1` the maximum).
 fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-    let idx = ((v.len() - 1) as f64 * p).round() as usize;
-    v[idx]
+    let n = v.len();
+    let rank = (p * n as f64).ceil() as usize;
+    v[rank.clamp(1, n) - 1]
 }
 
 /// One metered refill tick for tenant `t`, with the keyed top-up capped at
@@ -275,6 +370,82 @@ fn tick_tenant(
     out.refill_ticks[t] += 1;
     out.refill_mat_items[t] += o.mat_items;
     Ok(())
+}
+
+/// What one wave body produced (answers at the data owner only) — kept
+/// out of [`MultiPartyOut`] until the containment boundary commits the
+/// wave, so a quarantined wave's output (including any opened values a
+/// party computed before an honest peer aborted) is discarded whole.
+struct WaveOut {
+    answers: Vec<(usize, Vec<f64>)>,
+    om_mat: u64,
+    om_relu: u64,
+}
+
+/// One wave's protocol body: stack the batch, `Π_MatMulTr` (keyed or
+/// inline), optional batched ReLU, verified reconstruction towards the
+/// data owner. Exactly the single-tenant pipeline, isolated so the
+/// containment wrapper can classify and discard a failed wave.
+fn run_wave(
+    ctx: &mut Ctx,
+    reg: &ModelRegistry,
+    spec: &TenantSpec,
+    t: usize,
+    rows: usize,
+    batch: &[SchedQuery],
+    keyed: bool,
+    om0: u64,
+) -> Result<WaveOut, Abort> {
+    let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
+        let mut m = F64Mat::zeros(rows, spec.d);
+        let mut row = 0;
+        for q in batch {
+            let x = q.x.as_ref().expect("data owner holds query rows");
+            for r in 0..q.rows {
+                for c in 0..spec.d {
+                    m.set(row, c, x.at(r, c));
+                }
+                row += 1;
+            }
+        }
+        m
+    });
+    let w = &reg.model(t).w;
+    let mut u = if keyed {
+        let key = tenant_wave_key(spec, rows);
+        let x_enc: Option<Matrix<Z64>> = stacked.as_ref().map(F64Mat::encode);
+        let (_x, u) = matmul_tr_keyed(ctx, &key, x_enc.as_ref(), w)?;
+        u
+    } else {
+        let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
+        matmul_tr(ctx, &x_sh, w)?
+    };
+    let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
+    let or0 = ctx.net.sent_msgs(Phase::Offline);
+    if spec.relu {
+        // flat path: SoA matrices end to end (share-vector conversion
+        // lives inside the mat-level ReLU entry points)
+        u = if keyed {
+            crate::ml::relu_mat_keyed(ctx, &tenant_relu_key(spec, rows), &u)?.0
+        } else {
+            crate::ml::relu_mat(ctx, &u)?.0
+        };
+    }
+    let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
+    let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
+    let mut answers = Vec::new();
+    if let Some(vals) = opened {
+        let mut off = 0;
+        for q in batch {
+            let a: Vec<f64> = vals.data()[off..off + q.rows]
+                .iter()
+                .map(|&v| FixedPoint::decode(v))
+                .collect();
+            answers.push((q.id, a));
+            off += q.rows;
+        }
+    }
+    Ok(WaveOut { answers, om_mat, om_relu })
 }
 
 /// The per-party multi-tenant serving program.
@@ -298,11 +469,15 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
     let mut out = MultiPartyOut::new(nt);
     if keyed {
         ctx.attach_pool(Pool::new());
-        // warm-up: stock every tenant's pool before the first wave (the
-        // top-up is capped by the tenant's total full-wave demand)
+        // warm-up: stock every tenant's pool before the first wave. The
+        // demand cap rounds UP (div_ceil): the trailing partial wave is
+        // real demand too — its differently-shaped key is stocked once
+        // right after, so full AND partial warm waves hit the pool.
         for t in 0..nt {
             let s = &cfg.tenants[t];
-            tick_tenant(ctx, &reg, &mut out, t, s.queries / s.effective_coalesce())?;
+            tick_tenant(ctx, &reg, &mut out, t, s.queries.div_ceil(s.effective_coalesce()))?;
+            let o = reg.warm_partial(ctx, t)?;
+            out.refill_mat_items[t] += o.mat_items;
         }
     }
 
@@ -321,6 +496,11 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
     ctx.net.reset_clocks();
     let mut planner = WavePlanner::new(&reg.planner_weights());
     let mut now: u64 = 0;
+    // lockstep wave sequence number (every granted wave, committed or
+    // quarantined — the barrier's epoch index) and per-tenant grant
+    // counters (the fault plan's trigger coordinate)
+    let mut wave_seq: u64 = 0;
+    let mut grants = vec![0usize; nt];
     loop {
         // 1. arrivals due at this tick enter admission control
         for t in 0..nt {
@@ -361,74 +541,146 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         let batch = queue.pop_batch(t, spec.effective_coalesce(), now);
         debug_assert!(!batch.is_empty(), "an eligible tenant must yield a batch");
 
-        // 5. run the tenant's wave (the single-tenant pipeline, per model)
+        // 5. run the tenant's wave inside the containment boundary:
+        // meter snapshot → body → (containment) four-party outcome
+        // barrier → commit, quarantine, or fail closed
         let rows: usize = batch.iter().map(|q| q.rows).sum();
+        let this_wave = wave_seq;
+        wave_seq += 1;
         let t0 = ctx.net.clock(Phase::Online);
         let r0 = ctx.net.rounds(Phase::Online);
         let om0 = ctx.net.sent_msgs(Phase::Offline);
         let ob0 = ctx.net.sent_bytes(Phase::Offline);
         let h0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits);
+        let m0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_misses);
 
-        let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
-            let mut m = F64Mat::zeros(rows, spec.d);
-            let mut row = 0;
-            for q in &batch {
-                let x = q.x.as_ref().expect("data owner holds query rows");
-                for r in 0..q.rows {
-                    for c in 0..spec.d {
-                        m.set(row, c, x.at(r, c));
+        // mid-serve fault injection: the faulty party acts right before
+        // the victim tenant's chosen wave pops its material
+        if let Some(f) = cfg.fault {
+            if f.tenant == t && grants[t] == f.wave && ctx.id() == f.party {
+                match f.kind {
+                    FaultKind::TamperMatLamX => {
+                        let key = tenant_wave_key(spec, rows);
+                        if let Some(item) = ctx.pool_mut().and_then(|p| p.mat_front_mut(&key)) {
+                            item.tamper_lam_x();
+                        }
                     }
-                    row += 1;
+                    FaultKind::TamperReluGamma => {
+                        let rk = tenant_relu_key(spec, rows);
+                        if let Some(item) = ctx.pool_mut().and_then(|p| p.relu_front_mut(&rk)) {
+                            item.tamper_gamma();
+                        }
+                    }
+                    FaultKind::AbortOffWave => {
+                        // a party-scoped failure OUTSIDE any wave body:
+                        // the containment wrapper never sees it, the run
+                        // fails closed (peers die at their next recv or
+                        // at the wave barrier)
+                        return Err(ctx.net.abort(
+                            "injected party-scoped fault between waves".into(),
+                        ));
+                    }
                 }
             }
-            m
-        });
-        let w = &reg.model(t).w;
-        let mut u = if keyed {
-            let key = tenant_wave_key(spec, rows);
-            let x_enc: Option<Matrix<Z64>> = stacked.as_ref().map(F64Mat::encode);
-            let (_x, u) = matmul_tr_keyed(ctx, &key, x_enc.as_ref(), w)?;
-            u
-        } else {
-            let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
-            matmul_tr(ctx, &x_sh, w)?
-        };
-        let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
-        let or0 = ctx.net.sent_msgs(Phase::Offline);
-        if spec.relu {
-            // flat path: SoA matrices end to end (share-vector conversion
-            // lives inside the mat-level ReLU entry points)
-            u = if keyed {
-                crate::ml::relu_mat_keyed(ctx, &tenant_relu_key(spec, rows), &u)?.0
-            } else {
-                crate::ml::relu_mat(ctx, &u)?.0
+        }
+        grants[t] += 1;
+
+        let res = run_wave(ctx, &reg, spec, t, rows, &batch, keyed, om0);
+        // meter deltas captured before the barrier, so the Control-class
+        // barrier round-trip cannot perturb the wave's numbers
+        let lat = ctx.net.clock(Phase::Online) - t0;
+        let rounds_d = ctx.net.rounds(Phase::Online) - r0;
+        let offm = ctx.net.sent_msgs(Phase::Offline) - om0;
+        let offb = ctx.net.sent_bytes(Phase::Offline) - ob0;
+        let hit = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits) > h0;
+        let missed = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_misses) > m0;
+
+        let wave = if cfg.containment && keyed {
+            // classify the local outcome: 0 = ok; 1 = failed in keyed
+            // context (containable — a warm keyed wave draws no correlated
+            // randomness, so every party's PRF streams are still in sync);
+            // 2 = failed in inline context (the miss counter advanced →
+            // inline generation was drawing correlated PRF streams when
+            // the wave died; an interrupted draw cannot be re-synced)
+            let status: u8 = match &res {
+                Ok(_) => 0,
+                Err(_) if missed => 2,
+                Err(_) => 1,
             };
-        }
-        let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
-        let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
-        if let Some(vals) = opened {
-            let mut off = 0;
-            for q in &batch {
-                let a: Vec<f64> = vals.data()[off..off + q.rows]
-                    .iter()
-                    .map(|&v| FixedPoint::decode(v))
-                    .collect();
-                out.answers[t].push((q.id, a));
-                off += q.rows;
+            if status != 0 {
+                // unblock peers before waiting at the barrier (idempotent
+                // if the failing protocol already flooded abort)
+                ctx.net.signal_abort();
             }
-        }
+            let statuses = ctx.net.wave_barrier(this_wave, status)?;
+            let worst = *statuses.iter().max().expect("four statuses");
+            if worst == 0 {
+                res?
+            } else if worst >= 2 {
+                // some party was interrupted mid-inline-generation: PRF
+                // stream sync is unprovable → escalate, fail closed
+                return Err(Abort::TenantScoped {
+                    model: spec.model,
+                    tick: now,
+                    why: format!(
+                        "wave {this_wave} failed in inline context \
+                         (statuses {statuses:?}) — not containable"
+                    ),
+                });
+            } else {
+                // the barrier agreed the blast radius is this tenant's
+                // keyed material: quarantine it, re-admit the wave's
+                // queries, keep serving everyone (lockstep decision — all
+                // inputs are public wave metadata)
+                ctx.reset_verify();
+                let (dm, dr) =
+                    ctx.pool_mut().map_or((0, 0), |p| p.quarantine_model(spec.model));
+                reg.quarantine(t);
+                let (mut requeued, mut lost) = (0usize, 0usize);
+                for q in batch {
+                    // service can restart at tick now+1 at the earliest;
+                    // a query with deadline ≤ now is swept as expired on
+                    // the next tick (the sweep does the stat/in-flight
+                    // accounting, exercising the saturating decrement)
+                    if matches!(q.deadline, Some(d) if d <= now) {
+                        lost += 1;
+                    } else {
+                        requeued += 1;
+                    }
+                    queue.readmit(q);
+                }
+                out.quarantines.push(QuarantineStats {
+                    tenant: t,
+                    at_tick: now,
+                    requeued,
+                    lost,
+                    drained_mat: dm,
+                    drained_relu: dr,
+                    why: format!(
+                        "wave {this_wave} aborted in keyed context \
+                         (statuses {statuses:?})"
+                    ),
+                });
+                now += 1;
+                continue;
+            }
+        } else {
+            // containment off (or inline mode): any abort is run-fatal
+            res?
+        };
 
         out.wave_tenant.push(t);
-        out.wave_lat.push(ctx.net.clock(Phase::Online) - t0);
-        out.wave_rounds.push(ctx.net.rounds(Phase::Online) - r0);
-        out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
-        out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
-        out.wave_offline_msgs_mat.push(om_mat);
-        out.wave_offline_msgs_relu.push(om_relu);
-        out.wave_keyed_hit
-            .push(ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits) > h0);
+        out.wave_lat.push(lat);
+        out.wave_rounds.push(rounds_d);
+        out.wave_offline_msgs.push(offm);
+        out.wave_offline_bytes.push(offb);
+        out.wave_offline_msgs_mat.push(wave.om_mat);
+        out.wave_offline_msgs_relu.push(wave.om_relu);
+        out.wave_keyed_hit.push(hit);
+        out.wave_partial.push(batch.len() < spec.effective_coalesce());
         out.wave_sojourn
             .push(batch.iter().map(|q| (q.id, now - q.arrival)).collect());
+        out.answers[t].extend(wave.answers);
         queue.complete(t, batch.len());
 
         // 6. between waves: one refill tick for the most-depleted tenant
@@ -467,12 +719,59 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
 }
 
 /// Run the multi-tenant workload over `profile` and aggregate per-tenant
-/// measurements.
+/// measurements, panicking on any abort (honest executions and contained
+/// runs — a quarantine is NOT an abort at this level).
 pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStats {
+    match serve_multi_checked(profile, cfg) {
+        Ok(stats) => stats,
+        Err(a) => panic!("serve_multi failed closed: {a}"),
+    }
+}
+
+/// Like [`serve_multi`] but surfaces a run-fatal abort as `Err` instead
+/// of panicking — the fail-closed contract of party-scoped aborts (and of
+/// escalated tenant-scoped ones) is assertable with it. Prefers the most
+/// specific abort across parties: a `Verify`/`TenantScoped` cause over
+/// the `Signalled`/`Channel` echoes it provokes at the peers.
+pub fn serve_multi_checked(
+    profile: NetProfile,
+    cfg: MultiServeConfig,
+) -> Result<MultiServeStats, Abort> {
     let cfg2 = cfg.clone();
     let run = run_4pc(profile, cfg.seed, move |ctx| serve_multi_party(ctx, &cfg2));
-    let (outs, report) = run.expect_ok();
+    if run.outputs.iter().any(|o| o.is_err()) {
+        let mut echo: Option<Abort> = None;
+        for o in &run.outputs {
+            if let Err(a) = o {
+                match a {
+                    Abort::Verify(_) | Abort::TenantScoped { .. } => return Err(a.clone()),
+                    _ => {
+                        echo.get_or_insert_with(|| a.clone());
+                    }
+                }
+            }
+        }
+        return Err(echo.expect("some party erred"));
+    }
+    let outs = run.outputs.map(|o| o.expect("checked above"));
+    Ok(aggregate(&cfg, outs, run.report))
+}
+
+/// Fold the four parties' outputs into [`MultiServeStats`].
+fn aggregate(
+    cfg: &MultiServeConfig,
+    outs: [MultiPartyOut; 4],
+    report: NetReport,
+) -> MultiServeStats {
     let nt = cfg.tenants.len();
+    // the containment decision is a function of public lockstep metadata:
+    // all four parties must have produced identical quarantine records
+    for o in &outs {
+        assert_eq!(
+            o.quarantines, outs[1].quarantines,
+            "containment must be lockstep-deterministic across parties"
+        );
+    }
     let waves = outs[1].wave_tenant.len();
 
     // per-wave latency is the max across parties; per-wave offline traffic
@@ -496,6 +795,7 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
         let mut lats: Vec<f64> = Vec::new();
         let mut sojourns: Vec<u64> = Vec::new();
         let (mut waves_t, mut keyed_waves, mut inline_waves) = (0usize, 0usize, 0usize);
+        let (mut partial_waves, mut partial_keyed_waves) = (0usize, 0usize);
         let (mut offm, mut offm_mat, mut offm_relu) = (0u64, 0u64, 0u64);
         for i in 0..waves {
             if outs[1].wave_tenant[i] != t {
@@ -507,6 +807,12 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
             } else {
                 inline_waves += 1;
             }
+            if outs[1].wave_partial[i] {
+                partial_waves += 1;
+                if outs[1].wave_keyed_hit[i] {
+                    partial_keyed_waves += 1;
+                }
+            }
             offm += wave_off_msgs[i];
             offm_mat += wave_off_mat[i];
             offm_relu += wave_off_relu[i];
@@ -515,6 +821,7 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
                 lats.push(wave_lat[i]);
             }
         }
+        let quarantine = outs[1].quarantines.iter().find(|q| q.tenant == t);
         let mut answers = outs[2].answers[t].clone();
         answers.sort_by_key(|(id, _)| *id);
         tenants.push(TenantServeStats {
@@ -527,6 +834,11 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
             waves: waves_t,
             keyed_waves,
             inline_waves,
+            partial_waves,
+            partial_keyed_waves,
+            quarantined_at: quarantine.map(|q| q.at_tick),
+            requeued: quarantine.map_or(0, |q| q.requeued),
+            lost: quarantine.map_or(0, |q| q.lost),
             p50_latency: percentile(&lats, 0.50),
             p99_latency: percentile(&lats, 0.99),
             mean_sojourn_ticks: if sojourns.is_empty() {
@@ -561,6 +873,7 @@ pub fn serve_multi(profile: NetProfile, cfg: MultiServeConfig) -> MultiServeStat
         offline_msgs_relu: wave_off_relu.iter().sum(),
         refill_online_msgs: outs.iter().map(|o| o.tick_online_msgs).sum(),
         aged_promotions: qs.aged_promotions,
+        quarantines: outs[1].quarantines.clone(),
         pool_stats: outs[1].pool_stats,
         report,
     }
@@ -584,6 +897,7 @@ mod tests {
             high_water: 2,
             age_every: 0,
             seed: 1400,
+            ..MultiServeConfig::default()
         }
     }
 
@@ -707,6 +1021,7 @@ mod tests {
             high_water: 2,
             age_every: 0,
             seed: 1401,
+            ..MultiServeConfig::default()
         };
         cfg.tenants[0].weight = 2;
         cfg.tenants[1].weight = 1;
@@ -743,5 +1058,164 @@ mod tests {
         // the linear tenant consumed no nonlinear material
         assert_eq!(stats.tenants[0].offline_msgs_relu, 0);
         assert_eq!(stats.tenants[1].pool_left_relu, 0, "paired queues drain together");
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_ceil() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        // nearest-rank: rank ⌈p·n⌉, 1-based. The old round((n−1)·p) rule
+        // reported 30 for p50 of four samples; nearest-rank says 20.
+        assert_eq!(percentile(&v, 0.50), 20.0);
+        assert_eq!(percentile(&v, 0.25), 10.0);
+        assert_eq!(percentile(&v, 0.26), 20.0, "⌈0.26·4⌉ = 2");
+        assert_eq!(percentile(&v, 0.75), 30.0);
+        assert_eq!(percentile(&v, 0.99), 40.0);
+        assert_eq!(percentile(&v, 0.0), 10.0, "p=0 clamps to the minimum");
+        assert_eq!(percentile(&v, 1.0), 40.0);
+        // two samples: the median is the SMALLER one under nearest-rank
+        assert_eq!(percentile(&[1.0, 2.0], 0.50), 1.0);
+        // odd length and unsorted input
+        assert_eq!(percentile(&[5.0, 1.0, 3.0], 0.50), 3.0);
+        assert_eq!(percentile(&[5.0, 1.0, 3.0], 0.34), 3.0, "⌈0.34·3⌉ = 2");
+        assert_eq!(percentile(&[], 0.50), 0.0, "empty sample reads 0");
+    }
+
+    #[test]
+    fn trailing_partial_wave_hits_the_keyed_pool() {
+        // 5 queries, coalesce 2 → two full waves + one trailing partial.
+        // Before the partial-wave key was registered at load, the last
+        // wave's differently-shaped CircuitKey always missed the pool and
+        // fell back inline (offline traffic inside the wave window).
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants.truncate(1);
+        cfg.tenants[0] = spec("m1", 1, 5, 2);
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.served, 5);
+        assert_eq!(ts.waves, 3, "5 queries / coalesce 2 → 2 full + 1 partial");
+        assert_eq!(ts.partial_waves, 1, "{ts:?}");
+        assert_eq!(ts.partial_keyed_waves, 1, "partial wave must hit its own key");
+        assert_eq!(ts.keyed_waves, 3);
+        assert_eq!(ts.inline_waves, 0);
+        assert_eq!(
+            ts.offline_msgs_in_waves, 0,
+            "warm keyed waves, full AND partial, are offline-silent: {ts:?}"
+        );
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn partial_wave_miss_is_counted_when_unregistered_shapes_pop() {
+        // inline mode never touches the pool, so the partial wave simply
+        // runs inline like every other wave — and still answers correctly
+        let mut cfg = two_tenant_cfg(PoolMode::Inline);
+        cfg.tenants.truncate(1);
+        cfg.tenants[0] = spec("m1", 1, 5, 2);
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.partial_waves, 1);
+        assert_eq!(ts.partial_keyed_waves, 0);
+        assert_eq!(ts.inline_waves, 3);
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn containment_quarantines_poisoned_tenant_and_keeps_serving() {
+        use crate::net::P1;
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.containment = true;
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 1,
+            kind: FaultKind::TamperMatLamX,
+        });
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        assert_eq!(stats.quarantines.len(), 1, "exactly one contained abort");
+        let q = &stats.quarantines[0];
+        assert_eq!(q.tenant, 0);
+        assert_eq!(q.requeued, 2, "the poisoned wave's batch is re-admitted");
+        assert_eq!(q.lost, 0, "no deadlines → nothing is lost");
+        assert!(q.drained_mat > 0, "quarantine drains the poisoned shard: {q:?}");
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.quarantined_at, Some(q.at_tick));
+        assert_eq!(ts.served, 4, "re-queued queries are served after quarantine");
+        assert!(
+            ts.inline_waves >= 1,
+            "the quarantined tenant finishes over the inline path: {ts:?}"
+        );
+        let other = &stats.tenants[1];
+        assert_eq!(other.served, 4, "the innocent tenant is unaffected");
+        assert_eq!(other.quarantined_at, None);
+        // every surviving answer — innocent tenant AND the re-queued
+        // queries of the quarantined one — matches the cleartext oracle
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn containment_off_tamper_fails_the_run_closed() {
+        use crate::net::P1;
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 1,
+            kind: FaultKind::TamperMatLamX,
+        });
+        let err = serve_multi_checked(NetProfile::zero(), cfg)
+            .expect_err("without containment any abort is run-fatal");
+        assert!(
+            matches!(err, Abort::Verify(_)),
+            "the root cause is a verification abort: {err}"
+        );
+    }
+
+    #[test]
+    fn containment_never_catches_party_scoped_aborts() {
+        use crate::net::P3;
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.containment = true;
+        cfg.fault = Some(FaultPlan {
+            party: P3,
+            tenant: 1,
+            wave: 0,
+            kind: FaultKind::AbortOffWave,
+        });
+        let err = serve_multi_checked(NetProfile::zero(), cfg)
+            .expect_err("a party-scoped abort outside a wave body fails closed");
+        assert!(
+            matches!(err, Abort::Verify(_)),
+            "the faulty party's own abort cause wins over peer echoes: {err}"
+        );
+    }
+
+    #[test]
+    fn quarantine_with_deadlines_loses_past_due_queries_deterministically() {
+        use crate::net::P1;
+        // coalesce 2, deadline 1 tick: when the tamper kills wave 0, its
+        // two queries are already at their service-start deadline — both
+        // are re-admitted but swept as expired on the next tick (the
+        // sweep's saturating in-flight decrement is exercised here)
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants.truncate(1);
+        cfg.tenants[0] = {
+            let mut s = spec("m1", 1, 4, 2);
+            s.deadline_ticks = Some(0);
+            s
+        };
+        cfg.containment = true;
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 0,
+            kind: FaultKind::TamperMatLamX,
+        });
+        let stats = serve_multi(NetProfile::zero(), cfg);
+        let q = &stats.quarantines[0];
+        assert_eq!(q.lost, 2, "deadline ≤ quarantine tick → lost: {q:?}");
+        assert_eq!(q.requeued, 0);
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.expired, 4, "lost queries surface as expired, never served");
+        assert_eq!(ts.served, 0);
     }
 }

@@ -22,9 +22,15 @@
 //!   keyed waves open to the same values as the inline path (both vs the
 //!   cleartext oracle), a cross-tenant pool pop **fails closed** (tenant
 //!   A's correlation is never served to tenant B), a two-tenant warm run
-//!   keeps **every** wave offline-silent per tenant, and the weighted
-//!   round-robin planner's share split holds within one wave over a
-//!   saturated window.
+//!   keeps **every** wave offline-silent per tenant (trailing partial
+//!   waves included), and the weighted round-robin planner's share split
+//!   holds within one wave over a saturated window;
+//! * **abort blast-radius containment**: a keyed bundle tampered mid-run
+//!   quarantines only the owning tenant — the quarantine tick is
+//!   lockstep-identical at all four parties, every surviving answer
+//!   (including the poisoned wave's re-queued queries) matches the
+//!   cleartext oracle — while party-scoped aborts, and any abort with
+//!   containment off, still fail the whole run closed.
 
 use trident::convert::{bit2a, bit2a_many, bitext, bitext_many};
 use trident::crypto::Rng;
@@ -1625,6 +1631,7 @@ fn two_tenant_cfg(
         high_water: high,
         age_every: 0,
         seed: 1660,
+        ..trident::serve::MultiServeConfig::default()
     }
 }
 
@@ -1789,6 +1796,7 @@ fn wrr_share_split_asserted_within_tolerance() {
         high_water: 2,
         age_every: 0,
         seed: 1661,
+        ..MultiServeConfig::default()
     };
     let s = serve_multi(NetProfile::zero(), cfg);
     // heavy needs 6 waves, light 6; both are backlogged for the first 9
@@ -1801,4 +1809,139 @@ fn wrr_share_split_asserted_within_tolerance() {
     );
     assert_eq!(s.tenants[0].served, 12);
     assert_eq!(s.tenants[1].served, 12);
+}
+
+#[test]
+fn two_tenant_partial_waves_stay_offline_silent() {
+    use trident::serve::{serve_multi, PoolMode};
+    // 10 queries / coalesce 3 → three full waves + a trailing partial per
+    // tenant, at the tightest refill cadence: the registered partial-wave
+    // key (warmed once at load) must keep the LAST wave offline-silent too
+    let mut cfg = two_tenant_cfg(PoolMode::Keyed, 1, 1);
+    for t in &mut cfg.tenants {
+        t.queries = 10;
+    }
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.waves, 8, "3 full + 1 partial per tenant");
+    for (i, m) in s.wave_offline_msgs.iter().enumerate() {
+        assert_eq!(
+            *m, 0,
+            "wave {i} (tenant {}) sent offline-phase messages inside the wave window",
+            s.wave_tenants[i]
+        );
+    }
+    for ts in &s.tenants {
+        assert_eq!(ts.partial_waves, 1, "{ts:?}");
+        assert_eq!(ts.partial_keyed_waves, 1, "the partial wave hit its own key");
+        assert_eq!(ts.keyed_waves, ts.waves, "full AND partial waves drain keyed bundles");
+        assert_eq!(ts.offline_msgs_in_waves, 0);
+    }
+    assert_tenant_answers_match_cleartext(&s, &cfg, "warm partial");
+}
+
+// ------------------------------------------- abort blast-radius containment
+
+/// The tentpole acceptance scenario: a keyed bundle is tampered with
+/// mid-run (P1 corrupts tenant 0's second wave). With containment on, the
+/// abort must stay scoped to the owning tenant's wave — the quarantine is
+/// decided at the same tick at all four parties (asserted internally at
+/// aggregation), the other tenant's queries and the poisoned wave's
+/// re-queued innocents all match the cleartext oracle, and no wrong opened
+/// value ever surfaces as an answer.
+#[test]
+fn containment_tampered_wave_quarantines_only_its_tenant() {
+    use trident::serve::{serve_multi, FaultKind, FaultPlan, PoolMode};
+    let mut cfg = two_tenant_cfg(PoolMode::Keyed, 1, 2);
+    cfg.containment = true;
+    cfg.fault = Some(FaultPlan {
+        party: P1,
+        tenant: 0,
+        wave: 1,
+        kind: FaultKind::TamperMatLamX,
+    });
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.quarantines.len(), 1, "exactly one contained abort: {:?}", s.quarantines);
+    let q = &s.quarantines[0];
+    assert_eq!(q.tenant, 0, "the quarantine names the poisoned tenant");
+    assert_eq!(q.requeued, 3, "the aborted wave's whole batch is re-admitted");
+    assert_eq!(q.lost, 0);
+    assert!(q.drained_mat > 0, "the poisoned shard is drained: {q:?}");
+    let (poisoned, innocent) = (&s.tenants[0], &s.tenants[1]);
+    assert_eq!(poisoned.quarantined_at, Some(q.at_tick));
+    assert_eq!(
+        poisoned.served, 9,
+        "re-queued queries finish over the secure inline path: {poisoned:?}"
+    );
+    assert!(poisoned.inline_waves >= 1, "quarantined pops miss deterministically");
+    assert_eq!(innocent.quarantined_at, None);
+    assert_eq!(innocent.served, 9, "the innocent tenant never notices");
+    // every answer that surfaced — both tenants, including the re-queued
+    // innocents of the poisoned wave — equals the cleartext oracle
+    assert_tenant_answers_match_cleartext(&s, &cfg, "containment");
+}
+
+#[test]
+fn containment_relu_tamper_is_contained_too() {
+    use trident::serve::{serve_multi, FaultKind, FaultPlan, PoolMode};
+    // same scenario through the nonlinear leg: the paired ReluCorr bundle
+    // is corrupted instead of the matrix bundle
+    let mut cfg = two_tenant_cfg(PoolMode::Keyed, 1, 2);
+    cfg.tenants[0].relu = true;
+    cfg.containment = true;
+    cfg.fault = Some(FaultPlan {
+        party: P3,
+        tenant: 0,
+        wave: 0,
+        kind: FaultKind::TamperReluGamma,
+    });
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.quarantines.len(), 1, "{:?}", s.quarantines);
+    assert_eq!(s.quarantines[0].tenant, 0);
+    assert!(
+        s.quarantines[0].drained_relu > 0,
+        "quarantine drains the paired nonlinear shard: {:?}",
+        s.quarantines[0]
+    );
+    assert_eq!(s.tenants[0].served, 9);
+    assert_eq!(s.tenants[1].served, 9);
+    assert_tenant_answers_match_cleartext(&s, &cfg, "relu containment");
+}
+
+#[test]
+fn containment_off_keeps_the_fail_closed_contract() {
+    use trident::serve::{serve_multi_checked, FaultKind, FaultPlan, PoolMode};
+    let mut cfg = two_tenant_cfg(PoolMode::Keyed, 1, 2);
+    cfg.fault = Some(FaultPlan {
+        party: P1,
+        tenant: 0,
+        wave: 1,
+        kind: FaultKind::TamperMatLamX,
+    });
+    let err = serve_multi_checked(NetProfile::zero(), cfg)
+        .expect_err("containment off: any tamper is run-fatal");
+    assert!(
+        matches!(err, trident::net::Abort::Verify(_)),
+        "the verification abort is the surfaced cause: {err}"
+    );
+}
+
+#[test]
+fn containment_party_scoped_abort_fails_the_run_closed() {
+    use trident::serve::{serve_multi_checked, FaultKind, FaultPlan, PoolMode};
+    // a party aborting OUTSIDE a wave body implicates the party, not a
+    // tenant's material — containment must not quarantine anybody
+    let mut cfg = two_tenant_cfg(PoolMode::Keyed, 1, 2);
+    cfg.containment = true;
+    cfg.fault = Some(FaultPlan {
+        party: P3,
+        tenant: 1,
+        wave: 1,
+        kind: FaultKind::AbortOffWave,
+    });
+    let err = serve_multi_checked(NetProfile::zero(), cfg)
+        .expect_err("party-scoped aborts fail closed even with containment on");
+    assert!(
+        matches!(err, trident::net::Abort::Verify(_)),
+        "the aborting party's own cause is surfaced: {err}"
+    );
 }

@@ -12,8 +12,8 @@ use trident::serve::{serve, PoolMode, ServeConfig};
 fn main() {
     trident::runtime::pjrt::init_default();
 
-    // run the mode sweep + two-tenant workload once; the text tables and
-    // the JSON artifact below render the same measurements
+    // run the mode sweep + multi-tenant workload once; the text tables
+    // and the JSON artifact below render the same measurements
     let bench = trident::bench::run_serving_bench();
     print!("{}", trident::bench::serve_table_from(&bench.modes));
     print!("{}", trident::bench::fill_throughput_line(&bench.fill));
@@ -48,7 +48,7 @@ fn main() {
     }
 
     println!();
-    println!("== Multi-tenant serving: 2 resident models, WRR 2:1, LAN ==");
+    println!("== Multi-tenant serving: 3 resident models (1 deep NN-3), WRR 2:1:1, LAN ==");
     print!("{}", trident::bench::tenant_table(&bench.tenants));
 
     println!();

@@ -813,11 +813,13 @@ pub fn serve_table_from(rows: &[(&'static str, crate::serve::ServeStats)]) -> St
     out
 }
 
-/// Canonical multi-tenant demo workload for the per-tenant table/JSON: two
-/// resident models behind one cluster — a weight-2 class-0 tenant and a
+/// Canonical multi-tenant demo workload for the per-tenant table/JSON:
+/// three resident models behind one cluster — a weight-2 class-0 tenant, a
 /// weight-1 class-1 tenant with a 6-tick deadline (aging every 2 ticks
 /// keeps the low-priority tenant from starving; the deadline column shows
-/// expiry accounting in action).
+/// expiry accounting in action), and a **deep resident NN-3** (12-8-8-4,
+/// hidden ReLU) whose warm waves pop a whole per-layer bundle vector and
+/// report per-gate offline-message counts.
 pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
     use crate::sched::TenantSpec;
     use crate::serve::{MultiServeConfig, PoolMode};
@@ -832,8 +834,12 @@ pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
     // MatCorr+ReluCorr bundles, so the off-msg (mat|relu) columns show the
     // nonlinear leg silent too
     batch.relu = true;
+    let mut nn3 = TenantSpec::new("nn3", 3, 12, queries, 4);
+    nn3.weight = 1;
+    nn3.class = 0;
+    nn3.layers = vec![8, 8, 4];
     MultiServeConfig {
-        tenants: vec![prio, batch],
+        tenants: vec![prio, batch, nn3],
         mode: PoolMode::Keyed,
         low_water: 1,
         high_water: 2,
@@ -891,9 +897,14 @@ pub fn tenant_table(stats: &crate::serve::MultiServeStats) -> String {
 pub fn serve_tenants_table() -> String {
     use crate::serve::serve_multi;
     let mut out = String::new();
-    out.push_str("== Multi-tenant serving: 2 resident models, WRR 2:1, LAN ==\n");
+    out.push_str("== Multi-tenant serving: 3 resident models (1 deep NN-3), WRR 2:1:1, LAN ==\n");
     out.push_str(&tenant_table(&serve_multi(NetProfile::lan(), demo_tenants(12))));
     out
+}
+
+fn json_num_array<T: std::fmt::Display>(v: &[T]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
 }
 
 fn json_escape(s: &str) -> String {
@@ -923,13 +934,18 @@ pub fn serving_bench_json() -> String {
 /// Schema 2 extended schema 1 with the per-wave `compute_ms` /
 /// `value_bytes` columns on every mode row and a top-level
 /// `offline_fill_throughput` object — the regression-gated numbers for the
-/// keystream-batched PRF and the packed/flat hot path. Schema 3 (this PR)
-/// adds the containment fields: per-tenant `partial_waves` /
-/// `partial_keyed_waves` (the trailing-partial-batch keyed-pool fix) and
-/// `quarantined_at` / `requeued` / `lost`, plus a top-level `quarantines`
-/// array (empty for the honest benchmark run).
+/// keystream-batched PRF and the packed/flat hot path. Schema 3 added the
+/// containment fields: per-tenant `partial_waves` / `partial_keyed_waves`
+/// (the trailing-partial-batch keyed-pool fix) and `quarantined_at` /
+/// `requeued` / `lost`, plus a top-level `quarantines` array (empty for
+/// the honest benchmark run). Schema 4 (this PR) adds the deep-circuit
+/// columns: per-tenant gate-order arrays `off_msgs_matmul_layers` /
+/// `off_msgs_relu_layers` (one entry per resident layer, all zero on a
+/// warm run) and `pool_left_mat_layers` / `pool_left_relu_layers`
+/// (unconsumed keyed bundles per layer shard at shutdown), driven by the
+/// resident NN-3 tenant in the canonical workload.
 pub fn serving_bench_json_from(bench: &ServingBench) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/3\",\n");
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/4\",\n");
     out.push_str(&format!(
         "  \"offline_fill_throughput\": {{\"bitext_masks_per_s\": {:.1}, \"trunc_pairs_per_s\": {:.1}, \"lam_skeletons_per_s\": {:.1}}},\n",
         bench.fill.bitext_masks_per_s, bench.fill.trunc_pairs_per_s, bench.fill.lam_per_s,
@@ -963,10 +979,11 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
     for (t, ts) in stats.tenants.iter().enumerate() {
         let spec = &cfg.tenants[t];
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"wave_share\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"off_msgs_matmul_layers\": {}, \"off_msgs_relu_layers\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
             json_escape(&ts.name),
             spec.weight,
             spec.class,
+            spec.depth(),
             ts.submitted,
             ts.admitted,
             ts.rejected,
@@ -986,6 +1003,10 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.offline_msgs_in_waves,
             ts.offline_msgs_matmul,
             ts.offline_msgs_relu,
+            json_num_array(&ts.offline_msgs_matmul_layers),
+            json_num_array(&ts.offline_msgs_relu_layers),
+            json_num_array(&ts.pool_left_mat_layers),
+            json_num_array(&ts.pool_left_relu_layers),
             ts.waves as f64 / stats.waves.max(1) as f64,
             if t + 1 < stats.tenants.len() { "," } else { "" },
         ));

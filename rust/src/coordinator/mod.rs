@@ -363,6 +363,7 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
             party: crate::net::P1,
             tenant: 0,
             wave: 1,
+            layer: 0,
             kind: FaultKind::TamperMatLamX,
         }),
     };

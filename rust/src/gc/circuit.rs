@@ -251,6 +251,14 @@ impl Builder {
 /// garbled world after an `Π_A2G` of numerator and denominator.
 pub fn divider(bits: usize) -> Circuit {
     let mut b = Builder::new(2 * bits);
+    let q = divider_core(&mut b, bits);
+    b.finish(q)
+}
+
+/// The restoring-divider loop, shared by [`divider`] and [`safe_divider`]:
+/// emits the quotient wires of `⌊N / D⌋` into `b` (inputs are the builder's
+/// first `2·bits` wires, numerator then denominator, little-endian).
+fn divider_core(b: &mut Builder, bits: usize) -> Vec<u32> {
     let d_wires: Vec<u32> = (bits..2 * bits).map(|i| i as u32).collect();
     let f0 = b.const_false();
     let mut r = vec![f0; bits];
@@ -267,7 +275,31 @@ pub fn divider(bits: usize) -> Circuit {
         q[i] = ge;
         r = b.mux(ge, &t, &rp);
     }
-    b.finish(q)
+    q
+}
+
+/// [`divider`] with **defined `D = 0` behavior**: an in-circuit comparator
+/// OR-folds the denominator wires and a final mux swaps the (garbage)
+/// restoring quotient for the constant `fallback` when `D = 0`. The test is
+/// taken on the garbled denominator wires, so whether the zero branch fired
+/// is never revealed — callers get total-function semantics at a cost of
+/// `2·bits − 1` extra AND-equivalent gates on top of [`divider`].
+pub fn safe_divider(bits: usize, fallback: u64) -> Circuit {
+    assert!(bits <= 64, "fallback constant is u64-wide");
+    let mut b = Builder::new(2 * bits);
+    let q = divider_core(&mut b, bits);
+    // is_zero(D) = ¬(d_0 | d_1 | … | d_{b-1})
+    let mut any = bits as u32;
+    for i in 1..bits {
+        any = b.or(any, (bits + i) as u32);
+    }
+    let is_zero = b.not(any);
+    let f0 = b.const_false();
+    let f1 = b.not(f0);
+    let fb: Vec<u32> =
+        (0..bits).map(|i| if (fallback >> i) & 1 == 1 { f1 } else { f0 }).collect();
+    let outs = b.mux(is_zero, &fb, &q);
+    b.finish(outs)
 }
 
 /// Parallel-prefix (Sklansky) adder with carry-in: `log ℓ` AND-depth,
@@ -489,6 +521,26 @@ mod tests {
             let mut input = u64_bits(n, 64);
             input.extend(u64_bits(d, 64));
             assert_eq!(bits_u64(&c.eval(&input)), n / d, "{n}/{d}");
+        }
+    }
+
+    #[test]
+    fn safe_divider_matches_divider_and_defines_zero_denominator() {
+        let mut rng = Rng::seeded(76);
+        let fb = 0xA5u64;
+        let c = safe_divider(8, fb);
+        for _ in 0..25 {
+            let n = rng.next_u64() & 0xFF;
+            let d = (rng.next_u64() & 0xFF).max(1);
+            let mut input = u64_bits(n, 8);
+            input.extend(u64_bits(d, 8));
+            assert_eq!(bits_u64(&c.eval(&input)), n / d, "{n}/{d}");
+        }
+        // D = 0: the comparator swaps in the fallback instead of garbage
+        for n in [0u64, 1, 255] {
+            let mut input = u64_bits(n, 8);
+            input.extend(u64_bits(0, 8));
+            assert_eq!(bits_u64(&c.eval(&input)), fb, "{n}/0 must yield the fallback");
         }
     }
 

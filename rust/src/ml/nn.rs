@@ -15,13 +15,14 @@
 //! `ml::softmax::softmax_garbled` (A2G → restoring divider → G2A) and
 //! exercised by its tests and `examples/mixed_world.rs` (DESIGN.md §3).
 
-use crate::net::Abort;
-use crate::proto::{matmul_tr, matmul_tr_shift, Ctx};
+use crate::net::{Abort, Phase};
+use crate::pool::CircuitKey;
+use crate::proto::{matmul_tr, matmul_tr_keyed, matmul_tr_keyed_shared, matmul_tr_shift, Ctx};
 use crate::ring::fixed::FRAC_BITS;
-use crate::ring::{Bit, Z64};
+use crate::ring::{Bit, Matrix, Z64};
 use crate::sharing::{MMat, MShare};
 
-use super::activation::relu_mat;
+use super::activation::{relu_mat, relu_mat_keyed};
 use super::F64Mat;
 
 /// Which benchmark network (Table VI).
@@ -48,16 +49,25 @@ impl Network {
             NetworkKind::Nn => vec![784, 128, 128, 10],
             NetworkKind::Cnn => vec![784, 2880, 100, 10],
         };
-        Network { layers, batch, lr_pow: 7 }
+        Network::custom(layers, batch, 7)
     }
 
-    /// Small custom network (tests).
+    /// Small custom network (tests). The batch must be a power of two: the
+    /// `α/B` gradient scaling is implemented as a probabilistic ring
+    /// truncation by `lr_pow + log2(B)` bits ([`Network::grad_shift`]),
+    /// which only divides exactly by powers of two — any other batch would
+    /// silently train at a mis-scaled learning rate.
     pub fn custom(layers: Vec<usize>, batch: usize, lr_pow: u32) -> Network {
+        assert!(
+            batch.is_power_of_two(),
+            "batch {batch} is not a power of two: the 1/B gradient scale is a ring shift"
+        );
         Network { layers, batch, lr_pow }
     }
 
     fn grad_shift(&self) -> u32 {
-        FRAC_BITS + self.lr_pow + (self.batch as f64).log2().round() as u32
+        // exact by the power-of-two batch invariant enforced at construction
+        FRAC_BITS + self.lr_pow + self.batch.trailing_zeros()
     }
 
     /// Xavier-ish random init (cleartext, to be shared by a data owner).
@@ -163,6 +173,60 @@ impl Network {
     }
 }
 
+/// Result of a circuit-keyed forward pass: the output scores plus the
+/// **per-layer** offline-message meters (messages sent in `Phase::Offline`
+/// during each layer's matmul and ReLU respectively — all-zero on a warm
+/// wave, the deep-circuit serving invariant).
+pub struct KeyedForwardOut {
+    pub out: MMat<Z64>,
+    pub om_mat: Vec<u64>,
+    pub om_relu: Vec<u64>,
+}
+
+/// Forward pass of a resident network through the **circuit-keyed pool**:
+/// layer 0 shares the dealer-held input under the popped bundle's wire mask
+/// ([`matmul_tr_keyed`]); every deeper layer re-masks the previous layer's
+/// shared activation under its own popped bundle
+/// ([`matmul_tr_keyed_shared`]) so a warm wave runs share →
+/// L×(matmul → relu) → done with **zero offline-phase messages** end to
+/// end. `keys[l]` is the layer's `(matrix, relu?)` circuit-key pair, gate
+/// order, as produced by `TenantSpec::layer_keys` — a `None` relu key makes
+/// the layer linear (the network head). Per-layer pops are lockstep, and a
+/// caller that wants all-or-nothing semantics gates on
+/// [`crate::pool::Pool::check_layer_vec`] first; a cold pop inside still
+/// falls back inline per layer, deterministically at all four parties.
+pub fn forward_keyed(
+    ctx: &mut Ctx,
+    weights: &[MMat<Z64>],
+    keys: &[(CircuitKey, Option<CircuitKey>)],
+    x_clear: Option<&Matrix<Z64>>,
+) -> Result<KeyedForwardOut, Abort> {
+    assert_eq!(weights.len(), keys.len(), "one key pair per layer");
+    assert!(!keys.is_empty(), "forward pass needs at least one layer");
+    let mut om_mat = Vec::with_capacity(keys.len());
+    let mut om_relu = Vec::with_capacity(keys.len());
+    let mut a: Option<MMat<Z64>> = None;
+    for ((mk, rk), w) in keys.iter().zip(weights) {
+        let m0 = ctx.net.sent_msgs(Phase::Offline);
+        let u = match &a {
+            None => {
+                let (_, u) = matmul_tr_keyed(ctx, mk, x_clear, w)?;
+                u
+            }
+            Some(prev) => matmul_tr_keyed_shared(ctx, mk, prev, w)?,
+        };
+        om_mat.push(ctx.net.sent_msgs(Phase::Offline) - m0);
+        let r0 = ctx.net.sent_msgs(Phase::Offline);
+        let act = match rk {
+            Some(rk) => relu_mat_keyed(ctx, rk, &u)?.0,
+            None => u,
+        };
+        om_relu.push(ctx.net.sent_msgs(Phase::Offline) - r0);
+        a = Some(act);
+    }
+    Ok(KeyedForwardOut { out: a.expect("at least one layer"), om_mat, om_relu })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,13 +240,14 @@ mod tests {
 
     #[test]
     fn tiny_nn_trains_to_fit_batch() {
-        // 6-8-3 network on a 12-sample batch: loss must drop
+        // 6-8-3 network on an 8-sample batch (power of two, so the 1/B
+        // gradient shift is exact): loss must drop
         let run = run_4pc(NetProfile::zero(), 230, |ctx| {
             let mut rng = Rng::seeded(99);
-            let net = Network::custom(vec![6, 8, 3], 12, 3);
-            let data = class_batch(&mut rng, 12, 6, 3);
-            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&data.x), 12, 6)?;
-            let ts = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&data.t), 12, 3)?;
+            let net = Network::custom(vec![6, 8, 3], 8, 3);
+            let data = class_batch(&mut rng, 8, 6, 3);
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&data.x), 8, 6)?;
+            let ts = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&data.t), 8, 3)?;
             let init = net.init_weights_clear(&mut Rng::seeded(7));
             let mut ws = net.share_weights(ctx, P1, (ctx.id() == P1).then_some(&init[..]))?;
             // initial loss
@@ -210,13 +275,13 @@ mod tests {
         ]);
         let loss = |m: &crate::ring::Matrix<Z64>| -> f64 {
             let mut acc = 0.0;
-            for i in 0..12 {
+            for i in 0..8 {
                 for c in 0..3 {
                     let d = FixedPoint::decode(m[(i, c)]) - data.t.at(i, c);
                     acc += d * d;
                 }
             }
-            acc / 36.0
+            acc / 24.0
         };
         let (l0, l1) = (loss(&before), loss(&after));
         assert!(l1 < l0 * 0.5, "loss {l0} → {l1}: insufficient progress");
@@ -253,5 +318,81 @@ mod tests {
         let slope = (per_d[1].1 - per_d[0].1) / (64 - 16);
         // per extra feature: 4 more W1-gradient outputs × 3ℓ each
         assert_eq!(slope, 3 * 4 * 64, "slope {slope} bits/feature");
+    }
+
+    #[test]
+    #[should_panic(expected = "is not a power of two")]
+    fn network_rejects_non_power_of_two_batch() {
+        // batch 3 would round log2 to 2 and silently halve the effective
+        // learning rate — construction must refuse instead
+        let _ = Network::custom(vec![4, 2], 3, 3);
+    }
+
+    #[test]
+    fn forward_keyed_matches_inline_and_is_offline_silent_when_warm() {
+        use crate::pool::{fill_layer_vec, relu_key_for, CircuitKey, LayerTarget, OpKind, Pool};
+        let run = run_4pc(NetProfile::zero(), 232, |ctx| {
+            let mut rng = Rng::seeded(11);
+            let net = Network::custom(vec![4, 6, 2], 4, 3);
+            let data = class_batch(&mut rng, 4, 4, 2);
+            let init = net.init_weights_clear(&mut Rng::seeded(12));
+            let ws = net.share_weights(ctx, P1, (ctx.id() == P1).then_some(&init[..]))?;
+            ctx.flush_verify()?;
+            // per-layer keys in gate order; the head layer is linear
+            let dims = [4usize, 6, 2];
+            let keys: Vec<(CircuitKey, Option<CircuitKey>)> = (0..2)
+                .map(|l| {
+                    let mk = CircuitKey {
+                        model: 5,
+                        layer: l as u32,
+                        op: OpKind::MatMulTr { shift: crate::ring::fixed::FRAC_BITS },
+                        rows: 4,
+                        inner: dims[l],
+                        cols: dims[l + 1],
+                        dealer: P1,
+                    };
+                    (mk, (l == 0).then(|| relu_key_for(&mk)))
+                })
+                .collect();
+            ctx.attach_pool(Pool::new());
+            let targets: Vec<LayerTarget> = keys
+                .iter()
+                .zip(&ws)
+                .map(|((mk, rk), w)| LayerTarget { key: *mk, relu: *rk, w: w.clone() })
+                .collect();
+            fill_layer_vec(ctx, &targets, 1)?;
+            let enc = data.x.encode();
+            let m0 = ctx.net.sent_msgs(Phase::Offline);
+            let out = forward_keyed(ctx, &ws, &keys, (ctx.id() == P1).then_some(&enc))?;
+            let om = ctx.net.sent_msgs(Phase::Offline) - m0;
+            // inline reference forward on the same cleartext input
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&data.x), 4, 4)?;
+            let (acts, _) = net.forward(ctx, &ws, &xs)?;
+            ctx.flush_verify()?;
+            assert_eq!(om, 0, "warm keyed forward is offline-silent");
+            assert!(
+                out.om_mat.iter().chain(&out.om_relu).all(|&m| m == 0),
+                "per-layer meters all zero on a warm wave"
+            );
+            assert_eq!((out.om_mat.len(), out.om_relu.len()), (2, 2));
+            Ok((out.out, acts.into_iter().next_back().unwrap()))
+        });
+        let (outs, _) = run.expect_ok();
+        let keyed = open_mat(&[
+            outs[0].0.clone(),
+            outs[1].0.clone(),
+            outs[2].0.clone(),
+            outs[3].0.clone(),
+        ]);
+        let inline = open_mat(&[
+            outs[0].1.clone(),
+            outs[1].1.clone(),
+            outs[2].1.clone(),
+            outs[3].1.clone(),
+        ]);
+        for (a, b) in keyed.data().iter().zip(inline.data()) {
+            let d = FixedPoint::decode(*a) - FixedPoint::decode(*b);
+            assert!(d.abs() < 0.01, "keyed {a:?} vs inline {b:?} drifted by {d}");
+        }
     }
 }

@@ -5,12 +5,12 @@
 //! fixed-point quotient back.
 
 use crate::convert::garbled::{a2g, g2a};
-use crate::gc::circuit::divider;
+use crate::gc::circuit::safe_divider;
 use crate::gc::g_eval;
 use crate::net::Abort;
 use crate::proto::Ctx;
 use crate::ring::fixed::FRAC_BITS;
-use crate::ring::Z64;
+use crate::ring::{FixedPoint, Z64};
 use crate::sharing::MShare;
 
 use super::activation::relu_many;
@@ -18,6 +18,14 @@ use super::activation::relu_many;
 /// Softmax over one score vector. Returns fixed-point probabilities
 /// (summing to ≈1). Heavy: one garbled 64-bit divider per class
 /// (~16k AND gates each) — the paper pays the same (§VI-A.c).
+///
+/// **Zero-denominator contract.** When every score is non-positive, each
+/// `relu(u_i)` — and with it `Σ relu(u_j)` — is zero, and a bare restoring
+/// divider would emit garbage on `0/0`. The divider here is
+/// [`safe_divider`]: a garbled comparator tests the shared denominator for
+/// zero *inside the circuit* and muxes in the constant `1/n`, so an
+/// all-negative score vector decodes to the **uniform distribution** and
+/// the zero-denominator test is never revealed to any party.
 pub fn softmax_garbled(
     ctx: &mut Ctx,
     scores: &[MShare<Z64>],
@@ -29,8 +37,9 @@ pub fn softmax_garbled(
     for r in &relu {
         denom = denom + *r;
     }
-    // fixed-point quotient: (relu_i · 2^f) / denom
-    let div = divider(64);
+    // fixed-point quotient: (relu_i · 2^f) / denom, with the in-circuit
+    // D = 0 fallback fixed to the uniform probability 1/n
+    let div = safe_divider(64, FixedPoint::encode(1.0 / n as f64).0);
     let denom_g = a2g(ctx, &denom)?;
     let mut out = Vec::with_capacity(n);
     for r in &relu {
@@ -80,5 +89,32 @@ mod tests {
         assert!((probs[2] - 1.0 / 3.0).abs() < 0.01, "{probs:?}");
         let total: f64 = probs.iter().sum();
         assert!((total - 1.0).abs() < 0.02, "sum {total}");
+    }
+
+    #[test]
+    fn softmax_all_negative_scores_is_uniform() {
+        // regression: every relu(u_i) = 0 → Σ relu = 0, and the old bare
+        // restoring divider fed 0/0 through undefined behavior; the safe
+        // divider's in-circuit comparator must yield the uniform 1/n
+        let run = run_4pc(NetProfile::zero(), 601, |ctx| {
+            let vals = [-2.0f64, -0.5, -1.0];
+            let mut shares = Vec::new();
+            for v in vals {
+                shares.push(share(
+                    ctx,
+                    P1,
+                    (ctx.id() == P1).then_some(FixedPoint::encode(v)),
+                )?);
+            }
+            let p = softmax_garbled(ctx, &shares)?;
+            ctx.flush_verify()?;
+            Ok(p)
+        });
+        let (outs, _) = run.expect_ok();
+        for i in 0..3 {
+            let p =
+                FixedPoint::decode(open(&[outs[0][i], outs[1][i], outs[2][i], outs[3][i]]));
+            assert!((p - 1.0 / 3.0).abs() < 0.01, "class {i}: {p} (want uniform 1/3)");
+        }
     }
 }

@@ -46,6 +46,27 @@
 //! agree on every fallback decision. Exhaustion therefore degrades to the
 //! seed's inline path, never to a desync.
 //!
+//! **Per-layer key vectors (deep circuits).** An N-layer resident network
+//! registers one `(MatCorr, ReluCorr?)` key pair **per layer** (same
+//! `model`, `layer = 0..N−1`; the final layer is matmul-only), and a warm
+//! wave consumes one whole **bundle vector** in gate order: layer 0's mat
+//! (+relu) bundle, then layer 1's, … The atomicity contract is two-sided:
+//! - *fill side* ([`refill::fill_layer_vec`]): vectors are restocked as a
+//!   unit, layer-major in gate order within one lockstep tick, so stock
+//!   counted by [`Pool::layer_vec_stock`] (the min paired stock across
+//!   layers) is always a whole number of poppable vectors;
+//! - *pop side* ([`Pool::check_layer_vec`]): a wave first checks that
+//!   **every** layer fronts a bundle; any gap sends the *entire* wave down
+//!   the inline path (one recorded miss), never a partially keyed circuit.
+//!   With the gate passed, the per-layer keyed entry points pop in gate
+//!   order; a wrong-keyed front at any layer still fails closed.
+//!
+//! Layer ≥ 1 inputs are already-shared (the previous layer's output), so
+//! their keyed matmul re-masks the input under the bundle's pooled wire
+//! mask by opening the uniform mask delta online
+//! ([`crate::proto::sharing::remask_mat`]) — the offline phase stays
+//! message-free across the whole vector.
+//!
 //! **Tamper safety.** Pool items are shares of *verified* correlations; a
 //! party that tampers with (or replays) its local copy is exactly a
 //! malicious party mis-executing the online phase, and the existing
@@ -57,7 +78,7 @@ pub mod refill;
 pub mod relu;
 
 pub use mat::{fill_mat, CircuitKey, MatCorr, OpKind};
-pub use refill::{Refill, RefillOutcome, WaterMarks};
+pub use refill::{fill_layer_vec, LayerTarget, Refill, RefillOutcome, WaterMarks};
 pub use relu::{fill_mat_relu, relu_key_for, ReluCorr};
 
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -337,6 +358,43 @@ impl Pool {
                 key
             )),
         }
+    }
+
+    // ---- per-layer key vectors (deep-circuit serving) --------------------
+
+    /// Stock level of a **per-layer key vector** — the number of complete
+    /// bundle vectors poppable for an N-layer resident network, i.e. the
+    /// minimum paired stock across every layer's `(mat, relu?)` pair.
+    /// Watermark refill and `most_depleted` steering measure deep tenants
+    /// in this unit: one vector = one warm wave.
+    pub fn layer_vec_stock(&self, keys: &[(CircuitKey, Option<CircuitKey>)]) -> usize {
+        keys.iter()
+            .map(|(mk, rk)| {
+                let m = self.len_mat(mk);
+                match rk {
+                    Some(rk) => m.min(self.len_relu(rk)),
+                    None => m,
+                }
+            })
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// The **all-or-nothing gate** of a deep keyed wave: true iff every
+    /// layer's mat queue (and paired relu queue, where the layer has one)
+    /// fronts at least one bundle, so the whole vector can be popped in
+    /// gate order with no mid-circuit exhaustion. On false, records **one**
+    /// mat miss (mirroring the single-gate miss accounting the containment
+    /// status classifier reads) and the caller must run the *entire* wave
+    /// over the inline path — never a partially keyed circuit. Note this
+    /// checks *presence*, not key correctness: a wrong-keyed front still
+    /// fails closed inside the per-layer pop, exactly as for single gates.
+    pub fn check_layer_vec(&mut self, keys: &[(CircuitKey, Option<CircuitKey>)]) -> bool {
+        let ok = self.layer_vec_stock(keys) >= 1;
+        if !ok {
+            self.stats.mat_misses += 1;
+        }
+        ok
     }
 
     // ---- quarantine (abort blast-radius containment) --------------------
@@ -628,6 +686,69 @@ mod tests {
 
         // the innocent model's shard is untouched
         assert!(pool.pop_mat(&kb).unwrap().is_some());
+    }
+
+    #[test]
+    fn layer_vec_stock_is_min_over_layers_and_check_is_all_or_nothing() {
+        use crate::net::{P0, P2};
+        use crate::proto::dotp::MatGamma;
+        use crate::ring::Matrix;
+        use crate::sharing::MMat;
+
+        fn key(layer: u32) -> CircuitKey {
+            CircuitKey {
+                model: 9,
+                layer,
+                op: OpKind::MatMulTr { shift: FRAC_BITS },
+                rows: 2,
+                inner: 3,
+                cols: 1,
+                dealer: P2,
+            }
+        }
+        fn dummy(k: CircuitKey) -> MatCorr {
+            MatCorr {
+                key: k,
+                lam_x: MMat::zero(P0, k.rows, k.inner),
+                lam_x_full: None,
+                gamma: MatGamma::Helper([
+                    Matrix::zeros(k.rows, k.cols),
+                    Matrix::zeros(k.rows, k.cols),
+                    Matrix::zeros(k.rows, k.cols),
+                ]),
+                lam_z: MMat::zero(P0, k.rows, k.cols),
+                pairs: Vec::new(),
+                seq: 0,
+            }
+        }
+
+        let mut pool = Pool::new();
+        // 3-layer vector, final layer matmul-only; layer 1 requires relu
+        let keys = vec![
+            (key(0), None),
+            (key(1), Some(relu_key_for(&key(1)))),
+            (key(2), None),
+        ];
+        assert_eq!(pool.layer_vec_stock(&keys), 0, "empty pool fronts no vector");
+
+        pool.push_mat(dummy(key(0)));
+        pool.push_mat(dummy(key(0)));
+        pool.push_mat(dummy(key(2)));
+        // layer 1's mat AND relu queues are empty → still no whole vector
+        assert_eq!(pool.layer_vec_stock(&keys), 0);
+        pool.push_mat(dummy(key(1)));
+        // mat stocked everywhere, but layer 1's PAIRED relu queue is empty:
+        // the vector is incomplete — a partially keyed circuit is never run
+        assert_eq!(pool.layer_vec_stock(&keys), 0, "paired min includes relu stock");
+        let misses0 = pool.stats().mat_misses;
+        assert!(!pool.check_layer_vec(&keys));
+        assert_eq!(pool.stats().mat_misses, misses0 + 1, "one miss per failed gate");
+
+        // a mat-only vector over the same mat stock IS poppable (min = 1)
+        let keys_linear = vec![(key(0), None), (key(1), None), (key(2), None)];
+        assert_eq!(pool.layer_vec_stock(&keys_linear), 1);
+        assert!(pool.check_layer_vec(&keys_linear));
+        assert_eq!(pool.stats().mat_misses, misses0 + 1, "a passing gate records no miss");
     }
 
     #[test]

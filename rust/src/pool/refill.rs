@@ -76,14 +76,72 @@ struct TruncTarget {
     marks: WaterMarks,
 }
 
+/// One layer of a resident network's per-layer key vector, as the fill
+/// side sees it: the matrix position, the paired nonlinear position when
+/// the layer ends in a ReLU (hidden layers; the final layer is
+/// matmul-only), and the resident weight share the `⟨Γ⟩` correlations are
+/// generated against.
+#[derive(Clone)]
+pub struct LayerTarget {
+    pub key: CircuitKey,
+    pub relu: Option<CircuitKey>,
+    pub w: MMat<Z64>,
+}
+
+/// Restock a whole **per-layer key vector** as an atomic unit: every
+/// layer's `(mat, relu?)` queue pair is topped up to `target` stocked
+/// items, layer-major in gate order (layer 0's bundles first, then layer
+/// 1's, …) within one lockstep tick — nothing pops between the per-layer
+/// fills, so after the call [`crate::pool::Pool::layer_vec_stock`] over
+/// these keys reads ≥ `target` whole poppable vectors at all four parties.
+/// Paired layers fill through [`fill_mat_relu`] (mat and relu queues
+/// advance together); each underlying fill settles its own verification
+/// digests, so the tick leaves no offline digest for the next wave's
+/// flush. Returns what was generated.
+pub fn fill_layer_vec(
+    ctx: &mut Ctx,
+    layers: &[LayerTarget],
+    target: usize,
+) -> Result<RefillOutcome, Abort> {
+    assert!(ctx.has_pool(), "fill_layer_vec requires an attached pool");
+    let mut out = RefillOutcome::default();
+    for t in layers {
+        let stock = ctx.pool.as_ref().map_or(0, |p| match &t.relu {
+            Some(rk) => p.len_mat(&t.key).min(p.len_relu(rk)),
+            None => p.len_mat(&t.key),
+        });
+        if stock >= target {
+            continue;
+        }
+        let need = target - stock;
+        match &t.relu {
+            Some(rk) => {
+                fill_mat_relu(ctx, t.key, *rk, &t.w, need)?;
+                out.relu_items += need;
+            }
+            None => fill_mat(ctx, t.key, &t.w, need)?,
+        }
+        out.mat_items += need;
+    }
+    Ok(out)
+}
+
 /// The background refill producer: registered targets + cooperative
 /// [`Refill::tick`]. See the module docs for the state machine.
 #[derive(Default)]
 pub struct Refill {
     mat: Vec<MatTarget>,
+    /// Per-layer key vectors (deep resident networks), measured and
+    /// refilled in whole-vector units.
+    mat_vec: Vec<MatVecTarget>,
     trunc: Vec<TruncTarget>,
     lam_z64: Option<WaterMarks>,
     bitext: Option<WaterMarks>,
+}
+
+struct MatVecTarget {
+    layers: Vec<LayerTarget>,
+    marks: WaterMarks,
 }
 
 /// What one tick generated, per resource (all zero ⇒ every stock was at or
@@ -133,15 +191,25 @@ impl Refill {
         self.mat.push(MatTarget { key, relu: Some(relu), w, marks });
     }
 
+    /// Register a whole **per-layer key vector** (deep resident network):
+    /// the tick measures its stock in whole vectors (the min paired stock
+    /// across layers) and restocks atomically through [`fill_layer_vec`].
+    pub fn register_mat_vec(&mut self, layers: Vec<LayerTarget>, marks: WaterMarks) {
+        assert!(!layers.is_empty(), "a layer vector needs at least one layer");
+        self.mat_vec.push(MatVecTarget { layers, marks });
+    }
+
     /// Remove every registered matrix/ReLU target belonging to `model` —
     /// the refill leg of quarantine: a contained tenant's positions stop
     /// being topped up (and the pool's push guard would drop the items
-    /// anyway). Returns how many targets were deregistered. Lockstep-safe:
-    /// all four parties deregister from the same public wave metadata.
+    /// anyway). Returns how many targets were deregistered (a layer vector
+    /// counts as one). Lockstep-safe: all four parties deregister from the
+    /// same public wave metadata.
     pub fn deregister_model(&mut self, model: u64) -> usize {
-        let before = self.mat.len();
+        let before = self.mat.len() + self.mat_vec.len();
         self.mat.retain(|t| t.key.model != model);
-        before - self.mat.len()
+        self.mat_vec.retain(|t| t.layers[0].key.model != model);
+        before - self.mat.len() - self.mat_vec.len()
     }
 
     pub fn register_trunc(&mut self, shift: u32, marks: WaterMarks) {
@@ -181,6 +249,17 @@ impl Refill {
                     None => fill_mat(ctx, t.key, &t.w, need)?,
                 }
                 out.mat_items += need;
+            }
+        }
+        for t in &self.mat_vec {
+            // a layer vector's stock is whole poppable vectors: the min
+            // paired stock across its layers
+            let keys: Vec<_> = t.layers.iter().map(|l| (l.key, l.relu)).collect();
+            let stock = ctx.pool.as_ref().map_or(0, |p| p.layer_vec_stock(&keys));
+            if stock < t.marks.low {
+                let o = fill_layer_vec(ctx, &t.layers, t.marks.high)?;
+                out.mat_items += o.mat_items;
+                out.relu_items += o.relu_items;
             }
         }
         for t in &self.trunc {
@@ -265,6 +344,73 @@ mod tests {
             assert_eq!(*t3, 0, "at low mark exactly: no refill");
             assert_eq!(*t4, 2, "below low: top back up to high");
             assert_eq!(*left, 3);
+        }
+    }
+
+    #[test]
+    fn layer_vector_refills_atomically_in_whole_vector_units() {
+        use crate::pool::relu_key_for;
+        // 2-layer resident net, hidden layer ReLU-paired, output matmul-only
+        fn key(layer: u32) -> CircuitKey {
+            CircuitKey {
+                model: 11,
+                layer,
+                op: OpKind::MatMulTr { shift: FRAC_BITS },
+                rows: 1,
+                inner: 2,
+                cols: if layer == 0 { 2 } else { 1 },
+                dealer: P2,
+            }
+        }
+        let run = run_4pc(NetProfile::zero(), 812, move |ctx| {
+            let w0a = Matrix::from_fn(2, 2, |r, c| crate::ring::Z64(1 + (r + 2 * c) as u64));
+            let w0b = Matrix::from_fn(2, 1, |r, _| crate::ring::Z64(3 + r as u64));
+            let wa = crate::testutil::share_mat(ctx, P1, &w0a)?;
+            let wb = crate::testutil::share_mat(ctx, P1, &w0b)?;
+            ctx.attach_pool(Pool::new());
+            let rk = relu_key_for(&key(0));
+            let mut refill = Refill::new();
+            refill.register_mat_vec(
+                vec![
+                    LayerTarget { key: key(0), relu: Some(rk), w: wa },
+                    LayerTarget { key: key(1), relu: None, w: wb },
+                ],
+                WaterMarks::new(1, 2),
+            );
+            // cold pool: fill every layer to high (2 vectors)
+            let t1 = refill.tick(ctx)?;
+            let keys = vec![(key(0), Some(rk)), (key(1), None)];
+            let s1 = ctx.pool.as_ref().unwrap().layer_vec_stock(&keys);
+            // drain one whole vector in gate order (stock 1 = low: no-op)
+            {
+                let pool = ctx.pool_mut().unwrap();
+                pool.pop_mat(&key(0)).unwrap().expect("stocked");
+                pool.pop_relu(&rk).unwrap().expect("stocked");
+                pool.pop_mat(&key(1)).unwrap().expect("stocked");
+            }
+            let t2 = refill.tick(ctx)?;
+            // drain one MID-vector gate only: the vector count drops to 0
+            // (< low) and the tick must restore WHOLE vectors, not just the
+            // drained gate
+            ctx.pool_mut().unwrap().pop_mat(&key(1)).unwrap().expect("stocked");
+            let t3 = refill.tick(ctx)?;
+            let s3 = ctx.pool.as_ref().unwrap().layer_vec_stock(&keys);
+            ctx.flush_verify()?;
+            Ok((t1, t2, t3, s1, s3))
+        });
+        let (outs, _) = run.expect_ok();
+        for (t1, t2, t3, s1, s3) in &outs {
+            assert_eq!((t1.mat_items, t1.relu_items), (4, 2), "cold fill: 2 vectors × 2 layers");
+            assert_eq!(*s1, 2, "stock counts whole vectors");
+            assert_eq!(t2.total(), 0, "at the low mark exactly: no refill");
+            // layer 1 was drained to 0 (needs 2) while layer 0 still held 1
+            // (needs 1 paired bundle): the tick levels BOTH back to 2
+            assert_eq!(
+                (t3.mat_items, t3.relu_items),
+                (3, 1),
+                "mid-vector drain refills back to whole vectors: {t3:?}"
+            );
+            assert_eq!(*s3, 2);
         }
     }
 

@@ -32,7 +32,8 @@ pub use reconstruct::{
 };
 pub use sharing::{ash, share, share_mat_n, share_mat_with_mask, vsh};
 pub use trunc::{
-    matmul_tr, matmul_tr_keyed, matmul_tr_shift, mult_tr, mult_tr_many, trunc_pairs, TruncPair,
+    matmul_tr, matmul_tr_keyed, matmul_tr_keyed_shared, matmul_tr_shift, mult_tr, mult_tr_many,
+    trunc_pairs, TruncPair,
 };
 
 use crate::crypto::{HashAcc, Rng};

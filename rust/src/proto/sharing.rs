@@ -290,6 +290,52 @@ pub fn share_mat_with_mask<R: Ring>(
     })
 }
 
+/// Re-mask an **already-shared** matrix under a pre-drawn pooled wire mask
+/// (deep-circuit keyed path, layer ≥ 1): the input `[[A]]` carries an
+/// online-fresh mask `Λ_A`, but the pooled `⟨Γ⟩` of the next keyed matmul
+/// was pre-exchanged against the pooled `Λ_X` — so the evaluators **open
+/// the mask delta** `δ = Λ_X − Λ_A` among themselves (uniform: the pooled
+/// `Λ_X` is fresh and never revealed, so `δ` leaks nothing about `Λ_A` or
+/// the value) and shift the public part: `m' = m + δ`, `λ' = Λ_X`. One
+/// online round, `3·n` ring elements over the standard evaluator exchange
+/// cycle (receive from next, digest-vouch prev) — a tampered delta from
+/// either neighbour fails the digest check at flush, before any opened
+/// value releases. P0 swaps its component view for the skeleton's. **Zero
+/// offline traffic**, which is what keeps an N-layer warm keyed wave
+/// offline-silent past the first layer.
+pub(crate) fn remask_mat<R: Ring>(
+    ctx: &mut Ctx,
+    a: &MMat<R>,
+    skel: MMat<R>,
+) -> Result<MMat<R>, Abort> {
+    let me = ctx.id();
+    let (rows, cols) = a.dims();
+    assert_eq!(skel.dims(), (rows, cols), "re-mask skeleton shape");
+    let n = rows * cols;
+    ctx.online(|ctx| {
+        match (a, skel) {
+            // P0's view IS the mask components: just adopt the skeleton's
+            (MMat::Helper { .. }, h @ MMat::Helper { .. }) => Ok(h),
+            (
+                MMat::Eval { m, lam_next, lam_prev },
+                MMat::Eval { lam_next: skel_next, lam_prev: skel_prev, .. },
+            ) => {
+                // δ_j = Λ_{X,j} − Λ_{A,j} for my two held components
+                let d_next = &skel_next - lam_next;
+                let d_prev = &skel_prev - lam_prev;
+                ctx.send_ring(me.prev_evaluator(), d_prev.data());
+                ctx.vouch_ring(me.next_evaluator(), d_next.data());
+                let missing: Vec<R> = ctx.recv_ring(me.next_evaluator(), n)?;
+                ctx.expect_ring(me.prev_evaluator(), &missing);
+                let missing = Matrix::from_vec(rows, cols, missing);
+                let m_new = &(&(m + &d_next) + &d_prev) + &missing;
+                Ok(MMat::Eval { m: m_new, lam_next: skel_next, lam_prev: skel_prev })
+            }
+            _ => unreachable!("share roles are fixed per party"),
+        }
+    })
+}
+
 /// `Π_aSh(P0, v)` — P0 deals a ⟨·⟩-sharing in the offline phase (Fig. 2).
 /// `v` is `Some` only at P0. Comm: 2ℓ bits, 1 round (offline).
 pub fn ash<R: Ring>(ctx: &mut Ctx, v: Option<R>) -> Result<RShare<R>, Abort> {

@@ -339,6 +339,38 @@ pub fn matmul_tr_keyed(
     }
 }
 
+/// [`matmul_tr_keyed`] for an **already-shared** input — the deep-circuit
+/// serving path (layer ≥ 1 of a resident network, whose input is the
+/// previous layer's output rather than a dealer-held clear matrix). A hit
+/// re-masks `[[A]]` under the bundle's pooled wire mask
+/// ([`super::sharing::remask_mat`]: the evaluators open the uniform mask
+/// delta `Λ_X − Λ_A` online) and runs the pre-exchanged `⟨Γ⟩` online
+/// protocol — **zero offline-phase messages**, exactly like the first
+/// layer. A miss falls back to the inline [`matmul_tr_shift`] directly on
+/// `[[A]]` (no re-share needed); the pop decision is lockstep, so the
+/// fallback is deterministic. Wrong-keyed front material fails closed.
+pub fn matmul_tr_keyed_shared(
+    ctx: &mut Ctx,
+    key: &CircuitKey,
+    a: &MMat<Z64>,
+    y: &MMat<Z64>,
+) -> Result<MMat<Z64>, Abort> {
+    let shift = match key.op {
+        OpKind::MatMulTr { shift } => shift,
+        _ => panic!("matmul_tr_keyed_shared requires an OpKind::MatMulTr key"),
+    };
+    assert_eq!((key.inner, key.cols), y.dims(), "resident Y must match the key shape");
+    assert_eq!((key.rows, key.inner), a.dims(), "shared input must match the key shape");
+    match pop_keyed(ctx, key)? {
+        Some(item) => {
+            let MatCorr { lam_x, gamma, pairs, .. } = item;
+            let x = super::sharing::remask_mat(ctx, a, lam_x)?;
+            matmul_tr_online(ctx, &x, y, &gamma, &pairs, shift)
+        }
+        None => matmul_tr_shift(ctx, a, y, shift),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

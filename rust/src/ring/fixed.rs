@@ -52,9 +52,13 @@ impl FixedPoint {
         v.truncate(FRAC_BITS)
     }
 
-    /// Largest decimal magnitude exactly representable.
+    /// Largest decimal magnitude the `Q50.13` embedding can hold: `2^50`
+    /// (the sign bit plus 50 integer bits plus 13 fractional bits fill the
+    /// 64-bit ring). `−2^50` is exactly representable by two's-complement
+    /// asymmetry; `+2^50` encodes one ulp below the sign boundary. Anything
+    /// larger wraps.
     pub fn max_magnitude() -> f64 {
-        ((1u64 << 62) as f64) / SCALE
+        ((1u64 << 62) as f64) * 2.0 / SCALE
     }
 }
 
@@ -89,6 +93,23 @@ mod tests {
             let tol = (a.abs() + b.abs() + 2.0) * 0.5 / SCALE + 1.0 / SCALE;
             assert!((dec - a * b).abs() < tol, "{a}*{b}: got {dec}, want {}", a * b);
         }
+    }
+
+    #[test]
+    fn max_magnitude_is_the_full_q50_13_envelope() {
+        // regression: this used to report 2^49 — half the documented range
+        let m = FixedPoint::max_magnitude();
+        assert_eq!(m, (1u64 << 50) as f64);
+        // encode(+max) stays out of the sign bit and round-trips to within
+        // one ulp (the positive side tops out one ulp below 2^50)
+        let enc = FixedPoint::encode(m);
+        assert!(!enc.msb().0, "encode(max_magnitude) must not wrap into the sign bit");
+        assert!((FixedPoint::decode(enc) - m).abs() <= 1.0 / SCALE);
+        // −max is exactly representable (two's-complement asymmetry)
+        assert_eq!(FixedPoint::decode(FixedPoint::encode(-m)), -m);
+        // 2·max does NOT fit: the embedding cannot represent it
+        let over = FixedPoint::decode(FixedPoint::encode(2.0 * m));
+        assert!((over - 2.0 * m).abs() > m / 2.0, "2·max_magnitude must not round-trip");
     }
 
     #[test]

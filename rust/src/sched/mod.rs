@@ -54,5 +54,6 @@ pub mod registry;
 pub use planner::WavePlanner;
 pub use queue::{SchedQueue, SchedQueueStats, SchedQuery};
 pub use registry::{
-    tenant_relu_key, tenant_wave_key, tenant_weights, ModelRegistry, ResidentModel, TenantSpec,
+    tenant_layer_key, tenant_layer_weights, tenant_relu_key, tenant_wave_key, tenant_weights,
+    ModelRegistry, ResidentModel, TenantLayer, TenantSpec,
 };

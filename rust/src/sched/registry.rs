@@ -20,7 +20,8 @@ use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, P1, P2};
 use crate::pool::{
-    fill_mat, fill_mat_relu, relu_key_for, CircuitKey, OpKind, Refill, RefillOutcome, WaterMarks,
+    fill_layer_vec, relu_key_for, CircuitKey, LayerTarget, OpKind, Refill, RefillOutcome,
+    WaterMarks,
 };
 use crate::proto::Ctx;
 use crate::ring::fixed::FRAC_BITS;
@@ -61,6 +62,14 @@ pub struct TenantSpec {
     pub arrive_per_tick: usize,
     /// Apply a batched ReLU after the linear layer.
     pub relu: bool,
+    /// Hidden/output widths of a **deep resident network**: a tenant with
+    /// `layers = [h1, …, out]` serves the N-layer forward pass
+    /// `d → h1 → … → out` with ReLU on every hidden layer (the final layer
+    /// is linear). Empty = the legacy single linear layer `d → 1` (with
+    /// `relu` optionally gating its output). Each layer gets its own
+    /// circuit key (`CircuitKey::layer` = position), and a warm wave pops
+    /// one whole per-layer bundle vector.
+    pub layers: Vec<usize>,
     /// Seed for this tenant's deterministic weights/queries.
     pub seed: u64,
 }
@@ -81,8 +90,61 @@ impl TenantSpec {
             inflight_cap: None,
             arrive_per_tick: 0,
             relu: false,
+            layers: Vec::new(),
             seed: 0x7465_6e61 ^ model,
         }
+    }
+
+    /// Whether this tenant is a deep resident network (≥ 1 hidden layer)
+    /// rather than the legacy single linear layer.
+    pub fn is_deep(&self) -> bool {
+        !self.layers.is_empty()
+    }
+
+    /// Wire widths of the resident network, input first: `[d, h1, …, out]`
+    /// for a deep tenant, `[d, 1]` for the legacy single layer.
+    pub fn layer_dims(&self) -> Vec<usize> {
+        let mut dims = vec![self.d];
+        if self.layers.is_empty() {
+            dims.push(1);
+        } else {
+            dims.extend_from_slice(&self.layers);
+        }
+        dims
+    }
+
+    /// Number of matrix gates in the forward pass.
+    pub fn depth(&self) -> usize {
+        self.layer_dims().len() - 1
+    }
+
+    /// Output width of the network (1 for the legacy single layer).
+    pub fn out_cols(&self) -> usize {
+        *self.layer_dims().last().expect("at least two dims")
+    }
+
+    /// Whether layer `l`'s matmul feeds a ReLU: every hidden layer of a
+    /// deep network does (the final layer is linear); the legacy single
+    /// layer follows the tenant's `relu` flag.
+    pub fn layer_relu(&self, l: usize) -> bool {
+        if self.is_deep() {
+            l + 1 < self.depth()
+        } else {
+            self.relu
+        }
+    }
+
+    /// The whole **per-layer key vector** of a wave of `rows` stacked
+    /// rows: one `(mat, relu?)` circuit-key pair per layer, gate order.
+    /// This is the unit the pool pops ([`crate::pool::Pool::check_layer_vec`])
+    /// and the refill restocks atomically.
+    pub fn layer_keys(&self, rows: usize) -> Vec<(CircuitKey, Option<CircuitKey>)> {
+        (0..self.depth())
+            .map(|l| {
+                let mk = tenant_layer_key(self, rows, l);
+                (mk, self.layer_relu(l).then(|| relu_key_for(&mk)))
+            })
+            .collect()
     }
 
     /// The coalescing factor real waves can reach (`coalesce` capped by the
@@ -148,20 +210,32 @@ impl TenantSpec {
     }
 }
 
-/// The circuit key of tenant `spec`'s linear layer for a wave of `rows`
-/// stacked feature rows. A trailing partial wave keys differently from
+/// The circuit key of layer `layer` of tenant `spec`'s resident network
+/// for a wave of `rows` stacked rows: `rows × dims[layer]` input against
+/// the resident `dims[layer] × dims[layer+1]` weight. The `layer` field of
+/// the key IS the gate position, so two layers of one model (or one layer
+/// of two models) can never alias in the pool.
+pub fn tenant_layer_key(spec: &TenantSpec, rows: usize, layer: usize) -> CircuitKey {
+    let dims = spec.layer_dims();
+    assert!(layer + 1 < dims.len(), "layer {layer} out of range");
+    CircuitKey {
+        model: spec.model,
+        layer: layer as u32,
+        op: OpKind::MatMulTr { shift: FRAC_BITS },
+        rows,
+        inner: dims[layer],
+        cols: dims[layer + 1],
+        dealer: P2,
+    }
+}
+
+/// The circuit key of tenant `spec`'s **first** linear layer for a wave of
+/// `rows` stacked feature rows (= the whole pipeline for a legacy
+/// single-layer tenant). A trailing partial wave keys differently from
 /// [`TenantSpec::key`] — its key is registered separately at load
 /// ([`TenantSpec::partial_key`]) so it hits the pool like any full wave.
 pub fn tenant_wave_key(spec: &TenantSpec, rows: usize) -> CircuitKey {
-    CircuitKey {
-        model: spec.model,
-        layer: 0,
-        op: OpKind::MatMulTr { shift: FRAC_BITS },
-        rows,
-        inner: spec.d,
-        cols: 1,
-        dealer: P2,
-    }
+    tenant_layer_key(spec, rows, 0)
 }
 
 /// The nonlinear circuit key of tenant `spec`'s wave of `rows` stacked
@@ -181,23 +255,72 @@ pub fn tenant_weights(d: usize, seed: u64) -> F64Mat {
     w
 }
 
-/// One loaded resident model: spec + shared weights + registered key +
-/// private refill producer.
+/// Deterministic per-layer resident weights for a tenant (at the model
+/// owner), gate order. A legacy tenant gets exactly its historical
+/// [`tenant_weights`] matrix as the single layer; deep layers draw from a
+/// per-layer domain-separated stream, scaled by `1/√fan_in` so Q·.13
+/// activations stay in range through the stack.
+pub fn tenant_layer_weights(spec: &TenantSpec) -> Vec<F64Mat> {
+    if !spec.is_deep() {
+        return vec![tenant_weights(spec.d, spec.seed)];
+    }
+    let dims = spec.layer_dims();
+    (0..spec.depth())
+        .map(|l| {
+            let mut rng = Rng::seeded(spec.seed ^ TW_SEED ^ (((l + 1) as u64) << 32));
+            let (inn, out) = (dims[l], dims[l + 1]);
+            let scale = 0.5 / (inn as f64).sqrt();
+            let mut w = F64Mat::zeros(inn, out);
+            for i in 0..inn {
+                for j in 0..out {
+                    w.set(i, j, rng.normal() * scale);
+                }
+            }
+            w
+        })
+        .collect()
+}
+
+/// One layer of a loaded resident model: the shared weight block plus the
+/// registered circuit keys of its full-wave and (for an uneven workload)
+/// trailing-partial-wave positions.
+pub struct TenantLayer {
+    /// The layer's shared resident weights (`dims[l] × dims[l+1]`).
+    pub w: MMat<Z64>,
+    /// The full-wave matrix key at this gate position.
+    pub key: CircuitKey,
+    /// The paired nonlinear key when this layer feeds a ReLU.
+    pub relu_key: Option<CircuitKey>,
+    /// The trailing partial wave's matrix key (uneven workloads only).
+    pub partial_key: Option<CircuitKey>,
+    /// The partial wave's paired nonlinear key.
+    pub partial_relu_key: Option<CircuitKey>,
+}
+
+/// One loaded resident model: spec + per-layer shared weights/keys +
+/// private refill producer. The legacy single-layer fields (`w`, `key`,
+/// `relu_key`, `partial_key`, `partial_relu_key`) mirror `layers[0]` so
+/// single-layer call sites read exactly as before.
 pub struct ResidentModel {
     pub spec: TenantSpec,
-    /// The tenant's shared resident weights (`d × 1`).
+    /// The first layer's shared resident weights (`d × dims[1]`) —
+    /// mirror of `layers[0].w`.
     pub w: MMat<Z64>,
-    /// The registered full-wave circuit key.
+    /// The registered full-wave circuit key of the first layer.
     pub key: CircuitKey,
-    /// The paired full-wave nonlinear key (`relu: true` tenants): the
-    /// tick fills `MatCorr`+`ReluCorr` bundles in lockstep pairs.
+    /// The paired full-wave nonlinear key of the first layer.
     pub relu_key: Option<CircuitKey>,
-    /// The trailing partial wave's circuit key, when the workload does not
-    /// divide evenly — stocked exactly once at warm-up
-    /// ([`ModelRegistry::warm_partial`]), never refilled between waves.
+    /// The trailing partial wave's first-layer circuit key, when the
+    /// workload does not divide evenly — the whole partial layer vector is
+    /// stocked exactly once at warm-up ([`ModelRegistry::warm_partial`]),
+    /// never refilled between waves.
     pub partial_key: Option<CircuitKey>,
-    /// The partial wave's paired nonlinear key (`relu: true` tenants).
+    /// The partial wave's paired first-layer nonlinear key.
     pub partial_relu_key: Option<CircuitKey>,
+    /// The whole resident network, gate order: shared weights plus
+    /// registered keys per layer. `layers.len() == spec.depth()`; a legacy
+    /// tenant has exactly one entry.
+    pub layers: Vec<TenantLayer>,
     /// Quarantined after a tenant-scoped abort: refill ticks become no-ops
     /// and the depletion steering skips the tenant.
     quarantined: bool,
@@ -210,6 +333,41 @@ impl ResidentModel {
     /// clamped to the tenant's total full-wave demand at load).
     pub fn marks(&self) -> WaterMarks {
         self.marks
+    }
+
+    /// The full-wave per-layer key vector, gate order — the unit the pool
+    /// pops ([`crate::pool::Pool::check_layer_vec`]) and restocks.
+    pub fn layer_keys(&self) -> Vec<(CircuitKey, Option<CircuitKey>)> {
+        self.layers.iter().map(|l| (l.key, l.relu_key)).collect()
+    }
+
+    /// The full-wave refill targets, gate order.
+    pub fn layer_targets(&self) -> Vec<LayerTarget> {
+        self.layers
+            .iter()
+            .map(|l| LayerTarget { key: l.key, relu: l.relu_key, w: l.w.clone() })
+            .collect()
+    }
+
+    /// The trailing-partial-wave per-layer key vector (empty when the
+    /// workload divides evenly).
+    pub fn partial_layer_keys(&self) -> Vec<(CircuitKey, Option<CircuitKey>)> {
+        self.layers
+            .iter()
+            .filter_map(|l| l.partial_key.map(|pk| (pk, l.partial_relu_key)))
+            .collect()
+    }
+
+    /// The trailing-partial-wave refill targets (empty when the workload
+    /// divides evenly).
+    pub fn partial_layer_targets(&self) -> Vec<LayerTarget> {
+        self.layers
+            .iter()
+            .filter_map(|l| {
+                l.partial_key
+                    .map(|pk| LayerTarget { key: pk, relu: l.partial_relu_key, w: l.w.clone() })
+            })
+            .collect()
     }
 }
 
@@ -242,13 +400,14 @@ impl ModelRegistry {
     }
 
     /// Load one resident model (lockstep at all four parties, same tenant
-    /// order everywhere): P1 contributes the deterministic weights, and the
-    /// tenant's full-wave circuit key is registered with a private refill
-    /// producer at `{low, high}` water marks (keyed-matrix bundles; plus
-    /// scaled bit-extraction material when the tenant's pipeline ends in a
-    /// ReLU). Returns the tenant index. The caller must flush verification
-    /// after the last `load`, before any pool fill runs against the
-    /// weights.
+    /// order everywhere): P1 contributes the deterministic per-layer
+    /// weights, every layer is shared and registered under its own circuit
+    /// key (`CircuitKey::layer` = gate position), and the tenant's refill
+    /// runs on whole layer vectors at `{low, high}` water marks
+    /// (keyed-matrix bundles; plus scaled bit-extraction material for every
+    /// layer that feeds a ReLU). Returns the tenant index. The caller must
+    /// flush verification after the last `load`, before any pool fill runs
+    /// against the weights.
     pub fn load(
         &mut self,
         ctx: &mut Ctx,
@@ -265,12 +424,27 @@ impl ModelRegistry {
             "duplicate tenant model id {}: per-tenant pool sharding requires a unique CircuitKey::model per resident model",
             spec.model
         );
-        let w0 = (ctx.id() == P1).then(|| tenant_weights(spec.d, spec.seed));
-        let w = share_fixed_mat(ctx, P1, w0.as_ref(), spec.d, 1)?;
-        let key = spec.key();
-        let relu_key = spec.relu_key();
-        let partial_key = spec.partial_key();
-        let partial_relu_key = spec.partial_relu_key();
+        let dims = spec.layer_dims();
+        let rows = spec.wave_rows();
+        let prows = spec.partial_rows();
+        let weights0 = (ctx.id() == P1).then(|| tenant_layer_weights(&spec));
+        let mut layers = Vec::with_capacity(spec.depth());
+        for l in 0..spec.depth() {
+            let w0_l = weights0.as_ref().map(|ws| &ws[l]);
+            let w = share_fixed_mat(ctx, P1, w0_l, dims[l], dims[l + 1])?;
+            let key = tenant_layer_key(&spec, rows, l);
+            let relu_key = spec.layer_relu(l).then(|| relu_key_for(&key));
+            let partial_key = prows.map(|pr| tenant_layer_key(&spec, pr, l));
+            let partial_relu_key = partial_key
+                .filter(|_| spec.layer_relu(l))
+                .map(|pk| relu_key_for(&pk));
+            layers.push(TenantLayer { w, key, relu_key, partial_key, partial_relu_key });
+        }
+        let w = layers[0].w.clone();
+        let key = layers[0].key;
+        let relu_key = layers[0].relu_key;
+        let partial_key = layers[0].partial_key;
+        let partial_relu_key = layers[0].partial_relu_key;
         // clamp the high-water mark to the tenant's total full-wave demand
         // so neither the warm-up fill nor a steady-state top-up can stock
         // more bundles than real waves will ever pop (the trailing partial
@@ -295,6 +469,7 @@ impl ModelRegistry {
             relu_key,
             partial_key,
             partial_relu_key,
+            layers,
             quarantined: false,
             marks,
             refill,
@@ -302,30 +477,23 @@ impl ModelRegistry {
         Ok(self.models.len() - 1)
     }
 
-    /// Stock tenant `t`'s trailing-partial-wave position with exactly one
-    /// bundle (paired with its ReLU for `relu: true` tenants). Called once
-    /// during warm-up; a no-op for tenants whose workload divides evenly,
-    /// whose partial position is already stocked, or who are quarantined.
+    /// Stock tenant `t`'s trailing-partial-wave positions with exactly one
+    /// whole layer-vector bundle (every layer's matrix bundle, paired with
+    /// its ReLU where the layer feeds one). Called once during warm-up; a
+    /// no-op for tenants whose workload divides evenly, whose partial
+    /// vector is already stocked, or who are quarantined.
     /// Lockstep-deterministic like every fill.
     pub fn warm_partial(&self, ctx: &mut Ctx, t: usize) -> Result<RefillOutcome, Abort> {
         let m = &self.models[t];
-        let mut out = RefillOutcome::default();
-        let pk = match (&m.partial_key, m.quarantined) {
-            (Some(pk), false) => *pk,
-            _ => return Ok(out),
-        };
-        if ctx.pool.as_ref().map_or(0, |p| p.len_mat(&pk)) > 0 {
-            return Ok(out);
+        if m.quarantined || m.partial_key.is_none() {
+            return Ok(RefillOutcome::default());
         }
-        match &m.partial_relu_key {
-            Some(rk) => {
-                fill_mat_relu(ctx, pk, *rk, &m.w, 1)?;
-                out.relu_items = 1;
-            }
-            None => fill_mat(ctx, pk, &m.w, 1)?,
+        let targets = m.partial_layer_targets();
+        let keys = m.partial_layer_keys();
+        if ctx.pool.as_ref().map_or(0, |p| p.layer_vec_stock(&keys)) > 0 {
+            return Ok(RefillOutcome::default());
         }
-        out.mat_items = 1;
-        Ok(out)
+        fill_layer_vec(ctx, &targets, 1)
     }
 
     /// Quarantine tenant `t` after a tenant-scoped abort: its refill ticks
@@ -367,18 +535,15 @@ impl ModelRegistry {
             // the generation traffic entirely
             return Ok(out);
         }
-        let stock = ctx.pool.as_ref().map_or(0, |p| Self::paired_stock(p, m));
+        let stock = ctx.pool.as_ref().map_or(0, |p| Self::vec_stock(p, m));
         if stock < m.marks.low {
             let need = (m.marks.high - stock).min(max_mat.saturating_sub(stock));
             if need > 0 {
-                match &m.relu_key {
-                    Some(rk) => {
-                        fill_mat_relu(ctx, m.key, *rk, &m.w, need)?;
-                        out.relu_items = need;
-                    }
-                    None => fill_mat(ctx, m.key, &m.w, need)?,
-                }
-                out.mat_items = need;
+                // layer-major atomic top-up: every layer position reaches
+                // `stock + need` whole vectors before the tick returns
+                let o = fill_layer_vec(ctx, &m.layer_targets(), stock + need)?;
+                out.mat_items = o.mat_items;
+                out.relu_items = o.relu_items;
             }
         }
         let rest = m.refill.tick(ctx)?;
@@ -388,15 +553,12 @@ impl ModelRegistry {
         Ok(out)
     }
 
-    /// The tenant's poppable keyed stock: matrix bundles, paired with the
-    /// nonlinear bundles for a ReLU tenant (the min keeps the refill state
-    /// machine safe under any skew, though paired fills/pops keep the two
-    /// queues equal by construction).
-    fn paired_stock(pool: &crate::pool::Pool, m: &ResidentModel) -> usize {
-        match &m.relu_key {
-            Some(rk) => pool.len_mat(&m.key).min(pool.len_relu(rk)),
-            None => pool.len_mat(&m.key),
-        }
+    /// The tenant's poppable keyed stock in whole layer-vector units: the
+    /// min across every layer position of the paired matrix/nonlinear
+    /// stock (the min keeps the refill state machine safe under any skew,
+    /// though vector fills/pops keep the queues equal by construction).
+    fn vec_stock(pool: &crate::pool::Pool, m: &ResidentModel) -> usize {
+        pool.layer_vec_stock(&m.layer_keys())
     }
 
     /// The most-depleted tenant pool among `eligible` tenants: largest
@@ -412,7 +574,7 @@ impl ModelRegistry {
             if !eligible.get(t).copied().unwrap_or(false) || m.quarantined {
                 continue;
             }
-            let stock = ctx.pool.as_ref().map_or(0, |p| Self::paired_stock(p, m));
+            let stock = ctx.pool.as_ref().map_or(0, |p| Self::vec_stock(p, m));
             let deficit = m.marks.low.saturating_sub(stock);
             if deficit == 0 {
                 continue;
@@ -645,5 +807,98 @@ mod tests {
         }
         // registry loading + refill generation is offline-silent online
         assert!(report.value_bits[0] > 0, "fills are offline traffic");
+    }
+
+    fn deep_spec(name: &str, model: u64) -> TenantSpec {
+        let mut s = TenantSpec::new(name, model, 4, 4, 2);
+        s.layers = vec![8, 8, 2];
+        s
+    }
+
+    #[test]
+    fn deep_spec_keys_cover_every_layer_in_gate_order() {
+        let s = deep_spec("nn3", 61);
+        assert!(s.is_deep());
+        assert_eq!(s.layer_dims(), vec![4, 8, 8, 2]);
+        assert_eq!(s.depth(), 3);
+        assert_eq!(s.out_cols(), 2);
+        let dims = s.layer_dims();
+        let keys = s.layer_keys(2);
+        assert_eq!(keys.len(), 3);
+        for (l, (mk, rk)) in keys.iter().enumerate() {
+            assert_eq!(mk.layer, l as u32, "the key layer IS the gate position");
+            assert_eq!(mk.rows, 2);
+            assert_eq!((mk.inner, mk.cols), (dims[l], dims[l + 1]));
+            assert_eq!(rk.is_some(), l + 1 < 3, "hidden layers pair a ReLU; the head is linear");
+        }
+        let ws = tenant_layer_weights(&s);
+        assert_eq!(ws.len(), 3);
+        assert_eq!((ws[1].rows, ws[1].cols), (8, 8));
+        // legacy spec: one layer, identical to the historical wave key
+        let leg = spec("m1", 62, 5);
+        assert_eq!(leg.layer_keys(leg.wave_rows()), vec![(leg.key(), None)]);
+        assert_eq!(tenant_layer_weights(&leg)[0].data, tenant_weights(5, leg.seed).data);
+    }
+
+    #[test]
+    fn deep_tenant_refills_and_steers_in_whole_layer_vector_units() {
+        let run = run_4pc(NetProfile::zero(), 916, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let s = {
+                let mut s = TenantSpec::new("nn", 71, 3, 4, 2);
+                s.layers = vec![4, 2];
+                s
+            };
+            let t = reg.load(ctx, s, 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            let o = reg.tick(ctx, t, 8)?;
+            // 2 vectors × 2 matrix layers; only the hidden layer pairs ReLU
+            assert_eq!((o.mat_items, o.relu_items), (4, 2), "cold fill in vector units");
+            let keys = reg.model(t).layer_keys();
+            assert_eq!(ctx.pool.as_ref().unwrap().layer_vec_stock(&keys), 2);
+            // drain ONLY the head layer's matrix queue → vector stock 0
+            let head = keys[1].0;
+            let _ = ctx.pool_mut().unwrap().pop_mat(&head).unwrap().expect("stocked");
+            let _ = ctx.pool_mut().unwrap().pop_mat(&head).unwrap().expect("stocked");
+            assert_eq!(ctx.pool.as_ref().unwrap().layer_vec_stock(&keys), 0);
+            assert_eq!(reg.most_depleted(ctx, &[true]), Some(t), "vector stock steers depletion");
+            let o = reg.tick(ctx, t, 8)?;
+            assert_eq!((o.mat_items, o.relu_items), (2, 0), "top-up fills the short layer only");
+            let pool = ctx.detach_pool().unwrap();
+            Ok(pool.layer_vec_stock(&keys))
+        });
+        let (outs, _) = run.expect_ok();
+        for s in &outs {
+            assert_eq!(*s, 2, "whole vectors restored");
+        }
+    }
+
+    #[test]
+    fn deep_partial_wave_warms_the_whole_layer_vector_once() {
+        let run = run_4pc(NetProfile::zero(), 917, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let s = {
+                let mut s = TenantSpec::new("nn", 81, 3, 5, 2);
+                s.layers = vec![4, 2];
+                s
+            };
+            let t = reg.load(ctx, s, 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            let o1 = reg.warm_partial(ctx, t)?;
+            let o2 = reg.warm_partial(ctx, t)?;
+            let pkeys = reg.model(t).partial_layer_keys();
+            assert_eq!(pkeys.len(), 2);
+            assert_eq!(pkeys[0].0.rows, 1, "partial wave stacks the 1 leftover query");
+            let pool = ctx.pool.as_ref().unwrap();
+            Ok((o1.mat_items, o1.relu_items, o2.total(), pool.layer_vec_stock(&pkeys)))
+        });
+        let (outs, _) = run.expect_ok();
+        for (m1, r1, t2, st) in &outs {
+            assert_eq!((*m1, *r1), (2, 1), "every partial position stocked, hidden ReLU paired");
+            assert_eq!(*t2, 0, "second warm-up is a no-op");
+            assert_eq!(*st, 1);
+        }
     }
 }

@@ -51,10 +51,16 @@
 //! the [`crate::sched`] subsystem (model registry with per-tenant keyed
 //! pools, deadline/priority queue, weighted-round-robin wave planner with
 //! most-depleted refill steering) decides whose wave runs next, and each
-//! wave executes the per-model pipeline above. With containment enabled,
-//! a keyed wave that aborts is scoped over a four-party outcome barrier:
-//! the poisoned tenant is quarantined and everyone else keeps being
-//! served (see [`multi`] and the abort-scoping contract in [`crate::net`]).
+//! wave executes the per-model pipeline above — generalized to **deep
+//! resident networks**: a tenant registered with hidden layers carries one
+//! keyed bundle pair per gate (`CircuitKey::layer` = position), a warm
+//! wave pops the whole per-layer vector all-or-nothing and runs
+//! share → L×(keyed matmul → hidden ReLU) → reconstruct offline-silent at
+//! every gate ([`crate::ml::nn::forward_keyed`]). With containment
+//! enabled, a keyed wave that aborts is scoped over a four-party outcome
+//! barrier: the poisoned tenant is quarantined — all of its layer shards
+//! drained as whole vectors — and everyone else keeps being served (see
+//! [`multi`] and the abort-scoping contract in [`crate::net`]).
 
 pub mod multi;
 

@@ -16,12 +16,17 @@
 //! Everything the scheduler decides is driven by logical ticks and public
 //! metadata — lockstep-deterministic across the four party threads (the
 //! [`crate::sched`] module docs explain why wall-clock is banned here).
-//! Per-wave protocol execution is exactly the single-tenant path: stack
-//! the batch, one `Π_MatMulTr` against that tenant's resident weights
-//! (keyed bundle on a hit — the trailing partial wave has its own key,
-//! registered at load and warmed once — deterministic inline fallback on
-//! a miss), optional batched ReLU, verified reconstruction towards the
-//! data owner.
+//! Per-wave protocol execution runs the tenant's **whole resident
+//! network**: stack the batch, then one `Π_MatMulTr` per layer against
+//! that layer's resident weights — hidden layers ReLU-activated, the
+//! head linear — and verified reconstruction towards the data owner. A
+//! keyed wave pops the tenant's **per-layer bundle vector** all-or-
+//! nothing: every gate's paired bundle must be in stock (the trailing
+//! partial wave has its own per-layer vector, registered at load and
+//! warmed once), else the entire wave takes the deterministic inline
+//! fallback — layer ℓ ≥ 1 re-masks the shared activation under the
+//! popped `Λ_X` via the δ-open of [`crate::proto::sharing::remask_mat`],
+//! so a warm deep wave is offline-silent at every gate.
 //!
 //! With `containment: true`, every keyed wave body is wrapped in the
 //! abort-blast-radius boundary: on a failure the four parties agree over
@@ -40,15 +45,16 @@
 //! `offline_msgs_matmul` / `offline_msgs_relu` attribute the claim).
 
 use crate::crypto::Rng;
+use crate::ml::nn::forward_keyed;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, PartyId, Phase, P2};
-use crate::pool::{Pool, PoolStats};
-use crate::proto::{matmul_tr, matmul_tr_keyed, run_4pc, Ctx};
+use crate::pool::{relu_key_for, Pool, PoolStats};
+use crate::proto::{matmul_tr, run_4pc, Ctx};
 use crate::ring::fixed::FixedPoint;
 use crate::ring::{Matrix, Z64};
 use crate::sched::{
-    tenant_relu_key, tenant_wave_key, tenant_weights, ModelRegistry, SchedQueue, SchedQueueStats,
-    SchedQuery, TenantSpec, WavePlanner,
+    tenant_layer_key, tenant_layer_weights, ModelRegistry, SchedQueue, SchedQueueStats, SchedQuery,
+    TenantSpec, WavePlanner,
 };
 use super::PoolMode;
 
@@ -122,6 +128,10 @@ pub struct FaultPlan {
     pub party: PartyId,
     pub tenant: usize,
     pub wave: usize,
+    /// Which gate position's bundle the tamper hits: the 0-based layer
+    /// index into the tenant's per-layer key vector (always `0` for
+    /// single-layer tenants). Irrelevant for [`FaultKind::AbortOffWave`].
+    pub layer: u32,
     pub kind: FaultKind,
 }
 
@@ -164,24 +174,29 @@ pub fn tenant_query_stream(spec: &TenantSpec) -> Vec<F64Mat> {
         .collect()
 }
 
-/// Cleartext reference per tenant: one `Vec<f64>` of row predictions per
-/// query, in query-id order (test oracle).
+/// Cleartext reference per tenant: one `Vec<f64>` per query, in query-id
+/// order (test oracle). Each entry is the query's `rows_per_query ×
+/// out_cols` output block flattened row-major — for legacy single-layer
+/// tenants (`out_cols == 1`) that degenerates to the familiar vector of
+/// row predictions. Deep tenants run the whole resident network: every
+/// hidden layer ReLU-activated, the head linear.
 pub fn cleartext_tenant_predictions(spec: &TenantSpec) -> Vec<Vec<f64>> {
-    let w = tenant_weights(spec.d, spec.seed);
+    let ws = tenant_layer_weights(spec);
     tenant_query_stream(spec)
         .iter()
         .map(|x| {
-            let u = x.matmul(&w);
-            (0..spec.rows_per_query)
-                .map(|r| {
-                    let v = u.at(r, 0);
-                    if spec.relu && v < 0.0 {
-                        0.0
-                    } else {
-                        v
+            let mut a = x.clone();
+            for (l, w) in ws.iter().enumerate() {
+                a = a.matmul(w);
+                if spec.layer_relu(l) {
+                    for v in a.data.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
                     }
-                })
-                .collect()
+                }
+            }
+            a.data
         })
         .collect()
 }
@@ -200,6 +215,10 @@ struct MultiPartyOut {
     /// sub-windows — attributes the silence claim per op.
     wave_offline_msgs_mat: Vec<u64>,
     wave_offline_msgs_relu: Vec<u64>,
+    /// The same two meters resolved per layer (gate order; length = the
+    /// wave tenant's depth) — attributes the silence claim per gate.
+    wave_offline_msgs_mat_layers: Vec<Vec<u64>>,
+    wave_offline_msgs_relu_layers: Vec<Vec<u64>>,
     /// Whether the wave drained a keyed bundle (vs inline fallback).
     wave_keyed_hit: Vec<bool>,
     /// Whether the wave was a trailing partial batch (fewer queries than
@@ -223,6 +242,9 @@ struct MultiPartyOut {
     pool_stats: Option<PoolStats>,
     pool_left_mat: Vec<usize>,
     pool_left_relu: Vec<usize>,
+    /// Shutdown stock resolved per layer shard (empty in inline mode).
+    pool_left_mat_layers: Vec<Vec<usize>>,
+    pool_left_relu_layers: Vec<Vec<usize>>,
 }
 
 impl MultiPartyOut {
@@ -235,6 +257,8 @@ impl MultiPartyOut {
             wave_offline_bytes: Vec::new(),
             wave_offline_msgs_mat: Vec::new(),
             wave_offline_msgs_relu: Vec::new(),
+            wave_offline_msgs_mat_layers: Vec::new(),
+            wave_offline_msgs_relu_layers: Vec::new(),
             wave_keyed_hit: Vec::new(),
             wave_partial: Vec::new(),
             wave_sojourn: Vec::new(),
@@ -248,6 +272,8 @@ impl MultiPartyOut {
             pool_stats: None,
             pool_left_mat: vec![0; nt],
             pool_left_relu: vec![0; nt],
+            pool_left_mat_layers: vec![Vec::new(); nt],
+            pool_left_relu_layers: vec![Vec::new(); nt],
         }
     }
 }
@@ -292,13 +318,22 @@ pub struct TenantServeStats {
     /// silence claim, attributable per op.
     pub offline_msgs_matmul: u64,
     pub offline_msgs_relu: u64,
+    /// The same split resolved per layer in gate order (length = the
+    /// tenant's depth; `[total]` for legacy single-layer tenants) — a warm
+    /// deep tenant must read all-zeros at EVERY gate, not just in total.
+    pub offline_msgs_matmul_layers: Vec<u64>,
+    pub offline_msgs_relu_layers: Vec<u64>,
     pub refill_ticks: usize,
     pub refill_mat_items: usize,
-    /// Keyed bundles left under this tenant's key at shutdown.
+    /// Keyed bundles left under this tenant's layer-0 key at shutdown.
     pub pool_left_mat: usize,
-    /// Nonlinear bundles left under this tenant's ReLU key at shutdown
-    /// (always paired with `pool_left_mat` for `relu: true` tenants).
+    /// Nonlinear bundles left under this tenant's layer-0 ReLU key at
+    /// shutdown (always paired with `pool_left_mat` for ReLU layers).
     pub pool_left_relu: usize,
+    /// Shutdown stock per layer shard in gate order (empty in inline
+    /// mode) — layer-vector refills keep these equal across layers.
+    pub pool_left_mat_layers: Vec<usize>,
+    pub pool_left_relu_layers: Vec<usize>,
     /// Decoded predictions (`(query id, row values)`), query-id order, as
     /// seen by the data owner.
     pub answers: Vec<(usize, Vec<f64>)>,
@@ -378,14 +413,23 @@ fn tick_tenant(
 /// party computed before an honest peer aborted) is discarded whole.
 struct WaveOut {
     answers: Vec<(usize, Vec<f64>)>,
-    om_mat: u64,
-    om_relu: u64,
+    /// Offline messages this party sent inside each layer's matrix-gate /
+    /// ReLU sub-window (gate order, length = the tenant's depth).
+    om_mat: Vec<u64>,
+    om_relu: Vec<u64>,
 }
 
-/// One wave's protocol body: stack the batch, `Π_MatMulTr` (keyed or
-/// inline), optional batched ReLU, verified reconstruction towards the
-/// data owner. Exactly the single-tenant pipeline, isolated so the
+/// One wave's protocol body: stack the batch, then the tenant's whole
+/// resident network — `Π_MatMulTr` per layer (keyed bundle vector on a
+/// hit, deterministic inline fallback on a miss), hidden-layer batched
+/// ReLU, verified reconstruction towards the data owner. Isolated so the
 /// containment wrapper can classify and discard a failed wave.
+///
+/// Keyed sourcing is **all-or-nothing over the layer vector**: the wave
+/// pops its per-layer bundles only if [`Pool::check_layer_vec`] sees every
+/// gate's paired bundle in stock. A hole at ANY layer records one miss
+/// and sends the entire wave down the inline path — a half-keyed wave
+/// would split one query's trace across sourcing modes.
 fn run_wave(
     ctx: &mut Ctx,
     reg: &ModelRegistry,
@@ -410,39 +454,50 @@ fn run_wave(
         }
         m
     });
-    let w = &reg.model(t).w;
-    let mut u = if keyed {
-        let key = tenant_wave_key(spec, rows);
+    let depth = spec.depth();
+    let keys = spec.layer_keys(rows);
+    let use_keyed = keyed && ctx.pool_mut().is_some_and(|p| p.check_layer_vec(&keys));
+    let model = reg.model(t);
+    let (u, om_mat, om_relu) = if use_keyed {
+        let weights: Vec<_> = model.layers.iter().map(|l| l.w.clone()).collect();
         let x_enc: Option<Matrix<Z64>> = stacked.as_ref().map(F64Mat::encode);
-        let (_x, u) = matmul_tr_keyed(ctx, &key, x_enc.as_ref(), w)?;
-        u
+        let kf = forward_keyed(ctx, &weights, &keys, x_enc.as_ref())?;
+        (kf.out, kf.om_mat, kf.om_relu)
     } else {
-        let x_sh = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
-        matmul_tr(ctx, &x_sh, w)?
+        let mut om_mat = Vec::with_capacity(depth);
+        let mut om_relu = Vec::with_capacity(depth);
+        let mut a = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
+        // the input share is attributed to layer 0's matrix window (om0
+        // was snapshotted before the wave body started)
+        let mut m0 = om0;
+        for l in 0..depth {
+            let u = matmul_tr(ctx, &a, &model.layers[l].w)?;
+            om_mat.push(ctx.net.sent_msgs(Phase::Offline) - m0);
+            let r0 = ctx.net.sent_msgs(Phase::Offline);
+            a = if spec.layer_relu(l) {
+                // flat path: SoA matrices end to end (share-vector
+                // conversion lives inside the mat-level ReLU entry points)
+                crate::ml::relu_mat(ctx, &u)?.0
+            } else {
+                u
+            };
+            om_relu.push(ctx.net.sent_msgs(Phase::Offline) - r0);
+            m0 = ctx.net.sent_msgs(Phase::Offline);
+        }
+        (a, om_mat, om_relu)
     };
-    let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
-    let or0 = ctx.net.sent_msgs(Phase::Offline);
-    if spec.relu {
-        // flat path: SoA matrices end to end (share-vector conversion
-        // lives inside the mat-level ReLU entry points)
-        u = if keyed {
-            crate::ml::relu_mat_keyed(ctx, &tenant_relu_key(spec, rows), &u)?.0
-        } else {
-            crate::ml::relu_mat(ctx, &u)?.0
-        };
-    }
-    let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
     let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
     let mut answers = Vec::new();
     if let Some(vals) = opened {
+        let cols = spec.out_cols();
         let mut off = 0;
         for q in batch {
-            let a: Vec<f64> = vals.data()[off..off + q.rows]
+            let a: Vec<f64> = vals.data()[off..off + q.rows * cols]
                 .iter()
                 .map(|&v| FixedPoint::decode(v))
                 .collect();
             answers.push((q.id, a));
-            off += q.rows;
+            off += q.rows * cols;
         }
     }
     Ok(WaveOut { answers, om_mat, om_relu })
@@ -560,13 +615,13 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
             if f.tenant == t && grants[t] == f.wave && ctx.id() == f.party {
                 match f.kind {
                     FaultKind::TamperMatLamX => {
-                        let key = tenant_wave_key(spec, rows);
+                        let key = tenant_layer_key(spec, rows, f.layer as usize);
                         if let Some(item) = ctx.pool_mut().and_then(|p| p.mat_front_mut(&key)) {
                             item.tamper_lam_x();
                         }
                     }
                     FaultKind::TamperReluGamma => {
-                        let rk = tenant_relu_key(spec, rows);
+                        let rk = relu_key_for(&tenant_layer_key(spec, rows, f.layer as usize));
                         if let Some(item) = ctx.pool_mut().and_then(|p| p.relu_front_mut(&rk)) {
                             item.tamper_gamma();
                         }
@@ -674,8 +729,10 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         out.wave_rounds.push(rounds_d);
         out.wave_offline_msgs.push(offm);
         out.wave_offline_bytes.push(offb);
-        out.wave_offline_msgs_mat.push(wave.om_mat);
-        out.wave_offline_msgs_relu.push(wave.om_relu);
+        out.wave_offline_msgs_mat.push(wave.om_mat.iter().sum());
+        out.wave_offline_msgs_relu.push(wave.om_relu.iter().sum());
+        out.wave_offline_msgs_mat_layers.push(wave.om_mat);
+        out.wave_offline_msgs_relu_layers.push(wave.om_relu);
         out.wave_keyed_hit.push(hit);
         out.wave_partial.push(batch.len() < spec.effective_coalesce());
         out.wave_sojourn
@@ -709,9 +766,16 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
     if let Some(pool) = ctx.detach_pool() {
         out.pool_stats = Some(pool.stats());
         for t in 0..nt {
-            out.pool_left_mat[t] = pool.len_mat(&reg.model(t).key);
-            out.pool_left_relu[t] =
-                reg.model(t).relu_key.map_or(0, |rk| pool.len_relu(&rk));
+            let m = reg.model(t);
+            out.pool_left_mat[t] = pool.len_mat(&m.key);
+            out.pool_left_relu[t] = m.relu_key.map_or(0, |rk| pool.len_relu(&rk));
+            out.pool_left_mat_layers[t] =
+                m.layers.iter().map(|l| pool.len_mat(&l.key)).collect();
+            out.pool_left_relu_layers[t] = m
+                .layers
+                .iter()
+                .map(|l| l.relu_key.map_or(0, |rk| pool.len_relu(&rk)))
+                .collect();
         }
     }
     out.queue_stats = queue.stats().clone();
@@ -797,6 +861,9 @@ fn aggregate(
         let (mut waves_t, mut keyed_waves, mut inline_waves) = (0usize, 0usize, 0usize);
         let (mut partial_waves, mut partial_keyed_waves) = (0usize, 0usize);
         let (mut offm, mut offm_mat, mut offm_relu) = (0u64, 0u64, 0u64);
+        let depth = spec.depth();
+        let mut offm_mat_layers = vec![0u64; depth];
+        let mut offm_relu_layers = vec![0u64; depth];
         for i in 0..waves {
             if outs[1].wave_tenant[i] != t {
                 continue;
@@ -816,6 +883,14 @@ fn aggregate(
             offm += wave_off_msgs[i];
             offm_mat += wave_off_mat[i];
             offm_relu += wave_off_relu[i];
+            for o in &outs {
+                for (l, v) in o.wave_offline_msgs_mat_layers[i].iter().enumerate() {
+                    offm_mat_layers[l] += v;
+                }
+                for (l, v) in o.wave_offline_msgs_relu_layers[i].iter().enumerate() {
+                    offm_relu_layers[l] += v;
+                }
+            }
             for &(_qid, so) in &outs[1].wave_sojourn[i] {
                 sojourns.push(so);
                 lats.push(wave_lat[i]);
@@ -850,10 +925,14 @@ fn aggregate(
             offline_msgs_in_waves: offm,
             offline_msgs_matmul: offm_mat,
             offline_msgs_relu: offm_relu,
+            offline_msgs_matmul_layers: offm_mat_layers,
+            offline_msgs_relu_layers: offm_relu_layers,
             refill_ticks: outs[1].refill_ticks[t],
             refill_mat_items: outs[1].refill_mat_items[t],
             pool_left_mat: outs[1].pool_left_mat[t],
             pool_left_relu: outs[1].pool_left_relu[t],
+            pool_left_mat_layers: outs[1].pool_left_mat_layers[t].clone(),
+            pool_left_relu_layers: outs[1].pool_left_relu_layers[t].clone(),
             answers,
         });
     }
@@ -1128,6 +1207,7 @@ mod tests {
             party: P1,
             tenant: 0,
             wave: 1,
+            layer: 0,
             kind: FaultKind::TamperMatLamX,
         });
         let stats = serve_multi(NetProfile::zero(), cfg.clone());
@@ -1160,6 +1240,7 @@ mod tests {
             party: P1,
             tenant: 0,
             wave: 1,
+            layer: 0,
             kind: FaultKind::TamperMatLamX,
         });
         let err = serve_multi_checked(NetProfile::zero(), cfg)
@@ -1179,6 +1260,7 @@ mod tests {
             party: P3,
             tenant: 1,
             wave: 0,
+            layer: 0,
             kind: FaultKind::AbortOffWave,
         });
         let err = serve_multi_checked(NetProfile::zero(), cfg)
@@ -1208,6 +1290,7 @@ mod tests {
             party: P1,
             tenant: 0,
             wave: 0,
+            layer: 0,
             kind: FaultKind::TamperMatLamX,
         });
         let stats = serve_multi(NetProfile::zero(), cfg);
@@ -1217,5 +1300,102 @@ mod tests {
         let ts = &stats.tenants[0];
         assert_eq!(ts.expired, 4, "lost queries surface as expired, never served");
         assert_eq!(ts.served, 0);
+    }
+
+    /// A resident 3-layer network (4-8-8-2, hidden ReLU, linear head).
+    fn deep_spec(name: &str, model: u64, queries: usize, coalesce: usize) -> TenantSpec {
+        let mut s = TenantSpec::new(name, model, 4, queries, coalesce);
+        s.rows_per_query = 2;
+        s.layers = vec![8, 8, 2];
+        s
+    }
+
+    #[test]
+    fn deep_tenant_warm_waves_are_offline_silent_at_every_gate() {
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[1] = deep_spec("deep", 2, 4, 2);
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        let ts = &stats.tenants[1];
+        assert_eq!(ts.served, 4);
+        assert_eq!(ts.keyed_waves, 2, "warm deep waves pop the whole layer vector: {ts:?}");
+        assert_eq!(ts.inline_waves, 0);
+        assert_eq!(ts.offline_msgs_in_waves, 0, "deep keyed waves are offline-silent");
+        assert_eq!(ts.offline_msgs_matmul_layers, vec![0, 0, 0], "silent at every gate");
+        assert_eq!(ts.offline_msgs_relu_layers, vec![0, 0, 0]);
+        assert_eq!(ts.pool_left_mat_layers.len(), 3, "one shard per layer at shutdown");
+        // answers carry the full rows × out_cols block per query
+        assert_eq!(ts.answers[0].1.len(), 2 * 2);
+        // the legacy single-layer tenant is unchanged next to the deep one
+        assert_eq!(stats.tenants[0].served, 4);
+        assert_eq!(stats.tenants[0].offline_msgs_matmul_layers, vec![0]);
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn deep_tenant_inline_mode_matches_cleartext() {
+        let mut cfg = two_tenant_cfg(PoolMode::Inline);
+        cfg.tenants[1] = deep_spec("deep", 2, 4, 2);
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        let ts = &stats.tenants[1];
+        assert_eq!(ts.served, 4);
+        assert_eq!(ts.inline_waves, 2);
+        assert!(
+            ts.offline_msgs_in_waves > 0,
+            "inline deep waves pay offline traffic inside the wave window: {ts:?}"
+        );
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn deep_tamper_at_inner_layer_fails_closed_without_containment() {
+        use crate::net::P1;
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[0] = deep_spec("deep", 1, 4, 2);
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 0,
+            layer: 1,
+            kind: FaultKind::TamperMatLamX,
+        });
+        let err = serve_multi_checked(NetProfile::zero(), cfg)
+            .expect_err("a tampered bundle at ANY gate position must abort the run");
+        assert!(matches!(err, Abort::Verify(_)), "root cause is a verification abort: {err}");
+    }
+
+    #[test]
+    fn deep_containment_quarantines_on_hidden_gate_relu_tamper_and_keeps_serving() {
+        use crate::net::P1;
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[0] = deep_spec("deep", 1, 4, 2);
+        cfg.containment = true;
+        // tamper the hidden gate 1's nonlinear bundle (the head at gate 2
+        // is linear and owns no ReLU shard)
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 1,
+            layer: 1,
+            kind: FaultKind::TamperReluGamma,
+        });
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        assert_eq!(stats.quarantines.len(), 1, "exactly one contained abort");
+        let q = &stats.quarantines[0];
+        assert_eq!(q.tenant, 0);
+        assert_eq!(q.requeued, 2);
+        // the drain covers ALL of the tenant's layer shards atomically:
+        // whatever vector stock remains, it leaves as whole per-layer
+        // vectors — 3 matrix shards and 2 hidden-ReLU shards per vector
+        assert_eq!(q.drained_mat % 3, 0, "mat shards drain in whole layer-vector units: {q:?}");
+        assert_eq!(
+            q.drained_relu * 3,
+            q.drained_mat * 2,
+            "2 hidden ReLU shards drain per 3 matrix shards: {q:?}"
+        );
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.served, 4, "re-queued queries finish over the inline path");
+        assert!(ts.inline_waves >= 1);
+        assert_eq!(stats.tenants[1].served, 4, "the innocent tenant is unaffected");
+        assert_answers_match_cleartext(&stats, &cfg);
     }
 }

@@ -1857,6 +1857,7 @@ fn containment_tampered_wave_quarantines_only_its_tenant() {
         party: P1,
         tenant: 0,
         wave: 1,
+        layer: 0,
         kind: FaultKind::TamperMatLamX,
     });
     let s = serve_multi(NetProfile::zero(), cfg.clone());
@@ -1892,6 +1893,7 @@ fn containment_relu_tamper_is_contained_too() {
         party: P3,
         tenant: 0,
         wave: 0,
+        layer: 0,
         kind: FaultKind::TamperReluGamma,
     });
     let s = serve_multi(NetProfile::zero(), cfg.clone());
@@ -1915,6 +1917,7 @@ fn containment_off_keeps_the_fail_closed_contract() {
         party: P1,
         tenant: 0,
         wave: 1,
+        layer: 0,
         kind: FaultKind::TamperMatLamX,
     });
     let err = serve_multi_checked(NetProfile::zero(), cfg)
@@ -1936,6 +1939,7 @@ fn containment_party_scoped_abort_fails_the_run_closed() {
         party: P3,
         tenant: 1,
         wave: 1,
+        layer: 0,
         kind: FaultKind::AbortOffWave,
     });
     let err = serve_multi_checked(NetProfile::zero(), cfg)
@@ -1944,4 +1948,139 @@ fn containment_party_scoped_abort_fails_the_run_closed() {
         matches!(err, trident::net::Abort::Verify(_)),
         "the aborting party's own cause is surfaced: {err}"
     );
+}
+
+// ------------------------------------------------- deep resident networks
+
+/// Two deep resident 3-layer networks (4-8-8-2): hidden ReLU at gates 0
+/// and 1, linear head at gate 2. Each tenant's registry entry carries one
+/// keyed bundle pair per gate, popped as a whole vector per wave.
+fn deep_two_tenant_cfg(low: usize, high: usize) -> trident::serve::MultiServeConfig {
+    use trident::sched::TenantSpec;
+    let mk = |name: &str, model: u64| {
+        let mut s = TenantSpec::new(name, model, 4, 4, 2);
+        s.rows_per_query = 2;
+        s.layers = vec![8, 8, 2];
+        s
+    };
+    trident::serve::MultiServeConfig {
+        tenants: vec![mk("nn-a", 11), mk("nn-b", 12)],
+        mode: trident::serve::PoolMode::Keyed,
+        low_water: low,
+        high_water: high,
+        age_every: 0,
+        seed: 1662,
+        ..trident::serve::MultiServeConfig::default()
+    }
+}
+
+/// The deep-circuit acceptance scenario: a warm two-tenant 3-layer run
+/// where EVERY wave runs share → 3×(matmul → hidden ReLU) → reconstruct
+/// with zero offline-phase messages at every gate, and every opened
+/// answer equals the cleartext forward pass.
+#[test]
+fn deep_keyed_waves_are_offline_silent_and_match_cleartext() {
+    use trident::serve::serve_multi;
+    let cfg = deep_two_tenant_cfg(1, 2);
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.waves, 4, "2 full waves per tenant");
+    for (i, m) in s.wave_offline_msgs.iter().enumerate() {
+        assert_eq!(
+            *m, 0,
+            "wave {i} (tenant {}) sent offline-phase messages inside the wave window",
+            s.wave_tenants[i]
+        );
+    }
+    for ts in &s.tenants {
+        assert_eq!(ts.served, 4);
+        assert_eq!(ts.keyed_waves, ts.waves, "every deep wave pops its whole layer vector");
+        assert_eq!(ts.inline_waves, 0);
+        assert_eq!(ts.offline_msgs_in_waves, 0, "{ts:?}");
+        assert_eq!(
+            ts.offline_msgs_matmul_layers,
+            vec![0, 0, 0],
+            "offline-silent at every matrix gate: {ts:?}"
+        );
+        assert_eq!(
+            ts.offline_msgs_relu_layers,
+            vec![0, 0, 0],
+            "offline-silent at every nonlinear gate: {ts:?}"
+        );
+    }
+    assert_tenant_answers_match_cleartext(&s, &cfg, "deep keyed");
+}
+
+#[test]
+fn deep_tamper_at_any_gate_fails_closed_without_containment() {
+    use trident::serve::{serve_multi_checked, FaultKind, FaultPlan};
+    // a tampered matrix bundle at ANY gate position of the layer vector —
+    // first, middle, head — must surface as a verification abort, never a
+    // wrong opened value
+    for layer in 0..3u32 {
+        let mut cfg = deep_two_tenant_cfg(1, 2);
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 1,
+            layer,
+            kind: FaultKind::TamperMatLamX,
+        });
+        let err = serve_multi_checked(NetProfile::zero(), cfg)
+            .expect_err("a tampered bundle at any gate is run-fatal without containment");
+        assert!(
+            matches!(err, trident::net::Abort::Verify(_)),
+            "gate {layer}: the verification abort is the surfaced cause: {err}"
+        );
+    }
+    // the nonlinear leg: gate 1's paired hidden-ReLU bundle
+    let mut cfg = deep_two_tenant_cfg(1, 2);
+    cfg.fault = Some(FaultPlan {
+        party: P3,
+        tenant: 1,
+        wave: 0,
+        layer: 1,
+        kind: FaultKind::TamperReluGamma,
+    });
+    let err = serve_multi_checked(NetProfile::zero(), cfg)
+        .expect_err("a tampered hidden-gate ReLU bundle is run-fatal without containment");
+    assert!(matches!(err, trident::net::Abort::Verify(_)), "{err}");
+}
+
+#[test]
+fn deep_containment_quarantines_only_the_tampered_tenant() {
+    use trident::serve::{serve_multi, FaultKind, FaultPlan};
+    // tamper a MIDDLE gate's matrix bundle mid-run with containment on:
+    // the quarantine must stay scoped to the owning tenant, land at the
+    // same tick at all four parties (asserted internally at aggregation),
+    // and drain the tenant's shards in whole per-layer vector units
+    let mut cfg = deep_two_tenant_cfg(1, 2);
+    cfg.containment = true;
+    cfg.fault = Some(FaultPlan {
+        party: P1,
+        tenant: 0,
+        wave: 1,
+        layer: 1,
+        kind: FaultKind::TamperMatLamX,
+    });
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.quarantines.len(), 1, "exactly one contained abort: {:?}", s.quarantines);
+    let q = &s.quarantines[0];
+    assert_eq!(q.tenant, 0, "the quarantine names the tampered tenant");
+    assert_eq!(q.requeued, 2, "the aborted wave's whole batch is re-admitted");
+    assert_eq!(q.lost, 0);
+    // 3 matrix shards and 2 hidden-ReLU shards per remaining vector: the
+    // drain never splits a layer vector
+    assert_eq!(q.drained_mat % 3, 0, "mat shards drain in whole layer-vector units: {q:?}");
+    assert_eq!(
+        q.drained_relu * 3,
+        q.drained_mat * 2,
+        "2 hidden ReLU shards drain per 3 matrix shards: {q:?}"
+    );
+    let (poisoned, innocent) = (&s.tenants[0], &s.tenants[1]);
+    assert_eq!(poisoned.quarantined_at, Some(q.at_tick), "lockstep quarantine tick");
+    assert_eq!(poisoned.served, 4, "re-queued queries finish over the secure inline path");
+    assert!(poisoned.inline_waves >= 1, "quarantined pops miss deterministically");
+    assert_eq!(innocent.quarantined_at, None);
+    assert_eq!(innocent.served, 4, "the innocent tenant never notices");
+    assert_tenant_answers_match_cleartext(&s, &cfg, "deep containment");
 }

@@ -845,6 +845,9 @@ pub fn demo_tenants(queries: usize) -> crate::serve::MultiServeConfig {
         high_water: 2,
         age_every: 2,
         seed: 333,
+        // trace on: the benchmark rollup is trace-derived and every bench
+        // run exercises the cross-party skeleton + reconciliation asserts
+        trace: true,
         ..MultiServeConfig::default()
     }
 }
@@ -898,7 +901,44 @@ pub fn serve_tenants_table() -> String {
     use crate::serve::serve_multi;
     let mut out = String::new();
     out.push_str("== Multi-tenant serving: 3 resident models (1 deep NN-3), WRR 2:1:1, LAN ==\n");
-    out.push_str(&tenant_table(&serve_multi(NetProfile::lan(), demo_tenants(12))));
+    let stats = serve_multi(NetProfile::lan(), demo_tenants(12));
+    out.push_str(&tenant_table(&stats));
+    out.push_str(&flame_table(&stats));
+    out
+}
+
+/// Flame-style per-protocol breakdown derived from the merged four-party
+/// trace (falls back to the per-layer meter counters when tracing was
+/// off): one row per `(tenant, gate, op)` with the offline-message vs
+/// online-compute split at gate granularity — the paper's Table-6 shape
+/// projected onto the serving path. The per-op totals reconcile exactly
+/// with the `offline_msgs_matmul` / `offline_msgs_relu` meters (asserted
+/// at aggregation time whenever the trace is live).
+pub fn flame_table(stats: &crate::serve::MultiServeStats) -> String {
+    let rollup = stats.op_rollup();
+    let mut out = String::new();
+    out.push_str(
+        "flame: tenant   | gate | op     | waves | off msgs | off msg/wave | online compute ms\n",
+    );
+    for r in &rollup {
+        out.push_str(&format!(
+            "flame: {:<8} | {:>4} | {:<6} | {:>5} | {:>8} | {:>12.2} | {:>17.3}\n",
+            stats.tenants[r.tenant].name,
+            r.gate,
+            r.op,
+            r.waves,
+            r.offline_msgs,
+            r.offline_msgs as f64 / r.waves.max(1) as f64,
+            r.compute_ns as f64 / 1e6,
+        ));
+    }
+    let tm: u64 = rollup.iter().filter(|r| r.op == "matmul").map(|r| r.offline_msgs).sum();
+    let tr: u64 = rollup.iter().filter(|r| r.op == "relu").map(|r| r.offline_msgs).sum();
+    out.push_str(&format!(
+        "flame: totals = matmul {tm} + relu {tr} = {} offline msgs across {} committed waves\n",
+        tm + tr,
+        stats.waves,
+    ));
     out
 }
 
@@ -943,9 +983,15 @@ pub fn serving_bench_json() -> String {
 /// `off_msgs_relu_layers` (one entry per resident layer, all zero on a
 /// warm run) and `pool_left_mat_layers` / `pool_left_relu_layers`
 /// (unconsumed keyed bundles per layer shard at shutdown), driven by the
-/// resident NN-3 tenant in the canonical workload.
+/// resident NN-3 tenant in the canonical workload. Schema 5 (this PR)
+/// replaces the hand-maintained `off_msgs_matmul_layers` /
+/// `off_msgs_relu_layers` arrays with a trace-derived per-tenant `"ops"`
+/// rollup — one object per `(op, gate)` with `waves` / `off_msgs` /
+/// `compute_ns`, produced from the merged four-party trace and asserted
+/// at aggregation time to reconcile exactly with the offline-message
+/// meters (the `pool_left_*` arrays stay).
 pub fn serving_bench_json_from(bench: &ServingBench) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/4\",\n");
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/5\",\n");
     out.push_str(&format!(
         "  \"offline_fill_throughput\": {{\"bitext_masks_per_s\": {:.1}, \"trunc_pairs_per_s\": {:.1}, \"lam_skeletons_per_s\": {:.1}}},\n",
         bench.fill.bitext_masks_per_s, bench.fill.trunc_pairs_per_s, bench.fill.lam_per_s,
@@ -975,11 +1021,23 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
     }
     out.push_str("  ],\n");
     let (cfg, stats) = (&bench.tenants_cfg, &bench.tenants);
+    let rollup = stats.op_rollup();
     out.push_str("  \"tenants\": [\n");
     for (t, ts) in stats.tenants.iter().enumerate() {
         let spec = &cfg.tenants[t];
+        let ops: Vec<String> = rollup
+            .iter()
+            .filter(|r| r.tenant == t)
+            .map(|r| {
+                format!(
+                    "{{\"op\": \"{}\", \"gate\": {}, \"waves\": {}, \"off_msgs\": {}, \"compute_ns\": {}}}",
+                    r.op, r.gate, r.waves, r.offline_msgs, r.compute_ns,
+                )
+            })
+            .collect();
+        let ops_json = format!("[{}]", ops.join(", "));
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"off_msgs_matmul_layers\": {}, \"off_msgs_relu_layers\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"ops\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
             json_escape(&ts.name),
             spec.weight,
             spec.class,
@@ -1003,8 +1061,7 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.offline_msgs_in_waves,
             ts.offline_msgs_matmul,
             ts.offline_msgs_relu,
-            json_num_array(&ts.offline_msgs_matmul_layers),
-            json_num_array(&ts.offline_msgs_relu_layers),
+            ops_json,
             json_num_array(&ts.pool_left_mat_layers),
             json_num_array(&ts.pool_left_relu_layers),
             ts.waves as f64 / stats.waves.max(1) as f64,

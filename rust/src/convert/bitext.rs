@@ -84,13 +84,17 @@ pub fn bitext_many(ctx: &mut Ctx, vs: &[MShare<Z64>]) -> Result<Vec<MShare<Bit>>
         Some(m) => m,
         None => gen_bitext_masks(ctx, n)?,
     };
+    // SoA split once at this entry point — bitext_online takes the two
+    // components as slices, so the circuit-keyed path can borrow its
+    // bundle's pre-split vectors with no per-wave materialisation
     let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
+    let x_sh: Vec<MShare<Bit>> = masks.iter().map(|m| m.x).collect();
 
     // [[rv]] = Π_Mult([[r]], [[v]]) — offline part of the mult is genuinely
     // offline (γ from the masks), but it γ-exchanges live inside the call
     let corr = mult_offline(ctx, &r_sh, vs, true)?;
     let y_masks = sample_vsh_masks::<Bit>(ctx, (P3, P0), n);
-    bitext_online(ctx, vs, &masks, &corr, &y_masks)
+    bitext_online(ctx, vs, &r_sh, &x_sh, &corr, &y_masks)
 }
 
 /// Pool-aware **circuit-keyed** batched bit extraction — the nonlinear leg
@@ -124,9 +128,11 @@ pub fn bitext_many_keyed(
     };
     match popped {
         Some(bundle) => {
-            let ReluCorr { masks, gamma, lam_z, y_masks, binj, .. } = bundle;
+            // the bundle stores its mask material pre-split (SoA), so the
+            // warm keyed path is allocation-free from here to the wire
+            let ReluCorr { r_masks, x_masks, gamma, lam_z, y_masks, binj, .. } = bundle;
             let corr = MultCorr { gamma, lam_z };
-            let bits = bitext_online(ctx, vs, &masks, &corr, &y_masks)?;
+            let bits = bitext_online(ctx, vs, &r_masks, &x_masks, &corr, &y_masks)?;
             Ok((bits, Some(binj)))
         }
         None => Ok((bitext_many(ctx, vs)?, None)),
@@ -136,18 +142,19 @@ pub fn bitext_many_keyed(
 /// The online phase of `Π_BitExt`, shared by the inline and circuit-keyed
 /// paths (which differ only in where the offline material comes from):
 /// the `Π_Mult` online exchange for `[[rv]]`, the opening towards P0/P3,
-/// and the `y = msb(rv)` delivery under the pre-drawn mask.
+/// and the `y = msb(rv)` delivery under the pre-drawn mask. Takes the
+/// mask components as SoA slices so callers that already hold them split
+/// (the keyed [`crate::pool::ReluCorr`] bundle) pay no per-wave collect.
 fn bitext_online(
     ctx: &mut Ctx,
     vs: &[MShare<Z64>],
-    masks: &[BitExtMask],
+    r_sh: &[MShare<Z64>],
+    x_sh: &[MShare<Bit>],
     corr: &MultCorr<Z64>,
     y_masks: &[VshMask<Bit>],
 ) -> Result<Vec<MShare<Bit>>, Abort> {
     let n = vs.len();
-    let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
-    let x_sh: Vec<MShare<Bit>> = masks.iter().map(|m| m.x).collect();
-    let rv = mult_online_many(ctx, &r_sh, vs, corr)?;
+    let rv = mult_online_many(ctx, r_sh, vs, corr)?;
     // open rv towards P0 and P3
     let opened = reconstruct_to_many(ctx, &rv, &[P0, P3])?;
     // y = msb(rv), boolean-shared by (P3, P0)
@@ -243,9 +250,9 @@ mod tests {
             let corr = crate::pool::relu::gen_relu_corr(ctx, key, &vs)?;
             ctx.pool_mut().unwrap().push_relu(corr);
             ctx.flush_verify()?; // settle the fill's deferred digests
-            let off0 = ctx.net.sent_msgs(Phase::Offline);
+            let w = crate::obs::Window::open(ctx.net);
             let (bits, binj) = bitext_many_keyed(ctx, &key, &vs)?;
-            let off_sent = ctx.net.sent_msgs(Phase::Offline) - off0;
+            let off_sent = w.diff(ctx.net).msgs(Phase::Offline);
             ctx.flush_verify()?;
             Ok((bits, binj.is_some(), off_sent))
         });
@@ -272,9 +279,9 @@ mod tests {
                 .then(|| (0..n as i64).map(|i| Z64::from(i - 32)).collect());
             let vs = crate::proto::sharing::share_many_n(ctx, P1, vals.as_deref(), n)?;
             ctx.flush_verify()?; // settle the input crosscheck digests
-            let b0 = ctx.net.sent_bytes(Phase::Online);
+            let w = crate::obs::Window::open(ctx.net);
             let bits = bitext_many(ctx, &vs)?;
-            let sent = ctx.net.sent_bytes(Phase::Online) - b0;
+            let sent = w.diff(ctx.net).bytes(Phase::Online);
             ctx.flush_verify()?;
             Ok((bits, sent))
         });

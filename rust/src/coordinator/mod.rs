@@ -308,6 +308,11 @@ pub struct MultiServeCliOpts {
     pub containment: bool,
     /// Also write the machine-readable benchmark (`BENCH_serving.json`).
     pub json: bool,
+    /// Write the merged per-party trace as chrome-tracing-flavoured JSONL
+    /// to this path (`--trace out.jsonl`). Tracing itself is always on for
+    /// the CLI run — the observer-effect contract makes it free — so this
+    /// only controls whether the event stream is persisted.
+    pub trace: Option<String>,
 }
 
 impl Default for MultiServeCliOpts {
@@ -324,6 +329,7 @@ impl Default for MultiServeCliOpts {
             cap: None,
             containment: false,
             json: false,
+            trace: None,
         }
     }
 }
@@ -366,6 +372,9 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
             layer: 0,
             kind: FaultKind::TamperMatLamX,
         }),
+        // always trace: every CLI run carries the skeleton-checked event
+        // stream, and the observer-effect contract keeps the meters exact
+        trace: true,
     };
     println!(
         "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN{}) …",
@@ -374,22 +383,18 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
     );
     let stats = serve_multi(crate::net::NetProfile::lan(), cfg);
     print!("{}", crate::bench::tenant_table(&stats));
-    if stats.offline_msgs_in_waves == 0 {
-        println!("per-wave offline silence: yes (every tenant, every warm wave)");
-    } else {
-        println!(
-            "per-wave offline silence: NO ({} offline msgs inside waves — inline fallbacks or cold pools)",
-            stats.offline_msgs_in_waves
-        );
-    }
-    for q in &stats.quarantines {
-        println!(
-            "quarantine: tenant {} at tick {} — {} re-queued, {} lost, {} mat / {} relu bundles drained ({})",
-            q.tenant, q.at_tick, q.requeued, q.lost, q.drained_mat, q.drained_relu, q.why,
-        );
-    }
-    if opts.containment && stats.quarantines.is_empty() {
-        println!("quarantine: none (containment enabled, no wave aborted)");
+    print!("{}", crate::bench::flame_table(&stats));
+    // the silence/quarantine/gauge summary is rendered from the same
+    // trace-backed stats the exporters use (no hand-kept printf state)
+    print!("{}", crate::obs::export::gauge_table(&stats));
+    if let Some(path) = &opts.trace {
+        match std::fs::write(path, crate::obs::export::trace_jsonl(&stats.party_traces)) {
+            Ok(()) => println!(
+                "wrote {path} ({} events across 4 parties)",
+                stats.party_traces.iter().map(Vec::len).sum::<usize>(),
+            ),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
     }
     if opts.json {
         match crate::bench::write_serving_bench_json("BENCH_serving.json") {
@@ -397,6 +402,15 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
             Err(e) => println!("could not write BENCH_serving.json: {e}"),
         }
     }
+}
+
+/// `trident metrics`: run the canonical multi-tenant demo workload
+/// (traced) and print a Prometheus-style text snapshot of every counter
+/// and wave-boundary gauge the merged four-party trace carries.
+pub fn metrics_cli() {
+    let stats =
+        crate::serve::serve_multi(crate::net::NetProfile::lan(), crate::bench::demo_tenants(12));
+    print!("{}", crate::obs::export::prometheus(&stats));
 }
 
 #[cfg(test)]
@@ -418,6 +432,23 @@ mod tests {
     fn tiny_nn_cli() {
         let losses = train_cli("nn", 3, 8, 16);
         assert_eq!(losses.len(), 3);
+    }
+
+    #[test]
+    fn serve_tenants_cli_writes_parseable_trace() {
+        let path = std::env::temp_dir().join("trident_cli_trace_test.jsonl");
+        let path_s = path.to_string_lossy().into_owned();
+        let mut opts = MultiServeCliOpts::default();
+        opts.queries = 4;
+        opts.coalesce = Some(2);
+        opts.trace = Some(path_s);
+        serve_tenants_cli(opts);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let first = body.lines().next().unwrap();
+        assert!(first.contains("\"op\":\"run.open\""), "first line opens the run: {first}");
+        assert!(body.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+        assert!(body.contains("\"op\":\"gate.matmul\""), "per-gate spans present");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod crypto;
 pub mod gc;
 pub mod ml;
 pub mod net;
+pub mod obs;
 pub mod pool;
 pub mod proto;
 pub mod ring;

@@ -12,10 +12,15 @@
 //! trident serve   --models m1,m2 [--weights 2,1] [--priorities 0,1]
 //!                 [--deadline-ms D] [--cap N] [--queries N] [--coalesce C]
 //!                 [--low-water L] [--high-water H] [--containment] [--json]
+//!                 [--trace out.jsonl]
 //!                                      # multi-tenant scheduler demo;
 //!                                      # --containment injects a mid-serve
 //!                                      # tamper fault and quarantines the
-//!                                      # poisoned tenant instead of dying
+//!                                      # poisoned tenant instead of dying;
+//!                                      # --trace writes the four-party
+//!                                      # event stream as JSONL
+//! trident metrics                      # Prometheus-style text snapshot of
+//!                                      # the traced demo serving run
 //! ```
 //!
 //! `--json` (serve / tables) additionally writes the machine-readable
@@ -123,6 +128,10 @@ fn main() {
                     opts.high_water = h;
                 }
                 opts.containment = flags.get("containment").map(String::as_str) == Some("true");
+                // bare `--trace` (no path) defaults to trace.jsonl
+                opts.trace = flags.get("trace").map(|v| {
+                    if v == "true" { "trace.jsonl".to_string() } else { v.clone() }
+                });
                 trident::coordinator::serve_tenants_cli(opts);
             } else {
                 let mut opts = trident::coordinator::ServeCliOpts::default();
@@ -149,10 +158,13 @@ fn main() {
                 }
             }
         }
+        "metrics" => {
+            trident::coordinator::metrics_cli();
+        }
         _ => {
             println!(
                 "trident — 4PC privacy-preserving ML (NDSS'20 reproduction)\n\
-                 commands: quickstart | train | predict | tables | serve\n\
+                 commands: quickstart | train | predict | tables | serve | metrics\n\
                  serve --models m1,m2 runs the multi-tenant scheduler; see README.md"
             );
         }

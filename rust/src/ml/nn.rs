@@ -16,6 +16,7 @@
 //! exercised by its tests and `examples/mixed_world.rs` (DESIGN.md §3).
 
 use crate::net::{Abort, Phase};
+use crate::obs::Window;
 use crate::pool::CircuitKey;
 use crate::proto::{matmul_tr, matmul_tr_keyed, matmul_tr_keyed_shared, matmul_tr_shift, Ctx};
 use crate::ring::fixed::FRAC_BITS;
@@ -176,11 +177,15 @@ impl Network {
 /// Result of a circuit-keyed forward pass: the output scores plus the
 /// **per-layer** offline-message meters (messages sent in `Phase::Offline`
 /// during each layer's matmul and ReLU respectively — all-zero on a warm
-/// wave, the deep-circuit serving invariant).
+/// wave, the deep-circuit serving invariant) and the matching per-layer
+/// online compute-ns spans (this party's [`Window`] diffs — the serving
+/// engine records them as `gate.matmul`/`gate.relu` trace events).
 pub struct KeyedForwardOut {
     pub out: MMat<Z64>,
     pub om_mat: Vec<u64>,
     pub om_relu: Vec<u64>,
+    pub cn_mat: Vec<u64>,
+    pub cn_relu: Vec<u64>,
 }
 
 /// Forward pass of a resident network through the **circuit-keyed pool**:
@@ -203,11 +208,14 @@ pub fn forward_keyed(
 ) -> Result<KeyedForwardOut, Abort> {
     assert_eq!(weights.len(), keys.len(), "one key pair per layer");
     assert!(!keys.is_empty(), "forward pass needs at least one layer");
-    let mut om_mat = Vec::with_capacity(keys.len());
-    let mut om_relu = Vec::with_capacity(keys.len());
+    let depth = keys.len();
+    let mut om_mat = Vec::with_capacity(depth);
+    let mut om_relu = Vec::with_capacity(depth);
+    let mut cn_mat = Vec::with_capacity(depth);
+    let mut cn_relu = Vec::with_capacity(depth);
     let mut a: Option<MMat<Z64>> = None;
     for ((mk, rk), w) in keys.iter().zip(weights) {
-        let m0 = ctx.net.sent_msgs(Phase::Offline);
+        let wm = Window::open(ctx.net);
         let u = match &a {
             None => {
                 let (_, u) = matmul_tr_keyed(ctx, mk, x_clear, w)?;
@@ -215,16 +223,26 @@ pub fn forward_keyed(
             }
             Some(prev) => matmul_tr_keyed_shared(ctx, mk, prev, w)?,
         };
-        om_mat.push(ctx.net.sent_msgs(Phase::Offline) - m0);
-        let r0 = ctx.net.sent_msgs(Phase::Offline);
+        let dm = wm.diff(ctx.net);
+        om_mat.push(dm.msgs(Phase::Offline));
+        cn_mat.push(dm.compute_ns(Phase::Online));
+        let wr = Window::open(ctx.net);
         let act = match rk {
             Some(rk) => relu_mat_keyed(ctx, rk, &u)?.0,
             None => u,
         };
-        om_relu.push(ctx.net.sent_msgs(Phase::Offline) - r0);
+        let dr = wr.diff(ctx.net);
+        om_relu.push(dr.msgs(Phase::Offline));
+        cn_relu.push(dr.compute_ns(Phase::Online));
         a = Some(act);
     }
-    Ok(KeyedForwardOut { out: a.expect("at least one layer"), om_mat, om_relu })
+    Ok(KeyedForwardOut {
+        out: a.expect("at least one layer"),
+        om_mat,
+        om_relu,
+        cn_mat,
+        cn_relu,
+    })
 }
 
 #[cfg(test)]

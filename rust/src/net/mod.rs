@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::crypto::Digest32;
+use crate::obs;
 
 /// One of the four parties P0..P3. P0 is the "distributor"/helper that is
 /// offline-only except for input sharing and output reconstruction.
@@ -317,6 +318,12 @@ pub struct PartyCtx {
     /// compute with serialization and latency; this separates it so the
     /// serving engine can report a per-wave compute column).
     compute: [f64; 2],
+    /// Structured trace sink ([`crate::obs`]). Disabled by default: every
+    /// hook is one branch and records nothing. Every hook sits *after*
+    /// the metering arithmetic of the site it instruments and never sends
+    /// or samples — the observer-effect contract (see the module doc of
+    /// [`crate::obs`]).
+    trace: obs::Trace,
 }
 
 impl PartyCtx {
@@ -326,6 +333,11 @@ impl PartyCtx {
 
     /// Switch to the online phase (clock and round counters are per-phase).
     pub fn set_phase(&mut self, phase: Phase) {
+        if phase != self.phase {
+            // per-party detail event (parties nest phases at different
+            // depths around their own sends): lockstep = false
+            self.trace.record("phase.switch", phase, false, obs::Payload::default());
+        }
         self.phase = phase;
     }
 
@@ -367,6 +379,55 @@ impl PartyCtx {
         self.compute[phase as usize]
     }
 
+    /// Snapshot of every monotone per-party meter, both phases — the
+    /// opening value of an [`obs::Window`]. Replaces the hand-subtracted
+    /// `sent_msgs`/`sent_bytes`/… snapshot pairs at the serving call
+    /// sites.
+    pub fn counters(&self) -> obs::Counters {
+        obs::Counters {
+            msgs: self.sent_msgs,
+            bytes: self.sent_bytes,
+            value_bytes: self.sent_value_bytes,
+            rounds: self.round,
+            clock: self.clock,
+            compute: self.compute,
+        }
+    }
+
+    /// The party's structured trace sink (cursor updates, enable/drain).
+    pub fn trace(&mut self) -> &mut obs::Trace {
+        &mut self.trace
+    }
+
+    #[inline]
+    pub fn trace_on(&self) -> bool {
+        self.trace.enabled()
+    }
+
+    /// Record a trace event stamped with the current phase and the
+    /// ambient identity cursor.
+    #[inline]
+    pub fn trace_event(&mut self, op: &'static str, lockstep: bool, payload: obs::Payload) {
+        let ph = self.phase;
+        self.trace.record(op, ph, lockstep, payload);
+    }
+
+    /// Record a trace event with explicit identity fields (gauges whose
+    /// tenant/gate are not the ambient wave's).
+    #[inline]
+    pub fn trace_event_at(
+        &mut self,
+        op: &'static str,
+        lockstep: bool,
+        tenant: Option<u32>,
+        wave: Option<u64>,
+        gate: Option<u32>,
+        payload: obs::Payload,
+    ) {
+        let ph = self.phase;
+        self.trace.record_at(op, ph, lockstep, tenant, wave, gate, payload);
+    }
+
     /// Charge `dt` seconds of local compute to this party's virtual clock.
     pub fn charge_compute(&mut self, dt: f64) {
         self.clock[self.phase as usize] += dt;
@@ -395,6 +456,15 @@ impl PartyCtx {
             self.sent_value_bytes[ph] += payload.len() as u64;
         }
         self.meter.record(self.phase, class, self.id, to, payload.len(), bits);
+        // trace hook strictly AFTER the metering arithmetic: recording is
+        // local-only, so metered counters are byte-for-byte unchanged by
+        // tracing (the observer-effect contract, see `crate::obs`)
+        self.trace.record(
+            "net.send",
+            self.phase,
+            false,
+            obs::Payload { msgs: 1, bytes: payload.len() as u64, ..obs::Payload::default() },
+        );
         let env = Envelope {
             payload: payload.to_vec(),
             t_send: self.clock[ph],
@@ -665,6 +735,7 @@ where
             sent_bytes: [0; 2],
             sent_value_bytes: [0; 2],
             compute: [0.0; 2],
+            trace: obs::Trace::default(),
         };
         let program = program.clone();
         handles.push(std::thread::spawn(move || {

@@ -1,0 +1,327 @@
+//! Trace exporters: JSONL event stream (chrome-tracing-compatible `ts`),
+//! Prometheus-style text snapshot (`trident metrics`), and the CLI gauge
+//! render that replaced the printf stats lines in
+//! `coordinator::serve_tenants_cli`.
+
+use super::TraceEvent;
+use crate::net::Phase;
+use crate::serve::multi::MultiServeStats;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+fn phase_str(ph: Phase) -> &'static str {
+    match ph {
+        Phase::Offline => "offline",
+        Phase::Online => "online",
+    }
+}
+
+fn opt_u32(v: Option<u32>) -> String {
+    v.map_or_else(|| "null".to_string(), |x| x.to_string())
+}
+
+fn opt_u64(v: Option<u64>) -> String {
+    v.map_or_else(|| "null".to_string(), |x| x.to_string())
+}
+
+/// One JSONL line for one event. `ts` is chrome-tracing-compatible
+/// microseconds derived from the deterministic identity plus the measured
+/// compute: `tick · 1000 + compute_ns / 1000` — logical ticks are spaced
+/// 1 ms apart on the rendered timeline and an event's span nests inside
+/// its tick.
+pub fn jsonl_event(party: usize, e: &TraceEvent) -> String {
+    let ts_us = e.tick as f64 * 1000.0 + e.payload.compute_ns as f64 / 1000.0;
+    format!(
+        "{{\"op\":\"{}\",\"party\":{},\"phase\":\"{}\",\"lockstep\":{},\
+         \"tenant\":{},\"wave\":{},\"gate\":{},\"tick\":{},\"ts\":{:.3},\
+         \"msgs\":{},\"bytes\":{},\"rounds\":{},\"compute_ns\":{},\"value\":{}}}",
+        e.op,
+        party,
+        phase_str(e.phase),
+        e.lockstep,
+        opt_u32(e.tenant),
+        opt_u64(e.wave),
+        opt_u32(e.gate),
+        e.tick,
+        ts_us,
+        e.payload.msgs,
+        e.payload.bytes,
+        e.payload.rounds,
+        e.payload.compute_ns,
+        e.payload.value,
+    )
+}
+
+/// The whole run as JSONL: every party's full event stream (lockstep AND
+/// per-party detail events), party order. Because each party's first
+/// recorded event is `run.open` and its last is `run.close`, the file's
+/// first line is a `run.open` and its last line a `run.close` — the CI
+/// trace smoke step greps for exactly that.
+pub fn trace_jsonl(party_traces: &[Vec<TraceEvent>]) -> String {
+    let mut out = String::new();
+    for (p, t) in party_traces.iter().enumerate() {
+        for e in t {
+            out.push_str(&jsonl_event(p, e));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Final wave-boundary gauge samples from the merged trace: for each
+/// gauge identity `(op, tenant, gate)`, the value of its last sample.
+fn last_gauges(stats: &MultiServeStats) -> BTreeMap<(&'static str, Option<u32>, Option<u32>), i64> {
+    let mut g = BTreeMap::new();
+    for e in &stats.trace {
+        if e.op.starts_with("sched.depth")
+            || e.op.starts_with("sched.inflight")
+            || e.op.starts_with("pool.stock")
+        {
+            g.insert((e.op, e.tenant, e.gate), e.payload.value);
+        }
+    }
+    g
+}
+
+fn tenant_name(stats: &MultiServeStats, t: Option<u32>) -> String {
+    t.and_then(|t| stats.tenants.get(t as usize))
+        .map_or_else(|| "?".to_string(), |ts| ts.name.clone())
+}
+
+/// Prometheus text-exposition snapshot of a finished run: run counters,
+/// per-tenant counters, and the last wave-boundary gauge samples from the
+/// trace (absent when the run was not traced).
+pub fn prometheus(stats: &MultiServeStats) -> String {
+    let mut out = String::new();
+    let mut metric = |name: &str, typ: &str, help: &str, lines: &[String]| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {typ}");
+        for l in lines {
+            let _ = writeln!(out, "{l}");
+        }
+    };
+
+    metric(
+        "trident_waves_total",
+        "counter",
+        "Serving waves committed.",
+        &[format!("trident_waves_total {}", stats.waves)],
+    );
+    metric(
+        "trident_ticks_total",
+        "counter",
+        "Logical scheduler ticks.",
+        &[format!("trident_ticks_total {}", stats.ticks)],
+    );
+    metric(
+        "trident_online_rounds_total",
+        "counter",
+        "Online-phase protocol rounds.",
+        &[format!("trident_online_rounds_total {}", stats.online_rounds)],
+    );
+    metric(
+        "trident_offline_msgs_in_waves_total",
+        "counter",
+        "Offline-phase messages any party sent inside wave windows (0 when warm keyed).",
+        &[
+            format!("trident_offline_msgs_in_waves_total {}", stats.offline_msgs_in_waves),
+            format!(
+                "trident_offline_msgs_in_waves_total{{op=\"matmul\"}} {}",
+                stats.offline_msgs_matmul
+            ),
+            format!(
+                "trident_offline_msgs_in_waves_total{{op=\"relu\"}} {}",
+                stats.offline_msgs_relu
+            ),
+        ],
+    );
+    metric(
+        "trident_refill_online_msgs_total",
+        "counter",
+        "Online messages inside refill ticks (contract: 0).",
+        &[format!("trident_refill_online_msgs_total {}", stats.refill_online_msgs)],
+    );
+    metric(
+        "trident_quarantines_total",
+        "counter",
+        "Contained tenant-scoped aborts.",
+        &[format!("trident_quarantines_total {}", stats.quarantines.len())],
+    );
+
+    let per_tenant = |field: fn(&crate::serve::multi::TenantServeStats) -> usize| {
+        stats
+            .tenants
+            .iter()
+            .map(|ts| (ts.name.clone(), field(ts)))
+            .collect::<Vec<_>>()
+    };
+    for (name, help, rows) in [
+        ("trident_tenant_served_total", "Queries answered.", per_tenant(|ts| ts.served)),
+        ("trident_tenant_expired_total", "Queries dropped past deadline.", per_tenant(|ts| ts.expired)),
+        ("trident_tenant_rejected_total", "Queries shed by admission control.", per_tenant(|ts| ts.rejected)),
+        ("trident_tenant_waves_total", "Waves granted.", per_tenant(|ts| ts.waves)),
+        ("trident_tenant_keyed_waves_total", "Waves served from the keyed pool.", per_tenant(|ts| ts.keyed_waves)),
+    ] {
+        let lines: Vec<String> = rows
+            .iter()
+            .map(|(t, v)| format!("{name}{{tenant=\"{t}\"}} {v}"))
+            .collect();
+        metric(name, "counter", help, &lines);
+    }
+
+    let gauges = last_gauges(stats);
+    if !gauges.is_empty() {
+        let mut depth = Vec::new();
+        let mut inflight = Vec::new();
+        let mut stock = Vec::new();
+        for (&(op, tenant, gate), &v) in &gauges {
+            match op {
+                "sched.depth" => depth.push(format!(
+                    "trident_sched_queue_depth{{class=\"{}\"}} {v}",
+                    gate.unwrap_or(0)
+                )),
+                "sched.inflight" => inflight.push(format!(
+                    "trident_sched_inflight{{tenant=\"{}\"}} {v}",
+                    tenant_name(stats, tenant)
+                )),
+                "pool.stock.mat" | "pool.stock.relu" => stock.push(format!(
+                    "trident_pool_stock{{tenant=\"{}\",gate=\"{}\",op=\"{}\"}} {v}",
+                    tenant_name(stats, tenant),
+                    gate.unwrap_or(0),
+                    if op == "pool.stock.mat" { "matmul" } else { "relu" }
+                )),
+                _ => {}
+            }
+        }
+        metric(
+            "trident_sched_queue_depth",
+            "gauge",
+            "Pending queries per priority class (last wave-boundary sample).",
+            &depth,
+        );
+        metric(
+            "trident_sched_inflight",
+            "gauge",
+            "Admitted-unserved queries per tenant (last wave-boundary sample).",
+            &inflight,
+        );
+        metric(
+            "trident_pool_stock",
+            "gauge",
+            "Keyed bundles in stock per tenant gate (last wave-boundary sample).",
+            &stock,
+        );
+    }
+    out
+}
+
+/// Human-readable render of the wave-boundary gauges, the offline-silence
+/// check and the quarantine log — the same data the old printf-style
+/// stats lines in `serve_tenants_cli` showed, now derived from the trace
+/// and the aggregated stats instead of ad-hoc counters.
+pub fn gauge_table(stats: &MultiServeStats) -> String {
+    let mut out = String::new();
+    let silent = stats.offline_msgs_in_waves == 0;
+    let _ = writeln!(
+        out,
+        "offline-silent waves: {} ({} offline msgs inside wave windows; matmul {}, relu {})",
+        if silent { "yes" } else { "NO" },
+        stats.offline_msgs_in_waves,
+        stats.offline_msgs_matmul,
+        stats.offline_msgs_relu,
+    );
+    let _ = writeln!(
+        out,
+        "refill online msgs: {} (contract: 0) | aged promotions: {}",
+        stats.refill_online_msgs, stats.aged_promotions
+    );
+    if stats.quarantines.is_empty() {
+        let _ = writeln!(out, "quarantine: none");
+    } else {
+        for q in &stats.quarantines {
+            let _ = writeln!(
+                out,
+                "quarantine: tenant {} ({}) at tick {} — requeued {}, lost {}, \
+                 drained {} mat / {} relu bundles [{}]",
+                q.tenant,
+                tenant_name(stats, Some(q.tenant as u32)),
+                q.at_tick,
+                q.requeued,
+                q.lost,
+                q.drained_mat,
+                q.drained_relu,
+                q.why
+            );
+        }
+    }
+    let gauges = last_gauges(stats);
+    if !gauges.is_empty() {
+        let mut line = String::from("gauges (last wave boundary):");
+        for (&(op, tenant, gate), &v) in &gauges {
+            match op {
+                "sched.depth" => {
+                    let _ = write!(line, " depth[class {}]={v}", gate.unwrap_or(0));
+                }
+                "sched.inflight" => {
+                    let _ = write!(line, " inflight[{}]={v}", tenant_name(stats, tenant));
+                }
+                _ => {}
+            }
+        }
+        let _ = writeln!(out, "{line}");
+        let mut line = String::from("pool stock (last wave boundary):");
+        for (&(op, tenant, gate), &v) in &gauges {
+            if op == "pool.stock.mat" || op == "pool.stock.relu" {
+                let _ = write!(
+                    line,
+                    " {}[{} g{}]={v}",
+                    if op == "pool.stock.mat" { "mat" } else { "relu" },
+                    tenant_name(stats, tenant),
+                    gate.unwrap_or(0)
+                );
+            }
+        }
+        let _ = writeln!(out, "{line}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Payload;
+
+    fn ev(op: &'static str) -> TraceEvent {
+        TraceEvent {
+            op,
+            phase: Phase::Online,
+            lockstep: true,
+            tenant: Some(1),
+            wave: Some(2),
+            gate: None,
+            tick: 3,
+            payload: Payload { msgs: 4, bytes: 5, rounds: 6, compute_ns: 2500, value: -1 },
+        }
+    }
+
+    #[test]
+    fn jsonl_line_shape_is_stable() {
+        let line = jsonl_event(2, &ev("wave.commit"));
+        assert_eq!(
+            line,
+            "{\"op\":\"wave.commit\",\"party\":2,\"phase\":\"online\",\"lockstep\":true,\
+             \"tenant\":1,\"wave\":2,\"gate\":null,\"tick\":3,\"ts\":3002.500,\
+             \"msgs\":4,\"bytes\":5,\"rounds\":6,\"compute_ns\":2500,\"value\":-1}"
+        );
+    }
+
+    #[test]
+    fn trace_jsonl_is_one_event_per_line() {
+        let traces = vec![vec![ev("run.open"), ev("run.close")], vec![ev("run.open")]];
+        let s = trace_jsonl(&traces);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"op\":\"run.open\"") && lines[0].contains("\"party\":0"));
+        assert!(lines[2].contains("\"party\":1"));
+    }
+}

@@ -1,0 +1,483 @@
+//! Observability: deterministic cross-party tracing, unified metering
+//! windows and metric export for the 4PC serving stack.
+//!
+//! ## Identity vs payload
+//!
+//! Every [`TraceEvent`] splits into two halves:
+//!
+//! * **Identity** — `(op, phase, tenant, wave, gate, tick)`: pure
+//!   functions of public lockstep metadata (the serving schedule, the gate
+//!   position in the resident circuit, the logical tick). For events
+//!   recorded at lockstep decision points (`lockstep: true`), all four
+//!   parties emit the **same identity sequence**; [`check_skeletons`]
+//!   asserts it, so the recorder doubles as a desync detector — a party
+//!   that admits a different query, runs a different wave or refills a
+//!   different tenant diverges in its trace skeleton long before the run
+//!   hangs or opens a wrong value.
+//! * **Payload** — measured, per-party numbers ([`Payload`]: bytes, msgs,
+//!   rounds, compute-ns, gauge values). Payloads are *excluded* from the
+//!   cross-party equality: each party reports what it measured.
+//!
+//! Per-party low-level events (`net.send`, `phase.switch`) are recorded
+//! with `lockstep: false` — different parties legitimately send different
+//! message counts — and travel in the JSONL export only.
+//!
+//! ## Observer-effect contract
+//!
+//! The recorder hangs off [`Trace`], a zero-cost-when-off sink: every hook
+//! is a single `Option` check when disabled, every hook sits **after** the
+//! metering arithmetic of the site it instruments, and no hook sends a
+//! message, samples randomness or touches a virtual clock. Enabling
+//! tracing therefore changes no metered byte/msg/round counter and no
+//! opened value — tested (like the PR 5 metering contract at
+//! `Ctx::send_ring`) by
+//! `obs_tracing_is_observer_effect_free_on_deep_two_tenant_run` in the
+//! equivalence suite.
+//!
+//! ## Windows
+//!
+//! [`Window`]/[`Counters`] replace the ~20 hand-subtracted meter snapshots
+//! that used to live in `serve/`, `serve/multi.rs` and `ml/nn.rs`: open a
+//! window, run the measured region, `diff` it. Diffs are **saturating**,
+//! so a window that straddles a `reset_clocks` (which zeroes the round
+//! counters) reads 0 instead of wrapping.
+
+pub mod export;
+
+use crate::net::{PartyCtx, Phase};
+
+// ------------------------------------------------------------- events --
+
+/// Measured (per-party) half of a trace event. Excluded from the
+/// cross-party skeleton equality.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Payload {
+    /// Messages sent inside the event's window.
+    pub msgs: u64,
+    /// Payload bytes sent inside the event's window.
+    pub bytes: u64,
+    /// Protocol rounds inside the event's window.
+    pub rounds: u64,
+    /// Party-local compute nanoseconds inside the event's window.
+    pub compute_ns: u64,
+    /// Event-specific gauge value (queue depth, inflight count, pool
+    /// stock, refill items, query id — the `op` names the meaning).
+    pub value: i64,
+}
+
+impl Payload {
+    /// A pure gauge sample.
+    pub fn gauge(value: i64) -> Payload {
+        Payload { value, ..Payload::default() }
+    }
+}
+
+/// One structured trace event: deterministic identity + measured payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// What happened (static vocabulary: `run.open`, `wave.commit`,
+    /// `gate.matmul`, `sched.admit`, `pool.stock.mat`, `net.send`, …).
+    pub op: &'static str,
+    /// Phase the event was recorded in.
+    pub phase: Phase,
+    /// Recorded at a lockstep decision point: part of the cross-party
+    /// skeleton ([`skeleton`] / [`check_skeletons`]).
+    pub lockstep: bool,
+    /// Tenant index, when the event is tenant-scoped.
+    pub tenant: Option<u32>,
+    /// Global wave sequence number, when the event is wave-scoped.
+    pub wave: Option<u64>,
+    /// Gate (layer) position — or, for `sched.depth`, the priority class.
+    pub gate: Option<u32>,
+    /// Logical scheduler tick.
+    pub tick: u64,
+    pub payload: Payload,
+}
+
+/// The identity tuple compared across parties.
+pub type EventKey = (&'static str, u8, Option<u32>, Option<u64>, Option<u32>, u64);
+
+impl TraceEvent {
+    pub fn key(&self) -> EventKey {
+        (self.op, self.phase as u8, self.tenant, self.wave, self.gate, self.tick)
+    }
+}
+
+/// The deterministic skeleton of a party's trace: the identity sequence of
+/// its lockstep events.
+pub fn skeleton(events: &[TraceEvent]) -> Vec<EventKey> {
+    events.iter().filter(|e| e.lockstep).map(TraceEvent::key).collect()
+}
+
+/// Assert-style check that every party's trace skeleton equals party 0's.
+/// `Ok` for fewer than two traces (and for all-empty traces — tracing
+/// off). The error names the first diverging event.
+pub fn check_skeletons(traces: &[Vec<TraceEvent>]) -> Result<(), String> {
+    let Some(first) = traces.first() else { return Ok(()) };
+    let want = skeleton(first);
+    for (p, t) in traces.iter().enumerate().skip(1) {
+        let got = skeleton(t);
+        if got != want {
+            let at = want.iter().zip(&got).position(|(a, b)| a != b);
+            return Err(match at {
+                Some(i) => format!(
+                    "party {p} trace skeleton diverges at lockstep event {i}: {:?} vs party 0's {:?}",
+                    got[i], want[i]
+                ),
+                None => format!(
+                    "party {p} trace skeleton has {} lockstep events, party 0 has {}",
+                    got.len(),
+                    want.len()
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Merge the four parties' lockstep events into one representative trace:
+/// identity from party 0 (equal everywhere once [`check_skeletons`]
+/// passed), `msgs`/`bytes` summed over parties (matching how the serving
+/// aggregates sum offline-message counters), `rounds`/`compute_ns` as the
+/// max over parties (matching the per-wave latency convention), gauge
+/// `value`s from party 0 (lockstep-deterministic by construction).
+pub fn merge_lockstep(traces: &[Vec<TraceEvent>]) -> Vec<TraceEvent> {
+    let Some(first) = traces.first() else { return Vec::new() };
+    let mut merged: Vec<TraceEvent> = first.iter().filter(|e| e.lockstep).cloned().collect();
+    for t in &traces[1..] {
+        for (m, e) in merged.iter_mut().zip(t.iter().filter(|e| e.lockstep)) {
+            m.payload.msgs += e.payload.msgs;
+            m.payload.bytes += e.payload.bytes;
+            m.payload.rounds = m.payload.rounds.max(e.payload.rounds);
+            m.payload.compute_ns = m.payload.compute_ns.max(e.payload.compute_ns);
+        }
+    }
+    merged
+}
+
+// ------------------------------------------------------------ recorder --
+
+/// Per-party identity cursor: the ambient `(tenant, wave, gate, tick)`
+/// that low-level events (sends, phase switches) are stamped with. Set by
+/// the serving layer at lockstep points.
+#[derive(Clone, Copy, Debug, Default)]
+struct Cursor {
+    tenant: Option<u32>,
+    wave: Option<u64>,
+    gate: Option<u32>,
+    tick: u64,
+}
+
+#[derive(Debug, Default)]
+struct TraceBuf {
+    events: Vec<TraceEvent>,
+    cursor: Cursor,
+}
+
+/// Zero-cost-when-off trace sink carried by every
+/// [`crate::net::PartyCtx`]. Disabled (`buf: None`) by default: every
+/// record/cursor call is one branch and no allocation.
+#[derive(Debug, Default)]
+pub struct Trace {
+    buf: Option<Box<TraceBuf>>,
+}
+
+impl Trace {
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Start recording (idempotent; an existing buffer is kept).
+    pub fn enable(&mut self) {
+        if self.buf.is_none() {
+            self.buf = Some(Box::default());
+        }
+    }
+
+    /// Stop recording and drain the buffered events.
+    pub fn take(&mut self) -> Vec<TraceEvent> {
+        self.buf.take().map(|b| b.events).unwrap_or_default()
+    }
+
+    #[inline]
+    pub fn set_tick(&mut self, tick: u64) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            b.cursor.tick = tick;
+        }
+    }
+
+    #[inline]
+    pub fn set_wave(&mut self, tenant: u32, wave: u64) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            b.cursor.tenant = Some(tenant);
+            b.cursor.wave = Some(wave);
+        }
+    }
+
+    #[inline]
+    pub fn clear_wave(&mut self) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            b.cursor.tenant = None;
+            b.cursor.wave = None;
+            b.cursor.gate = None;
+        }
+    }
+
+    #[inline]
+    pub fn set_gate(&mut self, gate: u32) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            b.cursor.gate = Some(gate);
+        }
+    }
+
+    #[inline]
+    pub fn clear_gate(&mut self) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            b.cursor.gate = None;
+        }
+    }
+
+    /// Record an event stamped with the ambient cursor identity.
+    #[inline]
+    pub fn record(&mut self, op: &'static str, phase: Phase, lockstep: bool, payload: Payload) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            let c = b.cursor;
+            b.events.push(TraceEvent {
+                op,
+                phase,
+                lockstep,
+                tenant: c.tenant,
+                wave: c.wave,
+                gate: c.gate,
+                tick: c.tick,
+                payload,
+            });
+        }
+    }
+
+    /// Record an event with explicit identity fields (gauges and scheduler
+    /// events whose tenant/gate are not the ambient wave's).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_at(
+        &mut self,
+        op: &'static str,
+        phase: Phase,
+        lockstep: bool,
+        tenant: Option<u32>,
+        wave: Option<u64>,
+        gate: Option<u32>,
+        payload: Payload,
+    ) {
+        if let Some(b) = self.buf.as_deref_mut() {
+            let tick = b.cursor.tick;
+            b.events.push(TraceEvent { op, phase, lockstep, tenant, wave, gate, tick, payload });
+        }
+    }
+}
+
+// ------------------------------------------------------------- windows --
+
+/// Snapshot of one party's monotone meter counters, both phases. Taken by
+/// [`PartyCtx::counters`]; differenced by [`Window`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Counters {
+    pub msgs: [u64; 2],
+    pub bytes: [u64; 2],
+    pub value_bytes: [u64; 2],
+    pub rounds: [u64; 2],
+    pub clock: [f64; 2],
+    pub compute: [f64; 2],
+}
+
+impl Counters {
+    pub fn msgs(&self, ph: Phase) -> u64 {
+        self.msgs[ph as usize]
+    }
+
+    pub fn bytes(&self, ph: Phase) -> u64 {
+        self.bytes[ph as usize]
+    }
+
+    pub fn value_bytes(&self, ph: Phase) -> u64 {
+        self.value_bytes[ph as usize]
+    }
+
+    pub fn rounds(&self, ph: Phase) -> u64 {
+        self.rounds[ph as usize]
+    }
+
+    pub fn clock(&self, ph: Phase) -> f64 {
+        self.clock[ph as usize]
+    }
+
+    pub fn compute(&self, ph: Phase) -> f64 {
+        self.compute[ph as usize]
+    }
+
+    /// Party-local compute nanoseconds, for [`Payload::compute_ns`].
+    pub fn compute_ns(&self, ph: Phase) -> u64 {
+        (self.compute[ph as usize] * 1e9) as u64
+    }
+
+    /// Per-field saturating difference: a counter that went *down* between
+    /// the snapshots (only possible across a `reset_clocks`, which zeroes
+    /// the round counters and virtual clocks) reads 0 instead of wrapping.
+    pub fn saturating_sub(&self, earlier: &Counters) -> Counters {
+        let sub = |a: [u64; 2], b: [u64; 2]| [a[0].saturating_sub(b[0]), a[1].saturating_sub(b[1])];
+        let fsub = |a: [f64; 2], b: [f64; 2]| [(a[0] - b[0]).max(0.0), (a[1] - b[1]).max(0.0)];
+        Counters {
+            msgs: sub(self.msgs, earlier.msgs),
+            bytes: sub(self.bytes, earlier.bytes),
+            value_bytes: sub(self.value_bytes, earlier.value_bytes),
+            rounds: sub(self.rounds, earlier.rounds),
+            clock: fsub(self.clock, earlier.clock),
+            compute: fsub(self.compute, earlier.compute),
+        }
+    }
+}
+
+/// One metering window over a party's counters: the single replacement for
+/// the hand-subtracted `let m0 = ctx.net.sent_msgs(..); … - m0` snapshot
+/// pairs that used to be re-plumbed at every serving call site.
+#[derive(Clone, Copy, Debug)]
+pub struct Window {
+    start: Counters,
+}
+
+impl Window {
+    /// Open a window at the party's current counter values.
+    pub fn open(net: &PartyCtx) -> Window {
+        Window { start: net.counters() }
+    }
+
+    /// The (saturating) counter deltas since the window was opened.
+    pub fn diff(&self, net: &PartyCtx) -> Counters {
+        net.counters().saturating_sub(&self.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(op: &'static str, lockstep: bool, tick: u64) -> TraceEvent {
+        TraceEvent {
+            op,
+            phase: Phase::Online,
+            lockstep,
+            tenant: None,
+            wave: None,
+            gate: None,
+            tick,
+            payload: Payload::default(),
+        }
+    }
+
+    #[test]
+    fn skeleton_ignores_non_lockstep_events_and_payloads() {
+        let mut a = vec![ev("run.open", true, 0), ev("wave.commit", true, 3)];
+        let mut b = vec![
+            ev("run.open", true, 0),
+            ev("net.send", false, 1), // per-party detail must not diverge the skeleton
+            ev("wave.commit", true, 3),
+        ];
+        a[1].payload.msgs = 7;
+        b[2].payload.msgs = 9; // payloads differ per party by design
+        assert_eq!(skeleton(&a), skeleton(&b));
+        assert!(check_skeletons(&[a, b]).is_ok());
+    }
+
+    #[test]
+    fn check_skeletons_catches_identity_divergence() {
+        let a = vec![ev("run.open", true, 0), ev("wave.commit", true, 3)];
+        let b = vec![ev("run.open", true, 0), ev("wave.commit", true, 4)];
+        let err = check_skeletons(&[a.clone(), b]).unwrap_err();
+        assert!(err.contains("diverges"), "{err}");
+        let short = vec![ev("run.open", true, 0)];
+        let err = check_skeletons(&[a, short]).unwrap_err();
+        assert!(err.contains("lockstep events"), "{err}");
+    }
+
+    #[test]
+    fn merge_sums_msgs_and_maxes_rounds() {
+        let mut a = vec![ev("wave.commit", true, 1)];
+        let mut b = vec![ev("net.send", false, 1), ev("wave.commit", true, 1)];
+        a[0].payload = Payload { msgs: 2, bytes: 10, rounds: 4, compute_ns: 5, value: 9 };
+        b[1].payload = Payload { msgs: 3, bytes: 1, rounds: 6, compute_ns: 2, value: 1 };
+        let m = merge_lockstep(&[a, b]);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].payload.msgs, 5);
+        assert_eq!(m[0].payload.bytes, 11);
+        assert_eq!(m[0].payload.rounds, 6);
+        assert_eq!(m[0].payload.compute_ns, 5);
+        assert_eq!(m[0].payload.value, 9, "gauge value comes from party 0");
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::default();
+        assert!(!t.enabled());
+        t.record("net.send", Phase::Online, false, Payload::default());
+        t.set_tick(7);
+        assert!(t.take().is_empty());
+    }
+
+    #[test]
+    fn cursor_stamps_events() {
+        let mut t = Trace::default();
+        t.enable();
+        t.set_tick(5);
+        t.set_wave(1, 9);
+        t.set_gate(2);
+        t.record("gate.matmul", Phase::Online, true, Payload::gauge(3));
+        t.clear_wave();
+        t.record("refill.tick", Phase::Offline, true, Payload::default());
+        let evs = t.take();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].key(), ("gate.matmul", Phase::Online as u8, Some(1), Some(9), Some(2), 5));
+        assert_eq!(evs[1].key(), ("refill.tick", Phase::Offline as u8, None, None, None, 5));
+        assert!(!t.enabled(), "take() disables the sink");
+    }
+
+    #[test]
+    fn counters_saturating_sub_never_wraps() {
+        let a = Counters { msgs: [3, 1], rounds: [0, 2], clock: [0.5, 0.0], ..Counters::default() };
+        let b = Counters { msgs: [1, 4], rounds: [1, 0], clock: [1.0, 0.0], ..Counters::default() };
+        let d = a.saturating_sub(&b);
+        assert_eq!(d.msgs, [2, 0], "underflow saturates to 0");
+        assert_eq!(d.rounds, [0, 2]);
+        assert_eq!(d.clock, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn window_survives_clock_reset_with_saturating_diff() {
+        use crate::net::{NetProfile, P1, P2};
+        let run = crate::proto::run_4pc(NetProfile::zero(), 71, |ctx| {
+            let w = Window::open(ctx.net);
+            ctx.online(|ctx| {
+                if ctx.id() == P1 {
+                    ctx.send_ring1(P2, crate::ring::Z64(5));
+                }
+                if ctx.id() == P2 {
+                    ctx.recv_ring1::<crate::ring::Z64>(P1).map(|_| ())
+                } else {
+                    Ok(())
+                }
+            })?;
+            let before = w.diff(ctx.net);
+            // reset_clocks zeroes the round counters: the same window must
+            // now read 0 rounds, not panic on u64 underflow
+            ctx.net.reset_clocks();
+            let after = w.diff(ctx.net);
+            Ok((before, after))
+        });
+        let (outs, _) = run.expect_ok();
+        let (before, after) = outs[1];
+        assert_eq!(before.msgs(Phase::Online), 1);
+        assert_eq!(before.rounds(Phase::Online), 1);
+        assert_eq!(after.msgs(Phase::Online), 1, "sent counters are not reset");
+        assert_eq!(after.rounds(Phase::Online), 0, "reset rounds saturate, never wrap");
+    }
+}

@@ -13,7 +13,7 @@
 //! poolable per circuit position:
 //!
 //! * the multiplication is `r·v` where `r` comes from the pooled
-//!   [`BitExtMask`] and `v` is the `Π_MatMulTr` output, whose mask is
+//!   [`crate::convert::BitExtMask`] and `v` is the `Π_MatMulTr` output, whose mask is
 //!   `λ_v = −rᵗ` — embedded in the *matrix* bundle's truncation pairs;
 //! * the injected bit's mask is `λ_b = λ_x ⊕ λ_y`, where `λ_x` comes from
 //!   the pooled mask and `λ_y` is the `(P3, P0)` `Π_vSh` mask of
@@ -39,7 +39,7 @@
 //! case (`tests/equivalence.rs` locks this down).
 
 use crate::convert::bit2a::{bitinj_offline, BitInjCorr};
-use crate::convert::bitext::{gen_bitext_masks, BitExtMask};
+use crate::convert::bitext::gen_bitext_masks;
 use crate::net::{Abort, P0, P3};
 use crate::proto::mult::{mult_gamma_offline, sample_lam_share, GammaView};
 use crate::proto::sharing::{sample_vsh_masks, vsh_mask_skeleton, VshMask};
@@ -63,8 +63,13 @@ pub fn relu_key_for(mat_key: &CircuitKey) -> CircuitKey {
 #[derive(Clone)]
 pub struct ReluCorr {
     pub(crate) key: CircuitKey,
-    /// `Π_BitExt` mask material: `[[r]]`, `[[msb r]]^B` per element.
-    pub(crate) masks: Vec<BitExtMask>,
+    /// `Π_BitExt` mask material, stored SoA (`[[r]]` and `[[msb r]]^B` as
+    /// separate vectors): the online phase consumes the two components in
+    /// separate passes — `r` feeds the `Π_Mult` exchange, `x` the final
+    /// xor — so splitting once at fill time lets a warm keyed wave borrow
+    /// both as slices with **zero** per-wave share-vector materialisation.
+    pub(crate) r_masks: Vec<MShare<Z64>>,
+    pub(crate) x_masks: Vec<MShare<Bit>>,
     /// Pre-exchanged `⟨γ_{r·v}⟩` against the paired matrix bundle's
     /// output masks (`λ_v = −rᵗ`).
     pub(crate) gamma: GammaView<Z64>,
@@ -111,7 +116,7 @@ impl ReluCorr {
 
     /// Corrupt a held λ component of the first mask's `[[r]]` share.
     pub fn tamper_mask_r(&mut self) {
-        match &mut self.masks[0].r {
+        match &mut self.r_masks[0] {
             MShare::Eval { lam_next, .. } => *lam_next += Z64(1),
             MShare::Helper { lam } => lam[0] += Z64(1),
         }
@@ -135,26 +140,31 @@ pub(crate) fn gen_relu_corr(
     assert_eq!(vs_skel.len(), n, "one output-wire skeleton per ReLU element");
     let me = ctx.id();
 
+    // SoA split at fill time: the bundle stores r and x as separate
+    // vectors, so the keyed wave borrows them directly (no per-wave
+    // collect on the hot path)
     let masks = gen_bitext_masks(ctx, n)?;
-    let r_sh: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
+    let r_masks: Vec<MShare<Z64>> = masks.iter().map(|m| m.r).collect();
+    let x_masks: Vec<MShare<Bit>> = masks.iter().map(|m| m.x).collect();
     // the internal Π_Mult's correlation: λ_z (PRF-only) + the γ-exchange,
     // computed against λ_r (pooled) and λ_v (the pairs' −rᵗ)
     let lam_z = ctx.offline(|ctx| sample_lam_share::<Z64>(ctx));
-    let gamma = mult_gamma_offline(ctx, &r_sh, vs_skel)?;
+    let gamma = mult_gamma_offline(ctx, &r_masks, vs_skel)?;
     // the y = msb(rv) sharing mask, with Π_vSh's own (P3, P0) scope pattern
     let y_masks = sample_vsh_masks::<Bit>(ctx, (P3, P0), n);
     // the injected bit's wire is b = x ⊕ y: λ_b = λ_x ⊕ λ_y, m still 0 —
     // Π_BitInj's offline phase reads only the λ components
-    let b_skel: Vec<MShare<Bit>> = masks
+    let b_skel: Vec<MShare<Bit>> = x_masks
         .iter()
         .zip(&y_masks)
-        .map(|(m, ym)| m.x + vsh_mask_skeleton(me, ym))
+        .map(|(x, ym)| *x + vsh_mask_skeleton(me, ym))
         .collect();
     let binj = bitinj_offline(ctx, &b_skel, vs_skel)?;
 
     Ok(ReluCorr {
         key,
-        masks,
+        r_masks,
+        x_masks,
         gamma,
         lam_z,
         y_masks,

@@ -161,6 +161,14 @@ impl<'a> Ctx<'a> {
     // `send_with_bits` as-is or it silently breaks the §VI tables; the
     // payload side is free to get tighter. Rounds are unaffected either
     // way: packing changes message *size*, never message *count*.
+    //
+    // The trace recorder ([`crate::obs`]) observes the same meters from
+    // strictly *after* this arithmetic: `obs::Window` snapshots counters
+    // and diffs them, and trace hooks never send, pad, or re-class a
+    // message. Enabling tracing therefore cannot move a single number in
+    // this contract — the observer-effect test in `tests/equivalence.rs`
+    // pins that, and EXPERIMENTS.md §Observability documents how the
+    // exported events map back onto these meters.
 
     /// Send a slice of ring elements (Value class; packed bulk codec on
     /// the wire, lemma-accurate analytic bits in the meter — see the

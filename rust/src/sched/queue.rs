@@ -132,6 +132,21 @@ impl SchedQueue {
         self.pending.iter().filter(|q| q.tenant == t).count()
     }
 
+    /// Admitted-but-unanswered queries of tenant `t` (queued + in
+    /// service) — the per-tenant in-flight gauge sampled at wave
+    /// boundaries into the trace ([`crate::obs`]).
+    pub fn inflight(&self, t: usize) -> usize {
+        self.inflight[t]
+    }
+
+    /// Pending queries whose *effective* class at tick `now` is `class` —
+    /// the per-class queue-depth gauge sampled at wave boundaries into
+    /// the trace. Deterministic: effective classes are functions of
+    /// public metadata and the tick.
+    pub fn depth_class(&self, class: u8, now: u64) -> usize {
+        self.pending.iter().filter(|q| self.effective_class(q, now) == class).count()
+    }
+
     /// Admit or shed one query (admission control). Returns whether the
     /// query was accepted.
     pub fn admit(&mut self, q: SchedQuery) -> bool {
@@ -466,6 +481,27 @@ mod tests {
         // saturated, not wrapped: admission stays unjammed
         sq.set_cap(0, 1);
         assert!(sq.admit(q(0, 0, 0, 0, None)));
+    }
+
+    #[test]
+    fn gauge_accessors_track_inflight_and_effective_class_depth() {
+        let mut sq = SchedQueue::new(2, 2);
+        assert!(sq.admit(q(0, 0, 1, 0, None)));
+        assert!(sq.admit(q(1, 0, 0, 0, None)));
+        assert_eq!(sq.inflight(0), 1);
+        assert_eq!(sq.inflight(1), 1);
+        assert_eq!(sq.depth_class(0, 0), 1);
+        assert_eq!(sq.depth_class(1, 0), 1);
+        // aging moves the class-1 query's *effective* depth bucket
+        assert_eq!(sq.depth_class(0, 2), 2);
+        assert_eq!(sq.depth_class(1, 2), 0);
+        // popping empties depth but keeps in-flight until completion
+        let b = sq.pop_batch(1, 1, 0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(sq.depth_class(0, 0), 0);
+        assert_eq!(sq.inflight(1), 1);
+        sq.complete(1, 1);
+        assert_eq!(sq.inflight(1), 0);
     }
 
     #[test]

@@ -66,7 +66,8 @@ pub mod multi;
 
 pub use multi::{
     cleartext_tenant_predictions, serve_multi, serve_multi_checked, tenant_query_stream,
-    FaultKind, FaultPlan, MultiServeConfig, MultiServeStats, QuarantineStats, TenantServeStats,
+    FaultKind, FaultPlan, MultiServeConfig, MultiServeStats, OpRollup, QuarantineStats,
+    TenantServeStats,
 };
 
 use std::collections::VecDeque;
@@ -74,6 +75,7 @@ use std::collections::VecDeque;
 use crate::crypto::Rng;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, Phase, P1, P2};
+use crate::obs::Window;
 use crate::pool::{
     relu_key_for, CircuitKey, OpKind, Pool, PoolStats, Refill, RefillOutcome, WaterMarks,
 };
@@ -451,9 +453,9 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
 
     // warm-up: the first "between waves" slot is before the first wave
     let tick = |ctx: &mut Ctx, out: &mut PartyOut| -> Result<(), Abort> {
-        let m0 = ctx.net.sent_msgs(Phase::Online);
+        let w = Window::open(ctx.net);
         let outcome = refill.tick(ctx)?;
-        out.tick_online_msgs += ctx.net.sent_msgs(Phase::Online) - m0;
+        out.tick_online_msgs += w.diff(ctx.net).msgs(Phase::Online);
         out.refill_outcomes.push(outcome);
         Ok(())
     };
@@ -476,12 +478,9 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
     ctx.net.reset_clocks();
     while let Some(batch) = queue.next_batch() {
         let rows: usize = batch.iter().map(|q| q.rows).sum();
-        let t0 = ctx.net.clock(Phase::Online);
-        let r0 = ctx.net.rounds(Phase::Online);
-        let c0 = ctx.net.compute_time(Phase::Online);
-        let vb0 = ctx.net.sent_value_bytes(Phase::Online);
-        let om0 = ctx.net.sent_msgs(Phase::Offline);
-        let ob0 = ctx.net.sent_bytes(Phase::Offline);
+        // one Window covers every per-batch meter the old six hand-kept
+        // snapshots tracked (saturating diffs, phase-indexed)
+        let bw = Window::open(ctx.net);
 
         // stack the wave into one cross-request matrix
         let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
@@ -512,8 +511,8 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
                 matmul_tr(ctx, &x_sh, &w)?
             }
         };
-        let om_mat = ctx.net.sent_msgs(Phase::Offline) - om0;
-        let or0 = ctx.net.sent_msgs(Phase::Offline);
+        let om_mat = bw.diff(ctx.net).msgs(Phase::Offline);
+        let wr = Window::open(ctx.net);
         if cfg.relu {
             // flat path: the wave stays on SoA matrices; the share-vector
             // conversion lives inside the mat-level ReLU entry points
@@ -524,7 +523,7 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
                 _ => crate::ml::relu_mat(ctx, &u)?.0,
             };
         }
-        let om_relu = ctx.net.sent_msgs(Phase::Offline) - or0;
+        let om_relu = wr.diff(ctx.net).msgs(Phase::Offline);
 
         // deliver: open towards the data owner, flushing verification —
         // SoA reconstruction, no per-element share vector
@@ -533,12 +532,13 @@ fn serve_party(ctx: &mut Ctx, cfg: &ServeConfig) -> Result<PartyOut, Abort> {
             out.answers.extend(vals.data().iter().map(|&v| FixedPoint::decode(v)));
         }
 
-        out.batch_lat.push(ctx.net.clock(Phase::Online) - t0);
-        out.batch_rounds.push(ctx.net.rounds(Phase::Online) - r0);
-        out.batch_compute.push(ctx.net.compute_time(Phase::Online) - c0);
-        out.batch_value_bytes.push(ctx.net.sent_value_bytes(Phase::Online) - vb0);
-        out.wave_offline_msgs.push(ctx.net.sent_msgs(Phase::Offline) - om0);
-        out.wave_offline_bytes.push(ctx.net.sent_bytes(Phase::Offline) - ob0);
+        let d = bw.diff(ctx.net);
+        out.batch_lat.push(d.clock(Phase::Online));
+        out.batch_rounds.push(d.rounds(Phase::Online));
+        out.batch_compute.push(d.compute(Phase::Online));
+        out.batch_value_bytes.push(d.value_bytes(Phase::Online));
+        out.wave_offline_msgs.push(d.msgs(Phase::Offline));
+        out.wave_offline_bytes.push(d.bytes(Phase::Offline));
         out.wave_offline_msgs_mat.push(om_mat);
         out.wave_offline_msgs_relu.push(om_relu);
 

@@ -48,6 +48,7 @@ use crate::crypto::Rng;
 use crate::ml::nn::forward_keyed;
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, PartyId, Phase, P2};
+use crate::obs::{self, Payload, TraceEvent, Window};
 use crate::pool::{relu_key_for, Pool, PoolStats};
 use crate::proto::{matmul_tr, run_4pc, Ctx};
 use crate::ring::fixed::FixedPoint;
@@ -88,6 +89,12 @@ pub struct MultiServeConfig {
     /// Mid-serve fault injection (tests and CLI demos drive the
     /// containment path with it). `None` = honest run.
     pub fault: Option<FaultPlan>,
+    /// Record the structured trace: run/wave/gate spans, scheduler and
+    /// pool events, wave-boundary gauges. The hooks sit strictly after
+    /// the metering arithmetic and never send, so metered bytes, msgs,
+    /// rounds and virtual clocks are byte-for-byte identical with and
+    /// without it (the observer-effect contract — tested).
+    pub trace: bool,
 }
 
 impl Default for MultiServeConfig {
@@ -101,6 +108,7 @@ impl Default for MultiServeConfig {
             seed: 1234,
             containment: false,
             fault: None,
+            trace: false,
         }
     }
 }
@@ -245,6 +253,8 @@ struct MultiPartyOut {
     /// Shutdown stock resolved per layer shard (empty in inline mode).
     pool_left_mat_layers: Vec<Vec<usize>>,
     pool_left_relu_layers: Vec<Vec<usize>>,
+    /// This party's structured trace (empty when `cfg.trace` is off).
+    trace: Vec<TraceEvent>,
 }
 
 impl MultiPartyOut {
@@ -274,6 +284,7 @@ impl MultiPartyOut {
             pool_left_relu: vec![0; nt],
             pool_left_mat_layers: vec![Vec::new(); nt],
             pool_left_relu_layers: vec![Vec::new(); nt],
+            trace: Vec::new(),
         }
     }
 }
@@ -371,6 +382,73 @@ pub struct MultiServeStats {
     pub quarantines: Vec<QuarantineStats>,
     pub pool_stats: Option<PoolStats>,
     pub report: NetReport,
+    /// Merged lockstep trace (msgs/bytes summed over parties, rounds and
+    /// compute maxed — mirroring how the scalar meters aggregate). Empty
+    /// when `cfg.trace` was off. Aggregation asserts all four parties
+    /// emitted identical trace *skeletons* before merging.
+    pub trace: Vec<TraceEvent>,
+    /// Each party's full event stream (lockstep AND per-party detail
+    /// events like `net.send`) — the JSONL exporter's input. Empty when
+    /// tracing was off.
+    pub party_traces: Vec<Vec<TraceEvent>>,
+}
+
+/// One row of the per-protocol flame-style breakdown: a tenant's gate
+/// position and op with its committed-wave count, offline messages
+/// (summed over parties) and online compute span — the paper's
+/// Table-6-shaped offline/online split resolved per gate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpRollup {
+    pub tenant: usize,
+    pub gate: usize,
+    pub op: &'static str,
+    pub waves: u64,
+    pub offline_msgs: u64,
+    pub compute_ns: u64,
+}
+
+impl MultiServeStats {
+    /// Per-tenant per-gate per-op rollup of the merged trace (the
+    /// schema-5 bench rows and the `bench` flame table render this).
+    /// Falls back to the per-layer offline meters when the run was not
+    /// traced — same msgs totals, but no compute spans (0).
+    pub fn op_rollup(&self) -> Vec<OpRollup> {
+        use std::collections::BTreeMap;
+        let mut acc: BTreeMap<(usize, usize, &'static str), (u64, u64, u64)> = BTreeMap::new();
+        if self.trace.is_empty() {
+            for (t, ts) in self.tenants.iter().enumerate() {
+                for (g, &m) in ts.offline_msgs_matmul_layers.iter().enumerate() {
+                    acc.insert((t, g, "matmul"), (ts.waves as u64, m, 0));
+                }
+                for (g, &m) in ts.offline_msgs_relu_layers.iter().enumerate() {
+                    acc.insert((t, g, "relu"), (ts.waves as u64, m, 0));
+                }
+            }
+        } else {
+            for e in &self.trace {
+                let op = match e.op {
+                    "gate.matmul" => "matmul",
+                    "gate.relu" => "relu",
+                    _ => continue,
+                };
+                let (Some(t), Some(g)) = (e.tenant, e.gate) else { continue };
+                let row = acc.entry((t as usize, g as usize, op)).or_insert((0, 0, 0));
+                row.0 += 1;
+                row.1 += e.payload.msgs;
+                row.2 += e.payload.compute_ns;
+            }
+        }
+        acc.into_iter()
+            .map(|((tenant, gate, op), (waves, offline_msgs, compute_ns))| OpRollup {
+                tenant,
+                gate,
+                op,
+                waves,
+                offline_msgs,
+                compute_ns,
+            })
+            .collect()
+    }
 }
 
 /// Nearest-rank percentile of an unsorted sample (`p` in `[0, 1]`): the
@@ -399,11 +477,28 @@ fn tick_tenant(
     t: usize,
     max_mat: usize,
 ) -> Result<(), Abort> {
-    let m0 = ctx.net.sent_msgs(Phase::Online);
+    let w = Window::open(ctx.net);
     let o = reg.tick(ctx, t, max_mat)?;
-    out.tick_online_msgs += ctx.net.sent_msgs(Phase::Online) - m0;
+    let d = w.diff(ctx.net);
+    out.tick_online_msgs += d.msgs(Phase::Online);
     out.refill_ticks[t] += 1;
     out.refill_mat_items[t] += o.mat_items;
+    // lockstep identity (the tick comes from the cursor); the payload is
+    // this party's measured offline refill traffic
+    ctx.net.trace_event_at(
+        "refill.tick",
+        true,
+        Some(t as u32),
+        None,
+        None,
+        Payload {
+            msgs: d.msgs(Phase::Offline),
+            bytes: d.bytes(Phase::Offline),
+            compute_ns: d.compute_ns(Phase::Offline),
+            value: o.mat_items as i64,
+            ..Payload::default()
+        },
+    );
     Ok(())
 }
 
@@ -417,6 +512,10 @@ struct WaveOut {
     /// ReLU sub-window (gate order, length = the tenant's depth).
     om_mat: Vec<u64>,
     om_relu: Vec<u64>,
+    /// The matching per-gate online compute spans (this party's measured
+    /// ns inside each sub-window) — the `gate.*` trace event payloads.
+    cn_mat: Vec<u64>,
+    cn_relu: Vec<u64>,
 }
 
 /// One wave's protocol body: stack the batch, then the tenant's whole
@@ -438,7 +537,7 @@ fn run_wave(
     rows: usize,
     batch: &[SchedQuery],
     keyed: bool,
-    om0: u64,
+    wave_win: Window,
 ) -> Result<WaveOut, Abort> {
     let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
         let mut m = F64Mat::zeros(rows, spec.d);
@@ -458,22 +557,26 @@ fn run_wave(
     let keys = spec.layer_keys(rows);
     let use_keyed = keyed && ctx.pool_mut().is_some_and(|p| p.check_layer_vec(&keys));
     let model = reg.model(t);
-    let (u, om_mat, om_relu) = if use_keyed {
+    let (u, om_mat, om_relu, cn_mat, cn_relu) = if use_keyed {
         let weights: Vec<_> = model.layers.iter().map(|l| l.w.clone()).collect();
         let x_enc: Option<Matrix<Z64>> = stacked.as_ref().map(F64Mat::encode);
         let kf = forward_keyed(ctx, &weights, &keys, x_enc.as_ref())?;
-        (kf.out, kf.om_mat, kf.om_relu)
+        (kf.out, kf.om_mat, kf.om_relu, kf.cn_mat, kf.cn_relu)
     } else {
         let mut om_mat = Vec::with_capacity(depth);
         let mut om_relu = Vec::with_capacity(depth);
+        let mut cn_mat = Vec::with_capacity(depth);
+        let mut cn_relu = Vec::with_capacity(depth);
         let mut a = share_fixed_mat(ctx, P2, stacked.as_ref(), rows, spec.d)?;
-        // the input share is attributed to layer 0's matrix window (om0
-        // was snapshotted before the wave body started)
-        let mut m0 = om0;
+        // the input share is attributed to layer 0's matrix window
+        // (`wave_win` opened before the wave body started)
+        let mut w = wave_win;
         for l in 0..depth {
             let u = matmul_tr(ctx, &a, &model.layers[l].w)?;
-            om_mat.push(ctx.net.sent_msgs(Phase::Offline) - m0);
-            let r0 = ctx.net.sent_msgs(Phase::Offline);
+            let dm = w.diff(ctx.net);
+            om_mat.push(dm.msgs(Phase::Offline));
+            cn_mat.push(dm.compute_ns(Phase::Online));
+            let wr = Window::open(ctx.net);
             a = if spec.layer_relu(l) {
                 // flat path: SoA matrices end to end (share-vector
                 // conversion lives inside the mat-level ReLU entry points)
@@ -481,10 +584,12 @@ fn run_wave(
             } else {
                 u
             };
-            om_relu.push(ctx.net.sent_msgs(Phase::Offline) - r0);
-            m0 = ctx.net.sent_msgs(Phase::Offline);
+            let dr = wr.diff(ctx.net);
+            om_relu.push(dr.msgs(Phase::Offline));
+            cn_relu.push(dr.compute_ns(Phase::Online));
+            w = Window::open(ctx.net);
         }
-        (a, om_mat, om_relu)
+        (a, om_mat, om_relu, cn_mat, cn_relu)
     };
     let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
     let mut answers = Vec::new();
@@ -500,7 +605,7 @@ fn run_wave(
             off += q.rows * cols;
         }
     }
-    Ok(WaveOut { answers, om_mat, om_relu })
+    Ok(WaveOut { answers, om_mat, om_relu, cn_mat, cn_relu })
 }
 
 /// The per-party multi-tenant serving program.
@@ -512,6 +617,10 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         "multi-tenant serving shards keyed material per tenant; use Inline or Keyed"
     );
     let keyed = cfg.mode == PoolMode::Keyed;
+    if cfg.trace {
+        ctx.net.trace().enable();
+        ctx.net.trace_event("run.open", true, Payload::gauge(nt as i64));
+    }
 
     // ---- model load: registry shares every tenant's weights (lockstep
     // tenant order), verified before any pool material is generated ----
@@ -556,14 +665,16 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
     // counters (the fault plan's trigger coordinate)
     let mut wave_seq: u64 = 0;
     let mut grants = vec![0usize; nt];
+    let max_class = cfg.tenants.iter().map(|s| s.class).max().unwrap_or(0);
     loop {
+        ctx.net.trace().set_tick(now);
         // 1. arrivals due at this tick enter admission control
         for t in 0..nt {
             let spec = &cfg.tenants[t];
             while next_q[t] < spec.queries && spec.arrival_tick(next_q[t]) <= now {
                 let id = next_q[t];
                 let arrival = spec.arrival_tick(id);
-                queue.admit(SchedQuery {
+                let admitted = queue.admit(SchedQuery {
                     tenant: t,
                     id,
                     rows: spec.rows_per_query,
@@ -572,11 +683,19 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
                     deadline: spec.deadline_ticks.map(|dl| arrival + dl),
                     x: streams.as_ref().map(|s| s[t][id].clone()),
                 });
+                if ctx.net.trace_on() {
+                    let op = if admitted { "sched.admit" } else { "sched.reject" };
+                    ctx.net
+                        .trace_event_at(op, true, Some(t as u32), None, None, Payload::gauge(id as i64));
+                }
                 next_q[t] += 1;
             }
         }
         // 2. expiry sweep: past-deadline queries are counted, never served
-        queue.expire(now);
+        let expired = queue.expire(now);
+        if expired > 0 {
+            ctx.net.trace_event("sched.expire", true, Payload::gauge(expired as i64));
+        }
         // 3. termination
         let arrivals_done = (0..nt).all(|t| next_q[t] >= cfg.tenants[t].queries);
         if queue.is_empty() && arrivals_done {
@@ -602,10 +721,9 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         let rows: usize = batch.iter().map(|q| q.rows).sum();
         let this_wave = wave_seq;
         wave_seq += 1;
-        let t0 = ctx.net.clock(Phase::Online);
-        let r0 = ctx.net.rounds(Phase::Online);
-        let om0 = ctx.net.sent_msgs(Phase::Offline);
-        let ob0 = ctx.net.sent_bytes(Phase::Offline);
+        ctx.net.trace().set_wave(t as u32, this_wave);
+        ctx.net.trace_event("wave.start", true, Payload::gauge(batch.len() as i64));
+        let ww = Window::open(ctx.net);
         let h0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits);
         let m0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_misses);
 
@@ -640,13 +758,14 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         }
         grants[t] += 1;
 
-        let res = run_wave(ctx, &reg, spec, t, rows, &batch, keyed, om0);
+        let res = run_wave(ctx, &reg, spec, t, rows, &batch, keyed, ww);
         // meter deltas captured before the barrier, so the Control-class
         // barrier round-trip cannot perturb the wave's numbers
-        let lat = ctx.net.clock(Phase::Online) - t0;
-        let rounds_d = ctx.net.rounds(Phase::Online) - r0;
-        let offm = ctx.net.sent_msgs(Phase::Offline) - om0;
-        let offb = ctx.net.sent_bytes(Phase::Offline) - ob0;
+        let d = ww.diff(ctx.net);
+        let lat = d.clock(Phase::Online);
+        let rounds_d = d.rounds(Phase::Online);
+        let offm = d.msgs(Phase::Offline);
+        let offb = d.bytes(Phase::Offline);
         let hit = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits) > h0;
         let missed = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_misses) > m0;
 
@@ -716,6 +835,10 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
                          (statuses {statuses:?})"
                     ),
                 });
+                // a quarantined wave contributes NO gate events — the
+                // trace rollup stays reconciled with committed meters
+                ctx.net.trace_event("wave.quarantine", true, Payload::gauge(requeued as i64));
+                ctx.net.trace().clear_wave();
                 now += 1;
                 continue;
             }
@@ -723,6 +846,45 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
             // containment off (or inline mode): any abort is run-fatal
             res?
         };
+
+        // trace the committed wave: one span per gate (msgs from the same
+        // sub-windows the meters use, so the rollup reconciles exactly),
+        // then the wave-commit span
+        if ctx.net.trace_on() {
+            for l in 0..wave.om_mat.len() {
+                ctx.net.trace().set_gate(l as u32);
+                ctx.net.trace_event(
+                    "gate.matmul",
+                    true,
+                    Payload {
+                        msgs: wave.om_mat[l],
+                        compute_ns: wave.cn_mat[l],
+                        ..Payload::default()
+                    },
+                );
+                ctx.net.trace_event(
+                    "gate.relu",
+                    true,
+                    Payload {
+                        msgs: wave.om_relu[l],
+                        compute_ns: wave.cn_relu[l],
+                        ..Payload::default()
+                    },
+                );
+            }
+            ctx.net.trace().clear_gate();
+            ctx.net.trace_event(
+                "wave.commit",
+                true,
+                Payload {
+                    msgs: offm,
+                    bytes: offb,
+                    rounds: rounds_d,
+                    compute_ns: d.compute_ns(Phase::Online),
+                    value: batch.len() as i64,
+                },
+            );
+        }
 
         out.wave_tenant.push(t);
         out.wave_lat.push(lat);
@@ -739,6 +901,59 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
             .push(batch.iter().map(|q| (q.id, now - q.arrival)).collect());
         out.answers[t].extend(wave.answers);
         queue.complete(t, batch.len());
+
+        // wave-boundary gauge samples: queue depth per effective class,
+        // in-flight per tenant, keyed pool stock per gate — all lockstep
+        // functions of public scheduler/pool state
+        if ctx.net.trace_on() {
+            for class in 0..=max_class {
+                let depth = queue.depth_class(class, now) as i64;
+                ctx.net.trace_event_at(
+                    "sched.depth",
+                    true,
+                    None,
+                    None,
+                    Some(class as u32),
+                    Payload::gauge(depth),
+                );
+            }
+            for tt in 0..nt {
+                let inflight = queue.inflight(tt) as i64;
+                ctx.net.trace_event_at(
+                    "sched.inflight",
+                    true,
+                    Some(tt as u32),
+                    None,
+                    None,
+                    Payload::gauge(inflight),
+                );
+            }
+            let mut stock: Vec<(&'static str, u32, u32, i64)> = Vec::new();
+            if let Some(pool) = ctx.pool.as_ref() {
+                for tt in 0..nt {
+                    for (l, layer) in reg.model(tt).layers.iter().enumerate() {
+                        stock.push((
+                            "pool.stock.mat",
+                            tt as u32,
+                            l as u32,
+                            pool.len_mat(&layer.key) as i64,
+                        ));
+                        if let Some(rk) = layer.relu_key {
+                            stock.push((
+                                "pool.stock.relu",
+                                tt as u32,
+                                l as u32,
+                                pool.len_relu(&rk) as i64,
+                            ));
+                        }
+                    }
+                }
+            }
+            for (op, tt, l, v) in stock {
+                ctx.net.trace_event_at(op, true, Some(tt), None, Some(l), Payload::gauge(v));
+            }
+        }
+        ctx.net.trace().clear_wave();
 
         // 6. between waves: one refill tick for the most-depleted tenant
         // pool that can still consume a full wave; the tick's top-up is
@@ -779,6 +994,11 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         }
     }
     out.queue_stats = queue.stats().clone();
+    if cfg.trace {
+        ctx.net.trace().set_tick(now);
+        ctx.net.trace_event("run.close", true, Payload::gauge(out.wave_tenant.len() as i64));
+        out.trace = ctx.net.trace().take();
+    }
     Ok(out)
 }
 
@@ -836,6 +1056,14 @@ fn aggregate(
             "containment must be lockstep-deterministic across parties"
         );
     }
+    // the trace recorder doubles as a correctness check: identity fields
+    // are pure functions of public lockstep metadata, so all four parties
+    // must have emitted identical trace skeletons
+    let party_traces: Vec<Vec<TraceEvent>> = outs.iter().map(|o| o.trace.clone()).collect();
+    if let Err(e) = obs::check_skeletons(&party_traces) {
+        panic!("trace skeleton desync across parties: {e}");
+    }
+    let trace = obs::merge_lockstep(&party_traces);
     let waves = outs[1].wave_tenant.len();
 
     // per-wave latency is the max across parties; per-wave offline traffic
@@ -937,7 +1165,7 @@ fn aggregate(
         });
     }
 
-    MultiServeStats {
+    let stats = MultiServeStats {
         tenants,
         waves,
         wave_tenants: outs[1].wave_tenant.clone(),
@@ -955,7 +1183,31 @@ fn aggregate(
         quarantines: outs[1].quarantines.clone(),
         pool_stats: outs[1].pool_stats,
         report,
+        trace,
+        party_traces,
+    };
+    // the trace-derived rollup must reconcile EXACTLY with the metered
+    // per-op counters: gate events carry the same sub-window msgs the
+    // meters sum, and both sides skip quarantined waves
+    if !stats.trace.is_empty() {
+        let (mut tm, mut tr) = (0u64, 0u64);
+        for e in &stats.trace {
+            match e.op {
+                "gate.matmul" => tm += e.payload.msgs,
+                "gate.relu" => tr += e.payload.msgs,
+                _ => {}
+            }
+        }
+        assert_eq!(
+            tm, stats.offline_msgs_matmul,
+            "trace matmul rollup must reconcile with offline_msgs_matmul"
+        );
+        assert_eq!(
+            tr, stats.offline_msgs_relu,
+            "trace relu rollup must reconcile with offline_msgs_relu"
+        );
     }
+    stats
 }
 
 #[cfg(test)]

@@ -2084,3 +2084,116 @@ fn deep_containment_quarantines_only_the_tampered_tenant() {
     assert_eq!(innocent.served, 4, "the innocent tenant never notices");
     assert_tenant_answers_match_cleartext(&s, &cfg, "deep containment");
 }
+
+// ------------------------------------------------------------ observability
+
+/// The observer-effect contract: enabling the trace recorder must not
+/// change a single metered value or opened answer. Trace hooks sit
+/// strictly after the metering arithmetic and never send, sample, or
+/// touch the virtual clocks — so two otherwise-identical runs, one
+/// traced and one not, must agree on every deterministic meter.
+/// (Latencies and compute times are wall-clock-derived and legitimately
+/// differ between any two runs; they are deliberately not compared.)
+#[test]
+fn tracing_is_observer_effect_free() {
+    use trident::serve::serve_multi;
+    let off_cfg = deep_two_tenant_cfg(1, 2);
+    let mut on_cfg = deep_two_tenant_cfg(1, 2);
+    on_cfg.trace = true;
+    let off = serve_multi(NetProfile::zero(), off_cfg.clone());
+    let on = serve_multi(NetProfile::zero(), on_cfg);
+    assert!(off.trace.is_empty() && !on.trace.is_empty());
+    assert_eq!(off.online_rounds, on.online_rounds);
+    assert_eq!(off.offline_msgs_in_waves, on.offline_msgs_in_waves);
+    assert_eq!(off.offline_msgs_matmul, on.offline_msgs_matmul);
+    assert_eq!(off.offline_msgs_relu, on.offline_msgs_relu);
+    assert_eq!(off.refill_online_msgs, on.refill_online_msgs);
+    assert_eq!(off.waves, on.waves);
+    assert_eq!(off.ticks, on.ticks);
+    assert_eq!(off.wave_tenants, on.wave_tenants);
+    assert_eq!(off.wave_offline_msgs, on.wave_offline_msgs);
+    assert_eq!(off.report.rounds, on.report.rounds, "metered rounds unchanged");
+    assert_eq!(off.report.value_bits, on.report.value_bits, "analytic bits unchanged");
+    assert_eq!(off.report.value_bytes, on.report.value_bytes, "value bytes unchanged");
+    assert_eq!(off.report.total_bytes, on.report.total_bytes, "all byte classes unchanged");
+    assert_eq!(off.report.msgs, on.report.msgs, "message counts unchanged");
+    for (a, b) in off.tenants.iter().zip(&on.tenants) {
+        assert_eq!(a.answers, b.answers, "opened answers byte-identical with tracing on");
+        assert_eq!(a.offline_msgs_matmul_layers, b.offline_msgs_matmul_layers);
+        assert_eq!(a.offline_msgs_relu_layers, b.offline_msgs_relu_layers);
+    }
+    assert_tenant_answers_match_cleartext(&on, &off_cfg, "traced deep keyed");
+}
+
+/// Trace identity fields are pure functions of public lockstep metadata,
+/// so all four parties must emit the same skeleton — and the per-gate
+/// spans must be present with the wave/gate coordinates filled in.
+#[test]
+fn four_party_trace_skeletons_are_identical() {
+    use trident::serve::serve_multi;
+    let mut cfg = deep_two_tenant_cfg(1, 2);
+    cfg.trace = true;
+    let s = serve_multi(NetProfile::zero(), cfg);
+    assert_eq!(s.party_traces.len(), 4);
+    trident::obs::check_skeletons(&s.party_traces).expect("lockstep skeletons must agree");
+    let gates: Vec<_> = s.trace.iter().filter(|e| e.op == "gate.matmul").collect();
+    assert!(!gates.is_empty(), "per-gate matmul spans recorded");
+    for e in &gates {
+        assert!(e.tenant.is_some() && e.wave.is_some() && e.gate.is_some(), "{e:?}");
+    }
+    assert!(s.trace.iter().any(|e| e.op == "gate.relu"), "hidden-ReLU spans recorded");
+    assert_eq!(s.trace.first().map(|e| e.op), Some("run.open"));
+    assert_eq!(s.trace.last().map(|e| e.op), Some("run.close"));
+    // a lockstep event's payload is the four-party merge: the wave.commit
+    // offline-message sums must match the run-level meter
+    let committed: u64 = s
+        .trace
+        .iter()
+        .filter(|e| e.op == "wave.commit")
+        .map(|e| e.payload.msgs)
+        .sum();
+    assert_eq!(committed, s.offline_msgs_in_waves, "merged wave payloads == meters");
+}
+
+/// A party whose identity fields drift — here P2 recording under a
+/// different logical tick — must be caught by the skeleton check, not
+/// silently merged.
+#[test]
+fn skeleton_check_catches_injected_divergence() {
+    use trident::obs::Payload;
+    let run = run_4pc(NetProfile::zero(), 991, |ctx| {
+        ctx.net.trace().enable();
+        let tick = if ctx.id() == P2 { 7 } else { 3 };
+        ctx.net.trace().set_tick(tick);
+        ctx.net.trace_event("test.step", true, Payload::gauge(1));
+        Ok(ctx.net.trace().take())
+    });
+    let (outs, _) = run.expect_ok();
+    let err = trident::obs::check_skeletons(&outs).expect_err("P2's tick drift must be caught");
+    assert!(err.contains("test.step"), "the diverging event is named: {err}");
+}
+
+/// The trace-derived per-op rollup reconciles exactly with the offline
+/// message meters in both pool modes (keyed: all zero on warm waves;
+/// inline: the full per-gate correlation traffic).
+#[test]
+fn op_rollup_reconciles_with_offline_meters_in_both_modes() {
+    use trident::serve::{serve_multi, PoolMode};
+    for mode in [PoolMode::Keyed, PoolMode::Inline] {
+        let mut cfg = two_tenant_cfg(mode, 1, 2);
+        cfg.trace = true;
+        let s = serve_multi(NetProfile::zero(), cfg);
+        let rollup = s.op_rollup();
+        assert!(!rollup.is_empty(), "{mode:?}: rollup populated");
+        let mat: u64 =
+            rollup.iter().filter(|r| r.op == "matmul").map(|r| r.offline_msgs).sum();
+        let relu: u64 = rollup.iter().filter(|r| r.op == "relu").map(|r| r.offline_msgs).sum();
+        assert_eq!(mat, s.offline_msgs_matmul, "{mode:?}: matmul rollup == meter");
+        assert_eq!(relu, s.offline_msgs_relu, "{mode:?}: relu rollup == meter");
+        if mode == PoolMode::Inline {
+            assert!(mat > 0, "inline waves pay per-gate correlation traffic");
+        } else {
+            assert_eq!(mat + relu, 0, "warm keyed waves are offline-silent");
+        }
+    }
+}

@@ -745,8 +745,9 @@ pub fn fill_throughput_line(f: &FillThroughput) -> String {
     )
 }
 
-/// One full serving-benchmark run: the single-model mode sweep plus the
-/// canonical two-tenant workload and the offline fill throughput. Compute
+/// One full serving-benchmark run: the single-model mode sweep, the
+/// canonical two-tenant workload, the mixed training+serving pair (the
+/// schema-6 isolation section) and the offline fill throughput. Compute
 /// it once and feed both the text tables and the JSON writer — every row
 /// is a real 4PC cluster run, so re-running for a second output format
 /// doubles bench wall time.
@@ -754,15 +755,65 @@ pub struct ServingBench {
     pub modes: Vec<(&'static str, crate::serve::ServeStats)>,
     pub tenants_cfg: crate::serve::MultiServeConfig,
     pub tenants: crate::serve::MultiServeStats,
+    /// The inference pair served alone — the baseline the mixed run's
+    /// inference-p99-under-training column is compared against.
+    pub train_alone: crate::serve::MultiServeStats,
+    pub train_mixed_cfg: crate::serve::MultiServeConfig,
+    /// The same inference pair sharing the cluster with a saturating
+    /// class-1 training job.
+    pub train_mixed: crate::serve::MultiServeStats,
     pub fill: FillThroughput,
+}
+
+/// Mixed training+serving workload for the schema-6 bench section: the
+/// same inference pair (weight 2:1, both class 0) served alone and next
+/// to a saturating scheduled LinReg training job (class 1, unaged, one
+/// epoch wave per grant, mid-job checkpoints every 2 epochs). Returns
+/// `(alone, mixed)` configs; priority-class isolation means the inference
+/// latency columns of both runs must line up exactly.
+pub fn mixed_train_tenants(
+    queries: usize,
+) -> (crate::serve::MultiServeConfig, crate::serve::MultiServeConfig) {
+    use crate::sched::{TenantSpec, TrainKind};
+    use crate::serve::{MultiServeConfig, PoolMode};
+    let mut prio = TenantSpec::new("prio", 1, 64, queries, 4);
+    prio.weight = 2;
+    let batch = TenantSpec::new("batch", 2, 64, queries, 4);
+    let alone = MultiServeConfig {
+        tenants: vec![prio, batch],
+        mode: PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        age_every: 2,
+        seed: 444,
+        trace: true,
+        ..MultiServeConfig::default()
+    };
+    let mut mixed = alone.clone();
+    mixed.tenants.push(TenantSpec::training(
+        "train",
+        3,
+        8,
+        Vec::new(),
+        TrainKind::LinReg,
+        6,
+        8,
+        2,
+        4,
+    ));
+    (alone, mixed)
 }
 
 pub fn run_serving_bench() -> ServingBench {
     let cfg = demo_tenants(12);
+    let (alone_cfg, mixed_cfg) = mixed_train_tenants(8);
     ServingBench {
         modes: serve_mode_rows(),
         tenants: crate::serve::serve_multi(NetProfile::lan(), cfg.clone()),
         tenants_cfg: cfg,
+        train_alone: crate::serve::serve_multi(NetProfile::lan(), alone_cfg),
+        train_mixed: crate::serve::serve_multi(NetProfile::lan(), mixed_cfg.clone()),
+        train_mixed_cfg: mixed_cfg,
         fill: measure_fill_throughput(),
     }
 }
@@ -942,6 +993,54 @@ pub fn flame_table(stats: &crate::serve::MultiServeStats) -> String {
     out
 }
 
+/// Mixed training+serving table (the schema-6 isolation section in text
+/// form): each inference tenant's latency columns alone vs under a
+/// saturating scheduled training job, plus the job's epoch throughput.
+pub fn train_serve_table() -> String {
+    use crate::serve::serve_multi;
+    let (alone_cfg, mixed_cfg) = mixed_train_tenants(8);
+    let alone = serve_multi(NetProfile::lan(), alone_cfg);
+    let mixed = serve_multi(NetProfile::lan(), mixed_cfg.clone());
+    let mut out = String::new();
+    out.push_str(
+        "== Scheduled training as a workload: inference latency under a saturating job (LAN) ==\n",
+    );
+    out.push_str(
+        "tenant   | p50 ms alone | p50 ms mixed | p99 ms alone | p99 ms mixed | p99 delta ms\n",
+    );
+    for (t, spec) in mixed_cfg.tenants.iter().enumerate() {
+        if spec.is_training() {
+            continue;
+        }
+        let (a, m) = (&alone.tenants[t], &mixed.tenants[t]);
+        out.push_str(&format!(
+            "{:<8} | {:>12.3} | {:>12.3} | {:>12.3} | {:>12.3} | {:>12.3}\n",
+            a.name,
+            a.p50_latency * 1e3,
+            m.p50_latency * 1e3,
+            a.p99_latency * 1e3,
+            m.p99_latency * 1e3,
+            (m.p99_latency - a.p99_latency) * 1e3,
+        ));
+    }
+    for (t, spec) in mixed_cfg.tenants.iter().enumerate() {
+        if !spec.is_training() {
+            continue;
+        }
+        let ts = &mixed.tenants[t];
+        out.push_str(&format!(
+            "job {:<4} : {} epochs committed ({} keyed waves) | {:.2} epochs/s online | {} checkpoints | {} offline msgs in wave windows\n",
+            ts.name,
+            ts.epochs_committed,
+            ts.keyed_waves,
+            ts.epochs_committed as f64 / mixed.online_latency.max(1e-9),
+            ts.checkpoints.len(),
+            ts.offline_msgs_in_waves,
+        ));
+    }
+    out
+}
+
 fn json_num_array<T: std::fmt::Display>(v: &[T]) -> String {
     let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
     format!("[{}]", items.join(", "))
@@ -989,9 +1088,14 @@ pub fn serving_bench_json() -> String {
 /// rollup — one object per `(op, gate)` with `waves` / `off_msgs` /
 /// `compute_ns`, produced from the merged four-party trace and asserted
 /// at aggregation time to reconcile exactly with the offline-message
-/// meters (the `pool_left_*` arrays stay).
+/// meters (the `pool_left_*` arrays stay). Schema 6 (this PR) adds the
+/// scheduled-training section: per-tenant `epochs_committed`, and a
+/// top-level `"training"` object with per-job epoch throughput
+/// (`epochs_per_s`, `checkpoints`, the job's own offline-silence counter)
+/// and the `inference_under_training` isolation columns — each inference
+/// tenant's p50/p99 alone vs next to a saturating training job.
 pub fn serving_bench_json_from(bench: &ServingBench) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/5\",\n");
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/6\",\n");
     out.push_str(&format!(
         "  \"offline_fill_throughput\": {{\"bitext_masks_per_s\": {:.1}, \"trunc_pairs_per_s\": {:.1}, \"lam_skeletons_per_s\": {:.1}}},\n",
         bench.fill.bitext_masks_per_s, bench.fill.trunc_pairs_per_s, bench.fill.lam_per_s,
@@ -1037,7 +1141,7 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             .collect();
         let ops_json = format!("[{}]", ops.join(", "));
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"ops\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"epochs_committed\": {}, \"ops\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
             json_escape(&ts.name),
             spec.weight,
             spec.class,
@@ -1061,6 +1165,7 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.offline_msgs_in_waves,
             ts.offline_msgs_matmul,
             ts.offline_msgs_relu,
+            ts.epochs_committed,
             ops_json,
             json_num_array(&ts.pool_left_mat_layers),
             json_num_array(&ts.pool_left_relu_layers),
@@ -1069,6 +1174,50 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
         ));
     }
     out.push_str("  ],\n");
+    // schema 6: the mixed training+serving section — per-job epoch
+    // throughput and the inference-p99-under-training isolation columns
+    let (mcfg, mixed, alone) = (&bench.train_mixed_cfg, &bench.train_mixed, &bench.train_alone);
+    out.push_str("  \"training\": {\n    \"jobs\": [\n");
+    let jobs: Vec<usize> =
+        (0..mcfg.tenants.len()).filter(|&t| mcfg.tenants[t].is_training()).collect();
+    for (i, &t) in jobs.iter().enumerate() {
+        let ts = &mixed.tenants[t];
+        let (kind, epochs, _, _, _) =
+            mcfg.tenants[t].workload.training().expect("training tenant");
+        let kind_s = match kind {
+            crate::sched::TrainKind::LinReg => "linreg",
+            crate::sched::TrainKind::LogReg => "logreg",
+            crate::sched::TrainKind::Nn => "nn",
+        };
+        out.push_str(&format!(
+            "      {{\"name\": \"{}\", \"kind\": \"{kind_s}\", \"epochs\": {epochs}, \"epochs_committed\": {}, \"epochs_per_s\": {:.3}, \"checkpoints\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"off_msgs_in_waves\": {}}}{}\n",
+            json_escape(&ts.name),
+            ts.epochs_committed,
+            ts.epochs_committed as f64 / mixed.online_latency.max(1e-9),
+            ts.checkpoints.len(),
+            ts.keyed_waves,
+            ts.inline_waves,
+            ts.offline_msgs_in_waves,
+            if i + 1 < jobs.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("    ],\n    \"inference_under_training\": [\n");
+    let inf: Vec<usize> =
+        (0..alone.tenants.len()).filter(|&t| !mcfg.tenants[t].is_training()).collect();
+    for (i, &t) in inf.iter().enumerate() {
+        let (a, m) = (&alone.tenants[t], &mixed.tenants[t]);
+        out.push_str(&format!(
+            "      {{\"name\": \"{}\", \"p50_ms_alone\": {:.6}, \"p50_ms_under_training\": {:.6}, \"p99_ms_alone\": {:.6}, \"p99_ms_under_training\": {:.6}, \"p99_delta_ms\": {:.6}}}{}\n",
+            json_escape(&a.name),
+            a.p50_latency * 1e3,
+            m.p50_latency * 1e3,
+            a.p99_latency * 1e3,
+            m.p99_latency * 1e3,
+            (m.p99_latency - a.p99_latency) * 1e3,
+            if i + 1 < inf.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("    ]\n  },\n");
     out.push_str("  \"quarantines\": [\n");
     for (i, q) in stats.quarantines.iter().enumerate() {
         out.push_str(&format!(
@@ -1136,6 +1285,7 @@ pub fn run_tables(filter: &[String]) -> String {
         ("fig20", fig20),
         ("serve", serve_table),
         ("serve-tenants", serve_tenants_table),
+        ("serve-train", train_serve_table),
     ];
     let mut out = String::new();
     let mut done = std::collections::HashSet::new();

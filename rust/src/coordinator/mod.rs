@@ -159,33 +159,238 @@ pub fn predict_cli(model: &str, batch: usize) {
     println!("                   WAN latency {:.2} s", wan.online_latency());
 }
 
-/// Options for [`serve_cli`], filled from the `trident serve` CLI flags
-/// (`--queries`, `--coalesce`, `--mode inline|scalar|keyed`, `--low-water`,
-/// `--high-water`, `--relu`).
+/// Scheduled-training job options: the job rides the serving cluster as a
+/// first-class [`crate::sched::Workload::Training`] tenant (class 1, one
+/// preemptible wave per epoch, per-epoch keyed pools, checkpointed
+/// shares). Built by `trident train --epochs …` and the mixed
+/// `trident serve --train` path.
 #[derive(Clone, Debug)]
-pub struct ServeCliOpts {
+pub struct TrainJobOpts {
+    /// `"linreg"`, `"logreg"` or `"nn"`.
+    pub model: String,
+    /// Epochs to run (one scheduled wave each).
+    pub epochs: usize,
+    /// Mini-batch rows per epoch wave; rounded up to a power of two (the
+    /// 1/B gradient scale is a ring shift).
+    pub batch: usize,
+    /// Feature count.
+    pub features: usize,
+    /// Checkpoint the per-party weight shares every N committed epochs
+    /// (0 = never).
+    pub checkpoint_every: usize,
+    /// Learning rate α = 2^-lr_pow.
+    pub lr_pow: u32,
+}
+
+impl Default for TrainJobOpts {
+    fn default() -> TrainJobOpts {
+        TrainJobOpts {
+            model: "linreg".into(),
+            epochs: 6,
+            batch: 16,
+            features: 8,
+            checkpoint_every: 0,
+            lr_pow: 4,
+        }
+    }
+}
+
+/// Unified serving/training configuration: ONE builder consumed by the
+/// single-tenant engine sweep, the multi-tenant scheduler path and the
+/// scheduled-training mode. Replaces the old `ServeCliOpts` /
+/// `MultiServeCliOpts` pair — the CLI flags stay byte-compatible; only
+/// the plumbing underneath them is shared now.
+///
+/// Routing: `models` empty and no training job → the single-tenant mode
+/// sweep ([`serve_cli`] prints keyed/scalar/inline side by side);
+/// otherwise the scheduler subsystem runs one tenant per model plus the
+/// optional training job.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Queries per tenant.
     pub queries: usize,
-    /// Defaults to `min(queries, 16)` when `None`.
+    /// Coalescing factor; `None` = a mode-appropriate default.
     pub coalesce: Option<usize>,
-    /// `"inline"`, `"scalar"` or `"keyed"`.
+    /// `"inline"`, `"scalar"` or `"keyed"` (single-tenant sweep only).
     pub mode: String,
     /// Background-refill low-water mark, in full-wave items.
     pub low_water: usize,
-    /// Background-refill high-water mark, in full-wave items.
+    /// Background-refill high-water mark, same units.
     pub high_water: usize,
+    /// Apply a batched ReLU after the linear layer (single-tenant sweep).
     pub relu: bool,
+    /// Tenant/model names, registry order (`--models m1,m2`); empty routes
+    /// to the single-tenant path unless a training job is attached.
+    pub models: Vec<String>,
+    /// Weighted-round-robin shares (`--weights 2,1`); missing entries
+    /// default to 1.
+    pub weights: Vec<u64>,
+    /// Priority classes, 0 = highest (`--priorities 0,1`); missing entries
+    /// default to 0.
+    pub priorities: Vec<u8>,
+    /// Relative query deadline for every tenant (`--deadline-ms D`; one
+    /// logical tick ≈ one serving wave ≈ 1 ms on the simulated LAN).
+    pub deadline_ms: Option<u64>,
+    /// Admission-control in-flight cap per tenant (`--cap N`).
+    pub cap: Option<usize>,
+    /// Abort blast-radius containment demo (`--containment`): enables the
+    /// four-party wave-outcome barrier AND injects a deterministic
+    /// mid-serve tamper fault (P1 corrupts tenant 0's second keyed wave),
+    /// so the run shows a quarantine instead of failing closed.
+    pub containment: bool,
+    /// Also write the machine-readable benchmark (`BENCH_serving.json`).
+    pub json: bool,
+    /// Write the merged per-party trace as chrome-tracing-flavoured JSONL
+    /// to this path (`--trace out.jsonl`). Tracing itself is always on for
+    /// the CLI run — the observer-effect contract makes it free — so this
+    /// only controls whether the event stream is persisted.
+    pub trace: Option<String>,
+    /// Scheduled training job sharing the cluster (`--train`).
+    pub train: Option<TrainJobOpts>,
 }
 
-impl Default for ServeCliOpts {
-    fn default() -> ServeCliOpts {
-        ServeCliOpts {
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
             queries: 8,
             coalesce: None,
             mode: "keyed".into(),
             low_water: 1,
             high_water: 2,
             relu: false,
+            models: Vec::new(),
+            weights: Vec::new(),
+            priorities: Vec::new(),
+            deadline_ms: None,
+            cap: None,
+            containment: false,
+            json: false,
+            trace: None,
+            train: None,
         }
+    }
+}
+
+impl ServeConfig {
+    pub fn new() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    /// Multi-tenant starting point (the old `MultiServeCliOpts` defaults):
+    /// 12 queries per tenant; an empty `models` list falls back to the
+    /// canonical `m1,m2` pair at lowering time.
+    pub fn tenants(models: Vec<String>) -> ServeConfig {
+        ServeConfig { queries: 12, models, ..ServeConfig::default() }
+    }
+
+    pub fn queries(mut self, n: usize) -> ServeConfig {
+        self.queries = n;
+        self
+    }
+
+    pub fn coalesce(mut self, c: usize) -> ServeConfig {
+        self.coalesce = Some(c);
+        self
+    }
+
+    pub fn mode(mut self, m: &str) -> ServeConfig {
+        self.mode = m.into();
+        self
+    }
+
+    pub fn water(mut self, low: usize, high: usize) -> ServeConfig {
+        self.low_water = low;
+        self.high_water = high;
+        self
+    }
+
+    pub fn relu(mut self, on: bool) -> ServeConfig {
+        self.relu = on;
+        self
+    }
+
+    pub fn weights(mut self, w: Vec<u64>) -> ServeConfig {
+        self.weights = w;
+        self
+    }
+
+    pub fn priorities(mut self, p: Vec<u8>) -> ServeConfig {
+        self.priorities = p;
+        self
+    }
+
+    pub fn deadline_ms(mut self, d: Option<u64>) -> ServeConfig {
+        self.deadline_ms = d;
+        self
+    }
+
+    pub fn cap(mut self, c: Option<usize>) -> ServeConfig {
+        self.cap = c;
+        self
+    }
+
+    pub fn containment(mut self, on: bool) -> ServeConfig {
+        self.containment = on;
+        self
+    }
+
+    pub fn json(mut self, on: bool) -> ServeConfig {
+        self.json = on;
+        self
+    }
+
+    pub fn trace(mut self, path: Option<String>) -> ServeConfig {
+        self.trace = path;
+        self
+    }
+
+    pub fn train(mut self, job: TrainJobOpts) -> ServeConfig {
+        self.train = Some(job);
+        self
+    }
+
+    /// Whether this config routes to the scheduler subsystem (any resident
+    /// models named, or a training job attached).
+    pub fn is_multi(&self) -> bool {
+        !self.models.is_empty() || self.train.is_some()
+    }
+}
+
+/// Lower a [`TrainJobOpts`] into the scheduler's tenant spec (model id
+/// `model_id` in the registry). Non-power-of-two batches round up; an
+/// unknown model kind falls back to linreg with a message.
+fn train_tenant_spec(job: &TrainJobOpts, model_id: u64) -> crate::sched::TenantSpec {
+    use crate::sched::{TenantSpec, TrainKind};
+    let kind = TrainKind::parse(&job.model).unwrap_or_else(|| {
+        println!("unknown training model {:?} (linreg|logreg|nn), using linreg", job.model);
+        TrainKind::LinReg
+    });
+    let batch = job.batch.max(1).next_power_of_two();
+    if batch != job.batch {
+        println!("--batch {} rounded up to {batch} (the 1/B gradient scale is a ring shift)", job.batch);
+    }
+    // hidden 8 → 2 outputs for the NN job; the regressors are single-layer
+    let layers = if kind == TrainKind::Nn { vec![8, 2] } else { Vec::new() };
+    TenantSpec::training(
+        "train",
+        model_id,
+        job.features.max(1),
+        layers,
+        kind,
+        job.epochs.max(1),
+        batch,
+        job.checkpoint_every,
+        job.lr_pow,
+    )
+}
+
+/// Entry point behind `trident serve`: routes the unified config to the
+/// single-tenant mode sweep or the multi-tenant scheduler.
+pub fn serve_cli(cfg: ServeConfig) {
+    if cfg.is_multi() {
+        serve_tenants_cli(cfg)
+    } else {
+        serve_single_cli(cfg)
     }
 }
 
@@ -194,8 +399,8 @@ impl Default for ServeCliOpts {
 /// producer, concurrent queries coalesced into cross-request batches,
 /// every response verified before release. Prints the amortized per-query
 /// cost next to the scalar-pool and seed-style inline paths.
-pub fn serve_cli(opts: ServeCliOpts) {
-    use crate::serve::{serve, PoolMode, ServeConfig, ServeStats};
+pub fn serve_single_cli(opts: ServeConfig) {
+    use crate::serve::{serve, PoolMode, ServeConfig as EngineConfig, ServeStats};
     let mode = match opts.mode.as_str() {
         "inline" => PoolMode::Inline,
         "scalar" => PoolMode::Scalar,
@@ -218,7 +423,7 @@ pub fn serve_cli(opts: ServeCliOpts) {
     if low_water == 0 {
         println!("--low-water 0 disables background refill: pools will never be (re)stocked");
     }
-    let cfg = ServeConfig {
+    let cfg = EngineConfig {
         d: 784,
         rows_per_query: 1,
         queries,
@@ -243,11 +448,11 @@ pub fn serve_cli(opts: ServeCliOpts) {
             s.offline_msgs_in_waves,
         );
     };
-    let keyed = serve(NetProfile::lan(), ServeConfig { mode: PoolMode::Keyed, ..cfg.clone() });
-    let scalar = serve(NetProfile::lan(), ServeConfig { mode: PoolMode::Scalar, ..cfg.clone() });
+    let keyed = serve(NetProfile::lan(), EngineConfig { mode: PoolMode::Keyed, ..cfg.clone() });
+    let scalar = serve(NetProfile::lan(), EngineConfig { mode: PoolMode::Scalar, ..cfg.clone() });
     let inline = serve(
         NetProfile::lan(),
-        ServeConfig { coalesce: 1, mode: PoolMode::Inline, ..cfg.clone() },
+        EngineConfig { coalesce: 1, mode: PoolMode::Inline, ..cfg.clone() },
     );
     line("keyed pool", &keyed);
     line("scalar    ", &scalar);
@@ -277,75 +482,23 @@ pub fn serve_cli(opts: ServeCliOpts) {
     }
 }
 
-/// Options for the multi-tenant `trident serve --models m1,m2 …` path
-/// (`--weights`, `--priorities`, `--deadline-ms`, `--cap`, `--json`).
-#[derive(Clone, Debug)]
-pub struct MultiServeCliOpts {
-    /// Tenant/model names, registry order (`--models m1,m2`).
-    pub models: Vec<String>,
-    /// Weighted-round-robin shares (`--weights 2,1`); missing entries
-    /// default to 1.
-    pub weights: Vec<u64>,
-    /// Priority classes, 0 = highest (`--priorities 0,1`); missing entries
-    /// default to 0.
-    pub priorities: Vec<u8>,
-    /// Relative query deadline for every tenant (`--deadline-ms D`). The
-    /// scheduler runs on logical ticks (one tick ≈ one serving wave ≈ 1 ms
-    /// on the simulated LAN profile), so D maps to D ticks.
-    pub deadline_ms: Option<u64>,
-    /// Queries per tenant.
-    pub queries: usize,
-    /// Per-tenant coalescing factor; defaults to `min(queries, 8)`.
-    pub coalesce: Option<usize>,
-    pub low_water: usize,
-    pub high_water: usize,
-    /// Admission-control in-flight cap per tenant (`--cap N`).
-    pub cap: Option<usize>,
-    /// Abort blast-radius containment demo (`--containment`): enables the
-    /// four-party wave-outcome barrier AND injects a deterministic
-    /// mid-serve tamper fault (P1 corrupts tenant 0's second keyed wave),
-    /// so the run shows a quarantine instead of failing closed.
-    pub containment: bool,
-    /// Also write the machine-readable benchmark (`BENCH_serving.json`).
-    pub json: bool,
-    /// Write the merged per-party trace as chrome-tracing-flavoured JSONL
-    /// to this path (`--trace out.jsonl`). Tracing itself is always on for
-    /// the CLI run — the observer-effect contract makes it free — so this
-    /// only controls whether the event stream is persisted.
-    pub trace: Option<String>,
-}
-
-impl Default for MultiServeCliOpts {
-    fn default() -> MultiServeCliOpts {
-        MultiServeCliOpts {
-            models: vec!["m1".into(), "m2".into()],
-            weights: Vec::new(),
-            priorities: Vec::new(),
-            deadline_ms: None,
-            queries: 12,
-            coalesce: None,
-            low_water: 1,
-            high_water: 2,
-            cap: None,
-            containment: false,
-            json: false,
-            trace: None,
-        }
-    }
-}
-
 /// Multi-tenant prediction serving: N resident models loaded into the
 /// model registry (one keyed pool shard + refill targets per tenant), the
 /// deadline/priority queue at the request edge, and the weighted
-/// round-robin wave planner deciding whose coalesced wave runs next.
-/// Prints the per-tenant stats table.
-pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
+/// round-robin wave planner deciding whose coalesced wave runs next — plus
+/// the optional scheduled training job riding the same cluster as a
+/// class-1 workload (`--train`). Prints the per-tenant stats table.
+pub fn serve_tenants_cli(opts: ServeConfig) {
     use crate::sched::TenantSpec;
     use crate::serve::{serve_multi, FaultKind, FaultPlan, MultiServeConfig, PoolMode};
     let queries = opts.queries.max(1);
     let coalesce = opts.coalesce.unwrap_or_else(|| queries.clamp(1, 8));
-    let tenants: Vec<TenantSpec> = opts
-        .models
+    let model_names: Vec<String> = if opts.models.is_empty() {
+        vec!["m1".into(), "m2".into()]
+    } else {
+        opts.models.clone()
+    };
+    let mut tenants: Vec<TenantSpec> = model_names
         .iter()
         .enumerate()
         .map(|(t, name)| {
@@ -357,6 +510,9 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
             s
         })
         .collect();
+    if let Some(job) = &opts.train {
+        tenants.push(train_tenant_spec(job, tenants.len() as u64 + 1));
+    }
     let cfg = MultiServeConfig {
         tenants,
         mode: PoolMode::Keyed,
@@ -375,10 +531,12 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
         // always trace: every CLI run carries the skeleton-checked event
         // stream, and the observer-effect contract keeps the meters exact
         trace: true,
+        ..MultiServeConfig::default()
     };
     println!(
-        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN{}) …",
-        cfg.tenants.len(),
+        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN{}{}) …",
+        model_names.len(),
+        if opts.train.is_some() { ", + scheduled training job" } else { "" },
         if opts.containment { ", containment on + injected tamper fault" } else { "" },
     );
     let stats = serve_multi(crate::net::NetProfile::lan(), cfg);
@@ -387,6 +545,9 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
     // the silence/quarantine/gauge summary is rendered from the same
     // trace-backed stats the exporters use (no hand-kept printf state)
     print!("{}", crate::obs::export::gauge_table(&stats));
+    if opts.train.is_some() {
+        print_train_summary(&stats.tenants[stats.tenants.len() - 1], stats.online_latency);
+    }
     if let Some(path) = &opts.trace {
         match std::fs::write(path, crate::obs::export::trace_jsonl(&stats.party_traces)) {
             Ok(()) => println!(
@@ -402,6 +563,59 @@ pub fn serve_tenants_cli(opts: MultiServeCliOpts) {
             Err(e) => println!("could not write BENCH_serving.json: {e}"),
         }
     }
+}
+
+/// Render the training-job trailer shared by the mixed-serve and
+/// train-mode CLIs.
+fn print_train_summary(ts: &crate::serve::TenantServeStats, online_latency: f64) {
+    println!(
+        "training : {} epochs committed over {} waves | {:.2} epochs/s online | {} offline msgs in wave windows | {} checkpoints",
+        ts.epochs_committed,
+        ts.waves,
+        ts.epochs_committed as f64 / online_latency.max(1e-9),
+        ts.offline_msgs_in_waves,
+        ts.checkpoints.len(),
+    );
+    if let Some(model) = &ts.final_model {
+        let norm: f64 = model
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|v| v * v)
+            .sum::<f64>()
+            .sqrt();
+        println!(
+            "training : final model published ({} layer(s), ‖w‖₂ = {norm:.4})",
+            model.len(),
+        );
+    }
+}
+
+/// Scheduled secure training (`trident train --epochs N`): the job is
+/// admitted through the SAME registry/queue/planner as serving — one
+/// preemptible wave per epoch, per-epoch circuit-keyed pools regenerated
+/// between waves (fresh-weight bundles: reusing λ_W across epochs would
+/// leak weight deltas), per-party checkpointed shares.
+pub fn train_workload_cli(cfg: ServeConfig) {
+    use crate::serve::{serve_multi, MultiServeConfig, PoolMode};
+    let job = cfg.train.clone().unwrap_or_default();
+    let spec = train_tenant_spec(&job, 1);
+    println!(
+        "scheduled training: model={} epochs={} batch={} d={} (α=2^-{}, checkpoint every {}) …",
+        job.model, spec.queries, spec.rows_per_query, spec.d, job.lr_pow, job.checkpoint_every,
+    );
+    let mcfg = MultiServeConfig {
+        tenants: vec![spec],
+        mode: PoolMode::Keyed,
+        low_water: cfg.low_water.max(1),
+        high_water: cfg.high_water.max(1),
+        age_every: 0,
+        seed: 333,
+        trace: true,
+        ..MultiServeConfig::default()
+    };
+    let stats = serve_multi(crate::net::NetProfile::lan(), mcfg);
+    print!("{}", crate::bench::tenant_table(&stats));
+    print_train_summary(&stats.tenants[0], stats.online_latency);
 }
 
 /// `trident metrics`: run the canonical multi-tenant demo workload
@@ -438,10 +652,7 @@ mod tests {
     fn serve_tenants_cli_writes_parseable_trace() {
         let path = std::env::temp_dir().join("trident_cli_trace_test.jsonl");
         let path_s = path.to_string_lossy().into_owned();
-        let mut opts = MultiServeCliOpts::default();
-        opts.queries = 4;
-        opts.coalesce = Some(2);
-        opts.trace = Some(path_s);
+        let opts = ServeConfig::tenants(Vec::new()).queries(4).coalesce(2).trace(Some(path_s));
         serve_tenants_cli(opts);
         let body = std::fs::read_to_string(&path).unwrap();
         let first = body.lines().next().unwrap();
@@ -455,10 +666,46 @@ mod tests {
     fn serve_tenants_cli_containment_demo_runs() {
         // the --containment demo injects a tamper fault against tenant 0's
         // second wave; the run must quarantine and finish, not panic
-        let mut opts = MultiServeCliOpts::default();
-        opts.queries = 6;
-        opts.coalesce = Some(3);
-        opts.containment = true;
+        let opts = ServeConfig::tenants(Vec::new()).queries(6).coalesce(3).containment(true);
         serve_tenants_cli(opts);
+    }
+
+    #[test]
+    fn serve_config_routes_single_vs_multi() {
+        assert!(!ServeConfig::new().is_multi(), "bare config is the single-tenant sweep");
+        assert!(ServeConfig::tenants(vec!["m1".into()]).is_multi());
+        assert!(
+            ServeConfig::new().train(TrainJobOpts::default()).is_multi(),
+            "a training job alone routes to the scheduler"
+        );
+    }
+
+    #[test]
+    fn mixed_serve_train_cli_runs() {
+        // the mixed path: inference tenants + a scheduled LinReg job with
+        // a non-power-of-two batch (rounded up) and mid-job checkpoints
+        let opts = ServeConfig::tenants(vec!["m1".into()]).queries(4).coalesce(2).train(
+            TrainJobOpts {
+                model: "linreg".into(),
+                epochs: 3,
+                batch: 6,
+                features: 6,
+                checkpoint_every: 2,
+                lr_pow: 4,
+            },
+        );
+        serve_tenants_cli(opts);
+    }
+
+    #[test]
+    fn train_workload_cli_runs_scheduled_nn_job() {
+        train_workload_cli(ServeConfig::new().train(TrainJobOpts {
+            model: "nn".into(),
+            epochs: 2,
+            batch: 8,
+            features: 4,
+            checkpoint_every: 0,
+            lr_pow: 5,
+        }));
     }
 }

@@ -3,6 +3,13 @@
 //! ```text
 //! trident quickstart                   # share → multiply → reconstruct demo
 //! trident train   [--model nn|cnn|linreg|logreg] [--iters N] [--batch B] [--features D]
+//! trident train   --epochs N [--model linreg|logreg|nn] [--batch B]
+//!                 [--features D] [--ckpt-every K] [--lr-pow P]
+//!                                      # scheduled training: the job runs
+//!                                      # through the same registry/queue/
+//!                                      # planner as serving (one wave per
+//!                                      # epoch, per-epoch keyed pools,
+//!                                      # checkpointed shares)
 //! trident predict [--model ...] [--batch B]
 //! trident tables  [table1 ... fig20 serve serve-tenants] [--json]
 //!                                      # regenerate the paper's evaluation
@@ -13,6 +20,10 @@
 //!                 [--deadline-ms D] [--cap N] [--queries N] [--coalesce C]
 //!                 [--low-water L] [--high-water H] [--containment] [--json]
 //!                 [--trace out.jsonl]
+//!                 [--train [linreg|logreg|nn]] [--epochs N] [--batch B]
+//!                                      # --train admits a scheduled
+//!                                      # training job next to the
+//!                                      # latency-sensitive tenants
 //!                                      # multi-tenant scheduler demo;
 //!                                      # --containment injects a mid-serve
 //!                                      # tamper fault and quarantines the
@@ -82,11 +93,33 @@ fn main() {
             trident::coordinator::demo_quickstart();
         }
         "train" => {
-            let model = flags.get("model").map(String::as_str).unwrap_or("nn");
-            let iters: usize = flags.get("iters").and_then(|v| v.parse().ok()).unwrap_or(10);
-            let batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(128);
-            let d: usize = flags.get("features").and_then(|v| v.parse().ok()).unwrap_or(784);
-            trident::coordinator::train_cli(model, iters, batch, d);
+            if let Some(epochs) = flags.get("epochs").and_then(|v| v.parse().ok()) {
+                // scheduled-workload path: the job runs through the same
+                // registry/queue/planner as serving
+                let job = trident::coordinator::TrainJobOpts {
+                    model: flags.get("model").cloned().unwrap_or_else(|| "linreg".into()),
+                    epochs,
+                    batch: flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(16),
+                    features: flags.get("features").and_then(|v| v.parse().ok()).unwrap_or(8),
+                    checkpoint_every: flags
+                        .get("ckpt-every")
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(0),
+                    lr_pow: flags.get("lr-pow").and_then(|v| v.parse().ok()).unwrap_or(4),
+                };
+                trident::coordinator::train_workload_cli(
+                    trident::coordinator::ServeConfig::new().train(job),
+                );
+            } else {
+                let model = flags.get("model").map(String::as_str).unwrap_or("nn");
+                let iters: usize =
+                    flags.get("iters").and_then(|v| v.parse().ok()).unwrap_or(10);
+                let batch: usize =
+                    flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(128);
+                let d: usize =
+                    flags.get("features").and_then(|v| v.parse().ok()).unwrap_or(784);
+                trident::coordinator::train_cli(model, iters, batch, d);
+            }
         }
         "predict" => {
             let model = flags.get("model").map(String::as_str).unwrap_or("nn");
@@ -106,49 +139,78 @@ fn main() {
         }
         "serve" => {
             let json = flags.get("json").map(String::as_str) == Some("true");
-            if let Some(models) = flags.get("models") {
-                // multi-tenant path: the scheduler subsystem over N models
-                let mut opts = trident::coordinator::MultiServeCliOpts {
-                    models: models.split(',').map(str::trim).map(String::from).collect(),
-                    json,
-                    ..trident::coordinator::MultiServeCliOpts::default()
-                };
-                opts.weights = parse_num_list(flags.get("weights"), "weights", 1u64);
-                opts.priorities = parse_num_list(flags.get("priorities"), "priorities", 0u8);
-                opts.deadline_ms = flags.get("deadline-ms").and_then(|v| v.parse().ok());
-                opts.cap = flags.get("cap").and_then(|v| v.parse().ok());
+            // `--train` mixes a scheduled training job into the cluster
+            // (bare flag = linreg; a value selects the model kind)
+            let train_job = flags.get("train").map(|v| trident::coordinator::TrainJobOpts {
+                model: if v == "true" { "linreg".into() } else { v.clone() },
+                epochs: flags.get("epochs").and_then(|x| x.parse().ok()).unwrap_or(6),
+                batch: flags.get("batch").and_then(|x| x.parse().ok()).unwrap_or(16),
+                features: flags.get("features").and_then(|x| x.parse().ok()).unwrap_or(8),
+                checkpoint_every: flags
+                    .get("ckpt-every")
+                    .and_then(|x| x.parse().ok())
+                    .unwrap_or(0),
+                lr_pow: flags.get("lr-pow").and_then(|x| x.parse().ok()).unwrap_or(4),
+            });
+            if flags.contains_key("models") || train_job.is_some() {
+                // scheduler path: the subsystem over N models (+ the job)
+                let models: Vec<String> = flags
+                    .get("models")
+                    .map(|m| m.split(',').map(str::trim).map(String::from).collect())
+                    .unwrap_or_default();
+                let mut opts = trident::coordinator::ServeConfig::tenants(models)
+                    .weights(parse_num_list(flags.get("weights"), "weights", 1u64))
+                    .priorities(parse_num_list(flags.get("priorities"), "priorities", 0u8))
+                    .deadline_ms(flags.get("deadline-ms").and_then(|v| v.parse().ok()))
+                    .cap(flags.get("cap").and_then(|v| v.parse().ok()))
+                    .containment(
+                        flags.get("containment").map(String::as_str) == Some("true"),
+                    )
+                    .json(json)
+                    // bare `--trace` (no path) defaults to trace.jsonl
+                    .trace(flags.get("trace").map(|v| {
+                        if v == "true" { "trace.jsonl".to_string() } else { v.clone() }
+                    }));
                 if let Some(q) = flags.get("queries").and_then(|v| v.parse().ok()) {
-                    opts.queries = q;
+                    opts = opts.queries(q);
                 }
-                opts.coalesce = flags.get("coalesce").and_then(|v| v.parse().ok());
-                if let Some(l) = flags.get("low-water").and_then(|v| v.parse().ok()) {
-                    opts.low_water = l;
+                if let Some(c) = flags.get("coalesce").and_then(|v| v.parse().ok()) {
+                    opts = opts.coalesce(c);
                 }
-                if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
-                    opts.high_water = h;
+                let lw = flags
+                    .get("low-water")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(opts.low_water);
+                let hw = flags
+                    .get("high-water")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(opts.high_water);
+                opts = opts.water(lw, hw);
+                if let Some(job) = train_job {
+                    opts = opts.train(job);
                 }
-                opts.containment = flags.get("containment").map(String::as_str) == Some("true");
-                // bare `--trace` (no path) defaults to trace.jsonl
-                opts.trace = flags.get("trace").map(|v| {
-                    if v == "true" { "trace.jsonl".to_string() } else { v.clone() }
-                });
-                trident::coordinator::serve_tenants_cli(opts);
+                trident::coordinator::serve_cli(opts);
             } else {
-                let mut opts = trident::coordinator::ServeCliOpts::default();
+                let mut opts = trident::coordinator::ServeConfig::new();
                 if let Some(q) = flags.get("queries").and_then(|v| v.parse().ok()) {
-                    opts.queries = q;
+                    opts = opts.queries(q);
                 }
-                opts.coalesce = flags.get("coalesce").and_then(|v| v.parse().ok());
+                if let Some(c) = flags.get("coalesce").and_then(|v| v.parse().ok()) {
+                    opts = opts.coalesce(c);
+                }
                 if let Some(m) = flags.get("mode") {
-                    opts.mode = m.clone();
+                    opts = opts.mode(m);
                 }
-                if let Some(l) = flags.get("low-water").and_then(|v| v.parse().ok()) {
-                    opts.low_water = l;
-                }
-                if let Some(h) = flags.get("high-water").and_then(|v| v.parse().ok()) {
-                    opts.high_water = h;
-                }
-                opts.relu = flags.get("relu").map(String::as_str) == Some("true");
+                let lw = flags
+                    .get("low-water")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(opts.low_water);
+                let hw = flags
+                    .get("high-water")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(opts.high_water);
+                opts = opts.water(lw, hw);
+                opts = opts.relu(flags.get("relu").map(String::as_str) == Some("true"));
                 trident::coordinator::serve_cli(opts);
                 if json {
                     match trident::bench::write_serving_bench_json("BENCH_serving.json") {

@@ -10,6 +10,8 @@ use crate::ring::fixed::FRAC_BITS;
 use crate::ring::Z64;
 use crate::sharing::MMat;
 
+use super::nn::{train_step, HeadActivation, TrainLayerKeys, TrainStepOut};
+
 /// Linear-regression trainer configuration.
 #[derive(Copy, Clone, Debug)]
 pub struct LinReg {
@@ -25,8 +27,9 @@ impl LinReg {
         LinReg { d, batch, lr_pow: 7 }
     }
 
-    /// Shift for the gradient matmul: divides by `2^{lr_pow}·B`.
-    fn grad_shift(&self) -> u32 {
+    /// Shift for the gradient matmul: divides by `2^{lr_pow}·B`. Public so
+    /// the scheduler can mint this trainer's gradient gate key.
+    pub fn grad_shift(&self) -> u32 {
         FRAC_BITS + self.lr_pow + (self.batch as f64).log2().round() as u32
     }
 
@@ -53,6 +56,28 @@ impl LinReg {
         let xt = x.transpose();
         let grad = matmul_tr_shift(ctx, &xt, &e, self.grad_shift())?;
         Ok(w - &grad)
+    }
+
+    /// One **scheduled** GD iteration through the circuit-keyed pool: the
+    /// one-layer case of [`train_step`] (linear head), so a warm epoch's
+    /// forward and gradient gates are both offline-silent.
+    pub fn train_step_keyed(
+        &self,
+        ctx: &mut Ctx,
+        w: &MMat<Z64>,
+        keys: &[TrainLayerKeys],
+        x: &MMat<Z64>,
+        y: &MMat<Z64>,
+    ) -> Result<TrainStepOut, Abort> {
+        train_step(
+            ctx,
+            std::slice::from_ref(w),
+            HeadActivation::Linear,
+            self.grad_shift(),
+            Some(keys),
+            x,
+            y,
+        )
     }
 
     /// Prediction = forward pass.

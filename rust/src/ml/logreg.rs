@@ -9,6 +9,7 @@ use crate::ring::Z64;
 use crate::sharing::MMat;
 
 use super::activation::sigmoid_many;
+use super::nn::{train_step, HeadActivation, TrainLayerKeys, TrainStepOut};
 
 /// Logistic-regression trainer configuration.
 #[derive(Copy, Clone, Debug)]
@@ -23,7 +24,8 @@ impl LogReg {
         LogReg { d, batch, lr_pow: 4 }
     }
 
-    fn grad_shift(&self) -> u32 {
+    /// Public so the scheduler can mint this trainer's gradient gate key.
+    pub fn grad_shift(&self) -> u32 {
         FRAC_BITS + self.lr_pow + (self.batch as f64).log2().round() as u32
     }
 
@@ -53,6 +55,29 @@ impl LogReg {
         let xt = x.transpose();
         let grad = matmul_tr_shift(ctx, &xt, &e, self.grad_shift())?;
         Ok(w - &grad)
+    }
+
+    /// One **scheduled** GD iteration through the circuit-keyed pool: the
+    /// one-layer case of [`train_step`] with the sigmoid head (the sigmoid
+    /// itself runs the generic `msb`/`bit2a` machinery, drawing from the
+    /// generic pools when stocked).
+    pub fn train_step_keyed(
+        &self,
+        ctx: &mut Ctx,
+        w: &MMat<Z64>,
+        keys: &[TrainLayerKeys],
+        x: &MMat<Z64>,
+        y: &MMat<Z64>,
+    ) -> Result<TrainStepOut, Abort> {
+        train_step(
+            ctx,
+            std::slice::from_ref(w),
+            HeadActivation::Sigmoid,
+            self.grad_shift(),
+            Some(keys),
+            x,
+            y,
+        )
     }
 
     /// Prediction (probability estimates).

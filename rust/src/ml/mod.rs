@@ -15,7 +15,10 @@ pub use activation::{
 };
 pub use linreg::LinReg;
 pub use logreg::LogReg;
-pub use nn::{Network, NetworkKind};
+pub use nn::{
+    forward_keyed, train_gate_keys, train_step, HeadActivation, KeyedForwardOut, Network,
+    NetworkKind, TrainLayerKeys, TrainStepOut,
+};
 
 use crate::net::{Abort, PartyId};
 use crate::proto::Ctx;

@@ -15,15 +15,19 @@
 //! `ml::softmax::softmax_garbled` (A2G → restoring divider → G2A) and
 //! exercised by its tests and `examples/mixed_world.rs` (DESIGN.md §3).
 
+use crate::convert::bit2a::{bitinj_many, bitinj_online};
 use crate::net::{Abort, Phase};
 use crate::obs::Window;
 use crate::pool::CircuitKey;
+use crate::proto::dotp::pop_keyed;
+use crate::proto::sharing::remask_mat;
+use crate::proto::trunc::matmul_tr_online;
 use crate::proto::{matmul_tr, matmul_tr_keyed, matmul_tr_keyed_shared, matmul_tr_shift, Ctx};
 use crate::ring::fixed::FRAC_BITS;
 use crate::ring::{Bit, Matrix, Z64};
 use crate::sharing::{MMat, MShare};
 
-use super::activation::{relu_mat, relu_mat_keyed};
+use super::activation::{relu_mat, relu_mat_keyed, sigmoid_many};
 use super::F64Mat;
 
 /// Which benchmark network (Table VI).
@@ -66,7 +70,10 @@ impl Network {
         Network { layers, batch, lr_pow }
     }
 
-    fn grad_shift(&self) -> u32 {
+    /// Shift of the gradient matmuls: the `α/B` scaling folded into the
+    /// free truncation. Public because the scheduler needs it to mint the
+    /// training gate keys ([`TrainLayerKeys`]) for a resident tenant.
+    pub fn grad_shift(&self) -> u32 {
         // exact by the power-of-two batch invariant enforced at construction
         FRAC_BITS + self.lr_pow + self.batch.trailing_zeros()
     }
@@ -162,6 +169,28 @@ impl Network {
         Ok(new_weights)
     }
 
+    /// One **scheduled** training iteration through the circuit-keyed pool
+    /// (see [`train_step`]): every forward and backward gate pops its
+    /// bundle, so a warm epoch is offline-silent end to end.
+    pub fn train_step_keyed(
+        &self,
+        ctx: &mut Ctx,
+        weights: &[MMat<Z64>],
+        keys: &[TrainLayerKeys],
+        x: &MMat<Z64>,
+        t: &MMat<Z64>,
+    ) -> Result<TrainStepOut, Abort> {
+        train_step(
+            ctx,
+            weights,
+            HeadActivation::Linear,
+            self.grad_shift(),
+            Some(keys),
+            x,
+            t,
+        )
+    }
+
     /// Prediction: forward pass, returns the output scores.
     pub fn predict(
         &self,
@@ -238,6 +267,227 @@ pub fn forward_keyed(
     }
     Ok(KeyedForwardOut {
         out: a.expect("at least one layer"),
+        om_mat,
+        om_relu,
+        cn_mat,
+        cn_relu,
+    })
+}
+
+/// Which activation closes the network head during a training step.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum HeadActivation {
+    /// Linear scores + squared loss (NN, linear regression): `E = U − T`.
+    Linear,
+    /// 3-segment sigmoid (logistic regression): `E = sig(U) − T`.
+    Sigmoid,
+}
+
+/// One layer's training gate keys, gate order, as minted by the scheduler
+/// registry: the forward position (+ paired ReLU on hidden layers), the
+/// gradient position (`A_lᵀ ∘ E_l`, double-masked, shift = the trainer's
+/// `grad_shift`), and the back-propagation position (`E_l ∘ W_lᵀ`, absent
+/// on layer 0). Key numbering per [`crate::sched::workload`]: layer bases
+/// keep the three families disjoint so square layers can never alias.
+#[derive(Copy, Clone, Debug)]
+pub struct TrainLayerKeys {
+    pub fwd: CircuitKey,
+    pub relu: Option<CircuitKey>,
+    pub grad: CircuitKey,
+    pub back: Option<CircuitKey>,
+}
+
+/// Flatten per-layer training keys into the `(mat, relu?)` gate list the
+/// pool's all-or-nothing stock checks
+/// ([`crate::pool::Pool::check_layer_vec_gates`]) and
+/// [`crate::pool::Pool::layer_vec_stock`] consume — forward (+relu), grad,
+/// back, per layer in order, mirroring the pop order of [`train_step`].
+pub fn train_gate_keys(keys: &[TrainLayerKeys]) -> Vec<(CircuitKey, Option<CircuitKey>)> {
+    let mut out = Vec::with_capacity(keys.len() * 3);
+    for k in keys {
+        out.push((k.fwd, k.relu));
+        out.push((k.grad, None));
+        if let Some(bk) = k.back {
+            out.push((bk, None));
+        }
+    }
+    out
+}
+
+/// Result of one training step: updated weight shares plus per-**gate
+/// window** offline-message and online compute meters, mirroring
+/// [`KeyedForwardOut`]. Window order: forward layer 0..L (matmul meter in
+/// `om_mat[l]`, activation meter in `om_relu[l]`), then backward in
+/// reverse layer order — for each layer the gradient window (matmul slot;
+/// its relu slot is always 0), then for layers ≥ 1 the back-propagation
+/// window (matmul slot = the `E∘Wᵀ` matmul, relu slot = the drelu-gating
+/// bit injection). Total `3L − 1` windows — the serving engine sizes its
+/// per-tenant trace vectors with `TenantSpec::gate_windows`.
+pub struct TrainStepOut {
+    pub weights: Vec<MMat<Z64>>,
+    pub om_mat: Vec<u64>,
+    pub om_relu: Vec<u64>,
+    pub cn_mat: Vec<u64>,
+    pub cn_relu: Vec<u64>,
+}
+
+/// One mini-batch gradient-descent step — forward, backward, update — over
+/// an already-shared batch `(x, t)`, generic over the trainer (linreg and
+/// logreg are the 1-layer cases, the NN the deep case; pick via `head`).
+///
+/// With `keys = Some(..)` every gate draws from the **circuit-keyed pool**:
+/// forward matmuls re-mask onto the popped bundle's wire mask
+/// ([`matmul_tr_keyed_shared`]), hidden activations run keyed ReLU, the
+/// gradient matmul re-masks **both** live operands onto the double-masked
+/// gradient bundle, and the back-propagation matmul runs against the
+/// resident `Wᵀ` bundle whose attached `Π_BitInj` material gates the error
+/// through the drelus popped by this same step's forward ReLU — so a warm
+/// step sends **zero offline-phase messages at every gate, forward and
+/// backward**. Any cold pop falls back inline for that gate,
+/// deterministically at all four parties (pool state is lockstep). With
+/// `keys = None` every gate generates inline (the pre-scheduler path —
+/// [`Network::train_iteration`] and the linreg/logreg `train_iteration`s
+/// remain thin wrappers over the same protocols).
+///
+/// The caller supplies `grad_shift` (= `FRAC_BITS + lr_pow + log2(B)`)
+/// because the learning rate is the trainer's, not the network shape's.
+pub fn train_step(
+    ctx: &mut Ctx,
+    weights: &[MMat<Z64>],
+    head: HeadActivation,
+    grad_shift: u32,
+    keys: Option<&[TrainLayerKeys]>,
+    x: &MMat<Z64>,
+    t: &MMat<Z64>,
+) -> Result<TrainStepOut, Abort> {
+    let depth = weights.len();
+    assert!(depth > 0, "training needs at least one layer");
+    if let Some(k) = keys {
+        assert_eq!(k.len(), depth, "one key set per layer");
+    }
+    let windows = 3 * depth - 1;
+    let mut om_mat = Vec::with_capacity(windows);
+    let mut om_relu = Vec::with_capacity(windows);
+    let mut cn_mat = Vec::with_capacity(windows);
+    let mut cn_relu = Vec::with_capacity(windows);
+
+    // ---- forward: A_0 = X, U_i = A_i ∘ W_i, A_{i+1} = act(U_i) ----------
+    let mut acts = vec![x.clone()];
+    let mut drelus: Vec<Option<Vec<MShare<Bit>>>> = Vec::with_capacity(depth);
+    for i in 0..depth {
+        let wm = Window::open(ctx.net);
+        let u = match keys.map(|k| &k[i]) {
+            Some(k) => matmul_tr_keyed_shared(ctx, &k.fwd, acts.last().unwrap(), &weights[i])?,
+            None => matmul_tr(ctx, acts.last().unwrap(), &weights[i])?,
+        };
+        let dm = wm.diff(ctx.net);
+        om_mat.push(dm.msgs(Phase::Offline));
+        cn_mat.push(dm.compute_ns(Phase::Online));
+        let wr = Window::open(ctx.net);
+        if i + 1 < depth {
+            let (a, d) = match keys.map(|k| &k[i]) {
+                Some(k) => {
+                    let rk = k.relu.as_ref().expect("hidden layer carries a relu key");
+                    relu_mat_keyed(ctx, rk, &u)?
+                }
+                None => relu_mat(ctx, &u)?,
+            };
+            acts.push(a);
+            drelus.push(Some(d));
+        } else {
+            let out = match head {
+                HeadActivation::Linear => u,
+                HeadActivation::Sigmoid => {
+                    let (r, c) = u.dims();
+                    let s = sigmoid_many(ctx, &u.to_shares())?;
+                    MMat::from_shares(r, c, &s)
+                }
+            };
+            acts.push(out);
+            drelus.push(None);
+        }
+        let dr = wr.diff(ctx.net);
+        om_relu.push(dr.msgs(Phase::Offline));
+        cn_relu.push(dr.compute_ns(Phase::Online));
+    }
+
+    // ---- backward: E_m = A_m − T, then per layer (rev) grad + back ------
+    let mut e = &acts[depth] - t;
+    let mut new_weights = weights.to_vec();
+    for i in (0..depth).rev() {
+        // gradient gate: W_i ← W_i − (α/B)·A_iᵀ ∘ E
+        let wg = Window::open(ctx.net);
+        let at = acts[i].transpose();
+        let grad = match keys.map(|k| &k[i]) {
+            Some(k) => match pop_keyed(ctx, &k.grad)? {
+                Some(c) => {
+                    let lam_y = c
+                        .lam_y
+                        .clone()
+                        .expect("gradient bundle carries the second wire mask");
+                    let xa = remask_mat(ctx, &at, c.lam_x.clone())?;
+                    let ya = remask_mat(ctx, &e, lam_y)?;
+                    matmul_tr_online(ctx, &xa, &ya, &c.gamma, &c.pairs, grad_shift)?
+                }
+                None => matmul_tr_shift(ctx, &at, &e, grad_shift)?,
+            },
+            None => matmul_tr_shift(ctx, &at, &e, grad_shift)?,
+        };
+        new_weights[i] = &weights[i] - &grad;
+        let dg = wg.diff(ctx.net);
+        om_mat.push(dg.msgs(Phase::Offline));
+        cn_mat.push(dg.compute_ns(Phase::Online));
+        om_relu.push(0);
+        cn_relu.push(0);
+        // back-propagation gate: E ← (E ∘ W_iᵀ) ⊗ drelu(U_{i-1})
+        if i > 0 {
+            let wb = Window::open(ctx.net);
+            let wt = weights[i].transpose();
+            let bits = drelus[i - 1]
+                .as_ref()
+                .expect("hidden layer left drelu bits behind");
+            let back = match keys.map(|k| &k[i]) {
+                Some(k) => {
+                    let bk = k.back.as_ref().expect("layer ≥ 1 carries a back key");
+                    match pop_keyed(ctx, bk)? {
+                        Some(c) => {
+                            let binj = c
+                                .binj
+                                .clone()
+                                .expect("back bundle carries Π_BitInj material");
+                            let ea = remask_mat(ctx, &e, c.lam_x.clone())?;
+                            let b =
+                                matmul_tr_online(ctx, &ea, &wt, &c.gamma, &c.pairs, FRAC_BITS)?;
+                            let wbj = Window::open(ctx.net);
+                            let gated = bitinj_online(ctx, bits, &b.to_shares(), &binj)?;
+                            (b.dims(), gated, wbj.diff(ctx.net))
+                        }
+                        None => {
+                            let b = matmul_tr(ctx, &e, &wt)?;
+                            let wbj = Window::open(ctx.net);
+                            let gated = bitinj_many(ctx, bits, &b.to_shares())?;
+                            (b.dims(), gated, wbj.diff(ctx.net))
+                        }
+                    }
+                }
+                None => {
+                    let b = matmul_tr(ctx, &e, &wt)?;
+                    let wbj = Window::open(ctx.net);
+                    let gated = bitinj_many(ctx, bits, &b.to_shares())?;
+                    (b.dims(), gated, wbj.diff(ctx.net))
+                }
+            };
+            let ((rows, cols), gated, dbj) = back;
+            e = MMat::from_shares(rows, cols, &gated);
+            let db = wb.diff(ctx.net);
+            om_mat.push(db.msgs(Phase::Offline) - dbj.msgs(Phase::Offline));
+            cn_mat.push(db.compute_ns(Phase::Online) - dbj.compute_ns(Phase::Online));
+            om_relu.push(dbj.msgs(Phase::Offline));
+            cn_relu.push(dbj.compute_ns(Phase::Online));
+        }
+    }
+    Ok(TrainStepOut {
+        weights: new_weights,
         om_mat,
         om_relu,
         cn_mat,
@@ -344,6 +594,113 @@ mod tests {
         // batch 3 would round log2 to 2 and silently halve the effective
         // learning rate — construction must refuse instead
         let _ = Network::custom(vec![4, 2], 3, 3);
+    }
+
+    #[test]
+    fn train_step_keyed_matches_inline_and_is_offline_silent_when_warm() {
+        use crate::pool::{
+            fill_train_vec, relu_key_for, CircuitKey, OpKind, Pool, TrainLayerTarget,
+        };
+        use crate::sched::{BACK_GATE_BASE, GRAD_GATE_BASE};
+        let run = run_4pc(NetProfile::zero(), 233, |ctx| {
+            let mut rng = Rng::seeded(21);
+            let net = Network::custom(vec![4, 6, 2], 4, 3);
+            let data = class_batch(&mut rng, 4, 4, 2);
+            let init = net.init_weights_clear(&mut Rng::seeded(22));
+            let ws = net.share_weights(ctx, P1, (ctx.id() == P1).then_some(&init[..]))?;
+            let xs = share_fixed_mat(ctx, P1, (ctx.id() == P1).then_some(&data.x), 4, 4)?;
+            let ts = share_fixed_mat(ctx, P2, (ctx.id() == P2).then_some(&data.t), 4, 2)?;
+            ctx.flush_verify()?;
+            let dims = [4usize, 6, 2];
+            let keys: Vec<TrainLayerKeys> = (0..2)
+                .map(|l| {
+                    let fwd = CircuitKey {
+                        model: 6,
+                        layer: l as u32,
+                        op: OpKind::MatMulTr { shift: FRAC_BITS },
+                        rows: 4,
+                        inner: dims[l],
+                        cols: dims[l + 1],
+                        dealer: P1,
+                    };
+                    let grad = CircuitKey {
+                        model: 6,
+                        layer: GRAD_GATE_BASE + l as u32,
+                        op: OpKind::MatMulTr { shift: net.grad_shift() },
+                        rows: dims[l],
+                        inner: 4,
+                        cols: dims[l + 1],
+                        dealer: P1,
+                    };
+                    let back = (l > 0).then(|| CircuitKey {
+                        model: 6,
+                        layer: BACK_GATE_BASE + l as u32,
+                        op: OpKind::MatMulTr { shift: FRAC_BITS },
+                        rows: 4,
+                        inner: dims[l + 1],
+                        cols: dims[l],
+                        dealer: P1,
+                    });
+                    TrainLayerKeys {
+                        fwd,
+                        relu: (l == 0).then(|| relu_key_for(&fwd)),
+                        grad,
+                        back,
+                    }
+                })
+                .collect();
+            ctx.attach_pool(Pool::new());
+            let targets: Vec<TrainLayerTarget> = keys
+                .iter()
+                .zip(&ws)
+                .map(|(k, w)| TrainLayerTarget {
+                    fwd: k.fwd,
+                    relu: k.relu,
+                    grad: k.grad,
+                    back: k.back,
+                    w: w.clone(),
+                })
+                .collect();
+            fill_train_vec(ctx, &targets)?;
+            let gates = train_gate_keys(&keys);
+            assert!(
+                ctx.pool_mut().unwrap().check_layer_vec_gates(&gates),
+                "whole training vector stocked after fill"
+            );
+            let m0 = ctx.net.sent_msgs(Phase::Offline);
+            let out = net.train_step_keyed(ctx, &ws, &keys, &xs, &ts)?;
+            let om = ctx.net.sent_msgs(Phase::Offline) - m0;
+            // inline reference iteration on the same shares
+            let inline = net.train_iteration(ctx, &ws, &xs, &ts)?;
+            ctx.flush_verify()?;
+            assert_eq!(om, 0, "warm keyed training step is offline-silent");
+            assert!(
+                out.om_mat.iter().chain(&out.om_relu).all(|&m| m == 0),
+                "per-gate offline meters all zero on a warm step"
+            );
+            assert_eq!(out.om_mat.len(), 5, "3L−1 gate windows for L = 2");
+            assert_eq!(out.om_relu.len(), 5);
+            Ok((out.weights, inline))
+        });
+        let (outs, _) = run.expect_ok();
+        for l in 0..2 {
+            let keyed = open_mat(&[
+                outs[0].0[l].clone(),
+                outs[1].0[l].clone(),
+                outs[2].0[l].clone(),
+                outs[3].0[l].clone(),
+            ]);
+            let inline = open_mat(&[
+                outs[0].1[l].clone(),
+                outs[1].1[l].clone(),
+                outs[2].1[l].clone(),
+                outs[3].1[l].clone(),
+            ]);
+            for (a, b) in keyed.data().iter().zip(inline.data()) {
+                let d = FixedPoint::decode(*a) - FixedPoint::decode(*b);
+                assert!(d.abs() < 0.01, "layer {l}: keyed {a:?} vs inline {b:?} drift {d}");
+            }
+        }
     }
 
     #[test]

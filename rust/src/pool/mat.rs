@@ -46,6 +46,7 @@
 //! aborts) rather than silently running the online phase on wrong-position
 //! correlations.
 
+use crate::convert::bit2a::BitInjCorr;
 use crate::net::{Abort, PartyId};
 use crate::proto::dotp::{matmul_offline, MatGamma};
 use crate::proto::sharing::{assemble_mmat, full_masks, sample_mask_vecs};
@@ -105,6 +106,16 @@ pub struct MatCorr {
     pub(crate) lam_z: MMat<Z64>,
     /// `rows·cols` verified truncation pairs (`OpKind::MatMulTr`).
     pub(crate) pairs: Vec<TruncPair>,
+    /// Second pooled wire-mask skeleton — training **gradient** gates
+    /// (`A_lᵀ ∘ E_l`) have *both* operands live, so the bundle carries a
+    /// mask per operand and the wave re-masks each under its own
+    /// ([`gen_grad_corr`]). `None` for resident-operand gates.
+    pub(crate) lam_y: Option<MMat<Z64>>,
+    /// Pre-exchanged + pre-checked `Π_BitInj` material for the drelu
+    /// gating that rides a training **back-propagation** gate
+    /// (`E_l ∘ W_lᵀ` followed by `drelu·(·)` — see
+    /// [`crate::pool::refill::fill_train_vec`]). `None` elsewhere.
+    pub(crate) binj: Option<BitInjCorr>,
     /// Per-key fill sequence number, assigned by `Pool::push_mat` — lets
     /// tests pin down FIFO/no-interleave behaviour under refill.
     pub(crate) seq: u64,
@@ -227,6 +238,40 @@ pub(crate) fn gen_mat_corr(
         gamma: corr.gamma,
         lam_z: corr.lam_z,
         pairs,
+        lam_y: None,
+        binj: None,
+        seq: 0, // assigned by push_mat
+    })
+}
+
+/// Generate one [`MatCorr`] bundle for a training **gradient** gate
+/// (`A_lᵀ ∘ E_l`), where — unlike the serving gates — *both* operands are
+/// live shares of the wave: the bundle pools a wire mask per operand
+/// (`Λ_X` for the transposed activation, `Λ_Y` for the error), the
+/// `⟨Γ⟩` exchanged against the two skeletons, and one verified truncation
+/// pair per output element at the key's shift (which folds `α/B` into the
+/// free truncation). The wave re-masks each operand under its own pooled
+/// mask ([`crate::proto::sharing::remask_mat`]) and runs only the online
+/// exchange — zero offline-phase messages, same as the resident-operand
+/// gates. Deferred digests are the caller's to flush.
+pub(crate) fn gen_grad_corr(ctx: &mut Ctx, key: CircuitKey) -> Result<MatCorr, Abort> {
+    let shift = match key.op {
+        OpKind::MatMulTr { shift } => shift,
+        _ => panic!("gen_grad_corr requires an OpKind::MatMulTr key"),
+    };
+    let (lam_x, lam_x_full) = sample_wire_mask(ctx, key.dealer, key.rows, key.inner);
+    let (lam_y, _) = sample_wire_mask(ctx, key.dealer, key.inner, key.cols);
+    let corr = matmul_offline(ctx, &lam_x, &lam_y, false)?;
+    let pairs = gen_trunc_pairs(ctx, key.rows * key.cols, shift)?;
+    Ok(MatCorr {
+        key,
+        lam_x,
+        lam_x_full,
+        gamma: corr.gamma,
+        lam_z: corr.lam_z,
+        pairs,
+        lam_y: Some(lam_y),
+        binj: None,
         seq: 0, // assigned by push_mat
     })
 }
@@ -262,6 +307,8 @@ mod tests {
             ]),
             lam_z: MMat::zero(P0, k.rows, k.cols),
             pairs: Vec::new(),
+            lam_y: None,
+            binj: None,
             seq: 0,
         }
     }

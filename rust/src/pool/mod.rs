@@ -78,7 +78,10 @@ pub mod refill;
 pub mod relu;
 
 pub use mat::{fill_mat, CircuitKey, MatCorr, OpKind};
-pub use refill::{fill_layer_vec, LayerTarget, Refill, RefillOutcome, WaterMarks};
+pub use refill::{
+    fill_layer_vec, fill_train_vec, LayerTarget, Refill, RefillOutcome, TrainLayerTarget,
+    WaterMarks,
+};
 pub use relu::{fill_mat_relu, relu_key_for, ReluCorr};
 
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -397,6 +400,32 @@ impl Pool {
         ok
     }
 
+    /// [`check_layer_vec`](Pool::check_layer_vec) with **per-gate miss
+    /// accounting** — the training-wave gate. A training epoch evaluates
+    /// `3L−1` matrix gates (forward + grad + back), so when a training
+    /// tenant was registered but never warmed, folding the whole cold
+    /// vector into one wave-level miss would hide how much material the
+    /// refill owes; this variant records one mat miss per missing mat
+    /// bundle and one relu miss per missing paired relu bundle instead.
+    /// The wave decision is unchanged: all-or-nothing, and a cold vector
+    /// sends the entire epoch down the inline path.
+    pub fn check_layer_vec_gates(&mut self, keys: &[(CircuitKey, Option<CircuitKey>)]) -> bool {
+        let ok = self.layer_vec_stock(keys) >= 1;
+        if !ok {
+            for (mk, rk) in keys {
+                if self.len_mat(mk) == 0 {
+                    self.stats.mat_misses += 1;
+                }
+                if let Some(rk) = rk {
+                    if self.len_relu(rk) == 0 {
+                        self.stats.relu_misses += 1;
+                    }
+                }
+            }
+        }
+        ok
+    }
+
     // ---- quarantine (abort blast-radius containment) --------------------
 
     /// Drain-and-poison every keyed shard belonging to `model`: all stocked
@@ -664,6 +693,8 @@ mod tests {
                 ]),
                 lam_z: MMat::zero(P0, k.rows, k.cols),
                 pairs: Vec::new(),
+                lam_y: None,
+                binj: None,
                 seq: 0,
             }
         }
@@ -718,6 +749,8 @@ mod tests {
                 ]),
                 lam_z: MMat::zero(P0, k.rows, k.cols),
                 pairs: Vec::new(),
+                lam_y: None,
+                binj: None,
                 seq: 0,
             }
         }
@@ -749,6 +782,65 @@ mod tests {
         assert_eq!(pool.layer_vec_stock(&keys_linear), 1);
         assert!(pool.check_layer_vec(&keys_linear));
         assert_eq!(pool.stats().mat_misses, misses0 + 1, "a passing gate records no miss");
+    }
+
+    #[test]
+    fn cold_training_vector_counts_misses_per_gate() {
+        use crate::net::{P0, P2};
+        use crate::proto::dotp::MatGamma;
+        use crate::ring::Matrix;
+        use crate::sharing::MMat;
+
+        fn key(layer: u32) -> CircuitKey {
+            CircuitKey {
+                model: 11,
+                layer,
+                op: OpKind::MatMulTr { shift: FRAC_BITS },
+                rows: 4,
+                inner: 3,
+                cols: 2,
+                dealer: P2,
+            }
+        }
+        fn dummy(k: CircuitKey) -> MatCorr {
+            MatCorr {
+                key: k,
+                lam_x: MMat::zero(P0, k.rows, k.inner),
+                lam_x_full: None,
+                gamma: MatGamma::Helper([
+                    Matrix::zeros(k.rows, k.cols),
+                    Matrix::zeros(k.rows, k.cols),
+                    Matrix::zeros(k.rows, k.cols),
+                ]),
+                lam_z: MMat::zero(P0, k.rows, k.cols),
+                pairs: Vec::new(),
+                lam_y: None,
+                binj: None,
+                seq: 0,
+            }
+        }
+
+        let mut pool = Pool::new();
+        // a 2-layer training tenant's gate vector: 2 forward (first with a
+        // paired relu), 2 grad, 1 back — registered but NEVER warmed
+        let keys = vec![
+            (key(0), Some(relu_key_for(&key(0)))),
+            (key(1), None),
+            (key(0x1000), None),
+            (key(0x1001), None),
+            (key(0x2001), None),
+        ];
+        assert!(!pool.check_layer_vec_gates(&keys), "cold vector fails the gate");
+        // the fix under test: one miss PER missing gate, not one per wave
+        assert_eq!(pool.stats().mat_misses, 5, "five cold mat gates");
+        assert_eq!(pool.stats().relu_misses, 1, "one cold paired relu gate");
+
+        // partially warmed: only the still-missing gates count
+        pool.push_mat(dummy(key(0)));
+        pool.push_mat(dummy(key(1)));
+        assert!(!pool.check_layer_vec_gates(&keys));
+        assert_eq!(pool.stats().mat_misses, 5 + 3, "three mat gates still cold");
+        assert_eq!(pool.stats().relu_misses, 2, "paired relu still cold");
     }
 
     #[test]

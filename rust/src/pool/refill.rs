@@ -34,13 +34,15 @@
 //! around ticks stay offline-silent (the meter regression tests assert
 //! both directions).
 
+use crate::convert::bit2a::bitinj_offline;
 use crate::net::Abort;
+use crate::proto::sharing::vsh_mask_skeleton;
 use crate::proto::Ctx;
-use crate::ring::Z64;
-use crate::sharing::MMat;
+use crate::ring::{Bit, Z64};
+use crate::sharing::{MMat, MShare};
 
-use super::mat::{fill_mat, CircuitKey};
-use super::relu::fill_mat_relu;
+use super::mat::{fill_mat, gen_grad_corr, gen_mat_corr, CircuitKey};
+use super::relu::{fill_mat_relu, gen_relu_corr};
 use super::{fill_bitext, fill_lam, fill_trunc};
 
 /// Refill thresholds for one pooled resource, in items of that resource
@@ -123,6 +125,105 @@ pub fn fill_layer_vec(
         }
         out.mat_items += need;
     }
+    Ok(out)
+}
+
+/// One layer of a **training** tenant's gate vector, as the fill side sees
+/// it: the forward position (with its paired ReLU on hidden layers), the
+/// gradient position (`A_lᵀ ∘ E_l` — both operands live, double-masked
+/// bundle), the back-propagation position (`E_l ∘ W_lᵀ`, layers ≥ 1, whose
+/// bundle also carries the `Π_BitInj` material for the drelu gating), and
+/// the **current** weight share the resident-operand `⟨Γ⟩`s are generated
+/// against. See [`crate::sched::workload`] for the gate numbering and why
+/// the vector is regenerated per epoch (fresh post-commit λ — reusing a
+/// mask across epochs would leak weight deltas).
+#[derive(Clone)]
+pub struct TrainLayerTarget {
+    pub fwd: CircuitKey,
+    pub relu: Option<CircuitKey>,
+    pub grad: CircuitKey,
+    /// `None` for layer 0 (no error to propagate past the input).
+    pub back: Option<CircuitKey>,
+    pub w: MMat<Z64>,
+}
+
+/// Restock one whole **training gate vector** (stock depth 1 — bundles are
+/// valid only against the current epoch's weight λ, so deeper stock would
+/// be dead weight): for each layer in order, the forward bundle (+ paired
+/// ReLU on hidden layers), the double-masked gradient bundle, and the
+/// back-propagation bundle generated against `Wᵀ` with its drelu-gating
+/// `Π_BitInj` material pre-exchanged against the *previous* layer's ReLU
+/// masks from this same pass (the bit wire of the gating is
+/// `b = msb ⊕ y`, whose λ is exactly the relu bundle's `λ_x ⊕ λ_y` —
+/// `Π_BitInj`'s offline phase reads only λ components, and
+/// `1⊕b` has the same λ, so the material serves the `drelu = 1⊕msb`
+/// gating unchanged). No-op when a whole vector is already stocked.
+/// Settles its own verification digests; everything is `Phase::Offline`.
+pub fn fill_train_vec(ctx: &mut Ctx, layers: &[TrainLayerTarget]) -> Result<RefillOutcome, Abort> {
+    assert!(ctx.has_pool(), "fill_train_vec requires an attached pool");
+    let mut out = RefillOutcome::default();
+    let mut keys: Vec<(CircuitKey, Option<CircuitKey>)> = Vec::new();
+    for t in layers {
+        keys.push((t.fwd, t.relu));
+        keys.push((t.grad, None));
+        if let Some(bk) = t.back {
+            keys.push((bk, None));
+        }
+    }
+    if ctx.pool.as_ref().map_or(0, |p| p.layer_vec_stock(&keys)) >= 1 {
+        return Ok(out);
+    }
+    let me = ctx.id();
+    // the back gate of layer l gates through the drelus of layer l−1, so
+    // its injection material is exchanged against the ReLU masks generated
+    // earlier in this same layer-major pass
+    let mut prev_b_skel: Option<Vec<MShare<Bit>>> = None;
+    for t in layers {
+        let fwd = gen_mat_corr(ctx, t.fwd, &t.w)?;
+        let relu = match &t.relu {
+            Some(rk) => {
+                let vs_skel: Vec<MShare<Z64>> = fwd.pairs.iter().map(|p| p.rt).collect();
+                Some(gen_relu_corr(ctx, *rk, &vs_skel)?)
+            }
+            None => None,
+        };
+        let b_skel: Option<Vec<MShare<Bit>>> = relu.as_ref().map(|r| {
+            r.x_masks
+                .iter()
+                .zip(&r.y_masks)
+                .map(|(x, ym)| *x + vsh_mask_skeleton(me, ym))
+                .collect()
+        });
+        let grad = gen_grad_corr(ctx, t.grad)?;
+        let back = match &t.back {
+            Some(bk) => {
+                let wt = t.w.transpose();
+                let mut b = gen_mat_corr(ctx, *bk, &wt)?;
+                let gate_bits = prev_b_skel
+                    .as_ref()
+                    .expect("a back gate requires the previous layer's ReLU position");
+                let vs_skel: Vec<MShare<Z64>> = b.pairs.iter().map(|p| p.rt).collect();
+                b.binj = Some(bitinj_offline(ctx, gate_bits, &vs_skel)?);
+                Some(b)
+            }
+            None => None,
+        };
+        prev_b_skel = b_skel;
+        let pool = ctx.pool.as_mut().expect("pool attached");
+        pool.push_mat(fwd);
+        out.mat_items += 1;
+        if let Some(r) = relu {
+            pool.push_relu(r);
+            out.relu_items += 1;
+        }
+        pool.push_mat(grad);
+        out.mat_items += 1;
+        if let Some(b) = back {
+            pool.push_mat(b);
+            out.mat_items += 1;
+        }
+    }
+    ctx.flush_verify()?;
     Ok(out)
 }
 

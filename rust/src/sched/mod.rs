@@ -50,6 +50,7 @@
 pub mod planner;
 pub mod queue;
 pub mod registry;
+pub mod workload;
 
 pub use planner::WavePlanner;
 pub use queue::{SchedQueue, SchedQueueStats, SchedQuery};
@@ -57,3 +58,4 @@ pub use registry::{
     tenant_layer_key, tenant_layer_weights, tenant_relu_key, tenant_wave_key, tenant_weights,
     ModelRegistry, ResidentModel, TenantLayer, TenantSpec,
 };
+pub use workload::{Checkpoint, TrainKind, Workload, BACK_GATE_BASE, GRAD_GATE_BASE};

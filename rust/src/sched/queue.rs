@@ -89,6 +89,11 @@ pub struct SchedQueue {
     caps: Vec<usize>,
     /// Admitted-but-unanswered count per tenant (queued + in service).
     inflight: Vec<usize>,
+    /// Tenants whose queries never age ([`SchedQueue::set_unaged`]):
+    /// scheduled training jobs ride here so a saturating job can never be
+    /// promoted into the latency-sensitive class — the priority-isolation
+    /// invariant the serving tests lock.
+    unaged: Vec<bool>,
     stats: SchedQueueStats,
 }
 
@@ -99,6 +104,7 @@ impl SchedQueue {
             age_every,
             caps: vec![usize::MAX; tenants],
             inflight: vec![0; tenants],
+            unaged: vec![false; tenants],
             stats: SchedQueueStats {
                 submitted: vec![0; tenants],
                 admitted: vec![0; tenants],
@@ -113,6 +119,18 @@ impl SchedQueue {
     /// Cap tenant `t`'s admitted-but-unanswered queries.
     pub fn set_cap(&mut self, t: usize, cap: usize) {
         self.caps[t] = cap.max(1);
+    }
+
+    /// Exempt tenant `t` from aging: its queries keep their nominal class
+    /// forever. Scheduled **training** tenants are registered unaged — a
+    /// background epoch must wait for an idle slot no matter how long it
+    /// has queued, so inference p99 under a saturating training job is
+    /// *identical* to the idle-cluster p99 (the isolation test pins
+    /// equality, not a bound). Starvation-freedom for training comes from
+    /// waves being epoch-granular: any tick with no class-0 work runs the
+    /// next epoch.
+    pub fn set_unaged(&mut self, t: usize) {
+        self.unaged[t] = true;
     }
 
     pub fn stats(&self) -> &SchedQueueStats {
@@ -165,7 +183,7 @@ impl SchedQueue {
     /// Effective priority class of `q` at tick `now`: the nominal class
     /// minus one per `age_every` ticks waited (saturating at 0).
     fn effective_class(&self, q: &SchedQuery, now: u64) -> u8 {
-        if self.age_every == 0 {
+        if self.age_every == 0 || self.unaged.get(q.tenant).copied().unwrap_or(false) {
             return q.class;
         }
         let waited = now.saturating_sub(q.arrival) / self.age_every;
@@ -355,6 +373,21 @@ mod tests {
             assert_ne!(batch[0].id, 100, "without aging class 0 always wins");
             no_age.complete(0, 1);
         }
+    }
+
+    #[test]
+    fn unaged_tenant_never_promotes_past_the_latency_class() {
+        let mut sq = SchedQueue::new(2, 2);
+        sq.set_unaged(1);
+        // a training epoch queued at tick 0 …
+        assert!(sq.admit(q(1, 0, 1, 0, None)));
+        // … and a fresh class-0 inference query arriving much later
+        assert!(sq.admit(q(0, 0, 0, 50, None)));
+        // without the exemption the epoch would have aged to class 0 long
+        // ago and won on arrival tick; unaged it keeps its nominal class
+        assert_eq!(sq.best_class(50), Some(0));
+        assert_eq!(sq.eligible_mask(2, 50), vec![true, false], "inference keeps the slot");
+        assert_eq!(sq.depth_class(1, 50), 1, "the epoch still sits at class 1");
     }
 
     #[test]

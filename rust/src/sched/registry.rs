@@ -17,16 +17,18 @@
 //! four parties.
 
 use crate::crypto::Rng;
-use crate::ml::{share_fixed_mat, F64Mat};
+use crate::ml::{share_fixed_mat, F64Mat, TrainLayerKeys};
 use crate::net::{Abort, P1, P2};
 use crate::pool::{
-    fill_layer_vec, relu_key_for, CircuitKey, LayerTarget, OpKind, Refill, RefillOutcome,
-    WaterMarks,
+    fill_layer_vec, fill_train_vec, relu_key_for, CircuitKey, LayerTarget, OpKind, Refill,
+    RefillOutcome, TrainLayerTarget, WaterMarks,
 };
 use crate::proto::Ctx;
 use crate::ring::fixed::FRAC_BITS;
 use crate::ring::Z64;
 use crate::sharing::MMat;
+
+use super::workload::{TrainKind, Workload, BACK_GATE_BASE, GRAD_GATE_BASE};
 
 /// Domain separator for per-tenant resident weights.
 const TW_SEED: u64 = 0x7363_6864_5f77_3174;
@@ -70,6 +72,13 @@ pub struct TenantSpec {
     /// circuit key (`CircuitKey::layer` = position), and a warm wave pops
     /// one whole per-layer bundle vector.
     pub layers: Vec<usize>,
+    /// What this tenant runs through the shared queue/planner: a
+    /// latency-sensitive inference stream (the default) or a **scheduled
+    /// training job** — epochs admitted as queries (query id = epoch), one
+    /// epoch per wave, drawing from the same per-tenant circuit-keyed pool
+    /// plus the gradient/back-prop gate families of
+    /// [`crate::sched::workload`].
+    pub workload: Workload,
     /// Seed for this tenant's deterministic weights/queries.
     pub seed: u64,
 }
@@ -91,8 +100,114 @@ impl TenantSpec {
             arrive_per_tick: 0,
             relu: false,
             layers: Vec::new(),
+            workload: Workload::Inference,
             seed: 0x7465_6e61 ^ model,
         }
+    }
+
+    /// A **training tenant**: `epochs` mini-batch GD epochs over a fixed
+    /// `batch`-row dataset, admitted through the same queue/planner as
+    /// inference traffic — one epoch per wave, query id = epoch. Training
+    /// rides at priority class 1 (inference defaults to class 0) so a
+    /// saturating job can never displace latency-sensitive waves, and at
+    /// `coalesce = 1` because an epoch is inherently sequential. `layers`
+    /// empty = the 1-layer linreg/logreg shape `d → 1`; non-empty = a deep
+    /// ReLU network (`kind` must be [`TrainKind::Nn`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn training(
+        name: &str,
+        model: u64,
+        d: usize,
+        layers: Vec<usize>,
+        kind: TrainKind,
+        epochs: usize,
+        batch: usize,
+        checkpoint_every: usize,
+        lr_pow: u32,
+    ) -> TenantSpec {
+        assert!(
+            batch.is_power_of_two(),
+            "training batch {batch} is not a power of two: the 1/B gradient scale is a ring shift"
+        );
+        assert_eq!(
+            kind == TrainKind::Nn,
+            !layers.is_empty(),
+            "deep layers iff the tenant trains a neural network"
+        );
+        let mut s = TenantSpec::new(name, model, d, epochs, 1);
+        s.rows_per_query = batch;
+        s.class = 1;
+        s.layers = layers;
+        s.workload = Workload::Training { kind, epochs, batch, checkpoint_every, lr_pow };
+        s
+    }
+
+    /// Whether this tenant is a scheduled training job.
+    pub fn is_training(&self) -> bool {
+        self.workload.is_training()
+    }
+
+    /// Gradient-matmul shift of a training tenant: `α/B` folded into the
+    /// free truncation (`FRAC_BITS + lr_pow + log2(batch)`; exact by the
+    /// power-of-two batch invariant of [`TenantSpec::training`]).
+    pub fn grad_shift(&self) -> u32 {
+        let (_, _, batch, _, lr_pow) = self.workload.training().expect("training tenant");
+        FRAC_BITS + lr_pow + batch.trailing_zeros()
+    }
+
+    /// Gate **windows** of one of this tenant's waves — what the serving
+    /// engine sizes its per-tenant trace vectors with: `depth` for an
+    /// inference wave (one matmul+activation window per layer), `3·depth−1`
+    /// for a training epoch (forward windows, then per layer in reverse a
+    /// gradient window and — layers ≥ 1 — a back-propagation window).
+    pub fn gate_windows(&self) -> usize {
+        if self.is_training() {
+            3 * self.depth() - 1
+        } else {
+            self.depth()
+        }
+    }
+
+    /// The whole per-layer **training** key set, gate order: forward keys
+    /// shared with the inference path (`layer_keys` at the wave's stacked
+    /// rows), plus the gradient family at `GRAD_GATE_BASE` (double-masked,
+    /// shift = [`TenantSpec::grad_shift`]) and the back-propagation family
+    /// at `BACK_GATE_BASE` (shift = `FRAC_BITS`, layers ≥ 1). The disjoint
+    /// layer bases keep the three families from aliasing in the pool even
+    /// on square layers.
+    pub fn train_keys(&self) -> Vec<TrainLayerKeys> {
+        assert!(self.is_training(), "train_keys on an inference tenant");
+        let dims = self.layer_dims();
+        let batch = self.wave_rows();
+        (0..self.depth())
+            .map(|l| {
+                let fwd = tenant_layer_key(self, batch, l);
+                let grad = CircuitKey {
+                    model: self.model,
+                    layer: GRAD_GATE_BASE + l as u32,
+                    op: OpKind::MatMulTr { shift: self.grad_shift() },
+                    rows: dims[l],
+                    inner: batch,
+                    cols: dims[l + 1],
+                    dealer: P2,
+                };
+                let back = (l > 0).then(|| CircuitKey {
+                    model: self.model,
+                    layer: BACK_GATE_BASE + l as u32,
+                    op: OpKind::MatMulTr { shift: FRAC_BITS },
+                    rows: batch,
+                    inner: dims[l + 1],
+                    cols: dims[l],
+                    dealer: P2,
+                });
+                TrainLayerKeys {
+                    fwd,
+                    relu: self.layer_relu(l).then(|| relu_key_for(&fwd)),
+                    grad,
+                    back,
+                }
+            })
+            .collect()
     }
 
     /// Whether this tenant is a deep resident network (≥ 1 hidden layer)
@@ -295,28 +410,19 @@ pub struct TenantLayer {
     pub partial_key: Option<CircuitKey>,
     /// The partial wave's paired nonlinear key.
     pub partial_relu_key: Option<CircuitKey>,
+    /// The gradient gate key (`A_lᵀ ∘ E_l`, training tenants only).
+    pub grad_key: Option<CircuitKey>,
+    /// The back-propagation gate key (`E_l ∘ W_lᵀ`, training tenants,
+    /// layers ≥ 1 only).
+    pub back_key: Option<CircuitKey>,
 }
 
 /// One loaded resident model: spec + per-layer shared weights/keys +
-/// private refill producer. The legacy single-layer fields (`w`, `key`,
-/// `relu_key`, `partial_key`, `partial_relu_key`) mirror `layers[0]` so
-/// single-layer call sites read exactly as before.
+/// private refill producer. The per-gate `layers` vector is the one and
+/// only key/weight API — read `layers[0]` for the historical single-layer
+/// position.
 pub struct ResidentModel {
     pub spec: TenantSpec,
-    /// The first layer's shared resident weights (`d × dims[1]`) —
-    /// mirror of `layers[0].w`.
-    pub w: MMat<Z64>,
-    /// The registered full-wave circuit key of the first layer.
-    pub key: CircuitKey,
-    /// The paired full-wave nonlinear key of the first layer.
-    pub relu_key: Option<CircuitKey>,
-    /// The trailing partial wave's first-layer circuit key, when the
-    /// workload does not divide evenly — the whole partial layer vector is
-    /// stocked exactly once at warm-up ([`ModelRegistry::warm_partial`]),
-    /// never refilled between waves.
-    pub partial_key: Option<CircuitKey>,
-    /// The partial wave's paired first-layer nonlinear key.
-    pub partial_relu_key: Option<CircuitKey>,
     /// The whole resident network, gate order: shared weights plus
     /// registered keys per layer. `layers.len() == spec.depth()`; a legacy
     /// tenant has exactly one entry.
@@ -368,6 +474,40 @@ impl ResidentModel {
                     .map(|pk| LayerTarget { key: pk, relu: l.partial_relu_key, w: l.w.clone() })
             })
             .collect()
+    }
+
+    /// The per-layer training key sets, gate order (training tenants only).
+    pub fn train_keys(&self) -> Vec<TrainLayerKeys> {
+        self.layers
+            .iter()
+            .map(|l| TrainLayerKeys {
+                fwd: l.key,
+                relu: l.relu_key,
+                grad: l.grad_key.expect("training tenant layer has a grad key"),
+                back: l.back_key,
+            })
+            .collect()
+    }
+
+    /// The whole-epoch training fill targets against the **current** weight
+    /// shares (training tenants only) — regenerated per epoch, post-commit,
+    /// because each epoch's bundles embed the epoch's weight λ.
+    pub fn train_targets(&self) -> Vec<TrainLayerTarget> {
+        self.layers
+            .iter()
+            .map(|l| TrainLayerTarget {
+                fwd: l.key,
+                relu: l.relu_key,
+                grad: l.grad_key.expect("training tenant layer has a grad key"),
+                back: l.back_key,
+                w: l.w.clone(),
+            })
+            .collect()
+    }
+
+    /// The current per-layer weight shares, gate order.
+    pub fn layer_weights(&self) -> Vec<MMat<Z64>> {
+        self.layers.iter().map(|l| l.w.clone()).collect()
     }
 }
 
@@ -427,6 +567,7 @@ impl ModelRegistry {
         let dims = spec.layer_dims();
         let rows = spec.wave_rows();
         let prows = spec.partial_rows();
+        let train_keys = spec.is_training().then(|| spec.train_keys());
         let weights0 = (ctx.id() == P1).then(|| tenant_layer_weights(&spec));
         let mut layers = Vec::with_capacity(spec.depth());
         for l in 0..spec.depth() {
@@ -438,13 +579,18 @@ impl ModelRegistry {
             let partial_relu_key = partial_key
                 .filter(|_| spec.layer_relu(l))
                 .map(|pk| relu_key_for(&pk));
-            layers.push(TenantLayer { w, key, relu_key, partial_key, partial_relu_key });
+            let grad_key = train_keys.as_ref().map(|tk| tk[l].grad);
+            let back_key = train_keys.as_ref().and_then(|tk| tk[l].back);
+            layers.push(TenantLayer {
+                w,
+                key,
+                relu_key,
+                partial_key,
+                partial_relu_key,
+                grad_key,
+                back_key,
+            });
         }
-        let w = layers[0].w.clone();
-        let key = layers[0].key;
-        let relu_key = layers[0].relu_key;
-        let partial_key = layers[0].partial_key;
-        let partial_relu_key = layers[0].partial_relu_key;
         // clamp the high-water mark to the tenant's total full-wave demand
         // so neither the warm-up fill nor a steady-state top-up can stock
         // more bundles than real waves will ever pop (the trailing partial
@@ -462,18 +608,7 @@ impl ModelRegistry {
         // producer stays for shapeless per-tenant targets a future pipeline
         // may add.
         let refill = Refill::new();
-        self.models.push(ResidentModel {
-            spec,
-            w,
-            key,
-            relu_key,
-            partial_key,
-            partial_relu_key,
-            layers,
-            quarantined: false,
-            marks,
-            refill,
-        });
+        self.models.push(ResidentModel { spec, layers, quarantined: false, marks, refill });
         Ok(self.models.len() - 1)
     }
 
@@ -485,7 +620,7 @@ impl ModelRegistry {
     /// Lockstep-deterministic like every fill.
     pub fn warm_partial(&self, ctx: &mut Ctx, t: usize) -> Result<RefillOutcome, Abort> {
         let m = &self.models[t];
-        if m.quarantined || m.partial_key.is_none() {
+        if m.quarantined || m.layers[0].partial_key.is_none() {
             return Ok(RefillOutcome::default());
         }
         let targets = m.partial_layer_targets();
@@ -530,9 +665,12 @@ impl ModelRegistry {
     ) -> Result<RefillOutcome, Abort> {
         let m = &self.models[t];
         let mut out = RefillOutcome::default();
-        if m.quarantined {
-            // the pool-side push guard would drop the items anyway; skip
-            // the generation traffic entirely
+        if m.quarantined || m.spec.is_training() {
+            // quarantined: the pool-side push guard would drop the items
+            // anyway. Training: its bundles embed the current epoch's
+            // weight λ, so the wave path regenerates them post-commit
+            // ([`ModelRegistry::fill_train`]) — a between-waves tick would
+            // stock stale-λ material.
             return Ok(out);
         }
         let stock = ctx.pool.as_ref().map_or(0, |p| Self::vec_stock(p, m));
@@ -553,6 +691,35 @@ impl ModelRegistry {
         Ok(out)
     }
 
+    /// Regenerate training tenant `t`'s whole-epoch gate vector against its
+    /// **current** weight shares (forward + gradient + back-prop bundles,
+    /// drelu-gating material attached — see
+    /// [`crate::pool::fill_train_vec`]). Called at warm-up and after every
+    /// epoch commit; a no-op when a vector is already stocked or the tenant
+    /// is quarantined. Lockstep-deterministic, offline-phase traffic only.
+    pub fn fill_train(&self, ctx: &mut Ctx, t: usize) -> Result<RefillOutcome, Abort> {
+        let m = &self.models[t];
+        assert!(m.spec.is_training(), "fill_train on an inference tenant");
+        if m.quarantined {
+            return Ok(RefillOutcome::default());
+        }
+        fill_train_vec(ctx, &m.train_targets())
+    }
+
+    /// Commit training tenant `t`'s post-epoch weight shares. The caller
+    /// regenerates the tenant's pool material afterwards
+    /// ([`ModelRegistry::fill_train`]) — any bundle generated against the
+    /// old weights is now mask-stale by construction.
+    pub fn update_weights(&mut self, t: usize, ws: Vec<MMat<Z64>>) {
+        let m = &mut self.models[t];
+        assert!(m.spec.is_training(), "update_weights on an inference tenant");
+        assert_eq!(ws.len(), m.layers.len(), "one weight block per layer");
+        for (l, w) in m.layers.iter_mut().zip(ws) {
+            assert_eq!(l.w.dims(), w.dims(), "weight shape is fixed for a job");
+            l.w = w;
+        }
+    }
+
     /// The tenant's poppable keyed stock in whole layer-vector units: the
     /// min across every layer position of the paired matrix/nonlinear
     /// stock (the min keeps the refill state machine safe under any skew,
@@ -571,7 +738,12 @@ impl ModelRegistry {
     pub fn most_depleted(&self, ctx: &Ctx, eligible: &[bool]) -> Option<usize> {
         let mut best: Option<(usize, usize)> = None; // (deficit, tenant)
         for (t, m) in self.models.iter().enumerate() {
-            if !eligible.get(t).copied().unwrap_or(false) || m.quarantined {
+            if !eligible.get(t).copied().unwrap_or(false)
+                || m.quarantined
+                || m.spec.is_training()
+            {
+                // training pools refill on the wave path (post-commit, per
+                // epoch), never by between-waves steering
                 continue;
             }
             let stock = ctx.pool.as_ref().map_or(0, |p| Self::vec_stock(p, m));
@@ -677,11 +849,14 @@ mod tests {
             ctx.attach_pool(Pool::new());
             let o = reg.tick(ctx, ta, 8)?;
             assert_eq!((o.mat_items, o.relu_items), (2, 2), "paired cold fill");
-            let (mk, rk) = (reg.model(ta).key, reg.model(ta).relu_key.expect("relu key"));
+            let (mk, rk) = (
+                reg.model(ta).layers[0].key,
+                reg.model(ta).layers[0].relu_key.expect("relu key"),
+            );
             assert_eq!(rk.model, 31, "nonlinear material is sharded by tenant id");
             // tenant B's position (same shape, different model id) sees
             // none of tenant A's nonlinear material
-            let rk_b = relu_key_for(&reg.model(tb).key);
+            let rk_b = relu_key_for(&reg.model(tb).layers[0].key);
             assert_eq!(ctx.pool.as_ref().unwrap().len_relu(&rk_b), 0);
             // pop one pair → stock 1, at low: no refill
             let _ = ctx.pool_mut().unwrap().pop_mat(&mk).unwrap().expect("stocked");
@@ -729,7 +904,10 @@ mod tests {
             ctx.flush_verify()?;
             ctx.attach_pool(Pool::new());
             let m = reg.model(t);
-            let (pk, prk) = (m.partial_key.unwrap(), m.partial_relu_key.unwrap());
+            let (pk, prk) = (
+                m.layers[0].partial_key.unwrap(),
+                m.layers[0].partial_relu_key.unwrap(),
+            );
             let o1 = reg.warm_partial(ctx, t)?;
             // idempotent: the position is stocked, a second warm is a no-op
             let o2 = reg.warm_partial(ctx, t)?;
@@ -790,14 +968,14 @@ mod tests {
             assert_eq!(o.mat_items, 1, "top-up capped by remaining demand");
             let o = reg.tick(ctx, tb, 8)?;
             assert_eq!(o.mat_items, 0, "stock 1 is at low water: no refill");
-            let _ = ctx.pool_mut().unwrap().pop_mat(&reg.model(tb).key).unwrap();
+            let _ = ctx.pool_mut().unwrap().pop_mat(&reg.model(tb).layers[0].key).unwrap();
             let o = reg.tick(ctx, tb, 8)?;
             assert_eq!(o.mat_items, 2, "uncapped refill tops back up to high");
             assert_eq!(reg.most_depleted(ctx, &[true, true]), None, "both full");
             let pool = ctx.detach_pool().unwrap();
             Ok((
-                pool.len_mat(&reg.model(ta).key),
-                pool.len_mat(&reg.model(tb).key),
+                pool.len_mat(&reg.model(ta).layers[0].key),
+                pool.len_mat(&reg.model(tb).layers[0].key),
             ))
         });
         let (outs, report) = run.expect_ok();
@@ -900,5 +1078,59 @@ mod tests {
             assert_eq!(*t2, 0, "second warm-up is a no-op");
             assert_eq!(*st, 1);
         }
+    }
+
+    #[test]
+    fn training_tenant_mints_gate_families_and_fills_on_the_wave_path() {
+        // spec level: contract, windows, key families and shapes
+        let s = TenantSpec::training("job", 91, 4, vec![6, 2], TrainKind::Nn, 3, 4, 2, 3);
+        assert!(s.is_training());
+        assert_eq!(
+            (s.queries, s.rows_per_query, s.effective_coalesce(), s.class),
+            (3, 4, 1, 1),
+            "epochs as queries, batch rows, no coalescing, background class"
+        );
+        assert_eq!(s.gate_windows(), 5, "3L−1 gate windows for L = 2");
+        let tk = s.train_keys();
+        assert_eq!(tk.len(), 2);
+        assert_eq!(tk[0].fwd, s.layer_keys(s.wave_rows())[0].0, "forward keys shared with inference");
+        assert_eq!(tk[0].grad.layer, GRAD_GATE_BASE);
+        assert!(tk[0].back.is_none(), "layer 0 has no back gate");
+        assert_eq!(tk[1].back.unwrap().layer, BACK_GATE_BASE + 1);
+        assert_eq!((tk[1].grad.rows, tk[1].grad.inner, tk[1].grad.cols), (6, 4, 2));
+        let bk = tk[1].back.unwrap();
+        assert_eq!((bk.rows, bk.inner, bk.cols), (4, 2, 6));
+
+        let run = run_4pc(NetProfile::zero(), 918, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let s = TenantSpec::training("job", 91, 4, vec![6, 2], TrainKind::Nn, 3, 4, 2, 3);
+            let t = reg.load(ctx, s, 1, 2)?;
+            let ti = reg.load(ctx, spec("m1", 92, 3), 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            // between-waves machinery never touches the training pool
+            assert_eq!(reg.tick(ctx, t, 8)?.total(), 0, "tick skips training tenants");
+            assert_eq!(
+                reg.most_depleted(ctx, &[true, true]),
+                Some(ti),
+                "depletion steering skips training tenants"
+            );
+            // the wave path stocks one whole epoch vector…
+            let o = reg.fill_train(ctx, t)?;
+            assert_eq!(
+                (o.mat_items, o.relu_items),
+                (5, 1),
+                "2 forward + 2 grad + 1 back bundles, hidden ReLU paired"
+            );
+            let gates = crate::ml::train_gate_keys(&reg.model(t).train_keys());
+            assert!(ctx.pool_mut().unwrap().check_layer_vec_gates(&gates));
+            // …and refuses to deepen the stock while it is poppable
+            assert_eq!(reg.fill_train(ctx, t)?.total(), 0, "stock depth is 1");
+            // weight commit keeps shapes fixed
+            let ws = reg.model(t).layer_weights();
+            reg.update_weights(t, ws);
+            Ok(())
+        });
+        run.expect_ok();
     }
 }

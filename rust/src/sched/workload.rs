@@ -1,0 +1,349 @@
+//! The **workload** abstraction of the admission surface: what a tenant
+//! asks the cluster to do.
+//!
+//! PR 9 makes secure *training* (the paper's 187× headline, §VI-A) a
+//! first-class scheduled workload sharing the cluster with
+//! latency-sensitive inference. Both kinds are admitted through the same
+//! [`crate::sched::SchedQueue`] / [`crate::sched::WavePlanner`]:
+//!
+//! * [`Workload::Inference`] — today's queries: each admitted query is one
+//!   prediction row, waves coalesce many queries into one circuit
+//!   evaluation.
+//! * [`Workload::Training`] — a long-lived batch job: each admitted
+//!   "query" is one **epoch** (query id = epoch index), a wave runs the
+//!   whole forward/backward pass over the job's fixed batch, and the wave
+//!   boundary is the **preemption point** — between epochs the planner is
+//!   free to grant inference waves, so a saturating training job can never
+//!   hold the cluster across a tick.
+//!
+//! ## Training gate numbering
+//!
+//! A training epoch evaluates three families of matrix gates per layer
+//! `l` (dims `d_l × d_{l+1}`, batch `B`):
+//!
+//! | family  | product               | shape               | `CircuitKey::layer` |
+//! |---------|-----------------------|---------------------|---------------------|
+//! | forward | `A_l ∘ W_l`           | `B×d_l ∘ d_l×d_{l+1}`  | `l`              |
+//! | grad    | `A_lᵀ ∘ E_l`          | `d_l×B ∘ B×d_{l+1}` | [`GRAD_GATE_BASE`]` + l` |
+//! | back    | `E_l ∘ W_lᵀ` (`l>0`)  | `B×d_{l+1} ∘ d_{l+1}×d_l` | [`BACK_GATE_BASE`]` + l` |
+//!
+//! The bases keep the three families in **disjoint key ranges**: for a
+//! square hidden layer (`d_l == d_{l+1}`) the forward and back gates have
+//! identical `op`/shape/dealer, and without distinct gate numbers their
+//! pooled bundles would alias in the circuit-keyed pool and a pop could
+//! serve backward material to a forward gate (which fails closed, but
+//! deterministically — the wave would abort, not misbehave).
+//!
+//! Training bundles are generated **per epoch** against the current
+//! weight shares: an epoch commit replaces `[[W]]` with `[[W − ∇]]`,
+//! whose λ components are fresh (the gradient's mask comes from the
+//! epoch's truncation pairs), so next epoch's Γ correlations must be
+//! re-exchanged. Re-using one fixed `λ_W` across epochs would let the
+//! evaluators difference `m_W` between commits and learn the cleartext
+//! weight deltas — a gradient leak — so the regeneration is a security
+//! requirement, not a convenience. It runs *post-commit between waves*
+//! (offline phase), which is what keeps the epoch wave itself
+//! offline-silent.
+//!
+//! ## Checkpointed shares
+//!
+//! [`Checkpoint`] serializes one party's view of a training job — the
+//! epoch counter and the replicated weight shares (for plain SGD the
+//! optimizer state *is* the epoch counter plus the static
+//! learning-rate schedule, both in the header) — to a deterministic byte
+//! format. Restoring the four per-party blobs into a fresh run resumes
+//! the job mid-stream: the remaining epochs are re-admitted, fresh
+//! training bundles are generated against the restored λ, and the final
+//! model reconstructs identically at all four parties (locked by the
+//! equivalence suite).
+
+use crate::ring::{Matrix, Z64};
+use crate::sharing::MMat;
+
+/// `CircuitKey::layer` base for gradient gates (`A_lᵀ ∘ E_l`).
+pub const GRAD_GATE_BASE: u32 = 0x1000;
+/// `CircuitKey::layer` base for back-propagation gates (`E_l ∘ W_lᵀ`).
+pub const BACK_GATE_BASE: u32 = 0x2000;
+
+/// Which training loop a [`Workload::Training`] job runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainKind {
+    /// Linear regression: single `d → 1` layer, linear head.
+    LinReg,
+    /// Logistic regression: single `d → 1` layer, sigmoid head (the
+    /// sigmoid itself runs inline — keyed sigmoid is ROADMAP direction 1).
+    LogReg,
+    /// Feed-forward network with hidden ReLU layers (dims from the
+    /// tenant's `layers` vector).
+    Nn,
+}
+
+impl TrainKind {
+    /// Parse the CLI spelling (`--model linreg|logreg|nn`).
+    pub fn parse(s: &str) -> Option<TrainKind> {
+        match s {
+            "linreg" => Some(TrainKind::LinReg),
+            "logreg" => Some(TrainKind::LogReg),
+            "nn" => Some(TrainKind::Nn),
+            _ => None,
+        }
+    }
+}
+
+/// What a tenant asks the cluster to do — the admission-surface axis both
+/// the queue and the planner understand (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Latency-sensitive prediction queries (the default).
+    Inference,
+    /// A long-lived training job, scheduled as epoch-granular waves.
+    Training {
+        kind: TrainKind,
+        /// Total epochs; each is one admitted query (query id = epoch).
+        epochs: usize,
+        /// Fixed training batch (power of two — the `1/B` factor folds
+        /// into the gradient truncation shift).
+        batch: usize,
+        /// Serialize a [`Checkpoint`] every this many committed epochs
+        /// (0 = never).
+        checkpoint_every: usize,
+        /// Learning rate `2^{−lr_pow}` (folded into the same shift).
+        lr_pow: u32,
+    },
+}
+
+impl Workload {
+    /// Whether this is a training job.
+    pub fn is_training(&self) -> bool {
+        matches!(self, Workload::Training { .. })
+    }
+
+    /// The training parameters, if any.
+    pub fn training(&self) -> Option<(TrainKind, usize, usize, usize, u32)> {
+        match *self {
+            Workload::Training { kind, epochs, batch, checkpoint_every, lr_pow } => {
+                Some((kind, epochs, batch, checkpoint_every, lr_pow))
+            }
+            Workload::Inference => None,
+        }
+    }
+}
+
+// ---- checkpointed shares -------------------------------------------------
+
+const CKPT_MAGIC: &[u8; 4] = b"TCK1";
+
+/// One party's serialized view of a training job at an epoch boundary:
+/// the job identity, the epoch counter (the next epoch to run), and the
+/// replicated weight shares. Byte lengths are equal across parties (both
+/// the helper and an evaluator hold exactly three component matrices per
+/// weight), so blobs can be stored/rotated symmetrically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Checkpoint {
+    /// Resident-model id of the training tenant.
+    pub model: u64,
+    /// Next epoch to run on restore (= committed epochs so far).
+    pub epoch: u64,
+    /// Per-layer replicated weight shares.
+    pub weights: Vec<MMat<Z64>>,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix<Z64>) {
+    for v in m.data() {
+        put_u64(out, v.0);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.at + n > self.buf.len() {
+            return Err("checkpoint truncated".into());
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn matrix(&mut self, rows: usize, cols: usize) -> Result<Matrix<Z64>, String> {
+        let n = rows.checked_mul(cols).ok_or("checkpoint matrix overflow")?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(Z64(self.u64()?));
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+impl Checkpoint {
+    /// Serialize to the deterministic byte format (see the module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(CKPT_MAGIC);
+        put_u64(&mut out, self.model);
+        put_u64(&mut out, self.epoch);
+        put_u32(&mut out, self.weights.len() as u32);
+        for w in &self.weights {
+            let (rows, cols) = w.dims();
+            match w {
+                MMat::Helper { lam } => {
+                    out.push(0);
+                    put_u32(&mut out, rows as u32);
+                    put_u32(&mut out, cols as u32);
+                    for l in lam {
+                        put_matrix(&mut out, l);
+                    }
+                }
+                MMat::Eval { m, lam_next, lam_prev } => {
+                    out.push(1);
+                    put_u32(&mut out, rows as u32);
+                    put_u32(&mut out, cols as u32);
+                    put_matrix(&mut out, m);
+                    put_matrix(&mut out, lam_next);
+                    put_matrix(&mut out, lam_prev);
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse a blob produced by [`Checkpoint::encode`]; errors on any
+    /// malformed framing rather than restoring garbage shares.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, String> {
+        let mut r = Reader { buf: bytes, at: 0 };
+        if r.take(4)? != CKPT_MAGIC {
+            return Err("not a trident checkpoint (bad magic)".into());
+        }
+        let model = r.u64()?;
+        let epoch = r.u64()?;
+        let count = r.u32()? as usize;
+        let mut weights = Vec::with_capacity(count);
+        for _ in 0..count {
+            let tag = r.take(1)?[0];
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            let w = match tag {
+                0 => {
+                    let l1 = r.matrix(rows, cols)?;
+                    let l2 = r.matrix(rows, cols)?;
+                    let l3 = r.matrix(rows, cols)?;
+                    MMat::Helper { lam: [l1, l2, l3] }
+                }
+                1 => {
+                    let m = r.matrix(rows, cols)?;
+                    let lam_next = r.matrix(rows, cols)?;
+                    let lam_prev = r.matrix(rows, cols)?;
+                    MMat::Eval { m, lam_next, lam_prev }
+                }
+                t => return Err(format!("unknown checkpoint share tag {t}")),
+            };
+            weights.push(w);
+        }
+        if r.at != bytes.len() {
+            return Err("trailing bytes after checkpoint".into());
+        }
+        Ok(Checkpoint { model, epoch, weights })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(seed: u64, rows: usize, cols: usize) -> Matrix<Z64> {
+        Matrix::from_fn(rows, cols, |r, c| Z64(seed + (r * cols + c) as u64))
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_both_share_kinds() {
+        let ck = Checkpoint {
+            model: 7,
+            epoch: 3,
+            weights: vec![
+                MMat::Helper { lam: [mat(1, 2, 3), mat(100, 2, 3), mat(200, 2, 3)] },
+                MMat::Eval {
+                    m: mat(300, 3, 1),
+                    lam_next: mat(400, 3, 1),
+                    lam_prev: mat(500, 3, 1),
+                },
+            ],
+        };
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).expect("roundtrip");
+        assert_eq!(back, ck);
+        // helper and evaluator blobs of equal shapes have equal lengths —
+        // both hold exactly three component matrices per weight
+        let helper_only = Checkpoint {
+            model: 7,
+            epoch: 3,
+            weights: vec![MMat::Helper { lam: [mat(0, 2, 3), mat(0, 2, 3), mat(0, 2, 3)] }],
+        };
+        let eval_only = Checkpoint {
+            model: 7,
+            epoch: 3,
+            weights: vec![MMat::Eval {
+                m: mat(0, 2, 3),
+                lam_next: mat(0, 2, 3),
+                lam_prev: mat(0, 2, 3),
+            }],
+        };
+        assert_eq!(helper_only.encode().len(), eval_only.encode().len());
+    }
+
+    #[test]
+    fn checkpoint_decode_rejects_malformed_blobs() {
+        let ck = Checkpoint { model: 1, epoch: 0, weights: vec![] };
+        let mut bytes = ck.encode();
+        assert!(Checkpoint::decode(&bytes[..3]).is_err(), "truncated");
+        bytes[0] = b'X';
+        assert!(Checkpoint::decode(&bytes).is_err(), "bad magic");
+        let mut ok = ck.encode();
+        ok.push(0);
+        assert!(Checkpoint::decode(&ok).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn gate_bases_keep_families_disjoint() {
+        // deepest realistic network ≪ 0x1000 layers, so forward / grad /
+        // back gate numbers can never collide
+        assert!(GRAD_GATE_BASE > 0x100);
+        assert!(BACK_GATE_BASE > GRAD_GATE_BASE + 0x100);
+    }
+
+    #[test]
+    fn workload_training_accessor() {
+        let w = Workload::Training {
+            kind: TrainKind::Nn,
+            epochs: 4,
+            batch: 8,
+            checkpoint_every: 2,
+            lr_pow: 5,
+        };
+        assert!(w.is_training());
+        assert_eq!(w.training(), Some((TrainKind::Nn, 4, 8, 2, 5)));
+        assert!(!Workload::Inference.is_training());
+        assert_eq!(Workload::Inference.training(), None);
+        assert_eq!(TrainKind::parse("logreg"), Some(TrainKind::LogReg));
+        assert_eq!(TrainKind::parse("cnn"), None);
+    }
+}

@@ -66,8 +66,8 @@ pub mod multi;
 
 pub use multi::{
     cleartext_tenant_predictions, serve_multi, serve_multi_checked, tenant_query_stream,
-    FaultKind, FaultPlan, MultiServeConfig, MultiServeStats, OpRollup, QuarantineStats,
-    TenantServeStats,
+    tenant_train_batch, FaultKind, FaultPlan, MultiServeConfig, MultiServeStats, OpRollup,
+    QuarantineStats, TenantServeStats,
 };
 
 use std::collections::VecDeque;

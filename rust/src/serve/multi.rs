@@ -45,7 +45,7 @@
 //! `offline_msgs_matmul` / `offline_msgs_relu` attribute the claim).
 
 use crate::crypto::Rng;
-use crate::ml::nn::forward_keyed;
+use crate::ml::nn::{forward_keyed, train_gate_keys, train_step, HeadActivation};
 use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, PartyId, Phase, P2};
 use crate::obs::{self, Payload, TraceEvent, Window};
@@ -54,13 +54,17 @@ use crate::proto::{matmul_tr, run_4pc, Ctx};
 use crate::ring::fixed::FixedPoint;
 use crate::ring::{Matrix, Z64};
 use crate::sched::{
-    tenant_layer_key, tenant_layer_weights, ModelRegistry, SchedQueue, SchedQueueStats, SchedQuery,
-    TenantSpec, WavePlanner,
+    tenant_layer_key, tenant_layer_weights, Checkpoint, ModelRegistry, SchedQueue,
+    SchedQueueStats, SchedQuery, TenantSpec, TrainKind, WavePlanner,
 };
+use crate::sharing::MMat;
 use super::PoolMode;
 
 /// Domain separator for per-tenant query streams.
 const TQ_SEED: u64 = 0x7363_6864_5f71_3174;
+
+/// Domain separator for per-tenant training batches.
+const TT_SEED: u64 = 0x7472_6169_6e5f_3974;
 
 /// Multi-tenant serving workload.
 #[derive(Clone, Debug)]
@@ -95,6 +99,14 @@ pub struct MultiServeConfig {
     /// rounds and virtual clocks are byte-for-byte identical with and
     /// without it (the observer-effect contract — tested).
     pub trace: bool,
+    /// Per-tenant checkpoint restore: `resume[t] = Some(blobs)` resumes
+    /// training tenant `t` from the four per-party [`Checkpoint`] blobs
+    /// (party order `P0..P3` — each party decodes only its own). The
+    /// restored weight shares are swapped in **before** any pool material
+    /// is generated, the job's committed epochs are skipped at admission,
+    /// and only the remaining epochs run. Empty (the default) = every
+    /// training job starts at epoch 0.
+    pub resume: Vec<Option<[Vec<u8>; 4]>>,
 }
 
 impl Default for MultiServeConfig {
@@ -109,6 +121,7 @@ impl Default for MultiServeConfig {
             containment: false,
             fault: None,
             trace: false,
+            resume: Vec::new(),
         }
     }
 }
@@ -209,6 +222,44 @@ pub fn cleartext_tenant_predictions(spec: &TenantSpec) -> Vec<Vec<f64>> {
         .collect()
 }
 
+/// Deterministic fixed training batch of a training tenant (at the data
+/// owner): `batch × d` normal features plus `batch × out_cols` targets —
+/// `{0, 1}` labels for logistic regression, small normal values otherwise.
+/// The cleartext GD oracle of the equivalence suite regenerates exactly
+/// this batch.
+pub fn tenant_train_batch(spec: &TenantSpec) -> (F64Mat, F64Mat) {
+    let (kind, _, batch, _, _) = spec.workload.training().expect("training tenant");
+    let mut rng = Rng::seeded(spec.seed ^ TT_SEED);
+    let mut x = F64Mat::zeros(batch, spec.d);
+    for v in x.data.iter_mut() {
+        *v = rng.normal() * 0.5;
+    }
+    let mut y = F64Mat::zeros(batch, spec.out_cols());
+    for v in y.data.iter_mut() {
+        *v = match kind {
+            TrainKind::LogReg => {
+                if rng.normal() > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            TrainKind::LinReg | TrainKind::Nn => rng.normal() * 0.5,
+        };
+    }
+    (x, y)
+}
+
+/// Per-party live state of one scheduled training job.
+struct TrainJob {
+    /// The job's fixed batch, shared once by the data owner at admission.
+    x: MMat<Z64>,
+    y: MMat<Z64>,
+    /// Committed epochs so far = the next epoch to run (pre-loaded from a
+    /// restored checkpoint on resume).
+    next_epoch: u64,
+}
+
 /// Per-party output of one multi-tenant run (internal).
 struct MultiPartyOut {
     /// Tenant served per wave, wave order (identical at all parties).
@@ -246,6 +297,15 @@ struct MultiPartyOut {
     /// Decoded predictions per tenant (`(query id, row values)`), at the
     /// data owner only.
     answers: Vec<Vec<(usize, Vec<f64>)>>,
+    /// Committed training epochs per tenant (0 for inference tenants).
+    train_epochs: Vec<u64>,
+    /// The reconstructed final model of a finished training job, decoded
+    /// per layer (every party holds it — 4-way identity is asserted at
+    /// aggregation).
+    train_final: Vec<Option<Vec<Vec<f64>>>>,
+    /// This party's serialized checkpoints per tenant: `(epoch, blob)` in
+    /// commit order.
+    train_ckpts: Vec<Vec<(u64, Vec<u8>)>>,
     queue_stats: SchedQueueStats,
     pool_stats: Option<PoolStats>,
     pool_left_mat: Vec<usize>,
@@ -278,6 +338,9 @@ impl MultiPartyOut {
             tick_online_msgs: 0,
             ticks: 0,
             answers: vec![Vec::new(); nt],
+            train_epochs: vec![0; nt],
+            train_final: vec![None; nt],
+            train_ckpts: vec![Vec::new(); nt],
             queue_stats: SchedQueueStats::default(),
             pool_stats: None,
             pool_left_mat: vec![0; nt],
@@ -348,6 +411,17 @@ pub struct TenantServeStats {
     /// Decoded predictions (`(query id, row values)`), query-id order, as
     /// seen by the data owner.
     pub answers: Vec<(usize, Vec<f64>)>,
+    /// Committed training epochs (0 for inference tenants — a training
+    /// tenant's `served` counts the same epochs at the queue level).
+    pub epochs_committed: u64,
+    /// The finished training job's reconstructed model, decoded per layer
+    /// (row-major) — `None` for inference tenants and unfinished jobs.
+    /// Identical at all four parties (asserted at aggregation).
+    pub final_model: Option<Vec<Vec<f64>>>,
+    /// Serialized checkpoints in commit order: `(next epoch, the four
+    /// per-party blobs in party order)` — feed one entry back through
+    /// [`MultiServeConfig::resume`] to resume the job mid-stream.
+    pub checkpoints: Vec<(u64, [Vec<u8>; 4])>,
 }
 
 /// Aggregated measurements of a multi-tenant run.
@@ -508,14 +582,19 @@ fn tick_tenant(
 /// party computed before an honest peer aborted) is discarded whole.
 struct WaveOut {
     answers: Vec<(usize, Vec<f64>)>,
-    /// Offline messages this party sent inside each layer's matrix-gate /
-    /// ReLU sub-window (gate order, length = the tenant's depth).
+    /// Offline messages this party sent inside each gate window's
+    /// matrix-gate / activation sub-window (window order, length = the
+    /// tenant's [`TenantSpec::gate_windows`]).
     om_mat: Vec<u64>,
     om_relu: Vec<u64>,
     /// The matching per-gate online compute spans (this party's measured
     /// ns inside each sub-window) — the `gate.*` trace event payloads.
     cn_mat: Vec<u64>,
     cn_relu: Vec<u64>,
+    /// A training epoch's updated weight shares — held here, NOT yet in
+    /// the registry, so the containment boundary can discard an aborted
+    /// epoch whole. `None` for inference waves.
+    new_weights: Option<Vec<MMat<Z64>>>,
 }
 
 /// One wave's protocol body: stack the batch, then the tenant's whole
@@ -605,7 +684,60 @@ fn run_wave(
             off += q.rows * cols;
         }
     }
-    Ok(WaveOut { answers, om_mat, om_relu, cn_mat, cn_relu })
+    Ok(WaveOut { answers, om_mat, om_relu, cn_mat, cn_relu, new_weights: None })
+}
+
+/// One **training** wave: one epoch of the tenant's job — forward,
+/// backward and weight update over its fixed batch (the gate taxonomy and
+/// per-epoch regeneration rationale live in [`crate::sched::workload`]).
+/// Keyed sourcing is all-or-nothing over the whole `3L−1` matrix-gate
+/// vector; [`Pool::check_layer_vec_gates`] counts one miss **per cold
+/// gate** so an unwarmed job's refill debt is visible, and any hole sends
+/// the entire epoch down the deterministic inline path. The updated
+/// weight shares ride back in [`WaveOut::new_weights`]: the registry swap,
+/// checkpointing and pool regeneration all happen only after the
+/// containment boundary commits the wave. The epoch's verification queue
+/// is flushed before returning, so tampered material aborts inside the
+/// wave body — classifiable by the four-party barrier like any inference
+/// wave.
+fn run_train_wave(
+    ctx: &mut Ctx,
+    reg: &ModelRegistry,
+    spec: &TenantSpec,
+    t: usize,
+    job: &TrainJob,
+    keyed: bool,
+) -> Result<WaveOut, Abort> {
+    let (kind, ..) = spec.workload.training().expect("training tenant");
+    let keys = reg.model(t).train_keys();
+    let gates = train_gate_keys(&keys);
+    let use_keyed = keyed && ctx.pool_mut().is_some_and(|p| p.check_layer_vec_gates(&gates));
+    let weights = reg.model(t).layer_weights();
+    let head = match kind {
+        // the piecewise sigmoid runs the generic msb/bit-injection
+        // machinery inline (keyed sigmoid is a roadmap direction); the
+        // offline-silence contract covers the linear-head trainers
+        TrainKind::LogReg => HeadActivation::Sigmoid,
+        TrainKind::LinReg | TrainKind::Nn => HeadActivation::Linear,
+    };
+    let out = train_step(
+        ctx,
+        &weights,
+        head,
+        spec.grad_shift(),
+        use_keyed.then_some(keys.as_slice()),
+        &job.x,
+        &job.y,
+    )?;
+    ctx.flush_verify()?;
+    Ok(WaveOut {
+        answers: Vec::new(),
+        om_mat: out.om_mat,
+        om_relu: out.om_relu,
+        cn_mat: out.cn_mat,
+        cn_relu: out.cn_relu,
+        new_weights: Some(out.weights),
+    })
 }
 
 /// The per-party multi-tenant serving program.
@@ -628,7 +760,60 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
     for spec in &cfg.tenants {
         reg.load(ctx, spec.clone(), cfg.low_water, cfg.high_water)?;
     }
+    // training jobs: the data owner shares each job's fixed batch once at
+    // admission (shapes are public schedule metadata, values private)
+    let mut jobs: Vec<Option<TrainJob>> = Vec::with_capacity(nt);
+    for spec in &cfg.tenants {
+        if !spec.is_training() {
+            jobs.push(None);
+            continue;
+        }
+        let clear = (ctx.id() == P2).then(|| tenant_train_batch(spec));
+        let x = share_fixed_mat(
+            ctx,
+            P2,
+            clear.as_ref().map(|(x, _)| x),
+            spec.rows_per_query,
+            spec.d,
+        )?;
+        let y = share_fixed_mat(
+            ctx,
+            P2,
+            clear.as_ref().map(|(_, y)| y),
+            spec.rows_per_query,
+            spec.out_cols(),
+        )?;
+        jobs.push(Some(TrainJob { x, y, next_epoch: 0 }));
+    }
     ctx.flush_verify()?;
+    // checkpoint restore: swap in the serialized weight shares (each party
+    // decodes its own blob) BEFORE any pool material is generated, so the
+    // warm-up fill embeds the restored λ; the committed epochs are skipped
+    // at admission below (`next_q` starts at the restored epoch)
+    for (t, r) in cfg.resume.iter().enumerate().take(nt) {
+        let Some(blobs) = r else { continue };
+        let spec = &cfg.tenants[t];
+        assert!(spec.is_training(), "resume blob for non-training tenant {t}");
+        let ck = Checkpoint::decode(&blobs[ctx.id().idx()])
+            .unwrap_or_else(|e| panic!("tenant {t} checkpoint: {e}"));
+        assert_eq!(ck.model, spec.model, "checkpoint names a different model");
+        assert!(
+            (ck.epoch as usize) <= spec.queries,
+            "checkpoint epoch {} past the job's {} epochs",
+            ck.epoch,
+            spec.queries
+        );
+        reg.update_weights(t, ck.weights);
+        jobs[t].as_mut().expect("training job").next_epoch = ck.epoch;
+        ctx.net.trace_event_at(
+            "ckpt.restore",
+            true,
+            Some(t as u32),
+            None,
+            None,
+            Payload::gauge(ck.epoch as i64),
+        );
+    }
 
     let mut out = MultiPartyOut::new(nt);
     if keyed {
@@ -639,6 +824,14 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         // right after, so full AND partial warm waves hit the pool.
         for t in 0..nt {
             let s = &cfg.tenants[t];
+            if s.is_training() {
+                // one whole-epoch gate vector against the (possibly
+                // restored) weight shares — regenerated post-commit by the
+                // wave path thereafter
+                let o = reg.fill_train(ctx, t)?;
+                out.refill_mat_items[t] += o.mat_items;
+                continue;
+            }
             tick_tenant(ctx, &reg, &mut out, t, s.queries.div_ceil(s.effective_coalesce()))?;
             let o = reg.warm_partial(ctx, t)?;
             out.refill_mat_items[t] += o.mat_items;
@@ -651,10 +844,23 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         if let Some(cap) = spec.inflight_cap {
             queue.set_cap(t, cap);
         }
+        if spec.is_training() {
+            // training never ages into the latency class: inference p99
+            // under a saturating job stays EXACTLY what it is without one
+            // (pinned by test). Starvation-freedom comes from the
+            // epoch-granular waves draining whenever class 0 is idle.
+            queue.set_unaged(t);
+        }
     }
     let streams: Option<Vec<Vec<F64Mat>>> =
         (ctx.id() == P2).then(|| cfg.tenants.iter().map(tenant_query_stream).collect());
     let mut next_q = vec![0usize; nt];
+    for (t, j) in jobs.iter().enumerate() {
+        if let Some(j) = j {
+            // a restored job re-admits only its remaining epochs
+            next_q[t] = (j.next_epoch as usize).min(cfg.tenants[t].queries);
+        }
+    }
 
     // ---- scheduling loop, measured in isolation ----
     ctx.net.reset_clocks();
@@ -723,6 +929,10 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         wave_seq += 1;
         ctx.net.trace().set_wave(t as u32, this_wave);
         ctx.net.trace_event("wave.start", true, Payload::gauge(batch.len() as i64));
+        if spec.is_training() {
+            // query id = epoch index (coalesce 1: one epoch per wave)
+            ctx.net.trace_event("epoch.start", true, Payload::gauge(batch[0].id as i64));
+        }
         let ww = Window::open(ctx.net);
         let h0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits);
         let m0 = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_misses);
@@ -758,7 +968,11 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         }
         grants[t] += 1;
 
-        let res = run_wave(ctx, &reg, spec, t, rows, &batch, keyed, ww);
+        let res = if spec.is_training() {
+            run_train_wave(ctx, &reg, spec, t, jobs[t].as_ref().expect("training job"), keyed)
+        } else {
+            run_wave(ctx, &reg, spec, t, rows, &batch, keyed, ww)
+        };
         // meter deltas captured before the barrier, so the Control-class
         // barrier round-trip cannot perturb the wave's numbers
         let d = ww.diff(ctx.net);
@@ -769,7 +983,7 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         let hit = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_hits) > h0;
         let missed = ctx.pool.as_ref().map_or(0, |p| p.stats().mat_misses) > m0;
 
-        let wave = if cfg.containment && keyed {
+        let mut wave = if cfg.containment && keyed {
             // classify the local outcome: 0 = ok; 1 = failed in keyed
             // context (containable — a warm keyed wave draws no correlated
             // randomness, so every party's PRF streams are still in sync);
@@ -846,6 +1060,41 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
             // containment off (or inline mode): any abort is run-fatal
             res?
         };
+
+        // training epoch commit: the wave survived the containment
+        // boundary, so swap the updated weight shares into the registry,
+        // advance the job, serialize a checkpoint on schedule, and — when
+        // the job just finished — reconstruct the trained model at every
+        // party (the job's deliverable; 4-way bit identity is asserted at
+        // aggregation)
+        if let Some(ws) = wave.new_weights.take() {
+            let epoch = batch[0].id as u64;
+            reg.update_weights(t, ws);
+            let job = jobs[t].as_mut().expect("training job");
+            job.next_epoch = epoch + 1;
+            out.train_epochs[t] += 1;
+            ctx.net.trace_event("epoch.commit", true, Payload::gauge(epoch as i64));
+            let (_, epochs, _, ckpt_every, _) =
+                spec.workload.training().expect("training tenant");
+            if ckpt_every > 0 && job.next_epoch % ckpt_every as u64 == 0 {
+                let blob = Checkpoint {
+                    model: spec.model,
+                    epoch: job.next_epoch,
+                    weights: reg.model(t).layer_weights(),
+                }
+                .encode();
+                ctx.net.trace_event("ckpt.save", true, Payload::gauge(blob.len() as i64));
+                out.train_ckpts[t].push((job.next_epoch, blob));
+            }
+            if job.next_epoch as usize >= epochs {
+                let mut fin = Vec::with_capacity(reg.model(t).layers.len());
+                for w in reg.model(t).layer_weights() {
+                    let m = crate::proto::reconstruct::reconstruct_mat(ctx, &w)?;
+                    fin.push(m.data().iter().map(|&v| FixedPoint::decode(v)).collect());
+                }
+                out.train_final[t] = Some(fin);
+            }
+        }
 
         // trace the committed wave: one span per gate (msgs from the same
         // sub-windows the meters use, so the rollup reconciles exactly),
@@ -955,6 +1204,38 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         }
         ctx.net.trace().clear_wave();
 
+        // 6a. post-commit regeneration for the training tenant that just
+        // committed an epoch: next epoch's bundles must embed the NEW
+        // weight λ (material generated against the old weights would let
+        // the evaluators difference wire masks and learn the weight deltas
+        // — see `sched::workload`), so the wave path refills its own
+        // tenant here, between waves, offline-phase, capped at the job's
+        // remaining epochs
+        if keyed && spec.is_training() && !reg.is_quarantined(t) {
+            let remaining = (spec.queries - next_q[t]) + queue.pending_tenant(t);
+            if remaining > 0 {
+                let w = Window::open(ctx.net);
+                let o = reg.fill_train(ctx, t)?;
+                let d = w.diff(ctx.net);
+                out.tick_online_msgs += d.msgs(Phase::Online);
+                out.refill_ticks[t] += 1;
+                out.refill_mat_items[t] += o.mat_items;
+                ctx.net.trace_event_at(
+                    "refill.train",
+                    true,
+                    Some(t as u32),
+                    None,
+                    None,
+                    Payload {
+                        msgs: d.msgs(Phase::Offline),
+                        bytes: d.bytes(Phase::Offline),
+                        compute_ns: d.compute_ns(Phase::Offline),
+                        value: o.mat_items as i64,
+                        ..Payload::default()
+                    },
+                );
+            }
+        }
         // 6. between waves: one refill tick for the most-depleted tenant
         // pool that can still consume a full wave; the tick's top-up is
         // capped at the tenant's remaining full-wave demand, so a late-run
@@ -982,8 +1263,9 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         out.pool_stats = Some(pool.stats());
         for t in 0..nt {
             let m = reg.model(t);
-            out.pool_left_mat[t] = pool.len_mat(&m.key);
-            out.pool_left_relu[t] = m.relu_key.map_or(0, |rk| pool.len_relu(&rk));
+            out.pool_left_mat[t] = pool.len_mat(&m.layers[0].key);
+            out.pool_left_relu[t] =
+                m.layers[0].relu_key.map_or(0, |rk| pool.len_relu(&rk));
             out.pool_left_mat_layers[t] =
                 m.layers.iter().map(|l| pool.len_mat(&l.key)).collect();
             out.pool_left_relu_layers[t] = m
@@ -1055,6 +1337,11 @@ fn aggregate(
             o.quarantines, outs[1].quarantines,
             "containment must be lockstep-deterministic across parties"
         );
+        assert_eq!(
+            o.train_final, outs[1].train_final,
+            "a finished job's reconstructed model must be identical at all four parties"
+        );
+        assert_eq!(o.train_epochs, outs[1].train_epochs, "epoch commits are lockstep");
     }
     // the trace recorder doubles as a correctness check: identity fields
     // are pure functions of public lockstep metadata, so all four parties
@@ -1089,9 +1376,11 @@ fn aggregate(
         let (mut waves_t, mut keyed_waves, mut inline_waves) = (0usize, 0usize, 0usize);
         let (mut partial_waves, mut partial_keyed_waves) = (0usize, 0usize);
         let (mut offm, mut offm_mat, mut offm_relu) = (0u64, 0u64, 0u64);
-        let depth = spec.depth();
-        let mut offm_mat_layers = vec![0u64; depth];
-        let mut offm_relu_layers = vec![0u64; depth];
+        // gate WINDOWS, not forward depth: a training tenant's wave emits
+        // 3·depth − 1 per-gate meters (forward + grad + back windows)
+        let windows = spec.gate_windows();
+        let mut offm_mat_layers = vec![0u64; windows];
+        let mut offm_relu_layers = vec![0u64; windows];
         for i in 0..waves {
             if outs[1].wave_tenant[i] != t {
                 continue;
@@ -1127,6 +1416,26 @@ fn aggregate(
         let quarantine = outs[1].quarantines.iter().find(|q| q.tenant == t);
         let mut answers = outs[2].answers[t].clone();
         answers.sort_by_key(|(id, _)| *id);
+        // checkpoints: the schedule is lockstep (same epochs at every
+        // party); the blobs are per-party views, zipped in party order
+        for o in &outs {
+            assert_eq!(
+                o.train_ckpts[t].len(),
+                outs[1].train_ckpts[t].len(),
+                "checkpoint schedule must be lockstep"
+            );
+        }
+        let checkpoints: Vec<(u64, [Vec<u8>; 4])> = (0..outs[1].train_ckpts[t].len())
+            .map(|i| {
+                let ep = outs[1].train_ckpts[t][i].0;
+                let blobs = [0usize, 1, 2, 3].map(|p| {
+                    let (e, b) = &outs[p].train_ckpts[t][i];
+                    assert_eq!(*e, ep, "checkpoint epochs must agree across parties");
+                    b.clone()
+                });
+                (ep, blobs)
+            })
+            .collect();
         tenants.push(TenantServeStats {
             name: spec.name.clone(),
             submitted: qs.submitted[t],
@@ -1162,6 +1471,9 @@ fn aggregate(
             pool_left_mat_layers: outs[1].pool_left_mat_layers[t].clone(),
             pool_left_relu_layers: outs[1].pool_left_relu_layers[t].clone(),
             answers,
+            epochs_committed: outs[1].train_epochs[t],
+            final_model: outs[1].train_final[t].clone(),
+            checkpoints,
         });
     }
 
@@ -1234,6 +1546,11 @@ mod tests {
 
     fn assert_answers_match_cleartext(stats: &MultiServeStats, cfg: &MultiServeConfig) {
         for (t, ts) in stats.tenants.iter().enumerate() {
+            if cfg.tenants[t].is_training() {
+                // training waves answer nothing; their deliverable is the
+                // final model (checked by the training tests)
+                continue;
+            }
             let want = cleartext_tenant_predictions(&cfg.tenants[t]);
             assert_eq!(ts.answers.len(), ts.served, "one answer entry per served query");
             for (qid, rows) in &ts.answers {
@@ -1649,5 +1966,125 @@ mod tests {
         assert!(ts.inline_waves >= 1);
         assert_eq!(stats.tenants[1].served, 4, "the innocent tenant is unaffected");
         assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn training_job_warm_epochs_are_offline_silent_at_every_gate() {
+        // a 4-6-2 NN training job (3 epochs, batch 8) shares the cluster
+        // with a latency-sensitive inference tenant; every warm keyed epoch
+        // must pop its whole forward+grad+back gate vector and send ZERO
+        // offline-phase messages inside the wave window
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[1] =
+            TenantSpec::training("job", 9, 4, vec![6, 2], TrainKind::Nn, 3, 8, 0, 5);
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        let ts = &stats.tenants[1];
+        assert_eq!(ts.served, 3, "one wave per epoch: {ts:?}");
+        assert_eq!(ts.keyed_waves, 3, "warm epochs draw from the per-epoch pools");
+        assert_eq!(ts.inline_waves, 0);
+        assert_eq!(ts.epochs_committed, 3);
+        assert_eq!(
+            ts.offline_msgs_in_waves, 0,
+            "warm keyed training epochs are offline-silent: {ts:?}"
+        );
+        // 3·depth−1 = 5 gate windows: fwd0, fwd1, grad1, back1, grad0 —
+        // silence must hold at EVERY gate, forward and backward
+        assert_eq!(ts.offline_msgs_matmul_layers, vec![0; 5], "silent at every gate");
+        assert_eq!(ts.offline_msgs_relu_layers, vec![0; 5]);
+        assert!(ts.final_model.is_some(), "finished job publishes its model");
+        assert!(ts.checkpoints.is_empty(), "checkpoint_every = 0 → none taken");
+        // the inference tenant is fully served next to the training job
+        let inf = &stats.tenants[0];
+        assert_eq!(inf.served, 4);
+        assert_eq!(inf.epochs_committed, 0);
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn saturating_training_job_does_not_move_inference_latency() {
+        // baseline: inference tenants alone (aging on, as in production)
+        let mut base = two_tenant_cfg(PoolMode::Keyed);
+        base.age_every = 4;
+        let alone = serve_multi(NetProfile::zero(), base.clone());
+        // same cluster plus a saturating class-1 LinReg training job: the
+        // job is exempt from aging, so class-0 inference waves win every
+        // tick they have work — the inference latency distribution must be
+        // EXACTLY unchanged, not merely close
+        let mut mixed_cfg = base.clone();
+        mixed_cfg.tenants.push(TenantSpec::training(
+            "job",
+            9,
+            4,
+            vec![],
+            TrainKind::LinReg,
+            6,
+            8,
+            0,
+            4,
+        ));
+        let mixed = serve_multi(NetProfile::zero(), mixed_cfg);
+        for t in 0..2 {
+            let (a, b) = (&alone.tenants[t], &mixed.tenants[t]);
+            assert_eq!(b.served, a.served, "tenant {t} serves the same queries");
+            assert_eq!(b.p50_latency, a.p50_latency, "tenant {t} p50 moved: {b:?}");
+            assert_eq!(
+                b.p99_latency, a.p99_latency,
+                "tenant {t} p99 must not move under concurrent training: {b:?}"
+            );
+            assert_eq!(b.mean_sojourn_ticks, a.mean_sojourn_ticks, "tenant {t} sojourn");
+            assert_eq!(b.max_sojourn_ticks, a.max_sojourn_ticks, "tenant {t} sojourn");
+        }
+        // and the training job still makes full progress in the gaps
+        let job = &mixed.tenants[2];
+        assert_eq!(job.epochs_committed, 6, "background job completes: {job:?}");
+        assert!(job.final_model.is_some());
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_to_identical_final_model() {
+        let job = || TenantSpec::training("job", 9, 4, vec![6, 2], TrainKind::Nn, 4, 8, 2, 5);
+        let full_cfg = MultiServeConfig {
+            tenants: vec![job()],
+            mode: PoolMode::Keyed,
+            low_water: 1,
+            high_water: 2,
+            age_every: 0,
+            seed: 1500,
+            ..MultiServeConfig::default()
+        };
+        let full = serve_multi(NetProfile::zero(), full_cfg.clone());
+        let ts = &full.tenants[0];
+        assert_eq!(ts.epochs_committed, 4);
+        let final_full = ts.final_model.clone().expect("full run finishes");
+        // checkpoint_every = 2 over 4 epochs → blobs after epochs 2 and 4
+        assert_eq!(
+            ts.checkpoints.iter().map(|(e, _)| *e).collect::<Vec<u64>>(),
+            vec![2, 4],
+            "{ts:?}"
+        );
+        // restore from the mid-job checkpoint: the resumed run re-admits
+        // only the remaining epochs and lands on the full run's model (to
+        // fixed-point tolerance — probabilistic truncation re-rounds under
+        // the resumed run's fresh PRF randomness; the four parties of the
+        // resumed run agree EXACTLY, asserted inside aggregation)
+        let (ck_epoch, blobs) = ts.checkpoints[0].clone();
+        assert_eq!(ck_epoch, 2);
+        let mut resume_cfg = full_cfg;
+        resume_cfg.resume = vec![Some(blobs)];
+        let resumed = serve_multi(NetProfile::zero(), resume_cfg);
+        let rs = &resumed.tenants[0];
+        assert_eq!(rs.epochs_committed, 2, "only the remaining epochs run: {rs:?}");
+        assert_eq!(rs.served, 2);
+        let final_resumed = rs.final_model.clone().expect("resumed run finishes");
+        assert_eq!(final_resumed.len(), final_full.len());
+        for (l, (a, b)) in final_full.iter().zip(final_resumed.iter()).enumerate() {
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert!(
+                    (x - y).abs() < 0.01,
+                    "layer {l} weight {i}: full {x} vs resumed {y}"
+                );
+            }
+        }
     }
 }

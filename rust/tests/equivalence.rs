@@ -30,7 +30,13 @@
 //!   lockstep-identical at all four parties, every surviving answer
 //!   (including the poisoned wave's re-queued queries) matches the
 //!   cleartext oracle — while party-scoped aborts, and any abort with
-//!   containment off, still fail the whole run closed.
+//!   containment off, still fail the whole run closed;
+//! * **scheduled training**: a training job driven through the same
+//!   registry/queue/planner lands on a cleartext fixed-point GD oracle
+//!   (logreg with the 3-segment sigmoid head and a deep NN, keyed ==
+//!   inline), warm keyed epochs stay offline-silent, and restoring a
+//!   mid-job checkpoint replays only the remaining epochs onto the full
+//!   run's final model.
 
 use trident::convert::{bit2a, bit2a_many, bitext, bitext_many};
 use trident::crypto::Rng;
@@ -2194,6 +2200,202 @@ fn op_rollup_reconciles_with_offline_meters_in_both_modes() {
             assert!(mat > 0, "inline waves pay per-gate correlation traffic");
         } else {
             assert_eq!(mat + relu, 0, "warm keyed waves are offline-silent");
+        }
+    }
+}
+
+// -------------------------------------------------- scheduled training
+
+/// Cleartext gradient-descent oracle mirroring `ml::nn::train_step` in
+/// f64 over the job's deterministic batch and seed-derived initial
+/// weights: per epoch a forward pass (hidden ReLU, head linear or the
+/// 3-segment sigmoid), `E = A − T`, then per layer in reverse the update
+/// `W ← W − AᵀE · 2^−lr_pow / B` and the back-propagated error
+/// `E ← (E ∘ Wᵀ) ⊗ drelu(U)`, both against the epoch-start weights.
+fn cleartext_gd_model(
+    spec: &trident::sched::TenantSpec,
+    epochs: usize,
+) -> Vec<trident::ml::F64Mat> {
+    use trident::sched::{tenant_layer_weights, TrainKind};
+    use trident::serve::tenant_train_batch;
+    let (kind, _, batch, _, lr_pow) = spec.workload.training().expect("training tenant");
+    let (x, y) = tenant_train_batch(spec);
+    let mut ws = tenant_layer_weights(spec);
+    let depth = ws.len();
+    let lr = 2f64.powi(-(lr_pow as i32)) / batch as f64;
+    for _ in 0..epochs {
+        // forward, keeping pre-activations for the drelu gates
+        let mut acts = vec![x.clone()];
+        let mut pre = Vec::with_capacity(depth);
+        for i in 0..depth {
+            let u = acts[i].matmul(&ws[i]);
+            let mut a = u.clone();
+            if i + 1 < depth {
+                for v in a.data.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            } else if kind == TrainKind::LogReg {
+                for v in a.data.iter_mut() {
+                    *v = if *v < -0.5 {
+                        0.0
+                    } else if *v < 0.5 {
+                        *v + 0.5
+                    } else {
+                        1.0
+                    };
+                }
+            }
+            pre.push(u);
+            acts.push(a);
+        }
+        let mut e = acts[depth].clone();
+        for (v, t) in e.data.iter_mut().zip(y.data.iter()) {
+            *v -= t;
+        }
+        let old = ws.clone();
+        for i in (0..depth).rev() {
+            let grad = acts[i].transpose().matmul(&e);
+            for (w, g) in ws[i].data.iter_mut().zip(grad.data.iter()) {
+                *w -= g * lr;
+            }
+            if i > 0 {
+                let mut back = e.matmul(&old[i].transpose());
+                for (v, u) in back.data.iter_mut().zip(pre[i - 1].data.iter()) {
+                    if *u < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                e = back;
+            }
+        }
+    }
+    ws
+}
+
+fn assert_model_close(
+    got: &[Vec<f64>],
+    want: &[trident::ml::F64Mat],
+    tol: f64,
+    label: &str,
+) {
+    assert_eq!(got.len(), want.len(), "{label}: layer count");
+    for (l, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.len(), w.data.len(), "{label}: layer {l} element count");
+        for (i, (a, b)) in g.iter().zip(w.data.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < tol,
+                "{label}: layer {l} elem {i}: got {a}, want {b}"
+            );
+        }
+    }
+}
+
+/// Single training job as the only tenant — the minimal scheduled-
+/// workload harness (one epoch-granular wave per epoch).
+fn one_job_cfg(
+    spec: trident::sched::TenantSpec,
+    mode: trident::serve::PoolMode,
+    seed: u64,
+) -> trident::serve::MultiServeConfig {
+    trident::serve::MultiServeConfig {
+        tenants: vec![spec],
+        mode,
+        low_water: 1,
+        high_water: 2,
+        age_every: 0,
+        seed,
+        ..trident::serve::MultiServeConfig::default()
+    }
+}
+
+/// A scheduled logistic-regression job (sigmoid head, inline nonlinear
+/// machinery) lands on the cleartext fixed-point GD oracle — through the
+/// per-epoch keyed pools and through the inline path alike.
+#[test]
+fn train_scheduled_logreg_job_matches_cleartext_gd_oracle() {
+    use trident::sched::{TenantSpec, TrainKind};
+    use trident::serve::{serve_multi, PoolMode};
+    let spec =
+        || TenantSpec::training("job", 1, 6, Vec::new(), TrainKind::LogReg, 4, 8, 0, 4);
+    let want = cleartext_gd_model(&spec(), 4);
+    for mode in [PoolMode::Keyed, PoolMode::Inline] {
+        let s = serve_multi(NetProfile::zero(), one_job_cfg(spec(), mode, 1705));
+        let ts = &s.tenants[0];
+        assert_eq!(ts.epochs_committed, 4, "{mode:?}: all epochs commit: {ts:?}");
+        let got = ts.final_model.as_ref().expect("finished job reconstructs its model");
+        assert_model_close(got, &want, 0.02, &format!("logreg {mode:?}"));
+    }
+}
+
+/// A scheduled NN job (hidden ReLU, linear head, full forward/grad/back
+/// gate taxonomy) lands on the cleartext GD oracle in both pool modes,
+/// and its warm keyed epochs stay offline-silent.
+#[test]
+fn train_scheduled_nn_job_matches_cleartext_gd_oracle() {
+    use trident::sched::{TenantSpec, TrainKind};
+    use trident::serve::{serve_multi, PoolMode};
+    let spec =
+        || TenantSpec::training("job", 1, 9, vec![6, 2], TrainKind::Nn, 3, 8, 0, 5);
+    let want = cleartext_gd_model(&spec(), 3);
+    for mode in [PoolMode::Keyed, PoolMode::Inline] {
+        let s = serve_multi(NetProfile::zero(), one_job_cfg(spec(), mode, 1715));
+        let ts = &s.tenants[0];
+        assert_eq!(ts.epochs_committed, 3, "{mode:?}: all epochs commit: {ts:?}");
+        if mode == PoolMode::Keyed {
+            assert_eq!(ts.keyed_waves, 3, "warm epochs draw from the per-epoch pools");
+            assert_eq!(
+                ts.offline_msgs_in_waves, 0,
+                "warm keyed training epochs are offline-silent: {ts:?}"
+            );
+        }
+        let got = ts.final_model.as_ref().expect("finished job reconstructs its model");
+        assert_model_close(got, &want, 0.02, &format!("nn {mode:?}"));
+    }
+}
+
+/// Restoring a mid-job checkpoint replays only the remaining epochs and
+/// lands on the full run's final model (per-party blobs, deterministic
+/// restore) — which itself sits on the cleartext GD oracle. Within-run
+/// four-party identity of the reconstructed model is asserted by the
+/// engine's aggregation; across runs the probabilistic truncation leaves
+/// sub-tolerance drift, hence the closeness bound rather than equality.
+#[test]
+fn checkpoint_restore_resumes_onto_the_full_runs_model() {
+    use trident::sched::{TenantSpec, TrainKind};
+    use trident::serve::{serve_multi, PoolMode};
+    let spec =
+        || TenantSpec::training("job", 1, 9, vec![6, 2], TrainKind::Nn, 4, 8, 2, 5);
+    let full = serve_multi(NetProfile::zero(), one_job_cfg(spec(), PoolMode::Keyed, 1725));
+    let ts = &full.tenants[0];
+    assert_eq!(ts.epochs_committed, 4);
+    let epochs: Vec<u64> = ts.checkpoints.iter().map(|(e, _)| *e).collect();
+    assert_eq!(epochs, vec![2, 4], "checkpoint_every = 2 over 4 epochs");
+    let full_model = ts.final_model.as_ref().expect("full run finishes its model");
+    assert_model_close(
+        full_model,
+        &cleartext_gd_model(&spec(), 4),
+        0.02,
+        "full run vs oracle",
+    );
+
+    // resume from the mid-job checkpoint: only epochs 2..4 run again
+    let (ck_epoch, blobs) = ts.checkpoints[0].clone();
+    assert_eq!(ck_epoch, 2);
+    let mut cfg = one_job_cfg(spec(), PoolMode::Keyed, 1725);
+    cfg.resume = vec![Some(blobs)];
+    let resumed = serve_multi(NetProfile::zero(), cfg);
+    let rs = &resumed.tenants[0];
+    assert_eq!(rs.epochs_committed, 2, "only the remaining epochs run: {rs:?}");
+    let got = rs.final_model.as_ref().expect("resumed job finishes its model");
+    assert_eq!(got.len(), full_model.len());
+    for (l, (g, f)) in got.iter().zip(full_model.iter()).enumerate() {
+        for (i, (a, b)) in g.iter().zip(f.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 0.01,
+                "resumed vs full layer {l} elem {i}: {a} vs {b}"
+            );
         }
     }
 }

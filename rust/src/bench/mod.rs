@@ -686,6 +686,64 @@ fn serve_mode_rows() -> Vec<(&'static str, crate::serve::ServeStats)> {
     ]
 }
 
+/// One canonical single-tenant keyed serving run per 4PC backend —
+/// Trident secure-with-abort vs Tetrad-style fair vs Tetrad-style GOD
+/// ([`crate::proto::tetrad`]). The masked evaluation is identical across
+/// the family (same offline material, same per-gate protocols); the
+/// variants diverge only at output delivery, so the round/latency deltas
+/// are the measured price of fairness and of guaranteed output delivery —
+/// the Tetrad paper's protocol-comparison tables projected onto the
+/// serving path.
+fn backend_rows() -> Vec<(&'static str, crate::serve::MultiServeStats)> {
+    use crate::proto::Backend;
+    use crate::sched::TenantSpec;
+    use crate::serve::{serve_multi, MultiServeConfig, PoolMode};
+    [Backend::Trident, Backend::TetradFair, Backend::TetradGod]
+        .into_iter()
+        .map(|b| {
+            let mut s = TenantSpec::new("bk", 77, 64, 16, 4);
+            s.relu = true;
+            s.backend = b;
+            let cfg = MultiServeConfig {
+                tenants: vec![s],
+                mode: PoolMode::Keyed,
+                low_water: 1,
+                high_water: 2,
+                age_every: 0,
+                seed: 9010,
+                ..MultiServeConfig::default()
+            };
+            (b.label(), serve_multi(NetProfile::lan(), cfg))
+        })
+        .collect()
+}
+
+/// Render the backend-comparison serving table from precomputed rows.
+pub fn backend_table_from(rows: &[(&'static str, crate::serve::MultiServeStats)]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "== Serving backends: Trident vs Tetrad-fair vs Tetrad-GOD (d=64+ReLU, keyed, coalesce 4, LAN) ==\n",
+    );
+    out.push_str(
+        "backend     | served | waves | online rnds | rnds/wave | p50 ms | p99 ms | online s total | off msg/wave\n",
+    );
+    for (name, s) in rows {
+        let ts = &s.tenants[0];
+        out.push_str(&format!(
+            "{name:<11} | {:>6} | {:>5} | {:>11} | {:>9.1} | {:>6.3} | {:>6.3} | {:>14.6} | {:>12.2}\n",
+            ts.served,
+            s.waves,
+            s.online_rounds,
+            s.online_rounds as f64 / s.waves.max(1) as f64,
+            ts.p50_latency * 1e3,
+            ts.p99_latency * 1e3,
+            s.online_latency,
+            ts.offline_msgs_in_waves as f64 / ts.waves.max(1) as f64,
+        ));
+    }
+    out
+}
+
 /// Offline fill throughput: items generated per wall-clock second by the
 /// real 4-party fill protocols (the keystream-batched PRF is the hot path
 /// here — every mask/pair element used to burn one AES block per element,
@@ -753,6 +811,9 @@ pub fn fill_throughput_line(f: &FillThroughput) -> String {
 /// doubles bench wall time.
 pub struct ServingBench {
     pub modes: Vec<(&'static str, crate::serve::ServeStats)>,
+    /// The same keyed workload served once per 4PC backend (Trident /
+    /// Tetrad-fair / Tetrad-GOD) — the schema-7 comparison rows.
+    pub backends: Vec<(&'static str, crate::serve::MultiServeStats)>,
     pub tenants_cfg: crate::serve::MultiServeConfig,
     pub tenants: crate::serve::MultiServeStats,
     /// The inference pair served alone — the baseline the mixed run's
@@ -809,6 +870,7 @@ pub fn run_serving_bench() -> ServingBench {
     let (alone_cfg, mixed_cfg) = mixed_train_tenants(8);
     ServingBench {
         modes: serve_mode_rows(),
+        backends: backend_rows(),
         tenants: crate::serve::serve_multi(NetProfile::lan(), cfg.clone()),
         tenants_cfg: cfg,
         train_alone: crate::serve::serve_multi(NetProfile::lan(), alone_cfg),
@@ -820,6 +882,7 @@ pub fn run_serving_bench() -> ServingBench {
 
 pub fn serve_table() -> String {
     let mut out = serve_table_from(&serve_mode_rows());
+    out.push_str(&backend_table_from(&backend_rows()));
     out.push_str(&fill_throughput_line(&measure_fill_throughput()));
     out
 }
@@ -1093,9 +1156,16 @@ pub fn serving_bench_json() -> String {
 /// top-level `"training"` object with per-job epoch throughput
 /// (`epochs_per_s`, `checkpoints`, the job's own offline-silence counter)
 /// and the `inference_under_training` isolation columns — each inference
-/// tenant's p50/p99 alone vs next to a saturating training job.
+/// tenant's p50/p99 alone vs next to a saturating training job. Schema 7
+/// (this PR) adds the 4PC backend family: a top-level `"backends"` array
+/// with one measured row per protocol variant (Trident secure-with-abort
+/// vs `tetrad-fair` vs `tetrad-god` — the guaranteed-output-delivery
+/// failover backend) over the same keyed workload, per-tenant
+/// `failover_waves` / `rehabilitated_at` columns, and a top-level
+/// `"transitions"` array mirroring `"quarantines"` (both empty for the
+/// honest benchmark run).
 pub fn serving_bench_json_from(bench: &ServingBench) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/6\",\n");
+    let mut out = String::from("{\n  \"schema\": \"trident-serving-bench/7\",\n");
     out.push_str(&format!(
         "  \"offline_fill_throughput\": {{\"bitext_masks_per_s\": {:.1}, \"trunc_pairs_per_s\": {:.1}, \"lam_skeletons_per_s\": {:.1}}},\n",
         bench.fill.bitext_masks_per_s, bench.fill.trunc_pairs_per_s, bench.fill.lam_per_s,
@@ -1124,6 +1194,24 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
         ));
     }
     out.push_str("  ],\n");
+    out.push_str("  \"backends\": [\n");
+    for (i, (name, s)) in bench.backends.iter().enumerate() {
+        let ts = &s.tenants[0];
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"served\": {}, \"waves\": {}, \"online_rounds\": {}, \"rounds_per_wave\": {:.3}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"online_s\": {:.6}, \"off_msgs_in_waves\": {}}}{}\n",
+            json_escape(name),
+            ts.served,
+            s.waves,
+            s.online_rounds,
+            s.online_rounds as f64 / s.waves.max(1) as f64,
+            ts.p50_latency * 1e3,
+            ts.p99_latency * 1e3,
+            s.online_latency,
+            ts.offline_msgs_in_waves,
+            if i + 1 < bench.backends.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n");
     let (cfg, stats) = (&bench.tenants_cfg, &bench.tenants);
     let rollup = stats.op_rollup();
     out.push_str("  \"tenants\": [\n");
@@ -1141,7 +1229,7 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             .collect();
         let ops_json = format!("[{}]", ops.join(", "));
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"epochs_committed\": {}, \"ops\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"weight\": {}, \"class\": {}, \"depth\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \"served\": {}, \"expired\": {}, \"waves\": {}, \"keyed_waves\": {}, \"inline_waves\": {}, \"partial_waves\": {}, \"partial_keyed_waves\": {}, \"quarantined_at\": {}, \"requeued\": {}, \"lost\": {}, \"failover_waves\": {}, \"rehabilitated_at\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \"mean_sojourn_ticks\": {:.3}, \"off_msgs_in_waves\": {}, \"off_msgs_matmul\": {}, \"off_msgs_relu\": {}, \"epochs_committed\": {}, \"ops\": {}, \"pool_left_mat_layers\": {}, \"pool_left_relu_layers\": {}, \"wave_share\": {:.4}}}{}\n",
             json_escape(&ts.name),
             spec.weight,
             spec.class,
@@ -1159,6 +1247,8 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             ts.quarantined_at.map_or("null".into(), |t| t.to_string()),
             ts.requeued,
             ts.lost,
+            ts.failover_waves,
+            ts.rehabilitated_at.map_or("null".into(), |t| t.to_string()),
             ts.p50_latency * 1e3,
             ts.p99_latency * 1e3,
             ts.mean_sojourn_ticks,
@@ -1230,6 +1320,21 @@ pub fn serving_bench_json_from(bench: &ServingBench) -> String {
             q.drained_relu,
             json_escape(&q.why),
             if i + 1 < stats.quarantines.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"transitions\": [\n");
+    for (i, tr) in stats.transitions.iter().enumerate() {
+        let kind = match tr.kind {
+            crate::serve::TransitionKind::Failover => "failover",
+            crate::serve::TransitionKind::Rehab => "rehab",
+        };
+        out.push_str(&format!(
+            "    {{\"tenant\": {}, \"at_tick\": {}, \"wave\": {}, \"kind\": \"{kind}\"}}{}\n",
+            tr.tenant,
+            tr.at_tick,
+            tr.wave,
+            if i + 1 < stats.transitions.len() { "," } else { "" },
         ));
     }
     out.push_str("  ],\n");

@@ -238,6 +238,13 @@ pub struct ServeConfig {
     /// mid-serve tamper fault (P1 corrupts tenant 0's second keyed wave),
     /// so the run shows a quarantine instead of failing closed.
     pub containment: bool,
+    /// Failover policy past quarantine (`--failover god`): the
+    /// quarantined tenant's re-queued queries are served on the
+    /// Tetrad-style guaranteed-output-delivery backend and the tenant is
+    /// rehabilitated back to keyed Trident serving after consecutive
+    /// clean failover waves. `None`/`"none"` keeps quarantined tenants on
+    /// the inline path forever. Only meaningful with `--containment`.
+    pub failover: Option<String>,
     /// Also write the machine-readable benchmark (`BENCH_serving.json`).
     pub json: bool,
     /// Write the merged per-party trace as chrome-tracing-flavoured JSONL
@@ -264,6 +271,7 @@ impl Default for ServeConfig {
             deadline_ms: None,
             cap: None,
             containment: false,
+            failover: None,
             json: false,
             trace: None,
             train: None,
@@ -331,6 +339,11 @@ impl ServeConfig {
 
     pub fn containment(mut self, on: bool) -> ServeConfig {
         self.containment = on;
+        self
+    }
+
+    pub fn failover(mut self, policy: Option<String>) -> ServeConfig {
+        self.failover = policy;
         self
     }
 
@@ -490,7 +503,9 @@ pub fn serve_single_cli(opts: ServeConfig) {
 /// class-1 workload (`--train`). Prints the per-tenant stats table.
 pub fn serve_tenants_cli(opts: ServeConfig) {
     use crate::sched::TenantSpec;
-    use crate::serve::{serve_multi, FaultKind, FaultPlan, MultiServeConfig, PoolMode};
+    use crate::serve::{
+        serve_multi, FailoverPolicy, FaultKind, FaultPlan, MultiServeConfig, PoolMode,
+    };
     let queries = opts.queries.max(1);
     let coalesce = opts.coalesce.unwrap_or_else(|| queries.clamp(1, 8));
     let model_names: Vec<String> = if opts.models.is_empty() {
@@ -513,6 +528,14 @@ pub fn serve_tenants_cli(opts: ServeConfig) {
     if let Some(job) = &opts.train {
         tenants.push(train_tenant_spec(job, tenants.len() as u64 + 1));
     }
+    let failover = match opts.failover.as_deref() {
+        None | Some("none") => FailoverPolicy::None,
+        Some("god") => FailoverPolicy::God,
+        Some(other) => {
+            println!("unknown --failover {other:?} (expected god|none), using none");
+            FailoverPolicy::None
+        }
+    };
     let cfg = MultiServeConfig {
         tenants,
         mode: PoolMode::Keyed,
@@ -521,12 +544,14 @@ pub fn serve_tenants_cli(opts: ServeConfig) {
         age_every: 2,
         seed: 333,
         containment: opts.containment,
+        failover,
         fault: opts.containment.then_some(FaultPlan {
             party: crate::net::P1,
             tenant: 0,
             wave: 1,
             layer: 0,
             kind: FaultKind::TamperMatLamX,
+            every: None,
         }),
         // always trace: every CLI run carries the skeleton-checked event
         // stream, and the observer-effect contract keeps the meters exact
@@ -534,10 +559,11 @@ pub fn serve_tenants_cli(opts: ServeConfig) {
         ..MultiServeConfig::default()
     };
     println!(
-        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN{}{}) …",
+        "multi-tenant serving: {} resident models × {queries} queries (d=128, coalesce ≤{coalesce}, keyed pools, LAN{}{}{}) …",
         model_names.len(),
         if opts.train.is_some() { ", + scheduled training job" } else { "" },
         if opts.containment { ", containment on + injected tamper fault" } else { "" },
+        if failover == FailoverPolicy::God { ", GOD failover" } else { "" },
     );
     let stats = serve_multi(crate::net::NetProfile::lan(), cfg);
     print!("{}", crate::bench::tenant_table(&stats));
@@ -667,6 +693,19 @@ mod tests {
         // the --containment demo injects a tamper fault against tenant 0's
         // second wave; the run must quarantine and finish, not panic
         let opts = ServeConfig::tenants(Vec::new()).queries(6).coalesce(3).containment(true);
+        serve_tenants_cli(opts);
+    }
+
+    #[test]
+    fn serve_tenants_cli_failover_demo_runs() {
+        // --containment --failover god: the tampered tenant quarantines,
+        // degrades to the GOD backend, and rehabilitates — the run must
+        // finish with every admitted query served
+        let opts = ServeConfig::tenants(Vec::new())
+            .queries(12)
+            .coalesce(3)
+            .containment(true)
+            .failover(Some("god".into()));
         serve_tenants_cli(opts);
     }
 

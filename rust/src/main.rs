@@ -18,8 +18,8 @@
 //!                                      # batched prediction serving demo
 //! trident serve   --models m1,m2 [--weights 2,1] [--priorities 0,1]
 //!                 [--deadline-ms D] [--cap N] [--queries N] [--coalesce C]
-//!                 [--low-water L] [--high-water H] [--containment] [--json]
-//!                 [--trace out.jsonl]
+//!                 [--low-water L] [--high-water H] [--containment]
+//!                 [--failover god|none] [--json] [--trace out.jsonl]
 //!                 [--train [linreg|logreg|nn]] [--epochs N] [--batch B]
 //!                                      # --train admits a scheduled
 //!                                      # training job next to the
@@ -28,6 +28,10 @@
 //!                                      # --containment injects a mid-serve
 //!                                      # tamper fault and quarantines the
 //!                                      # poisoned tenant instead of dying;
+//!                                      # --failover god degrades the
+//!                                      # quarantined tenant to the Tetrad
+//!                                      # GOD backend and rehabilitates it
+//!                                      # after clean failover waves;
 //!                                      # --trace writes the four-party
 //!                                      # event stream as JSONL
 //! trident metrics                      # Prometheus-style text snapshot of
@@ -166,6 +170,7 @@ fn main() {
                     .containment(
                         flags.get("containment").map(String::as_str) == Some("true"),
                     )
+                    .failover(flags.get("failover").cloned())
                     .json(json)
                     // bare `--trace` (no path) defaults to trace.jsonl
                     .trace(flags.get("trace").map(|v| {

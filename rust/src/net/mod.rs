@@ -122,6 +122,21 @@ const N_CLASS: usize = 5;
 ///   e.g. a party died, or the failing wave ran inline generation whose
 ///   correlated PRF draws cannot be re-synchronised) fails the run closed
 ///   exactly like a party-scoped one.
+///
+/// ### Failover rung (GOD degrade ladder)
+///
+/// With [`FailoverPolicy::God`](crate::serve::FailoverPolicy), a contained
+/// `TenantScoped` abort additionally arms a *failover* for the offending
+/// tenant: its re-queued queries are served on the Tetrad-style
+/// guaranteed-output-delivery backend ([`crate::proto::tetrad`]) until
+/// [`REHAB_AFTER`](crate::serve::REHAB_AFTER) consecutive clean failover
+/// waves rehabilitate it back to keyed Trident serving. The ladder is
+/// keyed Trident → quarantine (contained `TenantScoped`) → GOD failover →
+/// rehabilitation. The failover rung changes *output delivery only* — the
+/// evaluation phase, and therefore this abort contract, is unchanged:
+/// party-scoped aborts on a failover wave still stop the world, and a
+/// GOD delivery first verifies the evaluation transcript and fails closed
+/// on corruption before reconstructing from redundant copies.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Abort {
     /// A consistency check failed locally (the honest-party abort of the

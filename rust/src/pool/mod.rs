@@ -459,6 +459,16 @@ impl Pool {
         self.quarantined.contains(&model)
     }
 
+    /// Lift the quarantine on `model`'s keyed shards: future pushes stock
+    /// again (the drained queues stay empty until a refill tick restocks
+    /// them — rehabilitation never resurrects discarded material). The
+    /// registry-side companion is [`crate::sched::ModelRegistry::rehabilitate`];
+    /// like the quarantine itself, all four parties lift it in lockstep off
+    /// the agreed failover-wave count. Idempotent.
+    pub fn unquarantine_model(&mut self, model: u64) {
+        self.quarantined.remove(&model);
+    }
+
     // ---- failure-injection hooks ----------------------------------------
 
     /// Mutable access to the next-to-be-served truncation pair — the
@@ -717,6 +727,15 @@ mod tests {
 
         // the innocent model's shard is untouched
         assert!(pool.pop_mat(&kb).unwrap().is_some());
+
+        // lifting the quarantine re-opens the push path, but never
+        // resurrects drained material: stock starts from zero
+        pool.unquarantine_model(7);
+        assert!(!pool.is_model_quarantined(7));
+        assert_eq!(pool.len_mat(&ka), 0, "rehabilitation starts from a drained shard");
+        pool.push_mat(dummy(ka));
+        assert_eq!(pool.len_mat(&ka), 1, "restock flows after unquarantine");
+        assert!(pool.pop_mat(&ka).unwrap().is_some());
     }
 
     #[test]

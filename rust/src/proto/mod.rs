@@ -23,12 +23,17 @@ pub mod dotp;
 pub mod mult;
 pub mod reconstruct;
 pub mod sharing;
+pub mod tetrad;
 pub mod trunc;
 
 pub use dotp::{dotp, matmul, matmul_keyed};
 pub use mult::{mult, mult_many};
 pub use reconstruct::{
     fair_reconstruct, reconstruct, reconstruct_mat, reconstruct_mat_to, reconstruct_to,
+};
+pub use tetrad::{
+    fair_reconstruct_mat_to, god_reconstruct_mat, god_reconstruct_mat_to,
+    reconstruct_mat_backend, reconstruct_mat_to_backend, Backend,
 };
 pub use sharing::{ash, share, share_mat_n, share_mat_with_mask, vsh};
 pub use trunc::{

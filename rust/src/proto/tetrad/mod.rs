@@ -1,0 +1,557 @@
+//! Tetrad-style 4PC backend: fairness and guaranteed-output-delivery (GOD)
+//! variants behind the same masked-sharing seam as the Trident protocols.
+//!
+//! Trident (the source paper) is secure-with-abort: one malicious party can
+//! deny everyone the output. Its successor **Tetrad** (arXiv:2106.02850) and
+//! the **MPCLeague** thesis (arXiv:2112.13338) show the same 4-party,
+//! one-corruption setting supports *fairness* (either everyone learns the
+//! output or no one does) and *GOD* (every honest party always learns the
+//! output) at comparable cost — the input-sharing and masked-evaluation
+//! phases are structurally identical; the variants diverge only in how the
+//! output is delivered.
+//!
+//! This module follows that decomposition. Sharing, multiplication and
+//! truncation are the Trident primitives re-exported under Tetrad names
+//! ([`share_mat`], [`matmul`], [`matmul_tr`], [`mult`]): the `(m, λ)` masked
+//! form is exactly Tetrad's ⟨·⟩-sharing over four parties, so the evaluation
+//! phase carries over message-for-message and the bench columns compare the
+//! variants on the one stage where they really differ — reconstruction:
+//!
+//! * [`fair_reconstruct_mat_to`] — matrix generalization of the scalar
+//!   `Π_fRec` (Trident Fig. 5): an agree-to-open vote relayed through P0,
+//!   then 2-of-3 redundant delivery with a digest tie-break. A cheater can
+//!   still force a (fair, unanimous) abort in the vote, but can never split
+//!   the honest parties between output and no-output.
+//! * [`god_reconstruct_mat_to`] / [`god_reconstruct_mat`] — abort-free
+//!   delivery: every missing component travels as **three independent value
+//!   copies**, with the fourth party (P0, who holds every λ) acting as the
+//!   trusted-payload tiebreaker for evaluator targets. The receiver takes an
+//!   elementwise majority, so a single equivocating party cannot force an
+//!   abort *or* a wrong opened value — the delivery premium (a third full
+//!   copy instead of a digest) is the GOD cost visible in
+//!   `bench::serve_table`'s backend columns, mirroring Tetrad's Table
+//!   comparisons.
+//!
+//! **Fail-closed precondition:** both variants settle all deferred
+//! verification transcripts (`flush_verify`) *before* delivery. A corrupt
+//! evaluation transcript therefore still aborts the wave — GOD protects the
+//! delivery of a correctly-evaluated output, it never launders a tampered
+//! one ("never a wrong honest opened value", the abort-scoping contract in
+//! `net/`).
+
+use crate::net::{Abort, PartyId, EVALUATORS, P0, P1, P2, P3};
+use crate::ring::{Matrix, Ring};
+use crate::sharing::MMat;
+
+use super::Ctx;
+
+/// Which 4PC protocol family serves a tenant's waves.
+///
+/// Selected per-tenant via `TenantSpec::backend`; the serving engine also
+/// switches a quarantined tenant to [`Backend::TetradGod`] at runtime under
+/// `--failover god` (the failover state machine in `serve/multi.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Trident secure-with-abort (the paper's protocols; the default).
+    Trident,
+    /// Tetrad-style fair output delivery: unanimous open-or-abort.
+    TetradFair,
+    /// Tetrad-style guaranteed output delivery: majority-of-3 copies,
+    /// P0 as trusted-payload tiebreaker; reconstruction cannot abort.
+    TetradGod,
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Trident
+    }
+}
+
+impl Backend {
+    /// Stable lowercase label (bench rows, JSON, trace payloads).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Trident => "trident",
+            Backend::TetradFair => "tetrad-fair",
+            Backend::TetradGod => "tetrad-god",
+        }
+    }
+
+    /// Parse a CLI/label string (inverse of [`Backend::label`]).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "trident" => Some(Backend::Trident),
+            "tetrad-fair" | "fair" => Some(Backend::TetradFair),
+            "tetrad-god" | "god" => Some(Backend::TetradGod),
+            _ => None,
+        }
+    }
+}
+
+// ---- evaluation phase: Trident primitives under Tetrad names -------------
+//
+// Tetrad's input sharing and multiplication use the same masked form
+// ([m], λ split three ways with P0 holding all of λ), so the evaluation
+// phase is byte-identical here and the cost comparison isolates delivery.
+
+/// Tetrad joint input sharing — identical wire schedule to Trident `Π_Sh`.
+pub use crate::proto::sharing::share_mat_n as share_mat;
+
+/// Tetrad multiplication (scalar) — identical evaluation-phase schedule.
+pub use crate::proto::mult::mult;
+
+/// Tetrad matrix multiplication — identical evaluation-phase schedule.
+pub use crate::proto::dotp::matmul;
+
+/// Tetrad truncated matrix multiplication — identical evaluation-phase
+/// schedule (probabilistic truncation over the same verified pairs).
+pub use crate::proto::trunc::matmul_tr;
+
+// ---- fair reconstruction -------------------------------------------------
+
+/// Matrix `Π_fRec` towards a subset of parties: the scalar fair
+/// reconstruction (Fig. 5) generalized to SoA matrix payloads and
+/// subset delivery, used by the `TetradFair` serving backend.
+///
+/// Rounds 1–3 run the agree-to-open vote among **all** parties (liveness
+/// bits through P0, evaluator majority); round 4 delivers each target's
+/// missing component with 2-of-3 redundancy plus a digest tie-break.
+/// `ok` is the caller's local verification verdict going in — serving
+/// callers settle the wave's deferred digests first and pass `true`.
+pub fn fair_reconstruct_mat_to<R: Ring>(
+    ctx: &mut Ctx,
+    sh: &MMat<R>,
+    targets: &[PartyId],
+    ok: bool,
+) -> Result<Option<Matrix<R>>, Abort> {
+    let me = ctx.id();
+    let (rows, cols) = sh.dims();
+    let n = rows * cols;
+    ctx.online(|ctx| {
+        // Rounds 1–3: agree-to-open, exactly as the scalar Π_fRec.
+        if me.is_evaluator() {
+            ctx.net.send_with_bits(P0, &[ok as u8], crate::net::MsgClass::Value, 1);
+        }
+        let go = if me == P0 {
+            let mut all_ok = ok;
+            for p in EVALUATORS {
+                let b = ctx.net.recv(p)?;
+                all_ok &= b == [1u8];
+            }
+            for p in EVALUATORS {
+                ctx.net.send_with_bits(p, &[all_ok as u8], crate::net::MsgClass::Value, 1);
+            }
+            all_ok
+        } else {
+            let b = ctx.net.recv(P0)?;
+            b == [1u8]
+        };
+        let proceed = if me.is_evaluator() {
+            for p in EVALUATORS {
+                if p != me {
+                    ctx.net.send_with_bits(p, &[go as u8], crate::net::MsgClass::Value, 1);
+                }
+            }
+            let mut votes = vec![go];
+            for p in EVALUATORS {
+                if p != me {
+                    let b = ctx.net.recv(p)?;
+                    votes.push(b == [1u8]);
+                }
+            }
+            votes.iter().filter(|&&v| v).count() >= 2
+        } else {
+            go
+        };
+        if !proceed {
+            return Err(ctx.net.abort("fair reconstruction: majority abort".into()));
+        }
+
+        // Round 4: redundant delivery toward the targets.
+        //   P0 ← M from P1 and P2, H(M) from P3
+        //   evaluator t ← λ_t from the two other evaluators, H(λ_t) from P0
+        let mut my_value: Option<Matrix<R>> = None;
+        for &t in targets {
+            if t == me {
+                continue;
+            }
+            if t == P0 {
+                if me == P1 || me == P2 {
+                    ctx.send_ring(P0, sh.m().data());
+                }
+                if me == P3 {
+                    ctx.vouch_ring(P0, sh.m().data());
+                }
+            } else {
+                if me.is_evaluator() {
+                    ctx.send_ring(t, sh.lam(me, t.0).expect("evaluator holds peers' λ").data());
+                }
+                if me == P0 {
+                    ctx.vouch_ring(t, sh.lam(P0, t.0).expect("P0 holds all λ").data());
+                }
+            }
+        }
+        let mut flushed = false;
+        if targets.contains(&me) {
+            match sh {
+                MMat::Helper { lam } => {
+                    let m1: Vec<R> = ctx.recv_ring(P1, n)?;
+                    let m2: Vec<R> = ctx.recv_ring(P2, n)?;
+                    ctx.expect_ring(P3, &m1);
+                    // majority of {M1, M2, H(M3)}: if the copies disagree,
+                    // P3's digest over the true M breaks the tie.
+                    let m = if m1 == m2 {
+                        ctx.flush_verify().ok();
+                        m1
+                    } else {
+                        match ctx.flush_verify() {
+                            Ok(()) => m1,
+                            Err(_) => m2,
+                        }
+                    };
+                    flushed = true;
+                    let data = m
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| v - lam[0].data()[i] - lam[1].data()[i] - lam[2].data()[i])
+                        .collect();
+                    my_value = Some(Matrix::from_vec(rows, cols, data));
+                }
+                MMat::Eval { m, lam_next, lam_prev } => {
+                    let a: Vec<R> = ctx.recv_ring(me.next_evaluator(), n)?;
+                    let b: Vec<R> = ctx.recv_ring(me.prev_evaluator(), n)?;
+                    ctx.expect_ring(P0, &a);
+                    let lam_i = if a == b {
+                        ctx.flush_verify().ok();
+                        a
+                    } else {
+                        match ctx.flush_verify() {
+                            Ok(()) => a,
+                            Err(_) => b,
+                        }
+                    };
+                    flushed = true;
+                    let data = (0..n)
+                        .map(|i| m.data()[i] - lam_i[i] - lam_next.data()[i] - lam_prev.data()[i])
+                        .collect();
+                    my_value = Some(Matrix::from_vec(rows, cols, data));
+                }
+            }
+        }
+        if !flushed {
+            // vouchers that are not targets still deliver their digests
+            ctx.flush_verify()?;
+        }
+        Ok(my_value)
+    })
+}
+
+// ---- GOD reconstruction --------------------------------------------------
+
+/// Elementwise majority of three copies; `trusted` (P0's payload for
+/// evaluator targets) wins a three-way split, which under one corruption
+/// never actually occurs — it is the documented tie-break, not a guess.
+fn maj3<R: Ring>(a: &[R], b: &[R], trusted: &[R]) -> Vec<R> {
+    (0..a.len())
+        .map(|i| {
+            if a[i] == b[i] || a[i] == trusted[i] {
+                a[i]
+            } else if b[i] == trusted[i] {
+                b[i]
+            } else {
+                trusted[i]
+            }
+        })
+        .collect()
+}
+
+/// GOD reconstruction towards a subset: settles all deferred verification
+/// first (fail-closed on a corrupt evaluation transcript), then delivers
+/// each target's missing component as **three independent value copies** and
+/// takes an elementwise majority — no digest dependence, so an equivocating
+/// party cannot force an abort during delivery.
+///
+/// Delivery pattern per target:
+///   * evaluator `t` ← λ_t from the two other evaluators **and from P0 as a
+///     value payload** (the trusted-payload tiebreaker: P0 holds every λ);
+///   * `P0` ← M from all three evaluators.
+pub fn god_reconstruct_mat_to<R: Ring>(
+    ctx: &mut Ctx,
+    sh: &MMat<R>,
+    targets: &[PartyId],
+) -> Result<Option<Matrix<R>>, Abort> {
+    let me = ctx.id();
+    let (rows, cols) = sh.dims();
+    let n = rows * cols;
+    ctx.online(|ctx| {
+        // Fail closed before delivering anything: a tampered evaluation
+        // phase must never reach an opened value, GOD or not.
+        ctx.flush_verify()?;
+        let mut my_value: Option<Matrix<R>> = None;
+        // send duties (non-blocking)
+        for &t in targets {
+            if t == me {
+                continue;
+            }
+            if t == P0 {
+                if me.is_evaluator() {
+                    ctx.send_ring(P0, sh.m().data());
+                }
+            } else if me.is_evaluator() {
+                ctx.send_ring(t, sh.lam(me, t.0).expect("evaluator holds peers' λ").data());
+            } else {
+                // P0's trusted payload: the λ_t value itself, not a digest
+                ctx.send_ring(t, sh.lam(P0, t.0).expect("P0 holds all λ").data());
+            }
+        }
+        // receive if I'm a target
+        if targets.contains(&me) {
+            match sh {
+                MMat::Helper { lam } => {
+                    let m1: Vec<R> = ctx.recv_ring(P1, n)?;
+                    let m2: Vec<R> = ctx.recv_ring(P2, n)?;
+                    let m3: Vec<R> = ctx.recv_ring(P3, n)?;
+                    let m = maj3(&m1, &m2, &m3);
+                    let data = m
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| v - lam[0].data()[i] - lam[1].data()[i] - lam[2].data()[i])
+                        .collect();
+                    my_value = Some(Matrix::from_vec(rows, cols, data));
+                }
+                MMat::Eval { m, lam_next, lam_prev } => {
+                    let a: Vec<R> = ctx.recv_ring(me.next_evaluator(), n)?;
+                    let b: Vec<R> = ctx.recv_ring(me.prev_evaluator(), n)?;
+                    let t: Vec<R> = ctx.recv_ring(P0, n)?;
+                    let lam_i = maj3(&a, &b, &t);
+                    let data = (0..n)
+                        .map(|i| m.data()[i] - lam_i[i] - lam_next.data()[i] - lam_prev.data()[i])
+                        .collect();
+                    my_value = Some(Matrix::from_vec(rows, cols, data));
+                }
+            }
+        }
+        Ok(my_value)
+    })
+}
+
+/// GOD reconstruction towards **all four parties** (the failover path for a
+/// training job's epoch-final model opening).
+pub fn god_reconstruct_mat<R: Ring>(ctx: &mut Ctx, sh: &MMat<R>) -> Result<Matrix<R>, Abort> {
+    let out = god_reconstruct_mat_to(ctx, sh, &crate::net::ALL)?;
+    Ok(out.expect("every party is a target"))
+}
+
+/// Backend-dispatched subset reconstruction — the single seam the serving
+/// wave path goes through, so a tenant's `Backend` (or the failover state
+/// machine's runtime override) selects the delivery protocol without the
+/// wave code knowing the difference. The Trident arm keeps the existing
+/// schedule byte-for-byte; the Tetrad arms settle the wave's deferred
+/// digests first (see the module docs' fail-closed precondition).
+pub fn reconstruct_mat_to_backend<R: Ring>(
+    ctx: &mut Ctx,
+    backend: Backend,
+    sh: &MMat<R>,
+    targets: &[PartyId],
+) -> Result<Option<Matrix<R>>, Abort> {
+    match backend {
+        Backend::Trident => crate::proto::reconstruct::reconstruct_mat_to(ctx, sh, targets),
+        Backend::TetradFair => {
+            ctx.flush_verify()?;
+            fair_reconstruct_mat_to(ctx, sh, targets, true)
+        }
+        Backend::TetradGod => god_reconstruct_mat_to(ctx, sh, targets),
+    }
+}
+
+/// Backend-dispatched all-party reconstruction (training epoch commits).
+pub fn reconstruct_mat_backend<R: Ring>(
+    ctx: &mut Ctx,
+    backend: Backend,
+    sh: &MMat<R>,
+) -> Result<Matrix<R>, Abort> {
+    match backend {
+        Backend::Trident => crate::proto::reconstruct::reconstruct_mat(ctx, sh),
+        Backend::TetradFair => {
+            ctx.flush_verify()?;
+            let out = fair_reconstruct_mat_to(ctx, sh, &crate::net::ALL, true)?;
+            Ok(out.expect("every party is a target"))
+        }
+        Backend::TetradGod => god_reconstruct_mat(ctx, sh),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetProfile;
+    use crate::proto::run_4pc;
+    use crate::ring::Z64;
+
+    fn test_mat() -> Matrix<Z64> {
+        Matrix::from_fn(3, 2, |r, c| Z64((100 * r + c) as u64))
+    }
+
+    #[test]
+    fn backend_labels_roundtrip() {
+        for b in [Backend::Trident, Backend::TetradFair, Backend::TetradGod] {
+            assert_eq!(Backend::parse(b.label()), Some(b));
+        }
+        assert_eq!(Backend::parse("god"), Some(Backend::TetradGod));
+        assert_eq!(Backend::parse("fair"), Some(Backend::TetradFair));
+        assert_eq!(Backend::parse("nope"), None);
+        assert_eq!(Backend::default(), Backend::Trident);
+    }
+
+    #[test]
+    fn fair_mat_honest_all_backends_agree() {
+        let run = run_4pc(NetProfile::zero(), 1901, |ctx| {
+            let x = (ctx.id() == P1).then(test_mat);
+            let sh = share_mat(ctx, P1, x.as_ref(), 3, 2)?;
+            ctx.flush_verify()?;
+            let fair = fair_reconstruct_mat_to(ctx, &sh, &crate::net::ALL, true)?;
+            let god = god_reconstruct_mat(ctx, &sh)?;
+            Ok((fair, god))
+        });
+        let (outs, _) = run.expect_ok();
+        for (p, (fair, god)) in outs.iter().enumerate() {
+            assert_eq!(fair.as_ref(), Some(&test_mat()), "P{p} fair");
+            assert_eq!(god, &test_mat(), "P{p} god");
+        }
+    }
+
+    #[test]
+    fn god_subset_delivers_to_targets_only() {
+        let run = run_4pc(NetProfile::zero(), 1902, |ctx| {
+            let x = (ctx.id() == P2).then(test_mat);
+            let sh = share_mat(ctx, P2, x.as_ref(), 3, 2)?;
+            ctx.flush_verify()?;
+            god_reconstruct_mat_to(ctx, &sh, &[P0, P2])
+        });
+        let (outs, _) = run.expect_ok();
+        assert_eq!(outs[0].as_ref(), Some(&test_mat()));
+        assert_eq!(outs[2].as_ref(), Some(&test_mat()));
+        assert_eq!(outs[1], None);
+        assert_eq!(outs[3], None);
+    }
+
+    #[test]
+    fn god_tolerates_equivocating_evaluator() {
+        // P3 sends a corrupted λ1 to P1 during GOD delivery; P1 still
+        // reconstructs from the P2+P0 majority and nobody aborts.
+        let run = run_4pc(NetProfile::zero(), 1903, |ctx| {
+            let x = (ctx.id() == P1).then(test_mat);
+            let sh = share_mat(ctx, P1, x.as_ref(), 3, 2)?;
+            ctx.flush_verify()?;
+            if ctx.id() == P3 {
+                return ctx.online(|ctx| {
+                    ctx.flush_verify()?;
+                    // duties toward targets [P0, P1, P2], with λ1 garbled
+                    ctx.send_ring(P0, sh.m().data());
+                    let n = sh.dims().0 * sh.dims().1;
+                    let bad = vec![Z64(0xBAD); n];
+                    ctx.send_ring(P1, &bad);
+                    ctx.send_ring(P2, sh.lam(P3, 2).expect("λ2").data());
+                    // own receive leg (P3 is also a target in this test)
+                    let a: Vec<Z64> = ctx.recv_ring(P1, n)?;
+                    let _b: Vec<Z64> = ctx.recv_ring(P2, n)?;
+                    let _t: Vec<Z64> = ctx.recv_ring(P0, n)?;
+                    let _ = a;
+                    Ok(None)
+                });
+            }
+            god_reconstruct_mat_to(ctx, &sh, &crate::net::ALL)
+        });
+        assert_eq!(run.outputs[0].as_ref().ok().and_then(|o| o.as_ref()), Some(&test_mat()));
+        assert_eq!(run.outputs[1].as_ref().ok().and_then(|o| o.as_ref()), Some(&test_mat()));
+        assert_eq!(run.outputs[2].as_ref().ok().and_then(|o| o.as_ref()), Some(&test_mat()));
+    }
+
+    #[test]
+    fn god_p0_payload_breaks_ties_for_evaluator_target() {
+        // Only P1 is a target; its λ1 arrives corrupted from P3, honestly
+        // from P2, and as P0's trusted payload — majority(bad, good, good).
+        let run = run_4pc(NetProfile::zero(), 1904, |ctx| {
+            let x = (ctx.id() == P0).then(test_mat);
+            let sh = share_mat(ctx, P0, x.as_ref(), 3, 2)?;
+            ctx.flush_verify()?;
+            if ctx.id() == P3 {
+                return ctx.online(|ctx| {
+                    ctx.flush_verify()?;
+                    let n = sh.dims().0 * sh.dims().1;
+                    ctx.send_ring(P1, &vec![Z64(0xBAD); n]);
+                    Ok(None)
+                });
+            }
+            god_reconstruct_mat_to(ctx, &sh, &[P1])
+        });
+        assert_eq!(run.outputs[1].as_ref().ok().and_then(|o| o.as_ref()), Some(&test_mat()));
+    }
+
+    #[test]
+    fn fair_mat_majority_abort_is_unanimous() {
+        // one evaluator votes abort → P0 relays → everyone aborts together
+        let run = crate::proto::run_4pc_timeout(
+            NetProfile::zero(),
+            1905,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                let x = (ctx.id() == P1).then(test_mat);
+                let sh = share_mat(ctx, P1, x.as_ref(), 3, 2)?;
+                ctx.flush_verify()?;
+                let ok = ctx.id() != P2;
+                fair_reconstruct_mat_to(ctx, &sh, &crate::net::ALL, ok)
+            },
+        );
+        for o in &run.outputs {
+            assert!(o.is_err(), "fairness: no partial output");
+        }
+    }
+
+    #[test]
+    fn god_still_fails_closed_on_corrupt_transcript() {
+        // a pending digest mismatch (tampered evaluation phase) must abort
+        // before GOD delivery opens anything — GOD never launders a bad wave
+        let run = crate::proto::run_4pc_timeout(
+            NetProfile::zero(),
+            1906,
+            std::time::Duration::from_millis(500),
+            |ctx| {
+                let x = (ctx.id() == P1).then(test_mat);
+                let sh = share_mat(ctx, P1, x.as_ref(), 3, 2)?;
+                ctx.flush_verify()?;
+                ctx.online(|ctx| {
+                    if ctx.is_evaluator() {
+                        let v = if ctx.id() == P2 { Z64(666) } else { Z64(42) };
+                        ctx.crosscheck_ring(&[v]);
+                    }
+                    Ok(())
+                })?;
+                god_reconstruct_mat(ctx, &sh)
+            },
+        );
+        let evs = [&run.outputs[1], &run.outputs[2], &run.outputs[3]];
+        assert!(evs.iter().any(|o| o.is_err()), "corrupt transcript must abort");
+    }
+
+    #[test]
+    fn backend_dispatch_matches_trident_on_honest_run() {
+        let run = run_4pc(NetProfile::zero(), 1907, |ctx| {
+            let x = (ctx.id() == P1).then(test_mat);
+            let sh = share_mat(ctx, P1, x.as_ref(), 3, 2)?;
+            ctx.flush_verify()?;
+            let mut outs = Vec::new();
+            for b in [Backend::Trident, Backend::TetradFair, Backend::TetradGod] {
+                outs.push(reconstruct_mat_to_backend(ctx, b, &sh, &[P2])?);
+            }
+            Ok(outs)
+        });
+        let (outs, _) = run.expect_ok();
+        for o in &outs[2] {
+            assert_eq!(o.as_ref(), Some(&test_mat()), "P2 opened under every backend");
+        }
+        for p in [0usize, 1, 3] {
+            assert!(outs[p].iter().all(|o| o.is_none()), "P{p} learned nothing");
+        }
+    }
+}

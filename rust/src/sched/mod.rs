@@ -58,4 +58,5 @@ pub use registry::{
     tenant_layer_key, tenant_layer_weights, tenant_relu_key, tenant_wave_key, tenant_weights,
     ModelRegistry, ResidentModel, TenantLayer, TenantSpec,
 };
+pub use crate::proto::Backend;
 pub use workload::{Checkpoint, TrainKind, Workload, BACK_GATE_BASE, GRAD_GATE_BASE};

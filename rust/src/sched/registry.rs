@@ -81,6 +81,12 @@ pub struct TenantSpec {
     pub workload: Workload,
     /// Seed for this tenant's deterministic weights/queries.
     pub seed: u64,
+    /// Which 4PC protocol family serves this tenant's waves
+    /// ([`crate::proto::Backend`]): Trident secure-with-abort (default),
+    /// Tetrad-style fair, or Tetrad-style GOD. The serving engine also
+    /// overrides this at runtime for a quarantined tenant under
+    /// `--failover god` — see the failover state machine in `serve/multi.rs`.
+    pub backend: crate::proto::Backend,
 }
 
 impl TenantSpec {
@@ -102,6 +108,7 @@ impl TenantSpec {
             layers: Vec::new(),
             workload: Workload::Inference,
             seed: 0x7465_6e61 ^ model,
+            backend: crate::proto::Backend::Trident,
         }
     }
 
@@ -649,6 +656,19 @@ impl ModelRegistry {
         self.models[t].quarantined
     }
 
+    /// Rehabilitate tenant `t` after a clean failover streak: the exact
+    /// inverse of [`ModelRegistry::quarantine`] — refill ticks, depletion
+    /// steering and training fills resume (the keyed layer-key vector is
+    /// re-registered implicitly, because [`ModelRegistry::tick`] derives
+    /// its fill targets from the resident spec, not from retained refill
+    /// state). The caller pairs this with
+    /// [`crate::pool::Pool::unquarantine_model`] so restocked pushes stop
+    /// being dropped by the pool-side guard. Idempotent;
+    /// lockstep-deterministic (driven by the agreed failover-wave count).
+    pub fn rehabilitate(&mut self, t: usize) {
+        self.models[t].quarantined = false;
+    }
+
     /// One cooperative refill step for tenant `t`'s pool targets (lockstep;
     /// offline-phase traffic only — see [`crate::pool::refill`]). The keyed
     /// top-up follows the refill state machine (`stock < low` → fill
@@ -944,6 +964,51 @@ mod tests {
         let (outs, _) = run.expect_ok();
         for items in &outs {
             assert_eq!(*items, 2, "the innocent tenant keeps refilling");
+        }
+    }
+
+    #[test]
+    fn rehabilitated_tenant_steers_and_restocks_again() {
+        // the satellite fix: quarantine deregisters the tenant's keyed
+        // steering, rehabilitation restores it — `most_depleted` must point
+        // back at the rehabilitated (drained) pool and the next tick must
+        // actually restock it through the no-longer-poisoned push guard
+        let run = run_4pc(NetProfile::zero(), 919, |ctx| {
+            let mut reg = ModelRegistry::new();
+            let ta = reg.load(ctx, spec("m1", 61, 3), 1, 2)?;
+            let _tb = reg.load(ctx, spec("m2", 62, 3), 1, 2)?;
+            ctx.flush_verify()?;
+            ctx.attach_pool(Pool::new());
+            // stock both, then quarantine A: pool drained + steering off
+            reg.tick(ctx, ta, 8)?;
+            reg.tick(ctx, _tb, 8)?;
+            let model = reg.model(ta).spec.model;
+            let drained = ctx.pool_mut().unwrap().quarantine_model(model);
+            assert!(drained.0 > 0, "quarantine drains the stocked shards");
+            reg.quarantine(ta);
+            assert_eq!(
+                reg.most_depleted(ctx, &[true, true]),
+                None,
+                "quarantined tenant never steers, even fully drained"
+            );
+            // a push at a quarantined key is dropped by the pool guard, so
+            // a (buggy) premature tick would leave the stock at zero
+            reg.rehabilitate(ta);
+            ctx.pool_mut().unwrap().unquarantine_model(model);
+            assert!(!reg.is_quarantined(ta));
+            assert_eq!(
+                reg.most_depleted(ctx, &[true, true]),
+                Some(ta),
+                "rehabilitated drained pool is the most depleted again"
+            );
+            let o = reg.tick(ctx, ta, 8)?;
+            assert_eq!(o.mat_items, 2, "restock flows again after unquarantine");
+            let pool = ctx.detach_pool().unwrap();
+            Ok(pool.len_mat(&reg.model(ta).layers[0].key))
+        });
+        let (outs, _) = run.expect_ok();
+        for stock in &outs {
+            assert_eq!(*stock, 2, "rehabilitated pool is warm again");
         }
     }
 

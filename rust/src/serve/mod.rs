@@ -60,14 +60,21 @@
 //! enabled, a keyed wave that aborts is scoped over a four-party outcome
 //! barrier: the poisoned tenant is quarantined — all of its layer shards
 //! drained as whole vectors — and everyone else keeps being served (see
-//! [`multi`] and the abort-scoping contract in [`crate::net`]).
+//! [`multi`] and the abort-scoping contract in [`crate::net`]). A run
+//! with `--failover god` extends that ladder one rung further: the
+//! quarantined tenant's re-queued waves degrade to the Tetrad-style
+//! guaranteed-output-delivery backend ([`crate::proto::tetrad`]) instead
+//! of serving inline forever, and after consecutive clean failover waves
+//! the tenant is rehabilitated back to keyed Trident serving
+//! ([`multi::FailoverPolicy`]).
 
 pub mod multi;
 
 pub use multi::{
     cleartext_tenant_predictions, serve_multi, serve_multi_checked, tenant_query_stream,
-    tenant_train_batch, FaultKind, FaultPlan, MultiServeConfig, MultiServeStats, OpRollup,
-    QuarantineStats, TenantServeStats,
+    tenant_train_batch, FailoverPolicy, FaultKind, FaultPlan, MultiServeConfig,
+    MultiServeStats, OpRollup, QuarantineStats, TenantServeStats, TransitionKind,
+    TransitionStats, REHAB_AFTER,
 };
 
 use std::collections::VecDeque;

@@ -50,7 +50,9 @@ use crate::ml::{share_fixed_mat, F64Mat};
 use crate::net::{Abort, NetProfile, NetReport, PartyId, Phase, P2};
 use crate::obs::{self, Payload, TraceEvent, Window};
 use crate::pool::{relu_key_for, Pool, PoolStats};
-use crate::proto::{matmul_tr, run_4pc, Ctx};
+use crate::proto::{
+    matmul_tr, reconstruct_mat_backend, reconstruct_mat_to_backend, run_4pc, Backend, Ctx,
+};
 use crate::ring::fixed::FixedPoint;
 use crate::ring::{Matrix, Z64};
 use crate::sched::{
@@ -90,6 +92,16 @@ pub struct MultiServeConfig {
     /// generation) still fail the whole run closed. Off by default: any
     /// abort is run-fatal, the pre-containment behaviour.
     pub containment: bool,
+    /// Degrade ladder past containment (only meaningful with
+    /// `containment: true`). [`FailoverPolicy::God`] serves a quarantined
+    /// tenant's re-queued waves on the Tetrad-style guaranteed-output-
+    /// delivery backend ([`Backend::TetradGod`]) instead of inline-Trident
+    /// forever, and after [`REHAB_AFTER`] consecutive clean failover waves
+    /// rehabilitates the tenant back to keyed Trident serving (pool
+    /// unquarantined, layer-key vector fill targets re-registered, refill
+    /// restocks). The default [`FailoverPolicy::None`] keeps the
+    /// pre-failover behaviour: quarantine is permanent for the run.
+    pub failover: FailoverPolicy,
     /// Mid-serve fault injection (tests and CLI demos drive the
     /// containment path with it). `None` = honest run.
     pub fault: Option<FaultPlan>,
@@ -119,12 +131,36 @@ impl Default for MultiServeConfig {
             age_every: 4,
             seed: 1234,
             containment: false,
+            failover: FailoverPolicy::None,
             fault: None,
             trace: false,
             resume: Vec::new(),
         }
     }
 }
+
+/// What happens to a quarantined tenant's subsequent waves (see
+/// [`MultiServeConfig::failover`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FailoverPolicy {
+    /// Quarantine is permanent for the run: the tenant keeps serving over
+    /// the secure inline Trident path (the pre-failover behaviour).
+    #[default]
+    None,
+    /// Tetrad-style GOD failover: the quarantined tenant's waves deliver
+    /// their outputs with guaranteed-output-delivery reconstruction
+    /// ([`crate::proto::god_reconstruct_mat_to`]) — a single equivocating
+    /// party can no longer force an abort at the output gate — and after
+    /// [`REHAB_AFTER`] consecutive clean failover waves the tenant is
+    /// rehabilitated back to keyed Trident serving.
+    God,
+}
+
+/// Consecutive clean (committed) failover waves before a quarantined
+/// tenant is rehabilitated back to keyed serving. Counted identically at
+/// every party from committed-wave metadata, so the rehabilitation tick
+/// is lockstep by construction.
+pub const REHAB_AFTER: u64 = 2;
 
 /// What a mid-serve injected fault does (see [`FaultPlan`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -154,6 +190,14 @@ pub struct FaultPlan {
     /// single-layer tenants). Irrelevant for [`FaultKind::AbortOffWave`].
     pub layer: u32,
     pub kind: FaultKind,
+    /// Repeat period in per-tenant granted waves: `Some(e)` re-arms the
+    /// fault every `e` grants after `wave` (grants `wave`, `wave + e`,
+    /// `wave + 2e`, …) — the re-tamper-after-rehabilitation schedule. The
+    /// tamper hooks return no bundle while the victim's shards are
+    /// quarantined/drained, so a repeating tamper is naturally inert
+    /// during failover and bites again only once rehabilitation has
+    /// restocked the pool. `None` = fire once (the original behaviour).
+    pub every: Option<u64>,
 }
 
 /// Per-tenant quarantine record of a contained abort. Every field is
@@ -177,6 +221,32 @@ pub struct QuarantineStats {
     pub drained_relu: usize,
     /// Why (public): the barrier statuses that produced the decision.
     pub why: String,
+}
+
+/// Which way a failover-ladder transition went (see [`TransitionStats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransitionKind {
+    /// The quarantined tenant degraded to the GOD failover backend.
+    Failover,
+    /// The tenant was rehabilitated back to keyed Trident serving.
+    Rehab,
+}
+
+/// One failover-ladder transition of a tenant. Every field derives from
+/// public lockstep metadata (the barrier-agreed quarantine decision and
+/// the committed-wave count), so all four parties produce identical
+/// records — asserted at aggregation, and stamped as `tenant.failover` /
+/// `tenant.rehab` trace events with lockstep-identical skeletons.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransitionStats {
+    pub tenant: usize,
+    /// Logical tick of the transition.
+    pub at_tick: u64,
+    /// The lockstep wave sequence number that triggered it (the failed
+    /// wave for [`TransitionKind::Failover`], the last clean failover
+    /// wave for [`TransitionKind::Rehab`]).
+    pub wave: u64,
+    pub kind: TransitionKind,
 }
 
 /// Deterministic query stream for one tenant (at the data owner).
@@ -287,6 +357,11 @@ struct MultiPartyOut {
     wave_sojourn: Vec<Vec<(usize, u64)>>,
     /// Contained aborts, decision order (identical at all parties).
     quarantines: Vec<QuarantineStats>,
+    /// Failover/rehab transitions, decision order (identical at all
+    /// parties — empty unless `failover` is on and a tenant degraded).
+    transitions: Vec<TransitionStats>,
+    /// Whether each committed wave ran on the GOD failover backend.
+    wave_failover: Vec<bool>,
     /// Refill ticks / keyed bundles generated, per tenant.
     refill_ticks: Vec<usize>,
     refill_mat_items: Vec<usize>,
@@ -333,6 +408,8 @@ impl MultiPartyOut {
             wave_partial: Vec::new(),
             wave_sojourn: Vec::new(),
             quarantines: Vec::new(),
+            transitions: Vec::new(),
+            wave_failover: Vec::new(),
             refill_ticks: vec![0; nt],
             refill_mat_items: vec![0; nt],
             tick_online_msgs: 0,
@@ -378,6 +455,14 @@ pub struct TenantServeStats {
     pub quarantined_at: Option<u64>,
     pub requeued: usize,
     pub lost: usize,
+    /// Committed waves this tenant served on the GOD failover backend
+    /// (0 unless the run used [`FailoverPolicy::God`] and the tenant was
+    /// quarantined).
+    pub failover_waves: usize,
+    /// Tick at which the tenant was rehabilitated back to keyed Trident
+    /// serving (`None` = never; the LAST rehabilitation when a repeating
+    /// fault drove several failover cycles).
+    pub rehabilitated_at: Option<u64>,
     /// Per-query online wave latency percentiles (virtual seconds; every
     /// query in a wave experiences that wave's latency).
     pub p50_latency: f64,
@@ -454,6 +539,10 @@ pub struct MultiServeStats {
     /// Contained aborts in decision order (empty for honest runs and for
     /// runs with containment off). Identical at all four parties.
     pub quarantines: Vec<QuarantineStats>,
+    /// Failover/rehab transitions in decision order (empty unless the run
+    /// used a failover policy and a tenant degraded). Identical at all
+    /// four parties — asserted at aggregation.
+    pub transitions: Vec<TransitionStats>,
     pub pool_stats: Option<PoolStats>,
     pub report: NetReport,
     /// Merged lockstep trace (msgs/bytes summed over parties, rounds and
@@ -616,6 +705,7 @@ fn run_wave(
     rows: usize,
     batch: &[SchedQuery],
     keyed: bool,
+    backend: Backend,
     wave_win: Window,
 ) -> Result<WaveOut, Abort> {
     let stacked: Option<F64Mat> = (ctx.id() == P2).then(|| {
@@ -670,7 +760,10 @@ fn run_wave(
         }
         (a, om_mat, om_relu, cn_mat, cn_relu)
     };
-    let opened = crate::proto::reconstruct::reconstruct_mat_to(ctx, &u, &[P2])?;
+    // output delivery is the ONLY point where the tenant's backend
+    // diverges: the masked evaluation above is identical across the
+    // Trident / Tetrad variants (see `crate::proto::tetrad`)
+    let opened = reconstruct_mat_to_backend(ctx, backend, &u, &[P2])?;
     let mut answers = Vec::new();
     if let Some(vals) = opened {
         let cols = spec.out_cols();
@@ -871,6 +964,12 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
     // counters (the fault plan's trigger coordinate)
     let mut wave_seq: u64 = 0;
     let mut grants = vec![0usize; nt];
+    // failover state machine (public lockstep metadata): under
+    // `FailoverPolicy::God` a quarantined tenant's waves run on the GOD
+    // backend; `clean_fo` counts its consecutive committed failover waves
+    // towards rehabilitation at `REHAB_AFTER`
+    let mut failover = vec![false; nt];
+    let mut clean_fo = vec![0u64; nt];
     let max_class = cfg.tenants.iter().map(|s| s.class).max().unwrap_or(0);
     loop {
         ctx.net.trace().set_tick(now);
@@ -940,7 +1039,13 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         // mid-serve fault injection: the faulty party acts right before
         // the victim tenant's chosen wave pops its material
         if let Some(f) = cfg.fault {
-            if f.tenant == t && grants[t] == f.wave && ctx.id() == f.party {
+            // one-shot at the planned grant, plus every `every`-th grant
+            // after it when the plan repeats (re-tamper after rehab)
+            let due = grants[t] == f.wave
+                || matches!(f.every, Some(e) if e > 0
+                    && grants[t] > f.wave
+                    && (grants[t] - f.wave) as u64 % e == 0);
+            if f.tenant == t && due && ctx.id() == f.party {
                 match f.kind {
                     FaultKind::TamperMatLamX => {
                         let key = tenant_layer_key(spec, rows, f.layer as usize);
@@ -968,10 +1073,13 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         }
         grants[t] += 1;
 
+        // which 4PC backend delivers this wave's outputs: the tenant's
+        // configured family, overridden to GOD while it is failed over
+        let backend = if failover[t] { Backend::TetradGod } else { spec.backend };
         let res = if spec.is_training() {
             run_train_wave(ctx, &reg, spec, t, jobs[t].as_ref().expect("training job"), keyed)
         } else {
-            run_wave(ctx, &reg, spec, t, rows, &batch, keyed, ww)
+            run_wave(ctx, &reg, spec, t, rows, &batch, keyed, backend, ww)
         };
         // meter deltas captured before the barrier, so the Control-class
         // barrier round-trip cannot perturb the wave's numbers
@@ -1052,6 +1160,20 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
                 // a quarantined wave contributes NO gate events — the
                 // trace rollup stays reconciled with committed meters
                 ctx.net.trace_event("wave.quarantine", true, Payload::gauge(requeued as i64));
+                if cfg.failover == FailoverPolicy::God {
+                    // degrade, don't strand: the re-queued queries will be
+                    // served on the GOD backend from the next grant on
+                    failover[t] = true;
+                    clean_fo[t] = 0;
+                    out.transitions.push(TransitionStats {
+                        tenant: t,
+                        at_tick: now,
+                        wave: this_wave,
+                        kind: TransitionKind::Failover,
+                    });
+                    ctx.net
+                        .trace_event("tenant.failover", true, Payload::gauge(this_wave as i64));
+                }
                 ctx.net.trace().clear_wave();
                 now += 1;
                 continue;
@@ -1089,7 +1211,10 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
             if job.next_epoch as usize >= epochs {
                 let mut fin = Vec::with_capacity(reg.model(t).layers.len());
                 for w in reg.model(t).layer_weights() {
-                    let m = crate::proto::reconstruct::reconstruct_mat(ctx, &w)?;
+                    // the job's deliverable opens on the wave's effective
+                    // backend: a failed-over job publishes its model with
+                    // GOD delivery, abort-free at the output gate
+                    let m = reconstruct_mat_backend(ctx, backend, &w)?;
                     fin.push(m.data().iter().map(|&v| FixedPoint::decode(v)).collect());
                 }
                 out.train_final[t] = Some(fin);
@@ -1146,10 +1271,36 @@ fn serve_multi_party(ctx: &mut Ctx, cfg: &MultiServeConfig) -> Result<MultiParty
         out.wave_offline_msgs_relu_layers.push(wave.om_relu);
         out.wave_keyed_hit.push(hit);
         out.wave_partial.push(batch.len() < spec.effective_coalesce());
+        out.wave_failover.push(failover[t]);
         out.wave_sojourn
             .push(batch.iter().map(|q| (q.id, now - q.arrival)).collect());
         out.answers[t].extend(wave.answers);
         queue.complete(t, batch.len());
+
+        // failover bookkeeping: a committed wave on the GOD backend counts
+        // towards rehabilitation; at `REHAB_AFTER` consecutive clean waves
+        // the tenant returns to keyed Trident serving — the pool shard is
+        // unquarantined (its stock stays drained: quarantine never
+        // resurrects material) and the registry re-arms the tenant's
+        // layer-key fill targets, so the refill restocks it between waves
+        if failover[t] {
+            clean_fo[t] += 1;
+            if clean_fo[t] >= REHAB_AFTER {
+                failover[t] = false;
+                clean_fo[t] = 0;
+                if let Some(p) = ctx.pool_mut() {
+                    p.unquarantine_model(spec.model);
+                }
+                reg.rehabilitate(t);
+                out.transitions.push(TransitionStats {
+                    tenant: t,
+                    at_tick: now,
+                    wave: this_wave,
+                    kind: TransitionKind::Rehab,
+                });
+                ctx.net.trace_event("tenant.rehab", true, Payload::gauge(this_wave as i64));
+            }
+        }
 
         // wave-boundary gauge samples: queue depth per effective class,
         // in-flight per tenant, keyed pool stock per gate — all lockstep
@@ -1338,6 +1489,14 @@ fn aggregate(
             "containment must be lockstep-deterministic across parties"
         );
         assert_eq!(
+            o.transitions, outs[1].transitions,
+            "all four parties must agree on every failover/rehab transition tick"
+        );
+        assert_eq!(
+            o.wave_failover, outs[1].wave_failover,
+            "the per-wave backend override is a lockstep decision"
+        );
+        assert_eq!(
             o.train_final, outs[1].train_final,
             "a finished job's reconstructed model must be identical at all four parties"
         );
@@ -1375,6 +1534,7 @@ fn aggregate(
         let mut sojourns: Vec<u64> = Vec::new();
         let (mut waves_t, mut keyed_waves, mut inline_waves) = (0usize, 0usize, 0usize);
         let (mut partial_waves, mut partial_keyed_waves) = (0usize, 0usize);
+        let mut failover_waves = 0usize;
         let (mut offm, mut offm_mat, mut offm_relu) = (0u64, 0u64, 0u64);
         // gate WINDOWS, not forward depth: a training tenant's wave emits
         // 3·depth − 1 per-gate meters (forward + grad + back windows)
@@ -1396,6 +1556,9 @@ fn aggregate(
                 if outs[1].wave_keyed_hit[i] {
                     partial_keyed_waves += 1;
                 }
+            }
+            if outs[1].wave_failover[i] {
+                failover_waves += 1;
             }
             offm += wave_off_msgs[i];
             offm_mat += wave_off_mat[i];
@@ -1451,6 +1614,13 @@ fn aggregate(
             quarantined_at: quarantine.map(|q| q.at_tick),
             requeued: quarantine.map_or(0, |q| q.requeued),
             lost: quarantine.map_or(0, |q| q.lost),
+            failover_waves,
+            rehabilitated_at: outs[1]
+                .transitions
+                .iter()
+                .filter(|tr| tr.tenant == t && tr.kind == TransitionKind::Rehab)
+                .next_back()
+                .map(|tr| tr.at_tick),
             p50_latency: percentile(&lats, 0.50),
             p99_latency: percentile(&lats, 0.99),
             mean_sojourn_ticks: if sojourns.is_empty() {
@@ -1493,6 +1663,7 @@ fn aggregate(
         refill_online_msgs: outs.iter().map(|o| o.tick_online_msgs).sum(),
         aged_promotions: qs.aged_promotions,
         quarantines: outs[1].quarantines.clone(),
+        transitions: outs[1].transitions.clone(),
         pool_stats: outs[1].pool_stats,
         report,
         trace,
@@ -1778,6 +1949,7 @@ mod tests {
             wave: 1,
             layer: 0,
             kind: FaultKind::TamperMatLamX,
+            every: None,
         });
         let stats = serve_multi(NetProfile::zero(), cfg.clone());
         assert_eq!(stats.quarantines.len(), 1, "exactly one contained abort");
@@ -1811,6 +1983,7 @@ mod tests {
             wave: 1,
             layer: 0,
             kind: FaultKind::TamperMatLamX,
+            every: None,
         });
         let err = serve_multi_checked(NetProfile::zero(), cfg)
             .expect_err("without containment any abort is run-fatal");
@@ -1831,6 +2004,7 @@ mod tests {
             wave: 0,
             layer: 0,
             kind: FaultKind::AbortOffWave,
+            every: None,
         });
         let err = serve_multi_checked(NetProfile::zero(), cfg)
             .expect_err("a party-scoped abort outside a wave body fails closed");
@@ -1861,6 +2035,7 @@ mod tests {
             wave: 0,
             layer: 0,
             kind: FaultKind::TamperMatLamX,
+            every: None,
         });
         let stats = serve_multi(NetProfile::zero(), cfg);
         let q = &stats.quarantines[0];
@@ -1926,6 +2101,7 @@ mod tests {
             wave: 0,
             layer: 1,
             kind: FaultKind::TamperMatLamX,
+            every: None,
         });
         let err = serve_multi_checked(NetProfile::zero(), cfg)
             .expect_err("a tampered bundle at ANY gate position must abort the run");
@@ -1946,6 +2122,7 @@ mod tests {
             wave: 1,
             layer: 1,
             kind: FaultKind::TamperReluGamma,
+            every: None,
         });
         let stats = serve_multi(NetProfile::zero(), cfg.clone());
         assert_eq!(stats.quarantines.len(), 1, "exactly one contained abort");
@@ -2038,6 +2215,96 @@ mod tests {
         let job = &mixed.tenants[2];
         assert_eq!(job.epochs_committed, 6, "background job completes: {job:?}");
         assert!(job.final_model.is_some());
+    }
+
+    #[test]
+    fn god_failover_serves_every_query_and_rehabilitates() {
+        use crate::net::P1;
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants[0] = spec("m1", 1, 12, 2);
+        cfg.containment = true;
+        cfg.failover = FailoverPolicy::God;
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 1,
+            layer: 0,
+            kind: FaultKind::TamperMatLamX,
+            every: None,
+        });
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        assert_eq!(stats.quarantines.len(), 1, "exactly one contained abort");
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.served, 12, "GOD failover completes every admitted query: {ts:?}");
+        assert_eq!(ts.lost, 0);
+        assert_eq!(ts.expired, 0);
+        assert_eq!(
+            ts.failover_waves, REHAB_AFTER as usize,
+            "exactly the clean waves the rehab rule demands run on GOD: {ts:?}"
+        );
+        assert!(ts.rehabilitated_at.is_some(), "{ts:?}");
+        let kinds: Vec<TransitionKind> = stats.transitions.iter().map(|tr| tr.kind).collect();
+        assert_eq!(kinds, vec![TransitionKind::Failover, TransitionKind::Rehab]);
+        assert!(stats.transitions.iter().all(|tr| tr.tenant == 0));
+        // rehabilitation restocks the shard: later waves are keyed again
+        assert!(
+            ts.keyed_waves >= 2,
+            "post-rehab waves must return to the keyed pool: {ts:?}"
+        );
+        let other = &stats.tenants[1];
+        assert_eq!(other.served, 4, "the innocent tenant is unaffected");
+        assert_eq!(other.failover_waves, 0);
+        assert_answers_match_cleartext(&stats, &cfg);
+    }
+
+    #[test]
+    fn repeating_fault_drives_a_stable_failover_rehab_cycle() {
+        use crate::net::P1;
+        // the fault re-arms every 8 grants: it bites at grant 1, is inert
+        // while the shard is drained (failover), and bites again at grant
+        // 9 — only possible because rehabilitation restocked the pool
+        let mut cfg = two_tenant_cfg(PoolMode::Keyed);
+        cfg.tenants.truncate(1);
+        cfg.tenants[0] = spec("m1", 1, 20, 2);
+        cfg.containment = true;
+        cfg.failover = FailoverPolicy::God;
+        cfg.fault = Some(FaultPlan {
+            party: P1,
+            tenant: 0,
+            wave: 1,
+            layer: 0,
+            kind: FaultKind::TamperMatLamX,
+            every: Some(8),
+        });
+        let stats = serve_multi(NetProfile::zero(), cfg.clone());
+        assert_eq!(
+            stats.quarantines.len(),
+            2,
+            "the repeating fault quarantines once per cycle: {:?}",
+            stats.quarantines
+        );
+        let ts = &stats.tenants[0];
+        assert_eq!(ts.served, 20, "both cycles complete every query: {ts:?}");
+        assert_eq!(ts.expired, 0);
+        let kinds: Vec<TransitionKind> = stats.transitions.iter().map(|tr| tr.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                TransitionKind::Failover,
+                TransitionKind::Rehab,
+                TransitionKind::Failover,
+                TransitionKind::Rehab
+            ],
+            "{:?}",
+            stats.transitions
+        );
+        assert_eq!(ts.failover_waves, 2 * REHAB_AFTER as usize);
+        assert_answers_match_cleartext(&stats, &cfg);
+        // the cycle is stable: an identical re-run reproduces the exact
+        // quarantine and transition schedule
+        let again = serve_multi(NetProfile::zero(), cfg);
+        assert_eq!(again.quarantines, stats.quarantines);
+        assert_eq!(again.transitions, stats.transitions);
     }
 
     #[test]

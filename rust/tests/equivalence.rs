@@ -31,6 +31,13 @@
 //!   (including the poisoned wave's re-queued queries) matches the
 //!   cleartext oracle — while party-scoped aborts, and any abort with
 //!   containment off, still fail the whole run closed;
+//! * **GOD failover** (`FailoverPolicy::God`): a quarantined tenant's
+//!   re-queued queries serve on the Tetrad-style guaranteed-output-
+//!   delivery backend — zero lost queries, lockstep failover/rehab
+//!   transitions at all four parties, post-rehab keyed waves offline-
+//!   silent again — while party-scoped aborts still fail the run closed
+//!   and the whole backend family (Trident / Tetrad-fair / Tetrad-GOD)
+//!   opens identical values against the cleartext oracle;
 //! * **scheduled training**: a training job driven through the same
 //!   registry/queue/planner lands on a cleartext fixed-point GD oracle
 //!   (logreg with the 3-segment sigmoid head and a deep NN, keyed ==
@@ -1865,6 +1872,7 @@ fn containment_tampered_wave_quarantines_only_its_tenant() {
         wave: 1,
         layer: 0,
         kind: FaultKind::TamperMatLamX,
+        every: None,
     });
     let s = serve_multi(NetProfile::zero(), cfg.clone());
     assert_eq!(s.quarantines.len(), 1, "exactly one contained abort: {:?}", s.quarantines);
@@ -1901,6 +1909,7 @@ fn containment_relu_tamper_is_contained_too() {
         wave: 0,
         layer: 0,
         kind: FaultKind::TamperReluGamma,
+        every: None,
     });
     let s = serve_multi(NetProfile::zero(), cfg.clone());
     assert_eq!(s.quarantines.len(), 1, "{:?}", s.quarantines);
@@ -1925,6 +1934,7 @@ fn containment_off_keeps_the_fail_closed_contract() {
         wave: 1,
         layer: 0,
         kind: FaultKind::TamperMatLamX,
+        every: None,
     });
     let err = serve_multi_checked(NetProfile::zero(), cfg)
         .expect_err("containment off: any tamper is run-fatal");
@@ -1947,6 +1957,7 @@ fn containment_party_scoped_abort_fails_the_run_closed() {
         wave: 1,
         layer: 0,
         kind: FaultKind::AbortOffWave,
+        every: None,
     });
     let err = serve_multi_checked(NetProfile::zero(), cfg)
         .expect_err("party-scoped aborts fail closed even with containment on");
@@ -2030,6 +2041,7 @@ fn deep_tamper_at_any_gate_fails_closed_without_containment() {
             wave: 1,
             layer,
             kind: FaultKind::TamperMatLamX,
+            every: None,
         });
         let err = serve_multi_checked(NetProfile::zero(), cfg)
             .expect_err("a tampered bundle at any gate is run-fatal without containment");
@@ -2046,6 +2058,7 @@ fn deep_tamper_at_any_gate_fails_closed_without_containment() {
         wave: 0,
         layer: 1,
         kind: FaultKind::TamperReluGamma,
+        every: None,
     });
     let err = serve_multi_checked(NetProfile::zero(), cfg)
         .expect_err("a tampered hidden-gate ReLU bundle is run-fatal without containment");
@@ -2067,6 +2080,7 @@ fn deep_containment_quarantines_only_the_tampered_tenant() {
         wave: 1,
         layer: 1,
         kind: FaultKind::TamperMatLamX,
+        every: None,
     });
     let s = serve_multi(NetProfile::zero(), cfg.clone());
     assert_eq!(s.quarantines.len(), 1, "exactly one contained abort: {:?}", s.quarantines);
@@ -2089,6 +2103,178 @@ fn deep_containment_quarantines_only_the_tampered_tenant() {
     assert_eq!(innocent.quarantined_at, None);
     assert_eq!(innocent.served, 4, "the innocent tenant never notices");
     assert_tenant_answers_match_cleartext(&s, &cfg, "deep containment");
+}
+
+// ------------------------------------------------------------- GOD failover
+
+/// Two-tenant keyed cluster with containment and `--failover god` armed,
+/// sized so the tampered tenant walks the whole degrade ladder: keyed →
+/// quarantine → GOD failover → rehabilitation → keyed again.
+fn failover_two_tenant_cfg(queries: usize, seed: u64) -> trident::serve::MultiServeConfig {
+    use trident::sched::TenantSpec;
+    let mk = |name: &str, model: u64| {
+        let mut s = TenantSpec::new(name, model, 16, queries, 3);
+        s.rows_per_query = 2;
+        s
+    };
+    trident::serve::MultiServeConfig {
+        tenants: vec![mk("m1", 1), mk("m2", 2)],
+        mode: trident::serve::PoolMode::Keyed,
+        low_water: 1,
+        high_water: 2,
+        age_every: 0,
+        seed,
+        containment: true,
+        failover: trident::serve::FailoverPolicy::God,
+        ..trident::serve::MultiServeConfig::default()
+    }
+}
+
+/// The failover acceptance scenario: with `--failover god` the tampered
+/// tenant loses ZERO queries — the poisoned wave's batch is re-queued and
+/// re-served on the Tetrad GOD backend, the tenant rehabilitates back to
+/// keyed Trident after [`REHAB_AFTER`] clean failover waves, and every
+/// surfaced answer (both tenants, all three serving regimes) equals the
+/// cleartext oracle.
+#[test]
+fn god_failover_loses_no_query_and_rehabilitates_to_keyed_serving() {
+    use trident::serve::{serve_multi, FaultKind, FaultPlan, TransitionKind, REHAB_AFTER};
+    let mut cfg = failover_two_tenant_cfg(15, 2301);
+    cfg.fault = Some(FaultPlan {
+        party: P1,
+        tenant: 0,
+        wave: 1,
+        layer: 0,
+        kind: FaultKind::TamperMatLamX,
+        every: None,
+    });
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.quarantines.len(), 1, "one contained abort: {:?}", s.quarantines);
+    assert_eq!(s.quarantines[0].tenant, 0);
+    assert_eq!(s.quarantines[0].lost, 0, "god failover loses nothing");
+    let kinds: Vec<_> = s.transitions.iter().map(|tr| (tr.tenant, tr.kind)).collect();
+    assert_eq!(
+        kinds,
+        vec![(0, TransitionKind::Failover), (0, TransitionKind::Rehab)],
+        "one failover → rehab cycle, scoped to the tampered tenant: {:?}",
+        s.transitions
+    );
+    let (degraded, innocent) = (&s.tenants[0], &s.tenants[1]);
+    assert_eq!(degraded.served, 15, "every admitted query is answered: {degraded:?}");
+    assert_eq!(degraded.expired, 0);
+    assert_eq!(degraded.lost, 0);
+    assert_eq!(
+        degraded.failover_waves,
+        REHAB_AFTER as usize,
+        "exactly the clean waves the rehab rule demands ran on GOD: {degraded:?}"
+    );
+    assert_eq!(degraded.rehabilitated_at, Some(s.transitions[1].at_tick));
+    assert!(
+        degraded.keyed_waves >= 2,
+        "keyed before the fault and again after rehab: {degraded:?}"
+    );
+    // the tenant's LAST wave runs post-rehab: keyed Trident, offline-silent
+    let last = s.wave_tenants.iter().rposition(|&t| t == 0).unwrap();
+    assert_eq!(
+        s.wave_offline_msgs[last], 0,
+        "post-rehab waves are offline-silent keyed waves again"
+    );
+    assert_eq!(innocent.served, 15);
+    assert_eq!(innocent.failover_waves, 0, "failover never leaks to the innocent tenant");
+    assert_eq!(innocent.rehabilitated_at, None);
+    assert_tenant_answers_match_cleartext(&s, &cfg, "god failover");
+}
+
+/// The deep-circuit variant: a tamper at an INNER gate of a 3-layer
+/// resident network degrades and rehabilitates the same way — the
+/// quarantine drain still moves whole layer-vector units and every answer
+/// survives the backend switches.
+#[test]
+fn god_failover_recovers_deep_tenant_tampered_at_inner_gate() {
+    use trident::serve::{serve_multi, FailoverPolicy, FaultKind, FaultPlan, TransitionKind};
+    let mut cfg = deep_two_tenant_cfg(1, 2);
+    for t in cfg.tenants.iter_mut() {
+        t.queries = 8;
+    }
+    cfg.seed = 2302;
+    cfg.containment = true;
+    cfg.failover = FailoverPolicy::God;
+    cfg.fault = Some(FaultPlan {
+        party: P1,
+        tenant: 0,
+        wave: 1,
+        layer: 1,
+        kind: FaultKind::TamperMatLamX,
+        every: None,
+    });
+    let s = serve_multi(NetProfile::zero(), cfg.clone());
+    assert_eq!(s.quarantines.len(), 1, "{:?}", s.quarantines);
+    let q = &s.quarantines[0];
+    assert_eq!(q.tenant, 0);
+    assert_eq!(q.lost, 0);
+    assert_eq!(q.drained_mat % 3, 0, "the drain never splits a layer vector: {q:?}");
+    let kinds: Vec<_> = s.transitions.iter().map(|tr| (tr.tenant, tr.kind)).collect();
+    assert_eq!(kinds, vec![(0, TransitionKind::Failover), (0, TransitionKind::Rehab)]);
+    assert_eq!(s.tenants[0].served, 8, "{:?}", s.tenants[0]);
+    assert_eq!(s.tenants[1].served, 8);
+    assert_eq!(s.tenants[1].failover_waves, 0);
+    let last = s.wave_tenants.iter().rposition(|&t| t == 0).unwrap();
+    assert_eq!(s.wave_offline_msgs[last], 0, "post-rehab deep waves pop keyed vectors");
+    assert_tenant_answers_match_cleartext(&s, &cfg, "deep god failover");
+}
+
+/// Failover does not weaken the party-scoped contract: an abort OUTSIDE a
+/// wave body still fails the whole run closed even with `--failover god`
+/// armed — no backend switch, no quarantine, no transitions.
+#[test]
+fn god_failover_keeps_party_scoped_aborts_fail_closed() {
+    use trident::serve::{serve_multi_checked, FaultKind, FaultPlan};
+    let mut cfg = failover_two_tenant_cfg(9, 2304);
+    cfg.fault = Some(FaultPlan {
+        party: P3,
+        tenant: 1,
+        wave: 1,
+        layer: 0,
+        kind: FaultKind::AbortOffWave,
+        every: None,
+    });
+    let err = serve_multi_checked(NetProfile::zero(), cfg)
+        .expect_err("party-scoped aborts fail closed under any failover policy");
+    assert!(
+        matches!(err, trident::net::Abort::Verify(_)),
+        "the aborting party's own cause is surfaced: {err}"
+    );
+}
+
+/// The backend family shares one evaluation phase: the same two-tenant
+/// workload served natively on each backend — keyed Trident, Tetrad-fair,
+/// Tetrad-GOD — opens identical values (all equal to the cleartext
+/// oracle), with the planner schedule and the pool path untouched by the
+/// delivery mode.
+#[test]
+fn tetrad_backends_open_identical_values_to_trident() {
+    use trident::sched::Backend;
+    use trident::serve::serve_multi;
+    let mut schedules = Vec::new();
+    for b in [Backend::Trident, Backend::TetradFair, Backend::TetradGod] {
+        let mut cfg = two_tenant_cfg(trident::serve::PoolMode::Keyed, 1, 2);
+        cfg.seed = 2305;
+        for t in cfg.tenants.iter_mut() {
+            t.backend = b;
+        }
+        let s = serve_multi(NetProfile::zero(), cfg.clone());
+        for ts in &s.tenants {
+            assert_eq!(ts.served, 9, "{}: all queries answered", b.label());
+            assert_eq!(
+                ts.keyed_waves, ts.waves,
+                "{}: delivery mode never touches the pool path",
+                b.label()
+            );
+        }
+        assert_tenant_answers_match_cleartext(&s, &cfg, b.label());
+        schedules.push(s.wave_tenants.clone());
+    }
+    assert!(schedules.windows(2).all(|w| w[0] == w[1]), "the planner is backend-independent");
 }
 
 // ------------------------------------------------------------ observability
@@ -2398,4 +2584,60 @@ fn checkpoint_restore_resumes_onto_the_full_runs_model() {
             );
         }
     }
+}
+
+/// A scheduled training job quarantined mid-run under `--failover god`:
+/// the tampered epoch is re-queued and re-run on the GOD backend (the
+/// mid-job checkpoint lands while the tenant serves on failover), the job
+/// rehabilitates, every epoch commits, and the final model still sits on
+/// the uninterrupted cleartext GD oracle. The checkpoint taken during
+/// failover then restores onto plain keyed serving, replaying only the
+/// remaining epochs onto a model that also matches the oracle.
+#[test]
+fn training_job_quarantined_mid_run_finishes_on_failover_and_matches_oracle() {
+    use trident::sched::{TenantSpec, TrainKind};
+    use trident::serve::{
+        serve_multi, FailoverPolicy, FaultKind, FaultPlan, PoolMode, TransitionKind, REHAB_AFTER,
+    };
+    let spec = || TenantSpec::training("job", 1, 9, vec![6, 2], TrainKind::Nn, 4, 8, 2, 5);
+    let want = cleartext_gd_model(&spec(), 4);
+    let mut cfg = one_job_cfg(spec(), PoolMode::Keyed, 2303);
+    cfg.containment = true;
+    cfg.failover = FailoverPolicy::God;
+    cfg.fault = Some(FaultPlan {
+        party: P1,
+        tenant: 0,
+        wave: 1,
+        layer: 0,
+        kind: FaultKind::TamperMatLamX,
+        every: None,
+    });
+    let s = serve_multi(NetProfile::zero(), cfg);
+    assert_eq!(s.quarantines.len(), 1, "{:?}", s.quarantines);
+    assert_eq!(s.quarantines[0].tenant, 0);
+    assert_eq!(s.quarantines[0].lost, 0, "the tampered epoch is re-queued, not lost");
+    let ts = &s.tenants[0];
+    assert_eq!(ts.epochs_committed, 4, "every epoch commits despite the quarantine: {ts:?}");
+    assert_eq!(
+        ts.failover_waves,
+        REHAB_AFTER as usize,
+        "the re-run epochs served on the GOD backend: {ts:?}"
+    );
+    let kinds: Vec<_> = s.transitions.iter().map(|tr| tr.kind).collect();
+    assert_eq!(kinds, vec![TransitionKind::Failover, TransitionKind::Rehab]);
+    assert!(ts.rehabilitated_at.is_some(), "{ts:?}");
+    let got = ts.final_model.as_ref().expect("the degraded job still finishes its model");
+    assert_model_close(got, &want, 0.02, "god-failover training vs oracle");
+
+    // restore the checkpoint taken during failover onto a clean keyed run
+    let (ck_epoch, blobs) = ts.checkpoints[0].clone();
+    assert_eq!(ck_epoch, 2, "checkpoint_every = 2: the mid-job checkpoint is epoch 2");
+    let mut rcfg = one_job_cfg(spec(), PoolMode::Keyed, 2303);
+    rcfg.resume = vec![Some(blobs)];
+    let resumed = serve_multi(NetProfile::zero(), rcfg);
+    let rs = &resumed.tenants[0];
+    assert_eq!(rs.epochs_committed, 2, "only epochs 2..4 replay: {rs:?}");
+    assert_eq!(rs.failover_waves, 0, "the honest resumed run never degrades");
+    let rgot = rs.final_model.as_ref().expect("resumed job finishes its model");
+    assert_model_close(rgot, &want, 0.02, "resumed-from-failover-checkpoint vs oracle");
 }
